@@ -1,0 +1,53 @@
+//! Auto-tune the non-separable convolution for all four devices of the
+//! paper's testbed and print the Table-3-style configuration column per
+//! device, plus the speedup over the naive configuration — the paper's
+//! performance-portability pitch in one run.
+//!
+//! Run with: `cargo run --release --example autotune_conv [grid-size]`
+
+use imagecl::analysis::KernelInfo;
+use imagecl::bench_defs::CONV2D;
+use imagecl::devices::{predict, KernelModel, ALL_DEVICES};
+use imagecl::imagecl::frontend;
+use imagecl::report::{render_config_table, Ms};
+use imagecl::transform::TuningConfig;
+use imagecl::tuner::{tune_on_simulator, MlSearchOpts, Strategy};
+
+fn main() {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(2048);
+    let info = KernelInfo::analyze(frontend(CONV2D).unwrap());
+    let strategy = Strategy::MlTwoPhase(MlSearchOpts::default());
+
+    let mut columns = Vec::new();
+    println!("tuning conv2d ({n}x{n} uchar, 5x5 filter, clamped boundary)\n");
+    for dev in ALL_DEVICES {
+        let res = tune_on_simulator(&info, dev, (n, n), &strategy);
+        let naive = predict(
+            dev,
+            &KernelModel::build(&info, &TuningConfig::default()),
+            n,
+            n,
+        );
+        println!(
+            "{:<10} {:<60} est {:>10}  speedup over naive {:>5.2}x  ({} candidates timed)",
+            dev.name,
+            res.best.to_string(),
+            Ms::from(res.best_time).to_string(),
+            naive.seconds / res.best_time,
+            res.evals,
+        );
+        columns.push((dev.name.to_string(), res.best));
+    }
+    println!();
+    println!(
+        "{}",
+        render_config_table(
+            "Configurations found by the auto-tuner (cf. paper Table 3)",
+            &info,
+            &columns
+        )
+    );
+}

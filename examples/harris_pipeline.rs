@@ -1,0 +1,137 @@
+//! END-TO-END DRIVER (EXPERIMENTS.md §E2E): the full three-layer system
+//! on a real workload.
+//!
+//! A FAST-style Harris-corner pipeline (sobel → harris) processes a batch
+//! of synthetic camera frames through the AOT Pallas/XLA artifacts on the
+//! PJRT CPU client — Python never runs here. The driver:
+//!
+//!  1. real-execution-tunes the kernel variant (times every AOT variant,
+//!     picks the fastest — the auto-tuner's CPU path),
+//!  2. streams a batch of frames through the pipeline, reporting
+//!     per-frame latency and throughput,
+//!  3. validates the output against the scalar Rust reference,
+//!  4. prints the simulated heterogeneous schedule FAST would use.
+//!
+//! Run with: `cargo run --release --example harris_pipeline [frames]`
+//! (requires `make artifacts`).
+
+use std::time::Instant;
+
+use imagecl::bench_defs::{reference, synth_image};
+use imagecl::devices::ALL_DEVICES;
+use imagecl::exec::ImageBuf;
+use imagecl::imagecl::ScalarType;
+use imagecl::pipeline::{schedule, Pipeline, Port};
+use imagecl::report::Ms;
+use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use imagecl::transform::TuningConfig;
+
+const N: usize = 512;
+
+fn tensor_of(img: &ImageBuf) -> Tensor {
+    Tensor::new(img.h, img.w, img.buf.data.iter().map(|&v| v as f32).collect())
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let frames: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(50);
+    let mut rt = XlaRuntime::new(&default_artifact_dir())?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // -- 1. real-execution variant tuning (fused harris pipeline) --------
+    let ids: Vec<String> = rt
+        .manifest()
+        .variants_of("harris_pipeline", N)
+        .iter()
+        .map(|a| (a.id.clone(), a.variant.clone()))
+        .map(|(id, _)| id)
+        .collect();
+    let probe = synth_image(ScalarType::F32, N, N, 1);
+    let probe_t = tensor_of(&probe);
+    let mut best: Option<(String, f64)> = None;
+    println!("\nvariant timings ({N}x{N}, best of 5):");
+    for id in &ids {
+        let (_, secs) = rt.time(id, &[&probe_t], 5)?;
+        println!("  {:<36} {}", id, Ms::from(secs));
+        if best.as_ref().map(|(_, b)| secs < *b).unwrap_or(true) {
+            best = Some((id.clone(), secs));
+        }
+    }
+    let (best_id, best_secs) = best.expect("no variants — run `make artifacts`");
+    println!("selected: {best_id} ({})", Ms::from(best_secs));
+
+    // -- 2. stream a batch of frames --------------------------------------
+    let inputs: Vec<Tensor> = (0..frames)
+        .map(|i| tensor_of(&synth_image(ScalarType::F32, N, N, 100 + i as u64)))
+        .collect();
+    let mut latencies = Vec::with_capacity(frames);
+    let mut checksum = 0.0f64;
+    let t_batch = Instant::now();
+    for frame in &inputs {
+        let t0 = Instant::now();
+        let outs = rt.execute(&best_id, &[frame])?;
+        latencies.push(t0.elapsed().as_secs_f64());
+        checksum += outs[0].data[0] as f64;
+    }
+    let wall = t_batch.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mpix = (N * N * frames) as f64 / 1e6;
+    println!(
+        "\nbatch: {frames} frames of {N}x{N} in {:.3}s  ({:.1} frames/s, {:.1} Mpixel/s)",
+        wall,
+        frames as f64 / wall,
+        mpix / wall
+    );
+    println!(
+        "latency p50 {}  p90 {}  max {}   (checksum {checksum:.3})",
+        Ms::from(latencies[frames / 2]),
+        Ms::from(latencies[frames * 9 / 10]),
+        Ms::from(*latencies.last().unwrap()),
+    );
+
+    // -- 3. validate one frame against the scalar reference ---------------
+    let img = synth_image(ScalarType::F32, N, N, 100);
+    let outs = rt.execute(&best_id, &[&tensor_of(&img)])?;
+    let (dx, dy) = reference::sobel(&img);
+    let mut dximg = ImageBuf::new(ScalarType::F32, N, N);
+    let mut dyimg = ImageBuf::new(ScalarType::F32, N, N);
+    for y in 0..N {
+        for x in 0..N {
+            dximg.set(x, y, dx[y * N + x]);
+            dyimg.set(x, y, dy[y * N + x]);
+        }
+    }
+    let want = reference::harris(&dximg, &dyimg);
+    let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    let mut max_rel = 0.0f64;
+    for i in 0..want.len() {
+        max_rel = max_rel.max((outs[0].data[i] as f64 - want[i]).abs() / scale);
+    }
+    println!("\nvalidation vs scalar reference: max scaled error {max_rel:.2e}");
+    assert!(max_rel < 1e-4, "numerics drifted");
+
+    // -- 4. the heterogeneous schedule FAST would pick --------------------
+    let mut p = Pipeline::new();
+    let src = p.source("img", tensor_of(&img));
+    let sob = p.filter("sobel", &[p.port(src)]);
+    let har = p.filter(
+        "harris",
+        &[Port { node: sob, port: 0 }, Port { node: sob, port: 1 }],
+    );
+    p.output(p.port(har));
+    let s = schedule(&p, &ALL_DEVICES, 5120, &TuningConfig::default());
+    println!("\nsimulated FAST schedule at the paper's 5120x5120 size:");
+    for pl in &s.placements {
+        println!(
+            "  {:<8} -> {:<9} (est {})",
+            pl.filter,
+            pl.device,
+            Ms::from(pl.est_exec_s)
+        );
+    }
+    println!("  makespan {}", Ms::from(s.makespan_s));
+    println!("\nharris_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""Build-time compile path (L1 Pallas kernels + L2 jax graphs + AOT).
+Never imported on the request path — rust loads the HLO artifacts."""

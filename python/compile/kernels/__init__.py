@@ -1,0 +1,20 @@
+"""Layer 1: Pallas kernels for the paper's three benchmarks (DESIGN.md
+§Hardware-Adaptation), plus pure-jnp oracles in :mod:`ref`."""
+
+from .common import KernelConfig, DEFAULT_VARIANTS, effective_block_h, vmem_bytes
+from .conv2d import conv2d
+from .conv_sep import conv_col, conv_row
+from .harris import harris
+from .sobel import sobel
+
+__all__ = [
+    "KernelConfig",
+    "DEFAULT_VARIANTS",
+    "effective_block_h",
+    "vmem_bytes",
+    "conv2d",
+    "conv_col",
+    "conv_row",
+    "harris",
+    "sobel",
+]

@@ -1,0 +1,107 @@
+"""Shared infrastructure for the Pallas kernels (Layer 1).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's OpenCL
+tuning axes are re-thought for TPU-style execution:
+
+* work-group size      -> ``block_h``: rows per program instance (the VMEM
+                          tile is ``block_h x W``);
+* thread coarsening    -> implicit: one program computes a whole tile;
+* loop unrolling       -> ``unroll``: static Python tap loop (fully
+                          unrolled at trace time) vs ``lax.fori_loop``;
+* local memory staging -> ``stage``: load the halo'd input tile into one
+                          VMEM value and slice it per tap, vs issuing one
+                          strided load per tap;
+* boundary conditions  -> realized as padding in the enclosing jax
+                          function (L2), so every program sees in-range
+                          data (the TPU analogue of the paper's boundary
+                          code: resolved before the hot loop).
+
+All kernels run with ``interpret=True``: real-TPU lowering emits Mosaic
+custom calls the CPU PJRT client cannot execute (see /opt/xla-example).
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class KernelConfig:
+    """One tuning-variant of a Pallas kernel."""
+
+    block_h: int = 8
+    #: Fully unroll the tap loop at trace time (True) or keep a fori_loop.
+    unroll: bool = True
+    #: Stage the halo'd tile once into a VMEM value, then slice statically.
+    stage: bool = True
+
+    def key(self) -> str:
+        return f"bh={self.block_h} unroll={int(self.unroll)} stage={int(self.stage)}"
+
+    @staticmethod
+    def parse(s: str) -> "KernelConfig":
+        kv = dict(tok.split("=", 1) for tok in s.split())
+        return KernelConfig(
+            block_h=int(kv.get("bh", 8)),
+            unroll=bool(int(kv.get("unroll", 1))),
+            stage=bool(int(kv.get("stage", 1))),
+        )
+
+
+#: The variant grid swept by AOT compilation and the benchmark harness.
+DEFAULT_VARIANTS = tuple(
+    KernelConfig(block_h=bh, unroll=u, stage=s)
+    for bh in (8, 32)
+    for u in (False, True)
+    for s in (False, True)
+)
+
+
+def effective_block_h(h: int, requested: int) -> int:
+    """Largest divisor of ``h`` that is <= requested (grid must tile)."""
+    bh = min(requested, h)
+    while h % bh:
+        bh -= 1
+    return bh
+
+
+def pad2d(x, halo_top, halo_bottom, halo_left, halo_right, boundary):
+    """Apply the ImageCL boundary condition as padding (L2-side).
+
+    ``boundary``: "clamped" (edge replication) or a float constant.
+    """
+    pads = ((halo_top, halo_bottom), (halo_left, halo_right))
+    if boundary == "clamped":
+        return jnp.pad(x, pads, mode="edge")
+    return jnp.pad(x, pads, mode="constant", constant_values=boundary)
+
+
+def as_f32(x):
+    return x.astype(jnp.float32)
+
+
+def interpret_call(kernel, *, grid, out_shape, num_inputs):
+    """``pallas_call`` with the conventions used by all our kernels:
+    whole-array inputs (no BlockSpec — kernels slice explicitly) and
+    interpret mode."""
+    import jax.experimental.pallas as pl
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.no_block_spec] * num_inputs,
+        out_specs=pl.no_block_spec,
+        out_shape=out_shape,
+        interpret=True,
+    )
+
+
+def vmem_bytes(shape, dtype=jnp.float32) -> int:
+    """Estimated VMEM footprint of one tile (perf model input; see
+    DESIGN.md §8 — interpret-mode wallclock is NOT a TPU proxy, structure
+    is)."""
+    n = 1
+    for d in shape:
+        n *= d
+    return n * jnp.dtype(dtype).itemsize

@@ -1,0 +1,80 @@
+"""Non-separable 5x5 convolution on uchar pixels (paper benchmark 2),
+clamped boundary condition."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import KernelConfig, effective_block_h, pad2d, interpret_call
+
+K = 5
+HALO = K // 2
+
+
+def _kernel(cfg: KernelConfig, w: int, bh: int):
+    def kernel(xp_ref, f_ref, o_ref):
+        i = pl.program_id(0)
+        if cfg.stage:
+            tile = xp_ref[
+                pl.dslice(i * bh, bh + 2 * HALO), pl.dslice(0, w + 2 * HALO)
+            ]
+            if cfg.unroll:
+                acc = jnp.zeros((bh, w), jnp.float32)
+                for dy in range(K):
+                    for dx in range(K):
+                        acc = acc + jax.lax.dynamic_slice(
+                            tile, (dy, dx), (bh, w)
+                        ) * f_ref[dy * K + dx]
+            else:
+                def body(t, acc):
+                    dy, dx = t // K, t % K
+                    return acc + jax.lax.dynamic_slice(
+                        tile, (dy, dx), (bh, w)
+                    ) * f_ref[t]
+
+                acc = jax.lax.fori_loop(
+                    0, K * K, body, jnp.zeros((bh, w), jnp.float32)
+                )
+        else:
+            if cfg.unroll:
+                acc = jnp.zeros((bh, w), jnp.float32)
+                for dy in range(K):
+                    for dx in range(K):
+                        acc = acc + xp_ref[
+                            pl.dslice(i * bh + dy, bh), pl.dslice(dx, w)
+                        ] * f_ref[dy * K + dx]
+            else:
+                def body(t, acc):
+                    dy, dx = t // K, t % K
+                    return acc + xp_ref[
+                        pl.dslice(i * bh + dy, bh), pl.dslice(dx, w)
+                    ] * f_ref[t]
+
+                acc = jax.lax.fori_loop(
+                    0, K * K, body, jnp.zeros((bh, w), jnp.float32)
+                )
+        # (uchar)(clamp(sum, 0, 255)) — same semantics as the ImageCL
+        # kernel's store.
+        o_ref[pl.dslice(i * bh, bh), :] = jnp.clip(acc, 0.0, 255.0).astype(
+            jnp.uint8
+        )
+
+    return kernel
+
+
+def conv2d(x, f, cfg: KernelConfig = KernelConfig(), boundary="clamped"):
+    """5x5 convolution; ``x`` is uint8 (or float), output uint8.
+
+    The filter is a runtime argument (paper §6: "they are only known at
+    run time for the non-separable convolution").
+    """
+    h, w = x.shape
+    bh = effective_block_h(h, cfg.block_h)
+    xp = pad2d(x.astype(jnp.float32), HALO, HALO, HALO, HALO, boundary)
+    call = interpret_call(
+        _kernel(cfg, w, bh),
+        grid=(h // bh,),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.uint8),
+        num_inputs=2,
+    )
+    return call(xp, f.astype(jnp.float32))

@@ -1,0 +1,65 @@
+"""Harris corner response over a 2x2 block (second stage of the paper's
+Harris benchmark), k = 0.04, clamped boundary on the gradient images."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import KernelConfig, effective_block_h, pad2d
+
+#: Window extent (paper: "a block size of 2x2", offsets 0..1).
+B = 2
+HARRIS_K = 0.04
+
+
+def _kernel(cfg: KernelConfig, w: int, bh: int):
+    def kernel(dxp_ref, dyp_ref, o_ref):
+        i = pl.program_id(0)
+        # Tiles with bottom/right halo of 1 (window offsets are 0..1).
+        tx = dxp_ref[pl.dslice(i * bh, bh + B - 1), pl.dslice(0, w + B - 1)]
+        ty = dyp_ref[pl.dslice(i * bh, bh + B - 1), pl.dslice(0, w + B - 1)]
+
+        sxx = jnp.zeros((bh, w), jnp.float32)
+        syy = jnp.zeros((bh, w), jnp.float32)
+        sxy = jnp.zeros((bh, w), jnp.float32)
+        if cfg.unroll:
+            for dy in range(B):
+                for dx in range(B):
+                    gx = jax.lax.dynamic_slice(tx, (dy, dx), (bh, w))
+                    gy = jax.lax.dynamic_slice(ty, (dy, dx), (bh, w))
+                    sxx = sxx + gx * gx
+                    syy = syy + gy * gy
+                    sxy = sxy + gx * gy
+        else:
+            def body(t, carry):
+                sxx, syy, sxy = carry
+                dy, dx = t // B, t % B
+                gx = jax.lax.dynamic_slice(tx, (dy, dx), (bh, w))
+                gy = jax.lax.dynamic_slice(ty, (dy, dx), (bh, w))
+                return (sxx + gx * gx, syy + gy * gy, sxy + gx * gy)
+
+            sxx, syy, sxy = jax.lax.fori_loop(0, B * B, body, (sxx, syy, sxy))
+
+        trace = sxx + syy
+        o_ref[pl.dslice(i * bh, bh), :] = (
+            sxx * syy - sxy * sxy - HARRIS_K * trace * trace
+        )
+
+    return kernel
+
+
+def harris(dx, dy, cfg: KernelConfig = KernelConfig(), boundary="clamped"):
+    """Harris response image from gradient images (ImageCL `harris`)."""
+    h, w = dx.shape
+    bh = effective_block_h(h, cfg.block_h)
+    dxp = pad2d(dx.astype(jnp.float32), 0, B - 1, 0, B - 1, boundary)
+    dyp = pad2d(dy.astype(jnp.float32), 0, B - 1, 0, B - 1, boundary)
+    call = pl.pallas_call(
+        _kernel(cfg, w, bh),
+        grid=(h // bh,),
+        in_specs=[pl.no_block_spec, pl.no_block_spec],
+        out_specs=pl.no_block_spec,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )
+    return call(dxp, dyp)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel — the build-time correctness
+signal (pytest compares kernels against these with assert_allclose)."""
+
+import jax.numpy as jnp
+
+
+def _pad(x, pads, boundary):
+    if boundary == "clamped":
+        return jnp.pad(x, pads, mode="edge")
+    return jnp.pad(x, pads, mode="constant", constant_values=boundary)
+
+
+def conv_row(x, f, boundary=0.0):
+    x = x.astype(jnp.float32)
+    h, w = x.shape
+    xp = _pad(x, ((0, 0), (2, 2)), boundary)
+    return sum(xp[:, t : t + w] * f[t] for t in range(5))
+
+
+def conv_col(x, f, boundary=0.0):
+    x = x.astype(jnp.float32)
+    h, w = x.shape
+    xp = _pad(x, ((2, 2), (0, 0)), boundary)
+    return sum(xp[t : t + h, :] * f[t] for t in range(5))
+
+
+def sepconv(x, f, boundary=0.0):
+    """Row pass then column pass (paper benchmark 1)."""
+    return conv_col(conv_row(x, f, boundary), f, boundary)
+
+
+def conv2d(x, f, boundary="clamped"):
+    x = x.astype(jnp.float32)
+    h, w = x.shape
+    xp = _pad(x, ((2, 2), (2, 2)), boundary)
+    acc = jnp.zeros((h, w), jnp.float32)
+    for dy in range(5):
+        for dx in range(5):
+            acc = acc + xp[dy : dy + h, dx : dx + w] * f[dy * 5 + dx]
+    return jnp.clip(acc, 0.0, 255.0).astype(jnp.uint8)
+
+
+def sobel(x, boundary="clamped"):
+    x = x.astype(jnp.float32)
+    h, w = x.shape
+    xp = _pad(x, ((1, 1), (1, 1)), boundary)
+
+    def at(dy, dx):
+        return xp[1 + dy : 1 + dy + h, 1 + dx : 1 + dx + w]
+
+    gx = (
+        at(-1, 1) + 2.0 * at(0, 1) + at(1, 1)
+        - at(-1, -1) - 2.0 * at(0, -1) - at(1, -1)
+    )
+    gy = (
+        at(1, -1) + 2.0 * at(1, 0) + at(1, 1)
+        - at(-1, -1) - 2.0 * at(-1, 0) - at(-1, 1)
+    )
+    return gx, gy
+
+
+def harris(dx, dy, boundary="clamped", k=0.04):
+    dx = dx.astype(jnp.float32)
+    dy = dy.astype(jnp.float32)
+    h, w = dx.shape
+    dxp = _pad(dx, ((0, 1), (0, 1)), boundary)
+    dyp = _pad(dy, ((0, 1), (0, 1)), boundary)
+    sxx = jnp.zeros((h, w), jnp.float32)
+    syy = jnp.zeros((h, w), jnp.float32)
+    sxy = jnp.zeros((h, w), jnp.float32)
+    for oy in range(2):
+        for ox in range(2):
+            gx = dxp[oy : oy + h, ox : ox + w]
+            gy = dyp[oy : oy + h, ox : ox + w]
+            sxx = sxx + gx * gx
+            syy = syy + gy * gy
+            sxy = sxy + gx * gy
+    tr = sxx + syy
+    return sxx * syy - sxy * sxy - k * tr * tr
+
+
+def harris_pipeline(x, boundary="clamped"):
+    """Full Harris benchmark: sobel -> harris response."""
+    gx, gy = sobel(x, boundary)
+    return harris(gx, gy, boundary)

@@ -1,0 +1,54 @@
+"""Sobel gradient kernel (first stage of Harris corner detection),
+clamped boundary, two outputs (dx, dy)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import KernelConfig, effective_block_h, pad2d
+
+HALO = 1
+
+
+def _kernel(cfg: KernelConfig, w: int, bh: int):
+    def kernel(xp_ref, dx_ref, dy_ref):
+        i = pl.program_id(0)
+        tile = xp_ref[pl.dslice(i * bh, bh + 2), pl.dslice(0, w + 2)]
+
+        def at(dy, dx):
+            return jax.lax.dynamic_slice(tile, (dy + 1, dx + 1), (bh, w))
+
+        gx = (
+            at(-1, 1) + 2.0 * at(0, 1) + at(1, 1)
+            - at(-1, -1) - 2.0 * at(0, -1) - at(1, -1)
+        )
+        gy = (
+            at(1, -1) + 2.0 * at(1, 0) + at(1, 1)
+            - at(-1, -1) - 2.0 * at(-1, 0) - at(-1, 1)
+        )
+        rows = pl.dslice(i * bh, bh)
+        dx_ref[rows, :] = gx
+        dy_ref[rows, :] = gy
+
+    return kernel
+
+
+def sobel(x, cfg: KernelConfig = KernelConfig(), boundary="clamped"):
+    """Returns (dx, dy) Sobel gradients, matching the ImageCL `sobel`
+    kernel (3x3 operators, clamped boundary)."""
+    h, w = x.shape
+    bh = effective_block_h(h, cfg.block_h)
+    xp = pad2d(x.astype(jnp.float32), HALO, HALO, HALO, HALO, boundary)
+    out_shape = (
+        jax.ShapeDtypeStruct((h, w), jnp.float32),
+        jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )
+    call = pl.pallas_call(
+        _kernel(cfg, w, bh),
+        grid=(h // bh,),
+        in_specs=[pl.no_block_spec],
+        out_specs=(pl.no_block_spec, pl.no_block_spec),
+        out_shape=out_shape,
+        interpret=True,
+    )
+    return call(xp)

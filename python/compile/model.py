@@ -1,0 +1,64 @@
+"""Layer 2: the benchmark compute graphs, composing the L1 Pallas kernels.
+
+These are the jax functions AOT-lowered to HLO text and executed from the
+rust runtime (never from Python at run time). Each graph mirrors one of
+the paper's benchmarks (§6)."""
+
+import jax.numpy as jnp
+
+from .kernels import KernelConfig, conv2d, conv_col, conv_row, harris, sobel
+
+
+def sepconv_row_graph(x, f, cfg: KernelConfig = KernelConfig()):
+    """Row pass of the separable convolution (constant-0 boundary)."""
+    return conv_row(x, f, cfg, boundary=0.0)
+
+
+def sepconv_col_graph(x, f, cfg: KernelConfig = KernelConfig()):
+    """Column pass of the separable convolution."""
+    return conv_col(x, f, cfg, boundary=0.0)
+
+
+def sepconv_graph(x, f, cfg: KernelConfig = KernelConfig()):
+    """Full separable convolution: row then column (paper benchmark 1)."""
+    return conv_col(conv_row(x, f, cfg, boundary=0.0), f, cfg, boundary=0.0)
+
+
+def conv2d_graph(x, f, cfg: KernelConfig = KernelConfig()):
+    """Non-separable 5x5 convolution on uchar pixels, clamped boundary
+    (paper benchmark 2)."""
+    return conv2d(x, f, cfg, boundary="clamped")
+
+
+def sobel_graph(x, cfg: KernelConfig = KernelConfig()):
+    """Sobel gradients (Harris stage 1)."""
+    return sobel(x, cfg, boundary="clamped")
+
+
+def harris_graph(dx, dy, cfg: KernelConfig = KernelConfig()):
+    """Harris response from gradients (Harris stage 2)."""
+    return harris(dx, dy, cfg, boundary="clamped")
+
+
+def harris_pipeline_graph(x, cfg: KernelConfig = KernelConfig()):
+    """Full Harris corner benchmark: sobel -> harris (paper benchmark 3).
+
+    Both stages lower into ONE XLA module, letting the compiler fuse the
+    intermediate gradient images — the optimization the paper (§7) notes
+    Halide wins with on the separable benchmark and ImageCL cannot
+    express (no synchronization primitives). In the three-layer port we
+    recover it at L2.
+    """
+    gx, gy = sobel(x, cfg, boundary="clamped")
+    return harris(gx, gy, cfg, boundary="clamped")
+
+
+def normalized_gauss5():
+    """The 5-tap filter used by the benchmarks."""
+    f = jnp.array([1.0, 4.0, 6.0, 4.0, 1.0], jnp.float32)
+    return f / f.sum()
+
+
+def normalized_gauss5x5():
+    g = normalized_gauss5()
+    return jnp.outer(g, g).reshape(25)

@@ -1,0 +1,138 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, swept over
+shapes, variants and boundary conditions with hypothesis."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    DEFAULT_VARIANTS,
+    KernelConfig,
+    conv2d,
+    conv_col,
+    conv_row,
+    harris,
+    sobel,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand_img(rng, h, w, dtype=np.float32):
+    if dtype == np.uint8:
+        return jnp.asarray(rng.integers(0, 256, (h, w), dtype=np.uint8))
+    return jnp.asarray(rng.random((h, w), dtype=np.float32) * 255.0)
+
+
+def rand_filter(rng, n):
+    f = rng.random(n, dtype=np.float32)
+    return jnp.asarray(f / f.sum())
+
+
+shapes = st.tuples(st.integers(3, 40), st.integers(3, 40))
+variants = st.sampled_from(DEFAULT_VARIANTS)
+boundaries = st.sampled_from(["clamped", 0.0, 7.5])
+seeds = st.integers(0, 2**31 - 1)
+
+
+@settings(**SETTINGS)
+@given(shapes, variants, boundaries, seeds)
+def test_conv_row_matches_ref(shape, cfg, boundary, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_img(rng, *shape)
+    f = rand_filter(rng, 5)
+    got = conv_row(x, f, cfg, boundary)
+    want = ref.conv_row(x, f, boundary)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(shapes, variants, boundaries, seeds)
+def test_conv_col_matches_ref(shape, cfg, boundary, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_img(rng, *shape)
+    f = rand_filter(rng, 5)
+    got = conv_col(x, f, cfg, boundary)
+    want = ref.conv_col(x, f, boundary)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(shapes, variants, st.sampled_from(["clamped", 0.0]), seeds)
+def test_conv2d_matches_ref(shape, cfg, boundary, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_img(rng, *shape, dtype=np.uint8)
+    f = rand_filter(rng, 25)
+    got = conv2d(x, f, cfg, boundary)
+    want = ref.conv2d(x, f, boundary)
+    assert got.dtype == jnp.uint8
+    # uint8 output: float rounding at the truncation edge may differ by 1.
+    diff = np.abs(got.astype(np.int32) - want.astype(np.int32))
+    assert diff.max() <= 1
+
+
+@settings(**SETTINGS)
+@given(shapes, variants, seeds)
+def test_sobel_matches_ref(shape, cfg, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_img(rng, *shape)
+    gx, gy = sobel(x, cfg)
+    rx, ry = ref.sobel(x)
+    np.testing.assert_allclose(gx, rx, rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(gy, ry, rtol=1e-5, atol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(shapes, variants, seeds)
+def test_harris_matches_ref(shape, cfg, seed):
+    rng = np.random.default_rng(seed)
+    dx = rand_img(rng, *shape)
+    dy = rand_img(rng, *shape)
+    got = harris(dx, dy, cfg)
+    want = ref.harris(dx, dy)
+    # det - k*tr^2 suffers catastrophic f32 cancellation; tolerance must
+    # be relative to the magnitude of the cancelled terms, not the result.
+    scale = float(np.abs(np.asarray(want)).max()) + 1.0
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=1e-4 * scale)
+
+
+@pytest.mark.parametrize("cfg", DEFAULT_VARIANTS, ids=lambda c: c.key())
+def test_variants_consistent(cfg):
+    """All kernel variants must agree with the bh=1 variant — the Pallas
+    analogue of the rust config sweep. Unrolled variants are bit-exact;
+    fori_loop variants may differ by 1 ulp (XLA contracts mul+add into FMA
+    differently inside the loop body)."""
+    rng = np.random.default_rng(11)
+    x = rand_img(rng, 24, 17)
+    f = rand_filter(rng, 5)
+    base = np.asarray(conv_row(x, f, KernelConfig(block_h=1), 0.0))
+    got = np.asarray(conv_row(x, f, cfg, 0.0))
+    if cfg.unroll:
+        np.testing.assert_array_equal(base, got)
+    else:
+        np.testing.assert_allclose(base, got, rtol=3e-7, atol=1e-4)
+
+
+def test_non_divisible_block_h_shrinks():
+    from compile.kernels import effective_block_h
+
+    assert effective_block_h(30, 8) == 6
+    assert effective_block_h(31, 8) == 1
+    assert effective_block_h(32, 8) == 8
+    assert effective_block_h(4, 64) == 4
+
+
+def test_sobel_flat_zero():
+    x = jnp.full((16, 16), 9.0, jnp.float32)
+    gx, gy = sobel(x)
+    assert float(jnp.abs(gx).max()) == 0.0
+    assert float(jnp.abs(gy).max()) == 0.0
+
+
+def test_conv2d_saturates():
+    x = jnp.full((8, 8), 255, jnp.uint8)
+    f = jnp.full((25,), 1.0, jnp.float32)  # gain 25 -> saturate at 255
+    out = conv2d(x, f)
+    assert int(out.min()) == 255

@@ -1,0 +1,64 @@
+"""L2 correctness: benchmark graphs vs oracles, and AOT lowering sanity
+(HLO text round-trips through the xla_extension parser contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.aot import to_hlo_text
+from compile.kernels import KernelConfig, ref
+
+
+def rand(h, w, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.random((h, w), dtype=np.float32) * 10.0)
+
+
+def test_sepconv_graph_matches_ref():
+    x = rand(33, 21)
+    f = model.normalized_gauss5()
+    got = model.sepconv_graph(x, f)
+    want = ref.sepconv(x, f)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_harris_pipeline_matches_ref():
+    x = rand(40, 28, seed=3)
+    got = model.harris_pipeline_graph(x)
+    want = ref.harris_pipeline(x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-1)
+
+
+def test_harris_detects_synthetic_corner():
+    # A bright square on dark background: strongest response near corners.
+    x = jnp.zeros((32, 32), jnp.float32).at[8:24, 8:24].set(100.0)
+    r = np.asarray(model.harris_pipeline_graph(x))
+    # Response at the square's corner must exceed the response at the
+    # middle of an edge and in flat regions.
+    corner = np.abs(r[7:10, 7:10]).max()
+    edge_mid = np.abs(r[15:17, 7:9]).max()
+    flat = np.abs(r[0:4, 0:4]).max()
+    assert corner > edge_mid
+    assert flat == 0.0
+
+
+def test_hlo_text_lowering():
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    f = jax.ShapeDtypeStruct((5,), jnp.float32)
+    lowered = jax.jit(
+        lambda x, f: model.sepconv_graph(x, f, KernelConfig(block_h=8))
+    ).lower(x, f)
+    hlo = to_hlo_text(lowered)
+    assert "HloModule" in hlo
+    assert "ENTRY" in hlo
+    # interpret=True means no Mosaic custom-calls — loadable on CPU PJRT.
+    assert "tpu_custom_call" not in hlo
+
+
+def test_variant_changes_structure_not_value():
+    x = rand(32, 32, seed=5)
+    f = model.normalized_gauss5()
+    a = model.sepconv_graph(x, f, KernelConfig(block_h=8, stage=True))
+    b = model.sepconv_graph(x, f, KernelConfig(block_h=32, stage=False, unroll=False))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,71 @@
+//! Figure 6 reproduction: slowdown of Halide / HIPACC / OpenCV relative
+//! to auto-tuned ImageCL, for all three benchmarks on all four devices.
+//!
+//! GPU rows come from the device simulator (DESIGN.md §2); the shape of
+//! the paper's figure — who wins, by roughly what factor, where the
+//! crossovers fall — is the reproduction target, not absolute times.
+//! Paper reference points: ImageCL wins most GPU cells (1.06–2.82×),
+//! loses to Halide on the GTX 960 sep-conv (0.91×), to OpenCV on the
+//! AMD 7970 conv2d (0.70×), and to Halide on the CPU conv2d (0.24×);
+//! Harris-vs-OpenCV speedups 3.15 / 1.08 / 2.11 / 4.57.
+//!
+//! Run with: `cargo bench --bench fig6` (add `-- --size N` to override).
+
+use std::fmt::Write as _;
+
+use imagecl::baselines::{self, Baseline, ALL_BASELINES};
+use imagecl::bench_defs::ALL;
+use imagecl::devices::ALL_DEVICES;
+use imagecl::report::{emit_report, render_fig6, Ms};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n = args
+        .iter()
+        .position(|a| a == "--size")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024usize);
+
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "=== Figure 6: slowdown vs ImageCL (grid {n}x{n}; paper sizes 4096/8192/5120) ===\n"
+    );
+    for bench in &ALL {
+        let mut series: Vec<(&str, Vec<f64>)> =
+            ALL_BASELINES.iter().map(|b| (b.name(), Vec::new())).collect();
+        let mut ic_row = String::new();
+        for dev in ALL_DEVICES {
+            let t0 = std::time::Instant::now();
+            let ic = baselines::imagecl_time(bench, dev, n);
+            let tune_wall = t0.elapsed();
+            let _ = writeln!(
+                ic_row,
+                "  {}: ImageCL est {} (tuning wall-clock {})",
+                dev.name,
+                Ms::from(ic),
+                Ms::from(tune_wall)
+            );
+            for (i, b) in ALL_BASELINES.iter().enumerate() {
+                // §6: "we only compare against OpenCV for the Harris
+                // corner detection".
+                let v = if bench.id == "harris" && *b != Baseline::OpenCv {
+                    f64::NAN
+                } else {
+                    baselines::baseline_time(*b, bench, dev, n) / ic
+                };
+                series[i].1.push(v);
+            }
+        }
+        let names: Vec<&str> = ALL_DEVICES.iter().map(|d| d.name).collect();
+        out.push_str(&render_fig6(
+            &format!("-- {} --", bench.display),
+            &names,
+            &series,
+        ));
+        out.push_str(&ic_row);
+        out.push('\n');
+    }
+    emit_report("fig6.txt", &out);
+}

@@ -1,0 +1,177 @@
+//! Hot-path performance benches (EXPERIMENTS.md §Perf): throughput of
+//! every Layer-3 component on this testbed, plus the real PJRT execution
+//! latency of the AOT artifacts. These are the numbers the perf pass
+//! optimizes; re-run after changes and compare.
+//!
+//! Run with: `cargo bench --bench hotpath`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use imagecl::analysis::KernelInfo;
+use imagecl::bench_defs::{self, workload, SEPCONV_ROW};
+use imagecl::devices::{predict, KernelModel, K40};
+use imagecl::exec::execute;
+use imagecl::imagecl::frontend;
+use imagecl::report::{emit_report, rig, Ms};
+use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use imagecl::transform::{compile, emit_opencl, lower, TuningConfig};
+use imagecl::tuner::{FeatureMap, Mlp, TuningSpace};
+
+fn main() {
+    let mut out = String::new();
+    let _ = writeln!(out, "=== L3 hot-path throughput ===\n");
+
+    // 1. Frontend + analysis.
+    let d = rig::time_best_of(3, 20, || {
+        let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+        std::hint::black_box(&info);
+    });
+    let _ = writeln!(out, "frontend+analysis (sepconv_row): {} / kernel", Ms::from(d));
+
+    // 2. Lowering + OpenCL emission.
+    let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+    let cfg = TuningConfig::parse("wg=64x4 px=4x1 map=interleaved lmem=in cmem=f").unwrap();
+    let d = rig::time_best_of(3, 50, || {
+        let plan = lower(&info, &cfg).unwrap();
+        std::hint::black_box(emit_opencl(&plan));
+    });
+    let _ = writeln!(out, "lower+emit OpenCL:               {} / candidate", Ms::from(d));
+
+    // 3. Device-model prediction (the tuner's inner loop).
+    let reps = 2000;
+    let d = rig::time_best_of(1, 5, || {
+        for _ in 0..reps {
+            let km = KernelModel::build(&info, &cfg);
+            std::hint::black_box(predict(&K40, &km, 2048, 2048));
+        }
+    });
+    let _ = writeln!(
+        out,
+        "simulator eval:                  {:.2} µs / prediction ({:.0}k predictions/s)",
+        d.as_secs_f64() * 1e6 / reps as f64,
+        reps as f64 / d.as_secs_f64() / 1e3
+    );
+
+    // 4. Space enumeration.
+    let d = rig::time_best_of(1, 5, || {
+        std::hint::black_box(TuningSpace::enumerate(&info, &K40));
+    });
+    let space = TuningSpace::enumerate(&info, &K40);
+    let _ = writeln!(
+        out,
+        "space enumeration:               {} for {} configs",
+        Ms::from(d),
+        space.len()
+    );
+
+    // 5. MLP train + batch predict (phase 2 of the ML search).
+    let fm = FeatureMap::new(&info);
+    let xs: Vec<Vec<f64>> = space.configs.iter().take(500).map(|c| fm.features(c)).collect();
+    let ys: Vec<f64> = (0..xs.len()).map(|i| (i % 37) as f64 / 37.0).collect();
+    let d = rig::time_best_of(0, 3, || {
+        let mut nn = Mlp::new(fm.dim(), &[32, 16], 1);
+        nn.fit(&xs, &ys, 60, 2);
+        std::hint::black_box(&nn);
+    });
+    let _ = writeln!(out, "MLP fit (500x{} feats, 60 ep):   {}", fm.dim(), Ms::from(d));
+    let mut nn = Mlp::new(fm.dim(), &[32, 16], 1);
+    nn.fit(&xs, &ys, 10, 2);
+    let feats: Vec<Vec<f64>> = space.configs.iter().map(|c| fm.features(c)).collect();
+    let d = rig::time_best_of(1, 5, || {
+        let mut acc = 0.0;
+        for f in &feats {
+            acc += nn.predict(f);
+        }
+        std::hint::black_box(acc);
+    });
+    let _ = writeln!(
+        out,
+        "MLP predict whole space:         {} for {} configs\n",
+        Ms::from(d),
+        feats.len()
+    );
+
+    // 6. NDRange interpreter (correctness backend) throughput.
+    let _ = writeln!(out, "=== NDRange interpreter (correctness backend) ===\n");
+    let plan = compile(SEPCONV_ROW, &TuningConfig::default()).unwrap();
+    let (w, h) = (256, 256);
+    let mut args = workload("sepconv_row", w, h, 3);
+    let d = rig::time_best_of(1, 3, || {
+        execute(&plan, &mut args, (w, h)).unwrap();
+    });
+    let _ = writeln!(
+        out,
+        "sepconv_row {w}x{h} naive:       {}  ({:.2} Mpixel/s)",
+        Ms::from(d),
+        (w * h) as f64 / d.as_secs_f64() / 1e6
+    );
+    let mut lcfg = TuningConfig::default();
+    lcfg.local_mem.insert("in".into(), true);
+    let plan_l = compile(SEPCONV_ROW, &lcfg).unwrap();
+    let mut args = workload("sepconv_row", w, h, 3);
+    let d = rig::time_best_of(1, 3, || {
+        execute(&plan_l, &mut args, (w, h)).unwrap();
+    });
+    let _ = writeln!(
+        out,
+        "sepconv_row {w}x{h} local-mem:   {}  ({:.2} Mpixel/s)\n",
+        Ms::from(d),
+        (w * h) as f64 / d.as_secs_f64() / 1e6
+    );
+
+    // 7. Real XLA/PJRT artifact execution (the request path).
+    let _ = writeln!(out, "=== PJRT request path (real execution, 512x512) ===\n");
+    let dir = default_artifact_dir();
+    if dir.join("manifest.tsv").exists() {
+        let mut rt = XlaRuntime::new(&dir).unwrap();
+        let img = bench_defs::synth_image(imagecl::imagecl::ScalarType::F32, 512, 512, 1);
+        let x = Tensor::new(512, 512, img.buf.data.iter().map(|&v| v as f32).collect());
+        let f = Tensor::new(5, 1, vec![0.0625, 0.25, 0.375, 0.25, 0.0625]);
+        let mut rows: Vec<(String, f64, usize)> = Vec::new();
+        for (id, inputs) in [
+            ("sepconv_512_bh32u1s1", vec![&x, &f]),
+            ("sepconv_512_bh8u1s1", vec![&x, &f]),
+            ("harris_pipeline_512_bh32u1s0", vec![&x]),
+            ("harris_pipeline_512_bh8u1s1", vec![&x]),
+            ("sobel_512_bh32u1s1", vec![&x]),
+        ] {
+            if let Ok((_, secs)) = rt.time(id, &inputs, 10) {
+                rows.push((id.to_string(), secs, 512 * 512));
+            }
+        }
+        for (id, secs, pix) in rows {
+            let _ = writeln!(
+                out,
+                "{id:<34} {}  ({:.1} Mpixel/s)",
+                Ms::from(secs),
+                pix as f64 / secs / 1e6
+            );
+        }
+        // uchar conv path.
+        let imgu = bench_defs::synth_image(imagecl::imagecl::ScalarType::U8, 512, 512, 2);
+        let xu = Tensor::new(512, 512, imgu.buf.data.iter().map(|&v| v as f32).collect());
+        let f25 = Tensor::new(
+            25,
+            1,
+            bench_defs::gauss5x5().iter().map(|&v| v as f32).collect::<Vec<f32>>(),
+        );
+        if let Ok((_, secs)) = rt.time("conv2d_512_bh32u1s1", &[&xu, &f25], 10) {
+            let _ = writeln!(
+                out,
+                "{:<34} {}  ({:.1} Mpixel/s)",
+                "conv2d_512_bh32u1s1",
+                Ms::from(secs),
+                (512.0 * 512.0) / secs / 1e6
+            );
+        }
+    } else {
+        let _ = writeln!(out, "(artifacts missing — run `make artifacts`)");
+    }
+    let _ = {
+        let mut args2: BTreeMap<String, imagecl::exec::Arg> = BTreeMap::new();
+        args2.clear();
+    };
+
+    emit_report("hotpath.txt", &out);
+}

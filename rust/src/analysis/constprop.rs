@@ -1,0 +1,414 @@
+//! Multi-value constant propagation (paper §5.2.4).
+//!
+//! The stencil analysis needs the possible values of `c1`/`c2` in
+//! `image[idx + c1][idy + c2]`. Often these are not constants but depend on
+//! the iteration variable of fixed-range for-loops (Listing 1). Following
+//! the paper, we use "a modified version of constant propagation where we
+//! allow each variable to take on a small set of constant values".
+//!
+//! The analysis is deliberately conservative and flow-insensitive: a
+//! variable has a known [`ValueSet`] iff it is (a) declared with a
+//! constant-evaluable initializer and never reassigned, or (b) a for-loop
+//! induction variable with a constant-evaluable range. Anything else is
+//! unknown (`None`), which makes downstream optimizations (local memory)
+//! unavailable rather than incorrect.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::imagecl::ast::*;
+
+/// Maximum cardinality a tracked value set may reach; larger sets become
+/// unknown. Stencils in image processing are small (a 5×5 filter is 25
+/// offsets), so 256 is generous while bounding analysis cost.
+pub const MAX_SET: usize = 256;
+
+/// Maximum trip count of a loop whose induction values we enumerate.
+pub const MAX_TRIPS: usize = 256;
+
+/// A small set of possible integer values.
+pub type ValueSet = BTreeSet<i64>;
+
+/// The constant environment: variable → possible values.
+#[derive(Debug, Clone, Default)]
+pub struct ConstEnv {
+    pub vars: HashMap<String, ValueSet>,
+}
+
+impl ConstEnv {
+    /// Build the environment for a kernel body.
+    pub fn build(kernel: &KernelFn) -> ConstEnv {
+        // Count assignments per variable (decl-with-init counts as zero;
+        // later reassignment invalidates the set).
+        let mut reassigned: HashMap<String, usize> = HashMap::new();
+        kernel.walk_stmts(&mut |s| {
+            if let Stmt::Assign { lhs: LValue::Var(v), .. } = s {
+                *reassigned.entry(v.clone()).or_insert(0) += 1;
+            }
+        });
+
+        let mut env = ConstEnv::default();
+        // Iterate to a fixed point so decls whose initializers reference
+        // earlier const variables resolve (bounded: each pass either adds a
+        // variable or stops).
+        loop {
+            let mut changed = false;
+            kernel.walk_stmts(&mut |s| match s {
+                Stmt::Decl { name, init: Some(init), .. } => {
+                    if reassigned.contains_key(name) || env.vars.contains_key(name) {
+                        return;
+                    }
+                    if let Some(vs) = env.eval_set(init) {
+                        env.vars.insert(name.clone(), vs);
+                        changed = true;
+                    }
+                }
+                Stmt::For { var, init, cond, step, .. } => {
+                    if env.vars.contains_key(var) {
+                        return;
+                    }
+                    if let Some(vs) = env.loop_values(init, cond, step, var) {
+                        env.vars.insert(var.clone(), vs);
+                        changed = true;
+                    }
+                }
+                _ => {}
+            });
+            if !changed {
+                break;
+            }
+        }
+        env
+    }
+
+    /// All possible iteration values of a restricted for-loop, if its range
+    /// is compile-time constant (as a set; see [`Self::loop_values_ordered`]
+    /// for the actual iteration order, which matters for float-accumulation
+    /// bit-exactness when unrolling).
+    pub fn loop_values(
+        &self,
+        init: &Expr,
+        cond: &Expr,
+        step: &Expr,
+        var: &str,
+    ) -> Option<ValueSet> {
+        self.loop_values_ordered(init, cond, step, var)
+            .map(|v| v.into_iter().collect())
+    }
+
+    /// Iteration values in execution order.
+    pub fn loop_values_ordered(
+        &self,
+        init: &Expr,
+        cond: &Expr,
+        step: &Expr,
+        var: &str,
+    ) -> Option<Vec<i64>> {
+        let starts = self.eval_set(init)?;
+        let steps = self.eval_set(step)?;
+        if starts.len() != 1 || steps.len() != 1 {
+            return None;
+        }
+        let start = *starts.iter().next().unwrap();
+        let step = *steps.iter().next().unwrap();
+        if step == 0 {
+            return None;
+        }
+        // cond must be `var < K`, `var <= K`, `var > K` or `var >= K`.
+        let (op, bound) = match cond {
+            Expr::Binary { op, lhs, rhs } => match (&**lhs, self.eval_set(rhs)) {
+                (Expr::Ident(v), Some(b)) if v == var && b.len() == 1 => {
+                    (*op, *b.iter().next().unwrap())
+                }
+                _ => return None,
+            },
+            _ => return None,
+        };
+        let keep = |v: i64| match op {
+            BinOp::Lt => v < bound,
+            BinOp::Le => v <= bound,
+            BinOp::Gt => v > bound,
+            BinOp::Ge => v >= bound,
+            _ => false,
+        };
+        if !matches!(op, BinOp::Lt | BinOp::Le | BinOp::Gt | BinOp::Ge) {
+            return None;
+        }
+        let mut out = Vec::new();
+        let mut v = start;
+        for _ in 0..MAX_TRIPS {
+            if !keep(v) {
+                return Some(out);
+            }
+            out.push(v);
+            v += step;
+        }
+        None // did not terminate within MAX_TRIPS
+    }
+
+    /// Evaluate an integer expression to its set of possible values, or
+    /// `None` if not compile-time determinable.
+    pub fn eval_set(&self, e: &Expr) -> Option<ValueSet> {
+        match e {
+            Expr::IntLit(v) => Some([*v].into()),
+            Expr::BoolLit(b) => Some([*b as i64].into()),
+            Expr::Ident(name) => self.vars.get(name).cloned(),
+            Expr::Unary { op: UnOp::Neg, expr } => {
+                Some(self.eval_set(expr)?.iter().map(|v| -v).collect())
+            }
+            Expr::Cast { ty, expr } if !ty.is_float() => self.eval_set(expr),
+            Expr::Binary { op, lhs, rhs } => {
+                let a = self.eval_set(lhs)?;
+                let b = self.eval_set(rhs)?;
+                if a.len().checked_mul(b.len())? > MAX_SET {
+                    return None;
+                }
+                let mut out = ValueSet::new();
+                for &x in &a {
+                    for &y in &b {
+                        let v = match op {
+                            BinOp::Add => x.checked_add(y)?,
+                            BinOp::Sub => x.checked_sub(y)?,
+                            BinOp::Mul => x.checked_mul(y)?,
+                            BinOp::Div => {
+                                if y == 0 {
+                                    return None;
+                                }
+                                x / y
+                            }
+                            BinOp::Rem => {
+                                if y == 0 {
+                                    return None;
+                                }
+                                x % y
+                            }
+                            BinOp::Shl => x.checked_shl(u32::try_from(y).ok()?)?,
+                            BinOp::Shr => x.checked_shr(u32::try_from(y).ok()?)?,
+                            _ => return None,
+                        };
+                        out.insert(v);
+                    }
+                }
+                if out.len() > MAX_SET {
+                    None
+                } else {
+                    Some(out)
+                }
+            }
+            Expr::Call { name, args } => {
+                let sets: Option<Vec<ValueSet>> =
+                    args.iter().map(|a| self.eval_set(a)).collect();
+                let sets = sets?;
+                match (name.as_str(), sets.as_slice()) {
+                    ("min", [a, b]) => {
+                        let mut out = ValueSet::new();
+                        for &x in a {
+                            for &y in b {
+                                out.insert(x.min(y));
+                            }
+                        }
+                        Some(out)
+                    }
+                    ("max", [a, b]) => {
+                        let mut out = ValueSet::new();
+                        for &x in a {
+                            for &y in b {
+                                out.insert(x.max(y));
+                            }
+                        }
+                        Some(out)
+                    }
+                    ("abs", [a]) => Some(a.iter().map(|v| v.abs()).collect()),
+                    _ => None,
+                }
+            }
+            _ => None,
+        }
+    }
+
+    /// Evaluate to a single constant, if the set is a singleton.
+    pub fn eval_const(&self, e: &Expr) -> Option<i64> {
+        let s = self.eval_set(e)?;
+        if s.len() == 1 {
+            s.into_iter().next()
+        } else {
+            None
+        }
+    }
+}
+
+/// An index expression decomposed into `base + offset-set` form, where
+/// `base` is one of the thread-index builtins or absent (paper §5.2.4:
+/// references must have the form `image[idx + c1][idy + c2]`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Affine {
+    /// `Some("idx")` / `Some("idy")` / `Some("idz")` or `None` (pure const).
+    pub base: Option<String>,
+    pub offsets: ValueSet,
+}
+
+impl Affine {
+    pub fn constant(v: i64) -> Affine {
+        Affine { base: None, offsets: [v].into() }
+    }
+}
+
+/// Decompose an index expression into [`Affine`] form w.r.t. the builtin
+/// thread indices. Returns `None` for anything non-affine in the builtins
+/// (e.g. `idx * 2`, `idx % n`), matching the paper's restriction.
+pub fn affine_of(env: &ConstEnv, e: &Expr) -> Option<Affine> {
+    match e {
+        Expr::Ident(name) if crate::imagecl::sema::BUILTIN_IDS.contains(&name.as_str()) => {
+            Some(Affine { base: Some(name.clone()), offsets: [0].into() })
+        }
+        Expr::Binary { op: op @ (BinOp::Add | BinOp::Sub), lhs, rhs } => {
+            // Try base on the left: (affine) ± (const-set).
+            if let (Some(a), Some(b)) = (affine_of(env, lhs), env.eval_set(rhs)) {
+                if a.offsets.len().checked_mul(b.len())? > MAX_SET {
+                    return None;
+                }
+                let mut offsets = ValueSet::new();
+                for &x in &a.offsets {
+                    for &y in &b {
+                        offsets.insert(if *op == BinOp::Add { x + y } else { x - y });
+                    }
+                }
+                return Some(Affine { base: a.base, offsets });
+            }
+            // Or base on the right (only for +): (const-set) + (affine).
+            if *op == BinOp::Add {
+                if let (Some(a), Some(b)) = (env.eval_set(lhs), affine_of(env, rhs)) {
+                    if a.len().checked_mul(b.offsets.len())? > MAX_SET {
+                        return None;
+                    }
+                    let mut offsets = ValueSet::new();
+                    for &x in &a {
+                        for &y in &b.offsets {
+                            offsets.insert(x + y);
+                        }
+                    }
+                    return Some(Affine { base: b.base, offsets });
+                }
+            }
+            None
+        }
+        other => env.eval_set(other).map(|offsets| Affine { base: None, offsets }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imagecl::Program;
+
+    fn env_of(src: &str) -> (ConstEnv, KernelFn) {
+        let p = Program::parse(src).unwrap();
+        let env = ConstEnv::build(&p.kernel);
+        (env, p.kernel)
+    }
+
+    #[test]
+    fn decl_const_tracked() {
+        let (env, _) = env_of("void k(float* a) { int r = 2; a[idx + r] = 0.0f; }");
+        assert_eq!(env.vars["r"], ValueSet::from([2]));
+    }
+
+    #[test]
+    fn reassigned_var_unknown() {
+        let (env, _) =
+            env_of("void k(float* a) { int r = 2; r = 3; a[idx + r] = 0.0f; }");
+        assert!(!env.vars.contains_key("r"));
+    }
+
+    #[test]
+    fn loop_var_enumerated() {
+        let (env, _) = env_of(
+            "void k(float* a) { for (int i = -1; i < 2; i++) { a[idx + i] = 0.0f; } }",
+        );
+        assert_eq!(env.vars["i"], ValueSet::from([-1, 0, 1]));
+    }
+
+    #[test]
+    fn loop_var_with_step() {
+        let (env, _) = env_of(
+            "void k(float* a) { for (int i = 0; i <= 8; i += 4) { a[idx + i] = 0.0f; } }",
+        );
+        assert_eq!(env.vars["i"], ValueSet::from([0, 4, 8]));
+    }
+
+    #[test]
+    fn loop_depending_on_const_decl() {
+        let (env, _) = env_of(
+            "void k(float* a) { int r = 2; for (int i = -r; i < r + 1; i++) { a[idx + i] = 0.0f; } }",
+        );
+        assert_eq!(env.vars["i"], ValueSet::from([-2, -1, 0, 1, 2]));
+    }
+
+    #[test]
+    fn loop_with_runtime_bound_unknown() {
+        let (env, _) = env_of(
+            "void k(float* a, int n) { for (int i = 0; i < n; i++) { a[idx + i] = 0.0f; } }",
+        );
+        assert!(!env.vars.contains_key("i"));
+    }
+
+    #[test]
+    fn eval_set_arith() {
+        let (env, _) = env_of(
+            "void k(float* a) { for (int i = 0; i < 3; i++) { a[idx + i * 2 - 1] = 0.0f; } }",
+        );
+        let e = Expr::sub(
+            Expr::mul(Expr::ident("i"), Expr::int(2)),
+            Expr::int(1),
+        );
+        assert_eq!(env.eval_set(&e).unwrap(), ValueSet::from([-1, 1, 3]));
+    }
+
+    #[test]
+    fn eval_min_max() {
+        let env = ConstEnv::default();
+        let e = Expr::call("min", vec![Expr::int(3), Expr::int(5)]);
+        assert_eq!(env.eval_set(&e).unwrap(), ValueSet::from([3]));
+    }
+
+    #[test]
+    fn affine_idx_plus_loopvar() {
+        let (env, _) = env_of(
+            "void k(float* a) { for (int i = -1; i < 2; i++) { a[idx + i] = 0.0f; } }",
+        );
+        let e = Expr::add(Expr::ident("idx"), Expr::ident("i"));
+        let a = affine_of(&env, &e).unwrap();
+        assert_eq!(a.base.as_deref(), Some("idx"));
+        assert_eq!(a.offsets, ValueSet::from([-1, 0, 1]));
+    }
+
+    #[test]
+    fn affine_const_plus_idy() {
+        let env = ConstEnv::default();
+        let e = Expr::add(Expr::int(2), Expr::ident("idy"));
+        let a = affine_of(&env, &e).unwrap();
+        assert_eq!(a.base.as_deref(), Some("idy"));
+        assert_eq!(a.offsets, ValueSet::from([2]));
+    }
+
+    #[test]
+    fn affine_rejects_scaled_idx() {
+        let env = ConstEnv::default();
+        let e = Expr::mul(Expr::ident("idx"), Expr::int(2));
+        assert!(affine_of(&env, &e).is_none());
+    }
+
+    #[test]
+    fn affine_pure_const() {
+        let env = ConstEnv::default();
+        let a = affine_of(&env, &Expr::int(7)).unwrap();
+        assert_eq!(a.base, None);
+        assert_eq!(a.offsets, ValueSet::from([7]));
+    }
+
+    #[test]
+    fn division_by_zero_unknown() {
+        let env = ConstEnv::default();
+        let e = Expr::bin(BinOp::Div, Expr::int(4), Expr::int(0));
+        assert!(env.eval_set(&e).is_none());
+    }
+}

@@ -1,0 +1,313 @@
+//! Static per-logical-thread cost estimation.
+//!
+//! Counts, for ONE logical thread (= one pixel of the thread grid), the
+//! arithmetic operations and buffer traffic the kernel performs. The device
+//! performance model ([`crate::devices`]) scales these counts by the grid
+//! size and the tuning configuration (coarsening, memory spaces, ...).
+//!
+//! Loop bodies are weighted by their compile-time trip count when known;
+//! unknown-trip loops use [`UNKNOWN_TRIPS`] (documented approximation —
+//! all loops in the paper's benchmarks have static ranges). `if` branches
+//! are weighted by [`BRANCH_WEIGHT`] each, modelling a 50/50 split without
+//! losing the work of either side.
+
+use std::collections::HashMap;
+
+use super::constprop::ConstEnv;
+use crate::imagecl::ast::*;
+
+/// Assumed trip count for loops whose range is not compile-time constant.
+pub const UNKNOWN_TRIPS: f64 = 8.0;
+
+/// Weight applied to each arm of an `if`.
+pub const BRANCH_WEIGHT: f64 = 0.5;
+
+/// Static cost of one logical thread.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ThreadCost {
+    /// Floating-point add/sub/mul ops.
+    pub flops: f64,
+    /// Float divisions (much slower on GPUs; modeled separately).
+    pub fdivs: f64,
+    /// Integer/bool/compare ops (index arithmetic is added by codegen and
+    /// is NOT included here — the device model accounts for it from the
+    /// configuration).
+    pub iops: f64,
+    /// Transcendental / special function calls (sqrt, exp, ...).
+    pub transcendentals: f64,
+    /// Reads per buffer parameter (elements).
+    pub reads: HashMap<String, f64>,
+    /// Writes per buffer parameter (elements).
+    pub writes: HashMap<String, f64>,
+}
+
+impl ThreadCost {
+    /// Total element reads across all buffers.
+    pub fn total_reads(&self) -> f64 {
+        self.reads.values().sum()
+    }
+
+    pub fn total_writes(&self) -> f64 {
+        self.writes.values().sum()
+    }
+
+    /// Total arithmetic (weighted: divisions and transcendentals count as
+    /// several simple ops — rough throughput ratios on current hardware).
+    pub fn weighted_ops(&self) -> f64 {
+        self.flops + self.iops + 8.0 * self.fdivs + 16.0 * self.transcendentals
+    }
+}
+
+/// Minimal expression-type inference context (params + local decls).
+struct TypeCtx<'a> {
+    kernel: &'a KernelFn,
+    locals: HashMap<String, ScalarType>,
+}
+
+impl TypeCtx<'_> {
+    fn ty(&self, e: &Expr) -> ScalarType {
+        match e {
+            Expr::IntLit(_) => ScalarType::I32,
+            Expr::FloatLit(_) => ScalarType::F32,
+            Expr::BoolLit(_) => ScalarType::Bool,
+            Expr::Ident(n) => {
+                if crate::imagecl::sema::BUILTIN_IDS.contains(&n.as_str()) {
+                    ScalarType::I32
+                } else if let Some(t) = self.locals.get(n) {
+                    *t
+                } else if let Some(p) = self.kernel.param(n) {
+                    p.ty.elem()
+                } else {
+                    ScalarType::F32
+                }
+            }
+            Expr::Unary { expr, .. } => self.ty(expr),
+            Expr::Binary { op, lhs, rhs } => match op {
+                BinOp::Eq
+                | BinOp::Ne
+                | BinOp::Lt
+                | BinOp::Gt
+                | BinOp::Le
+                | BinOp::Ge
+                | BinOp::And
+                | BinOp::Or => ScalarType::Bool,
+                _ => {
+                    let a = self.ty(lhs);
+                    let b = self.ty(rhs);
+                    if a.is_float() || b.is_float() {
+                        ScalarType::F32
+                    } else {
+                        a
+                    }
+                }
+            },
+            Expr::Index { base, .. } => self
+                .kernel
+                .param(base)
+                .map(|p| p.ty.elem())
+                .unwrap_or(ScalarType::F32),
+            Expr::Call { name, args } => match name.as_str() {
+                "min" | "max" | "clamp" | "abs" | "fabs" => {
+                    args.first().map(|a| self.ty(a)).unwrap_or(ScalarType::F32)
+                }
+                _ => ScalarType::F32,
+            },
+            Expr::Ternary { then, .. } => self.ty(then),
+            Expr::Cast { ty, .. } => *ty,
+        }
+    }
+}
+
+/// Estimate the per-logical-thread cost of the kernel.
+pub fn estimate(kernel: &KernelFn, env: &ConstEnv) -> ThreadCost {
+    let mut cost = ThreadCost::default();
+    let mut ctx = TypeCtx { kernel, locals: HashMap::new() };
+    // Pre-register local decls and loop variables (flow-insensitive;
+    // names are unique per sema).
+    kernel.walk_stmts(&mut |s| match s {
+        Stmt::Decl { ty, name, .. } => {
+            ctx.locals.insert(name.clone(), *ty);
+        }
+        Stmt::For { var, .. } => {
+            ctx.locals.insert(var.clone(), ScalarType::I32);
+        }
+        _ => {}
+    });
+    count_stmts(&kernel.body, 1.0, env, &ctx, &mut cost);
+    cost
+}
+
+fn count_expr(e: &Expr, w: f64, ctx: &TypeCtx, cost: &mut ThreadCost) {
+    match e {
+        Expr::Unary { expr, .. } => {
+            count_expr(expr, w, ctx, cost);
+            if ctx.ty(expr).is_float() {
+                cost.flops += w;
+            } else {
+                cost.iops += w;
+            }
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            count_expr(lhs, w, ctx, cost);
+            count_expr(rhs, w, ctx, cost);
+            let fl = ctx.ty(lhs).is_float() || ctx.ty(rhs).is_float();
+            match op {
+                BinOp::Div if fl => cost.fdivs += w,
+                BinOp::Add | BinOp::Sub | BinOp::Mul if fl => cost.flops += w,
+                _ => cost.iops += w,
+            }
+        }
+        Expr::Index { base, indices } => {
+            for i in indices {
+                count_expr(i, w, ctx, cost);
+            }
+            *cost.reads.entry(base.clone()).or_default() += w;
+        }
+        Expr::Call { name, args } => {
+            for a in args {
+                count_expr(a, w, ctx, cost);
+            }
+            match name.as_str() {
+                "sqrt" | "rsqrt" | "exp" | "log" | "sin" | "cos" | "pow" => {
+                    cost.transcendentals += w
+                }
+                _ => cost.flops += w, // min/max/fabs/clamp ≈ one op
+            }
+        }
+        Expr::Ternary { cond, then, els } => {
+            count_expr(cond, w, ctx, cost);
+            count_expr(then, w * BRANCH_WEIGHT, ctx, cost);
+            count_expr(els, w * BRANCH_WEIGHT, ctx, cost);
+        }
+        Expr::Cast { expr, .. } => count_expr(expr, w, ctx, cost),
+        _ => {}
+    }
+}
+
+fn count_stmts(stmts: &[Stmt], w: f64, env: &ConstEnv, ctx: &TypeCtx, cost: &mut ThreadCost) {
+    for s in stmts {
+        match s {
+            Stmt::Decl { init, .. } => {
+                if let Some(e) = init {
+                    count_expr(e, w, ctx, cost);
+                }
+            }
+            Stmt::Assign { lhs, op, value } => {
+                count_expr(value, w, ctx, cost);
+                if let LValue::Index { base, indices } = lhs {
+                    for i in indices {
+                        count_expr(i, w, ctx, cost);
+                    }
+                    *cost.writes.entry(base.clone()).or_default() += w;
+                    if *op != AssignOp::Set {
+                        *cost.reads.entry(base.clone()).or_default() += w;
+                    }
+                }
+                if op.binop().is_some() {
+                    // The implied read-modify op.
+                    cost.flops += w;
+                }
+            }
+            Stmt::If { cond, then, els } => {
+                count_expr(cond, w, ctx, cost);
+                count_stmts(then, w * BRANCH_WEIGHT, env, ctx, cost);
+                count_stmts(els, w * BRANCH_WEIGHT, env, ctx, cost);
+            }
+            Stmt::For { var, init, cond, step, body } => {
+                count_expr(init, w, ctx, cost);
+                let trips = env
+                    .loop_values(init, cond, step, var)
+                    .map(|vs| vs.len() as f64)
+                    .unwrap_or(UNKNOWN_TRIPS);
+                // Condition evaluated trips+1 times, step trips times.
+                count_expr(cond, w * (trips + 1.0), ctx, cost);
+                count_expr(step, w * trips, ctx, cost);
+                cost.iops += w * trips; // induction increment
+                count_stmts(body, w * trips, env, ctx, cost);
+            }
+            Stmt::While { cond, body } => {
+                count_expr(cond, w * (UNKNOWN_TRIPS + 1.0), ctx, cost);
+                count_stmts(body, w * UNKNOWN_TRIPS, env, ctx, cost);
+            }
+            Stmt::ExprStmt(e) => count_expr(e, w, ctx, cost),
+            Stmt::Return | Stmt::Barrier => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imagecl::Program;
+
+    fn cost_of(src: &str) -> ThreadCost {
+        let p = Program::parse(src).unwrap();
+        let env = ConstEnv::build(&p.kernel);
+        estimate(&p.kernel, &env)
+    }
+
+    #[test]
+    fn box_filter_counts() {
+        let c = cost_of(
+            "void blur(Image<float> in, Image<float> out) {\n\
+               float sum = 0.0f;\n\
+               for (int i = -1; i < 2; i++) {\n\
+                 for (int j = -1; j < 2; j++) { sum += in[idx + i][idy + j]; }\n\
+               }\n\
+               out[idx][idy] = sum / 9.0f;\n\
+             }",
+        );
+        // 9 reads of `in`, 1 write of `out`.
+        assert_eq!(c.reads["in"], 9.0);
+        assert_eq!(c.writes["out"], 1.0);
+        // 9 float adds from `sum +=` plus the final division.
+        assert!(c.flops >= 9.0);
+        assert_eq!(c.fdivs, 1.0);
+        assert!(c.total_reads() == 9.0);
+    }
+
+    #[test]
+    fn branch_weighting() {
+        let c = cost_of(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> o) {\n\
+               if (idx > 0) { o[idx][idy] = a[idx][idy]; } else { o[idx][idy] = 0.0f; }\n\
+             }",
+        );
+        assert_eq!(c.reads["a"], BRANCH_WEIGHT);
+        assert_eq!(c.writes["o"], 2.0 * BRANCH_WEIGHT);
+    }
+
+    #[test]
+    fn transcendental_counted() {
+        let c = cost_of(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> o) { o[idx][idy] = sqrt(a[idx][idy]); }",
+        );
+        assert_eq!(c.transcendentals, 1.0);
+        assert!(c.weighted_ops() >= 16.0);
+    }
+
+    #[test]
+    fn unknown_loop_uses_default() {
+        let c = cost_of(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> o, int n) {\n\
+               float s = 0.0f;\n\
+               for (int i = 0; i < n; i++) { s += a[idx][idy]; }\n\
+               o[idx][idy] = s;\n\
+             }",
+        );
+        assert_eq!(c.reads["a"], UNKNOWN_TRIPS);
+    }
+
+    #[test]
+    fn integer_ops_classified() {
+        let c = cost_of(
+            "#pragma imcl grid(64, 64)\n\
+             void k(float* a) { int t = idx * 2 + 1; a[t] = 0.0f; }",
+        );
+        assert!(c.iops >= 2.0);
+        assert_eq!(c.flops, 0.0);
+    }
+}

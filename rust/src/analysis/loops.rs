@@ -1,0 +1,107 @@
+//! Loop inventory (paper §5.2.5, loop unrolling).
+//!
+//! Collects the kernel's for-loops in source (pre-)order, assigning the
+//! stable 1-based IDs the paper's result tables use ("Unroll loop 1",
+//! "Unroll loop 2"). A loop is *unrollable* when its trip count is a
+//! compile-time constant (range known via constant propagation).
+
+use super::constprop::ConstEnv;
+use crate::imagecl::ast::*;
+
+/// Information about one for-loop in the kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoopInfo {
+    /// 1-based ID in source pre-order (paper tables: "Unroll loop 1").
+    pub id: usize,
+    /// Induction variable name.
+    pub var: String,
+    /// Trip count if compile-time constant.
+    pub trips: Option<usize>,
+    /// Nesting depth (0 = top level of kernel body).
+    pub depth: usize,
+}
+
+impl LoopInfo {
+    pub fn unrollable(&self) -> bool {
+        self.trips.is_some()
+    }
+}
+
+/// Collect all for-loops, in pre-order.
+pub fn collect(kernel: &KernelFn, env: &ConstEnv) -> Vec<LoopInfo> {
+    let mut out = Vec::new();
+    fn rec(stmts: &[Stmt], depth: usize, env: &ConstEnv, out: &mut Vec<LoopInfo>) {
+        for s in stmts {
+            match s {
+                Stmt::For { var, init, cond, step, body } => {
+                    let trips = env
+                        .loop_values(init, cond, step, var)
+                        .map(|vs| vs.len());
+                    out.push(LoopInfo {
+                        id: out.len() + 1,
+                        var: var.clone(),
+                        trips,
+                        depth,
+                    });
+                    rec(body, depth + 1, env, out);
+                }
+                Stmt::If { then, els, .. } => {
+                    rec(then, depth, env, out);
+                    rec(els, depth, env, out);
+                }
+                Stmt::While { body, .. } => rec(body, depth, env, out),
+                _ => {}
+            }
+        }
+    }
+    rec(&kernel.body, 0, env, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imagecl::Program;
+
+    fn loops(src: &str) -> Vec<LoopInfo> {
+        let p = Program::parse(src).unwrap();
+        let env = ConstEnv::build(&p.kernel);
+        collect(&p.kernel, &env)
+    }
+
+    #[test]
+    fn nested_loops_ordered() {
+        let ls = loops(
+            "void k(float* a) {\n\
+               for (int i = 0; i < 4; i++) {\n\
+                 for (int j = 0; j < 2; j++) { a[idx] = 0.0f; }\n\
+               }\n\
+               for (int m = 0; m < 3; m++) { a[idx] = 1.0f; }\n\
+             }",
+        );
+        assert_eq!(ls.len(), 3);
+        assert_eq!((ls[0].id, ls[0].var.as_str(), ls[0].trips, ls[0].depth), (1, "i", Some(4), 0));
+        assert_eq!((ls[1].id, ls[1].var.as_str(), ls[1].trips, ls[1].depth), (2, "j", Some(2), 1));
+        assert_eq!((ls[2].id, ls[2].var.as_str(), ls[2].trips, ls[2].depth), (3, "m", Some(3), 0));
+        assert!(ls.iter().all(LoopInfo::unrollable));
+    }
+
+    #[test]
+    fn runtime_loop_not_unrollable() {
+        let ls = loops(
+            "void k(float* a, int n) { for (int i = 0; i < n; i++) { a[idx] = 0.0f; } }",
+        );
+        assert_eq!(ls.len(), 1);
+        assert_eq!(ls[0].trips, None);
+        assert!(!ls[0].unrollable());
+    }
+
+    #[test]
+    fn loop_inside_if_found() {
+        let ls = loops(
+            "void k(float* a) { if (idx > 0) { for (int i = 0; i < 2; i++) { a[idx] = 0.0f; } } }",
+        );
+        assert_eq!(ls.len(), 1);
+        assert_eq!(ls[0].trips, Some(2));
+    }
+}

@@ -1,0 +1,181 @@
+//! Compiler analyses (paper §5.1–§5.2).
+//!
+//! [`KernelInfo::analyze`] runs every pass over a checked program and
+//! exposes the per-array optimization *eligibility* queries the
+//! transformation stage and the tuning-space enumeration share:
+//!
+//! * image memory — array is read-only XOR write-only (no aliasing);
+//! * constant memory — array is read-only and its size is known (via the
+//!   `array_size` directive) to fit the device limit;
+//! * local memory — `Image` is read-only and has a compile-time stencil.
+
+pub mod constprop;
+pub mod cost;
+pub mod loops;
+pub mod rw;
+pub mod stencil;
+
+use std::collections::HashMap;
+
+pub use constprop::{affine_of, Affine, ConstEnv, ValueSet};
+pub use cost::ThreadCost;
+pub use loops::LoopInfo;
+pub use rw::Access;
+pub use stencil::{Stencil, StencilFailure};
+
+use crate::imagecl::{CheckedProgram, Forced, Type};
+
+/// Aggregated analysis results for one kernel.
+#[derive(Debug, Clone)]
+pub struct KernelInfo {
+    pub prog: CheckedProgram,
+    pub env: ConstEnv,
+    pub access: HashMap<String, Access>,
+    pub stencils: HashMap<String, Result<Stencil, StencilFailure>>,
+    pub loops: Vec<LoopInfo>,
+    pub cost: ThreadCost,
+}
+
+impl KernelInfo {
+    /// Run all analyses.
+    pub fn analyze(prog: CheckedProgram) -> KernelInfo {
+        let env = ConstEnv::build(&prog.kernel);
+        let access = rw::classify(&prog.kernel);
+        let stencils = stencil::extract(&prog.kernel, &env);
+        let loops = loops::collect(&prog.kernel, &env);
+        let cost = cost::estimate(&prog.kernel, &env);
+        KernelInfo { prog, env, access, stencils, loops, cost }
+    }
+
+    pub fn access(&self, array: &str) -> Access {
+        self.access.get(array).copied().unwrap_or(Access::Unused)
+    }
+
+    /// Image memory (texture) eligibility: used read-only or write-only
+    /// (paper §5.2.4 — aliasing is disallowed, so reference inspection is
+    /// sound). Honors `force(image_mem(..), off)`.
+    pub fn image_mem_eligible(&self, array: &str) -> bool {
+        if self.prog.force_image_mem.get(array) == Some(&Forced::Off) {
+            return false;
+        }
+        matches!(self.access(array), Access::ReadOnly | Access::WriteOnly)
+            && self.prog.kernel.param(array).map(|p| p.ty.is_buffer()) == Some(true)
+    }
+
+    /// Constant memory eligibility: read-only and size known to be below
+    /// `max_bytes` (device limit). The size is known either never (plain
+    /// images — their extent is a runtime value) or through the
+    /// `array_size` directive (paper §5.2.4).
+    pub fn constant_mem_eligible(&self, array: &str, max_bytes: usize) -> bool {
+        if self.prog.force_constant_mem.get(array) == Some(&Forced::Off) {
+            return false;
+        }
+        if self.access(array) != Access::ReadOnly {
+            return false;
+        }
+        let Some(param) = self.prog.kernel.param(array) else {
+            return false;
+        };
+        let elem_bytes = match &param.ty {
+            Type::Array { elem } => elem.size_bytes(),
+            _ => return false, // images use image memory, not constant
+        };
+        match self.prog.size_bounds.get(array) {
+            Some(n) => n * elem_bytes <= max_bytes,
+            None => false,
+        }
+    }
+
+    /// Local memory eligibility: read-only `Image` with a compile-time
+    /// stencil (paper §5.2.4). Honors `force(local_mem(..), off)`.
+    pub fn local_mem_eligible(&self, array: &str) -> bool {
+        if self.prog.force_local_mem.get(array) == Some(&Forced::Off) {
+            return false;
+        }
+        self.access(array) == Access::ReadOnly && self.read_stencil(array).is_some()
+    }
+
+    /// The read stencil of an image, if extraction succeeded.
+    pub fn read_stencil(&self, array: &str) -> Option<Stencil> {
+        match self.stencils.get(array) {
+            Some(Ok(s)) => Some(*s),
+            _ => None,
+        }
+    }
+
+    /// Loops eligible for the unroll tuning parameter.
+    pub fn unrollable_loops(&self) -> Vec<&LoopInfo> {
+        self.loops.iter().filter(|l| l.unrollable()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imagecl::frontend;
+
+    fn info(src: &str) -> KernelInfo {
+        KernelInfo::analyze(frontend(src).unwrap())
+    }
+
+    const CONV: &str = "#pragma imcl grid(in)\n\
+        #pragma imcl array_size(f, 25)\n\
+        void conv(Image<float> in, Image<float> out, float* f) {\n\
+          float sum = 0.0f;\n\
+          for (int i = -2; i < 3; i++) {\n\
+            for (int j = -2; j < 3; j++) {\n\
+              sum += in[idx + i][idy + j] * f[(i + 2) * 5 + j + 2];\n\
+            }\n\
+          }\n\
+          out[idx][idy] = sum;\n\
+        }";
+
+    #[test]
+    fn conv_eligibilities() {
+        let ki = info(CONV);
+        // in: read-only image with 5x5 stencil → image, local eligible.
+        assert!(ki.image_mem_eligible("in"));
+        assert!(ki.local_mem_eligible("in"));
+        assert!(!ki.constant_mem_eligible("in", 64 << 10));
+        // out: write-only image → image memory eligible, not local/const.
+        assert!(ki.image_mem_eligible("out"));
+        assert!(!ki.local_mem_eligible("out"));
+        // f: read-only array with size bound 25*4B → constant eligible.
+        assert!(ki.constant_mem_eligible("f", 64 << 10));
+        assert!(!ki.constant_mem_eligible("f", 64)); // too small a limit
+        assert_eq!(
+            ki.read_stencil("in"),
+            Some(Stencil { min_dx: -2, max_dx: 2, min_dy: -2, max_dy: 2 })
+        );
+        assert_eq!(ki.unrollable_loops().len(), 2);
+    }
+
+    #[test]
+    fn read_write_image_not_eligible() {
+        let ki = info("void k(Image<float> a) { a[idx][idy] = a[idx][idy] + 1.0f; }");
+        assert!(!ki.image_mem_eligible("a"));
+        assert!(!ki.local_mem_eligible("a"));
+    }
+
+    #[test]
+    fn forced_off_wins() {
+        let ki = info(
+            "#pragma imcl grid(in)\n\
+             #pragma imcl force(local_mem(in), off)\n\
+             #pragma imcl force(image_mem(in), off)\n\
+             void k(Image<float> in, Image<float> out) { out[idx][idy] = in[idx][idy]; }",
+        );
+        assert!(!ki.local_mem_eligible("in"));
+        assert!(!ki.image_mem_eligible("in"));
+        assert!(ki.image_mem_eligible("out"));
+    }
+
+    #[test]
+    fn array_without_bound_not_constant_eligible() {
+        let ki = info(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, float* f) { a[idx][idy] = f[0]; }",
+        );
+        assert!(!ki.constant_mem_eligible("f", 64 << 10));
+    }
+}

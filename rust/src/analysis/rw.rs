@@ -1,0 +1,163 @@
+//! Read/write classification of buffer parameters (paper §5.2.4).
+//!
+//! ImageCL disallows aliasing, so looking at every reference to an array
+//! suffices to decide whether it is only read from or only written to —
+//! the prerequisite for the image-memory (read-only XOR write-only),
+//! constant-memory (read-only) and local-memory (read-only) optimizations.
+
+use std::collections::HashMap;
+
+use crate::imagecl::ast::*;
+
+/// Access classification of one buffer parameter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Unused,
+    ReadOnly,
+    WriteOnly,
+    ReadWrite,
+}
+
+impl Access {
+    fn with_read(self) -> Access {
+        match self {
+            Access::Unused | Access::ReadOnly => Access::ReadOnly,
+            Access::WriteOnly | Access::ReadWrite => Access::ReadWrite,
+        }
+    }
+
+    fn with_write(self) -> Access {
+        match self {
+            Access::Unused | Access::WriteOnly => Access::WriteOnly,
+            Access::ReadOnly | Access::ReadWrite => Access::ReadWrite,
+        }
+    }
+}
+
+/// Classify every buffer parameter of the kernel.
+pub fn classify(kernel: &KernelFn) -> HashMap<String, Access> {
+    let mut acc: HashMap<String, Access> = kernel
+        .params
+        .iter()
+        .filter(|p| p.ty.is_buffer())
+        .map(|p| (p.name.clone(), Access::Unused))
+        .collect();
+
+    fn read(acc: &mut HashMap<String, Access>, e: &Expr) {
+        e.walk(&mut |ex| {
+            if let Expr::Index { base, .. } = ex {
+                if let Some(a) = acc.get_mut(base) {
+                    *a = a.with_read();
+                }
+            }
+        })
+    }
+
+    // Reads: every Index expression that appears as an rvalue. walk_exprs
+    // visits value expressions and index sub-expressions of assignments but
+    // NOT the assignment target itself, which is handled below.
+    kernel.walk_stmts(&mut |s| {
+        match s {
+            Stmt::Decl { init: Some(e), .. } => read(&mut acc, e),
+            Stmt::Assign { lhs, value, .. } => {
+                // Index sub-expressions of the target are reads of whatever
+                // they reference; the target buffer itself is a write (a
+                // compound assignment additionally reads the target).
+                if let LValue::Index { base, indices } = lhs {
+                    for i in indices {
+                        read(&mut acc, i);
+                    }
+                    if let Some(a) = acc.get_mut(base) {
+                        *a = a.with_write();
+                    }
+                }
+                read(&mut acc, value);
+            }
+            Stmt::If { cond, .. } => read(&mut acc, cond),
+            Stmt::For { init, cond, step, .. } => {
+                read(&mut acc, init);
+                read(&mut acc, cond);
+                read(&mut acc, step);
+            }
+            Stmt::While { cond, .. } => read(&mut acc, cond),
+            Stmt::ExprStmt(e) => read(&mut acc, e),
+            _ => {}
+        }
+        // Compound assignment (`+=` etc.) to a buffer element also reads it.
+        if let Stmt::Assign { lhs: LValue::Index { base, .. }, op, .. } = s {
+            if *op != AssignOp::Set {
+                if let Some(a) = acc.get_mut(base) {
+                    *a = a.with_read();
+                }
+            }
+        }
+    });
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imagecl::Program;
+
+    fn classify_src(src: &str) -> HashMap<String, Access> {
+        classify(&Program::parse(src).unwrap().kernel)
+    }
+
+    #[test]
+    fn box_filter_classification() {
+        let acc = classify_src(
+            "void blur(Image<float> in, Image<float> out) {\n\
+               float sum = 0.0f;\n\
+               for (int i = -1; i < 2; i++) { sum += in[idx + i][idy]; }\n\
+               out[idx][idy] = sum / 9.0f;\n\
+             }",
+        );
+        assert_eq!(acc["in"], Access::ReadOnly);
+        assert_eq!(acc["out"], Access::WriteOnly);
+    }
+
+    #[test]
+    fn read_write_detected() {
+        let acc = classify_src(
+            "void k(Image<float> a) { a[idx][idy] = a[idx][idy] * 2.0f; }",
+        );
+        assert_eq!(acc["a"], Access::ReadWrite);
+    }
+
+    #[test]
+    fn compound_assign_is_read_write() {
+        let acc = classify_src("void k(Image<float> a) { a[idx][idy] += 1.0f; }");
+        assert_eq!(acc["a"], Access::ReadWrite);
+    }
+
+    #[test]
+    fn unused_buffer() {
+        let acc = classify_src(
+            "#pragma imcl grid(a)\nvoid k(Image<float> a, float* f) { a[idx][idy] = 0.0f; }",
+        );
+        assert_eq!(acc["f"], Access::Unused);
+        assert_eq!(acc["a"], Access::WriteOnly);
+    }
+
+    #[test]
+    fn read_in_condition_counts() {
+        let acc = classify_src(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> m) {\n\
+               if (m[idx][idy] > 0.5f) { a[idx][idy] = 1.0f; }\n\
+             }",
+        );
+        assert_eq!(acc["m"], Access::ReadOnly);
+        assert_eq!(acc["a"], Access::WriteOnly);
+    }
+
+    #[test]
+    fn index_of_write_target_is_read() {
+        let acc = classify_src(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, float* lut) { a[(int)(lut[0])][idy] = 0.0f; }",
+        );
+        assert_eq!(acc["lut"], Access::ReadOnly);
+    }
+}

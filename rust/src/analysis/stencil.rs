@@ -1,0 +1,229 @@
+//! Stencil extraction (paper §5.2.4, local memory).
+//!
+//! For an `Image` that is a candidate for the local-memory optimization we
+//! must determine, at compile time, the fixed-size neighbourhood each
+//! logical thread reads: all read references must have the form
+//! `image[idx + c1][idy + c2]` with `c1`, `c2` in small constant sets
+//! (possibly via loop variables — multi-value constant propagation).
+//! The result is the bounding box of all `(c1, c2)` offsets (the paper uses
+//! the bounding box "for simplicity, although this may cause unnecessary
+//! loads").
+
+use std::collections::HashMap;
+
+use super::constprop::{affine_of, ConstEnv};
+use crate::imagecl::ast::*;
+
+/// Inclusive offset bounding box of a stencil, in x (first index) and y
+/// (second index). A single-pixel access is `(0,0)..(0,0)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stencil {
+    pub min_dx: i64,
+    pub max_dx: i64,
+    pub min_dy: i64,
+    pub max_dy: i64,
+}
+
+impl Stencil {
+    pub const POINT: Stencil = Stencil { min_dx: 0, max_dx: 0, min_dy: 0, max_dy: 0 };
+
+    /// Halo width in each direction: how many extra pixels beyond the
+    /// work-group tile must be staged into local memory (paper Figure 5).
+    pub fn extent_x(&self) -> i64 {
+        self.max_dx - self.min_dx
+    }
+
+    pub fn extent_y(&self) -> i64 {
+        self.max_dy - self.min_dy
+    }
+
+    fn include(&mut self, dx: i64, dy: i64) {
+        self.min_dx = self.min_dx.min(dx);
+        self.max_dx = self.max_dx.max(dx);
+        self.min_dy = self.min_dy.min(dy);
+        self.max_dy = self.max_dy.max(dy);
+    }
+}
+
+/// Why stencil extraction failed for an image (local memory then unusable).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StencilFailure {
+    /// A read reference index was not `idx + const-set` / `idy + const-set`.
+    NonAffineIndex(String),
+    /// First index not based on `idx`, or second not on `idy`.
+    WrongBase(String),
+    /// The image is read with 1-D or 3-D indexing somewhere.
+    WrongArity(String),
+}
+
+/// Extract the read stencil of every Image parameter that is read with 2-D
+/// indexing. Returns per image either the stencil or the failure reason.
+pub fn extract(
+    kernel: &KernelFn,
+    env: &ConstEnv,
+) -> HashMap<String, Result<Stencil, StencilFailure>> {
+    let mut out: HashMap<String, Result<Stencil, StencilFailure>> = HashMap::new();
+    let images: Vec<String> = kernel
+        .params
+        .iter()
+        .filter(|p| matches!(p.ty, Type::Image { .. }))
+        .map(|p| p.name.clone())
+        .collect();
+
+    // Visit every *read* reference (walk_exprs does not visit assignment
+    // targets, which is what we want: writes don't constrain the read
+    // stencil; read-only-ness is checked separately by rw::classify).
+    kernel.walk_exprs(&mut |e| {
+        let Expr::Index { base, indices } = e else { return };
+        if !images.contains(base) {
+            return;
+        }
+        let entry = out
+            .entry(base.clone())
+            .or_insert(Ok(Stencil { min_dx: i64::MAX, max_dx: i64::MIN, min_dy: i64::MAX, max_dy: i64::MIN }));
+        if entry.is_err() {
+            return;
+        }
+        if indices.len() != 2 {
+            *entry = Err(StencilFailure::WrongArity(base.clone()));
+            return;
+        }
+        let (ax, ay) = match (affine_of(env, &indices[0]), affine_of(env, &indices[1])) {
+            (Some(ax), Some(ay)) => (ax, ay),
+            _ => {
+                *entry = Err(StencilFailure::NonAffineIndex(base.clone()));
+                return;
+            }
+        };
+        if ax.base.as_deref() != Some("idx") || ay.base.as_deref() != Some("idy") {
+            *entry = Err(StencilFailure::WrongBase(base.clone()));
+            return;
+        }
+        if let Ok(st) = entry {
+            for &dx in &ax.offsets {
+                for &dy in &ay.offsets {
+                    st.include(dx, dy);
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imagecl::Program;
+
+    fn stencils(src: &str) -> HashMap<String, Result<Stencil, StencilFailure>> {
+        let p = Program::parse(src).unwrap();
+        let env = ConstEnv::build(&p.kernel);
+        extract(&p.kernel, &env)
+    }
+
+    #[test]
+    fn box_filter_3x3() {
+        let st = stencils(
+            "void blur(Image<float> in, Image<float> out) {\n\
+               float sum = 0.0f;\n\
+               for (int i = -1; i < 2; i++) {\n\
+                 for (int j = -1; j < 2; j++) { sum += in[idx + i][idy + j]; }\n\
+               }\n\
+               out[idx][idy] = sum / 9.0f;\n\
+             }",
+        );
+        assert_eq!(
+            st["in"],
+            Ok(Stencil { min_dx: -1, max_dx: 1, min_dy: -1, max_dy: 1 })
+        );
+        // `out` is only written — no read stencil entry.
+        assert!(!st.contains_key("out"));
+    }
+
+    #[test]
+    fn asymmetric_row_stencil() {
+        let st = stencils(
+            "#pragma imcl grid(in)\n\
+             void row(Image<float> in, Image<float> out, float* f) {\n\
+               float sum = 0.0f;\n\
+               for (int i = -2; i < 3; i++) { sum += in[idx + i][idy] * f[i + 2]; }\n\
+               out[idx][idy] = sum;\n\
+             }",
+        );
+        assert_eq!(
+            st["in"],
+            Ok(Stencil { min_dx: -2, max_dx: 2, min_dy: 0, max_dy: 0 })
+        );
+    }
+
+    #[test]
+    fn point_access() {
+        let st = stencils(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> o) { o[idx][idy] = a[idx][idy]; }",
+        );
+        assert_eq!(st["a"], Ok(Stencil::POINT));
+    }
+
+    #[test]
+    fn constant_offsets_without_loop() {
+        let st = stencils(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> o) {\n\
+               o[idx][idy] = a[idx - 1][idy + 2] + a[idx + 3][idy];\n\
+             }",
+        );
+        assert_eq!(
+            st["a"],
+            Ok(Stencil { min_dx: -1, max_dx: 3, min_dy: 0, max_dy: 2 })
+        );
+    }
+
+    #[test]
+    fn scaled_index_fails() {
+        let st = stencils(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> o) { o[idx][idy] = a[idx * 2][idy]; }",
+        );
+        assert!(matches!(st["a"], Err(StencilFailure::NonAffineIndex(_))));
+    }
+
+    #[test]
+    fn swapped_bases_fail() {
+        let st = stencils(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> o) { o[idx][idy] = a[idy][idx]; }",
+        );
+        assert!(matches!(st["a"], Err(StencilFailure::WrongBase(_))));
+    }
+
+    #[test]
+    fn runtime_offset_fails() {
+        let st = stencils(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> o, int r) {\n\
+               o[idx][idy] = a[idx + r][idy];\n\
+             }",
+        );
+        assert!(matches!(st["a"], Err(StencilFailure::NonAffineIndex(_))));
+    }
+
+    #[test]
+    fn harris_window_stencil() {
+        // 2x2 block window as used by the Harris benchmark.
+        let st = stencils(
+            "#pragma imcl grid(dx2)\n\
+             void harris(Image<float> dx2, Image<float> out) {\n\
+               float sum = 0.0f;\n\
+               for (int i = 0; i < 2; i++) {\n\
+                 for (int j = 0; j < 2; j++) { sum += dx2[idx + i][idy + j]; }\n\
+               }\n\
+               out[idx][idy] = sum;\n\
+             }",
+        );
+        assert_eq!(
+            st["dx2"],
+            Ok(Stencil { min_dx: 0, max_dx: 1, min_dy: 0, max_dy: 1 })
+        );
+    }
+}

@@ -1,0 +1,378 @@
+//! Baseline comparators for Figure 6: Halide, HIPACC and OpenCV.
+//!
+//! We cannot run the real binaries on this testbed (DESIGN.md §2); each
+//! baseline is modelled inside our own framework by the *structural
+//! restriction* the paper's §7 attributes its behaviour to:
+//!
+//! * **Halide** — schedules are searched (the paper hand-tuned for hours:
+//!   we grant an exhaustive search over a thinned space), but the language
+//!   cannot express image memory ("an optimization Halide does not
+//!   expose"). It *can* fuse pipeline stages through local memory /
+//!   caches (its §7 win on the GTX 960 sep-conv) and hoists boundary
+//!   handling out of the hot loop via specialization (its 4.24× CPU
+//!   conv2d win).
+//! * **HIPACC** — one configuration chosen by its architecture model +
+//!   heuristics (no empirical search): texture memory on NVIDIA, local
+//!   staging for stencils, fixed work-group heuristic, full unrolling.
+//! * **OpenCV** — hand-written fixed implementations: one OpenCL kernel
+//!   configuration tuned for a generic GCN GPU (with `uchar4`
+//!   vectorization for the 8-bit conv — its §6 win on the AMD 7970), one
+//!   natively vectorized CPU path, and a multi-pass `cornerHarris`
+//!   (separate Sobel/multiply/box/response kernels with DRAM round trips
+//!   — why ImageCL beats it by 2-4.6× on Harris).
+
+use crate::analysis::KernelInfo;
+use crate::bench_defs::{Benchmark, KernelDef};
+use crate::devices::{predict, DeviceKind, DeviceSpec, KernelModel};
+use crate::imagecl::{frontend, BoundaryCond};
+use crate::transform::TuningConfig;
+use crate::tuner::{self, MlSearchOpts, Strategy, TuningSpace};
+
+/// The comparators of Figure 6.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Baseline {
+    Halide,
+    Hipacc,
+    OpenCv,
+}
+
+impl Baseline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Baseline::Halide => "Halide",
+            Baseline::Hipacc => "HIPACC",
+            Baseline::OpenCv => "OpenCV",
+        }
+    }
+}
+
+pub const ALL_BASELINES: [Baseline; 3] =
+    [Baseline::Halide, Baseline::Hipacc, Baseline::OpenCv];
+
+/// Tuning budget used for ImageCL in Figure 6 (paper-scale ML search).
+pub fn imagecl_strategy() -> Strategy {
+    Strategy::MlTwoPhase(MlSearchOpts {
+        train_samples: 700,
+        top_k: 100,
+        epochs: 30,
+        ..Default::default()
+    })
+}
+
+fn analyze(k: &KernelDef) -> KernelInfo {
+    KernelInfo::analyze(frontend(k.source).expect("benchmark source"))
+}
+
+/// ImageCL time for one benchmark on one device: auto-tune each kernel,
+/// sum the best times (paper: per-kernel tuning).
+pub fn imagecl_time(bench: &Benchmark, dev: &DeviceSpec, n: usize) -> f64 {
+    bench
+        .kernels
+        .iter()
+        .map(|k| {
+            let info = analyze(k);
+            tuner::tune_on_simulator(&info, dev, (n, n), &imagecl_strategy()).best_time
+        })
+        .sum()
+}
+
+/// Baseline time for one benchmark on one device.
+pub fn baseline_time(b: Baseline, bench: &Benchmark, dev: &DeviceSpec, n: usize) -> f64 {
+    match b {
+        Baseline::Halide => halide_time(bench, dev, n),
+        Baseline::Hipacc => hipacc_time(bench, dev, n),
+        Baseline::OpenCv => opencv_time(bench, dev, n),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Halide
+// ---------------------------------------------------------------------
+
+/// Predict with Halide's boundary specialization: the clamped/constant
+/// checks are hoisted out of the interior loop, so reads behave like
+/// unchecked interior reads.
+fn predict_hoisted_boundary(
+    dev: &DeviceSpec,
+    info: &KernelInfo,
+    cfg: &TuningConfig,
+    n: usize,
+) -> f64 {
+    let mut km = KernelModel::build(info, cfg);
+    for b in &mut km.buffers {
+        b.boundary_checked = false;
+        b.boundary = BoundaryCond::Constant(0.0);
+    }
+    predict(dev, &km, n, n).seconds
+}
+
+fn halide_kernel_time(info: &KernelInfo, dev: &DeviceSpec, n: usize) -> f64 {
+    // Restricted space: no image memory, and no explicit local-memory
+    // staging of single-kernel stencils either (paper §3: "important GPU
+    // optimizations, such as using specific memories, are hard or
+    // impossible to express" — Halide's shared-memory use comes from
+    // stage fusion, credited separately below). Thinned exhaustive search
+    // stands in for the paper's hours of manual schedule tuning.
+    let space = TuningSpace::enumerate(info, dev);
+    let mut best = f64::INFINITY;
+    for cfg in space.configs.iter().step_by(3) {
+        if cfg.image_mem.values().any(|&v| v) || cfg.any_local_mem() {
+            continue;
+        }
+        let t = predict_hoisted_boundary(dev, info, cfg, n);
+        if t < best {
+            best = t;
+        }
+    }
+    best
+}
+
+fn halide_time(bench: &Benchmark, dev: &DeviceSpec, n: usize) -> f64 {
+    let per_kernel: f64 = bench
+        .kernels
+        .iter()
+        .map(|k| halide_kernel_time(&analyze(k), dev, n))
+        .sum();
+    if bench.id == "sepconv" {
+        // Stage fusion (§7): Halide merges the row and column kernels,
+        // caching the intermediate in local memory — the intermediate
+        // image's DRAM round trip (one write + one read) disappears, at
+        // the price of halo recomputation and tile synchronization
+        // (compute_at), modelled as 15% of the unfused time.
+        let elem = bench.pixel_type.size_bytes() as f64;
+        let saved = 2.0 * elem * (n * n) as f64 / (dev.mem_bw_gbs * 1e9);
+        let overhead = 0.15 * per_kernel;
+        (per_kernel - saved + overhead).max(per_kernel * 0.6)
+    } else {
+        per_kernel
+    }
+}
+
+// ---------------------------------------------------------------------
+// HIPACC
+// ---------------------------------------------------------------------
+
+fn hipacc_config(info: &KernelInfo, dev: &DeviceSpec) -> TuningConfig {
+    // Architecture-model heuristics (HIPACC paper): fixed work-group,
+    // no coarsening search, texture for read-only images on NVIDIA,
+    // local staging for stencils, constant memory, full unroll.
+    let mut cfg = TuningConfig::default();
+    cfg.wg = match dev.kind {
+        DeviceKind::Gpu => [32, 4],
+        DeviceKind::Cpu => [16, 1],
+    };
+    // The CPU backend distributes row strips per thread; GPUs get one
+    // pixel per work-item (HIPACC does not search coarsening).
+    cfg.coarsen = match dev.kind {
+        DeviceKind::Gpu => [1, 1],
+        DeviceKind::Cpu => [64, 2],
+    };
+    cfg.interleaved = dev.kind == DeviceKind::Cpu;
+    let is_nvidia = dev.name.contains("K40") || dev.name.contains("GTX");
+    for p in &info.prog.kernel.params {
+        let name = &p.name;
+        if info.local_mem_eligible(name) {
+            if let Some(st) = info.read_stencil(name) {
+                // HIPACC stages multi-row stencils; single-row reuse is
+                // left to the cache.
+                if st.extent_y() > 0 {
+                    cfg.local_mem.insert(name.clone(), true);
+                }
+            }
+        }
+        if is_nvidia
+            && info.image_mem_eligible(name)
+            && !cfg.uses_local_mem(name)
+            && info.access(name) == crate::analysis::Access::ReadOnly
+        {
+            cfg.image_mem.insert(name.clone(), true);
+        }
+        if info.constant_mem_eligible(name, dev.constant_mem_bytes()) {
+            cfg.constant_mem.insert(name.clone(), true);
+        }
+    }
+    for l in info.unrollable_loops() {
+        cfg.unroll.insert(l.id, 0);
+    }
+    cfg
+}
+
+fn hipacc_time(bench: &Benchmark, dev: &DeviceSpec, n: usize) -> f64 {
+    bench
+        .kernels
+        .iter()
+        .map(|k| {
+            let info = analyze(k);
+            let cfg = hipacc_config(&info, dev);
+            let km = KernelModel::build(&info, &cfg);
+            let p = predict(dev, &km, n, n);
+            if p.seconds.is_finite() {
+                p.seconds
+            } else {
+                // Heuristic picked an invalid config (e.g. local tile too
+                // big): HIPACC would fall back to plain global memory.
+                let mut fb = cfg.clone();
+                fb.local_mem.clear();
+                predict(dev, &KernelModel::build(&info, &fb), n, n).seconds
+            }
+        })
+        .sum()
+}
+
+// ---------------------------------------------------------------------
+// OpenCV
+// ---------------------------------------------------------------------
+
+/// OpenCV's single hand-tuned GPU configuration (frozen once, shipped
+/// everywhere — the paper's performance-portability cautionary tale).
+fn opencv_gpu_config(info: &KernelInfo) -> TuningConfig {
+    let mut cfg = TuningConfig::default();
+    cfg.wg = [16, 16];
+    cfg.coarsen = [1, 1];
+    for p in &info.prog.kernel.params {
+        if info.local_mem_eligible(&p.name) {
+            cfg.local_mem.insert(p.name.clone(), true);
+        }
+        if info.constant_mem_eligible(&p.name, 64 << 10) {
+            cfg.constant_mem.insert(p.name.clone(), true);
+        }
+    }
+    for l in info.unrollable_loops() {
+        cfg.unroll.insert(l.id, 0);
+    }
+    cfg
+}
+
+fn opencv_kernel_time(info: &KernelInfo, dev: &DeviceSpec, n: usize, uchar: bool) -> f64 {
+    match dev.kind {
+        DeviceKind::Gpu => {
+            let cfg = opencv_gpu_config(info);
+            let km = KernelModel::build(info, &cfg);
+            let t = predict(dev, &km, n, n).seconds;
+            // Hand-written uchar4 vector loads in the 8-bit conv path.
+            // The kernel was tuned on GCN (why OpenCV wins conv2d on the
+            // AMD 7970, paper §6); on NVIDIA the same code vectorizes
+            // poorly and ImageCL stays ahead (paper: 1.17–2.82×).
+            if uchar {
+                if dev.name.contains("AMD") {
+                    t * 0.5
+                } else {
+                    t * 0.9
+                }
+            } else {
+                t
+            }
+        }
+        DeviceKind::Cpu => {
+            // Native SIMD CPU path with hoisted boundaries; fixed
+            // parallelization (one strip per core).
+            let mut cfg = TuningConfig::default();
+            cfg.wg = [8, 1];
+            cfg.coarsen = [64, 1];
+            cfg.interleaved = true;
+            for l in info.unrollable_loops() {
+                cfg.unroll.insert(l.id, 0);
+            }
+            predict_hoisted_boundary(dev, info, &cfg, n)
+        }
+    }
+}
+
+fn opencv_time(bench: &Benchmark, dev: &DeviceSpec, n: usize) -> f64 {
+    match bench.id {
+        "harris" => {
+            // cv::cornerHarris is a multi-pass pipeline: Sobel, three
+            // products, three box filters, response — every intermediate
+            // makes a DRAM round trip.
+            let sobel = analyze(&bench.kernels[0]);
+            let base = opencv_kernel_time(&sobel, dev, n, false);
+            let elem = 4.0;
+            let round_trip = 2.0 * elem * (n * n) as f64
+                / (dev.mem_bw_gbs * 1e9)
+                + dev.launch_overhead_s;
+            // sobel + products + box filters + response, partially batched
+            // by OpenCV internally: ~5 effective extra passes.
+            base + 5.0 * (round_trip + base * 0.35)
+        }
+        _ => {
+            let uchar = bench.pixel_type == crate::imagecl::ScalarType::U8;
+            let per_kernel: f64 = bench
+                .kernels
+                .iter()
+                .map(|k| opencv_kernel_time(&analyze(k), dev, n, uchar))
+                .sum();
+            if bench.id == "sepconv" && dev.kind == DeviceKind::Cpu {
+                // cv::sepFilter2D keeps the row-pass result in a cache-
+                // resident row buffer — the CPU path is effectively fused.
+                let elem = bench.pixel_type.size_bytes() as f64;
+                let saved = 2.0 * elem * (n * n) as f64 / (dev.mem_bw_gbs * 1e9);
+                (per_kernel - saved).max(per_kernel * 0.6)
+            } else {
+                per_kernel
+            }
+        }
+    }
+}
+
+/// One Figure 6 cell: slowdown of a baseline relative to ImageCL
+/// (>1 = ImageCL faster, the paper's plotting convention).
+pub fn fig6_slowdown(b: Baseline, bench: &Benchmark, dev: &DeviceSpec, n: usize) -> f64 {
+    baseline_time(b, bench, dev, n) / imagecl_time(bench, dev, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{HARRIS_CORNER, NONSEP_CONVOLUTION, SEPARABLE_CONVOLUTION};
+    use crate::devices::{AMD_7970, GTX_960, INTEL_I7, K40};
+
+    // Smaller-than-paper grids keep test time sane; ratios are scale-
+    // stable because every term is per-pixel dominated. Debug builds
+    // shrink further (the tuner's search loop is ~20x slower unoptimized).
+    #[cfg(debug_assertions)]
+    const N: usize = 256;
+    #[cfg(not(debug_assertions))]
+    const N: usize = 1024;
+
+    #[test]
+    fn harris_imagecl_beats_opencv_everywhere() {
+        // Paper: speedups 3.15 / 2.11 / 4.57 / 1.08 vs OpenCV on Harris.
+        for dev in [&AMD_7970, &GTX_960, &K40, &INTEL_I7] {
+            let s = fig6_slowdown(Baseline::OpenCv, &HARRIS_CORNER, dev, N);
+            assert!(s > 1.0, "{}: OpenCV slowdown {s}", dev.name);
+            assert!(s < 12.0, "{}: OpenCV slowdown {s} implausibly large", dev.name);
+        }
+    }
+
+    #[test]
+    fn halide_wins_cpu_conv2d() {
+        // Paper §6: ImageCL 4.24x slower than Halide on the CPU conv2d
+        // (vectorization + boundary specialization).
+        let s = fig6_slowdown(Baseline::Halide, &NONSEP_CONVOLUTION, &INTEL_I7, N);
+        assert!(s < 1.0, "Halide should win CPU conv2d, slowdown {s}");
+    }
+
+    #[test]
+    fn imagecl_wins_k40_conv2d() {
+        // Paper §7: image memory gives ImageCL the K40.
+        for b in ALL_BASELINES {
+            let s = fig6_slowdown(b, &NONSEP_CONVOLUTION, &K40, N);
+            assert!(s > 1.0, "K40 conv2d vs {}: slowdown {s}", b.name());
+        }
+    }
+
+    #[test]
+    fn hipacc_never_absurd() {
+        for dev in [&AMD_7970, &GTX_960, &K40, &INTEL_I7] {
+            for bench in [&SEPARABLE_CONVOLUTION, &NONSEP_CONVOLUTION] {
+                let s = fig6_slowdown(Baseline::Hipacc, bench, dev, N);
+                assert!(
+                    s.is_finite() && s > 0.3 && s < 20.0,
+                    "{} {}: {s}",
+                    dev.name,
+                    bench.id
+                );
+            }
+        }
+    }
+}

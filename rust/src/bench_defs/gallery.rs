@@ -1,0 +1,254 @@
+//! Kernel gallery: additional ImageCL programs beyond the paper's three
+//! benchmarks, exercising the breadth the language claims (paper §5:
+//! "rich enough to express a wide range of parallel image processing
+//! algorithms" while retaining "the generality of OpenCL").
+//!
+//! Each kernel ships with a direct Rust reference; the gallery sweep in
+//! `rust/tests/exec_sweep.rs`-style tests (see `tests` below and the
+//! integration suite) checks every tuning configuration against it.
+
+use crate::exec::ImageBuf;
+
+/// Grayscale threshold (per-pixel, no stencil — point kernels must also
+/// survive every transformation).
+pub const THRESHOLD: &str = r#"
+#pragma imcl grid(in)
+void threshold(Image<float> in, Image<float> out, float level) {
+  out[idx][idy] = in[idx][idy] > level ? 1.0 : 0.0;
+}
+"#;
+
+/// 3x3 erosion (min filter) — morphological, clamped boundary.
+pub const ERODE: &str = r#"
+#pragma imcl grid(in)
+#pragma imcl boundary(in, clamped)
+void erode(Image<float> in, Image<float> out) {
+  float m = in[idx][idy];
+  for (int i = -1; i < 2; i++) {
+    for (int j = -1; j < 2; j++) {
+      m = min(m, in[idx + i][idy + j]);
+    }
+  }
+  out[idx][idy] = m;
+}
+"#;
+
+/// 3x3 dilation (max filter).
+pub const DILATE: &str = r#"
+#pragma imcl grid(in)
+#pragma imcl boundary(in, clamped)
+void dilate(Image<float> in, Image<float> out) {
+  float m = in[idx][idy];
+  for (int i = -1; i < 2; i++) {
+    for (int j = -1; j < 2; j++) {
+      m = max(m, in[idx + i][idy + j]);
+    }
+  }
+  out[idx][idy] = m;
+}
+"#;
+
+/// Gradient magnitude with sqrt (transcendental use + two inputs).
+pub const GRAD_MAG: &str = r#"
+#pragma imcl grid(dx)
+void grad_mag(Image<float> dx, Image<float> dy, Image<float> out) {
+  float gx = dx[idx][idy];
+  float gy = dy[idx][idy];
+  out[idx][idy] = sqrt(gx * gx + gy * gy);
+}
+"#;
+
+/// Unsharp masking: out = in + amount*(in - blur3(in)) — stencil plus
+/// scalar parameter plus constant boundary.
+pub const UNSHARP: &str = r#"
+#pragma imcl grid(in)
+#pragma imcl boundary(in, constant, 0.0)
+void unsharp(Image<float> in, Image<float> out, float amount) {
+  float sum = 0.0f;
+  for (int i = -1; i < 2; i++) {
+    for (int j = -1; j < 2; j++) {
+      sum += in[idx + i][idy + j];
+    }
+  }
+  float blur = sum / 9.0f;
+  out[idx][idy] = in[idx][idy] + amount * (in[idx][idy] - blur);
+}
+"#;
+
+/// Downsample-by-2 (grid from the *output* image, reads a 2x2 block of a
+/// larger input — exercises grid != input-image size).
+pub const DOWNSAMPLE: &str = r#"
+#pragma imcl grid(out)
+#pragma imcl boundary(in, clamped)
+void downsample(Image<float> in, Image<float> out) {
+  float sum = 0.0f;
+  for (int i = 0; i < 2; i++) {
+    for (int j = 0; j < 2; j++) {
+      sum += in[idx + idx + i][idy + idy + j];
+    }
+  }
+  out[idx][idy] = sum / 4.0f;
+}
+"#;
+
+/// Image blend with a weight array (array parameter indexed by a
+/// runtime-computed subscript).
+pub const BLEND: &str = r#"
+#pragma imcl grid(a)
+#pragma imcl array_size(w, 2)
+void blend(Image<float> a, Image<float> b, Image<float> out, float* w) {
+  out[idx][idy] = a[idx][idy] * w[0] + b[idx][idy] * w[1];
+}
+"#;
+
+/// All gallery kernels with display names.
+pub const GALLERY: [(&str, &str); 7] = [
+    ("threshold", THRESHOLD),
+    ("erode", ERODE),
+    ("dilate", DILATE),
+    ("grad_mag", GRAD_MAG),
+    ("unsharp", UNSHARP),
+    ("downsample", DOWNSAMPLE),
+    ("blend", BLEND),
+];
+
+// ---------------------------------------------------------------------
+// References
+// ---------------------------------------------------------------------
+
+pub fn ref_threshold(input: &ImageBuf, level: f64) -> Vec<f64> {
+    input
+        .buf
+        .data
+        .iter()
+        .map(|&v| if v as f32 > level as f32 { 1.0 } else { 0.0 })
+        .collect()
+}
+
+fn morph(input: &ImageBuf, take_min: bool) -> Vec<f64> {
+    let (w, h) = (input.w as i64, input.h as i64);
+    let at = |x: i64, y: i64| input.get(x.clamp(0, w - 1) as usize, y.clamp(0, h - 1) as usize);
+    let mut out = vec![0.0; (w * h) as usize];
+    for y in 0..h {
+        for x in 0..w {
+            let mut m = at(x, y);
+            for i in -1..2 {
+                for j in -1..2 {
+                    let v = at(x + i, y + j);
+                    m = if take_min { m.min(v) } else { m.max(v) };
+                }
+            }
+            out[(y * w + x) as usize] = m;
+        }
+    }
+    out
+}
+
+pub fn ref_erode(input: &ImageBuf) -> Vec<f64> {
+    morph(input, true)
+}
+
+pub fn ref_dilate(input: &ImageBuf) -> Vec<f64> {
+    morph(input, false)
+}
+
+pub fn ref_grad_mag(dx: &ImageBuf, dy: &ImageBuf) -> Vec<f64> {
+    dx.buf
+        .data
+        .iter()
+        .zip(&dy.buf.data)
+        .map(|(&a, &b)| {
+            let (a, b) = (a as f32, b as f32);
+            ((a * a + b * b) as f32).sqrt() as f64
+        })
+        .collect()
+}
+
+pub fn ref_unsharp(input: &ImageBuf, amount: f64) -> Vec<f64> {
+    let (w, h) = (input.w as i64, input.h as i64);
+    let mut out = vec![0.0; (w * h) as usize];
+    for y in 0..h {
+        for x in 0..w {
+            let mut sum = 0.0f64;
+            for i in -1..2 {
+                for j in -1..2 {
+                    let (xx, yy) = (x + i, y + j);
+                    if xx >= 0 && xx < w && yy >= 0 && yy < h {
+                        sum += input.get(xx as usize, yy as usize);
+                    }
+                }
+            }
+            let c = input.get(x as usize, y as usize);
+            let blur = (sum as f32 / 9.0) as f64;
+            out[(y * w + x) as usize] = c + amount * (c - blur);
+        }
+    }
+    out
+}
+
+/// Downsample reference: output is `w/2 x h/2` of a `w x h` input.
+pub fn ref_downsample(input: &ImageBuf, ow: usize, oh: usize) -> Vec<f64> {
+    let (w, h) = (input.w as i64, input.h as i64);
+    let at = |x: i64, y: i64| input.get(x.clamp(0, w - 1) as usize, y.clamp(0, h - 1) as usize);
+    let mut out = vec![0.0; ow * oh];
+    for y in 0..oh as i64 {
+        for x in 0..ow as i64 {
+            let mut sum = 0.0;
+            for i in 0..2 {
+                for j in 0..2 {
+                    sum += at(2 * x + i, 2 * y + j);
+                }
+            }
+            out[(y as usize) * ow + x as usize] = (sum as f32 / 4.0) as f64;
+        }
+    }
+    out
+}
+
+pub fn ref_blend(a: &ImageBuf, b: &ImageBuf, w0: f64, w1: f64) -> Vec<f64> {
+    a.buf
+        .data
+        .iter()
+        .zip(&b.buf.data)
+        .map(|(&x, &y)| (x as f32 * w0 as f32 + y as f32 * w1 as f32) as f64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::KernelInfo;
+    use crate::imagecl::frontend;
+
+    #[test]
+    fn gallery_compiles_and_analyzes() {
+        for (name, src) in GALLERY {
+            let info = KernelInfo::analyze(
+                frontend(src).unwrap_or_else(|e| panic!("{name}: {e}")),
+            );
+            assert!(!info.loops.is_empty() || matches!(name, "threshold" | "grad_mag" | "blend"));
+        }
+    }
+
+    #[test]
+    fn gallery_eligibilities() {
+        // erode/dilate: read-only stencil input → local eligible.
+        let info = KernelInfo::analyze(frontend(ERODE).unwrap());
+        assert!(info.local_mem_eligible("in"));
+        // downsample's input index is idx+idx (scaled) → NOT local
+        // eligible (paper §5.2.4: idx must not be multiplied).
+        let info = KernelInfo::analyze(frontend(DOWNSAMPLE).unwrap());
+        assert!(!info.local_mem_eligible("in"));
+        assert!(info.image_mem_eligible("in"));
+        // blend: weight array constant-memory eligible via array_size.
+        let info = KernelInfo::analyze(frontend(BLEND).unwrap());
+        assert!(info.constant_mem_eligible("w", 64 << 10));
+    }
+
+    #[test]
+    fn threshold_is_point_kernel() {
+        let info = KernelInfo::analyze(frontend(THRESHOLD).unwrap());
+        let st = info.read_stencil("in").unwrap();
+        assert_eq!((st.extent_x(), st.extent_y()), (0, 0));
+    }
+}

@@ -1,0 +1,328 @@
+//! The paper's evaluation benchmarks (§6) as ImageCL programs, plus
+//! synthetic workload generators and direct Rust reference filters.
+//!
+//! * **Separable convolution** — 5-tap row + column kernels, 4096²
+//!   `float` image, constant boundary condition.
+//! * **Non-separable convolution** — 5×5 kernel, 8192² `uchar` image,
+//!   clamped boundary condition.
+//! * **Harris corner detection** — Sobel kernel (gradients) + Harris
+//!   kernel (2×2 block response), 5120² `float` image.
+
+pub mod gallery;
+pub mod reference;
+
+use std::collections::BTreeMap;
+
+use crate::exec::{Arg, Buffer, ImageBuf};
+use crate::imagecl::ScalarType;
+use crate::testutil::Rng;
+
+/// Separable-convolution row kernel (5 taps along x).
+pub const SEPCONV_ROW: &str = r#"
+#pragma imcl grid(in)
+#pragma imcl boundary(in, constant, 0.0)
+#pragma imcl array_size(f, 5)
+void conv_row(Image<float> in, Image<float> out, float* f) {
+  float sum = 0.0f;
+  for (int i = -2; i < 3; i++) {
+    sum += in[idx + i][idy] * f[i + 2];
+  }
+  out[idx][idy] = sum;
+}
+"#;
+
+/// Separable-convolution column kernel (5 taps along y).
+pub const SEPCONV_COL: &str = r#"
+#pragma imcl grid(in)
+#pragma imcl boundary(in, constant, 0.0)
+#pragma imcl array_size(f, 5)
+void conv_col(Image<float> in, Image<float> out, float* f) {
+  float sum = 0.0f;
+  for (int i = -2; i < 3; i++) {
+    sum += in[idx][idy + i] * f[i + 2];
+  }
+  out[idx][idy] = sum;
+}
+"#;
+
+/// Non-separable 5×5 convolution on `uchar` pixels, clamped boundary.
+pub const CONV2D: &str = r#"
+#pragma imcl grid(in)
+#pragma imcl boundary(in, clamped)
+#pragma imcl array_size(f, 25)
+void conv2d(Image<uchar> in, Image<uchar> out, float* f) {
+  float sum = 0.0f;
+  for (int i = -2; i < 3; i++) {
+    for (int j = -2; j < 3; j++) {
+      sum += (float)(in[idx + i][idy + j]) * f[(j + 2) * 5 + i + 2];
+    }
+  }
+  out[idx][idy] = (uchar)(clamp(sum, 0.0f, 255.0f));
+}
+"#;
+
+/// Sobel gradients (3×3), the first kernel of Harris corner detection.
+pub const SOBEL: &str = r#"
+#pragma imcl grid(in)
+#pragma imcl boundary(in, clamped)
+void sobel(Image<float> in, Image<float> dx, Image<float> dy) {
+  float gx = in[idx + 1][idy - 1] + 2.0f * in[idx + 1][idy] + in[idx + 1][idy + 1]
+           - in[idx - 1][idy - 1] - 2.0f * in[idx - 1][idy] - in[idx - 1][idy + 1];
+  float gy = in[idx - 1][idy + 1] + 2.0f * in[idx][idy + 1] + in[idx + 1][idy + 1]
+           - in[idx - 1][idy - 1] - 2.0f * in[idx][idy - 1] - in[idx + 1][idy - 1];
+  dx[idx][idy] = gx;
+  dy[idx][idy] = gy;
+}
+"#;
+
+/// Harris response over a 2×2 block (paper: "a block size of 2x2").
+pub const HARRIS: &str = r#"
+#pragma imcl grid(dx)
+#pragma imcl boundary(dx, clamped)
+#pragma imcl boundary(dy, clamped)
+void harris(Image<float> dx, Image<float> dy, Image<float> out) {
+  float sxx = 0.0f;
+  float syy = 0.0f;
+  float sxy = 0.0f;
+  for (int i = 0; i < 2; i++) {
+    for (int j = 0; j < 2; j++) {
+      float gx = dx[idx + i][idy + j];
+      float gy = dy[idx + i][idy + j];
+      sxx += gx * gx;
+      syy += gy * gy;
+      sxy += gx * gy;
+    }
+  }
+  out[idx][idy] = sxx * syy - sxy * sxy - 0.04f * (sxx + syy) * (sxx + syy);
+}
+"#;
+
+/// One kernel of a benchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelDef {
+    /// Kernel id used in reports/artifacts (e.g. "sepconv_row").
+    pub id: &'static str,
+    /// Display name matching the paper's tables ("R", "C", ...).
+    pub table_name: &'static str,
+    pub source: &'static str,
+}
+
+/// One of the paper's three benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Benchmark {
+    pub id: &'static str,
+    pub display: &'static str,
+    pub kernels: &'static [KernelDef],
+    /// The paper's full-size workload (grid w × h).
+    pub paper_size: (usize, usize),
+    pub pixel_type: ScalarType,
+}
+
+pub const SEPARABLE_CONVOLUTION: Benchmark = Benchmark {
+    id: "sepconv",
+    display: "Separable convolution",
+    kernels: &[
+        KernelDef { id: "sepconv_row", table_name: "R", source: SEPCONV_ROW },
+        KernelDef { id: "sepconv_col", table_name: "C", source: SEPCONV_COL },
+    ],
+    paper_size: (4096, 4096),
+    pixel_type: ScalarType::F32,
+};
+
+pub const NONSEP_CONVOLUTION: Benchmark = Benchmark {
+    id: "conv2d",
+    display: "Non-separable convolution",
+    kernels: &[KernelDef { id: "conv2d", table_name: "conv2d", source: CONV2D }],
+    paper_size: (8192, 8192),
+    pixel_type: ScalarType::U8,
+};
+
+pub const HARRIS_CORNER: Benchmark = Benchmark {
+    id: "harris",
+    display: "Harris corner detection",
+    kernels: &[
+        KernelDef { id: "sobel", table_name: "Sobel", source: SOBEL },
+        KernelDef { id: "harris", table_name: "Harris", source: HARRIS },
+    ],
+    paper_size: (5120, 5120),
+    pixel_type: ScalarType::F32,
+};
+
+/// All benchmarks, in the paper's order.
+pub const ALL: [Benchmark; 3] =
+    [SEPARABLE_CONVOLUTION, NONSEP_CONVOLUTION, HARRIS_CORNER];
+
+pub fn by_id(id: &str) -> Option<&'static Benchmark> {
+    ALL.iter().find(|b| b.id == id)
+}
+
+pub fn kernel_by_id(id: &str) -> Option<KernelDef> {
+    ALL.iter()
+        .flat_map(|b| b.kernels.iter())
+        .find(|k| k.id == id)
+        .copied()
+}
+
+/// A normalized 5-tap Gaussian-ish filter.
+pub fn gauss5() -> Vec<f64> {
+    let f = [1.0, 4.0, 6.0, 4.0, 1.0];
+    let s: f64 = f.iter().sum();
+    f.iter().map(|v| v / s).collect()
+}
+
+/// A normalized 5×5 filter (outer product of [`gauss5`]).
+pub fn gauss5x5() -> Vec<f64> {
+    let g = gauss5();
+    let mut out = Vec::with_capacity(25);
+    for y in 0..5 {
+        for x in 0..5 {
+            out.push(g[y] * g[x]);
+        }
+    }
+    out
+}
+
+/// Synthetic test image: deterministic pseudo-random pixels in a realistic
+/// range for the element type.
+pub fn synth_image(elem: ScalarType, w: usize, h: usize, seed: u64) -> ImageBuf {
+    let mut rng = Rng::new(seed);
+    ImageBuf::from_fn(elem, w, h, |_x, _y| {
+        if elem.is_float() {
+            rng.unit() * 255.0
+        } else {
+            rng.below(256) as f64
+        }
+    })
+}
+
+/// Build the argument map for one benchmark kernel at the given grid size.
+/// Inputs are synthetic; outputs are zeroed.
+pub fn workload(kernel_id: &str, w: usize, h: usize, seed: u64) -> BTreeMap<String, Arg> {
+    let mut args = BTreeMap::new();
+    match kernel_id {
+        "sepconv_row" | "sepconv_col" => {
+            args.insert(
+                "in".to_string(),
+                Arg::Image(synth_image(ScalarType::F32, w, h, seed)),
+            );
+            args.insert(
+                "out".to_string(),
+                Arg::Image(ImageBuf::new(ScalarType::F32, w, h)),
+            );
+            args.insert(
+                "f".to_string(),
+                Arg::Array(Buffer::from_f64(ScalarType::F32, gauss5())),
+            );
+        }
+        "conv2d" => {
+            args.insert(
+                "in".to_string(),
+                Arg::Image(synth_image(ScalarType::U8, w, h, seed)),
+            );
+            args.insert(
+                "out".to_string(),
+                Arg::Image(ImageBuf::new(ScalarType::U8, w, h)),
+            );
+            args.insert(
+                "f".to_string(),
+                Arg::Array(Buffer::from_f64(ScalarType::F32, gauss5x5())),
+            );
+        }
+        "sobel" => {
+            args.insert(
+                "in".to_string(),
+                Arg::Image(synth_image(ScalarType::F32, w, h, seed)),
+            );
+            args.insert("dx".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+            args.insert("dy".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+        }
+        "harris" => {
+            args.insert(
+                "dx".to_string(),
+                Arg::Image(synth_image(ScalarType::F32, w, h, seed)),
+            );
+            args.insert(
+                "dy".to_string(),
+                Arg::Image(synth_image(ScalarType::F32, w, h, seed ^ 0xABCD)),
+            );
+            args.insert(
+                "out".to_string(),
+                Arg::Image(ImageBuf::new(ScalarType::F32, w, h)),
+            );
+        }
+        other => panic!("unknown kernel id {other:?}"),
+    }
+    args
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::KernelInfo;
+    use crate::imagecl::frontend;
+
+    #[test]
+    fn all_sources_compile_through_frontend() {
+        for b in &ALL {
+            for k in b.kernels {
+                let p = frontend(k.source)
+                    .unwrap_or_else(|e| panic!("{}: {e}", k.id));
+                let _info = KernelInfo::analyze(p);
+            }
+        }
+    }
+
+    #[test]
+    fn eligibilities_match_paper_tables() {
+        // Table 2: sep-conv has image/local/constant rows → in is
+        // image+local eligible, f constant eligible.
+        let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+        assert!(info.image_mem_eligible("in"));
+        assert!(info.local_mem_eligible("in"));
+        assert!(info.constant_mem_eligible("f", 64 << 10));
+        assert_eq!(info.unrollable_loops().len(), 1); // "Unroll loop 1"
+
+        // Table 3: conv2d has two unrollable loops.
+        let info = KernelInfo::analyze(frontend(CONV2D).unwrap());
+        assert_eq!(info.unrollable_loops().len(), 2);
+        assert!(info.local_mem_eligible("in"));
+
+        // Table 4: sobel — image/local eligible input, no loops.
+        let info = KernelInfo::analyze(frontend(SOBEL).unwrap());
+        assert!(info.image_mem_eligible("in"));
+        assert!(info.local_mem_eligible("in"));
+        assert!(info.image_mem_eligible("dx"));
+        assert_eq!(info.unrollable_loops().len(), 0);
+
+        // Table 5: harris — dx & dy image/local rows, loops 1 & 2.
+        let info = KernelInfo::analyze(frontend(HARRIS).unwrap());
+        assert!(info.local_mem_eligible("dx"));
+        assert!(info.local_mem_eligible("dy"));
+        assert_eq!(info.unrollable_loops().len(), 2);
+    }
+
+    #[test]
+    fn stencils_as_expected() {
+        let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+        let s = info.read_stencil("in").unwrap();
+        assert_eq!((s.min_dx, s.max_dx, s.min_dy, s.max_dy), (-2, 2, 0, 0));
+        let info = KernelInfo::analyze(frontend(HARRIS).unwrap());
+        let s = info.read_stencil("dx").unwrap();
+        assert_eq!((s.min_dx, s.max_dx, s.min_dy, s.max_dy), (0, 1, 0, 1));
+    }
+
+    #[test]
+    fn workloads_have_right_args() {
+        let args = workload("conv2d", 16, 16, 1);
+        assert!(matches!(args["in"], Arg::Image(_)));
+        assert!(matches!(args["f"], Arg::Array(_)));
+        let args = workload("harris", 8, 8, 1);
+        assert_eq!(args.len(), 3);
+    }
+
+    #[test]
+    fn filters_normalized() {
+        assert!((gauss5().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((gauss5x5().iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

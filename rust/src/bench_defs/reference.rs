@@ -1,0 +1,205 @@
+//! Direct (scalar, obviously-correct) Rust implementations of the
+//! benchmark filters. These are the *absolute* correctness oracles: the
+//! candidate-equivalence sweep checks all configs against the naive
+//! config, and the naive config is checked against these.
+
+use crate::exec::ImageBuf;
+
+/// 5-tap row convolution, constant-0 boundary.
+pub fn sepconv_row(input: &ImageBuf, f: &[f64]) -> Vec<f64> {
+    let (w, h) = (input.w as i64, input.h as i64);
+    let mut out = vec![0.0; (w * h) as usize];
+    for y in 0..h {
+        for x in 0..w {
+            let mut sum = 0.0;
+            for i in -2..3i64 {
+                let xx = x + i;
+                let v = if xx >= 0 && xx < w {
+                    input.get(xx as usize, y as usize)
+                } else {
+                    0.0
+                };
+                sum += v * f[(i + 2) as usize];
+            }
+            out[(y * w + x) as usize] = sum;
+        }
+    }
+    out
+}
+
+/// 5-tap column convolution, constant-0 boundary.
+pub fn sepconv_col(input: &ImageBuf, f: &[f64]) -> Vec<f64> {
+    let (w, h) = (input.w as i64, input.h as i64);
+    let mut out = vec![0.0; (w * h) as usize];
+    for y in 0..h {
+        for x in 0..w {
+            let mut sum = 0.0;
+            for i in -2..3i64 {
+                let yy = y + i;
+                let v = if yy >= 0 && yy < h {
+                    input.get(x as usize, yy as usize)
+                } else {
+                    0.0
+                };
+                sum += v * f[(i + 2) as usize];
+            }
+            out[(y * w + x) as usize] = sum;
+        }
+    }
+    out
+}
+
+/// 5×5 convolution on uchar pixels, clamped boundary; the output is
+/// clamped to [0,255] and truncated like the kernel's `(uchar)` cast.
+pub fn conv2d(input: &ImageBuf, f: &[f64]) -> Vec<f64> {
+    let (w, h) = (input.w as i64, input.h as i64);
+    let mut out = vec![0.0; (w * h) as usize];
+    for y in 0..h {
+        for x in 0..w {
+            let mut sum = 0.0;
+            for i in -2..3i64 {
+                for j in -2..3i64 {
+                    let xx = (x + i).clamp(0, w - 1);
+                    let yy = (y + j).clamp(0, h - 1);
+                    sum += input.get(xx as usize, yy as usize)
+                        * f[((j + 2) * 5 + i + 2) as usize];
+                }
+            }
+            out[(y * w + x) as usize] = (sum.clamp(0.0, 255.0) as i64 & 0xFF) as f64;
+        }
+    }
+    out
+}
+
+/// 3×3 Sobel gradients, clamped boundary. Returns (dx, dy).
+pub fn sobel(input: &ImageBuf) -> (Vec<f64>, Vec<f64>) {
+    let (w, h) = (input.w as i64, input.h as i64);
+    let at = |x: i64, y: i64| {
+        input.get(x.clamp(0, w - 1) as usize, y.clamp(0, h - 1) as usize)
+    };
+    let mut dx = vec![0.0; (w * h) as usize];
+    let mut dy = vec![0.0; (w * h) as usize];
+    for y in 0..h {
+        for x in 0..w {
+            let gx = at(x + 1, y - 1) + 2.0 * at(x + 1, y) + at(x + 1, y + 1)
+                - at(x - 1, y - 1)
+                - 2.0 * at(x - 1, y)
+                - at(x - 1, y + 1);
+            let gy = at(x - 1, y + 1) + 2.0 * at(x, y + 1) + at(x + 1, y + 1)
+                - at(x - 1, y - 1)
+                - 2.0 * at(x, y - 1)
+                - at(x + 1, y - 1);
+            dx[(y * w + x) as usize] = gx;
+            dy[(y * w + x) as usize] = gy;
+        }
+    }
+    (dx, dy)
+}
+
+/// Harris response over a 2×2 block, k = 0.04, clamped boundary.
+pub fn harris(dx: &ImageBuf, dy: &ImageBuf) -> Vec<f64> {
+    let (w, h) = (dx.w as i64, dx.h as i64);
+    let atx = |x: i64, y: i64| dx.get(x.clamp(0, w - 1) as usize, y.clamp(0, h - 1) as usize);
+    let aty = |x: i64, y: i64| dy.get(x.clamp(0, w - 1) as usize, y.clamp(0, h - 1) as usize);
+    let mut out = vec![0.0; (w * h) as usize];
+    for y in 0..h {
+        for x in 0..w {
+            let (mut sxx, mut syy, mut sxy) = (0.0, 0.0, 0.0);
+            for i in 0..2i64 {
+                for j in 0..2i64 {
+                    let gx = atx(x + i, y + j);
+                    let gy = aty(x + i, y + j);
+                    sxx += gx * gx;
+                    syy += gy * gy;
+                    sxy += gx * gy;
+                }
+            }
+            out[(y * w + x) as usize] =
+                sxx * syy - sxy * sxy - 0.04 * (sxx + syy) * (sxx + syy);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{gauss5, gauss5x5, synth_image};
+    use crate::imagecl::ScalarType;
+
+    #[test]
+    fn row_then_col_equals_outer_product_2d() {
+        // Separability sanity: row∘col with g == 2-D conv with g⊗g (away
+        // from borders, where the boundary handling differs).
+        let img = synth_image(ScalarType::F32, 24, 20, 3);
+        let g = gauss5();
+        let row = sepconv_row(&img, &g);
+        let mut mid = ImageBuf::new(ScalarType::F32, img.w, img.h);
+        for y in 0..img.h {
+            for x in 0..img.w {
+                mid.set(x, y, row[y * img.w + x]);
+            }
+        }
+        let two_pass = sepconv_col(&mid, &g);
+
+        let g2 = gauss5x5();
+        for y in 4..img.h - 4 {
+            for x in 4..img.w - 4 {
+                let mut direct = 0.0;
+                for j in -2..3i64 {
+                    for i in -2..3i64 {
+                        direct += img.get((x as i64 + i) as usize, (y as i64 + j) as usize)
+                            * g2[((j + 2) * 5 + i + 2) as usize];
+                    }
+                }
+                let tp = two_pass[y * img.w + x];
+                assert!((tp - direct).abs() < 1e-4, "({x},{y}): {tp} vs {direct}");
+            }
+        }
+    }
+
+    #[test]
+    fn sobel_flat_image_zero_gradient() {
+        let img = ImageBuf::from_fn(ScalarType::F32, 8, 8, |_, _| 5.0);
+        let (dx, dy) = sobel(&img);
+        assert!(dx.iter().all(|&v| v == 0.0));
+        assert!(dy.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn sobel_vertical_edge() {
+        // Left half 0, right half 10 → strong dx at the edge, dy == 0.
+        let img = ImageBuf::from_fn(ScalarType::F32, 8, 8, |x, _| if x < 4 { 0.0 } else { 10.0 });
+        let (dx, dy) = sobel(&img);
+        assert!(dx[3 + 8 * 4] > 0.0);
+        assert!(dy.iter().all(|&v| v.abs() < 1e-12));
+    }
+
+    #[test]
+    fn harris_corner_stronger_than_edge() {
+        // Synthetic gradients: a "corner" window contains gradients in two
+        // different directions (dx at one pixel, dy at another); an "edge"
+        // window has gradient in a single direction. Harris response must
+        // rank corner > edge.
+        let mut dximg = ImageBuf::new(ScalarType::F32, 8, 8);
+        let mut dyimg = ImageBuf::new(ScalarType::F32, 8, 8);
+        dximg.set(2, 2, 10.0);
+        dyimg.set(3, 3, 10.0); // window at (2,2) sees both → corner
+        dximg.set(5, 5, 10.0); // edge at (5,5)
+        let r = harris(&dximg, &dyimg);
+        assert!(r[2 * 8 + 2] > r[5 * 8 + 5], "{} vs {}", r[2 * 8 + 2], r[5 * 8 + 5]);
+    }
+
+    #[test]
+    fn conv2d_identity_filter() {
+        let img = synth_image(ScalarType::U8, 10, 10, 5);
+        let mut ident = vec![0.0; 25];
+        ident[12] = 1.0; // center tap
+        let out = conv2d(&img, &ident);
+        for y in 0..10 {
+            for x in 0..10 {
+                assert_eq!(out[y * 10 + x], img.get(x, y));
+            }
+        }
+    }
+}

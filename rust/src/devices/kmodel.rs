@@ -1,0 +1,257 @@
+//! Kernel features consumed by the device performance model: per-buffer
+//! traffic characteristics and per-pixel instruction counts, derived from
+//! the static analyses plus a concrete tuning configuration.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::KernelInfo;
+use crate::imagecl::{BoundaryCond, GridSpec, Type};
+use crate::transform::{effective_config, MemSpace, TuningConfig};
+
+/// Traffic-relevant facts about one buffer under a config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufferUse {
+    pub name: String,
+    pub elem_bytes: f64,
+    /// Reads per logical pixel (from static cost analysis).
+    pub reads_per_pixel: f64,
+    pub writes_per_pixel: f64,
+    pub space: MemSpace,
+    pub is_image: bool,
+    /// Boundary handling applies (image with non-point read stencil, or a
+    /// read stencil we could not prove point-only).
+    pub boundary_checked: bool,
+    pub boundary: BoundaryCond,
+    /// Local staging only: staged tile elements / group pixels (≥ 1; the
+    /// halo overhead of paper Figure 5).
+    pub halo_ratio: f64,
+    /// Local staging only: staged tile dims in elements (w, h); (0, 0)
+    /// otherwise. Used for DRAM transaction-granularity modelling.
+    pub tile: (usize, usize),
+}
+
+/// Everything the performance model needs about (kernel, config).
+#[derive(Debug, Clone)]
+pub struct KernelModel {
+    pub name: String,
+    pub cfg: TuningConfig,
+    pub buffers: Vec<BufferUse>,
+    /// Float ops per logical pixel (divisions and transcendentals
+    /// pre-weighted by their throughput cost; excl. addressing).
+    pub flops_per_pixel: f64,
+    /// Integer/control ops per logical pixel (excl. addressing).
+    pub iops_per_pixel: f64,
+    /// Loop-control ops per pixel removed by the configured unrolling.
+    pub unroll_savings: f64,
+    /// True if some unrolled loop was innermost (ILP bonus).
+    pub unrolled_inner: bool,
+    /// Per-image-read boundary ops are added by the model itself.
+    pub grid_is_image: bool,
+}
+
+/// Ops charged per loop iteration for control (cmp + inc + branch).
+const LOOP_CONTROL_OPS: f64 = 3.0;
+
+impl KernelModel {
+    /// Build the model inputs for a kernel under a tuning configuration.
+    pub fn build(info: &KernelInfo, config: &TuningConfig) -> KernelModel {
+        let cfg = effective_config(info, config);
+        let kernel = &info.prog.kernel;
+        let tile = cfg.group_tile();
+
+        let mut buffers = Vec::new();
+        for p in &kernel.params {
+            let (elem, is_image) = match &p.ty {
+                Type::Image { elem, .. } => (*elem, true),
+                Type::Array { elem } => (*elem, false),
+                Type::Scalar(_) => continue,
+            };
+            let reads = info.cost.reads.get(&p.name).copied().unwrap_or(0.0);
+            let writes = info.cost.writes.get(&p.name).copied().unwrap_or(0.0);
+            let space = cfg.space_of(&p.name);
+            let stencil = info.read_stencil(&p.name);
+            let point_only = stencil
+                .map(|s| s.extent_x() == 0 && s.extent_y() == 0)
+                .unwrap_or(false);
+            // Exact own-pixel reads of the grid image skip boundary code
+            // (mirrors transform::lower::is_exact_grid_point).
+            let grid_img = matches!(&info.prog.grid, GridSpec::FromImage(g) if *g == p.name);
+            let boundary_checked = is_image && reads > 0.0 && !(point_only && grid_img);
+            let (halo_ratio, tile_dims) = match (space, stencil) {
+                (MemSpace::Local, Some(s)) => {
+                    let tw = tile[0] + s.extent_x() as usize;
+                    let th = tile[1] + s.extent_y() as usize;
+                    (
+                        (tw * th) as f64 / (tile[0] * tile[1]) as f64,
+                        (tw, th),
+                    )
+                }
+                _ => (1.0, (0, 0)),
+            };
+            buffers.push(BufferUse {
+                name: p.name.clone(),
+                elem_bytes: elem.size_bytes() as f64,
+                reads_per_pixel: reads,
+                writes_per_pixel: writes,
+                space,
+                is_image,
+                boundary_checked,
+                boundary: info
+                    .prog
+                    .boundary
+                    .get(&p.name)
+                    .copied()
+                    .unwrap_or_default(),
+                halo_ratio,
+                tile: tile_dims,
+            });
+        }
+
+        // Loop-control savings from unrolling: each fully unrolled loop
+        // eliminates its control ops (multiplicity = product of its own and
+        // ancestor trip counts, reconstructed from pre-order + depth).
+        let mut unroll_savings = 0.0;
+        let mut unrolled_inner = false;
+        let mut stack: Vec<(usize, f64)> = Vec::new(); // (depth, mult)
+        let max_depth = info.loops.iter().map(|l| l.depth).max().unwrap_or(0);
+        for l in &info.loops {
+            while stack.last().map(|(d, _)| *d >= l.depth) == Some(true) {
+                stack.pop();
+            }
+            let parent_mult = stack.last().map(|(_, m)| *m).unwrap_or(1.0);
+            let trips = l.trips.unwrap_or(8) as f64;
+            let mult = parent_mult * trips;
+            stack.push((l.depth, mult));
+            let factor = cfg.unroll_factor(l.id);
+            if factor != 1 && l.trips.is_some() {
+                let eliminated = if factor == 0 {
+                    1.0
+                } else {
+                    1.0 - 1.0 / factor as f64
+                };
+                unroll_savings += LOOP_CONTROL_OPS * mult * eliminated;
+                if l.depth == max_depth {
+                    unrolled_inner = true;
+                }
+            }
+        }
+
+        KernelModel {
+            name: kernel.name.clone(),
+            cfg,
+            buffers,
+            flops_per_pixel: info.cost.flops
+                + 8.0 * info.cost.fdivs
+                + 16.0 * info.cost.transcendentals,
+            iops_per_pixel: info.cost.iops,
+            unroll_savings,
+            unrolled_inner,
+            grid_is_image: matches!(info.prog.grid, GridSpec::FromImage(_)),
+        }
+    }
+
+    /// Local memory bytes per work-group under this config.
+    pub fn local_bytes_per_group(&self) -> f64 {
+        let tile = self.cfg.group_tile();
+        self.buffers
+            .iter()
+            .filter(|b| b.space == MemSpace::Local)
+            .map(|b| {
+                // halo_ratio encodes (tile+halo)/tile.
+                b.halo_ratio * tile[0] as f64 * tile[1] as f64 * b.elem_bytes
+            })
+            .sum()
+    }
+
+    /// Any boundary-checked read with the given condition?
+    pub fn has_boundary(&self, clamped: bool) -> bool {
+        self.buffers.iter().any(|b| {
+            b.boundary_checked
+                && b.reads_per_pixel > 0.0
+                && matches!(b.boundary, BoundaryCond::Clamped) == clamped
+        })
+    }
+
+    /// Summed per-pixel read traffic keyed by memory space (bytes before
+    /// device-dependent cache modelling).
+    pub fn reads_by_space(&self) -> BTreeMap<MemSpace, f64> {
+        let mut m = BTreeMap::new();
+        for b in &self.buffers {
+            if b.reads_per_pixel > 0.0 {
+                *m.entry(b.space).or_insert(0.0) += b.reads_per_pixel * b.elem_bytes;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::KernelInfo;
+    use crate::bench_defs::{CONV2D, HARRIS, SEPCONV_ROW};
+    use crate::imagecl::frontend;
+
+    fn model(src: &str, cfg: &TuningConfig) -> KernelModel {
+        KernelModel::build(&KernelInfo::analyze(frontend(src).unwrap()), cfg)
+    }
+
+    #[test]
+    fn sepconv_row_features() {
+        let m = model(SEPCONV_ROW, &TuningConfig::default());
+        let inb = m.buffers.iter().find(|b| b.name == "in").unwrap();
+        assert_eq!(inb.reads_per_pixel, 5.0);
+        assert!(inb.boundary_checked);
+        assert_eq!(inb.space, MemSpace::Global);
+        let outb = m.buffers.iter().find(|b| b.name == "out").unwrap();
+        assert_eq!(outb.writes_per_pixel, 1.0);
+        assert!(!outb.boundary_checked); // exact grid-point write
+        let fb = m.buffers.iter().find(|b| b.name == "f").unwrap();
+        assert_eq!(fb.reads_per_pixel, 5.0);
+    }
+
+    #[test]
+    fn halo_ratio_grows_with_stencil() {
+        let mut cfg = TuningConfig { wg: [16, 16], ..Default::default() };
+        cfg.local_mem.insert("in".into(), true);
+        let m = model(CONV2D, &cfg);
+        let inb = m.buffers.iter().find(|b| b.name == "in").unwrap();
+        // 16x16 tile with 5x5 stencil → 20x20/256.
+        assert!((inb.halo_ratio - (20.0 * 20.0) / 256.0).abs() < 1e-12);
+        assert!(m.local_bytes_per_group() > 0.0);
+    }
+
+    #[test]
+    fn unroll_savings_scales_with_mult() {
+        let mut cfg = TuningConfig::default();
+        cfg.unroll.insert(2, 0); // inner 5-trip loop of conv2d, mult 25
+        let inner_only = model(CONV2D, &cfg).unroll_savings;
+        cfg.unroll.insert(1, 0);
+        let both = model(CONV2D, &cfg).unroll_savings;
+        assert_eq!(inner_only, 3.0 * 25.0);
+        assert_eq!(both, 3.0 * 25.0 + 3.0 * 5.0);
+        assert!(model(CONV2D, &cfg).unrolled_inner);
+    }
+
+    #[test]
+    fn boundary_kinds_detected() {
+        let m = model(CONV2D, &TuningConfig::default());
+        assert!(m.has_boundary(true)); // clamped
+        assert!(!m.has_boundary(false));
+        let m = model(SEPCONV_ROW, &TuningConfig::default());
+        assert!(m.has_boundary(false)); // constant
+    }
+
+    #[test]
+    fn harris_two_staged_inputs() {
+        let mut cfg = TuningConfig::default();
+        cfg.local_mem.insert("dx".into(), true);
+        cfg.local_mem.insert("dy".into(), true);
+        let m = model(HARRIS, &cfg);
+        let staged: Vec<_> =
+            m.buffers.iter().filter(|b| b.space == MemSpace::Local).collect();
+        assert_eq!(staged.len(), 2);
+        // Two f32 tiles of (16+1)x(16+1).
+        assert!((m.local_bytes_per_group() - 2.0 * 17.0 * 17.0 * 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,15 @@
+//! Heterogeneous device simulation (DESIGN.md §2).
+//!
+//! The paper's testbed (AMD 7970, GTX 960, K40, Intel i7-4771) is
+//! replaced by an analytical performance model per device. The auto-tuner
+//! "times" candidate implementations against these models for the GPU
+//! devices; the CPU path additionally has a real-execution route through
+//! the XLA runtime ([`crate::runtime`]).
+
+pub mod kmodel;
+pub mod model;
+pub mod spec;
+
+pub use kmodel::{BufferUse, KernelModel};
+pub use model::{predict, Prediction};
+pub use spec::{by_name, DeviceKind, DeviceSpec, ALL_DEVICES, AMD_7970, GTX_960, INTEL_I7, K40};

@@ -1,0 +1,221 @@
+//! Device specifications for the paper's testbed (§6): three GPUs and one
+//! CPU. Parameters come from vendor datasheets; the *behavioural*
+//! coefficients (cache efficiencies, overheads) encode the
+//! microarchitectural mechanisms the paper's discussion (§7) attributes
+//! performance differences to, and are calibrated against the qualitative
+//! invariants in `devices::model::tests` — not against the authors'
+//! wall-clock numbers (DESIGN.md §2: simulator substitution).
+
+/// Device class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    Gpu,
+    Cpu,
+}
+
+/// An OpenCL device model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    pub kind: DeviceKind,
+    /// Compute units (CUs / SMs / cores).
+    pub compute_units: usize,
+    /// SIMD granularity (wavefront 64 / warp 32 / AVX2 f32 lanes 8).
+    pub simd_width: usize,
+    /// Core clock, GHz.
+    pub clock_ghz: f64,
+    /// Peak simple ops per cycle per compute unit (FMA counted as 2).
+    pub flops_per_cycle_cu: f64,
+    /// Peak DRAM bandwidth, GB/s.
+    pub mem_bw_gbs: f64,
+    /// Cache line / coalescing transaction size, bytes.
+    pub cacheline: usize,
+    /// Fraction of *redundant* global stencil re-reads served by the
+    /// general-purpose cache hierarchy (0 = every re-read pays DRAM,
+    /// 1 = only cold misses pay). Kepler's L1 does not cache global
+    /// loads, which is why image memory wins on the K40 (paper §7).
+    pub global_cache_eff: f64,
+    /// Same, for the texture path (`image2d_t` reads).
+    pub tex_cache_eff: f64,
+    /// Cost multiplier of one texture access relative to a global load
+    /// (CPUs emulate samplers in software — big penalty, paper Table 2:
+    /// the tuner avoids image memory on the i7).
+    pub tex_access_cost: f64,
+    /// Issue cost (int-op units) of one local/LDS access. Kepler's LDS is
+    /// slow (low throughput, byte-access bank conflicts) — a key reason
+    /// the texture path wins on the K40 while local memory wins on GCN.
+    pub lds_access_iops: f64,
+    /// Local (scratchpad) memory per compute unit, bytes.
+    pub local_mem_per_cu: usize,
+    /// Max work-group size.
+    pub max_wg: usize,
+    /// Max resident threads per CU (occupancy ceiling).
+    pub max_threads_per_cu: usize,
+    /// Threads per CU needed to fully hide memory latency.
+    pub latency_hiding_threads: usize,
+    /// Fixed kernel-launch overhead, seconds.
+    pub launch_overhead_s: f64,
+    /// CPU only: scheduling overhead per work-group, seconds.
+    pub group_overhead_s: f64,
+    /// CPU only: implicit-vectorization width achieved by the OpenCL
+    /// runtime when the work-item access pattern is lane-contiguous.
+    pub cpu_vector_width: usize,
+}
+
+/// AMD Radeon HD 7970 (GCN, Tahiti): big scratchpad-oriented GPU with a
+/// modest general cache — local memory pays off (paper Table 2).
+pub const AMD_7970: DeviceSpec = DeviceSpec {
+    name: "AMD 7970",
+    kind: DeviceKind::Gpu,
+    compute_units: 32,
+    simd_width: 64,
+    clock_ghz: 0.925,
+    flops_per_cycle_cu: 128.0,
+    mem_bw_gbs: 264.0,
+    cacheline: 64,
+    global_cache_eff: 0.40,
+    tex_cache_eff: 0.80,
+    tex_access_cost: 1.0,
+    lds_access_iops: 1.0,
+    local_mem_per_cu: 64 << 10,
+    max_wg: 256,
+    max_threads_per_cu: 2560,
+    latency_hiding_threads: 512,
+    launch_overhead_s: 8e-6,
+    group_overhead_s: 0.0,
+    cpu_vector_width: 1,
+};
+
+/// NVIDIA GeForce GTX 960 (Maxwell): unified L1/texture cache that
+/// captures stencil locality well — local memory rarely pays.
+pub const GTX_960: DeviceSpec = DeviceSpec {
+    name: "GTX 960",
+    kind: DeviceKind::Gpu,
+    compute_units: 8,
+    simd_width: 32,
+    clock_ghz: 1.127,
+    flops_per_cycle_cu: 256.0,
+    mem_bw_gbs: 112.0,
+    cacheline: 128,
+    global_cache_eff: 0.95,
+    tex_cache_eff: 0.93,
+    tex_access_cost: 1.0,
+    lds_access_iops: 1.5,
+    local_mem_per_cu: 96 << 10,
+    max_wg: 1024,
+    max_threads_per_cu: 2048,
+    latency_hiding_threads: 512,
+    launch_overhead_s: 6e-6,
+    group_overhead_s: 0.0,
+    cpu_vector_width: 1,
+};
+
+/// NVIDIA Tesla K40 (Kepler): global loads bypass L1 — the texture path
+/// (image memory) is the fast road for read-only stencil data (paper §7
+/// credits ImageCL's K40 wins to exactly this).
+pub const K40: DeviceSpec = DeviceSpec {
+    name: "K40",
+    kind: DeviceKind::Gpu,
+    compute_units: 15,
+    simd_width: 32,
+    clock_ghz: 0.745,
+    flops_per_cycle_cu: 384.0,
+    mem_bw_gbs: 288.0,
+    cacheline: 128,
+    global_cache_eff: 0.70,
+    tex_cache_eff: 0.97,
+    tex_access_cost: 1.0,
+    lds_access_iops: 4.0,
+    local_mem_per_cu: 48 << 10,
+    max_wg: 1024,
+    max_threads_per_cu: 2048,
+    latency_hiding_threads: 768,
+    launch_overhead_s: 7e-6,
+    group_overhead_s: 0.0,
+    cpu_vector_width: 1,
+};
+
+/// Intel Core i7-4771 (Haswell, 4C/8T, AVX2): caches absorb stencil
+/// reuse; the OpenCL runtime vectorizes across work-items; per-work-group
+/// scheduling overhead makes heavy thread coarsening essential
+/// (paper Table 2: 128 pixels/thread on the CPU).
+pub const INTEL_I7: DeviceSpec = DeviceSpec {
+    name: "Intel i7",
+    kind: DeviceKind::Cpu,
+    compute_units: 4,
+    simd_width: 8,
+    clock_ghz: 3.7,
+    flops_per_cycle_cu: 32.0,
+    mem_bw_gbs: 25.6,
+    cacheline: 64,
+    global_cache_eff: 0.95,
+    tex_cache_eff: 0.95,
+    tex_access_cost: 6.0,
+    lds_access_iops: 3.0,
+    local_mem_per_cu: 32 << 10,
+    max_wg: 1024,
+    max_threads_per_cu: 2,
+    latency_hiding_threads: 2,
+    launch_overhead_s: 15e-6,
+    group_overhead_s: 1.5e-6,
+    cpu_vector_width: 8,
+};
+
+/// The paper's four devices, in Figure 6 order.
+pub const ALL_DEVICES: [&DeviceSpec; 4] = [&AMD_7970, &GTX_960, &K40, &INTEL_I7];
+
+pub fn by_name(name: &str) -> Option<&'static DeviceSpec> {
+    ALL_DEVICES.iter().copied().find(|d| {
+        d.name.eq_ignore_ascii_case(name)
+            || d.name.to_lowercase().replace(' ', "_") == name.to_lowercase()
+    })
+}
+
+impl DeviceSpec {
+    /// Peak GFLOP/s.
+    pub fn peak_gflops(&self) -> f64 {
+        self.compute_units as f64 * self.flops_per_cycle_cu * self.clock_ghz
+    }
+
+    /// Constant-memory size limit (64 KiB on all of these devices).
+    pub fn constant_mem_bytes(&self) -> usize {
+        64 << 10
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_flops_sane() {
+        // Datasheet ballparks: 7970 ≈ 3.79 TF, 960 ≈ 2.3 TF, K40 ≈ 4.3 TF,
+        // i7-4771 ≈ 0.47 TF.
+        assert!((AMD_7970.peak_gflops() - 3789.0).abs() < 100.0);
+        assert!((GTX_960.peak_gflops() - 2308.0).abs() < 100.0);
+        assert!((K40.peak_gflops() - 4291.0).abs() < 100.0);
+        assert!((INTEL_I7.peak_gflops() - 473.0).abs() < 30.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("K40").unwrap().name, "K40");
+        assert_eq!(by_name("amd_7970").unwrap().name, "AMD 7970");
+        assert_eq!(by_name("intel i7").unwrap().name, "Intel i7");
+        assert!(by_name("RTX 4090").is_none());
+    }
+
+    #[test]
+    fn kepler_texture_beats_global_cache() {
+        // The K40 mechanism the paper leans on.
+        assert!(K40.tex_cache_eff > K40.global_cache_eff + 0.25);
+        // Maxwell: much smaller gap.
+        assert!(GTX_960.tex_cache_eff - GTX_960.global_cache_eff < 0.15);
+    }
+
+    #[test]
+    fn cpu_penalizes_textures() {
+        assert!(INTEL_I7.tex_access_cost > 2.0);
+        assert!(AMD_7970.tex_access_cost <= 1.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Runtime values and buffers for the kernel-plan interpreter.
+//!
+//! Values are dynamically typed (int / float / bool), mirroring C
+//! promotion semantics closely enough for the ImageCL subset: integer ops
+//! stay integer (C division/modulo), any float operand promotes the op to
+//! float. Buffers store `f64` uniformly and convert on store according to
+//! their element type (`uchar` wraps like a C cast), so `uchar` images
+//! behave like the real OpenCL buffers they model.
+
+use crate::imagecl::ScalarType;
+
+/// A dynamically typed runtime value.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    I(i64),
+    F(f64),
+    B(bool),
+}
+
+impl Value {
+    pub fn as_f64(self) -> f64 {
+        match self {
+            Value::I(v) => v as f64,
+            Value::F(v) => v,
+            Value::B(b) => b as i64 as f64,
+        }
+    }
+
+    pub fn as_i64(self) -> i64 {
+        match self {
+            Value::I(v) => v,
+            Value::F(v) => v as i64,
+            Value::B(b) => b as i64,
+        }
+    }
+
+    pub fn as_bool(self) -> bool {
+        match self {
+            Value::I(v) => v != 0,
+            Value::F(v) => v != 0.0,
+            Value::B(b) => b,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, Value::F(_))
+    }
+
+    /// Convert to a scalar type (C cast semantics).
+    pub fn cast(self, ty: ScalarType) -> Value {
+        match ty {
+            ScalarType::F32 => Value::F(self.as_f64() as f32 as f64),
+            ScalarType::F64 => Value::F(self.as_f64()),
+            ScalarType::I32 => Value::I(self.as_i64() as i32 as i64),
+            ScalarType::U32 => Value::I(self.as_i64() as u32 as i64),
+            ScalarType::I16 => Value::I(self.as_i64() as i16 as i64),
+            ScalarType::U16 => Value::I(self.as_i64() as u16 as i64),
+            ScalarType::I8 => Value::I(self.as_i64() as i8 as i64),
+            ScalarType::U8 => Value::I(self.as_i64() as u8 as i64),
+            ScalarType::Bool => Value::B(self.as_bool()),
+        }
+    }
+}
+
+/// Convert a stored f64 back to a typed [`Value`] per element type.
+fn load_as(ty: ScalarType, raw: f64) -> Value {
+    if ty.is_float() {
+        Value::F(raw)
+    } else if ty == ScalarType::Bool {
+        Value::B(raw != 0.0)
+    } else {
+        Value::I(raw as i64)
+    }
+}
+
+/// Convert a [`Value`] to the stored f64 representation for an element
+/// type (applying C-cast wrapping for narrow integer types, and f32
+/// rounding for `float` buffers).
+fn store_as(ty: ScalarType, v: Value) -> f64 {
+    match ty {
+        ScalarType::F32 => v.as_f64() as f32 as f64,
+        ScalarType::F64 => v.as_f64(),
+        ScalarType::I32 => v.as_i64() as i32 as f64,
+        ScalarType::U32 => v.as_i64() as u32 as f64,
+        ScalarType::I16 => v.as_i64() as i16 as f64,
+        ScalarType::U16 => v.as_i64() as u16 as f64,
+        ScalarType::I8 => v.as_i64() as i8 as f64,
+        ScalarType::U8 => v.as_i64() as u8 as f64,
+        ScalarType::Bool => v.as_bool() as i64 as f64,
+    }
+}
+
+/// A 1-D typed buffer (general arrays; also the backing store of images).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Buffer {
+    pub elem: ScalarType,
+    pub data: Vec<f64>,
+}
+
+impl Buffer {
+    pub fn new(elem: ScalarType, len: usize) -> Buffer {
+        Buffer { elem, data: vec![0.0; len] }
+    }
+
+    pub fn from_f64(elem: ScalarType, data: Vec<f64>) -> Buffer {
+        let mut b = Buffer { elem, data };
+        // Normalize through the element type (e.g. uchar wrap).
+        for v in &mut b.data {
+            *v = store_as(elem, Value::F(*v));
+        }
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn load(&self, i: usize) -> Option<Value> {
+        self.data.get(i).map(|&raw| load_as(self.elem, raw))
+    }
+
+    pub fn store(&mut self, i: usize, v: Value) -> bool {
+        if let Some(slot) = self.data.get_mut(i) {
+            *slot = store_as(self.elem, v);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// A 2-D image: a typed buffer plus its extent (row-major, `y * w + x`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ImageBuf {
+    pub w: usize,
+    pub h: usize,
+    pub buf: Buffer,
+}
+
+impl ImageBuf {
+    pub fn new(elem: ScalarType, w: usize, h: usize) -> ImageBuf {
+        ImageBuf { w, h, buf: Buffer::new(elem, w * h) }
+    }
+
+    pub fn from_fn(
+        elem: ScalarType,
+        w: usize,
+        h: usize,
+        mut f: impl FnMut(usize, usize) -> f64,
+    ) -> ImageBuf {
+        let mut img = ImageBuf::new(elem, w, h);
+        for y in 0..h {
+            for x in 0..w {
+                img.buf.store(y * w + x, Value::F(f(x, y)));
+            }
+        }
+        img
+    }
+
+    pub fn get(&self, x: usize, y: usize) -> f64 {
+        self.buf.data[y * self.w + x]
+    }
+
+    pub fn set(&mut self, x: usize, y: usize, v: f64) {
+        let i = y * self.w + x;
+        self.buf.store(i, Value::F(v));
+    }
+}
+
+/// A kernel argument.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arg {
+    Image(ImageBuf),
+    Array(Buffer),
+    Scalar(Value),
+}
+
+impl Arg {
+    pub fn image(&self) -> Option<&ImageBuf> {
+        match self {
+            Arg::Image(i) => Some(i),
+            _ => None,
+        }
+    }
+
+    pub fn image_mut(&mut self) -> Option<&mut ImageBuf> {
+        match self {
+            Arg::Image(i) => Some(i),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_promotion() {
+        assert_eq!(Value::I(3).as_f64(), 3.0);
+        assert_eq!(Value::F(2.5).as_i64(), 2);
+        assert!(Value::I(1).as_bool());
+        assert!(!Value::F(0.0).as_bool());
+    }
+
+    #[test]
+    fn cast_wraps_uchar() {
+        assert_eq!(Value::I(260).cast(ScalarType::U8), Value::I(4));
+        assert_eq!(Value::I(-1).cast(ScalarType::U8), Value::I(255));
+        assert_eq!(Value::F(3.9).cast(ScalarType::I32), Value::I(3));
+    }
+
+    #[test]
+    fn f32_store_rounds() {
+        let mut b = Buffer::new(ScalarType::F32, 1);
+        b.store(0, Value::F(0.1));
+        assert_eq!(b.data[0], 0.1f32 as f64);
+        assert_ne!(b.data[0], 0.1f64);
+    }
+
+    #[test]
+    fn uchar_buffer_wraps() {
+        let mut b = Buffer::new(ScalarType::U8, 1);
+        b.store(0, Value::I(300));
+        assert_eq!(b.load(0), Some(Value::I(44)));
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let mut b = Buffer::new(ScalarType::F32, 2);
+        assert!(b.store(1, Value::F(1.0)));
+        assert!(!b.store(2, Value::F(1.0)));
+        assert_eq!(b.load(2), None);
+    }
+
+    #[test]
+    fn image_from_fn() {
+        let img = ImageBuf::from_fn(ScalarType::F32, 3, 2, |x, y| (x + 10 * y) as f64);
+        assert_eq!(img.get(2, 1), 12.0);
+        assert_eq!(img.buf.len(), 6);
+    }
+}

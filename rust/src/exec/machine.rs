@@ -1,0 +1,688 @@
+//! The NDRange interpreter: execute a [`KernelPlan`] with full OpenCL
+//! execution-model emulation (work-groups, work-items, barrier-separated
+//! phases, `__local` arrays).
+//!
+//! This is the correctness backend of the reproduction (DESIGN.md §2): it
+//! runs the *transformed* code — index math, staging loops, boundary
+//! expressions and all — so a bug in any transformation corrupts output
+//! and is caught by the equivalence tests, exactly as a wrong OpenCL
+//! kernel would be on real hardware. All accesses are bounds-checked.
+//!
+//! Plans are compiled once per launch to the slot-resolved IR of
+//! [`super::compiled`] (§Perf: ~40× over the original string-resolving
+//! interpreter), then driven over the NDRange here.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::imagecl::ast::*;
+use crate::transform::clir::*;
+
+use super::buffer::{Arg, Buffer, Value};
+use super::compiled::{CExpr, CStmt, CompiledPlan, Compiler, Fn1, Fn2, *};
+
+/// Runtime error (all of these indicate a compiler bug or a bad launch).
+#[derive(Debug, thiserror::Error)]
+pub enum ExecError {
+    #[error("missing argument `{0}`")]
+    MissingArg(String),
+    #[error("argument `{0}` has the wrong kind")]
+    ArgKind(String),
+    #[error("out-of-bounds access to `{name}` at {index} (len {len})")]
+    OutOfBounds { name: String, index: i64, len: usize },
+    #[error("undefined variable `{0}`")]
+    Undefined(String),
+    #[error("unknown function `{0}`")]
+    UnknownFn(String),
+    #[error("division by zero")]
+    DivByZero,
+    #[error("while-loop exceeded {0} iterations")]
+    Runaway(usize),
+    #[error("{0}")]
+    Other(String),
+}
+
+/// Iteration cap for `while` loops.
+const MAX_WHILE: usize = 1 << 24;
+
+/// A buffer during execution: either a borrowed argument or a per-group
+/// local array. Images execute through their backing `Buffer` plus
+/// extent (for texture bounds checks).
+enum BufSlot {
+    Array(Buffer),
+    Image { w: usize, h: usize, buf: Buffer },
+    /// Local scratch (recreated per work-group).
+    Local { buf: Buffer },
+}
+
+impl BufSlot {
+    fn buffer(&self) -> &Buffer {
+        match self {
+            BufSlot::Array(b) | BufSlot::Local { buf: b } => b,
+            BufSlot::Image { buf, .. } => buf,
+        }
+    }
+
+    fn buffer_mut(&mut self) -> &mut Buffer {
+        match self {
+            BufSlot::Array(b) | BufSlot::Local { buf: b } => b,
+            BufSlot::Image { buf, .. } => buf,
+        }
+    }
+}
+
+/// Execute a plan over its NDRange. `args` maps every source-level
+/// parameter name to its argument; images carry their extent, and the ABI
+/// scalars (`{img}_w/h`, `{arr}_n`, `__gw`, `__gh`) are derived
+/// automatically. `grid` is the logical thread-grid size.
+pub fn execute(
+    plan: &KernelPlan,
+    args: &mut BTreeMap<String, Arg>,
+    grid: (usize, usize),
+) -> Result<(), ExecError> {
+    // Resolve scalar parameter values (inlined as constants at compile).
+    let mut scalar_vals: HashMap<String, Value> = HashMap::new();
+    for (name, _ty) in &plan.scalars {
+        let v = if name == GRID_W {
+            Value::I(grid.0 as i64)
+        } else if name == GRID_H {
+            Value::I(grid.1 as i64)
+        } else if let Some(img_name) = name
+            .strip_suffix("_w")
+            .filter(|n| plan.buffer(n).map(|b| b.image_dims.is_some()) == Some(true))
+        {
+            let img = args
+                .get(img_name)
+                .and_then(Arg::image)
+                .ok_or_else(|| ExecError::MissingArg(img_name.to_string()))?;
+            Value::I(img.w as i64)
+        } else if let Some(img_name) = name
+            .strip_suffix("_h")
+            .filter(|n| plan.buffer(n).map(|b| b.image_dims.is_some()) == Some(true))
+        {
+            let img = args
+                .get(img_name)
+                .and_then(Arg::image)
+                .ok_or_else(|| ExecError::MissingArg(img_name.to_string()))?;
+            Value::I(img.h as i64)
+        } else if let Some(arr_name) = name
+            .strip_suffix("_n")
+            .filter(|n| plan.buffer(n).map(|b| b.image_dims.is_none()) == Some(true))
+        {
+            match args.get(arr_name) {
+                Some(Arg::Array(b)) => Value::I(b.len() as i64),
+                Some(_) => return Err(ExecError::ArgKind(arr_name.to_string())),
+                None => return Err(ExecError::MissingArg(arr_name.to_string())),
+            }
+        } else {
+            match args.get(name) {
+                Some(Arg::Scalar(v)) => *v,
+                Some(_) => return Err(ExecError::ArgKind(name.clone())),
+                None => return Err(ExecError::MissingArg(name.clone())),
+            }
+        };
+        scalar_vals.insert(name.clone(), v);
+    }
+
+    let compiled = Compiler::compile(plan, &scalar_vals)?;
+
+    // Move buffers out of the argument map into dense slots (plan buffers
+    // first, locals after — matching the compiler's indices).
+    let mut bufs: Vec<BufSlot> = Vec::with_capacity(plan.buffers.len() + plan.locals.len());
+    for b in &plan.buffers {
+        let arg = args
+            .remove(&b.name)
+            .ok_or_else(|| ExecError::MissingArg(b.name.clone()))?;
+        bufs.push(match arg {
+            Arg::Array(buf) => BufSlot::Array(buf),
+            Arg::Image(img) => BufSlot::Image { w: img.w, h: img.h, buf: img.buf },
+            Arg::Scalar(_) => return Err(ExecError::ArgKind(b.name.clone())),
+        });
+    }
+    for l in &plan.locals {
+        // Allocated per work-group inside run_ndrange.
+        bufs.push(BufSlot::Local { buf: Buffer::new(l.elem, 0) });
+    }
+
+    let result = run_ndrange(plan, &compiled, &mut bufs, grid);
+
+    // Move argument buffers back (even on error, so callers keep data).
+    for (i, b) in plan.buffers.iter().enumerate() {
+        let slot = std::mem::replace(&mut bufs[i], BufSlot::Array(Buffer::new(b.elem, 0)));
+        let arg = match slot {
+            BufSlot::Array(buf) => Arg::Array(buf),
+            BufSlot::Image { w, h, buf } => {
+                Arg::Image(super::buffer::ImageBuf { w, h, buf })
+            }
+            BufSlot::Local { .. } => unreachable!(),
+        };
+        args.insert(b.name.clone(), arg);
+    }
+    result
+}
+
+fn run_ndrange(
+    plan: &KernelPlan,
+    compiled: &CompiledPlan,
+    bufs: &mut [BufSlot],
+    grid: (usize, usize),
+) -> Result<(), ExecError> {
+    let (global, wg) = plan.launch_dims(grid.0, grid.1);
+    let groups = [global[0] / wg[0], global[1] / wg[1]];
+    let n_args = plan.buffers.len();
+
+    let mut m = Machine {
+        bufs,
+        names: &compiled.buffer_names,
+        slots: vec![Value::I(0); compiled.n_slots],
+    };
+
+    for grp_y in 0..groups[1] {
+        for grp_x in 0..groups[0] {
+            // Fresh local memory per work-group.
+            for (li, l) in plan.locals.iter().enumerate() {
+                m.bufs[n_args + li] =
+                    BufSlot::Local { buf: Buffer::new(l.elem, l.len) };
+            }
+            m.slots[SLOT_GRP_X as usize] = Value::I(grp_x as i64);
+            m.slots[SLOT_GRP_Y as usize] = Value::I(grp_y as i64);
+            m.slots[SLOT_GDIM_X as usize] = Value::I(global[0] as i64);
+            m.slots[SLOT_GDIM_Y as usize] = Value::I(global[1] as i64);
+            for phase in &compiled.phases {
+                // Barrier semantics: all work-items complete phase k
+                // before any starts k+1.
+                for lid_y in 0..wg[1] {
+                    for lid_x in 0..wg[0] {
+                        m.slots[SLOT_GID_X as usize] =
+                            Value::I((grp_x * wg[0] + lid_x) as i64);
+                        m.slots[SLOT_GID_Y as usize] =
+                            Value::I((grp_y * wg[1] + lid_y) as i64);
+                        m.slots[SLOT_LID_X as usize] = Value::I(lid_x as i64);
+                        m.slots[SLOT_LID_Y as usize] = Value::I(lid_y as i64);
+                        m.exec_stmts(phase)?;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Control-flow signal.
+enum Flow {
+    Normal,
+    Return,
+}
+
+struct Machine<'a> {
+    bufs: &'a mut [BufSlot],
+    names: &'a [String],
+    slots: Vec<Value>,
+}
+
+impl Machine<'_> {
+    #[inline]
+    fn oob(&self, buf: u32, index: i64) -> ExecError {
+        ExecError::OutOfBounds {
+            name: self.names[buf as usize].clone(),
+            index,
+            len: self.bufs[buf as usize].buffer().len(),
+        }
+    }
+
+    fn eval(&self, e: &CExpr) -> Result<Value, ExecError> {
+        Ok(match e {
+            CExpr::I(v) => Value::I(*v),
+            CExpr::F(v) => Value::F(*v),
+            CExpr::B(b) => Value::B(*b),
+            CExpr::Var(slot) => self.slots[*slot as usize],
+            CExpr::Unary(op, expr) => {
+                let v = self.eval(expr)?;
+                match op {
+                    UnOp::Neg => match v {
+                        Value::F(f) => Value::F(-f),
+                        other => Value::I(-other.as_i64()),
+                    },
+                    UnOp::Not => Value::B(!v.as_bool()),
+                    UnOp::BitNot => Value::I(!v.as_i64()),
+                }
+            }
+            CExpr::Binary(op, lhs, rhs) => {
+                // Short-circuit logical ops.
+                if *op == BinOp::And {
+                    if !self.eval(lhs)?.as_bool() {
+                        return Ok(Value::B(false));
+                    }
+                    return Ok(Value::B(self.eval(rhs)?.as_bool()));
+                }
+                if *op == BinOp::Or {
+                    if self.eval(lhs)?.as_bool() {
+                        return Ok(Value::B(true));
+                    }
+                    return Ok(Value::B(self.eval(rhs)?.as_bool()));
+                }
+                binop(*op, self.eval(lhs)?, self.eval(rhs)?)?
+            }
+            CExpr::Load { buf, idx } => {
+                let i = self.eval(idx)?.as_i64();
+                self.bufs[*buf as usize]
+                    .buffer()
+                    .load(usize::try_from(i).unwrap_or(usize::MAX))
+                    .ok_or_else(|| self.oob(*buf, i))?
+            }
+            CExpr::TexRead { buf, x, y } => {
+                let xi = self.eval(x)?.as_i64();
+                let yi = self.eval(y)?.as_i64();
+                let BufSlot::Image { w, h, buf: b } = &self.bufs[*buf as usize] else {
+                    return Err(ExecError::ArgKind(self.names[*buf as usize].clone()));
+                };
+                if xi < 0 || yi < 0 || xi >= *w as i64 || yi >= *h as i64 {
+                    return Err(self.oob(*buf, yi * *w as i64 + xi));
+                }
+                b.load((yi as usize) * *w + xi as usize).unwrap()
+            }
+            CExpr::Call1(f, a) => {
+                let v = self.eval(a)?;
+                match f {
+                    Fn1::Sqrt => Value::F(v.as_f64().sqrt()),
+                    Fn1::Rsqrt => Value::F(1.0 / v.as_f64().sqrt()),
+                    Fn1::Fabs => Value::F(v.as_f64().abs()),
+                    Fn1::Exp => Value::F(v.as_f64().exp()),
+                    Fn1::Log => Value::F(v.as_f64().ln()),
+                    Fn1::Sin => Value::F(v.as_f64().sin()),
+                    Fn1::Cos => Value::F(v.as_f64().cos()),
+                    Fn1::Floor => Value::F(v.as_f64().floor()),
+                    Fn1::Ceil => Value::F(v.as_f64().ceil()),
+                    Fn1::Abs => match v {
+                        Value::F(f) => Value::F(f.abs()),
+                        other => Value::I(other.as_i64().abs()),
+                    },
+                }
+            }
+            CExpr::Call2(f, a, b) => {
+                let x = self.eval(a)?;
+                let y = self.eval(b)?;
+                match f {
+                    Fn2::Pow => Value::F(x.as_f64().powf(y.as_f64())),
+                    Fn2::Min | Fn2::Max => {
+                        let take_x = if x.is_float() || y.is_float() {
+                            (x.as_f64() <= y.as_f64()) == (*f == Fn2::Min)
+                        } else {
+                            (x.as_i64() <= y.as_i64()) == (*f == Fn2::Min)
+                        };
+                        if take_x {
+                            x
+                        } else {
+                            y
+                        }
+                    }
+                }
+            }
+            CExpr::Clamp(v, lo, hi) => {
+                let v = self.eval(v)?;
+                let lo = self.eval(lo)?;
+                let hi = self.eval(hi)?;
+                if v.is_float() || lo.is_float() || hi.is_float() {
+                    Value::F(v.as_f64().clamp(lo.as_f64(), hi.as_f64()))
+                } else {
+                    Value::I(v.as_i64().clamp(lo.as_i64(), hi.as_i64()))
+                }
+            }
+            CExpr::Ternary(c, t, e2) => {
+                if self.eval(c)?.as_bool() {
+                    self.eval(t)?
+                } else {
+                    self.eval(e2)?
+                }
+            }
+            CExpr::Cast(ty, expr) => self.eval(expr)?.cast(*ty),
+        })
+    }
+
+    fn exec_stmts(&mut self, stmts: &[CStmt]) -> Result<Flow, ExecError> {
+        for s in stmts {
+            match s {
+                CStmt::SetVar { slot, ty, value } => {
+                    let v = self.eval(value)?.cast(*ty);
+                    self.slots[*slot as usize] = v;
+                }
+                CStmt::Store { buf, idx, value, op } => {
+                    let i = self.eval(idx)?.as_i64();
+                    let v = self.eval(value)?;
+                    let iu = usize::try_from(i).unwrap_or(usize::MAX);
+                    let v = match op {
+                        None => v,
+                        Some(b) => {
+                            let cur = self.bufs[*buf as usize]
+                                .buffer()
+                                .load(iu)
+                                .ok_or_else(|| self.oob(*buf, i))?;
+                            binop(*b, cur, v)?
+                        }
+                    };
+                    if !self.bufs[*buf as usize].buffer_mut().store(iu, v) {
+                        return Err(self.oob(*buf, i));
+                    }
+                }
+                CStmt::TexWrite { buf, x, y, value } => {
+                    let xi = self.eval(x)?.as_i64();
+                    let yi = self.eval(y)?.as_i64();
+                    let v = self.eval(value)?;
+                    let BufSlot::Image { w, h, buf: b } = &mut self.bufs[*buf as usize]
+                    else {
+                        return Err(ExecError::ArgKind(
+                            self.names[*buf as usize].clone(),
+                        ));
+                    };
+                    let (w, h) = (*w, *h);
+                    if xi < 0 || yi < 0 || xi >= w as i64 || yi >= h as i64 {
+                        return Err(self.oob(*buf, yi * w as i64 + xi));
+                    }
+                    b.store((yi as usize) * w + xi as usize, v);
+                }
+                CStmt::If { cond, then, els } => {
+                    let branch = if self.eval(cond)?.as_bool() { then } else { els };
+                    if matches!(self.exec_stmts(branch)?, Flow::Return) {
+                        return Ok(Flow::Return);
+                    }
+                }
+                CStmt::For { slot, init, cond, step, body } => {
+                    let iv = self.eval(init)?;
+                    self.slots[*slot as usize] = Value::I(iv.as_i64());
+                    loop {
+                        if !self.eval(cond)?.as_bool() {
+                            break;
+                        }
+                        if matches!(self.exec_stmts(body)?, Flow::Return) {
+                            return Ok(Flow::Return);
+                        }
+                        let cur = self.slots[*slot as usize].as_i64();
+                        let st = self.eval(step)?.as_i64();
+                        self.slots[*slot as usize] = Value::I(cur + st);
+                    }
+                }
+                CStmt::While { cond, body } => {
+                    let mut n = 0usize;
+                    while self.eval(cond)?.as_bool() {
+                        if matches!(self.exec_stmts(body)?, Flow::Return) {
+                            return Ok(Flow::Return);
+                        }
+                        n += 1;
+                        if n > MAX_WHILE {
+                            return Err(ExecError::Runaway(MAX_WHILE));
+                        }
+                    }
+                }
+                CStmt::Return => return Ok(Flow::Return),
+                CStmt::Eval(e) => {
+                    self.eval(e)?;
+                }
+            }
+        }
+        Ok(Flow::Normal)
+    }
+}
+
+fn binop(op: BinOp, l: Value, r: Value) -> Result<Value, ExecError> {
+    use BinOp::*;
+    let float = l.is_float() || r.is_float();
+    Ok(match op {
+        Add | Sub | Mul | Div | Rem => {
+            if float {
+                let (a, b) = (l.as_f64(), r.as_f64());
+                Value::F(match op {
+                    Add => a + b,
+                    Sub => a - b,
+                    Mul => a * b,
+                    Div => a / b,
+                    Rem => a % b,
+                    _ => unreachable!(),
+                })
+            } else {
+                let (a, b) = (l.as_i64(), r.as_i64());
+                if matches!(op, Div | Rem) && b == 0 {
+                    return Err(ExecError::DivByZero);
+                }
+                Value::I(match op {
+                    Add => a.wrapping_add(b),
+                    Sub => a.wrapping_sub(b),
+                    Mul => a.wrapping_mul(b),
+                    Div => a / b,
+                    Rem => a % b,
+                    _ => unreachable!(),
+                })
+            }
+        }
+        Eq | Ne | Lt | Gt | Le | Ge => {
+            let c = if float {
+                let (a, b) = (l.as_f64(), r.as_f64());
+                match op {
+                    Eq => a == b,
+                    Ne => a != b,
+                    Lt => a < b,
+                    Gt => a > b,
+                    Le => a <= b,
+                    Ge => a >= b,
+                    _ => unreachable!(),
+                }
+            } else {
+                let (a, b) = (l.as_i64(), r.as_i64());
+                match op {
+                    Eq => a == b,
+                    Ne => a != b,
+                    Lt => a < b,
+                    Gt => a > b,
+                    Le => a <= b,
+                    Ge => a >= b,
+                    _ => unreachable!(),
+                }
+            };
+            Value::B(c)
+        }
+        And | Or => Value::B(match op {
+            And => l.as_bool() && r.as_bool(),
+            Or => l.as_bool() || r.as_bool(),
+            _ => unreachable!(),
+        }),
+        BitAnd => Value::I(l.as_i64() & r.as_i64()),
+        BitOr => Value::I(l.as_i64() | r.as_i64()),
+        BitXor => Value::I(l.as_i64() ^ r.as_i64()),
+        Shl => Value::I(l.as_i64().wrapping_shl(r.as_i64() as u32)),
+        Shr => Value::I(l.as_i64().wrapping_shr(r.as_i64() as u32)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::buffer::ImageBuf;
+    use crate::imagecl::ScalarType;
+    use crate::transform::{compile, TuningConfig};
+
+    fn run_blur(cfg: TuningConfig, w: usize, h: usize) -> ImageBuf {
+        let src = "#pragma imcl grid(in)\n\
+            void blur(Image<float> in, Image<float> out) {\n\
+              float sum = 0.0f;\n\
+              for (int i = -1; i < 2; i++) {\n\
+                for (int j = -1; j < 2; j++) { sum += in[idx + i][idy + j]; }\n\
+              }\n\
+              out[idx][idy] = sum / 9.0f;\n\
+            }";
+        let plan = compile(src, &cfg).unwrap();
+        let input =
+            ImageBuf::from_fn(ScalarType::F32, w, h, |x, y| ((x * 7 + y * 13) % 31) as f64);
+        let mut args = BTreeMap::new();
+        args.insert("in".to_string(), Arg::Image(input));
+        args.insert("out".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+        execute(&plan, &mut args, (w, h)).unwrap();
+        match args.remove("out").unwrap() {
+            Arg::Image(i) => i,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Direct reference box blur with constant-0 boundary.
+    fn ref_blur(w: usize, h: usize) -> Vec<f64> {
+        let input: Vec<f64> = (0..w * h)
+            .map(|i| (((i % w) * 7 + (i / w) * 13) % 31) as f64)
+            .collect();
+        let mut out = vec![0.0; w * h];
+        for y in 0..h as i64 {
+            for x in 0..w as i64 {
+                let mut sum = 0.0f64;
+                for i in -1..2i64 {
+                    for j in -1..2i64 {
+                        let (xx, yy) = (x + i, y + j);
+                        if xx >= 0 && xx < w as i64 && yy >= 0 && yy < h as i64 {
+                            sum += input[(yy as usize) * w + xx as usize] as f32 as f64;
+                        }
+                    }
+                }
+                out[(y as usize) * w + x as usize] = (sum as f32 / 9.0f32) as f64;
+            }
+        }
+        out
+    }
+
+    fn assert_matches_ref(img: &ImageBuf) {
+        let expect = ref_blur(img.w, img.h);
+        for y in 0..img.h {
+            for x in 0..img.w {
+                let got = img.get(x, y);
+                let want = expect[y * img.w + x];
+                assert!(
+                    (got - want).abs() < 1e-5,
+                    "mismatch at ({x},{y}): got {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn naive_blur_matches_reference() {
+        assert_matches_ref(&run_blur(TuningConfig::default(), 20, 13));
+    }
+
+    #[test]
+    fn coarsened_blur_matches() {
+        let cfg = TuningConfig { coarsen: [4, 2], wg: [8, 8], ..Default::default() };
+        assert_matches_ref(&run_blur(cfg, 37, 22));
+    }
+
+    #[test]
+    fn interleaved_blur_matches() {
+        let cfg = TuningConfig {
+            coarsen: [2, 2],
+            interleaved: true,
+            wg: [8, 4],
+            ..Default::default()
+        };
+        assert_matches_ref(&run_blur(cfg, 33, 17));
+    }
+
+    #[test]
+    fn local_mem_blur_matches() {
+        let mut cfg = TuningConfig { wg: [8, 8], ..Default::default() };
+        cfg.local_mem.insert("in".into(), true);
+        assert_matches_ref(&run_blur(cfg, 29, 31));
+    }
+
+    #[test]
+    fn texture_blur_matches() {
+        let mut cfg = TuningConfig::default();
+        cfg.image_mem.insert("in".into(), true);
+        cfg.image_mem.insert("out".into(), true);
+        assert_matches_ref(&run_blur(cfg, 19, 23));
+    }
+
+    #[test]
+    fn everything_on_blur_matches() {
+        let mut cfg = TuningConfig {
+            wg: [8, 4],
+            coarsen: [2, 4],
+            interleaved: true,
+            ..Default::default()
+        };
+        cfg.local_mem.insert("in".into(), true);
+        cfg.unroll.insert(1, 0);
+        cfg.unroll.insert(2, 0);
+        assert_matches_ref(&run_blur(cfg, 41, 27));
+    }
+
+    #[test]
+    fn oob_array_access_is_error() {
+        let src = "#pragma imcl grid(16, 1)\nvoid k(float* a) { a[idx + 1] = 0.0f; }";
+        let plan = compile(src, &TuningConfig { wg: [16, 1], ..Default::default() }).unwrap();
+        let mut args = BTreeMap::new();
+        args.insert("a".to_string(), Arg::Array(Buffer::new(ScalarType::F32, 16)));
+        let err = execute(&plan, &mut args, (16, 1)).unwrap_err();
+        assert!(matches!(err, ExecError::OutOfBounds { .. }), "{err}");
+        // Buffers are returned to the caller even on error.
+        assert!(args.contains_key("a"));
+    }
+
+    #[test]
+    fn missing_arg_is_error() {
+        let src = "void k(Image<float> a) { a[idx][idy] = 0.0f; }";
+        let plan = compile(src, &TuningConfig::default()).unwrap();
+        let mut args = BTreeMap::new();
+        let err = execute(&plan, &mut args, (8, 8)).unwrap_err();
+        assert!(matches!(err, ExecError::MissingArg(_)));
+    }
+
+    #[test]
+    fn scalar_params_passed() {
+        let src = "#pragma imcl grid(a)\n\
+            void k(Image<float> a, float g) { a[idx][idy] = g; }";
+        let plan = compile(src, &TuningConfig::default()).unwrap();
+        let mut args = BTreeMap::new();
+        args.insert("a".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 4, 4)));
+        args.insert("g".to_string(), Arg::Scalar(Value::F(2.5)));
+        execute(&plan, &mut args, (4, 4)).unwrap();
+        assert_eq!(args["a"].image().unwrap().get(3, 3), 2.5);
+    }
+
+    #[test]
+    fn uchar_image_wraps() {
+        let src = "void k(Image<uchar> a) { a[idx][idy] = 300; }";
+        let plan = compile(src, &TuningConfig::default()).unwrap();
+        let mut args = BTreeMap::new();
+        args.insert("a".to_string(), Arg::Image(ImageBuf::new(ScalarType::U8, 4, 4)));
+        execute(&plan, &mut args, (4, 4)).unwrap();
+        assert_eq!(args["a"].image().unwrap().get(0, 0), 44.0);
+    }
+
+    #[test]
+    fn clamped_boundary_semantics() {
+        let src = "#pragma imcl grid(in)\n\
+            #pragma imcl boundary(in, clamped)\n\
+            void k(Image<float> in, Image<float> out) {\n\
+              out[idx][idy] = in[idx - 1][idy];\n\
+            }";
+        let plan = compile(src, &TuningConfig { wg: [4, 4], ..Default::default() }).unwrap();
+        let input = ImageBuf::from_fn(ScalarType::F32, 4, 4, |x, _| x as f64);
+        let mut args = BTreeMap::new();
+        args.insert("in".to_string(), Arg::Image(input));
+        args.insert("out".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 4, 4)));
+        execute(&plan, &mut args, (4, 4)).unwrap();
+        let out = args["out"].image().unwrap();
+        // Column 0 clamps to itself (0.0), column 1 reads column 0, ...
+        assert_eq!(out.get(0, 0), 0.0);
+        assert_eq!(out.get(1, 2), 0.0);
+        assert_eq!(out.get(3, 1), 2.0);
+    }
+
+    #[test]
+    fn int_var_truncates_float_assign() {
+        // C semantics via static typing: assigning a float expression to
+        // an int variable truncates.
+        let src = "#pragma imcl grid(4, 1)\n\
+            void k(float* a) { int t = 0; t = 3; a[idx] = (float)(t) + 0.5f; }";
+        let plan = compile(src, &TuningConfig { wg: [4, 1], ..Default::default() }).unwrap();
+        let mut args = BTreeMap::new();
+        args.insert("a".to_string(), Arg::Array(Buffer::new(ScalarType::F32, 4)));
+        execute(&plan, &mut args, (4, 1)).unwrap();
+        if let Arg::Array(b) = &args["a"] {
+            assert_eq!(b.load(0), Some(Value::F(3.5)));
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Kernel-plan execution backend.
+//!
+//! Executes candidate implementations ([`crate::transform::KernelPlan`])
+//! under full OpenCL NDRange emulation — the correctness oracle for every
+//! transformation on this GPU-less testbed (DESIGN.md §2).
+
+pub mod buffer;
+pub mod compiled;
+pub mod machine;
+
+pub use buffer::{Arg, Buffer, ImageBuf, Value};
+pub use machine::{execute, ExecError};

@@ -1,0 +1,763 @@
+//! Abstract syntax tree for ImageCL.
+//!
+//! The same expression/statement language is reused by the lowered kernel
+//! IR ([`crate::transform::clir`]): transformations rewrite 2-D `Image`
+//! accesses into explicit 1-D buffer accesses (with boundary handling as
+//! `min`/`max`/ternary expressions) but keep the surrounding control flow
+//! in this representation. One printer ([`fmt::Display`]) and one
+//! interpreter ([`crate::exec`]) therefore serve both levels.
+
+use std::fmt;
+
+/// Scalar element types (OpenCL C names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScalarType {
+    F32,
+    F64,
+    I32,
+    U32,
+    I16,
+    U16,
+    I8,
+    U8,
+    Bool,
+}
+
+impl ScalarType {
+    /// The OpenCL C spelling of the type.
+    pub fn cl_name(self) -> &'static str {
+        match self {
+            ScalarType::F32 => "float",
+            ScalarType::F64 => "double",
+            ScalarType::I32 => "int",
+            ScalarType::U32 => "uint",
+            ScalarType::I16 => "short",
+            ScalarType::U16 => "ushort",
+            ScalarType::I8 => "char",
+            ScalarType::U8 => "uchar",
+            ScalarType::Bool => "bool",
+        }
+    }
+
+    /// Size of one element in bytes (used by the device performance model
+    /// and constant-memory eligibility checks).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            ScalarType::F64 => 8,
+            ScalarType::F32 | ScalarType::I32 | ScalarType::U32 => 4,
+            ScalarType::I16 | ScalarType::U16 => 2,
+            ScalarType::I8 | ScalarType::U8 | ScalarType::Bool => 1,
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(self, ScalarType::F32 | ScalarType::F64)
+    }
+}
+
+/// Parameter / variable types.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Type {
+    Scalar(ScalarType),
+    /// `Image<T>` with dimensionality 2 or 3 (paper §5: 2D/3D indexing).
+    Image { elem: ScalarType, dims: u8 },
+    /// A plain global array (`float*` style), 1-D indexed.
+    Array { elem: ScalarType },
+}
+
+impl Type {
+    pub fn elem(&self) -> ScalarType {
+        match self {
+            Type::Scalar(s) => *s,
+            Type::Image { elem, .. } => *elem,
+            Type::Array { elem } => *elem,
+        }
+    }
+
+    pub fn is_buffer(&self) -> bool {
+        matches!(self, Type::Image { .. } | Type::Array { .. })
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::Scalar(s) => write!(f, "{}", s.cl_name()),
+            Type::Image { elem, dims } => {
+                if *dims == 3 {
+                    write!(f, "Image3D<{}>", elem.cl_name())
+                } else {
+                    write!(f, "Image<{}>", elem.cl_name())
+                }
+            }
+            Type::Array { elem } => write!(f, "{}*", elem.cl_name()),
+        }
+    }
+}
+
+/// Binary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    And,
+    Or,
+    BitAnd,
+    BitOr,
+    BitXor,
+    Shl,
+    Shr,
+}
+
+impl BinOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Rem => "%",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::Lt => "<",
+            BinOp::Gt => ">",
+            BinOp::Le => "<=",
+            BinOp::Ge => ">=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+            BinOp::BitAnd => "&",
+            BinOp::BitOr => "|",
+            BinOp::BitXor => "^",
+            BinOp::Shl => "<<",
+            BinOp::Shr => ">>",
+        }
+    }
+
+    /// C precedence level (higher binds tighter), used by the printer.
+    pub fn precedence(self) -> u8 {
+        match self {
+            BinOp::Mul | BinOp::Div | BinOp::Rem => 10,
+            BinOp::Add | BinOp::Sub => 9,
+            BinOp::Shl | BinOp::Shr => 8,
+            BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge => 7,
+            BinOp::Eq | BinOp::Ne => 6,
+            BinOp::BitAnd => 5,
+            BinOp::BitXor => 4,
+            BinOp::BitOr => 3,
+            BinOp::And => 2,
+            BinOp::Or => 1,
+        }
+    }
+}
+
+/// Unary operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+    BitNot,
+}
+
+impl UnOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            UnOp::Neg => "-",
+            UnOp::Not => "!",
+            UnOp::BitNot => "~",
+        }
+    }
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f64),
+    BoolLit(bool),
+    /// Variable reference. The builtins `idx`, `idy`, `idz` (logical-thread
+    /// indices, paper §5) are ordinary idents at this level; lowered CLIR
+    /// additionally uses `__gid_x`/`__gid_y`/`__lid_x`/`__lid_y`/
+    /// `__wg_x`/`__wg_y` for OpenCL work-item builtins.
+    Ident(String),
+    Unary {
+        op: UnOp,
+        expr: Box<Expr>,
+    },
+    Binary {
+        op: BinOp,
+        lhs: Box<Expr>,
+        rhs: Box<Expr>,
+    },
+    /// Indexing: `base[i]`, `base[i][j]` or `base[i][j][k]`.
+    Index {
+        base: String,
+        indices: Vec<Expr>,
+    },
+    /// Function call (builtin math / OpenCL functions: sqrt, fabs, min...).
+    Call {
+        name: String,
+        args: Vec<Expr>,
+    },
+    Ternary {
+        cond: Box<Expr>,
+        then: Box<Expr>,
+        els: Box<Expr>,
+    },
+    Cast {
+        ty: ScalarType,
+        expr: Box<Expr>,
+    },
+}
+
+impl Expr {
+    pub fn int(v: i64) -> Expr {
+        Expr::IntLit(v)
+    }
+
+    pub fn ident(s: &str) -> Expr {
+        Expr::Ident(s.to_string())
+    }
+
+    pub fn bin(op: BinOp, lhs: Expr, rhs: Expr) -> Expr {
+        Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) }
+    }
+
+    pub fn add(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Add, lhs, rhs)
+    }
+
+    pub fn sub(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Sub, lhs, rhs)
+    }
+
+    pub fn mul(lhs: Expr, rhs: Expr) -> Expr {
+        Expr::bin(BinOp::Mul, lhs, rhs)
+    }
+
+    pub fn call(name: &str, args: Vec<Expr>) -> Expr {
+        Expr::Call { name: name.to_string(), args }
+    }
+
+    /// Structural printer precedence (literals/idents bind tightest).
+    fn precedence(&self) -> u8 {
+        match self {
+            Expr::Binary { op, .. } => op.precedence(),
+            Expr::Ternary { .. } => 0,
+            _ => 11,
+        }
+    }
+
+    /// Walk this expression tree in pre-order, calling `f` on every node.
+    pub fn walk<F: FnMut(&Expr)>(&self, f: &mut F) {
+        f(self);
+        match self {
+            Expr::Unary { expr, .. } | Expr::Cast { expr, .. } => expr.walk(f),
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.walk(f);
+                rhs.walk(f);
+            }
+            Expr::Index { indices, .. } => {
+                for i in indices {
+                    i.walk(f);
+                }
+            }
+            Expr::Call { args, .. } => {
+                for a in args {
+                    a.walk(f);
+                }
+            }
+            Expr::Ternary { cond, then, els } => {
+                cond.walk(f);
+                then.walk(f);
+                els.walk(f);
+            }
+            _ => {}
+        }
+    }
+
+    /// Rebuild this expression, applying `f` bottom-up to every node.
+    pub fn map<F: Fn(Expr) -> Expr + Copy>(self, f: F) -> Expr {
+        let e = match self {
+            Expr::Unary { op, expr } => Expr::Unary { op, expr: Box::new(expr.map(f)) },
+            Expr::Binary { op, lhs, rhs } => Expr::Binary {
+                op,
+                lhs: Box::new(lhs.map(f)),
+                rhs: Box::new(rhs.map(f)),
+            },
+            Expr::Index { base, indices } => Expr::Index {
+                base,
+                indices: indices.into_iter().map(|i| i.map(f)).collect(),
+            },
+            Expr::Call { name, args } => Expr::Call {
+                name,
+                args: args.into_iter().map(|a| a.map(f)).collect(),
+            },
+            Expr::Ternary { cond, then, els } => Expr::Ternary {
+                cond: Box::new(cond.map(f)),
+                then: Box::new(then.map(f)),
+                els: Box::new(els.map(f)),
+            },
+            Expr::Cast { ty, expr } => Expr::Cast { ty, expr: Box::new(expr.map(f)) },
+            other => other,
+        };
+        f(e)
+    }
+}
+
+/// Compound-assignment operator of an assignment statement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignOp {
+    /// `=`
+    Set,
+    /// `+=`
+    Add,
+    /// `-=`
+    Sub,
+    /// `*=`
+    Mul,
+    /// `/=`
+    Div,
+}
+
+impl AssignOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            AssignOp::Set => "=",
+            AssignOp::Add => "+=",
+            AssignOp::Sub => "-=",
+            AssignOp::Mul => "*=",
+            AssignOp::Div => "/=",
+        }
+    }
+
+    /// The binary op a compound assignment expands to, if any.
+    pub fn binop(self) -> Option<BinOp> {
+        match self {
+            AssignOp::Set => None,
+            AssignOp::Add => Some(BinOp::Add),
+            AssignOp::Sub => Some(BinOp::Sub),
+            AssignOp::Mul => Some(BinOp::Mul),
+            AssignOp::Div => Some(BinOp::Div),
+        }
+    }
+}
+
+/// Assignment targets: a scalar variable or a buffer element.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LValue {
+    Var(String),
+    Index { base: String, indices: Vec<Expr> },
+}
+
+/// Statements.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `float sum = 0.0;` — `init` optional.
+    Decl {
+        ty: ScalarType,
+        name: String,
+        init: Option<Expr>,
+    },
+    Assign {
+        lhs: LValue,
+        op: AssignOp,
+        value: Expr,
+    },
+    If {
+        cond: Expr,
+        then: Vec<Stmt>,
+        els: Vec<Stmt>,
+    },
+    For {
+        /// Loop variable (always a fresh `int`).
+        var: String,
+        init: Expr,
+        cond: Expr,
+        /// Per-iteration increment of `var` (e.g. `i++` is +1).
+        step: Expr,
+        body: Vec<Stmt>,
+    },
+    While {
+        cond: Expr,
+        body: Vec<Stmt>,
+    },
+    Return,
+    /// Expression evaluated for effect (e.g. a call).
+    ExprStmt(Expr),
+    /// Work-group barrier (CLIR only; never produced by the parser —
+    /// ImageCL has no synchronization primitives, paper §5).
+    Barrier,
+}
+
+impl Stmt {
+    /// Walk all statements (pre-order), recursing into nested bodies.
+    pub fn walk<F: FnMut(&Stmt)>(&self, f: &mut F) {
+        f(self);
+        match self {
+            Stmt::If { then, els, .. } => {
+                for s in then {
+                    s.walk(f);
+                }
+                for s in els {
+                    s.walk(f);
+                }
+            }
+            Stmt::For { body, .. } | Stmt::While { body, .. } => {
+                for s in body {
+                    s.walk(f);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Walk every expression contained in this statement (and sub-statements).
+    pub fn walk_exprs<F: FnMut(&Expr)>(&self, f: &mut F) {
+        self.walk(&mut |s| match s {
+            Stmt::Decl { init, .. } => {
+                if let Some(e) = init {
+                    e.walk(f);
+                }
+            }
+            Stmt::Assign { lhs, value, .. } => {
+                if let LValue::Index { indices, .. } = lhs {
+                    for i in indices {
+                        i.walk(f);
+                    }
+                }
+                value.walk(f);
+            }
+            Stmt::If { cond, .. } => cond.walk(f),
+            Stmt::For { init, cond, step, .. } => {
+                init.walk(f);
+                cond.walk(f);
+                step.walk(f);
+            }
+            Stmt::While { cond, .. } => cond.walk(f),
+            Stmt::ExprStmt(e) => e.walk(f),
+            Stmt::Return | Stmt::Barrier => {}
+        });
+    }
+}
+
+/// A kernel parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+}
+
+/// The kernel function (ImageCL programs are a single function, paper §5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelFn {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+}
+
+impl KernelFn {
+    pub fn param(&self, name: &str) -> Option<&Param> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Walk every expression in the kernel body.
+    pub fn walk_exprs<F: FnMut(&Expr)>(&self, f: &mut F) {
+        for s in &self.body {
+            s.walk_exprs(f);
+        }
+    }
+
+    /// Walk every statement in the kernel body.
+    pub fn walk_stmts<F: FnMut(&Stmt)>(&self, f: &mut F) {
+        for s in &self.body {
+            s.walk(f);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pretty printer (C-like source). Used for diagnostics, golden tests and as
+// the expression renderer of the OpenCL code generator.
+// ---------------------------------------------------------------------------
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn child(f: &mut fmt::Formatter<'_>, parent: u8, e: &Expr) -> fmt::Result {
+            if e.precedence() < parent {
+                write!(f, "({e})")
+            } else {
+                write!(f, "{e}")
+            }
+        }
+        match self {
+            Expr::IntLit(v) => write!(f, "{v}"),
+            Expr::FloatLit(v) => {
+                if v.fract() == 0.0 && v.abs() < 1e16 {
+                    write!(f, "{v:.1}f")
+                } else {
+                    write!(f, "{v}f")
+                }
+            }
+            Expr::BoolLit(b) => write!(f, "{b}"),
+            Expr::Ident(s) => write!(f, "{s}"),
+            Expr::Unary { op, expr } => {
+                write!(f, "{}", op.symbol())?;
+                if expr.precedence() < 11 {
+                    write!(f, "({expr})")
+                } else {
+                    write!(f, "{expr}")
+                }
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                child(f, op.precedence(), lhs)?;
+                write!(f, " {} ", op.symbol())?;
+                // Right child needs parens at equal precedence
+                // (left-associative operators).
+                if rhs.precedence() <= op.precedence() {
+                    write!(f, "({rhs})")
+                } else {
+                    write!(f, "{rhs}")
+                }
+            }
+            Expr::Index { base, indices } => {
+                write!(f, "{base}")?;
+                for i in indices {
+                    write!(f, "[{i}]")?;
+                }
+                Ok(())
+            }
+            Expr::Call { name, args } => {
+                write!(f, "{name}(")?;
+                for (k, a) in args.iter().enumerate() {
+                    if k > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+            Expr::Ternary { cond, then, els } => {
+                write!(f, "({cond} ? {then} : {els})")
+            }
+            Expr::Cast { ty, expr } => write!(f, "({})({expr})", ty.cl_name()),
+        }
+    }
+}
+
+/// Render a statement list with the given indent level into `out`.
+pub fn print_stmts(stmts: &[Stmt], indent: usize, out: &mut String) {
+    let pad = "    ".repeat(indent);
+    for s in stmts {
+        match s {
+            Stmt::Decl { ty, name, init } => {
+                out.push_str(&pad);
+                match init {
+                    Some(e) => out.push_str(&format!("{} {} = {};\n", ty.cl_name(), name, e)),
+                    None => out.push_str(&format!("{} {};\n", ty.cl_name(), name)),
+                }
+            }
+            Stmt::Assign { lhs, op, value } => {
+                out.push_str(&pad);
+                let lhs_s = match lhs {
+                    LValue::Var(v) => v.clone(),
+                    LValue::Index { base, indices } => {
+                        let mut s = base.clone();
+                        for i in indices {
+                            s.push_str(&format!("[{i}]"));
+                        }
+                        s
+                    }
+                };
+                out.push_str(&format!("{} {} {};\n", lhs_s, op.symbol(), value));
+            }
+            Stmt::If { cond, then, els } => {
+                out.push_str(&pad);
+                out.push_str(&format!("if ({cond}) {{\n"));
+                print_stmts(then, indent + 1, out);
+                if els.is_empty() {
+                    out.push_str(&pad);
+                    out.push_str("}\n");
+                } else {
+                    out.push_str(&pad);
+                    out.push_str("} else {\n");
+                    print_stmts(els, indent + 1, out);
+                    out.push_str(&pad);
+                    out.push_str("}\n");
+                }
+            }
+            Stmt::For { var, init, cond, step, body } => {
+                out.push_str(&pad);
+                out.push_str(&format!(
+                    "for (int {var} = {init}; {cond}; {var} += {step}) {{\n"
+                ));
+                print_stmts(body, indent + 1, out);
+                out.push_str(&pad);
+                out.push_str("}\n");
+            }
+            Stmt::While { cond, body } => {
+                out.push_str(&pad);
+                out.push_str(&format!("while ({cond}) {{\n"));
+                print_stmts(body, indent + 1, out);
+                out.push_str(&pad);
+                out.push_str("}\n");
+            }
+            Stmt::Return => {
+                out.push_str(&pad);
+                out.push_str("return;\n");
+            }
+            Stmt::ExprStmt(e) => {
+                out.push_str(&pad);
+                out.push_str(&format!("{e};\n"));
+            }
+            Stmt::Barrier => {
+                out.push_str(&pad);
+                out.push_str("barrier(CLK_LOCAL_MEM_FENCE);\n");
+            }
+        }
+    }
+}
+
+impl fmt::Display for KernelFn {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "void {}(", self.name)?;
+        for (i, p) in self.params.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{} {}", p.ty, p.name)?;
+        }
+        writeln!(f, ") {{")?;
+        let mut body = String::new();
+        print_stmts(&self.body, 1, &mut body);
+        write!(f, "{body}}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expr_display_precedence() {
+        // (a + b) * c needs parens; a + b * c does not.
+        let e = Expr::mul(Expr::add(Expr::ident("a"), Expr::ident("b")), Expr::ident("c"));
+        assert_eq!(e.to_string(), "(a + b) * c");
+        let e = Expr::add(Expr::ident("a"), Expr::mul(Expr::ident("b"), Expr::ident("c")));
+        assert_eq!(e.to_string(), "a + b * c");
+    }
+
+    #[test]
+    fn expr_display_right_assoc_parens() {
+        // a - (b - c) must keep parens.
+        let e = Expr::sub(Expr::ident("a"), Expr::sub(Expr::ident("b"), Expr::ident("c")));
+        assert_eq!(e.to_string(), "a - (b - c)");
+    }
+
+    #[test]
+    fn expr_display_index_and_call() {
+        let e = Expr::Index {
+            base: "in".into(),
+            indices: vec![
+                Expr::add(Expr::ident("idx"), Expr::ident("i")),
+                Expr::ident("idy"),
+            ],
+        };
+        assert_eq!(e.to_string(), "in[idx + i][idy]");
+        let c = Expr::call("min", vec![Expr::ident("a"), Expr::int(3)]);
+        assert_eq!(c.to_string(), "min(a, 3)");
+    }
+
+    #[test]
+    fn expr_display_float_literal() {
+        assert_eq!(Expr::FloatLit(9.0).to_string(), "9.0f");
+        assert_eq!(Expr::FloatLit(0.5).to_string(), "0.5f");
+    }
+
+    #[test]
+    fn expr_walk_counts_nodes() {
+        let e = Expr::add(Expr::ident("a"), Expr::mul(Expr::ident("b"), Expr::int(2)));
+        let mut n = 0;
+        e.walk(&mut |_| n += 1);
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn expr_map_rewrites_idents() {
+        let e = Expr::add(Expr::ident("idx"), Expr::int(1));
+        let r = e.map(|e| match e {
+            Expr::Ident(s) if s == "idx" => Expr::ident("gx"),
+            other => other,
+        });
+        assert_eq!(r.to_string(), "gx + 1");
+    }
+
+    #[test]
+    fn stmt_print_roundtrip_shape() {
+        let body = vec![
+            Stmt::Decl {
+                ty: ScalarType::F32,
+                name: "sum".into(),
+                init: Some(Expr::FloatLit(0.0)),
+            },
+            Stmt::For {
+                var: "i".into(),
+                init: Expr::int(-1),
+                cond: Expr::bin(BinOp::Lt, Expr::ident("i"), Expr::int(2)),
+                step: Expr::int(1),
+                body: vec![Stmt::Assign {
+                    lhs: LValue::Var("sum".into()),
+                    op: AssignOp::Add,
+                    value: Expr::Index {
+                        base: "in".into(),
+                        indices: vec![
+                            Expr::add(Expr::ident("idx"), Expr::ident("i")),
+                            Expr::ident("idy"),
+                        ],
+                    },
+                }],
+            },
+        ];
+        let mut s = String::new();
+        print_stmts(&body, 0, &mut s);
+        assert!(s.contains("float sum = 0.0f;"));
+        assert!(s.contains("for (int i = -1; i < 2; i += 1) {"));
+        assert!(s.contains("sum += in[idx + i][idy];"));
+    }
+
+    #[test]
+    fn kernel_display() {
+        let k = KernelFn {
+            name: "blur".into(),
+            params: vec![
+                Param {
+                    name: "in".into(),
+                    ty: Type::Image { elem: ScalarType::F32, dims: 2 },
+                },
+                Param {
+                    name: "out".into(),
+                    ty: Type::Image { elem: ScalarType::F32, dims: 2 },
+                },
+            ],
+            body: vec![Stmt::Return],
+        };
+        let s = k.to_string();
+        assert!(s.starts_with("void blur(Image<float> in, Image<float> out) {"));
+        assert!(s.contains("return;"));
+    }
+
+    #[test]
+    fn scalar_sizes() {
+        assert_eq!(ScalarType::F32.size_bytes(), 4);
+        assert_eq!(ScalarType::U8.size_bytes(), 1);
+        assert_eq!(ScalarType::F64.size_bytes(), 8);
+    }
+}

@@ -1,0 +1,63 @@
+//! The ImageCL language frontend: lexer, AST, parser, directives and
+//! semantic checks (paper §5).
+//!
+//! Entry point: [`frontend`] — parse + check source into a
+//! [`sema::CheckedProgram`] ready for analysis and transformation.
+
+pub mod ast;
+pub mod parser;
+pub mod pragma;
+pub mod sema;
+pub mod token;
+
+pub use ast::{
+    AssignOp, BinOp, Expr, KernelFn, LValue, Param, ScalarType, Stmt, Type, UnOp,
+};
+pub use parser::{ParseError, Program};
+pub use pragma::{BoundaryCond, ForceOpt, Pragma};
+pub use sema::{check, CheckedProgram, Forced, GridSpec, SemaError};
+
+/// Frontend error: parse or semantic.
+#[derive(Debug, thiserror::Error)]
+pub enum FrontendError {
+    #[error(transparent)]
+    Parse(#[from] ParseError),
+    #[error(transparent)]
+    Sema(#[from] SemaError),
+}
+
+/// Parse and semantically check ImageCL source.
+pub fn frontend(src: &str) -> Result<CheckedProgram, FrontendError> {
+    let prog = Program::parse(src)?;
+    Ok(check(&prog)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontend_accepts_paper_listing1() {
+        let p = frontend(
+            "#pragma imcl grid(in)\n\
+             void blur(Image<float> in, Image<float> out) {\n\
+               float sum = 0.0f;\n\
+               for (int i = -1; i < 2; i++) {\n\
+                 for (int j = -1; j < 2; j++) { sum += in[idx + i][idy + j]; }\n\
+               }\n\
+               out[idx][idy] = sum / 9.0f;\n\
+             }",
+        )
+        .unwrap();
+        assert_eq!(p.kernel.name, "blur");
+    }
+
+    #[test]
+    fn frontend_error_types() {
+        assert!(matches!(frontend("void"), Err(FrontendError::Parse(_))));
+        assert!(matches!(
+            frontend("void k(Image<float> a) { a[idx][idy] = zz; }"),
+            Err(FrontendError::Sema(_))
+        ));
+    }
+}

@@ -1,0 +1,720 @@
+//! Recursive-descent parser for ImageCL.
+//!
+//! Grammar: `program := pragma* kernel`, with `kernel` a single `void`
+//! function (paper §5: "the kernel must be written as a single function").
+//! Statements and expressions follow OpenCL C, restricted to the subset
+//! ImageCL defines (no pointers arithmetic, no goto, for-loops with a
+//! single int induction variable).
+
+use super::ast::*;
+use super::pragma::{self, Pragma};
+use super::token::{lex, Pos, Spanned, Tok};
+
+/// Parse error with source position.
+#[derive(Debug, thiserror::Error)]
+#[error("parse error at {pos}: {msg}")]
+pub struct ParseError {
+    pub pos: Pos,
+    pub msg: String,
+}
+
+/// A parsed ImageCL translation unit: directives + the kernel function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Program {
+    pub pragmas: Vec<Pragma>,
+    pub kernel: KernelFn,
+}
+
+impl Program {
+    /// Lex + parse ImageCL source.
+    pub fn parse(src: &str) -> Result<Program, ParseError> {
+        let toks = lex(src).map_err(|e| ParseError { pos: e.pos, msg: e.msg })?;
+        Parser { toks, i: 0 }.program()
+    }
+}
+
+struct Parser {
+    toks: Vec<Spanned>,
+    i: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.i].tok
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.i + 1).min(self.toks.len() - 1)].tok
+    }
+
+    fn pos(&self) -> Pos {
+        self.toks[self.i].pos
+    }
+
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.i].tok.clone();
+        if self.i + 1 < self.toks.len() {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn err<T>(&self, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError { pos: self.pos(), msg: msg.into() })
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<(), ParseError> {
+        if *self.peek() == t {
+            self.bump();
+            Ok(())
+        } else {
+            self.err(format!("expected `{t}`, found `{}`", self.peek()))
+        }
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == t {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.peek().clone() {
+            Tok::Ident(s) => {
+                self.bump();
+                Ok(s)
+            }
+            other => self.err(format!("expected identifier, found `{other}`")),
+        }
+    }
+
+    // -- program ----------------------------------------------------------
+
+    fn program(&mut self) -> Result<Program, ParseError> {
+        let mut pragmas = Vec::new();
+        while let Tok::Pragma(text) = self.peek().clone() {
+            let pos = self.pos();
+            self.bump();
+            pragmas.push(
+                pragma::parse(&text).map_err(|e| ParseError { pos, msg: e.to_string() })?,
+            );
+        }
+        let kernel = self.kernel()?;
+        // Directives may also appear after the kernel; accept them there too.
+        while let Tok::Pragma(text) = self.peek().clone() {
+            let pos = self.pos();
+            self.bump();
+            pragmas.push(
+                pragma::parse(&text).map_err(|e| ParseError { pos, msg: e.to_string() })?,
+            );
+        }
+        if *self.peek() != Tok::Eof {
+            return self.err(format!(
+                "unexpected `{}` after kernel (ImageCL programs are a single function)",
+                self.peek()
+            ));
+        }
+        Ok(Program { pragmas, kernel })
+    }
+
+    fn kernel(&mut self) -> Result<KernelFn, ParseError> {
+        self.expect(Tok::KwVoid)?;
+        let name = self.ident()?;
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        if !self.eat(&Tok::RParen) {
+            loop {
+                params.push(self.param()?);
+                if self.eat(&Tok::RParen) {
+                    break;
+                }
+                self.expect(Tok::Comma)?;
+            }
+        }
+        self.expect(Tok::LBrace)?;
+        let body = self.block_rest()?;
+        Ok(KernelFn { name, params, body })
+    }
+
+    fn scalar_type(&mut self) -> Result<ScalarType, ParseError> {
+        let t = match self.peek() {
+            Tok::KwFloat => ScalarType::F32,
+            Tok::KwDouble => ScalarType::F64,
+            Tok::KwInt => ScalarType::I32,
+            Tok::KwUint => ScalarType::U32,
+            Tok::KwShort => ScalarType::I16,
+            Tok::KwUshort => ScalarType::U16,
+            Tok::KwChar => ScalarType::I8,
+            Tok::KwUchar => ScalarType::U8,
+            Tok::KwBool => ScalarType::Bool,
+            other => return self.err(format!("expected scalar type, found `{other}`")),
+        };
+        self.bump();
+        Ok(t)
+    }
+
+    fn param(&mut self) -> Result<Param, ParseError> {
+        self.eat(&Tok::KwConst);
+        if self.eat(&Tok::KwImage) {
+            // Image<T> name — 2-D by default. (3-D images use Image3D in
+            // source; we accept `Image` only and track dims via indexing.)
+            self.expect(Tok::Lt)?;
+            let elem = self.scalar_type()?;
+            self.expect(Tok::Gt)?;
+            let name = self.ident()?;
+            return Ok(Param { name, ty: Type::Image { elem, dims: 2 } });
+        }
+        let elem = self.scalar_type()?;
+        if self.eat(&Tok::Star) {
+            let name = self.ident()?;
+            return Ok(Param { name, ty: Type::Array { elem } });
+        }
+        let name = self.ident()?;
+        // `float f[]`-style array parameter.
+        if self.eat(&Tok::LBracket) {
+            // Optional size is ignored here; `array_size` pragma carries it.
+            if let Tok::IntLit(_) = self.peek() {
+                self.bump();
+            }
+            self.expect(Tok::RBracket)?;
+            return Ok(Param { name, ty: Type::Array { elem } });
+        }
+        Ok(Param { name, ty: Type::Scalar(elem) })
+    }
+
+    // -- statements -------------------------------------------------------
+
+    /// Parse statements until the matching `}` (which is consumed).
+    fn block_rest(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        let mut stmts = Vec::new();
+        while !self.eat(&Tok::RBrace) {
+            if *self.peek() == Tok::Eof {
+                return self.err("unexpected end of input inside block");
+            }
+            stmts.push(self.stmt()?);
+        }
+        Ok(stmts)
+    }
+
+    fn block_or_single(&mut self) -> Result<Vec<Stmt>, ParseError> {
+        if self.eat(&Tok::LBrace) {
+            self.block_rest()
+        } else {
+            Ok(vec![self.stmt()?])
+        }
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, ParseError> {
+        match self.peek().clone() {
+            Tok::KwIf => {
+                self.bump();
+                self.expect(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let then = self.block_or_single()?;
+                let els = if self.eat(&Tok::KwElse) {
+                    self.block_or_single()?
+                } else {
+                    Vec::new()
+                };
+                Ok(Stmt::If { cond, then, els })
+            }
+            Tok::KwFor => self.for_stmt(),
+            Tok::KwWhile => {
+                self.bump();
+                self.expect(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.expect(Tok::RParen)?;
+                let body = self.block_or_single()?;
+                Ok(Stmt::While { cond, body })
+            }
+            Tok::KwReturn => {
+                self.bump();
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Return)
+            }
+            Tok::KwFloat
+            | Tok::KwDouble
+            | Tok::KwInt
+            | Tok::KwUint
+            | Tok::KwShort
+            | Tok::KwUshort
+            | Tok::KwChar
+            | Tok::KwUchar
+            | Tok::KwBool => {
+                let ty = self.scalar_type()?;
+                let name = self.ident()?;
+                let init = if self.eat(&Tok::Assign) {
+                    Some(self.expr()?)
+                } else {
+                    None
+                };
+                self.expect(Tok::Semi)?;
+                Ok(Stmt::Decl { ty, name, init })
+            }
+            Tok::LBrace => {
+                self.bump();
+                // Flatten plain blocks: ImageCL has no block-local shadowing
+                // concerns that matter to our analyses (names must be unique;
+                // checked by sema).
+                let stmts = self.block_rest()?;
+                if stmts.len() == 1 {
+                    Ok(stmts.into_iter().next().unwrap())
+                } else {
+                    // Represent as if(true){...} to preserve grouping.
+                    Ok(Stmt::If { cond: Expr::BoolLit(true), then: stmts, els: vec![] })
+                }
+            }
+            _ => {
+                let s = self.simple_stmt()?;
+                self.expect(Tok::Semi)?;
+                Ok(s)
+            }
+        }
+    }
+
+    /// Assignment / increment / expression statement (no trailing `;`).
+    fn simple_stmt(&mut self) -> Result<Stmt, ParseError> {
+        // `i++` / `i--`
+        if let Tok::Ident(name) = self.peek().clone() {
+            if *self.peek2() == Tok::PlusPlus || *self.peek2() == Tok::MinusMinus {
+                self.bump();
+                let op = self.bump();
+                let delta = if op == Tok::PlusPlus { 1 } else { -1 };
+                return Ok(Stmt::Assign {
+                    lhs: LValue::Var(name.clone()),
+                    op: AssignOp::Add,
+                    value: Expr::int(delta),
+                });
+            }
+        }
+        // Try an lvalue followed by an assignment operator.
+        let save = self.i;
+        if let Tok::Ident(base) = self.peek().clone() {
+            self.bump();
+            let mut indices = Vec::new();
+            while self.eat(&Tok::LBracket) {
+                if indices.len() >= 3 {
+                    return self.err("too many index dimensions (max 3)");
+                }
+                indices.push(self.expr()?);
+                self.expect(Tok::RBracket)?;
+            }
+            let aop = match self.peek() {
+                Tok::Assign => Some(AssignOp::Set),
+                Tok::PlusAssign => Some(AssignOp::Add),
+                Tok::MinusAssign => Some(AssignOp::Sub),
+                Tok::StarAssign => Some(AssignOp::Mul),
+                Tok::SlashAssign => Some(AssignOp::Div),
+                _ => None,
+            };
+            if let Some(op) = aop {
+                self.bump();
+                let value = self.expr()?;
+                let lhs = if indices.is_empty() {
+                    LValue::Var(base)
+                } else {
+                    LValue::Index { base, indices }
+                };
+                return Ok(Stmt::Assign { lhs, op, value });
+            }
+            // Not an assignment: rewind and parse as expression statement.
+            self.i = save;
+        }
+        Ok(Stmt::ExprStmt(self.expr()?))
+    }
+
+    /// `for (int i = e; i < e; i++|i+=k) body` — the restricted form whose
+    /// range the stencil analysis can reason about (paper §5.2.4).
+    fn for_stmt(&mut self) -> Result<Stmt, ParseError> {
+        self.expect(Tok::KwFor)?;
+        self.expect(Tok::LParen)?;
+        self.expect(Tok::KwInt)?;
+        let var = self.ident()?;
+        self.expect(Tok::Assign)?;
+        let init = self.expr()?;
+        self.expect(Tok::Semi)?;
+        let cond = self.expr()?;
+        self.expect(Tok::Semi)?;
+        // step: `i++`, `i--`, `i += k`, `i -= k`
+        let v2 = self.ident()?;
+        if v2 != var {
+            return self.err(format!(
+                "for-loop step must update the induction variable `{var}`"
+            ));
+        }
+        let step = match self.bump() {
+            Tok::PlusPlus => Expr::int(1),
+            Tok::MinusMinus => Expr::int(-1),
+            Tok::PlusAssign => self.expr()?,
+            Tok::MinusAssign => {
+                let e = self.expr()?;
+                Expr::Unary { op: UnOp::Neg, expr: Box::new(e) }
+            }
+            other => return self.err(format!("bad for-loop step `{other}`")),
+        };
+        self.expect(Tok::RParen)?;
+        let body = self.block_or_single()?;
+        Ok(Stmt::For { var, init, cond, step, body })
+    }
+
+    // -- expressions (precedence climbing) ---------------------------------
+
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        self.ternary()
+    }
+
+    fn ternary(&mut self) -> Result<Expr, ParseError> {
+        let cond = self.binary(1)?;
+        if self.eat(&Tok::Question) {
+            let then = self.expr()?;
+            self.expect(Tok::Colon)?;
+            let els = self.expr()?;
+            Ok(Expr::Ternary {
+                cond: Box::new(cond),
+                then: Box::new(then),
+                els: Box::new(els),
+            })
+        } else {
+            Ok(cond)
+        }
+    }
+
+    fn binop_of(tok: &Tok) -> Option<BinOp> {
+        Some(match tok {
+            Tok::Plus => BinOp::Add,
+            Tok::Minus => BinOp::Sub,
+            Tok::Star => BinOp::Mul,
+            Tok::Slash => BinOp::Div,
+            Tok::Percent => BinOp::Rem,
+            Tok::Eq => BinOp::Eq,
+            Tok::Ne => BinOp::Ne,
+            Tok::Lt => BinOp::Lt,
+            Tok::Gt => BinOp::Gt,
+            Tok::Le => BinOp::Le,
+            Tok::Ge => BinOp::Ge,
+            Tok::AndAnd => BinOp::And,
+            Tok::OrOr => BinOp::Or,
+            Tok::Amp => BinOp::BitAnd,
+            Tok::Pipe => BinOp::BitOr,
+            Tok::Caret => BinOp::BitXor,
+            Tok::Shl => BinOp::Shl,
+            Tok::Shr => BinOp::Shr,
+            _ => return None,
+        })
+    }
+
+    fn binary(&mut self, min_prec: u8) -> Result<Expr, ParseError> {
+        let mut lhs = self.unary()?;
+        while let Some(op) = Self::binop_of(self.peek()) {
+            let prec = op.precedence();
+            if prec < min_prec {
+                break;
+            }
+            self.bump();
+            let rhs = self.binary(prec + 1)?;
+            lhs = Expr::bin(op, lhs, rhs);
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr, ParseError> {
+        match self.peek() {
+            Tok::Minus => {
+                self.bump();
+                let e = self.unary()?;
+                // Fold negative literals immediately (stencil analysis
+                // expects `in[idx + -1]` to see the constant).
+                Ok(match e {
+                    Expr::IntLit(v) => Expr::IntLit(-v),
+                    Expr::FloatLit(v) => Expr::FloatLit(-v),
+                    other => Expr::Unary { op: UnOp::Neg, expr: Box::new(other) },
+                })
+            }
+            Tok::Not => {
+                self.bump();
+                let e = self.unary()?;
+                Ok(Expr::Unary { op: UnOp::Not, expr: Box::new(e) })
+            }
+            Tok::Plus => {
+                self.bump();
+                self.unary()
+            }
+            _ => self.postfix(),
+        }
+    }
+
+    fn postfix(&mut self) -> Result<Expr, ParseError> {
+        let mut e = self.primary()?;
+        loop {
+            if self.eat(&Tok::LBracket) {
+                let idx = self.expr()?;
+                self.expect(Tok::RBracket)?;
+                match e {
+                    Expr::Ident(base) => {
+                        e = Expr::Index { base, indices: vec![idx] };
+                    }
+                    Expr::Index { base, mut indices } => {
+                        if indices.len() >= 3 {
+                            return self.err("too many index dimensions (max 3)");
+                        }
+                        indices.push(idx);
+                        e = Expr::Index { base, indices };
+                    }
+                    _ => return self.err("only named arrays/images can be indexed"),
+                }
+            } else {
+                break;
+            }
+        }
+        Ok(e)
+    }
+
+    fn primary(&mut self) -> Result<Expr, ParseError> {
+        match self.peek().clone() {
+            Tok::IntLit(v) => {
+                self.bump();
+                Ok(Expr::IntLit(v))
+            }
+            Tok::FloatLit(v) => {
+                self.bump();
+                Ok(Expr::FloatLit(v))
+            }
+            Tok::KwTrue => {
+                self.bump();
+                Ok(Expr::BoolLit(true))
+            }
+            Tok::KwFalse => {
+                self.bump();
+                Ok(Expr::BoolLit(false))
+            }
+            Tok::LParen => {
+                self.bump();
+                // Cast: `(float)(...)` / `(int)x`
+                if let Ok(ty) = self.try_cast_type() {
+                    let e = self.unary()?;
+                    return Ok(Expr::Cast { ty, expr: Box::new(e) });
+                }
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                if self.eat(&Tok::LParen) {
+                    let mut args = Vec::new();
+                    if !self.eat(&Tok::RParen) {
+                        loop {
+                            args.push(self.expr()?);
+                            if self.eat(&Tok::RParen) {
+                                break;
+                            }
+                            self.expect(Tok::Comma)?;
+                        }
+                    }
+                    Ok(Expr::Call { name, args })
+                } else {
+                    Ok(Expr::Ident(name))
+                }
+            }
+            other => self.err(format!("expected expression, found `{other}`")),
+        }
+    }
+
+    /// After having consumed `(`, check for `scalar-type )` (a cast).
+    fn try_cast_type(&mut self) -> Result<ScalarType, ParseError> {
+        let save = self.i;
+        match self.scalar_type() {
+            Ok(ty) => {
+                if self.eat(&Tok::RParen) {
+                    Ok(ty)
+                } else {
+                    self.i = save;
+                    Err(ParseError { pos: self.pos(), msg: "not a cast".into() })
+                }
+            }
+            Err(e) => {
+                self.i = save;
+                Err(e)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imagecl::pragma::BoundaryCond;
+
+    const BOX_FILTER: &str = r#"
+#pragma imcl grid(in)
+#pragma imcl boundary(in, constant, 0.0)
+void blur(Image<float> in, Image<float> out) {
+  float sum = 0.0f;
+  for (int i = -1; i < 2; i++) {
+    for (int j = -1; j < 2; j++) {
+      sum += in[idx + i][idy + j];
+    }
+  }
+  out[idx][idy] = sum / 9.0f;
+}
+"#;
+
+    #[test]
+    fn parse_box_filter() {
+        let p = Program::parse(BOX_FILTER).unwrap();
+        assert_eq!(p.kernel.name, "blur");
+        assert_eq!(p.kernel.params.len(), 2);
+        assert_eq!(
+            p.kernel.params[0].ty,
+            Type::Image { elem: ScalarType::F32, dims: 2 }
+        );
+        assert_eq!(p.pragmas.len(), 2);
+        assert_eq!(p.pragmas[0], Pragma::GridImage("in".into()));
+        assert_eq!(
+            p.pragmas[1],
+            Pragma::Boundary { array: "in".into(), cond: BoundaryCond::Constant(0.0) }
+        );
+        // body: decl, for, assign
+        assert_eq!(p.kernel.body.len(), 3);
+        match &p.kernel.body[1] {
+            Stmt::For { var, body, .. } => {
+                assert_eq!(var, "i");
+                assert_eq!(body.len(), 1);
+            }
+            other => panic!("expected for, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_array_param_styles() {
+        let p = Program::parse(
+            "void k(Image<uchar> in, Image<uchar> out, float* f, int n, float g[25]) { return; }",
+        )
+        .unwrap();
+        assert_eq!(p.kernel.params[2].ty, Type::Array { elem: ScalarType::F32 });
+        assert_eq!(p.kernel.params[3].ty, Type::Scalar(ScalarType::I32));
+        assert_eq!(p.kernel.params[4].ty, Type::Array { elem: ScalarType::F32 });
+    }
+
+    #[test]
+    fn parse_precedence() {
+        let p = Program::parse("void k(float* a) { a[0] = 1 + 2 * 3 - 4 / 2; }").unwrap();
+        match &p.kernel.body[0] {
+            Stmt::Assign { value, .. } => {
+                assert_eq!(value.to_string(), "1 + 2 * 3 - 4 / 2");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_ternary_and_call() {
+        let p = Program::parse(
+            "void k(float* a) { a[idx] = idx > 2 ? sqrt(a[idx]) : fabs(a[idx]); }",
+        )
+        .unwrap();
+        match &p.kernel.body[0] {
+            Stmt::Assign { value: Expr::Ternary { .. }, .. } => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_cast() {
+        let p = Program::parse("void k(float* a) { a[idx] = (float)(idx) / 2.0f; }").unwrap();
+        match &p.kernel.body[0] {
+            Stmt::Assign { value, .. } => assert_eq!(value.to_string(), "(float)(idx) / 2.0f"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_compound_assign_and_incr() {
+        let p = Program::parse(
+            "void k(float* a) { int i = 0; i++; i += 2; a[i] *= 2.0f; }",
+        )
+        .unwrap();
+        assert_eq!(p.kernel.body.len(), 4);
+        match &p.kernel.body[1] {
+            Stmt::Assign { lhs: LValue::Var(v), op: AssignOp::Add, value } => {
+                assert_eq!(v, "i");
+                assert_eq!(*value, Expr::int(1));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_if_else_chains() {
+        let p = Program::parse(
+            "void k(float* a) { if (idx > 1) a[idx] = 1.0f; else if (idx > 0) a[idx] = 2.0f; else { a[idx] = 3.0f; } }",
+        )
+        .unwrap();
+        match &p.kernel.body[0] {
+            Stmt::If { els, .. } => match &els[0] {
+                Stmt::If { els: inner_els, .. } => assert_eq!(inner_els.len(), 1),
+                other => panic!("{other:?}"),
+            },
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_for_step_variants() {
+        let p = Program::parse(
+            "void k(float* a) { for (int i = 0; i < 8; i += 2) { a[i] = 0.0f; } }",
+        )
+        .unwrap();
+        match &p.kernel.body[0] {
+            Stmt::For { step, .. } => assert_eq!(*step, Expr::int(2)),
+            other => panic!("{other:?}"),
+        }
+        // Step must use the induction variable.
+        assert!(Program::parse(
+            "void k(float* a) { for (int i = 0; i < 8; j++) { a[i] = 0.0f; } }"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn parse_negative_literal_folding() {
+        let p = Program::parse("void k(float* a) { a[idx + -2] = -1.5f; }").unwrap();
+        match &p.kernel.body[0] {
+            Stmt::Assign { lhs: LValue::Index { indices, .. }, value, .. } => {
+                assert_eq!(indices[0].to_string(), "idx + -2");
+                assert_eq!(**&value, Expr::FloatLit(-1.5));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parse_rejects_second_function() {
+        assert!(Program::parse("void a() { return; } void b() { return; }").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Program::parse("int main() { }").is_err());
+        assert!(Program::parse("void k( { }").is_err());
+        assert!(Program::parse("void k() { float; }").is_err());
+    }
+
+    #[test]
+    fn parse_triple_index() {
+        let p = Program::parse("void k(Image<float> v) { v[idx][idy][idz] = 0.0f; }").unwrap();
+        match &p.kernel.body[0] {
+            Stmt::Assign { lhs: LValue::Index { indices, .. }, .. } => {
+                assert_eq!(indices.len(), 3)
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(
+            Program::parse("void k(Image<float> v) { v[0][0][0][0] = 0.0f; }").is_err()
+        );
+    }
+}

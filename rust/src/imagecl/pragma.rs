@@ -1,0 +1,274 @@
+//! `#pragma imcl` compiler directives (paper §5).
+//!
+//! Supported directives:
+//!
+//! * `grid(<image>)` — base the logical thread grid on an `Image` parameter
+//!   (Listing 1 of the paper).
+//! * `grid(<w>, <h>)` — give the grid size directly when no `Image` is used.
+//! * `boundary(<array>, clamped)` / `boundary(<array>, constant, <v>)` —
+//!   boundary condition of an `Image` (Figure 3). Default: constant 0.
+//! * `array_size(<array>, <n>)` — upper bound on an array's element count
+//!   when it is not known at compile time (paper §5.2.4: enables the
+//!   constant-memory optimization).
+//! * `force(<opt>, on|off)` — force an optimization on or off, removing it
+//!   from the tuning space: `image_mem(<array>)`, `constant_mem(<array>)`,
+//!   `local_mem(<array>)`, `interleaved`.
+
+use std::fmt;
+
+/// Boundary condition of an `Image` (paper Figure 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BoundaryCond {
+    /// Out-of-range reads return the closest pixel inside the image.
+    Clamped,
+    /// Out-of-range reads return the given constant.
+    Constant(f64),
+}
+
+impl Default for BoundaryCond {
+    fn default() -> Self {
+        BoundaryCond::Constant(0.0)
+    }
+}
+
+impl fmt::Display for BoundaryCond {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            BoundaryCond::Clamped => write!(f, "clamped"),
+            BoundaryCond::Constant(v) => write!(f, "constant({v})"),
+        }
+    }
+}
+
+/// An optimization that can be forced on/off by a directive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ForceOpt {
+    ImageMem(String),
+    ConstantMem(String),
+    LocalMem(String),
+    Interleaved,
+}
+
+/// A parsed `#pragma imcl` directive.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Pragma {
+    /// `grid(image)` — thread grid has the image's size/dimensionality.
+    GridImage(String),
+    /// `grid(w, h [, d])` — explicit grid size.
+    GridSize(Vec<i64>),
+    Boundary { array: String, cond: BoundaryCond },
+    ArraySize { array: String, max_elems: usize },
+    Force { opt: ForceOpt, on: bool },
+}
+
+/// Directive parse error.
+#[derive(Debug, thiserror::Error)]
+#[error("bad #pragma imcl directive {text:?}: {msg}")]
+pub struct PragmaError {
+    pub text: String,
+    pub msg: String,
+}
+
+fn err(text: &str, msg: impl Into<String>) -> PragmaError {
+    PragmaError { text: text.to_string(), msg: msg.into() }
+}
+
+/// Split `name(arg, arg, ...)` into (name, args). Nested parens (one level,
+/// for `force(local_mem(in), off)`) are kept inside a single arg.
+fn split_call(text: &str) -> Result<(String, Vec<String>), PragmaError> {
+    let text_trim = text.trim();
+    let open = text_trim
+        .find('(')
+        .ok_or_else(|| err(text, "expected '('"))?;
+    let name = text_trim[..open].trim().to_string();
+    let rest = &text_trim[open + 1..];
+    let close = rest
+        .rfind(')')
+        .ok_or_else(|| err(text, "expected ')'"))?;
+    if !rest[close + 1..].trim().is_empty() {
+        return Err(err(text, "trailing text after ')'"));
+    }
+    let inner = &rest[..close];
+    let mut args = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in inner.chars() {
+        match c {
+            '(' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ')' => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| err(text, "unbalanced ')'"))?;
+                cur.push(c);
+            }
+            ',' if depth == 0 => {
+                args.push(cur.trim().to_string());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if depth != 0 {
+        return Err(err(text, "unbalanced '('"));
+    }
+    if !cur.trim().is_empty() {
+        args.push(cur.trim().to_string());
+    }
+    Ok((name, args))
+}
+
+fn is_ident(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().next().unwrap().is_ascii_alphabetic()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Parse the payload of a `#pragma imcl <payload>` line.
+pub fn parse(text: &str) -> Result<Pragma, PragmaError> {
+    let (name, args) = split_call(text)?;
+    match name.as_str() {
+        "grid" => {
+            if args.len() == 1 && is_ident(&args[0]) {
+                Ok(Pragma::GridImage(args[0].clone()))
+            } else if !args.is_empty() && args.len() <= 3 {
+                let dims = args
+                    .iter()
+                    .map(|a| a.parse::<i64>())
+                    .collect::<Result<Vec<_>, _>>()
+                    .map_err(|_| err(text, "grid takes an image name or integer sizes"))?;
+                if dims.iter().any(|&d| d <= 0) {
+                    return Err(err(text, "grid sizes must be positive"));
+                }
+                Ok(Pragma::GridSize(dims))
+            } else {
+                Err(err(text, "grid takes an image name or 1-3 integer sizes"))
+            }
+        }
+        "boundary" => {
+            if args.len() < 2 || !is_ident(&args[0]) {
+                return Err(err(text, "usage: boundary(array, clamped|constant[, v])"));
+            }
+            let cond = match (args[1].as_str(), args.get(2)) {
+                ("clamped", None) => BoundaryCond::Clamped,
+                ("constant", None) => BoundaryCond::Constant(0.0),
+                ("constant", Some(v)) => BoundaryCond::Constant(
+                    v.parse()
+                        .map_err(|_| err(text, "bad constant boundary value"))?,
+                ),
+                _ => return Err(err(text, "boundary condition must be clamped or constant")),
+            };
+            Ok(Pragma::Boundary { array: args[0].clone(), cond })
+        }
+        "array_size" => {
+            if args.len() != 2 || !is_ident(&args[0]) {
+                return Err(err(text, "usage: array_size(array, max_elems)"));
+            }
+            let n = args[1]
+                .parse::<usize>()
+                .map_err(|_| err(text, "bad array size"))?;
+            Ok(Pragma::ArraySize { array: args[0].clone(), max_elems: n })
+        }
+        "force" => {
+            if args.len() != 2 {
+                return Err(err(text, "usage: force(opt, on|off)"));
+            }
+            let on = match args[1].as_str() {
+                "on" => true,
+                "off" => false,
+                _ => return Err(err(text, "force takes on|off")),
+            };
+            let opt = if args[0] == "interleaved" {
+                ForceOpt::Interleaved
+            } else {
+                let (optname, optargs) = split_call(&args[0])?;
+                if optargs.len() != 1 || !is_ident(&optargs[0]) {
+                    return Err(err(text, "force memory opts take one array name"));
+                }
+                let arr = optargs[0].clone();
+                match optname.as_str() {
+                    "image_mem" => ForceOpt::ImageMem(arr),
+                    "constant_mem" => ForceOpt::ConstantMem(arr),
+                    "local_mem" => ForceOpt::LocalMem(arr),
+                    other => return Err(err(text, format!("unknown optimization {other:?}"))),
+                }
+            };
+            Ok(Pragma::Force { opt, on })
+        }
+        other => Err(err(text, format!("unknown directive {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_image() {
+        assert_eq!(parse("grid(input)").unwrap(), Pragma::GridImage("input".into()));
+    }
+
+    #[test]
+    fn grid_size() {
+        assert_eq!(parse("grid(512, 256)").unwrap(), Pragma::GridSize(vec![512, 256]));
+        assert_eq!(parse("grid(64)").unwrap(), Pragma::GridSize(vec![64]));
+    }
+
+    #[test]
+    fn grid_rejects_bad() {
+        assert!(parse("grid()").is_err());
+        assert!(parse("grid(0, 4)").is_err());
+        assert!(parse("grid(a, b)").is_err());
+    }
+
+    #[test]
+    fn boundary_variants() {
+        assert_eq!(
+            parse("boundary(in, clamped)").unwrap(),
+            Pragma::Boundary { array: "in".into(), cond: BoundaryCond::Clamped }
+        );
+        assert_eq!(
+            parse("boundary(in, constant, 1.5)").unwrap(),
+            Pragma::Boundary { array: "in".into(), cond: BoundaryCond::Constant(1.5) }
+        );
+        assert_eq!(
+            parse("boundary(in, constant)").unwrap(),
+            Pragma::Boundary { array: "in".into(), cond: BoundaryCond::Constant(0.0) }
+        );
+        assert!(parse("boundary(in, mirror)").is_err());
+    }
+
+    #[test]
+    fn array_size() {
+        assert_eq!(
+            parse("array_size(filter, 25)").unwrap(),
+            Pragma::ArraySize { array: "filter".into(), max_elems: 25 }
+        );
+        assert!(parse("array_size(filter)").is_err());
+    }
+
+    #[test]
+    fn force_opts() {
+        assert_eq!(
+            parse("force(local_mem(in), off)").unwrap(),
+            Pragma::Force { opt: ForceOpt::LocalMem("in".into()), on: false }
+        );
+        assert_eq!(
+            parse("force(image_mem(out), on)").unwrap(),
+            Pragma::Force { opt: ForceOpt::ImageMem("out".into()), on: true }
+        );
+        assert_eq!(
+            parse("force(interleaved, on)").unwrap(),
+            Pragma::Force { opt: ForceOpt::Interleaved, on: true }
+        );
+        assert!(parse("force(warp_shuffle(in), on)").is_err());
+        assert!(parse("force(local_mem(in), maybe)").is_err());
+    }
+
+    #[test]
+    fn unknown_directive() {
+        assert!(parse("vectorize(4)").is_err());
+    }
+}

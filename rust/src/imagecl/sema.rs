@@ -1,0 +1,497 @@
+//! Semantic checks + resolved program representation.
+//!
+//! Validates a parsed [`Program`] and resolves its directives into a
+//! [`CheckedProgram`]: the thread-grid source, per-array boundary
+//! conditions and size bounds, forced optimizations, and basic
+//! well-formedness (unique names, declared variables, indexable types,
+//! no writes to loop variables, single-assignment images not required but
+//! aliasing of buffer parameters is rejected by construction since every
+//! buffer is a distinct parameter — paper §5.2.4 "we disallow aliasing").
+
+use std::collections::{HashMap, HashSet};
+
+use super::ast::*;
+use super::parser::Program;
+use super::pragma::{BoundaryCond, ForceOpt, Pragma};
+
+/// How the logical thread grid is defined (paper §5: `grid` directive).
+#[derive(Debug, Clone, PartialEq)]
+pub enum GridSpec {
+    /// Grid size = size of this `Image` parameter.
+    FromImage(String),
+    /// Explicit size (width, height).
+    Explicit(Vec<i64>),
+}
+
+/// Tri-state forced-optimization setting from `force(...)` directives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Forced {
+    #[default]
+    /// Not forced — the auto-tuner decides.
+    Tunable,
+    On,
+    Off,
+}
+
+/// A semantically validated ImageCL program.
+#[derive(Debug, Clone)]
+pub struct CheckedProgram {
+    pub kernel: KernelFn,
+    pub grid: GridSpec,
+    /// Boundary condition per Image parameter (default constant-0).
+    pub boundary: HashMap<String, BoundaryCond>,
+    /// `array_size` upper bounds (elements) per array parameter.
+    pub size_bounds: HashMap<String, usize>,
+    /// Forced memory-space settings per array, and the global interleave.
+    pub force_image_mem: HashMap<String, Forced>,
+    pub force_constant_mem: HashMap<String, Forced>,
+    pub force_local_mem: HashMap<String, Forced>,
+    pub force_interleaved: Forced,
+}
+
+/// Semantic error.
+#[derive(Debug, thiserror::Error)]
+#[error("semantic error: {0}")]
+pub struct SemaError(pub String);
+
+fn e(msg: impl Into<String>) -> SemaError {
+    SemaError(msg.into())
+}
+
+/// Builtin thread-index variables (paper §5).
+pub const BUILTIN_IDS: [&str; 3] = ["idx", "idy", "idz"];
+
+/// Builtin math/intrinsic functions accepted by the checker, interpreter
+/// and OpenCL emitter alike.
+pub const BUILTIN_FNS: [&str; 14] = [
+    "sqrt", "fabs", "exp", "log", "sin", "cos", "pow", "min", "max", "clamp", "floor",
+    "ceil", "rsqrt", "abs",
+];
+
+/// Run all semantic checks and resolve directives.
+pub fn check(prog: &Program) -> Result<CheckedProgram, SemaError> {
+    let kernel = &prog.kernel;
+
+    // Unique parameter names.
+    let mut seen = HashSet::new();
+    for p in &kernel.params {
+        if !seen.insert(p.name.clone()) {
+            return Err(e(format!("duplicate parameter name `{}`", p.name)));
+        }
+        if BUILTIN_IDS.contains(&p.name.as_str()) {
+            return Err(e(format!("parameter `{}` shadows a builtin index", p.name)));
+        }
+    }
+
+    let param_ty = |name: &str| kernel.param(name).map(|p| &p.ty);
+    let is_buffer =
+        |name: &str| param_ty(name).map(|t| t.is_buffer()).unwrap_or(false);
+    let is_image =
+        |name: &str| matches!(param_ty(name), Some(Type::Image { .. }));
+
+    // Resolve directives.
+    let mut grid: Option<GridSpec> = None;
+    let mut boundary = HashMap::new();
+    let mut size_bounds = HashMap::new();
+    let mut force_image_mem: HashMap<String, Forced> = HashMap::new();
+    let mut force_constant_mem: HashMap<String, Forced> = HashMap::new();
+    let mut force_local_mem: HashMap<String, Forced> = HashMap::new();
+    let mut force_interleaved = Forced::Tunable;
+
+    for pr in &prog.pragmas {
+        match pr {
+            Pragma::GridImage(name) => {
+                if grid.is_some() {
+                    return Err(e("multiple grid directives"));
+                }
+                if !is_image(name) {
+                    return Err(e(format!(
+                        "grid({name}) does not name an Image parameter"
+                    )));
+                }
+                grid = Some(GridSpec::FromImage(name.clone()));
+            }
+            Pragma::GridSize(dims) => {
+                if grid.is_some() {
+                    return Err(e("multiple grid directives"));
+                }
+                grid = Some(GridSpec::Explicit(dims.clone()));
+            }
+            Pragma::Boundary { array, cond } => {
+                if !is_image(array) {
+                    return Err(e(format!(
+                        "boundary({array}, ...) does not name an Image parameter"
+                    )));
+                }
+                if boundary.insert(array.clone(), *cond).is_some() {
+                    return Err(e(format!("duplicate boundary directive for `{array}`")));
+                }
+            }
+            Pragma::ArraySize { array, max_elems } => {
+                if !is_buffer(array) {
+                    return Err(e(format!(
+                        "array_size({array}, ...) does not name an array parameter"
+                    )));
+                }
+                size_bounds.insert(array.clone(), *max_elems);
+            }
+            Pragma::Force { opt, on } => {
+                let val = if *on { Forced::On } else { Forced::Off };
+                match opt {
+                    ForceOpt::ImageMem(a) => {
+                        if !is_buffer(a) {
+                            return Err(e(format!("force image_mem({a}): unknown array")));
+                        }
+                        force_image_mem.insert(a.clone(), val);
+                    }
+                    ForceOpt::ConstantMem(a) => {
+                        if !is_buffer(a) {
+                            return Err(e(format!("force constant_mem({a}): unknown array")));
+                        }
+                        force_constant_mem.insert(a.clone(), val);
+                    }
+                    ForceOpt::LocalMem(a) => {
+                        if !is_image(a) {
+                            return Err(e(format!(
+                                "force local_mem({a}): local memory applies to Images"
+                            )));
+                        }
+                        force_local_mem.insert(a.clone(), val);
+                    }
+                    ForceOpt::Interleaved => force_interleaved = val,
+                }
+            }
+        }
+    }
+
+    // Infer the grid if not given: a single writable Image output would be
+    // ambiguous to guess among many; require the directive unless there is
+    // exactly one Image parameter.
+    let grid = match grid {
+        Some(g) => g,
+        None => {
+            let images: Vec<_> = kernel
+                .params
+                .iter()
+                .filter(|p| matches!(p.ty, Type::Image { .. }))
+                .collect();
+            match images.as_slice() {
+                [only] => GridSpec::FromImage(only.name.clone()),
+                [] => return Err(e("no grid directive and no Image parameter")),
+                _ => {
+                    return Err(e(
+                        "no grid directive; ambiguous with multiple Image parameters",
+                    ))
+                }
+            }
+        }
+    };
+
+    // Scope/typing walk: every ident must be declared (param, local decl,
+    // loop var or builtin); only buffers may be indexed; loop variables are
+    // not reassigned inside their loop body.
+    check_body(kernel)?;
+
+    // Writes: scalar parameters are read-only.
+    let mut write_err = None;
+    kernel.walk_stmts(&mut |s| {
+        if let Stmt::Assign { lhs: LValue::Var(v), .. } = s {
+            if let Some(Type::Scalar(_)) = param_ty(v) {
+                write_err = Some(format!("scalar parameter `{v}` is read-only"));
+            }
+        }
+    });
+    if let Some(m) = write_err {
+        return Err(e(m));
+    }
+
+    Ok(CheckedProgram {
+        kernel: kernel.clone(),
+        grid,
+        boundary,
+        size_bounds,
+        force_image_mem,
+        force_constant_mem,
+        force_local_mem,
+        force_interleaved,
+    })
+}
+
+/// Scope checking of the kernel body.
+fn check_body(kernel: &KernelFn) -> Result<(), SemaError> {
+    struct Scope<'a> {
+        kernel: &'a KernelFn,
+        vars: Vec<String>,
+        loop_vars: Vec<String>,
+    }
+
+    impl Scope<'_> {
+        fn declared(&self, name: &str) -> bool {
+            BUILTIN_IDS.contains(&name)
+                || self.kernel.param(name).is_some()
+                || self.vars.iter().any(|v| v == name)
+                || self.loop_vars.iter().any(|v| v == name)
+        }
+
+        fn check_expr(&self, expr: &Expr) -> Result<(), SemaError> {
+            let mut res = Ok(());
+            expr.walk(&mut |ex| {
+                if res.is_err() {
+                    return;
+                }
+                match ex {
+                    Expr::Ident(name) => {
+                        if !self.declared(name) {
+                            res = Err(e(format!("use of undeclared variable `{name}`")));
+                        }
+                    }
+                    Expr::Index { base, indices } => {
+                        match self.kernel.param(base).map(|p| &p.ty) {
+                            Some(Type::Image { .. }) => {
+                                if indices.is_empty() || indices.len() > 3 {
+                                    res = Err(e(format!("bad index arity on image `{base}`")));
+                                }
+                            }
+                            Some(Type::Array { .. }) => {
+                                if indices.len() != 1 {
+                                    res = Err(e(format!(
+                                        "array `{base}` must be indexed 1-D (got {})",
+                                        indices.len()
+                                    )));
+                                }
+                            }
+                            Some(Type::Scalar(_)) => {
+                                res = Err(e(format!("cannot index scalar `{base}`")))
+                            }
+                            None => {
+                                res = Err(e(format!("use of undeclared array `{base}`")))
+                            }
+                        }
+                    }
+                    Expr::Call { name, args } => {
+                        if !super::sema::BUILTIN_FNS.contains(&name.as_str()) {
+                            res = Err(e(format!("unknown function `{name}`")));
+                        } else {
+                            let arity_ok = match name.as_str() {
+                                "min" | "max" | "pow" => args.len() == 2,
+                                "clamp" => args.len() == 3,
+                                _ => args.len() == 1,
+                            };
+                            if !arity_ok {
+                                res = Err(e(format!("wrong arity for `{name}`")));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            });
+            res
+        }
+
+        fn check_stmts(&mut self, stmts: &[Stmt]) -> Result<(), SemaError> {
+            for s in stmts {
+                match s {
+                    Stmt::Decl { name, init, .. } => {
+                        if self.declared(name) {
+                            return Err(e(format!("redeclaration of `{name}`")));
+                        }
+                        if let Some(i) = init {
+                            self.check_expr(i)?;
+                        }
+                        self.vars.push(name.clone());
+                    }
+                    Stmt::Assign { lhs, value, .. } => {
+                        match lhs {
+                            LValue::Var(v) => {
+                                if !self.declared(v) {
+                                    return Err(e(format!(
+                                        "assignment to undeclared variable `{v}`"
+                                    )));
+                                }
+                                if BUILTIN_IDS.contains(&v.as_str()) {
+                                    return Err(e(format!(
+                                        "cannot assign to builtin index `{v}`"
+                                    )));
+                                }
+                                if self.loop_vars.iter().any(|lv| lv == v) {
+                                    return Err(e(format!(
+                                        "loop variable `{v}` may not be reassigned in its body"
+                                    )));
+                                }
+                            }
+                            LValue::Index { base, indices } => {
+                                let fake = Expr::Index {
+                                    base: base.clone(),
+                                    indices: indices.clone(),
+                                };
+                                self.check_expr(&fake)?;
+                            }
+                        }
+                        self.check_expr(value)?;
+                    }
+                    Stmt::If { cond, then, els } => {
+                        self.check_expr(cond)?;
+                        let n = self.vars.len();
+                        self.check_stmts(then)?;
+                        self.vars.truncate(n);
+                        self.check_stmts(els)?;
+                        self.vars.truncate(n);
+                    }
+                    Stmt::For { var, init, cond, step, body } => {
+                        if self.declared(var) {
+                            return Err(e(format!("loop variable `{var}` shadows another name")));
+                        }
+                        self.check_expr(init)?;
+                        self.loop_vars.push(var.clone());
+                        self.check_expr(cond)?;
+                        self.check_expr(step)?;
+                        let n = self.vars.len();
+                        self.check_stmts(body)?;
+                        self.vars.truncate(n);
+                        self.loop_vars.pop();
+                    }
+                    Stmt::While { cond, body } => {
+                        self.check_expr(cond)?;
+                        let n = self.vars.len();
+                        self.check_stmts(body)?;
+                        self.vars.truncate(n);
+                    }
+                    Stmt::Return | Stmt::Barrier => {}
+                    Stmt::ExprStmt(ex) => self.check_expr(ex)?,
+                }
+            }
+            Ok(())
+        }
+    }
+
+    Scope { kernel, vars: Vec::new(), loop_vars: Vec::new() }.check_stmts(&kernel.body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn checked(src: &str) -> Result<CheckedProgram, SemaError> {
+        check(&Program::parse(src).expect("parse"))
+    }
+
+    #[test]
+    fn box_filter_checks() {
+        let p = checked(
+            "#pragma imcl grid(in)\n\
+             void blur(Image<float> in, Image<float> out) {\n\
+               float sum = 0.0f;\n\
+               for (int i = -1; i < 2; i++) {\n\
+                 for (int j = -1; j < 2; j++) { sum += in[idx + i][idy + j]; }\n\
+               }\n\
+               out[idx][idy] = sum / 9.0f;\n\
+             }",
+        )
+        .unwrap();
+        assert_eq!(p.grid, GridSpec::FromImage("in".into()));
+        // Default boundary applies (constant 0) — map empty, default on query.
+        assert!(p.boundary.is_empty());
+    }
+
+    #[test]
+    fn grid_inferred_single_image() {
+        let p = checked("void k(Image<float> a) { a[idx][idy] = 0.0f; }").unwrap();
+        assert_eq!(p.grid, GridSpec::FromImage("a".into()));
+    }
+
+    #[test]
+    fn grid_required_when_ambiguous() {
+        assert!(checked(
+            "void k(Image<float> a, Image<float> b) { b[idx][idy] = a[idx][idy]; }"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn explicit_grid_without_images() {
+        let p = checked(
+            "#pragma imcl grid(64, 64)\nvoid k(float* a) { a[idx] = 0.0f; }",
+        )
+        .unwrap();
+        assert_eq!(p.grid, GridSpec::Explicit(vec![64, 64]));
+    }
+
+    #[test]
+    fn undeclared_variable_rejected() {
+        assert!(checked("void k(Image<float> a) { a[idx][idy] = q; }").is_err());
+    }
+
+    #[test]
+    fn unknown_function_rejected() {
+        assert!(checked("void k(Image<float> a) { a[idx][idy] = foo(1.0f); }").is_err());
+    }
+
+    #[test]
+    fn builtin_arity_enforced() {
+        assert!(checked("void k(Image<float> a) { a[idx][idy] = min(1.0f); }").is_err());
+        assert!(
+            checked("void k(Image<float> a) { a[idx][idy] = min(1.0f, 2.0f); }").is_ok()
+        );
+    }
+
+    #[test]
+    fn scalar_param_read_only() {
+        assert!(checked("void k(Image<float> a, int n) { n = 3; }").is_err());
+    }
+
+    #[test]
+    fn loop_var_not_reassignable() {
+        assert!(checked(
+            "void k(Image<float> a) { for (int i = 0; i < 4; i++) { i = 2; } }"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn array_indexed_1d_only() {
+        assert!(checked(
+            "#pragma imcl grid(a)\nvoid k(Image<float> a, float* f) { a[idx][idy] = f[0][1]; }"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn boundary_on_non_image_rejected() {
+        assert!(checked(
+            "#pragma imcl boundary(f, clamped)\n#pragma imcl grid(a)\n\
+             void k(Image<float> a, float* f) { a[idx][idy] = f[0]; }"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn force_directives_resolved() {
+        let p = checked(
+            "#pragma imcl grid(a)\n\
+             #pragma imcl force(local_mem(a), off)\n\
+             #pragma imcl force(interleaved, on)\n\
+             void k(Image<float> a, Image<float> o) { o[idx][idy] = a[idx][idy]; }",
+        )
+        .unwrap();
+        assert_eq!(p.force_local_mem.get("a"), Some(&Forced::Off));
+        assert_eq!(p.force_interleaved, Forced::On);
+    }
+
+    #[test]
+    fn duplicate_params_rejected() {
+        assert!(checked("void k(Image<float> a, float* a) { a[idx][idy] = 0.0f; }").is_err());
+    }
+
+    #[test]
+    fn shadowing_builtin_rejected() {
+        assert!(checked("void k(Image<float> idx) { return; }").is_err());
+    }
+
+    #[test]
+    fn redeclaration_rejected() {
+        assert!(checked(
+            "void k(Image<float> a) { float x = 0.0f; float x = 1.0f; }"
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,632 @@
+//! Lexer for the ImageCL language.
+//!
+//! ImageCL syntax is identical to OpenCL C (paper §5) with the addition of
+//! the templated `Image<T>` type and `#pragma imcl ...` directives. The
+//! lexer produces a flat token stream; pragma lines are lexed as a single
+//! [`Tok::Pragma`] token carrying the raw directive text so the parser can
+//! hand it to [`crate::imagecl::pragma`].
+
+use std::fmt;
+
+/// A source position (1-based line/column) for diagnostics.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pos {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl fmt::Display for Pos {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// Token kinds of the ImageCL language.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    // Literals & identifiers.
+    Ident(String),
+    IntLit(i64),
+    FloatLit(f64),
+    /// `#pragma imcl <rest-of-line>` — the payload is `<rest-of-line>`.
+    Pragma(String),
+
+    // Keywords.
+    KwVoid,
+    KwFloat,
+    KwInt,
+    KwUint,
+    KwChar,
+    KwUchar,
+    KwShort,
+    KwUshort,
+    KwDouble,
+    KwBool,
+    KwImage,
+    KwIf,
+    KwElse,
+    KwFor,
+    KwWhile,
+    KwReturn,
+    KwConst,
+    KwTrue,
+    KwFalse,
+
+    // Punctuation.
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Colon,
+    Question,
+
+    // Operators.
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Assign,
+    PlusAssign,
+    MinusAssign,
+    StarAssign,
+    SlashAssign,
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    AndAnd,
+    OrOr,
+    Not,
+    Amp,
+    Pipe,
+    Caret,
+    Shl,
+    Shr,
+    PlusPlus,
+    MinusMinus,
+
+    Eof,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "{s}"),
+            Tok::IntLit(v) => write!(f, "{v}"),
+            Tok::FloatLit(v) => write!(f, "{v}"),
+            Tok::Pragma(s) => write!(f, "#pragma imcl {s}"),
+            Tok::KwVoid => write!(f, "void"),
+            Tok::KwFloat => write!(f, "float"),
+            Tok::KwInt => write!(f, "int"),
+            Tok::KwUint => write!(f, "uint"),
+            Tok::KwChar => write!(f, "char"),
+            Tok::KwUchar => write!(f, "uchar"),
+            Tok::KwShort => write!(f, "short"),
+            Tok::KwUshort => write!(f, "ushort"),
+            Tok::KwDouble => write!(f, "double"),
+            Tok::KwBool => write!(f, "bool"),
+            Tok::KwImage => write!(f, "Image"),
+            Tok::KwIf => write!(f, "if"),
+            Tok::KwElse => write!(f, "else"),
+            Tok::KwFor => write!(f, "for"),
+            Tok::KwWhile => write!(f, "while"),
+            Tok::KwReturn => write!(f, "return"),
+            Tok::KwConst => write!(f, "const"),
+            Tok::KwTrue => write!(f, "true"),
+            Tok::KwFalse => write!(f, "false"),
+            Tok::LParen => write!(f, "("),
+            Tok::RParen => write!(f, ")"),
+            Tok::LBrace => write!(f, "{{"),
+            Tok::RBrace => write!(f, "}}"),
+            Tok::LBracket => write!(f, "["),
+            Tok::RBracket => write!(f, "]"),
+            Tok::Comma => write!(f, ","),
+            Tok::Semi => write!(f, ";"),
+            Tok::Colon => write!(f, ":"),
+            Tok::Question => write!(f, "?"),
+            Tok::Plus => write!(f, "+"),
+            Tok::Minus => write!(f, "-"),
+            Tok::Star => write!(f, "*"),
+            Tok::Slash => write!(f, "/"),
+            Tok::Percent => write!(f, "%"),
+            Tok::Assign => write!(f, "="),
+            Tok::PlusAssign => write!(f, "+="),
+            Tok::MinusAssign => write!(f, "-="),
+            Tok::StarAssign => write!(f, "*="),
+            Tok::SlashAssign => write!(f, "/="),
+            Tok::Eq => write!(f, "=="),
+            Tok::Ne => write!(f, "!="),
+            Tok::Lt => write!(f, "<"),
+            Tok::Gt => write!(f, ">"),
+            Tok::Le => write!(f, "<="),
+            Tok::Ge => write!(f, ">="),
+            Tok::AndAnd => write!(f, "&&"),
+            Tok::OrOr => write!(f, "||"),
+            Tok::Not => write!(f, "!"),
+            Tok::Amp => write!(f, "&"),
+            Tok::Pipe => write!(f, "|"),
+            Tok::Caret => write!(f, "^"),
+            Tok::Shl => write!(f, "<<"),
+            Tok::Shr => write!(f, ">>"),
+            Tok::PlusPlus => write!(f, "++"),
+            Tok::MinusMinus => write!(f, "--"),
+            Tok::Eof => write!(f, "<eof>"),
+        }
+    }
+}
+
+/// A token together with its source position.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub pos: Pos,
+}
+
+/// Lexer error.
+#[derive(Debug, thiserror::Error)]
+#[error("lex error at {pos}: {msg}")]
+pub struct LexError {
+    pub pos: Pos,
+    pub msg: String,
+}
+
+fn keyword(s: &str) -> Option<Tok> {
+    Some(match s {
+        "void" => Tok::KwVoid,
+        "float" => Tok::KwFloat,
+        "int" => Tok::KwInt,
+        "uint" | "unsigned" => Tok::KwUint,
+        "char" => Tok::KwChar,
+        "uchar" => Tok::KwUchar,
+        "short" => Tok::KwShort,
+        "ushort" => Tok::KwUshort,
+        "double" => Tok::KwDouble,
+        "bool" => Tok::KwBool,
+        "Image" => Tok::KwImage,
+        "if" => Tok::KwIf,
+        "else" => Tok::KwElse,
+        "for" => Tok::KwFor,
+        "while" => Tok::KwWhile,
+        "return" => Tok::KwReturn,
+        "const" => Tok::KwConst,
+        "true" => Tok::KwTrue,
+        "false" => Tok::KwFalse,
+        _ => return None,
+    })
+}
+
+struct Cursor<'a> {
+    src: &'a [u8],
+    i: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(src: &'a str) -> Self {
+        Cursor { src: src.as_bytes(), i: 0, line: 1, col: 1 }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.i).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.i + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        Some(c)
+    }
+
+    fn pos(&self) -> Pos {
+        Pos { line: self.line, col: self.col }
+    }
+}
+
+/// Tokenize ImageCL source into a spanned token stream (terminated by
+/// [`Tok::Eof`]). Comments (`//` and `/* */`) are skipped; `#pragma imcl`
+/// lines become [`Tok::Pragma`]; any other preprocessor line is an error
+/// (ImageCL has no preprocessor beyond its own directives).
+pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {
+    let mut cur = Cursor::new(src);
+    let mut out = Vec::new();
+    loop {
+        // Skip whitespace and comments.
+        loop {
+            match cur.peek() {
+                Some(c) if (c as char).is_whitespace() => {
+                    cur.bump();
+                }
+                Some(b'/') if cur.peek2() == Some(b'/') => {
+                    while let Some(c) = cur.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        cur.bump();
+                    }
+                }
+                Some(b'/') if cur.peek2() == Some(b'*') => {
+                    let start = cur.pos();
+                    cur.bump();
+                    cur.bump();
+                    loop {
+                        match (cur.peek(), cur.peek2()) {
+                            (Some(b'*'), Some(b'/')) => {
+                                cur.bump();
+                                cur.bump();
+                                break;
+                            }
+                            (Some(_), _) => {
+                                cur.bump();
+                            }
+                            (None, _) => {
+                                return Err(LexError {
+                                    pos: start,
+                                    msg: "unterminated block comment".into(),
+                                })
+                            }
+                        }
+                    }
+                }
+                _ => break,
+            }
+        }
+
+        let pos = cur.pos();
+        let Some(c) = cur.peek() else {
+            out.push(Spanned { tok: Tok::Eof, pos });
+            return Ok(out);
+        };
+
+        // Preprocessor / pragma line.
+        if c == b'#' {
+            let mut line = String::new();
+            while let Some(c) = cur.peek() {
+                if c == b'\n' {
+                    break;
+                }
+                line.push(c as char);
+                cur.bump();
+            }
+            let rest = line
+                .trim_start_matches('#')
+                .trim_start()
+                .strip_prefix("pragma")
+                .map(str::trim_start)
+                .and_then(|r| r.strip_prefix("imcl"))
+                .map(str::trim);
+            match rest {
+                Some(r) => out.push(Spanned { tok: Tok::Pragma(r.to_string()), pos }),
+                None => {
+                    return Err(LexError {
+                        pos,
+                        msg: format!("unsupported preprocessor line: {line}"),
+                    })
+                }
+            }
+            continue;
+        }
+
+        // Identifier / keyword.
+        if (c as char).is_ascii_alphabetic() || c == b'_' {
+            let mut s = String::new();
+            while let Some(c) = cur.peek() {
+                if (c as char).is_ascii_alphanumeric() || c == b'_' {
+                    s.push(c as char);
+                    cur.bump();
+                } else {
+                    break;
+                }
+            }
+            let tok = keyword(&s).unwrap_or(Tok::Ident(s));
+            out.push(Spanned { tok, pos });
+            continue;
+        }
+
+        // Numeric literal: int or float (decimal, optional exponent, f/F suffix).
+        if (c as char).is_ascii_digit()
+            || (c == b'.' && cur.peek2().map(|d| (d as char).is_ascii_digit()) == Some(true))
+        {
+            let mut s = String::new();
+            let mut is_float = false;
+            while let Some(c) = cur.peek() {
+                match c {
+                    b'0'..=b'9' => {
+                        s.push(c as char);
+                        cur.bump();
+                    }
+                    b'.' => {
+                        if is_float {
+                            break;
+                        }
+                        is_float = true;
+                        s.push('.');
+                        cur.bump();
+                    }
+                    b'e' | b'E' => {
+                        is_float = true;
+                        s.push('e');
+                        cur.bump();
+                        if let Some(sign @ (b'+' | b'-')) = cur.peek() {
+                            s.push(sign as char);
+                            cur.bump();
+                        }
+                    }
+                    b'f' | b'F' => {
+                        is_float = true;
+                        cur.bump(); // suffix, not part of the value
+                        break;
+                    }
+                    b'u' | b'U' | b'l' | b'L' => {
+                        cur.bump(); // integer suffixes are accepted and ignored
+                        break;
+                    }
+                    _ => break,
+                }
+            }
+            let tok = if is_float {
+                Tok::FloatLit(s.parse().map_err(|e| LexError {
+                    pos,
+                    msg: format!("bad float literal {s:?}: {e}"),
+                })?)
+            } else {
+                Tok::IntLit(s.parse().map_err(|e| LexError {
+                    pos,
+                    msg: format!("bad int literal {s:?}: {e}"),
+                })?)
+            };
+            out.push(Spanned { tok, pos });
+            continue;
+        }
+
+        // Operators & punctuation.
+        cur.bump();
+        let two = |cur: &mut Cursor, next: u8, yes: Tok, no: Tok| {
+            if cur.peek() == Some(next) {
+                cur.bump();
+                yes
+            } else {
+                no
+            }
+        };
+        let tok = match c {
+            b'(' => Tok::LParen,
+            b')' => Tok::RParen,
+            b'{' => Tok::LBrace,
+            b'}' => Tok::RBrace,
+            b'[' => Tok::LBracket,
+            b']' => Tok::RBracket,
+            b',' => Tok::Comma,
+            b';' => Tok::Semi,
+            b':' => Tok::Colon,
+            b'?' => Tok::Question,
+            b'+' => match cur.peek() {
+                Some(b'+') => {
+                    cur.bump();
+                    Tok::PlusPlus
+                }
+                Some(b'=') => {
+                    cur.bump();
+                    Tok::PlusAssign
+                }
+                _ => Tok::Plus,
+            },
+            b'-' => match cur.peek() {
+                Some(b'-') => {
+                    cur.bump();
+                    Tok::MinusMinus
+                }
+                Some(b'=') => {
+                    cur.bump();
+                    Tok::MinusAssign
+                }
+                _ => Tok::Minus,
+            },
+            b'*' => two(&mut cur, b'=', Tok::StarAssign, Tok::Star),
+            b'/' => two(&mut cur, b'=', Tok::SlashAssign, Tok::Slash),
+            b'%' => Tok::Percent,
+            b'=' => two(&mut cur, b'=', Tok::Eq, Tok::Assign),
+            b'!' => two(&mut cur, b'=', Tok::Ne, Tok::Not),
+            b'<' => match cur.peek() {
+                Some(b'=') => {
+                    cur.bump();
+                    Tok::Le
+                }
+                Some(b'<') => {
+                    cur.bump();
+                    Tok::Shl
+                }
+                _ => Tok::Lt,
+            },
+            b'>' => match cur.peek() {
+                Some(b'=') => {
+                    cur.bump();
+                    Tok::Ge
+                }
+                Some(b'>') => {
+                    cur.bump();
+                    Tok::Shr
+                }
+                _ => Tok::Gt,
+            },
+            b'&' => two(&mut cur, b'&', Tok::AndAnd, Tok::Amp),
+            b'|' => two(&mut cur, b'|', Tok::OrOr, Tok::Pipe),
+            b'^' => Tok::Caret,
+            _ => {
+                return Err(LexError {
+                    pos,
+                    msg: format!("unexpected character {:?}", c as char),
+                })
+            }
+        };
+        out.push(Spanned { tok, pos });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn lex_empty() {
+        assert_eq!(toks(""), vec![Tok::Eof]);
+        assert_eq!(toks("   \n\t "), vec![Tok::Eof]);
+    }
+
+    #[test]
+    fn lex_idents_and_keywords() {
+        assert_eq!(
+            toks("float x int _y Image"),
+            vec![
+                Tok::KwFloat,
+                Tok::Ident("x".into()),
+                Tok::KwInt,
+                Tok::Ident("_y".into()),
+                Tok::KwImage,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_numbers() {
+        assert_eq!(
+            toks("0 42 3.5 1e3 2.5e-2 9.0f 7u"),
+            vec![
+                Tok::IntLit(0),
+                Tok::IntLit(42),
+                Tok::FloatLit(3.5),
+                Tok::FloatLit(1e3),
+                Tok::FloatLit(2.5e-2),
+                Tok::FloatLit(9.0),
+                Tok::IntLit(7),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_float_leading_dot() {
+        assert_eq!(toks(".5"), vec![Tok::FloatLit(0.5), Tok::Eof]);
+    }
+
+    #[test]
+    fn lex_operators() {
+        assert_eq!(
+            toks("+ ++ += - -- -= * *= / /= % == != <= >= << >> && || ! & | ^ ? :"),
+            vec![
+                Tok::Plus,
+                Tok::PlusPlus,
+                Tok::PlusAssign,
+                Tok::Minus,
+                Tok::MinusMinus,
+                Tok::MinusAssign,
+                Tok::Star,
+                Tok::StarAssign,
+                Tok::Slash,
+                Tok::SlashAssign,
+                Tok::Percent,
+                Tok::Eq,
+                Tok::Ne,
+                Tok::Le,
+                Tok::Ge,
+                Tok::Shl,
+                Tok::Shr,
+                Tok::AndAnd,
+                Tok::OrOr,
+                Tok::Not,
+                Tok::Amp,
+                Tok::Pipe,
+                Tok::Caret,
+                Tok::Question,
+                Tok::Colon,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_comments() {
+        assert_eq!(
+            toks("a // comment\n b /* multi\n line */ c"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Ident("b".into()),
+                Tok::Ident("c".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lex_unterminated_comment_is_error() {
+        assert!(lex("/* oops").is_err());
+    }
+
+    #[test]
+    fn lex_pragma() {
+        assert_eq!(
+            toks("#pragma imcl grid(input)\nvoid"),
+            vec![Tok::Pragma("grid(input)".into()), Tok::KwVoid, Tok::Eof]
+        );
+    }
+
+    #[test]
+    fn lex_non_imcl_pragma_is_error() {
+        assert!(lex("#include <stdio.h>\n").is_err());
+        assert!(lex("#pragma omp parallel\n").is_err());
+    }
+
+    #[test]
+    fn lex_positions() {
+        let ts = lex("a\n  b").unwrap();
+        assert_eq!(ts[0].pos, Pos { line: 1, col: 1 });
+        assert_eq!(ts[1].pos, Pos { line: 2, col: 3 });
+    }
+
+    #[test]
+    fn lex_box_filter_listing1() {
+        // Listing 1 from the paper must lex cleanly.
+        let src = r#"
+#pragma imcl grid(input)
+void blur(Image<float> in, Image<float> out) {
+  float sum = 0.0;
+  for (int i = -1; i < 2; i++) {
+    for (int j = -1; j < 2; j++) {
+      sum += in[idx + i][idy + j];
+    }
+  }
+  out[idx][idy] = sum / 9.0;
+}
+"#;
+        let ts = lex(src).unwrap();
+        assert!(ts.len() > 50);
+        assert_eq!(ts.last().unwrap().tok, Tok::Eof);
+    }
+
+    #[test]
+    fn lex_unexpected_char() {
+        let e = lex("a @ b").unwrap_err();
+        assert!(e.to_string().contains("unexpected character"));
+    }
+}

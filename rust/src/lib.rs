@@ -1,0 +1,18 @@
+//! ImageCL: an image-processing DSL, source-to-source compiler and
+//! auto-tuner for performance portability on heterogeneous systems.
+//!
+//! Reproduction of Falch & Elster, "ImageCL: An Image Processing Language
+//! for Performance Portability on Heterogeneous Systems" (HPCS 2016),
+//! as a three-layer Rust + JAX + Pallas stack. See DESIGN.md.
+pub mod imagecl;
+pub mod analysis;
+pub mod transform;
+pub mod exec;
+pub mod devices;
+pub mod tuner;
+pub mod baselines;
+pub mod runtime;
+pub mod pipeline;
+pub mod report;
+pub mod bench_defs;
+pub mod testutil;

@@ -1,0 +1,289 @@
+//! The `imagecl` command-line tool: compiler driver, auto-tuner launcher,
+//! paper-experiment runners and pipeline executor.
+//!
+//! Argument parsing is hand-rolled (no clap in the offline crate set).
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use imagecl::analysis::KernelInfo;
+use imagecl::baselines::{self, Baseline, ALL_BASELINES};
+use imagecl::bench_defs::{self, ALL};
+use imagecl::devices::{self, ALL_DEVICES};
+use imagecl::imagecl::frontend;
+use imagecl::pipeline::{schedule, Pipeline, Port};
+use imagecl::report::{emit_report, render_config_table, render_fig6, Ms};
+use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use imagecl::transform::{
+    emit_fast_filter, emit_opencl, emit_standalone_host, lower, TuningConfig,
+};
+use imagecl::tuner::{self, MlSearchOpts, Strategy};
+
+const USAGE: &str = "\
+imagecl — ImageCL compiler, auto-tuner and benchmark runner
+
+USAGE:
+  imagecl compile <file.imcl> [--config CFG] [--emit opencl|host|fast]
+  imagecl tune <kernel> [--device DEV] [--grid N] [--strategy ml|random|exhaustive]
+  imagecl fig6 [--size N]            reproduce Figure 6 (slowdown vs baselines)
+  imagecl tables [--size N]          reproduce Tables 2-5 (tuned configurations)
+  imagecl pipeline [--size N]        run the Harris pipeline through PJRT
+  imagecl devices                    list simulated devices
+  imagecl kernels                    list built-in benchmark kernels
+
+CFG example: \"wg=64x4 px=4x1 map=interleaved lmem=in cmem=f unroll=1:0\"
+<kernel> is a built-in id (sepconv_row, conv2d, sobel, harris, ...) or a path.
+";
+
+/// Tiny flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut it = argv.iter();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_flag(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.flag(key) {
+            Some(v) => v.parse().map_err(|_| format!("bad --{key}: {v:?}")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn kernel_source(name_or_path: &str) -> Result<String, String> {
+    if let Some(k) = bench_defs::kernel_by_id(name_or_path) {
+        return Ok(k.source.to_string());
+    }
+    std::fs::read_to_string(name_or_path)
+        .map_err(|e| format!("cannot read {name_or_path:?}: {e}"))
+}
+
+fn run() -> Result<(), String> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "compile" => cmd_compile(&args),
+        "tune" => cmd_tune(&args),
+        "fig6" => cmd_fig6(&args),
+        "tables" => cmd_tables(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "devices" => {
+            println!("{:<10} {:>5} {:>6} {:>9} {:>9}", "device", "CUs", "SIMD", "GFLOP/s", "GB/s");
+            for d in ALL_DEVICES {
+                println!(
+                    "{:<10} {:>5} {:>6} {:>9.0} {:>9.0}",
+                    d.name, d.compute_units, d.simd_width, d.peak_gflops(), d.mem_bw_gbs
+                );
+            }
+            Ok(())
+        }
+        "kernels" => {
+            for b in &ALL {
+                for k in b.kernels {
+                    println!("{:<12} ({}, {}x{})", k.id, b.display, b.paper_size.0, b.paper_size.1);
+                }
+            }
+            Ok(())
+        }
+        "--help" | "-h" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
+    }
+}
+
+fn cmd_compile(args: &Args) -> Result<(), String> {
+    let file = args
+        .positional
+        .first()
+        .ok_or("compile needs a kernel name or file")?;
+    let src = kernel_source(file)?;
+    let cfg = match args.flag("config") {
+        Some(c) => TuningConfig::parse(c)?,
+        None => TuningConfig::default(),
+    };
+    let info = KernelInfo::analyze(frontend(&src).map_err(|e| e.to_string())?);
+    let plan = lower(&info, &cfg).map_err(|e| e.to_string())?;
+    match args.flag("emit").unwrap_or("opencl") {
+        "opencl" => print!("{}", emit_opencl(&plan)),
+        "host" => print!("{}", emit_standalone_host(&plan)),
+        "fast" => print!("{}", emit_fast_filter(&plan)),
+        other => return Err(format!("unknown --emit {other:?}")),
+    }
+    Ok(())
+}
+
+fn strategy_of(args: &Args) -> Result<Strategy, String> {
+    Ok(match args.flag("strategy").unwrap_or("ml") {
+        "ml" => Strategy::MlTwoPhase(MlSearchOpts::default()),
+        "random" => Strategy::Random { evals: 1700, seed: 42 },
+        "exhaustive" => Strategy::Exhaustive,
+        other => return Err(format!("unknown --strategy {other:?}")),
+    })
+}
+
+fn cmd_tune(args: &Args) -> Result<(), String> {
+    let kernel = args.positional.first().ok_or("tune needs a kernel")?;
+    let src = kernel_source(kernel)?;
+    let info = KernelInfo::analyze(frontend(&src).map_err(|e| e.to_string())?);
+    let n = args.usize_flag("grid", 2048)?;
+    let strategy = strategy_of(args)?;
+    let devs: Vec<&devices::DeviceSpec> = match args.flag("device") {
+        Some(d) => vec![devices::by_name(d).ok_or(format!("unknown device {d:?}"))?],
+        None => ALL_DEVICES.to_vec(),
+    };
+    for dev in devs {
+        let res = tuner::tune_on_simulator(&info, dev, (n, n), &strategy);
+        println!(
+            "{:<10} best {:<55}  est {}  ({} evals over a space of {})",
+            dev.name,
+            res.best.to_string(),
+            Ms::from(res.best_time),
+            res.evals,
+            res.space_size
+        );
+    }
+    Ok(())
+}
+
+fn cmd_fig6(args: &Args) -> Result<(), String> {
+    let n = args.usize_flag("size", 1024)?;
+    let mut full = String::new();
+    for bench in &ALL {
+        let mut series: Vec<(&str, Vec<f64>)> =
+            ALL_BASELINES.iter().map(|b| (b.name(), Vec::new())).collect();
+        for dev in ALL_DEVICES {
+            let ic = baselines::imagecl_time(bench, dev, n);
+            for (i, b) in ALL_BASELINES.iter().enumerate() {
+                // Paper: "we only compare against OpenCV for the Harris
+                // corner detection" (§6).
+                let v = if bench.id == "harris" && *b != Baseline::OpenCv {
+                    f64::NAN
+                } else {
+                    baselines::baseline_time(*b, bench, dev, n) / ic
+                };
+                series[i].1.push(v);
+            }
+        }
+        let names: Vec<&str> = ALL_DEVICES.iter().map(|d| d.name).collect();
+        full.push_str(&render_fig6(
+            &format!("Figure 6 — {} ({}x{})", bench.display, n, n),
+            &names,
+            &series,
+        ));
+        full.push('\n');
+    }
+    emit_report("fig6.txt", &full);
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<(), String> {
+    let n = args.usize_flag("size", 1024)?;
+    let strategy = baselines::imagecl_strategy();
+    let mut full = String::new();
+    let tables: [(&str, &[&str]); 4] = [
+        ("Table 2: separable convolution (row R / column C)", &["sepconv_row", "sepconv_col"]),
+        ("Table 3: non-separable convolution", &["conv2d"]),
+        ("Table 4: Sobel kernel of Harris", &["sobel"]),
+        ("Table 5: Harris kernel", &["harris"]),
+    ];
+    for (title, kernels) in tables {
+        let info = KernelInfo::analyze(
+            frontend(bench_defs::kernel_by_id(kernels[0]).unwrap().source)
+                .map_err(|e| e.to_string())?,
+        );
+        let mut columns = Vec::new();
+        for dev in ALL_DEVICES {
+            for kid in kernels {
+                let kinfo = KernelInfo::analyze(
+                    frontend(bench_defs::kernel_by_id(kid).unwrap().source)
+                        .map_err(|e| e.to_string())?,
+                );
+                let res = tuner::tune_on_simulator(&kinfo, dev, (n, n), &strategy);
+                let label = if kernels.len() > 1 {
+                    format!("{} {}", dev.name, bench_defs::kernel_by_id(kid).unwrap().table_name)
+                } else {
+                    dev.name.to_string()
+                };
+                columns.push((label, res.best));
+            }
+        }
+        full.push_str(&render_config_table(title, &info, &columns));
+        full.push('\n');
+    }
+    emit_report("tables.txt", &full);
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<(), String> {
+    let n = args.usize_flag("size", 512)?;
+    let mut rt = XlaRuntime::new(&default_artifact_dir()).map_err(|e| e.to_string())?;
+    let img = bench_defs::synth_image(imagecl::imagecl::ScalarType::F32, n, n, 42);
+    let x = Tensor::new(n, n, img.buf.data.iter().map(|&v| v as f32).collect());
+
+    let mut p = Pipeline::new();
+    let src = p.source("img", x);
+    let sob = p.filter("sobel", &[p.port(src)]);
+    let har = p.filter(
+        "harris",
+        &[Port { node: sob, port: 0 }, Port { node: sob, port: 1 }],
+    );
+    p.output(p.port(har));
+
+    let t0 = std::time::Instant::now();
+    let outs = p.run(&mut rt, n).map_err(|e| format!("{e:#}"))?;
+    let dt = t0.elapsed();
+    println!(
+        "harris pipeline {n}x{n}: {} (out[0] checksum {:.3})",
+        Ms::from(dt),
+        outs[0].data.iter().map(|&v| v as f64).sum::<f64>(),
+    );
+    let sched = schedule(&p, &ALL_DEVICES, n, &TuningConfig::default());
+    println!("simulated heterogeneous schedule (makespan {}):", Ms::from(sched.makespan_s));
+    for pl in &sched.placements {
+        println!(
+            "  {:<8} -> {:<9} exec {}  ready {}",
+            pl.filter,
+            pl.device,
+            Ms::from(pl.est_exec_s),
+            Ms::from(pl.est_ready_s)
+        );
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Filter-graph pipelines (the FAST substrate, paper §2.2).
+//!
+//! FAST lets users connect pre-implemented filters into an image
+//! processing pipeline whose filters can be scheduled on any device of a
+//! heterogeneous system. This module provides that substrate: a DAG of
+//! filters over 2-D tensors, executed for real through the XLA runtime
+//! artifacts (CPU), with heterogeneous device *scheduling* handled by
+//! [`super::scheduler`] against the device models (DESIGN.md §2).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Tensor, XlaRuntime};
+
+/// Node id in the pipeline graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+/// Reference to one output port of a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Port {
+    pub node: NodeId,
+    pub port: usize,
+}
+
+/// What a node does.
+#[derive(Debug, Clone)]
+pub enum FilterKind {
+    /// A constant input (image or filter-tap array).
+    Source(Tensor),
+    /// An AOT benchmark graph, resolved to an artifact by (graph, size,
+    /// variant) at run time.
+    Artifact {
+        graph: String,
+        /// Kernel-variant key; `None` = first available.
+        variant: Option<String>,
+    },
+}
+
+/// One pipeline node.
+#[derive(Debug, Clone)]
+pub struct Filter {
+    pub name: String,
+    pub kind: FilterKind,
+    pub inputs: Vec<Port>,
+}
+
+/// A FAST-style filter pipeline.
+#[derive(Debug, Clone, Default)]
+pub struct Pipeline {
+    pub filters: Vec<Filter>,
+    pub outputs: Vec<Port>,
+}
+
+impl Pipeline {
+    pub fn new() -> Pipeline {
+        Pipeline::default()
+    }
+
+    /// Add a constant source (input image / filter taps).
+    pub fn source(&mut self, name: &str, t: Tensor) -> NodeId {
+        self.filters.push(Filter {
+            name: name.to_string(),
+            kind: FilterKind::Source(t),
+            inputs: vec![],
+        });
+        NodeId(self.filters.len() - 1)
+    }
+
+    /// Add an artifact-backed filter consuming the given ports.
+    pub fn filter(&mut self, graph: &str, inputs: &[Port]) -> NodeId {
+        self.filters.push(Filter {
+            name: graph.to_string(),
+            kind: FilterKind::Artifact { graph: graph.to_string(), variant: None },
+            inputs: inputs.to_vec(),
+        });
+        NodeId(self.filters.len() - 1)
+    }
+
+    /// Add a filter pinned to a specific kernel variant.
+    pub fn filter_variant(&mut self, graph: &str, variant: &str, inputs: &[Port]) -> NodeId {
+        self.filters.push(Filter {
+            name: format!("{graph}[{variant}]"),
+            kind: FilterKind::Artifact {
+                graph: graph.to_string(),
+                variant: Some(variant.to_string()),
+            },
+            inputs: inputs.to_vec(),
+        });
+        NodeId(self.filters.len() - 1)
+    }
+
+    /// Mark a port as a pipeline output.
+    pub fn output(&mut self, p: Port) {
+        self.outputs.push(p);
+    }
+
+    /// Shorthand for port 0 of a node.
+    pub fn port(&self, n: NodeId) -> Port {
+        Port { node: n, port: 0 }
+    }
+
+    /// Topological order (filters are appended after their inputs by
+    /// construction; validate anyway).
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        for (i, f) in self.filters.iter().enumerate() {
+            for p in &f.inputs {
+                if p.node.0 >= i {
+                    bail!("filter {} consumes a later node — not a DAG", f.name);
+                }
+            }
+        }
+        Ok((0..self.filters.len()).map(NodeId).collect())
+    }
+
+    /// Execute the pipeline through the XLA runtime at grid size `n`
+    /// (artifact inputs must exist in the manifest at this size).
+    pub fn run(&self, rt: &mut XlaRuntime, n: usize) -> Result<Vec<Tensor>> {
+        let order = self.topo_order()?;
+        let mut values: BTreeMap<usize, Vec<Tensor>> = BTreeMap::new();
+        for id in order {
+            let f = &self.filters[id.0];
+            let outs = match &f.kind {
+                FilterKind::Source(t) => vec![t.clone()],
+                FilterKind::Artifact { graph, variant } => {
+                    let art_id = {
+                        let arts = rt.manifest().variants_of(graph, n);
+                        let art = match variant {
+                            Some(v) => arts
+                                .iter()
+                                .find(|a| a.variant == *v)
+                                .with_context(|| {
+                                    format!("no artifact for {graph}@{n} variant {v}")
+                                })?,
+                            None => arts.first().with_context(|| {
+                                format!("no artifact for {graph}@{n} — run `make artifacts`")
+                            })?,
+                        };
+                        art.id.clone()
+                    };
+                    let mut ins: Vec<&Tensor> = Vec::new();
+                    for p in &f.inputs {
+                        let v = values
+                            .get(&p.node.0)
+                            .and_then(|outs| outs.get(p.port))
+                            .with_context(|| {
+                                format!("filter {} input {:?} missing", f.name, p)
+                            })?;
+                        ins.push(v);
+                    }
+                    rt.execute(&art_id, &ins)
+                        .with_context(|| format!("running filter {}", f.name))?
+                }
+            };
+            values.insert(id.0, outs);
+        }
+        let mut result = Vec::new();
+        for p in &self.outputs {
+            result.push(
+                values
+                    .get(&p.node.0)
+                    .and_then(|o| o.get(p.port))
+                    .context("missing pipeline output")?
+                    .clone(),
+            );
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dag_validation() {
+        let mut p = Pipeline::new();
+        let s = p.source("img", Tensor::zeros(4, 4));
+        let f = p.filter("sobel", &[p.port(s)]);
+        p.output(Port { node: f, port: 0 });
+        assert!(p.topo_order().is_ok());
+
+        // Forge a cycle.
+        p.filters[s.0].inputs.push(Port { node: f, port: 0 });
+        assert!(p.topo_order().is_err());
+    }
+
+    #[test]
+    fn builder_shapes() {
+        let mut p = Pipeline::new();
+        let img = p.source("img", Tensor::zeros(8, 8));
+        let sob = p.filter("sobel", &[p.port(img)]);
+        let har = p.filter(
+            "harris",
+            &[Port { node: sob, port: 0 }, Port { node: sob, port: 1 }],
+        );
+        p.output(p.port(har));
+        assert_eq!(p.filters.len(), 3);
+        assert_eq!(p.outputs.len(), 1);
+        assert_eq!(p.filters[har.0].inputs.len(), 2);
+    }
+}

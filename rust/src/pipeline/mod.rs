@@ -1,0 +1,9 @@
+//! FAST-style heterogeneous pipelines (paper §2.2): a DAG of image
+//! filters, executable through the XLA runtime and schedulable across
+//! the (simulated) devices.
+
+pub mod graph;
+pub mod scheduler;
+
+pub use graph::{Filter, FilterKind, NodeId, Pipeline, Port};
+pub use scheduler::{filter_time, schedule, transfer_time, Placement, Schedule};

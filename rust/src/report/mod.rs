@@ -1,0 +1,23 @@
+//! Reporting: the timing rig used by the benches (criterion is not
+//! available offline) and renderers that print the paper's tables and
+//! figure series.
+
+pub mod rig;
+pub mod tables;
+
+pub use rig::{time_best_of, Ms};
+pub use tables::{render_config_table, render_fig6};
+
+use std::path::PathBuf;
+
+/// Write a report file under `target/bench_reports/` (best effort) and
+/// echo it to stdout.
+pub fn emit_report(name: &str, content: &str) {
+    println!("{content}");
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("bench_reports");
+    if std::fs::create_dir_all(&dir).is_ok() {
+        let _ = std::fs::write(dir.join(name), content);
+    }
+}

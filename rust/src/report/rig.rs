@@ -1,0 +1,73 @@
+//! Minimal benchmarking rig (offline substitute for criterion): warmup +
+//! best-of-N wall-clock timing with a human-readable duration wrapper.
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// Milliseconds with 3 decimals for report rows.
+#[derive(Debug, Clone, Copy, PartialEq, PartialOrd)]
+pub struct Ms(pub f64);
+
+impl From<Duration> for Ms {
+    fn from(d: Duration) -> Ms {
+        Ms(d.as_secs_f64() * 1e3)
+    }
+}
+
+impl From<f64> for Ms {
+    /// From seconds.
+    fn from(s: f64) -> Ms {
+        Ms(s * 1e3)
+    }
+}
+
+impl fmt::Display for Ms {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.0 >= 100.0 {
+            write!(f, "{:.1} ms", self.0)
+        } else if self.0 >= 1.0 {
+            write!(f, "{:.3} ms", self.0)
+        } else {
+            write!(f, "{:.1} µs", self.0 * 1e3)
+        }
+    }
+}
+
+/// Run `f` `warmup` times untimed, then `reps` times timed; return the
+/// best (minimum) duration — the standard low-noise point estimate.
+pub fn time_best_of(warmup: usize, reps: usize, mut f: impl FnMut()) -> Duration {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut best = Duration::MAX;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed());
+    }
+    best
+}
+
+/// Throughput helper: items per second given a duration.
+pub fn per_second(items: usize, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_of_runs_expected_times() {
+        let mut n = 0;
+        let _ = time_best_of(2, 5, || n += 1);
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn ms_formatting() {
+        assert_eq!(Ms(123.456).to_string(), "123.5 ms");
+        assert_eq!(Ms(1.5).to_string(), "1.500 ms");
+        assert_eq!(Ms(0.0123).to_string(), "12.3 µs");
+    }
+}

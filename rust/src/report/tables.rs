@@ -1,0 +1,204 @@
+//! Renderers for the paper's result tables (Tables 2–5) and the
+//! Figure 6 slowdown series, in the paper's own row/column layout.
+
+use std::fmt::Write as _;
+
+use crate::analysis::KernelInfo;
+use crate::transform::TuningConfig;
+
+/// Render one "configurations found by the auto-tuner" table (paper
+/// Tables 2–5): one column per (device, kernel) pair.
+///
+/// `columns`: (header, tuned config); `info` supplies the array and loop
+/// inventory so rows match the paper's (image/local per array, unroll per
+/// loop).
+pub fn render_config_table(
+    title: &str,
+    info: &KernelInfo,
+    columns: &[(String, TuningConfig)],
+) -> String {
+    let mut arrays: Vec<String> = info
+        .prog
+        .kernel
+        .params
+        .iter()
+        .filter(|p| p.ty.is_buffer())
+        .map(|p| p.name.clone())
+        .collect();
+    arrays.sort();
+    let img_arrays: Vec<&String> = arrays
+        .iter()
+        .filter(|a| info.image_mem_eligible(a))
+        .collect();
+    let loc_arrays: Vec<&String> = arrays
+        .iter()
+        .filter(|a| info.local_mem_eligible(a))
+        .collect();
+    let const_arrays: Vec<&String> = arrays
+        .iter()
+        .filter(|a| info.constant_mem_eligible(a, 64 << 10))
+        .collect();
+    let loops = info.unrollable_loops();
+
+    let mut rows: Vec<(String, Vec<String>)> = Vec::new();
+    let get = |f: &dyn Fn(&TuningConfig) -> String| -> Vec<String> {
+        columns.iter().map(|(_, c)| f(c)).collect()
+    };
+    rows.push(("Px/thread X".into(), get(&|c| c.coarsen[0].to_string())));
+    rows.push(("Px/thread Y".into(), get(&|c| c.coarsen[1].to_string())));
+    rows.push(("Work-group X".into(), get(&|c| c.wg[0].to_string())));
+    rows.push(("Work-group Y".into(), get(&|c| c.wg[1].to_string())));
+    rows.push((
+        "Interleaved".into(),
+        get(&|c| (c.interleaved as u8).to_string()),
+    ));
+    for a in &img_arrays {
+        rows.push((
+            format!("Image mem {a}"),
+            get(&|c| (c.uses_image_mem(a) as u8).to_string()),
+        ));
+    }
+    for a in &loc_arrays {
+        rows.push((
+            format!("Local mem {a}"),
+            get(&|c| (c.uses_local_mem(a) as u8).to_string()),
+        ));
+    }
+    for a in &const_arrays {
+        rows.push((
+            format!("Constant mem {a}"),
+            get(&|c| (c.uses_constant_mem(a) as u8).to_string()),
+        ));
+    }
+    for l in &loops {
+        let id = l.id;
+        rows.push((
+            format!("Unroll loop {id}"),
+            get(&|c| ((c.unroll_factor(id) != 1) as u8).to_string()),
+        ));
+    }
+
+    let label_w = rows
+        .iter()
+        .map(|(l, _)| l.len())
+        .chain(["Device".len()].into_iter())
+        .max()
+        .unwrap();
+    let col_ws: Vec<usize> = columns
+        .iter()
+        .enumerate()
+        .map(|(i, (h, _))| {
+            rows.iter()
+                .map(|(_, vals)| vals[i].len())
+                .chain([h.len()].into_iter())
+                .max()
+                .unwrap()
+        })
+        .collect();
+
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = write!(out, "{:label_w$}", "Device");
+    for ((h, _), w) in columns.iter().zip(&col_ws) {
+        let _ = write!(out, " | {h:>w$}");
+    }
+    let _ = writeln!(out);
+    let total = label_w + col_ws.iter().map(|w| w + 3).sum::<usize>();
+    let _ = writeln!(out, "{}", "-".repeat(total));
+    for (label, vals) in rows {
+        let _ = write!(out, "{label:label_w$}");
+        for (v, w) in vals.iter().zip(&col_ws) {
+            let _ = write!(out, " | {v:>w$}");
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+/// Render one Figure 6 panel: slowdown of each alternative vs ImageCL
+/// per device (values > 1 mean ImageCL is faster).
+pub fn render_fig6(
+    title: &str,
+    devices: &[&str],
+    series: &[(&str, Vec<f64>)],
+) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+    let _ = writeln!(out, "(slowdown vs ImageCL; >1 = ImageCL faster)");
+    let label_w = series
+        .iter()
+        .map(|(n, _)| n.len())
+        .chain(["ImageCL".len()].into_iter())
+        .max()
+        .unwrap();
+    let _ = write!(out, "{:label_w$}", "");
+    for d in devices {
+        let _ = write!(out, " | {d:>9}");
+    }
+    let _ = writeln!(out);
+    let _ = writeln!(out, "{}", "-".repeat(label_w + devices.len() * 12));
+    let _ = write!(out, "{:label_w$}", "ImageCL");
+    for _ in devices {
+        let _ = write!(out, " | {:>9}", "1.00x");
+    }
+    let _ = writeln!(out);
+    for (name, vals) in series {
+        let _ = write!(out, "{name:label_w$}");
+        for v in vals {
+            let _ = write!(out, " | {:>8.2}x", v);
+        }
+        let _ = writeln!(out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::SEPCONV_ROW;
+    use crate::imagecl::frontend;
+
+    #[test]
+    fn config_table_rows_match_paper_layout() {
+        let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+        let cfg = TuningConfig::parse(
+            "wg=64x4 px=4x1 map=interleaved lmem=in cmem=f unroll=1:0",
+        )
+        .unwrap();
+        let t = render_config_table(
+            "Table 2: sep-conv row",
+            &info,
+            &[("AMD 7970".to_string(), cfg)],
+        );
+        assert!(t.contains("Px/thread X"), "{t}");
+        assert!(t.contains("Work-group Y"), "{t}");
+        assert!(t.contains("Interleaved"), "{t}");
+        assert!(t.contains("Image mem in"), "{t}");
+        assert!(t.contains("Local mem in"), "{t}");
+        assert!(t.contains("Constant mem f"), "{t}");
+        assert!(t.contains("Unroll loop 1"), "{t}");
+        // Values line up: px X = 4, wg X = 64, interleaved 1.
+        for (row, val) in [
+            ("Px/thread X", "4"),
+            ("Work-group X", "64"),
+            ("Interleaved", "1"),
+            ("Local mem in", "1"),
+            ("Image mem in", "0"),
+        ] {
+            let line = t.lines().find(|l| l.starts_with(row)).unwrap();
+            assert!(line.ends_with(val), "{line}");
+        }
+    }
+
+    #[test]
+    fn fig6_render() {
+        let s = render_fig6(
+            "Separable convolution",
+            &["AMD 7970", "K40"],
+            &[("Halide", vec![1.5, 2.0]), ("OpenCV", vec![0.9, 1.2])],
+        );
+        assert!(s.contains("ImageCL"));
+        assert!(s.contains("1.50x"));
+        assert!(s.contains("0.90x"));
+    }
+}

@@ -1,0 +1,223 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile them once on the
+//! CPU client, and execute them from the rust request path.
+//!
+//! This is the Layer-3 ↔ XLA bridge (see /opt/xla-example/load_hlo for the
+//! reference wiring). HLO *text* is the interchange format — serialized
+//! jax≥0.5 protos are rejected by xla_extension 0.5.1.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+
+/// A 2-D tensor travelling through the runtime (f32 host representation;
+/// uint8 artifacts convert at the boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Tensor {
+        assert_eq!(rows * cols, data.len());
+        Tensor { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Tensor {
+        Tensor { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Tensor {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(c, r));
+            }
+        }
+        Tensor { rows, cols, data }
+    }
+
+    pub fn get(&self, x: usize, y: usize) -> f32 {
+        self.data[y * self.cols + x]
+    }
+}
+
+/// The XLA runtime: one PJRT CPU client plus a cache of compiled
+/// executables keyed by artifact id.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client and read the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifact_dir)?;
+        Ok(XlaRuntime { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) an artifact.
+    pub fn prepare(&mut self, id: &str) -> Result<()> {
+        if self.cache.contains_key(id) {
+            return Ok(());
+        }
+        let art = self.manifest.get(id)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            art.path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", art.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {id}"))?;
+        self.cache.insert(id.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact on host tensors. Inputs are converted to the
+    /// artifact's declared dtypes; outputs come back as f32 tensors.
+    pub fn execute(&mut self, id: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+        self.prepare(id)?;
+        let art = self.manifest.get(id)?.clone();
+        let lits = make_literals(&art, inputs)?;
+        let exe = self.cache.get(id).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {id}"))?[0][0]
+            .to_literal_sync()?;
+        read_outputs(result)
+    }
+
+    /// Execute and time an artifact: returns (outputs, seconds) using the
+    /// best of `reps` runs after one warmup (the auto-tuner's measurement
+    /// primitive on the real-CPU path).
+    pub fn time(
+        &mut self,
+        id: &str,
+        inputs: &[&Tensor],
+        reps: usize,
+    ) -> Result<(Vec<Tensor>, f64)> {
+        self.prepare(id)?;
+        let art = self.manifest.get(id)?.clone();
+        let lits = make_literals(&art, inputs)?;
+        let exe = self.cache.get(id).unwrap();
+        // Warmup.
+        let _ = exe.execute::<xla::Literal>(&lits)?;
+        let mut best = f64::INFINITY;
+        let mut last = None;
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            let r = exe.execute::<xla::Literal>(&lits)?;
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < best {
+                best = dt;
+            }
+            last = Some(r);
+        }
+        let result = last.unwrap()[0][0].to_literal_sync()?;
+        Ok((read_outputs(result)?, best))
+    }
+}
+
+fn make_literals(art: &Artifact, inputs: &[&Tensor]) -> Result<Vec<xla::Literal>> {
+    if inputs.len() != art.args.len() {
+        bail!(
+            "artifact {} takes {} args, got {}",
+            art.id,
+            art.args.len(),
+            inputs.len()
+        );
+    }
+    let mut lits = Vec::new();
+    for (sig, t) in art.args.iter().zip(inputs) {
+        if sig.len() != t.data.len() {
+            bail!(
+                "artifact {} arg size mismatch: manifest {}x{}, tensor {}x{}",
+                art.id,
+                sig.rows,
+                sig.cols,
+                t.rows,
+                t.cols
+            );
+        }
+        let lit = match sig.dtype.as_str() {
+            "float32" => {
+                let l = xla::Literal::vec1(&t.data);
+                if sig.cols > 1 || t.cols > 1 {
+                    l.reshape(&[sig.rows as i64, sig.cols as i64])?
+                } else {
+                    l.reshape(&[sig.rows as i64])?
+                }
+            }
+            "uint8" => {
+                let bytes: Vec<u8> = t.data.iter().map(|&v| v as u8).collect();
+                let dims: &[usize] = if sig.cols > 1 {
+                    &[sig.rows, sig.cols]
+                } else {
+                    &[sig.rows]
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::U8,
+                    dims,
+                    &bytes,
+                )?
+            }
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        };
+        lits.push(lit);
+    }
+    Ok(lits)
+}
+
+fn read_outputs(result: xla::Literal) -> Result<Vec<Tensor>> {
+    // aot.py lowers with return_tuple=True: result is always a tuple.
+    let parts = result.to_tuple()?;
+    let mut out = Vec::new();
+    for lit in parts {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let (rows, cols) = match dims.as_slice() {
+            [r, c] => (*r, *c),
+            [n] => (*n, 1),
+            [] => (1, 1),
+            other => bail!("unsupported output rank {other:?}"),
+        };
+        let data: Vec<f32> = match lit.ty()? {
+            xla::ElementType::F32 => lit.to_vec::<f32>()?,
+            xla::ElementType::U8 => {
+                lit.to_vec::<u8>()?.into_iter().map(|v| v as f32).collect()
+            }
+            other => bail!("unsupported output dtype {other:?}"),
+        };
+        out.push(Tensor::new(rows, cols, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_from_fn_layout() {
+        let t = Tensor::from_fn(2, 3, |x, y| (y * 10 + x) as f32);
+        assert_eq!(t.data, vec![0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        assert_eq!(t.get(2, 1), 12.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Artifact manifest parsing.
+//!
+//! `make artifacts` (the Python build path) writes `artifacts/manifest.tsv`
+//! describing every AOT-compiled HLO module: which benchmark graph it
+//! implements, the grid size, the kernel-variant key, and the argument
+//! signature. The rust runtime loads modules by artifact id — Python is
+//! never on the request path.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Shape + dtype of one argument, e.g. `512x512:float32`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArgSig {
+    pub rows: usize,
+    pub cols: usize,
+    pub dtype: String,
+}
+
+impl ArgSig {
+    fn parse(s: &str) -> Result<ArgSig> {
+        let (shape, dtype) = s
+            .split_once(':')
+            .with_context(|| format!("bad arg signature {s:?}"))?;
+        let (r, c) = shape
+            .split_once('x')
+            .with_context(|| format!("bad arg shape {shape:?}"))?;
+        Ok(ArgSig {
+            rows: r.parse().context("rows")?,
+            cols: c.parse().context("cols")?,
+            dtype: dtype.to_string(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Artifact {
+    pub id: String,
+    pub graph: String,
+    pub grid_n: usize,
+    /// Kernel-variant key (`bh=8 unroll=1 stage=1`).
+    pub variant: String,
+    pub args: Vec<ArgSig>,
+    pub path: PathBuf,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut artifacts = BTreeMap::new();
+        for (lno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 6 {
+                bail!("manifest line {}: expected 6 columns, got {}", lno + 1, cols.len());
+            }
+            let args = cols[4]
+                .split(';')
+                .filter(|a| !a.is_empty())
+                .map(ArgSig::parse)
+                .collect::<Result<Vec<_>>>()?;
+            let a = Artifact {
+                id: cols[0].to_string(),
+                graph: cols[1].to_string(),
+                grid_n: cols[2].parse().context("grid_n")?,
+                variant: cols[3].to_string(),
+                args,
+                path: dir.join(cols[5]),
+            };
+            if artifacts.insert(a.id.clone(), a).is_some() {
+                bail!("duplicate artifact id on line {}", lno + 1);
+            }
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, id: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(id)
+            .with_context(|| format!("unknown artifact {id:?}"))
+    }
+
+    /// All artifacts of one graph at one grid size.
+    pub fn variants_of(&self, graph: &str, grid_n: usize) -> Vec<&Artifact> {
+        self.artifacts
+            .values()
+            .filter(|a| a.graph == graph && a.grid_n == grid_n)
+            .collect()
+    }
+
+    /// Grid sizes available for a graph.
+    pub fn sizes_of(&self, graph: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.graph == graph)
+            .map(|a| a.grid_n)
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# artifact_id\tgraph\tgrid_n\tvariant\targs\tfile
+conv2d_32_bh8u1s1\tconv2d\t32\tbh=8 unroll=1 stage=1\t32x32:uint8;25x1:float32\tconv2d_32_bh8u1s1.hlo.txt
+sobel_32_bh8u1s1\tsobel\t32\tbh=8 unroll=1 stage=1\t32x32:float32\tsobel_32_bh8u1s1.hlo.txt
+";
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("conv2d_32_bh8u1s1").unwrap();
+        assert_eq!(a.graph, "conv2d");
+        assert_eq!(a.grid_n, 32);
+        assert_eq!(a.args.len(), 2);
+        assert_eq!(a.args[0], ArgSig { rows: 32, cols: 32, dtype: "uint8".into() });
+        assert_eq!(a.args[1].len(), 25);
+        assert_eq!(a.path, Path::new("/tmp/a/conv2d_32_bh8u1s1.hlo.txt"));
+    }
+
+    #[test]
+    fn queries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/x")).unwrap();
+        assert_eq!(m.variants_of("conv2d", 32).len(), 1);
+        assert_eq!(m.variants_of("conv2d", 64).len(), 0);
+        assert_eq!(m.sizes_of("sobel"), vec![32]);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn bad_lines_rejected() {
+        assert!(Manifest::parse("a\tb\tc\n", Path::new("/x")).is_err());
+        let dup = format!("{SAMPLE}{}", SAMPLE.lines().nth(1).unwrap());
+        assert!(Manifest::parse(&dup, Path::new("/x")).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Runtime layer: PJRT client + artifact manifest (the L3↔XLA bridge).
+//!
+//! Python AOT-compiles the benchmark graphs once (`make artifacts`); this
+//! module loads the HLO text, compiles per-device executables and runs
+//! them from the rust request path.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{Tensor, XlaRuntime};
+pub use manifest::{ArgSig, Artifact, Manifest};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `<repo>/artifacts` (override with
+/// `IMAGECL_ARTIFACTS`).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("IMAGECL_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

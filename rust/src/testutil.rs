@@ -1,0 +1,106 @@
+//! Test utilities: a tiny deterministic PRNG and property-test driver.
+//!
+//! `proptest` is not available in this offline environment, so invariant
+//! tests use this seeded xorshift generator: every failure is reproducible
+//! from the printed seed, and each property runs over a fixed number of
+//! random cases.
+
+/// xorshift64* — deterministic, seedable, good enough for test-case
+/// generation (NOT cryptographic).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + (self.next_u64() % ((hi - lo + 1) as u64)) as i64
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    pub fn flip(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+}
+
+/// Run a property over `cases` seeded cases; panics include the seed so a
+/// failure reproduces with `check_with_seed(seed, ..)`.
+pub fn check(cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64.wrapping_mul(case as u64 + 1);
+        let mut rng = Rng::new(seed);
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed on case {case} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case.
+pub fn check_with_seed(seed: u64, mut prop: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+            let v = r.range(-3, 3);
+            assert!((-3..=3).contains(&v));
+            let u = r.unit();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check(25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+}

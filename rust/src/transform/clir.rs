@@ -1,0 +1,171 @@
+//! CLIR — the lowered, OpenCL-shaped kernel plan.
+//!
+//! A [`KernelPlan`] is one *candidate implementation*: the ImageCL kernel
+//! after applying a concrete [`super::TuningConfig`]. It is consumed by
+//! two backends that must agree on semantics:
+//!
+//! * [`crate::transform::codegen`] renders it to OpenCL C text (the
+//!   paper's actual output), and
+//! * [`crate::exec`] executes it directly, emulating the OpenCL NDRange
+//!   model, which is how we *prove* every transformation correct on this
+//!   GPU-less testbed.
+//!
+//! Statements reuse the AST language with reserved identifiers for the
+//! OpenCL work-item builtins:
+//!
+//! | ident        | OpenCL                |
+//! |--------------|-----------------------|
+//! | `__gid_x/y`  | `get_global_id(0/1)`  |
+//! | `__lid_x/y`  | `get_local_id(0/1)`   |
+//! | `__grp_x/y`  | `get_group_id(0/1)`   |
+//! | `__gdim_x/y` | `get_global_size(0/1)`|
+//!
+//! Texture accesses are the intrinsic calls `__read_tex(img, x, y)` and
+//! `__write_tex(img, x, y, v)`.
+
+use crate::analysis::Access;
+use crate::imagecl::{GridSpec, ScalarType, Stmt};
+
+pub use super::config::MemSpace;
+use super::config::TuningConfig;
+
+/// Work-item builtin identifiers.
+pub const GID_X: &str = "__gid_x";
+pub const GID_Y: &str = "__gid_y";
+pub const LID_X: &str = "__lid_x";
+pub const LID_Y: &str = "__lid_y";
+pub const GRP_X: &str = "__grp_x";
+pub const GRP_Y: &str = "__grp_y";
+pub const GDIM_X: &str = "__gdim_x";
+pub const GDIM_Y: &str = "__gdim_y";
+
+/// Grid-size scalar parameters added to every plan.
+pub const GRID_W: &str = "__gw";
+pub const GRID_H: &str = "__gh";
+
+/// Texture intrinsics.
+pub const READ_TEX: &str = "__read_tex";
+pub const WRITE_TEX: &str = "__write_tex";
+
+/// A buffer parameter of the lowered kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufferParam {
+    pub name: String,
+    pub elem: ScalarType,
+    pub space: MemSpace,
+    pub access: Access,
+    /// `Some(2)` if the source parameter was an `Image` (has w/h scalars).
+    pub image_dims: Option<u8>,
+}
+
+/// A `__local` staging array (compile-time size — it depends only on the
+/// work-group shape, coarsening and stencil, all fixed per config).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LocalArray {
+    pub name: String,
+    pub elem: ScalarType,
+    pub len: usize,
+    /// Staging-tile width (row pitch of the local array).
+    pub tile_w: usize,
+    pub tile_h: usize,
+    /// The global image this array stages.
+    pub stages: String,
+}
+
+/// One candidate implementation of a kernel.
+#[derive(Debug, Clone)]
+pub struct KernelPlan {
+    pub name: String,
+    pub config: TuningConfig,
+    pub grid: GridSpec,
+    pub buffers: Vec<BufferParam>,
+    /// Scalar parameters, in ABI order: per-image `{name}_w`,`{name}_h`;
+    /// per-array `{name}_n`; user scalars; `__gw`,`__gh`.
+    pub scalars: Vec<(String, ScalarType)>,
+    pub locals: Vec<LocalArray>,
+    /// Barrier-separated phases. Executing phase *k* for every work-item
+    /// of a group before phase *k+1* is exactly OpenCL barrier semantics
+    /// for the structured code we generate.
+    pub phases: Vec<Vec<Stmt>>,
+}
+
+impl KernelPlan {
+    pub fn buffer(&self, name: &str) -> Option<&BufferParam> {
+        self.buffers.iter().find(|b| b.name == name)
+    }
+
+    pub fn local(&self, name: &str) -> Option<&LocalArray> {
+        self.locals.iter().find(|l| l.name == name)
+    }
+
+    /// Number of *real* threads needed per dimension for a `gw`×`gh`
+    /// logical grid (before work-group rounding): ceil(grid / coarsen).
+    pub fn real_threads(&self, gw: usize, gh: usize) -> [usize; 2] {
+        let c = &self.config.coarsen;
+        [gw.div_ceil(c[0]), gh.div_ceil(c[1])]
+    }
+
+    /// NDRange launch dimensions: global size (rounded up to work-group
+    /// multiples) and work-group size.
+    pub fn launch_dims(&self, gw: usize, gh: usize) -> ([usize; 2], [usize; 2]) {
+        let rt = self.real_threads(gw, gh);
+        let wg = self.config.wg;
+        (
+            [rt[0].div_ceil(wg[0]) * wg[0], rt[1].div_ceil(wg[1]) * wg[1]],
+            wg,
+        )
+    }
+
+    /// Total local memory bytes used by this plan (device occupancy input).
+    pub fn local_mem_bytes(&self) -> usize {
+        self.locals.iter().map(|l| l.len * l.elem.size_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_with(wg: [usize; 2], coarsen: [usize; 2]) -> KernelPlan {
+        KernelPlan {
+            name: "k".into(),
+            config: TuningConfig { wg, coarsen, ..Default::default() },
+            grid: GridSpec::Explicit(vec![100, 60]),
+            buffers: vec![],
+            scalars: vec![],
+            locals: vec![],
+            phases: vec![vec![]],
+        }
+    }
+
+    #[test]
+    fn launch_dims_round_up() {
+        let p = plan_with([16, 16], [1, 1]);
+        let (global, wg) = p.launch_dims(100, 60);
+        assert_eq!(global, [112, 64]);
+        assert_eq!(wg, [16, 16]);
+    }
+
+    #[test]
+    fn launch_dims_with_coarsening() {
+        let p = plan_with([16, 4], [4, 2]);
+        // real threads: ceil(100/4)=25, ceil(60/2)=30 → round to (32, 32)
+        assert_eq!(p.real_threads(100, 60), [25, 30]);
+        let (global, _) = p.launch_dims(100, 60);
+        assert_eq!(global, [32, 32]);
+    }
+
+    #[test]
+    fn local_mem_bytes() {
+        let mut p = plan_with([16, 16], [1, 1]);
+        p.locals.push(LocalArray {
+            name: "__loc_in".into(),
+            elem: ScalarType::F32,
+            len: 18 * 18,
+            tile_w: 18,
+            tile_h: 18,
+            stages: "in".into(),
+        });
+        assert_eq!(p.local_mem_bytes(), 18 * 18 * 4);
+    }
+}

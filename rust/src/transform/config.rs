@@ -1,0 +1,317 @@
+//! Tuning configurations (paper Table 1).
+//!
+//! A [`TuningConfig`] fixes a value for every tuning parameter of a kernel:
+//! work-group size, thread coarsening (pixels per thread), thread mapping
+//! (blocked vs interleaved), per-array memory spaces and per-loop unroll
+//! factors. The source-to-source compiler turns (kernel, config) into one
+//! candidate implementation; the auto-tuner searches over configs.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Which OpenCL memory space an array is placed in (paper §5.2.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum MemSpace {
+    #[default]
+    Global,
+    /// Texture memory (`image2d_t`).
+    Image,
+    /// `__constant`.
+    Constant,
+    /// `__local` staging (applies to read-only stencil images; data still
+    /// lives in global memory and is staged per work-group).
+    Local,
+}
+
+impl fmt::Display for MemSpace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MemSpace::Global => write!(f, "global"),
+            MemSpace::Image => write!(f, "image"),
+            MemSpace::Constant => write!(f, "constant"),
+            MemSpace::Local => write!(f, "local"),
+        }
+    }
+}
+
+/// A complete assignment of tuning-parameter values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TuningConfig {
+    /// Work-group size (x, y). `wg[1]` is 1 for 1-D grids.
+    pub wg: [usize; 2],
+    /// Thread coarsening: pixels per real thread in each dimension
+    /// (paper §5.2.2).
+    pub coarsen: [usize; 2],
+    /// Interleaved (true) vs blocked (false) thread mapping (§5.2.3).
+    pub interleaved: bool,
+    /// Per-array: place in image (texture) memory.
+    pub image_mem: BTreeMap<String, bool>,
+    /// Per-array: place in `__constant` memory.
+    pub constant_mem: BTreeMap<String, bool>,
+    /// Per-image: stage through `__local` memory.
+    pub local_mem: BTreeMap<String, bool>,
+    /// Per-loop (1-based source id): unroll factor. `1` = keep the loop,
+    /// `0` = fully unroll (matches the 0/1 encoding of the paper's result
+    /// tables where 1 means "unrolled"), any other value = partial factor.
+    pub unroll: BTreeMap<usize, usize>,
+}
+
+impl Default for TuningConfig {
+    /// The *naive* configuration: 16×16 work-groups, no coarsening, blocked
+    /// mapping, everything in global memory, no unrolling.
+    fn default() -> Self {
+        TuningConfig {
+            wg: [16, 16],
+            coarsen: [1, 1],
+            interleaved: false,
+            image_mem: BTreeMap::new(),
+            constant_mem: BTreeMap::new(),
+            local_mem: BTreeMap::new(),
+            unroll: BTreeMap::new(),
+        }
+    }
+}
+
+impl TuningConfig {
+    /// Work-group area (threads per work-group).
+    pub fn wg_threads(&self) -> usize {
+        self.wg[0] * self.wg[1]
+    }
+
+    /// Pixels per real thread.
+    pub fn pixels_per_thread(&self) -> usize {
+        self.coarsen[0] * self.coarsen[1]
+    }
+
+    /// Logical-pixel tile covered by one work-group, per dimension.
+    pub fn group_tile(&self) -> [usize; 2] {
+        [self.wg[0] * self.coarsen[0], self.wg[1] * self.coarsen[1]]
+    }
+
+    pub fn uses_image_mem(&self, array: &str) -> bool {
+        self.image_mem.get(array).copied().unwrap_or(false)
+    }
+
+    pub fn uses_constant_mem(&self, array: &str) -> bool {
+        self.constant_mem.get(array).copied().unwrap_or(false)
+    }
+
+    pub fn uses_local_mem(&self, array: &str) -> bool {
+        self.local_mem.get(array).copied().unwrap_or(false)
+    }
+
+    pub fn any_local_mem(&self) -> bool {
+        self.local_mem.values().any(|&v| v)
+    }
+
+    /// Resolved memory space of an array under this config.
+    pub fn space_of(&self, array: &str) -> MemSpace {
+        if self.uses_local_mem(array) {
+            MemSpace::Local
+        } else if self.uses_image_mem(array) {
+            MemSpace::Image
+        } else if self.uses_constant_mem(array) {
+            MemSpace::Constant
+        } else {
+            MemSpace::Global
+        }
+    }
+
+    /// Unroll factor for a loop id (default 1 = no unrolling).
+    pub fn unroll_factor(&self, loop_id: usize) -> usize {
+        self.unroll.get(&loop_id).copied().unwrap_or(1)
+    }
+
+    /// A stable single-line encoding, used as artifact key / report row.
+    pub fn key(&self) -> String {
+        self.to_string()
+    }
+
+    /// Parse the [`fmt::Display`] encoding back (used by the CLI and the
+    /// artifact manifest). Format:
+    /// `wg=16x16 px=1x1 map=blocked img=in cmem=f lmem=in unroll=1:0,2:4`
+    /// (memory lists are comma-separated array names; absent = none).
+    pub fn parse(s: &str) -> Result<TuningConfig, String> {
+        let mut cfg = TuningConfig {
+            wg: [0, 0],
+            coarsen: [0, 0],
+            ..TuningConfig::default()
+        };
+        let mut saw_wg = false;
+        let mut saw_px = false;
+        for tok in s.split_whitespace() {
+            let (k, v) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("bad config token {tok:?}"))?;
+            let parse_pair = |v: &str| -> Result<[usize; 2], String> {
+                let (a, b) = v
+                    .split_once('x')
+                    .ok_or_else(|| format!("bad pair {v:?} (want AxB)"))?;
+                Ok([
+                    a.parse().map_err(|_| format!("bad number in {v:?}"))?,
+                    b.parse().map_err(|_| format!("bad number in {v:?}"))?,
+                ])
+            };
+            match k {
+                "wg" => {
+                    cfg.wg = parse_pair(v)?;
+                    saw_wg = true;
+                }
+                "px" => {
+                    cfg.coarsen = parse_pair(v)?;
+                    saw_px = true;
+                }
+                "map" => {
+                    cfg.interleaved = match v {
+                        "blocked" => false,
+                        "interleaved" => true,
+                        _ => return Err(format!("bad map {v:?}")),
+                    };
+                }
+                "img" => {
+                    for a in v.split(',').filter(|a| !a.is_empty()) {
+                        cfg.image_mem.insert(a.to_string(), true);
+                    }
+                }
+                "cmem" => {
+                    for a in v.split(',').filter(|a| !a.is_empty()) {
+                        cfg.constant_mem.insert(a.to_string(), true);
+                    }
+                }
+                "lmem" => {
+                    for a in v.split(',').filter(|a| !a.is_empty()) {
+                        cfg.local_mem.insert(a.to_string(), true);
+                    }
+                }
+                "unroll" => {
+                    for kv in v.split(',').filter(|a| !a.is_empty()) {
+                        let (id, f) = kv
+                            .split_once(':')
+                            .ok_or_else(|| format!("bad unroll {kv:?}"))?;
+                        cfg.unroll.insert(
+                            id.parse().map_err(|_| format!("bad loop id {id:?}"))?,
+                            f.parse().map_err(|_| format!("bad factor {f:?}"))?,
+                        );
+                    }
+                }
+                other => return Err(format!("unknown config key {other:?}")),
+            }
+        }
+        if !saw_wg || !saw_px {
+            return Err("config must contain wg= and px=".into());
+        }
+        if cfg.wg[0] == 0 || cfg.wg[1] == 0 || cfg.coarsen[0] == 0 || cfg.coarsen[1] == 0 {
+            return Err("work-group and coarsening sizes must be positive".into());
+        }
+        Ok(cfg)
+    }
+}
+
+impl fmt::Display for TuningConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "wg={}x{} px={}x{} map={}",
+            self.wg[0],
+            self.wg[1],
+            self.coarsen[0],
+            self.coarsen[1],
+            if self.interleaved { "interleaved" } else { "blocked" }
+        )?;
+        let join = |m: &BTreeMap<String, bool>| {
+            m.iter()
+                .filter(|(_, &v)| v)
+                .map(|(k, _)| k.as_str())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
+        let img = join(&self.image_mem);
+        if !img.is_empty() {
+            write!(f, " img={img}")?;
+        }
+        let cmem = join(&self.constant_mem);
+        if !cmem.is_empty() {
+            write!(f, " cmem={cmem}")?;
+        }
+        let lmem = join(&self.local_mem);
+        if !lmem.is_empty() {
+            write!(f, " lmem={lmem}")?;
+        }
+        let unroll: Vec<String> = self
+            .unroll
+            .iter()
+            .filter(|(_, &v)| v != 1)
+            .map(|(k, v)| format!("{k}:{v}"))
+            .collect();
+        if !unroll.is_empty() {
+            write!(f, " unroll={}", unroll.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_naive() {
+        let c = TuningConfig::default();
+        assert_eq!(c.wg, [16, 16]);
+        assert_eq!(c.coarsen, [1, 1]);
+        assert!(!c.interleaved);
+        assert_eq!(c.space_of("anything"), MemSpace::Global);
+        assert_eq!(c.unroll_factor(1), 1);
+    }
+
+    #[test]
+    fn display_parse_roundtrip() {
+        let mut c = TuningConfig::default();
+        c.wg = [64, 4];
+        c.coarsen = [4, 1];
+        c.interleaved = true;
+        c.image_mem.insert("in".into(), true);
+        c.constant_mem.insert("f".into(), true);
+        c.local_mem.insert("in".into(), true);
+        c.unroll.insert(1, 0);
+        c.unroll.insert(2, 4);
+        let s = c.to_string();
+        let back = TuningConfig::parse(&s).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn parse_minimal() {
+        let c = TuningConfig::parse("wg=8x8 px=2x2").unwrap();
+        assert_eq!(c.wg, [8, 8]);
+        assert_eq!(c.coarsen, [2, 2]);
+        assert!(!c.interleaved);
+    }
+
+    #[test]
+    fn parse_rejects_bad() {
+        assert!(TuningConfig::parse("wg=8x8").is_err());
+        assert!(TuningConfig::parse("wg=8x8 px=0x1").is_err());
+        assert!(TuningConfig::parse("wg=8 px=1x1").is_err());
+        assert!(TuningConfig::parse("wg=8x8 px=1x1 map=diagonal").is_err());
+        assert!(TuningConfig::parse("wg=8x8 px=1x1 zap=1").is_err());
+    }
+
+    #[test]
+    fn space_priority_local_over_image() {
+        let mut c = TuningConfig::default();
+        c.image_mem.insert("a".into(), true);
+        c.local_mem.insert("a".into(), true);
+        assert_eq!(c.space_of("a"), MemSpace::Local);
+    }
+
+    #[test]
+    fn group_tile() {
+        let mut c = TuningConfig::default();
+        c.wg = [16, 8];
+        c.coarsen = [4, 2];
+        assert_eq!(c.group_tile(), [64, 16]);
+        assert_eq!(c.wg_threads(), 128);
+        assert_eq!(c.pixels_per_thread(), 8);
+    }
+}

@@ -1,0 +1,877 @@
+//! Lowering: (analyzed kernel, tuning config) → one candidate
+//! implementation ([`KernelPlan`]).
+//!
+//! This implements the paper's §5.1–§5.2 transformations:
+//!
+//! * flat logical thread space → OpenCL NDRange with the configured
+//!   work-group size;
+//! * thread coarsening as for-loops around the kernel body (§5.2.2);
+//! * blocked / interleaved / group-interleaved thread mapping (§5.2.3,
+//!   Figure 4 a–c);
+//! * `Image` 2-D accesses → 1-D global accesses, texture intrinsics or
+//!   local-memory staging (+ cooperative load and barrier, Figure 5);
+//! * boundary-condition code (clamped / constant, Figure 3);
+//! * loop unrolling (§5.2.5, applied before index rewriting).
+
+use crate::analysis::{KernelInfo, Stencil};
+use crate::imagecl::ast::*;
+use crate::imagecl::{BoundaryCond, Forced, GridSpec};
+
+use super::clir::*;
+use super::config::{MemSpace, TuningConfig};
+use super::unroll;
+
+/// Transformation error.
+#[derive(Debug, thiserror::Error)]
+pub enum TransformError {
+    /// The configuration requests an optimization the kernel is not
+    /// eligible for (the tuner's space enumeration prevents this; direct
+    /// CLI users can hit it).
+    #[error("invalid configuration: {0}")]
+    InvalidConfig(String),
+    #[error("unsupported: {0}")]
+    Unsupported(String),
+}
+
+/// Apply `force(...)` directives, overriding the tuner's choices
+/// (paper §5: directives can "force optimizations on or off").
+pub fn effective_config(info: &KernelInfo, config: &TuningConfig) -> TuningConfig {
+    let mut cfg = config.clone();
+    for (arr, f) in &info.prog.force_image_mem {
+        match f {
+            Forced::On => {
+                cfg.image_mem.insert(arr.clone(), true);
+            }
+            Forced::Off => {
+                cfg.image_mem.insert(arr.clone(), false);
+            }
+            Forced::Tunable => {}
+        }
+    }
+    for (arr, f) in &info.prog.force_constant_mem {
+        match f {
+            Forced::On => {
+                cfg.constant_mem.insert(arr.clone(), true);
+            }
+            Forced::Off => {
+                cfg.constant_mem.insert(arr.clone(), false);
+            }
+            Forced::Tunable => {}
+        }
+    }
+    for (arr, f) in &info.prog.force_local_mem {
+        match f {
+            Forced::On => {
+                cfg.local_mem.insert(arr.clone(), true);
+            }
+            Forced::Off => {
+                cfg.local_mem.insert(arr.clone(), false);
+            }
+            Forced::Tunable => {}
+        }
+    }
+    match info.prog.force_interleaved {
+        Forced::On => cfg.interleaved = true,
+        Forced::Off => cfg.interleaved = false,
+        Forced::Tunable => {}
+    }
+    cfg
+}
+
+/// Lower an analyzed kernel under a tuning configuration.
+pub fn lower(info: &KernelInfo, config: &TuningConfig) -> Result<KernelPlan, TransformError> {
+    let cfg = effective_config(info, config);
+    let kernel = &info.prog.kernel;
+
+    // -- validation ---------------------------------------------------
+    if cfg.wg[0] == 0 || cfg.wg[1] == 0 || cfg.coarsen[0] == 0 || cfg.coarsen[1] == 0 {
+        return Err(TransformError::InvalidConfig(
+            "work-group and coarsening sizes must be positive".into(),
+        ));
+    }
+    let mut uses_idz = false;
+    kernel.walk_exprs(&mut |e| {
+        if matches!(e, Expr::Ident(n) if n == "idz") {
+            uses_idz = true;
+        }
+        if matches!(e, Expr::Index { indices, .. } if indices.len() == 3) {
+            uses_idz = true;
+        }
+    });
+    if uses_idz {
+        return Err(TransformError::Unsupported(
+            "3-D kernels are not supported by this lowering yet".into(),
+        ));
+    }
+    for (arr, &on) in &cfg.local_mem {
+        if on && !info.local_mem_eligible(arr) {
+            return Err(TransformError::InvalidConfig(format!(
+                "local memory requested for `{arr}` which is not eligible \
+                 (must be a read-only Image with a compile-time stencil)"
+            )));
+        }
+    }
+    for (arr, &on) in &cfg.image_mem {
+        if on && !info.image_mem_eligible(arr) {
+            return Err(TransformError::InvalidConfig(format!(
+                "image memory requested for `{arr}` which is not read-only or write-only"
+            )));
+        }
+    }
+    for (arr, &on) in &cfg.constant_mem {
+        if on && !info.constant_mem_eligible(arr, usize::MAX) {
+            return Err(TransformError::InvalidConfig(format!(
+                "constant memory requested for `{arr}` which is not a \
+                 read-only array with a known size bound"
+            )));
+        }
+    }
+
+    let grid_image = match &info.prog.grid {
+        GridSpec::FromImage(name) => Some(name.clone()),
+        GridSpec::Explicit(_) => None,
+    };
+
+    // -- source-level unrolling ----------------------------------------
+    let body = unroll::apply(&kernel.body, &info.env, &cfg.unroll);
+
+    // -- buffer & scalar parameter lists --------------------------------
+    let mut buffers = Vec::new();
+    let mut scalars = Vec::new();
+    for p in &kernel.params {
+        match &p.ty {
+            Type::Image { elem, dims } => {
+                buffers.push(BufferParam {
+                    name: p.name.clone(),
+                    elem: *elem,
+                    space: cfg.space_of(&p.name),
+                    access: info.access(&p.name),
+                    image_dims: Some(*dims),
+                });
+                scalars.push((format!("{}_w", p.name), ScalarType::I32));
+                scalars.push((format!("{}_h", p.name), ScalarType::I32));
+            }
+            Type::Array { elem } => {
+                buffers.push(BufferParam {
+                    name: p.name.clone(),
+                    elem: *elem,
+                    space: cfg.space_of(&p.name),
+                    access: info.access(&p.name),
+                    image_dims: None,
+                });
+                scalars.push((format!("{}_n", p.name), ScalarType::I32));
+            }
+            Type::Scalar(s) => scalars.push((p.name.clone(), *s)),
+        }
+    }
+    scalars.push((GRID_W.to_string(), ScalarType::I32));
+    scalars.push((GRID_H.to_string(), ScalarType::I32));
+
+    // -- local staging arrays -------------------------------------------
+    let mut locals = Vec::new();
+    let tile = cfg.group_tile();
+    for (arr, &on) in &cfg.local_mem {
+        if !on {
+            continue;
+        }
+        let st = info.read_stencil(arr).expect("eligibility checked above");
+        let tile_w = tile[0] + st.extent_x() as usize;
+        let tile_h = tile[1] + st.extent_y() as usize;
+        let elem = kernel.param(arr).unwrap().ty.elem();
+        locals.push(LocalArray {
+            name: format!("__loc_{arr}"),
+            elem,
+            len: tile_w * tile_h,
+            tile_w,
+            tile_h,
+            stages: arr.clone(),
+        });
+    }
+    locals.sort_by(|a, b| a.name.cmp(&b.name));
+
+    let lowerer = Lowerer { info, cfg: &cfg, grid_image, locals: &locals };
+
+    // -- compute phase ----------------------------------------------------
+    let rewritten = lowerer.rewrite_stmts(&body)?;
+    let compute = lowerer.wrap_mapping(rewritten);
+
+    // -- staging phase (local memory) --------------------------------------
+    let mut phases = Vec::new();
+    if !locals.is_empty() {
+        phases.push(lowerer.staging_phase());
+        phases.push(compute);
+    } else {
+        phases.push(compute);
+    }
+
+    Ok(KernelPlan {
+        name: kernel.name.clone(),
+        config: cfg,
+        grid: info.prog.grid.clone(),
+        buffers,
+        scalars,
+        locals,
+        phases,
+    })
+}
+
+struct Lowerer<'a> {
+    info: &'a KernelInfo,
+    cfg: &'a TuningConfig,
+    grid_image: Option<String>,
+    locals: &'a [LocalArray],
+}
+
+impl Lowerer<'_> {
+    fn boundary(&self, img: &str) -> BoundaryCond {
+        self.info
+            .prog
+            .boundary
+            .get(img)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    fn elem_of(&self, arr: &str) -> ScalarType {
+        self.info.prog.kernel.param(arr).unwrap().ty.elem()
+    }
+
+    fn local_for(&self, img: &str) -> Option<&LocalArray> {
+        self.locals.iter().find(|l| l.stages == img)
+    }
+
+    /// The constant used for the constant boundary condition, typed.
+    fn bc_const(&self, elem: ScalarType, v: f64) -> Expr {
+        if elem.is_float() {
+            Expr::FloatLit(v)
+        } else {
+            Expr::IntLit(v as i64)
+        }
+    }
+
+    /// Is this 2-D access exactly the thread's own pixel of the grid image
+    /// (no offsets)? Then it cannot be out of bounds (grid guard already
+    /// holds) and boundary code is skipped.
+    fn is_exact_grid_point(&self, img: &str, ex: &Expr, ey: &Expr) -> bool {
+        self.grid_image.as_deref() == Some(img)
+            && *ex == Expr::ident("idx")
+            && *ey == Expr::ident("idy")
+    }
+
+    /// clamp(v, 0, hi) with integer min/max.
+    fn clamp0(v: Expr, hi: Expr) -> Expr {
+        Expr::call("max", vec![Expr::call("min", vec![v, hi]), Expr::int(0)])
+    }
+
+    /// `0 <= ex < w && 0 <= ey < h`
+    fn inside(ex: &Expr, ey: &Expr, w: &Expr, h: &Expr) -> Expr {
+        let ge0 = |e: &Expr| Expr::bin(BinOp::Ge, e.clone(), Expr::int(0));
+        let lt = |e: &Expr, b: &Expr| Expr::bin(BinOp::Lt, e.clone(), b.clone());
+        Expr::bin(
+            BinOp::And,
+            Expr::bin(BinOp::And, ge0(ex), lt(ex, w)),
+            Expr::bin(BinOp::And, ge0(ey), lt(ey, h)),
+        )
+    }
+
+    /// Build the read of image `img` at coordinates (ex, ey), applying the
+    /// configured memory space and the image's boundary condition.
+    fn image_load(&self, img: &str, ex: Expr, ey: Expr) -> Result<Expr, TransformError> {
+        let w = Expr::ident(&format!("{img}_w"));
+        let h = Expr::ident(&format!("{img}_h"));
+        let elem = self.elem_of(img);
+
+        // Local staging: rewrite to the local array; boundary handling
+        // happened at staging time.
+        if let Some(loc) = self.local_for(img) {
+            let st = self.info.read_stencil(img).unwrap();
+            // Group pixel origin (declared in the compute phase prologue).
+            let gox = Expr::ident("__gox");
+            let goy = Expr::ident("__goy");
+            // lx = ex - (gox + min_dx); ly = ey - (goy + min_dy)
+            let lx = Expr::sub(ex, Expr::add(gox, Expr::int(st.min_dx)));
+            let ly = Expr::sub(ey, Expr::add(goy, Expr::int(st.min_dy)));
+            return Ok(Expr::Index {
+                base: loc.name.clone(),
+                indices: vec![Expr::add(
+                    Expr::mul(ly, Expr::int(loc.tile_w as i64)),
+                    lx,
+                )],
+            });
+        }
+
+        let space = self.cfg.space_of(img);
+        let exact = self.is_exact_grid_point(img, &ex, &ey);
+        let bc = self.boundary(img);
+
+        let load_at = |x: Expr, y: Expr| -> Expr {
+            match space {
+                MemSpace::Image => {
+                    Expr::call(READ_TEX, vec![Expr::ident(img), x, y])
+                }
+                _ => Expr::Index {
+                    base: img.to_string(),
+                    indices: vec![Expr::add(Expr::mul(y, w.clone()), x)],
+                },
+            }
+        };
+
+        if exact {
+            return Ok(load_at(ex, ey));
+        }
+        match bc {
+            BoundaryCond::Clamped => {
+                let xc = Self::clamp0(ex, Expr::sub(w.clone(), Expr::int(1)));
+                let yc = Self::clamp0(ey, Expr::sub(h.clone(), Expr::int(1)));
+                Ok(load_at(xc, yc))
+            }
+            BoundaryCond::Constant(c) => Ok(Expr::Ternary {
+                cond: Box::new(Self::inside(&ex, &ey, &w, &h)),
+                then: Box::new(load_at(ex, ey)),
+                els: Box::new(self.bc_const(elem, c)),
+            }),
+        }
+    }
+
+    /// Build the store of `value` to image `img` at (ex, ey). Returns the
+    /// statement (possibly guarded).
+    fn image_store(
+        &self,
+        img: &str,
+        ex: Expr,
+        ey: Expr,
+        value: Expr,
+    ) -> Result<Stmt, TransformError> {
+        let w = Expr::ident(&format!("{img}_w"));
+        let h = Expr::ident(&format!("{img}_h"));
+        let space = self.cfg.space_of(img);
+        let exact = self.is_exact_grid_point(img, &ex, &ey);
+        let store = match space {
+            MemSpace::Image => Stmt::ExprStmt(Expr::call(
+                WRITE_TEX,
+                vec![Expr::ident(img), ex.clone(), ey.clone(), value],
+            )),
+            MemSpace::Local => {
+                return Err(TransformError::InvalidConfig(format!(
+                    "cannot write to locally staged image `{img}`"
+                )))
+            }
+            _ => Stmt::Assign {
+                lhs: LValue::Index {
+                    base: img.to_string(),
+                    indices: vec![Expr::add(Expr::mul(ey.clone(), w.clone()), ex.clone())],
+                },
+                op: AssignOp::Set,
+                value,
+            },
+        };
+        if exact {
+            Ok(store)
+        } else {
+            Ok(Stmt::If {
+                cond: Self::inside(&ex, &ey, &w, &h),
+                then: vec![store],
+                els: vec![],
+            })
+        }
+    }
+
+    fn rewrite_expr(&self, e: &Expr) -> Result<Expr, TransformError> {
+        Ok(match e {
+            Expr::Index { base, indices } => {
+                let idxs: Result<Vec<Expr>, _> =
+                    indices.iter().map(|i| self.rewrite_expr(i)).collect();
+                let mut idxs = idxs?;
+                match self.info.prog.kernel.param(base).map(|p| &p.ty) {
+                    Some(Type::Image { .. }) => {
+                        if idxs.len() != 2 {
+                            return Err(TransformError::Unsupported(format!(
+                                "image `{base}` must use 2-D indexing"
+                            )));
+                        }
+                        let ey = idxs.pop().unwrap();
+                        let ex = idxs.pop().unwrap();
+                        self.image_load(base, ex, ey)?
+                    }
+                    _ => Expr::Index { base: base.clone(), indices: idxs },
+                }
+            }
+            Expr::Unary { op, expr } => Expr::Unary {
+                op: *op,
+                expr: Box::new(self.rewrite_expr(expr)?),
+            },
+            Expr::Binary { op, lhs, rhs } => Expr::Binary {
+                op: *op,
+                lhs: Box::new(self.rewrite_expr(lhs)?),
+                rhs: Box::new(self.rewrite_expr(rhs)?),
+            },
+            Expr::Call { name, args } => Expr::Call {
+                name: name.clone(),
+                args: args
+                    .iter()
+                    .map(|a| self.rewrite_expr(a))
+                    .collect::<Result<_, _>>()?,
+            },
+            Expr::Ternary { cond, then, els } => Expr::Ternary {
+                cond: Box::new(self.rewrite_expr(cond)?),
+                then: Box::new(self.rewrite_expr(then)?),
+                els: Box::new(self.rewrite_expr(els)?),
+            },
+            Expr::Cast { ty, expr } => Expr::Cast {
+                ty: *ty,
+                expr: Box::new(self.rewrite_expr(expr)?),
+            },
+            other => other.clone(),
+        })
+    }
+
+    fn rewrite_stmts(&self, stmts: &[Stmt]) -> Result<Vec<Stmt>, TransformError> {
+        let mut out = Vec::new();
+        for s in stmts {
+            match s {
+                Stmt::Assign { lhs, op, value } => {
+                    let value = self.rewrite_expr(value)?;
+                    match lhs {
+                        LValue::Index { base, indices }
+                            if matches!(
+                                self.info.prog.kernel.param(base).map(|p| &p.ty),
+                                Some(Type::Image { .. })
+                            ) =>
+                        {
+                            if indices.len() != 2 {
+                                return Err(TransformError::Unsupported(format!(
+                                    "image `{base}` must use 2-D indexing"
+                                )));
+                            }
+                            let ex = self.rewrite_expr(&indices[0])?;
+                            let ey = self.rewrite_expr(&indices[1])?;
+                            // Compound assignment: expand to load-modify.
+                            let value = match op.binop() {
+                                None => value,
+                                Some(b) => {
+                                    let cur =
+                                        self.image_load(base, ex.clone(), ey.clone())?;
+                                    Expr::bin(b, cur, value)
+                                }
+                            };
+                            out.push(self.image_store(base, ex, ey, value)?);
+                        }
+                        LValue::Index { base, indices } => {
+                            let idxs: Result<Vec<Expr>, _> =
+                                indices.iter().map(|i| self.rewrite_expr(i)).collect();
+                            out.push(Stmt::Assign {
+                                lhs: LValue::Index { base: base.clone(), indices: idxs? },
+                                op: *op,
+                                value,
+                            });
+                        }
+                        LValue::Var(v) => out.push(Stmt::Assign {
+                            lhs: LValue::Var(v.clone()),
+                            op: *op,
+                            value,
+                        }),
+                    }
+                }
+                Stmt::Decl { ty, name, init } => out.push(Stmt::Decl {
+                    ty: *ty,
+                    name: name.clone(),
+                    init: init.as_ref().map(|e| self.rewrite_expr(e)).transpose()?,
+                }),
+                Stmt::If { cond, then, els } => out.push(Stmt::If {
+                    cond: self.rewrite_expr(cond)?,
+                    then: self.rewrite_stmts(then)?,
+                    els: self.rewrite_stmts(els)?,
+                }),
+                Stmt::For { var, init, cond, step, body } => out.push(Stmt::For {
+                    var: var.clone(),
+                    init: self.rewrite_expr(init)?,
+                    cond: self.rewrite_expr(cond)?,
+                    step: self.rewrite_expr(step)?,
+                    body: self.rewrite_stmts(body)?,
+                }),
+                Stmt::While { cond, body } => out.push(Stmt::While {
+                    cond: self.rewrite_expr(cond)?,
+                    body: self.rewrite_stmts(body)?,
+                }),
+                Stmt::ExprStmt(e) => out.push(Stmt::ExprStmt(self.rewrite_expr(e)?)),
+                Stmt::Return | Stmt::Barrier => out.push(s.clone()),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Logical-thread index expressions per the thread-mapping parameter
+    /// (paper §5.2.3, Figure 4). `dim` 0 = x, 1 = y; `u` is the coarsening
+    /// iterator expression for that dimension.
+    fn map_index(&self, dim: usize, u: Expr) -> Expr {
+        let c = self.cfg.coarsen[dim] as i64;
+        let wg = self.cfg.wg[dim] as i64;
+        let gid = Expr::ident(if dim == 0 { GID_X } else { GID_Y });
+        let lid = Expr::ident(if dim == 0 { LID_X } else { LID_Y });
+        let grp = Expr::ident(if dim == 0 { GRP_X } else { GRP_Y });
+        let gdim = Expr::ident(if dim == 0 { GDIM_X } else { GDIM_Y });
+        let gtile = wg * c;
+        if !self.cfg.interleaved {
+            // Blocked (Fig 4a): gid * c + u. Equals
+            // grp*wg*c + lid*c + u, so a work-group covers one contiguous
+            // tile — compatible with local staging as-is.
+            Expr::add(Expr::mul(gid, Expr::int(c)), u)
+        } else if self.cfg.any_local_mem() {
+            // Work-group-local interleaving (Fig 4c): the group still
+            // covers a contiguous tile, threads within it interleave.
+            Expr::add(
+                Expr::add(Expr::mul(grp, Expr::int(gtile)), lid),
+                Expr::mul(u, Expr::int(wg)),
+            )
+        } else {
+            // Global interleaving (Fig 4b): stride = total real threads.
+            Expr::add(gid, Expr::mul(u, gdim))
+        }
+    }
+
+    /// Wrap the rewritten body in coarsening loops, thread-index decls and
+    /// the grid guard; prepend group-origin decls if local staging is used.
+    fn wrap_mapping(&self, body: Vec<Stmt>) -> Vec<Stmt> {
+        let [cx, cy] = self.cfg.coarsen;
+        let guard = Expr::bin(
+            BinOp::And,
+            Expr::bin(BinOp::Lt, Expr::ident("idx"), Expr::ident(GRID_W)),
+            Expr::bin(BinOp::Lt, Expr::ident("idy"), Expr::ident(GRID_H)),
+        );
+        let ux: Expr = if cx > 1 { Expr::ident("__u") } else { Expr::int(0) };
+        let uy: Expr = if cy > 1 { Expr::ident("__v") } else { Expr::int(0) };
+        let mut inner = vec![
+            Stmt::Decl {
+                ty: ScalarType::I32,
+                name: "idx".into(),
+                init: Some(self.map_index(0, ux)),
+            },
+            Stmt::Decl {
+                ty: ScalarType::I32,
+                name: "idy".into(),
+                init: Some(self.map_index(1, uy)),
+            },
+            Stmt::If { cond: guard, then: body, els: vec![] },
+        ];
+        if cy > 1 {
+            inner = vec![Stmt::For {
+                var: "__v".into(),
+                init: Expr::int(0),
+                cond: Expr::bin(BinOp::Lt, Expr::ident("__v"), Expr::int(cy as i64)),
+                step: Expr::int(1),
+                body: inner,
+            }];
+        }
+        if cx > 1 {
+            inner = vec![Stmt::For {
+                var: "__u".into(),
+                init: Expr::int(0),
+                cond: Expr::bin(BinOp::Lt, Expr::ident("__u"), Expr::int(cx as i64)),
+                step: Expr::int(1),
+                body: inner,
+            }];
+        }
+        let mut out = self.origin_decls();
+        out.extend(inner);
+        out
+    }
+
+    /// `__gox`/`__goy` — the group's logical-pixel origin, needed by local
+    /// staging (both phases).
+    fn origin_decls(&self) -> Vec<Stmt> {
+        if self.locals.is_empty() {
+            return vec![];
+        }
+        let tile = self.cfg.group_tile();
+        vec![
+            Stmt::Decl {
+                ty: ScalarType::I32,
+                name: "__gox".into(),
+                init: Some(Expr::mul(Expr::ident(GRP_X), Expr::int(tile[0] as i64))),
+            },
+            Stmt::Decl {
+                ty: ScalarType::I32,
+                name: "__goy".into(),
+                init: Some(Expr::mul(Expr::ident(GRP_Y), Expr::int(tile[1] as i64))),
+            },
+        ]
+    }
+
+    /// The cooperative local-memory staging phase (paper Figure 5): the
+    /// work-group's threads stride over the halo'd tile and load it from
+    /// global memory with boundary handling.
+    fn staging_phase(&self) -> Vec<Stmt> {
+        let mut out = self.origin_decls();
+        let wg_threads = self.cfg.wg_threads() as i64;
+        out.push(Stmt::Decl {
+            ty: ScalarType::I32,
+            name: "__t".into(),
+            init: Some(Expr::add(
+                Expr::mul(Expr::ident(LID_Y), Expr::int(self.cfg.wg[0] as i64)),
+                Expr::ident(LID_X),
+            )),
+        });
+        for loc in self.locals {
+            let img = &loc.stages;
+            let st: Stencil = self.info.read_stencil(img).unwrap();
+            let elem = self.elem_of(img);
+            let bc = self.boundary(img);
+            let w = Expr::ident(&format!("{img}_w"));
+            let h = Expr::ident(&format!("{img}_h"));
+            // Global coords of tile element (__sx, __sy).
+            let gx = Expr::add(
+                Expr::add(Expr::ident("__gox"), Expr::int(st.min_dx)),
+                Expr::ident("__sx"),
+            );
+            let gy = Expr::add(
+                Expr::add(Expr::ident("__goy"), Expr::int(st.min_dy)),
+                Expr::ident("__sy"),
+            );
+            // Boundary-handled global load (never from texture: staged
+            // images are read via the local array; their parameter stays a
+            // global pointer).
+            let load = match bc {
+                BoundaryCond::Clamped => {
+                    let xc = Self::clamp0(gx, Expr::sub(w.clone(), Expr::int(1)));
+                    let yc = Self::clamp0(gy, Expr::sub(h.clone(), Expr::int(1)));
+                    Expr::Index {
+                        base: img.clone(),
+                        indices: vec![Expr::add(Expr::mul(yc, w.clone()), xc)],
+                    }
+                }
+                BoundaryCond::Constant(c) => Expr::Ternary {
+                    cond: Box::new(Self::inside(&gx, &gy, &w, &h)),
+                    then: Box::new(Expr::Index {
+                        base: img.clone(),
+                        indices: vec![Expr::add(
+                            Expr::mul(gy.clone(), w.clone()),
+                            gx.clone(),
+                        )],
+                    }),
+                    els: Box::new(self.bc_const(elem, c)),
+                },
+            };
+            out.push(Stmt::For {
+                var: "__s".into(),
+                init: Expr::ident("__t"),
+                cond: Expr::bin(
+                    BinOp::Lt,
+                    Expr::ident("__s"),
+                    Expr::int(loc.len as i64),
+                ),
+                step: Expr::int(wg_threads),
+                body: vec![
+                    Stmt::Decl {
+                        ty: ScalarType::I32,
+                        name: "__sx".into(),
+                        init: Some(Expr::bin(
+                            BinOp::Rem,
+                            Expr::ident("__s"),
+                            Expr::int(loc.tile_w as i64),
+                        )),
+                    },
+                    Stmt::Decl {
+                        ty: ScalarType::I32,
+                        name: "__sy".into(),
+                        init: Some(Expr::bin(
+                            BinOp::Div,
+                            Expr::ident("__s"),
+                            Expr::int(loc.tile_w as i64),
+                        )),
+                    },
+                    Stmt::Assign {
+                        lhs: LValue::Index {
+                            base: loc.name.clone(),
+                            indices: vec![Expr::ident("__s")],
+                        },
+                        op: AssignOp::Set,
+                        value: load,
+                    },
+                ],
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::KernelInfo;
+    use crate::imagecl::frontend;
+
+    const BLUR: &str = "#pragma imcl grid(in)\n\
+        void blur(Image<float> in, Image<float> out) {\n\
+          float sum = 0.0f;\n\
+          for (int i = -1; i < 2; i++) {\n\
+            for (int j = -1; j < 2; j++) { sum += in[idx + i][idy + j]; }\n\
+          }\n\
+          out[idx][idy] = sum / 9.0f;\n\
+        }";
+
+    fn plan(src: &str, cfg: TuningConfig) -> Result<KernelPlan, TransformError> {
+        let info = KernelInfo::analyze(frontend(src).unwrap());
+        lower(&info, &cfg)
+    }
+
+    fn dump(p: &KernelPlan) -> String {
+        let mut s = String::new();
+        for (i, ph) in p.phases.iter().enumerate() {
+            s.push_str(&format!("// phase {i}\n"));
+            print_stmts(ph, 0, &mut s);
+        }
+        s
+    }
+
+    #[test]
+    fn naive_plan_structure() {
+        let p = plan(BLUR, TuningConfig::default()).unwrap();
+        assert_eq!(p.phases.len(), 1);
+        assert!(p.locals.is_empty());
+        let s = dump(&p);
+        // Blocked mapping with coarsen 1: idx = __gid_x * 1 + 0.
+        assert!(s.contains("int idx = __gid_x * 1 + 0;"), "{s}");
+        assert!(s.contains("if (idx < __gw && idy < __gh) {"), "{s}");
+        // Boundary (constant-0 default) ternary on the stencil read.
+        assert!(s.contains("? in[") && s.contains(": 0.0f)"), "{s}");
+        // Exact-point write without guard.
+        assert!(s.contains("out[idy * out_w + idx] = sum / 9.0f;"), "{s}");
+        // Scalars ABI: in_w,in_h,out_w,out_h,__gw,__gh.
+        let names: Vec<&str> = p.scalars.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["in_w", "in_h", "out_w", "out_h", "__gw", "__gh"]);
+    }
+
+    #[test]
+    fn coarsened_blocked_mapping() {
+        let cfg = TuningConfig { coarsen: [4, 2], ..Default::default() };
+        let p = plan(BLUR, cfg).unwrap();
+        let s = dump(&p);
+        assert!(s.contains("for (int __u = 0; __u < 4; __u += 1) {"), "{s}");
+        assert!(s.contains("for (int __v = 0; __v < 2; __v += 1) {"), "{s}");
+        assert!(s.contains("int idx = __gid_x * 4 + __u;"), "{s}");
+        assert!(s.contains("int idy = __gid_y * 2 + __v;"), "{s}");
+    }
+
+    #[test]
+    fn interleaved_global_mapping() {
+        let cfg = TuningConfig {
+            coarsen: [4, 1],
+            interleaved: true,
+            ..Default::default()
+        };
+        let p = plan(BLUR, cfg).unwrap();
+        let s = dump(&p);
+        assert!(s.contains("int idx = __gid_x + __u * __gdim_x;"), "{s}");
+    }
+
+    #[test]
+    fn local_mem_creates_two_phases() {
+        let mut cfg = TuningConfig::default();
+        cfg.local_mem.insert("in".into(), true);
+        let p = plan(BLUR, cfg).unwrap();
+        assert_eq!(p.phases.len(), 2);
+        assert_eq!(p.locals.len(), 1);
+        let loc = &p.locals[0];
+        // 16x16 group, coarsen 1, 3x3 stencil → 18x18 tile.
+        assert_eq!((loc.tile_w, loc.tile_h), (18, 18));
+        assert_eq!(loc.len, 18 * 18);
+        let s = dump(&p);
+        assert!(s.contains("__loc_in[__s] ="), "{s}");
+        // Compute phase reads from the local array.
+        assert!(s.contains("sum += __loc_in["), "{s}");
+        // Buffer marked as locally staged.
+        assert_eq!(p.buffer("in").unwrap().space, MemSpace::Local);
+    }
+
+    #[test]
+    fn interleaved_with_local_is_group_local() {
+        let mut cfg = TuningConfig { interleaved: true, coarsen: [2, 1], ..Default::default() };
+        cfg.local_mem.insert("in".into(), true);
+        let p = plan(BLUR, cfg).unwrap();
+        let s = dump(&p);
+        // Fig 4c: grp*tile + lid + u*wg
+        assert!(s.contains("int idx = __grp_x * 32 + __lid_x + __u * 16;"), "{s}");
+    }
+
+    #[test]
+    fn image_mem_uses_intrinsics() {
+        let mut cfg = TuningConfig::default();
+        cfg.image_mem.insert("in".into(), true);
+        cfg.image_mem.insert("out".into(), true);
+        let p = plan(BLUR, cfg).unwrap();
+        let s = dump(&p);
+        assert!(s.contains("__read_tex(in,"), "{s}");
+        assert!(s.contains("__write_tex(out, idx, idy, sum / 9.0f);"), "{s}");
+        assert_eq!(p.buffer("in").unwrap().space, MemSpace::Image);
+    }
+
+    #[test]
+    fn clamped_boundary_uses_min_max() {
+        let src = "#pragma imcl grid(in)\n\
+            #pragma imcl boundary(in, clamped)\n\
+            void k(Image<float> in, Image<float> out) {\n\
+              out[idx][idy] = in[idx - 1][idy + 1];\n\
+            }";
+        let p = plan(src, TuningConfig::default()).unwrap();
+        let s = dump(&p);
+        assert!(s.contains("max(min(idx - 1, in_w - 1), 0)"), "{s}");
+        assert!(!s.contains('?'), "clamped should not emit ternaries: {s}");
+    }
+
+    #[test]
+    fn ineligible_local_mem_rejected() {
+        // `a` is read-write → not eligible.
+        let mut cfg = TuningConfig::default();
+        cfg.local_mem.insert("a".into(), true);
+        let r = plan(
+            "void k(Image<float> a) { a[idx][idy] = a[idx][idy] + 1.0f; }",
+            cfg,
+        );
+        assert!(matches!(r, Err(TransformError::InvalidConfig(_))));
+    }
+
+    #[test]
+    fn forced_on_applies_without_config() {
+        let src = "#pragma imcl grid(in)\n\
+            #pragma imcl force(image_mem(in), on)\n\
+            void k(Image<float> in, Image<float> out) { out[idx][idy] = in[idx][idy]; }";
+        let p = plan(src, TuningConfig::default()).unwrap();
+        assert_eq!(p.buffer("in").unwrap().space, MemSpace::Image);
+    }
+
+    #[test]
+    fn unroll_applied_before_lowering() {
+        let mut cfg = TuningConfig::default();
+        cfg.unroll.insert(1, 0);
+        cfg.unroll.insert(2, 0);
+        let p = plan(BLUR, cfg).unwrap();
+        let s = dump(&p);
+        assert!(!s.contains("for (int i"), "{s}");
+        assert!(!s.contains("for (int j"), "{s}");
+        // 9 unrolled reads.
+        assert_eq!(s.matches("sum +=").count(), 9, "{s}");
+    }
+
+    #[test]
+    fn compound_image_assign_expands() {
+        let src = "void k(Image<float> a) { a[idx][idy] += 2.0f; }";
+        let p = plan(src, TuningConfig::default()).unwrap();
+        let s = dump(&p);
+        assert!(
+            s.contains("a[idy * a_w + idx] = a[idy * a_w + idx] + 2.0f;"),
+            "{s}"
+        );
+    }
+
+    #[test]
+    fn explicit_grid_plan() {
+        let src = "#pragma imcl grid(256, 1)\nvoid k(float* a, float* b) { b[idx] = a[idx] * 2.0f; }";
+        let cfg = TuningConfig { wg: [64, 1], ..Default::default() };
+        let p = plan(src, cfg).unwrap();
+        let names: Vec<&str> = p.scalars.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["a_n", "b_n", "__gw", "__gh"]);
+        let (global, wg) = p.launch_dims(256, 1);
+        assert_eq!(global, [256, 1]);
+        assert_eq!(wg, [64, 1]);
+    }
+}

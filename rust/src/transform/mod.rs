@@ -1,0 +1,71 @@
+//! The source-to-source transformation stage (paper §5).
+//!
+//! From one analyzed ImageCL kernel and a [`TuningConfig`], produce one
+//! candidate implementation: a [`clir::KernelPlan`] (executable by
+//! [`crate::exec`], renderable as OpenCL C by [`codegen`], and launchable
+//! via the generated host code of [`host`]).
+
+pub mod clir;
+pub mod codegen;
+pub mod config;
+pub mod host;
+pub mod lower;
+pub mod unroll;
+
+pub use clir::{BufferParam, KernelPlan, LocalArray};
+pub use codegen::emit_opencl;
+pub use config::{MemSpace, TuningConfig};
+pub use host::{emit_fast_filter, emit_standalone_host};
+pub use lower::{effective_config, lower, TransformError};
+
+use crate::analysis::KernelInfo;
+use crate::imagecl::FrontendError;
+
+/// Compilation error: frontend or transform.
+#[derive(Debug, thiserror::Error)]
+pub enum CompileError {
+    #[error(transparent)]
+    Frontend(#[from] FrontendError),
+    #[error(transparent)]
+    Transform(#[from] TransformError),
+}
+
+/// One-shot convenience: ImageCL source + config → candidate plan.
+pub fn compile(src: &str, cfg: &TuningConfig) -> Result<KernelPlan, CompileError> {
+    let info = KernelInfo::analyze(crate::imagecl::frontend(src)?);
+    Ok(lower(&info, cfg)?)
+}
+
+/// One-shot convenience: ImageCL source + config → OpenCL C text.
+pub fn compile_to_opencl(src: &str, cfg: &TuningConfig) -> Result<String, CompileError> {
+    Ok(emit_opencl(&compile(src, cfg)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compile_roundtrip() {
+        let cl = compile_to_opencl(
+            "void k(Image<float> a) { a[idx][idy] = 1.0f; }",
+            &TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(cl.contains("__kernel void k("));
+    }
+
+    #[test]
+    fn compile_propagates_errors() {
+        assert!(matches!(
+            compile("void", &TuningConfig::default()),
+            Err(CompileError::Frontend(_))
+        ));
+        let mut cfg = TuningConfig::default();
+        cfg.local_mem.insert("a".into(), true);
+        assert!(matches!(
+            compile("void k(Image<float> a) { a[idx][idy] = a[idx][idy] + 1.0f; }", &cfg),
+            Err(CompileError::Transform(_))
+        ));
+    }
+}

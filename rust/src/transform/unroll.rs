@@ -1,0 +1,325 @@
+//! Loop unrolling (paper §5.2.5).
+//!
+//! Applied at the source level, before index lowering. A loop with a
+//! compile-time-constant range can be:
+//!
+//! * fully unrolled (factor 0, the paper's tables' "1" flag): the loop is
+//!   replaced by one copy of its body per iteration value, with the
+//!   induction variable substituted by the constant;
+//! * partially unrolled by factor *k* (only when the trip count is
+//!   divisible by *k*; otherwise we conservatively unroll fully — the
+//!   remainder-loop variant would change no observable behaviour but adds
+//!   untested codegen surface).
+
+use std::collections::BTreeMap;
+
+use crate::analysis::ConstEnv;
+use crate::imagecl::ast::*;
+
+/// Substitute every use of `var` by the integer constant `value`.
+pub fn subst_var(stmts: &[Stmt], var: &str, value: i64) -> Vec<Stmt> {
+    fn subst_expr(e: &Expr, var: &str, value: i64) -> Expr {
+        e.clone().map(|e| match e {
+            Expr::Ident(ref n) if n == var => Expr::IntLit(value),
+            other => other,
+        })
+    }
+    stmts
+        .iter()
+        .map(|s| match s {
+            Stmt::Decl { ty, name, init } => Stmt::Decl {
+                ty: *ty,
+                name: name.clone(),
+                init: init.as_ref().map(|e| subst_expr(e, var, value)),
+            },
+            Stmt::Assign { lhs, op, value: v } => Stmt::Assign {
+                lhs: match lhs {
+                    LValue::Var(n) => LValue::Var(n.clone()),
+                    LValue::Index { base, indices } => LValue::Index {
+                        base: base.clone(),
+                        indices: indices.iter().map(|i| subst_expr(i, var, value)).collect(),
+                    },
+                },
+                op: *op,
+                value: subst_expr(v, var, value),
+            },
+            Stmt::If { cond, then, els } => Stmt::If {
+                cond: subst_expr(cond, var, value),
+                then: subst_var(then, var, value),
+                els: subst_var(els, var, value),
+            },
+            Stmt::For { var: v2, init, cond, step, body } => Stmt::For {
+                var: v2.clone(),
+                init: subst_expr(init, var, value),
+                cond: subst_expr(cond, var, value),
+                step: subst_expr(step, var, value),
+                // Shadowing is impossible (sema rejects it), substitute on.
+                body: subst_var(body, var, value),
+            },
+            Stmt::While { cond, body } => Stmt::While {
+                cond: subst_expr(cond, var, value),
+                body: subst_var(body, var, value),
+            },
+            Stmt::ExprStmt(e) => Stmt::ExprStmt(subst_expr(e, var, value)),
+            other => other.clone(),
+        })
+        .collect()
+}
+
+/// Apply the unroll configuration to a statement list. `factors` maps the
+/// 1-based pre-order loop id to its factor (0 = full, 1 = none, k =
+/// partial). Loop ids must match [`crate::analysis::loops::collect`].
+pub fn apply(
+    stmts: &[Stmt],
+    env: &ConstEnv,
+    factors: &BTreeMap<usize, usize>,
+) -> Vec<Stmt> {
+    let mut next_id = 1usize;
+    rec(stmts, env, factors, &mut next_id)
+}
+
+fn rec(
+    stmts: &[Stmt],
+    env: &ConstEnv,
+    factors: &BTreeMap<usize, usize>,
+    next_id: &mut usize,
+) -> Vec<Stmt> {
+    let mut out = Vec::new();
+    for s in stmts {
+        match s {
+            Stmt::For { var, init, cond, step, body } => {
+                let id = *next_id;
+                *next_id += 1;
+                let factor = factors.get(&id).copied().unwrap_or(1);
+                let values = env.loop_values_ordered(init, cond, step, var);
+                // Recurse first so inner loop ids are assigned in pre-order
+                // regardless of what happens to this loop.
+                let body = rec(body, env, factors, next_id);
+                match (factor, values) {
+                    (1, _) | (_, None) => out.push(Stmt::For {
+                        var: var.clone(),
+                        init: init.clone(),
+                        cond: cond.clone(),
+                        step: step.clone(),
+                        body,
+                    }),
+                    (0, Some(values)) => {
+                        // Full unroll.
+                        for v in values {
+                            out.extend(subst_var(&body, var, v));
+                        }
+                    }
+                    (k, Some(vals)) => {
+                        let stride_ok =
+                            vals.len() > 1 && vals[1] > vals[0];
+                        if k >= vals.len() || vals.len() % k != 0 || !stride_ok {
+                            // Fall back to full unroll (see module docs).
+                            for v in vals {
+                                out.extend(subst_var(&body, var, v));
+                            }
+                        } else {
+                            // Partial: iterate over chunk starts, emit k
+                            // copies per iteration. The iteration values of
+                            // a restricted loop are an arithmetic sequence,
+                            // so chunk c covers vals[c*k + j].
+                            let stride = if vals.len() > 1 { vals[1] - vals[0] } else { 1 };
+                            let chunk_var = format!("{var}__c");
+                            let mut chunk_body = Vec::new();
+                            for j in 0..k {
+                                // var = chunk_var + j*stride
+                                let val = Expr::add(
+                                    Expr::ident(&chunk_var),
+                                    Expr::int(j as i64 * stride),
+                                );
+                                chunk_body.push(Stmt::Decl {
+                                    ty: ScalarType::I32,
+                                    name: format!("{var}__{j}"),
+                                    init: Some(val),
+                                });
+                                let renamed = rename_var(&body, var, &format!("{var}__{j}"));
+                                chunk_body.extend(renamed);
+                            }
+                            out.push(Stmt::For {
+                                var: chunk_var,
+                                init: Expr::int(vals[0]),
+                                cond: Expr::bin(
+                                    BinOp::Le,
+                                    Expr::ident(&format!("{var}__c")),
+                                    Expr::int(*vals.last().unwrap()),
+                                ),
+                                step: Expr::int(stride * k as i64),
+                                body: chunk_body,
+                            });
+                        }
+                    }
+                }
+            }
+            Stmt::If { cond, then, els } => out.push(Stmt::If {
+                cond: cond.clone(),
+                then: rec(then, env, factors, next_id),
+                els: rec(els, env, factors, next_id),
+            }),
+            Stmt::While { cond, body } => out.push(Stmt::While {
+                cond: cond.clone(),
+                body: rec(body, env, factors, next_id),
+            }),
+            other => out.push(other.clone()),
+        }
+    }
+    out
+}
+
+/// Rename a variable (for partial-unroll copies, where each copy needs its
+/// own binding of the induction variable).
+fn rename_var(stmts: &[Stmt], from: &str, to: &str) -> Vec<Stmt> {
+    fn ren(e: &Expr, from: &str, to: &str) -> Expr {
+        e.clone().map(|e| match e {
+            Expr::Ident(ref n) if n == from => Expr::ident(to),
+            other => other,
+        })
+    }
+    stmts
+        .iter()
+        .map(|s| match s {
+            Stmt::Decl { ty, name, init } => Stmt::Decl {
+                ty: *ty,
+                name: name.clone(),
+                init: init.as_ref().map(|e| ren(e, from, to)),
+            },
+            Stmt::Assign { lhs, op, value } => Stmt::Assign {
+                lhs: match lhs {
+                    LValue::Var(n) => LValue::Var(n.clone()),
+                    LValue::Index { base, indices } => LValue::Index {
+                        base: base.clone(),
+                        indices: indices.iter().map(|i| ren(i, from, to)).collect(),
+                    },
+                },
+                op: *op,
+                value: ren(value, from, to),
+            },
+            Stmt::If { cond, then, els } => Stmt::If {
+                cond: ren(cond, from, to),
+                then: rename_var(then, from, to),
+                els: rename_var(els, from, to),
+            },
+            Stmt::For { var, init, cond, step, body } => Stmt::For {
+                var: var.clone(),
+                init: ren(init, from, to),
+                cond: ren(cond, from, to),
+                step: ren(step, from, to),
+                body: rename_var(body, from, to),
+            },
+            Stmt::While { cond, body } => Stmt::While {
+                cond: ren(cond, from, to),
+                body: rename_var(body, from, to),
+            },
+            Stmt::ExprStmt(e) => Stmt::ExprStmt(ren(e, from, to)),
+            other => other.clone(),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::imagecl::Program;
+
+    fn unrolled(src: &str, factors: &[(usize, usize)]) -> Vec<Stmt> {
+        let p = Program::parse(src).unwrap();
+        let env = ConstEnv::build(&p.kernel);
+        apply(
+            &p.kernel.body,
+            &env,
+            &factors.iter().copied().collect::<BTreeMap<_, _>>(),
+        )
+    }
+
+    #[test]
+    fn full_unroll_replaces_loop() {
+        let body = unrolled(
+            "void k(float* a) { for (int i = 0; i < 3; i++) { a[idx + i] = 0.0f; } }",
+            &[(1, 0)],
+        );
+        assert_eq!(body.len(), 3);
+        let mut s = String::new();
+        print_stmts(&body, 0, &mut s);
+        assert!(s.contains("a[idx + 0] = 0.0f;"));
+        assert!(s.contains("a[idx + 2] = 0.0f;"));
+        assert!(!s.contains("for"));
+    }
+
+    #[test]
+    fn no_factor_keeps_loop() {
+        let body = unrolled(
+            "void k(float* a) { for (int i = 0; i < 3; i++) { a[idx + i] = 0.0f; } }",
+            &[],
+        );
+        assert_eq!(body.len(), 1);
+        assert!(matches!(body[0], Stmt::For { .. }));
+    }
+
+    #[test]
+    fn nested_ids_in_preorder() {
+        // Unroll only loop 2 (the inner one).
+        let body = unrolled(
+            "void k(float* a) {\n\
+               for (int i = 0; i < 2; i++) {\n\
+                 for (int j = 0; j < 2; j++) { a[idx + i + j] = 0.0f; }\n\
+               }\n\
+             }",
+            &[(2, 0)],
+        );
+        let mut s = String::new();
+        print_stmts(&body, 0, &mut s);
+        assert!(s.contains("for (int i = 0;"));
+        assert!(!s.contains("for (int j"));
+        assert!(s.contains("a[idx + i + 0] = 0.0f;"));
+        assert!(s.contains("a[idx + i + 1] = 0.0f;"));
+    }
+
+    #[test]
+    fn partial_unroll_divisible() {
+        let body = unrolled(
+            "void k(float* a) { for (int i = 0; i < 4; i++) { a[idx + i] = 0.0f; } }",
+            &[(1, 2)],
+        );
+        assert_eq!(body.len(), 1);
+        let mut s = String::new();
+        print_stmts(&body, 0, &mut s);
+        // Chunked loop with 2 copies per iteration.
+        assert!(s.contains("for (int i__c = 0;"), "{s}");
+        assert!(s.contains("int i__0 = i__c + 0;"), "{s}");
+        assert!(s.contains("int i__1 = i__c + 1;"), "{s}");
+        assert!(s.contains("a[idx + i__0] = 0.0f;"), "{s}");
+    }
+
+    #[test]
+    fn partial_unroll_non_divisible_falls_back_to_full() {
+        let body = unrolled(
+            "void k(float* a) { for (int i = 0; i < 5; i++) { a[idx + i] = 0.0f; } }",
+            &[(1, 2)],
+        );
+        assert_eq!(body.len(), 5);
+    }
+
+    #[test]
+    fn runtime_loop_untouched() {
+        let body = unrolled(
+            "void k(float* a, int n) { for (int i = 0; i < n; i++) { a[idx + i] = 0.0f; } }",
+            &[(1, 0)],
+        );
+        assert!(matches!(body[0], Stmt::For { .. }));
+    }
+
+    #[test]
+    fn negative_range_unroll() {
+        let body = unrolled(
+            "void k(float* a) { for (int i = -1; i < 2; i++) { a[idx + i] = 0.0f; } }",
+            &[(1, 0)],
+        );
+        assert_eq!(body.len(), 3);
+        let mut s = String::new();
+        print_stmts(&body, 0, &mut s);
+        assert!(s.contains("a[idx + -1] = 0.0f;"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Featurization of tuning configurations for the ML performance model.
+//!
+//! The feature layout is fixed per kernel (derived from the analysis), so
+//! one model serves one (kernel, device) tuning run — matching the
+//! auto-tuner of the paper's reference [5].
+
+use crate::analysis::KernelInfo;
+use crate::transform::TuningConfig;
+
+/// Stable feature layout for one kernel.
+#[derive(Debug, Clone)]
+pub struct FeatureMap {
+    /// Buffer names with any tunable memory space, sorted.
+    pub arrays: Vec<String>,
+    /// Unrollable loop ids, ascending.
+    pub loops: Vec<usize>,
+}
+
+impl FeatureMap {
+    pub fn new(info: &KernelInfo) -> FeatureMap {
+        let mut arrays: Vec<String> = info
+            .prog
+            .kernel
+            .params
+            .iter()
+            .filter(|p| p.ty.is_buffer())
+            .map(|p| p.name.clone())
+            .collect();
+        arrays.sort();
+        let loops = info.unrollable_loops().iter().map(|l| l.id).collect();
+        FeatureMap { arrays, loops }
+    }
+
+    /// Number of features produced.
+    pub fn dim(&self) -> usize {
+        7 + 3 * self.arrays.len() + self.loops.len()
+    }
+
+    /// Encode a configuration.
+    pub fn features(&self, cfg: &TuningConfig) -> Vec<f64> {
+        let lg = |v: usize| (v as f64).log2();
+        let mut f = vec![
+            lg(cfg.wg[0]),
+            lg(cfg.wg[1]),
+            lg(cfg.coarsen[0]),
+            lg(cfg.coarsen[1]),
+            if cfg.interleaved { 1.0 } else { 0.0 },
+            lg(cfg.wg_threads()),
+            lg(cfg.pixels_per_thread()),
+        ];
+        for a in &self.arrays {
+            f.push(cfg.uses_image_mem(a) as u8 as f64);
+            f.push(cfg.uses_constant_mem(a) as u8 as f64);
+            f.push(cfg.uses_local_mem(a) as u8 as f64);
+        }
+        for &l in &self.loops {
+            f.push(if cfg.unroll_factor(l) == 1 { 0.0 } else { 1.0 });
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::KernelInfo;
+    use crate::bench_defs::SEPCONV_ROW;
+    use crate::imagecl::frontend;
+
+    #[test]
+    fn layout_and_encoding() {
+        let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+        let fm = FeatureMap::new(&info);
+        assert_eq!(fm.arrays, vec!["f", "in", "out"]);
+        assert_eq!(fm.loops, vec![1]);
+        assert_eq!(fm.dim(), 7 + 9 + 1);
+
+        let mut cfg = TuningConfig { wg: [64, 4], coarsen: [4, 1], ..Default::default() };
+        cfg.local_mem.insert("in".into(), true);
+        cfg.constant_mem.insert("f".into(), true);
+        cfg.unroll.insert(1, 0);
+        let f = fm.features(&cfg);
+        assert_eq!(f.len(), fm.dim());
+        assert_eq!(f[0], 6.0); // log2 64
+        assert_eq!(f[2], 2.0); // log2 4
+        assert_eq!(f[4], 0.0); // blocked
+        // f: img, const, local
+        assert_eq!(&f[7..10], &[0.0, 1.0, 0.0]);
+        // in: img, const, local
+        assert_eq!(&f[10..13], &[0.0, 0.0, 1.0]);
+        // unroll flag
+        assert_eq!(f[16], 1.0);
+    }
+
+    #[test]
+    fn distinct_configs_distinct_features() {
+        let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+        let fm = FeatureMap::new(&info);
+        let a = fm.features(&TuningConfig::default());
+        let b = fm.features(&TuningConfig { interleaved: true, ..Default::default() });
+        assert_ne!(a, b);
+    }
+}

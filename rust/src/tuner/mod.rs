@@ -1,0 +1,111 @@
+//! The auto-tuner (paper §4): enumerate the tuning space for a kernel,
+//! "time" candidates through an evaluator (the device simulator, or real
+//! execution through the XLA runtime), and search with the two-phase
+//! machine-learning strategy of the authors' prior work [5].
+
+pub mod features;
+pub mod nn;
+pub mod search;
+pub mod space;
+
+pub use features::FeatureMap;
+pub use nn::Mlp;
+pub use search::{exhaustive, ml_two_phase, random, MlSearchOpts, TuneResult};
+pub use space::TuningSpace;
+
+use crate::analysis::KernelInfo;
+use crate::devices::{predict, DeviceSpec, KernelModel};
+use crate::transform::TuningConfig;
+
+/// Search strategy selector.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Strategy {
+    Exhaustive,
+    Random { evals: usize, seed: u64 },
+    MlTwoPhase(MlSearchOpts),
+}
+
+impl Default for Strategy {
+    fn default() -> Self {
+        Strategy::MlTwoPhase(MlSearchOpts::default())
+    }
+}
+
+/// Tune one kernel for one device against the analytical device model
+/// (the GPU path; the CPU additionally supports real execution — see
+/// `runtime`).
+pub fn tune_on_simulator(
+    info: &KernelInfo,
+    dev: &DeviceSpec,
+    grid: (usize, usize),
+    strategy: &Strategy,
+) -> TuneResult {
+    let space = TuningSpace::enumerate(info, dev);
+    let eval = |cfg: &TuningConfig| {
+        let km = KernelModel::build(info, cfg);
+        predict(dev, &km, grid.0, grid.1).seconds
+    };
+    run(&space, info, strategy, eval)
+}
+
+/// Tune with a caller-provided evaluator (e.g. real execution timing).
+pub fn tune_with(
+    info: &KernelInfo,
+    dev: &DeviceSpec,
+    strategy: &Strategy,
+    eval: impl FnMut(&TuningConfig) -> f64,
+) -> TuneResult {
+    let space = TuningSpace::enumerate(info, dev);
+    run(&space, info, strategy, eval)
+}
+
+fn run(
+    space: &TuningSpace,
+    info: &KernelInfo,
+    strategy: &Strategy,
+    eval: impl FnMut(&TuningConfig) -> f64,
+) -> TuneResult {
+    match strategy {
+        Strategy::Exhaustive => exhaustive(space, eval),
+        Strategy::Random { evals, seed } => random(space, *evals, *seed, eval),
+        Strategy::MlTwoPhase(opts) => {
+            let fm = FeatureMap::new(info);
+            ml_two_phase(space, &fm, opts, eval)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::SEPCONV_ROW;
+    use crate::devices::{AMD_7970, INTEL_I7};
+    use crate::imagecl::frontend;
+
+    #[test]
+    fn tuned_configs_reflect_device_character() {
+        let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+        let budget = if cfg!(debug_assertions) { 150 } else { 400 };
+        let opts = MlSearchOpts {
+            train_samples: budget,
+            top_k: budget / 7,
+            epochs: 20,
+            ..Default::default()
+        };
+        let strategy = Strategy::MlTwoPhase(opts);
+        let amd = tune_on_simulator(&info, &AMD_7970, (1024, 1024), &strategy);
+        let cpu = tune_on_simulator(&info, &INTEL_I7, (1024, 1024), &strategy);
+        // Paper Table 2 shape: the CPU wants far more pixels per thread
+        // than the GPU, and never image memory.
+        assert!(
+            cpu.best.pixels_per_thread() > amd.best.pixels_per_thread(),
+            "cpu {} vs amd {}",
+            cpu.best,
+            amd.best
+        );
+        assert!(!cpu.best.uses_image_mem("in"));
+        // Constant memory is chosen everywhere (Table 2 bottom row).
+        assert!(amd.best.uses_constant_mem("f"), "{}", amd.best);
+        assert!(cpu.best.uses_constant_mem("f"), "{}", cpu.best);
+    }
+}

@@ -1,0 +1,307 @@
+//! A small feed-forward neural network, implemented from scratch (no
+//! external crates are available offline).
+//!
+//! This is the performance model of the paper's machine-learning
+//! auto-tuner (ref [5] of the paper): it learns `log(time)` from tuning
+//! configuration features of executed candidates, then predicts the whole
+//! space cheaply. Architecture: dense layers with tanh hidden units and a
+//! linear output, trained with Adam on mean-squared error.
+
+use crate::testutil::Rng;
+
+/// One dense layer: `y = act(W x + b)`.
+#[derive(Debug, Clone)]
+struct Dense {
+    inp: usize,
+    out: usize,
+    w: Vec<f64>, // out × inp, row-major
+    b: Vec<f64>,
+    tanh: bool,
+    // Adam state.
+    mw: Vec<f64>,
+    vw: Vec<f64>,
+    mb: Vec<f64>,
+    vb: Vec<f64>,
+}
+
+impl Dense {
+    fn new(inp: usize, out: usize, tanh: bool, rng: &mut Rng) -> Dense {
+        // Xavier-ish init.
+        let scale = (2.0 / (inp + out) as f64).sqrt();
+        let w = (0..inp * out)
+            .map(|_| (rng.unit() * 2.0 - 1.0) * scale)
+            .collect();
+        Dense {
+            inp,
+            out,
+            w,
+            b: vec![0.0; out],
+            tanh,
+            mw: vec![0.0; inp * out],
+            vw: vec![0.0; inp * out],
+            mb: vec![0.0; out],
+            vb: vec![0.0; out],
+        }
+    }
+
+    fn forward(&self, x: &[f64], pre: &mut Vec<f64>, post: &mut Vec<f64>) {
+        pre.clear();
+        post.clear();
+        for o in 0..self.out {
+            let mut s = self.b[o];
+            let row = &self.w[o * self.inp..(o + 1) * self.inp];
+            for (wi, xi) in row.iter().zip(x) {
+                s += wi * xi;
+            }
+            pre.push(s);
+            post.push(if self.tanh { s.tanh() } else { s });
+        }
+    }
+}
+
+/// The MLP performance model.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    layers: Vec<Dense>,
+    /// Adam step counter.
+    t: usize,
+    /// Normalization of inputs (per-feature mean/std) and target.
+    x_mean: Vec<f64>,
+    x_std: Vec<f64>,
+    y_mean: f64,
+    y_std: f64,
+}
+
+/// Adam hyper-parameters.
+const LR: f64 = 3e-3;
+const BETA1: f64 = 0.9;
+const BETA2: f64 = 0.999;
+const EPS: f64 = 1e-8;
+
+impl Mlp {
+    /// Build an MLP with the given hidden sizes (e.g. `[32, 16]`).
+    pub fn new(inputs: usize, hidden: &[usize], seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        let mut prev = inputs;
+        for &h in hidden {
+            layers.push(Dense::new(prev, h, true, &mut rng));
+            prev = h;
+        }
+        layers.push(Dense::new(prev, 1, false, &mut rng));
+        Mlp {
+            layers,
+            t: 0,
+            x_mean: vec![0.0; inputs],
+            x_std: vec![1.0; inputs],
+            y_mean: 0.0,
+            y_std: 1.0,
+        }
+    }
+
+    fn normalize(&self, x: &[f64]) -> Vec<f64> {
+        x.iter()
+            .zip(self.x_mean.iter().zip(&self.x_std))
+            .map(|(v, (m, s))| (v - m) / s)
+            .collect()
+    }
+
+    /// Predict the (denormalized) target for one feature vector.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut cur = self.normalize(x);
+        let (mut pre, mut post) = (Vec::new(), Vec::new());
+        for l in &self.layers {
+            l.forward(&cur, &mut pre, &mut post);
+            cur = post.clone();
+        }
+        cur[0] * self.y_std + self.y_mean
+    }
+
+    /// Fit on a dataset with mini-batch Adam. `xs` are raw features, `ys`
+    /// raw targets (normalization is fitted here).
+    pub fn fit(&mut self, xs: &[Vec<f64>], ys: &[f64], epochs: usize, seed: u64) {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty());
+        let n = xs.len();
+        let d = xs[0].len();
+
+        // Fit normalization.
+        self.x_mean = vec![0.0; d];
+        self.x_std = vec![0.0; d];
+        for x in xs {
+            for (i, v) in x.iter().enumerate() {
+                self.x_mean[i] += v;
+            }
+        }
+        for m in &mut self.x_mean {
+            *m /= n as f64;
+        }
+        for x in xs {
+            for (i, v) in x.iter().enumerate() {
+                self.x_std[i] += (v - self.x_mean[i]).powi(2);
+            }
+        }
+        for s in &mut self.x_std {
+            *s = (*s / n as f64).sqrt().max(1e-9);
+        }
+        self.y_mean = ys.iter().sum::<f64>() / n as f64;
+        self.y_std = (ys.iter().map(|y| (y - self.y_mean).powi(2)).sum::<f64>()
+            / n as f64)
+            .sqrt()
+            .max(1e-9);
+
+        let xn: Vec<Vec<f64>> = xs.iter().map(|x| self.normalize(x)).collect();
+        let yn: Vec<f64> = ys.iter().map(|y| (y - self.y_mean) / self.y_std).collect();
+
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(seed ^ 0xA5A5);
+        for _ in 0..epochs {
+            // Shuffle (Fisher-Yates).
+            for i in (1..n).rev() {
+                order.swap(i, rng.below(i + 1));
+            }
+            for &i in &order {
+                self.step(&xn[i], yn[i]);
+            }
+        }
+    }
+
+    /// One SGD/Adam step on a single (normalized) sample.
+    fn step(&mut self, x: &[f64], y: f64) {
+        // Forward, keeping activations.
+        let mut acts: Vec<Vec<f64>> = vec![x.to_vec()];
+        let mut pres: Vec<Vec<f64>> = Vec::new();
+        {
+            let (mut pre, mut post) = (Vec::new(), Vec::new());
+            let mut cur = x.to_vec();
+            for l in &self.layers {
+                l.forward(&cur, &mut pre, &mut post);
+                pres.push(pre.clone());
+                acts.push(post.clone());
+                cur = post.clone();
+            }
+        }
+        let out = acts.last().unwrap()[0];
+        // dL/dout for L = (out - y)^2.
+        let mut grad = vec![2.0 * (out - y)];
+
+        self.t += 1;
+        let t = self.t as f64;
+        let bias1 = 1.0 - BETA1.powf(t);
+        let bias2 = 1.0 - BETA2.powf(t);
+
+        for li in (0..self.layers.len()).rev() {
+            let l = &mut self.layers[li];
+            let input = &acts[li];
+            let mut next_grad = vec![0.0; l.inp];
+            for o in 0..l.out {
+                // Through activation.
+                let g = if l.tanh {
+                    let th = pres[li][o].tanh();
+                    grad[o] * (1.0 - th * th)
+                } else {
+                    grad[o]
+                };
+                // Bias.
+                let mb = &mut l.mb[o];
+                let vb = &mut l.vb[o];
+                *mb = BETA1 * *mb + (1.0 - BETA1) * g;
+                *vb = BETA2 * *vb + (1.0 - BETA2) * g * g;
+                l.b[o] -= LR * (*mb / bias1) / ((*vb / bias2).sqrt() + EPS);
+                // Weights + input grad.
+                for i in 0..l.inp {
+                    let idx = o * l.inp + i;
+                    let gw = g * input[i];
+                    next_grad[i] += g * l.w[idx];
+                    let mw = &mut l.mw[idx];
+                    let vw = &mut l.vw[idx];
+                    *mw = BETA1 * *mw + (1.0 - BETA1) * gw;
+                    *vw = BETA2 * *vw + (1.0 - BETA2) * gw * gw;
+                    l.w[idx] -= LR * (*mw / bias1) / ((*vw / bias2).sqrt() + EPS);
+                }
+            }
+            grad = next_grad;
+        }
+    }
+
+    /// Mean-squared error on a dataset (raw units).
+    pub fn mse(&self, xs: &[Vec<f64>], ys: &[f64]) -> f64 {
+        xs.iter()
+            .zip(ys)
+            .map(|(x, y)| (self.predict(x) - y).powi(2))
+            .sum::<f64>()
+            / xs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_linear_function() {
+        let mut rng = Rng::new(1);
+        let xs: Vec<Vec<f64>> = (0..200)
+            .map(|_| vec![rng.unit() * 4.0 - 2.0, rng.unit() * 4.0 - 2.0])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x[0] - 2.0 * x[1] + 1.0).collect();
+        let mut nn = Mlp::new(2, &[16], 7);
+        nn.fit(&xs, &ys, 200, 3);
+        let mse = nn.mse(&xs, &ys);
+        assert!(mse < 0.05, "mse {mse}");
+    }
+
+    #[test]
+    fn learns_nonlinear_interaction() {
+        // The kind of structure tuning spaces have: multiplicative
+        // interactions and a sweet spot.
+        let mut rng = Rng::new(2);
+        let xs: Vec<Vec<f64>> = (0..400)
+            .map(|_| vec![rng.unit() * 2.0, rng.unit() * 2.0])
+            .collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|x| (x[0] - 1.0).powi(2) + (x[0] * x[1]).sin())
+            .collect();
+        let mut nn = Mlp::new(2, &[24, 12], 11);
+        nn.fit(&xs, &ys, 300, 5);
+        let mse = nn.mse(&xs, &ys);
+        assert!(mse < 0.05, "mse {mse}");
+    }
+
+    #[test]
+    fn gradient_check() {
+        // Finite-difference check of the backprop (single layer, one
+        // weight): loss must decrease along the analytic gradient.
+        let xs = vec![vec![0.5, -1.0], vec![-0.25, 0.75], vec![1.0, 0.1]];
+        let ys = vec![1.0, -0.5, 0.25];
+        let mut nn = Mlp::new(2, &[4], 3);
+        let before = nn.mse(&xs, &ys);
+        nn.fit(&xs, &ys, 50, 9);
+        let after = nn.mse(&xs, &ys);
+        assert!(after < before, "training increased loss: {before} -> {after}");
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let xs: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64 / 50.0]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x[0] * x[0]).collect();
+        let mut a = Mlp::new(1, &[8], 5);
+        let mut b = Mlp::new(1, &[8], 5);
+        a.fit(&xs, &ys, 50, 13);
+        b.fit(&xs, &ys, 50, 13);
+        for x in &xs {
+            assert_eq!(a.predict(x), b.predict(x));
+        }
+    }
+
+    #[test]
+    fn normalization_handles_constant_features() {
+        // A constant feature (std 0) must not produce NaNs.
+        let xs = vec![vec![1.0, 5.0], vec![2.0, 5.0], vec![3.0, 5.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        let mut nn = Mlp::new(2, &[4], 1);
+        nn.fit(&xs, &ys, 100, 2);
+        assert!(nn.predict(&[2.0, 5.0]).is_finite());
+    }
+}

@@ -1,0 +1,289 @@
+//! Tuning-space enumeration (paper §5.2, Table 1).
+//!
+//! The compiler analysis determines which parameters exist for a kernel
+//! (which arrays are image/constant/local eligible, which loops unroll);
+//! the device bounds work-group sizes and memory capacities. The space is
+//! the cross product, filtered for validity.
+
+use std::collections::BTreeMap;
+
+use crate::analysis::KernelInfo;
+use crate::devices::DeviceSpec;
+use crate::imagecl::Forced;
+use crate::transform::TuningConfig;
+
+/// Candidate values for each axis. Mirrors the ranges seen in the paper's
+/// result tables (work-groups up to 128 wide, coarsening up to 256 on the
+/// CPU).
+pub const WG_X: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+pub const WG_Y: [usize; 6] = [1, 2, 4, 8, 16, 32];
+pub const COARSEN_X: [usize; 8] = [1, 2, 4, 8, 16, 32, 128, 256];
+pub const COARSEN_Y: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Per-array memory-space choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ArraySpace {
+    Global,
+    Image,
+    Local,
+}
+
+/// The enumerated tuning space for one (kernel, device) pair.
+#[derive(Debug, Clone)]
+pub struct TuningSpace {
+    pub configs: Vec<TuningConfig>,
+}
+
+impl TuningSpace {
+    /// Enumerate all valid configurations.
+    pub fn enumerate(info: &KernelInfo, dev: &DeviceSpec) -> TuningSpace {
+        // Axis: memory space per buffer.
+        let mut mem_axes: Vec<(String, Vec<ArraySpace>)> = Vec::new();
+        let mut const_axes: Vec<String> = Vec::new();
+        for p in &info.prog.kernel.params {
+            if !p.ty.is_buffer() {
+                continue;
+            }
+            let name = &p.name;
+            let mut spaces = vec![ArraySpace::Global];
+            // Respect force(...) directives: forced-on removes the off
+            // branch, forced-off removes the on branch (eligibility
+            // helpers already handle Off).
+            if info.image_mem_eligible(name) {
+                if info.prog.force_image_mem.get(name) == Some(&Forced::On) {
+                    spaces = vec![ArraySpace::Image];
+                } else {
+                    spaces.push(ArraySpace::Image);
+                }
+            }
+            if info.local_mem_eligible(name) {
+                if info.prog.force_local_mem.get(name) == Some(&Forced::On) {
+                    spaces = vec![ArraySpace::Local];
+                } else {
+                    spaces.push(ArraySpace::Local);
+                }
+            }
+            if spaces.len() > 1 || spaces[0] != ArraySpace::Global {
+                mem_axes.push((name.clone(), spaces));
+            }
+            if info.constant_mem_eligible(name, dev.constant_mem_bytes()) {
+                const_axes.push(name.clone());
+            }
+        }
+        let unroll_axes: Vec<usize> =
+            info.unrollable_loops().iter().map(|l| l.id).collect();
+
+        let interleave_choices: &[bool] = match info.prog.force_interleaved {
+            Forced::On => &[true],
+            Forced::Off => &[false],
+            Forced::Tunable => &[false, true],
+        };
+
+        let mut configs = Vec::new();
+        for &wx in &WG_X {
+            for &wy in &WG_Y {
+                if wx * wy > dev.max_wg || wx * wy == 0 {
+                    continue;
+                }
+                // Degenerate work-groups waste the whole SIMD width; they
+                // are valid but dominated — keep a few for the tuner to
+                // discover that itself, but bound the explosion.
+                if wx * wy < 4 && wx * wy != 1 {
+                    continue;
+                }
+                for &cx in &COARSEN_X {
+                    for &cy in &COARSEN_Y {
+                        if cx * cy > 512 {
+                            continue;
+                        }
+                        for &inter in interleave_choices {
+                            // Memory-space assignment cross product.
+                            let mut assignments: Vec<BTreeMap<String, ArraySpace>> =
+                                vec![BTreeMap::new()];
+                            for (name, spaces) in &mem_axes {
+                                let mut next = Vec::new();
+                                for a in &assignments {
+                                    for &s in spaces {
+                                        let mut a2 = a.clone();
+                                        a2.insert(name.clone(), s);
+                                        next.push(a2);
+                                    }
+                                }
+                                assignments = next;
+                            }
+                            // Constant memory: per paper tables it is an
+                            // independent on/off per eligible array; it is
+                            // almost always on — enumerate both.
+                            let mut const_sets: Vec<Vec<String>> = vec![vec![]];
+                            for c in &const_axes {
+                                let mut next = Vec::new();
+                                for s in &const_sets {
+                                    next.push(s.clone());
+                                    let mut s2 = s.clone();
+                                    s2.push(c.clone());
+                                    next.push(s2);
+                                }
+                                const_sets = next;
+                            }
+                            // Unroll: binary none/full per loop.
+                            let n_unroll = unroll_axes.len() as u32;
+                            for assignment in &assignments {
+                                for const_set in &const_sets {
+                                    for umask in 0..(1u32 << n_unroll) {
+                                        let mut cfg = TuningConfig {
+                                            wg: [wx, wy],
+                                            coarsen: [cx, cy],
+                                            interleaved: inter,
+                                            ..Default::default()
+                                        };
+                                        for (name, s) in assignment {
+                                            match s {
+                                                ArraySpace::Image => {
+                                                    cfg.image_mem
+                                                        .insert(name.clone(), true);
+                                                }
+                                                ArraySpace::Local => {
+                                                    cfg.local_mem
+                                                        .insert(name.clone(), true);
+                                                }
+                                                ArraySpace::Global => {}
+                                            }
+                                        }
+                                        for c in const_set {
+                                            cfg.constant_mem.insert(c.clone(), true);
+                                        }
+                                        for (bit, &lid) in unroll_axes.iter().enumerate()
+                                        {
+                                            if umask >> bit & 1 == 1 {
+                                                cfg.unroll.insert(lid, 0);
+                                            }
+                                        }
+                                        if Self::locally_valid(info, dev, &cfg) {
+                                            configs.push(cfg);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        TuningSpace { configs }
+    }
+
+    /// Cheap validity pre-filter (full validity including local-memory
+    /// capacity is re-checked by the device model, which returns
+    /// `Prediction::INVALID`).
+    fn locally_valid(info: &KernelInfo, dev: &DeviceSpec, cfg: &TuningConfig) -> bool {
+        if cfg.wg_threads() > dev.max_wg {
+            return false;
+        }
+        // Local tiles must fit the device scratchpad.
+        if cfg.any_local_mem() {
+            let tile = cfg.group_tile();
+            let mut bytes = 0usize;
+            for (name, &on) in &cfg.local_mem {
+                if !on {
+                    continue;
+                }
+                let Some(st) = info.read_stencil(name) else {
+                    return false;
+                };
+                let elem = info
+                    .prog
+                    .kernel
+                    .param(name)
+                    .map(|p| p.ty.elem().size_bytes())
+                    .unwrap_or(4);
+                bytes += (tile[0] + st.extent_x() as usize)
+                    * (tile[1] + st.extent_y() as usize)
+                    * elem;
+            }
+            if bytes > dev.local_mem_per_cu {
+                return false;
+            }
+        }
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::KernelInfo;
+    use crate::bench_defs::{CONV2D, SEPCONV_ROW, SOBEL};
+    use crate::devices::{AMD_7970, INTEL_I7, K40};
+    use crate::imagecl::frontend;
+    use crate::transform::lower;
+
+    fn space(src: &str, dev: &DeviceSpec) -> (KernelInfo, TuningSpace) {
+        let info = KernelInfo::analyze(frontend(src).unwrap());
+        let sp = TuningSpace::enumerate(&info, dev);
+        (info, sp)
+    }
+
+    #[test]
+    fn space_is_large_but_bounded() {
+        let (_, sp) = space(SEPCONV_ROW, &K40);
+        // Thousands of candidates (paper: ~1700 *executed* in search out
+        // of a larger space).
+        assert!(sp.len() > 2_000, "{}", sp.len());
+        assert!(sp.len() < 300_000, "{}", sp.len());
+    }
+
+    #[test]
+    fn all_enumerated_configs_lower() {
+        let (info, sp) = space(CONV2D, &K40);
+        // Lower a deterministic sample (every 97th) — must never error.
+        for cfg in sp.configs.iter().step_by(97) {
+            lower(&info, cfg).unwrap_or_else(|e| panic!("{cfg}: {e}"));
+        }
+    }
+
+    #[test]
+    fn wg_respects_device_max() {
+        let (_, sp) = space(SOBEL, &AMD_7970);
+        assert!(sp.configs.iter().all(|c| c.wg_threads() <= 256));
+        let (_, sp) = space(SOBEL, &K40);
+        assert!(sp.configs.iter().any(|c| c.wg_threads() > 256));
+    }
+
+    #[test]
+    fn local_tiles_fit_scratchpad() {
+        let (info, sp) = space(CONV2D, &K40);
+        for cfg in sp.configs.iter().filter(|c| c.any_local_mem()) {
+            let tile = cfg.group_tile();
+            let st = info.read_stencil("in").unwrap();
+            let bytes =
+                (tile[0] + st.extent_x() as usize) * (tile[1] + st.extent_y() as usize);
+            assert!(bytes <= K40.local_mem_per_cu, "{cfg}");
+        }
+    }
+
+    #[test]
+    fn forced_directives_shrink_space() {
+        let forced = format!(
+            "#pragma imcl force(local_mem(in), on)\n#pragma imcl force(interleaved, off)\n{}",
+            SEPCONV_ROW.trim_start()
+        );
+        let info = KernelInfo::analyze(frontend(&forced).unwrap());
+        let sp = TuningSpace::enumerate(&info, &K40);
+        assert!(sp.configs.iter().all(|c| c.uses_local_mem("in")));
+        assert!(sp.configs.iter().all(|c| !c.interleaved));
+    }
+
+    #[test]
+    fn cpu_space_contains_heavy_coarsening() {
+        let (_, sp) = space(SEPCONV_ROW, &INTEL_I7);
+        assert!(sp.configs.iter().any(|c| c.coarsen[0] >= 128));
+    }
+}

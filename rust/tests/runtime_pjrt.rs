@@ -1,0 +1,154 @@
+//! Runtime integration: load AOT artifacts (built by `make artifacts`),
+//! execute them on the PJRT CPU client, and check numerics against the
+//! rust reference filters — proving the three layers compose:
+//! Pallas kernel (L1) → jax graph (L2) → HLO text → rust PJRT (L3).
+
+use imagecl::bench_defs::{gauss5, gauss5x5, reference, synth_image};
+use imagecl::exec::ImageBuf;
+use imagecl::imagecl::ScalarType;
+use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+
+fn runtime() -> XlaRuntime {
+    let dir = default_artifact_dir();
+    assert!(
+        dir.join("manifest.tsv").exists(),
+        "artifacts missing — run `make artifacts` first ({dir:?})"
+    );
+    XlaRuntime::new(&dir).expect("creating runtime")
+}
+
+fn tensor_of(img: &ImageBuf) -> Tensor {
+    Tensor::new(
+        img.h,
+        img.w,
+        img.buf.data.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+const N: usize = 32;
+
+#[test]
+fn sepconv_row_artifact_matches_reference() {
+    let mut rt = runtime();
+    let img = synth_image(ScalarType::F32, N, N, 7);
+    let f5: Vec<f32> = gauss5().iter().map(|&v| v as f32).collect();
+    let x = tensor_of(&img);
+    let f = Tensor::new(5, 1, f5);
+    let out = rt
+        .execute("sepconv_row_32_bh8u1s1", &[&x, &f])
+        .expect("execute");
+    assert_eq!(out.len(), 1);
+    let want = reference::sepconv_row(&img, &gauss5());
+    for i in 0..want.len() {
+        assert!(
+            (out[0].data[i] as f64 - want[i]).abs() < 1e-3,
+            "sepconv_row differs at {i}: {} vs {}",
+            out[0].data[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn all_sepconv_variants_agree() {
+    let mut rt = runtime();
+    let img = synth_image(ScalarType::F32, N, N, 13);
+    let f5: Vec<f32> = gauss5().iter().map(|&v| v as f32).collect();
+    let x = tensor_of(&img);
+    let f = Tensor::new(5, 1, f5);
+    let ids: Vec<String> = rt
+        .manifest()
+        .variants_of("sepconv", N)
+        .iter()
+        .map(|a| a.id.clone())
+        .collect();
+    assert!(ids.len() >= 4, "expected >=4 variants, got {ids:?}");
+    let base = rt.execute(&ids[0], &[&x, &f]).unwrap();
+    for id in &ids[1..] {
+        let out = rt.execute(id, &[&x, &f]).unwrap();
+        for i in 0..base[0].data.len() {
+            assert!(
+                (out[0].data[i] - base[0].data[i]).abs() < 1e-4,
+                "{id} differs from {} at {i}",
+                ids[0]
+            );
+        }
+    }
+}
+
+#[test]
+fn conv2d_artifact_uchar_semantics() {
+    let mut rt = runtime();
+    let img = synth_image(ScalarType::U8, N, N, 21);
+    let f25: Vec<f32> = gauss5x5().iter().map(|&v| v as f32).collect();
+    let x = tensor_of(&img);
+    let f = Tensor::new(25, 1, f25);
+    let out = rt.execute("conv2d_32_bh8u1s1", &[&x, &f]).expect("execute");
+    let want = reference::conv2d(&img, &gauss5x5());
+    for i in 0..want.len() {
+        let diff = (out[0].data[i] as f64 - want[i]).abs();
+        assert!(diff <= 1.0, "conv2d differs at {i}: {} vs {}", out[0].data[i], want[i]);
+    }
+}
+
+#[test]
+fn sobel_artifact_two_outputs() {
+    let mut rt = runtime();
+    let img = synth_image(ScalarType::F32, N, N, 3);
+    let x = tensor_of(&img);
+    let out = rt.execute("sobel_32_bh8u1s1", &[&x]).expect("execute");
+    assert_eq!(out.len(), 2);
+    let (dx, dy) = reference::sobel(&img);
+    for i in 0..dx.len() {
+        assert!((out[0].data[i] as f64 - dx[i]).abs() < 1e-2);
+        assert!((out[1].data[i] as f64 - dy[i]).abs() < 1e-2);
+    }
+}
+
+#[test]
+fn harris_pipeline_artifact_end_to_end() {
+    let mut rt = runtime();
+    let img = synth_image(ScalarType::F32, N, N, 5);
+    let x = tensor_of(&img);
+    let out = rt
+        .execute("harris_pipeline_32_bh8u1s1", &[&x])
+        .expect("execute");
+    // Rust reference: sobel then harris.
+    let (dx, dy) = reference::sobel(&img);
+    let mut dximg = ImageBuf::new(ScalarType::F32, N, N);
+    let mut dyimg = ImageBuf::new(ScalarType::F32, N, N);
+    for y in 0..N {
+        for x in 0..N {
+            dximg.set(x, y, dx[y * N + x]);
+            dyimg.set(x, y, dy[y * N + x]);
+        }
+    }
+    let want = reference::harris(&dximg, &dyimg);
+    let scale = want.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for i in 0..want.len() {
+        assert!(
+            (out[0].data[i] as f64 - want[i]).abs() < 1e-4 * scale,
+            "harris differs at {i}: {} vs {}",
+            out[0].data[i],
+            want[i]
+        );
+    }
+}
+
+#[test]
+fn timing_returns_positive_best() {
+    let mut rt = runtime();
+    let img = synth_image(ScalarType::F32, N, N, 9);
+    let x = tensor_of(&img);
+    let (_, secs) = rt.time("sobel_32_bh8u1s1", &[&x], 3).unwrap();
+    assert!(secs > 0.0 && secs < 1.0, "{secs}");
+}
+
+#[test]
+fn wrong_arity_is_error() {
+    let mut rt = runtime();
+    let img = synth_image(ScalarType::F32, N, N, 9);
+    let x = tensor_of(&img);
+    assert!(rt.execute("sobel_32_bh8u1s1", &[&x, &x]).is_err());
+    assert!(rt.execute("no_such_artifact", &[&x]).is_err());
+}

@@ -1,0 +1,106 @@
+//! Tuner integration: full ML tuning runs per device on the simulator,
+//! checking the *shape* of the paper's Tables 2–5 (which optimizations
+//! each device ends up with), and the real-execution tuning path through
+//! the XLA runtime artifacts.
+
+use imagecl::analysis::KernelInfo;
+use imagecl::bench_defs::{synth_image, CONV2D, SEPCONV_ROW};
+use imagecl::devices::{AMD_7970, GTX_960, INTEL_I7, K40};
+use imagecl::imagecl::{frontend, ScalarType};
+use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use imagecl::tuner::{tune_on_simulator, MlSearchOpts, Strategy};
+
+fn fast_opts() -> Strategy {
+    let budget = if cfg!(debug_assertions) { 150 } else { 350 };
+    Strategy::MlTwoPhase(MlSearchOpts {
+        train_samples: budget,
+        top_k: budget / 7,
+        epochs: 20,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn table2_shape_sepconv_row() {
+    let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+    let strategy = fast_opts();
+
+    // AMD 7970 (paper: local memory on, constant on).
+    let amd = tune_on_simulator(&info, &AMD_7970, (1024, 1024), &strategy);
+    assert!(amd.best.uses_local_mem("in"), "7970: {}", amd.best);
+    assert!(amd.best.uses_constant_mem("f"), "7970: {}", amd.best);
+
+    // K40 (paper: image memory; Kepler's global path is the slow road).
+    // Our model ranks the texture and local paths within noise of each
+    // other here — assert the load-bearing fact: the tuner routes the
+    // stencil reads off the global path (see EXPERIMENTS.md §Deviations).
+    let k40 = tune_on_simulator(&info, &K40, (1024, 1024), &strategy);
+    assert!(
+        k40.best.uses_image_mem("in") || k40.best.uses_local_mem("in"),
+        "K40: {}",
+        k40.best
+    );
+
+    // GTX 960 (paper: neither local nor image memory for the row kernel —
+    // Maxwell's cache already serves the reuse). Local-vs-global is within
+    // noise for a memory-bound 5-tap conv (the fixed-config contrast with
+    // the 7970 is asserted in devices::model::tests); the robust fact is
+    // that the *texture* path is never preferred on Maxwell.
+    let nv = tune_on_simulator(&info, &GTX_960, (1024, 1024), &strategy);
+    assert!(!nv.best.uses_image_mem("in"), "960: {}", nv.best);
+
+    // Intel i7 (paper: px/thread 128, no image memory).
+    let cpu = tune_on_simulator(&info, &INTEL_I7, (1024, 1024), &strategy);
+    assert!(cpu.best.pixels_per_thread() >= 16, "i7: {}", cpu.best);
+    assert!(!cpu.best.uses_image_mem("in"), "i7: {}", cpu.best);
+}
+
+#[test]
+fn tuner_stats_match_paper_scale() {
+    // Paper §7: ~1700 executed candidates per device/benchmark with the
+    // default budget.
+    let info = KernelInfo::analyze(frontend(CONV2D).unwrap());
+    let opts = if cfg!(debug_assertions) {
+        MlSearchOpts { train_samples: 1500, top_k: 200, epochs: 5, ..Default::default() }
+    } else {
+        MlSearchOpts::default()
+    };
+    let res = tune_on_simulator(&info, &K40, (512, 512), &Strategy::MlTwoPhase(opts));
+    assert!(
+        (1000..=2000).contains(&res.evals),
+        "evals {} not in the paper's ballpark",
+        res.evals
+    );
+    assert!(res.space_size > res.evals * 5, "space {} too small", res.space_size);
+}
+
+#[test]
+fn real_execution_tuning_over_artifacts() {
+    // The "Intel i7" row of the reproduction runs for real: tune over the
+    // AOT variant artifacts by timing them on the PJRT CPU client.
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.tsv").exists() {
+        panic!("artifacts missing — run `make artifacts`");
+    }
+    let mut rt = XlaRuntime::new(&dir).unwrap();
+    let img = synth_image(ScalarType::F32, 32, 32, 4);
+    let x = Tensor::new(32, 32, img.buf.data.iter().map(|&v| v as f32).collect());
+    let f = Tensor::new(5, 1, vec![0.0625, 0.25, 0.375, 0.25, 0.0625]);
+
+    let ids: Vec<String> = rt
+        .manifest()
+        .variants_of("sepconv", 32)
+        .iter()
+        .map(|a| a.id.clone())
+        .collect();
+    let mut best: Option<(String, f64)> = None;
+    for id in &ids {
+        let (_, secs) = rt.time(id, &[&x, &f], 3).unwrap();
+        if best.as_ref().map(|(_, b)| secs < *b).unwrap_or(true) {
+            best = Some((id.clone(), secs));
+        }
+    }
+    let (best_id, best_t) = best.unwrap();
+    assert!(best_t > 0.0);
+    assert!(ids.contains(&best_id));
+}
