@@ -1,0 +1,130 @@
+//! Serving-layer benchmark: the plan/tune cache vs paying tune+compile
+//! on every request, plus the TSV warm-start demonstration.
+//!
+//! The uncached baseline is what the repo did before the serving layer
+//! existed — every request runs the tuner, lowers the winning config and
+//! launch-compiles it. The cached path pays that once per
+//! (kernel, device, grid) key and then only executes. The acceptance
+//! target is a ≥10× per-request advantage; in practice the gap is orders
+//! of magnitude because a tuning run evaluates hundreds of candidates.
+//!
+//! Run with: `cargo bench --bench serve`.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+use std::time::Instant;
+
+use imagecl::analysis::KernelInfo;
+use imagecl::bench_defs::{self, workload};
+use imagecl::devices::INTEL_I7;
+use imagecl::exec::PreparedKernel;
+use imagecl::imagecl::frontend;
+use imagecl::report::{emit_report, Ms};
+use imagecl::serve::{serve_strategy, ExecMode, KernelService, LoadGenOpts, ServiceConfig};
+use imagecl::transform::lower;
+use imagecl::tuner::tune_on_simulator;
+
+const GRID: usize = 32;
+const KERNELS: [&str; 3] = ["sepconv_row", "conv2d", "sobel"];
+
+/// One request the pre-serving way: tune, lower, launch-compile, execute.
+fn uncached_request(kernel: &str, seed: u64) -> f64 {
+    let kdef = bench_defs::kernel_by_id(kernel).unwrap();
+    let info = KernelInfo::analyze(frontend(kdef.source).unwrap());
+    let res = tune_on_simulator(&info, &INTEL_I7, (GRID, GRID), &serve_strategy());
+    let plan = lower(&info, &res.best).unwrap();
+    let mut args = workload(kernel, GRID, GRID, seed);
+    let prepared = PreparedKernel::prepare(&plan, &args, (GRID, GRID)).unwrap();
+    prepared.run(&mut args).unwrap();
+    res.best_time
+}
+
+fn main() {
+    let mut out = String::new();
+    let _ = writeln!(out, "=== serving layer: cached vs per-request tune+compile ===\n");
+
+    // Baseline: N requests, each paying the full tune+compile.
+    let uncached_n = 6;
+    let t0 = Instant::now();
+    for i in 0..uncached_n {
+        std::hint::black_box(uncached_request(KERNELS[i % KERNELS.len()], i as u64));
+    }
+    let uncached_per_req = t0.elapsed().as_secs_f64() / uncached_n as f64;
+    let _ = writeln!(
+        out,
+        "uncached (tune+compile+exec each request): {} / request ({} requests)",
+        Ms(uncached_per_req * 1e3),
+        uncached_n
+    );
+
+    // Cached serving path: same kernels through the KernelService, real
+    // execution, tuned-config persistence to a scratch TSV.
+    let tsv = std::env::temp_dir()
+        .join(format!("imagecl_serve_bench_{}.tsv", std::process::id()));
+    let _ = std::fs::remove_file(&tsv);
+    let service = KernelService::new(ServiceConfig {
+        strategy: serve_strategy(),
+        tuned_path: Some(tsv.clone()),
+        exec: ExecMode::Real,
+    });
+    let opts = LoadGenOpts {
+        requests: 600,
+        concurrency: 8,
+        kernels: KERNELS.iter().map(|k| k.to_string()).collect(),
+        devices: vec![&INTEL_I7],
+        grid: GRID,
+        queue_cap: 256,
+        max_batch: 32,
+        workers_per_device: 2,
+    };
+    let report = imagecl::serve::run_loadgen(service, &opts).unwrap();
+    let cached_per_req = report.wall.as_secs_f64() / report.completed.max(1) as f64;
+    let _ = writeln!(
+        out,
+        "cached   (KernelService, {} requests):     {} / request, {:.0} req/s",
+        report.completed,
+        Ms(cached_per_req * 1e3),
+        report.throughput_rps()
+    );
+    let _ = writeln!(
+        out,
+        "latency p50 {}  p95 {}  p99 {}   ({} tunes, {} compiles, max batch {})",
+        report.latency_p(50.0),
+        report.latency_p(95.0),
+        report.latency_p(99.0),
+        report.stats.tunes,
+        report.stats.plan_compiles,
+        report.stats.max_batch
+    );
+
+    let speedup = uncached_per_req / cached_per_req.max(1e-12);
+    let _ = writeln!(out, "\nplan/tune cache speedup: {speedup:.0}x (target >= 10x)");
+    assert!(
+        speedup >= 10.0,
+        "cache speedup {speedup:.1}x below the 10x acceptance target"
+    );
+
+    // Warm start: a fresh service on the persisted TSV must serve without
+    // ever invoking the tuner (tunes == 0 in its metrics).
+    let service2 = KernelService::new(ServiceConfig {
+        strategy: serve_strategy(),
+        tuned_path: Some(tsv.clone()),
+        exec: ExecMode::Real,
+    });
+    let loaded = service2.tuned_len();
+    let report2 = imagecl::serve::run_loadgen(service2, &opts).unwrap();
+    let _ = writeln!(
+        out,
+        "\nwarm restart: {} tuned configs loaded from TSV; second run did {} tunes, \
+         {} warm-starts ({:.0} req/s)",
+        loaded,
+        report2.stats.tunes,
+        report2.stats.warm_starts,
+        report2.completed as f64 / report2.wall.as_secs_f64()
+    );
+    assert_eq!(report2.stats.tunes, 0, "warm restart must not re-tune");
+    assert_eq!(report2.stats.warm_starts as usize, KERNELS.len());
+
+    let _ = std::fs::remove_file(&tsv);
+    emit_report("serve.txt", &out);
+}

@@ -70,16 +70,15 @@ impl BufSlot {
     }
 }
 
-/// Execute a plan over its NDRange. `args` maps every source-level
-/// parameter name to its argument; images carry their extent, and the ABI
-/// scalars (`{img}_w/h`, `{arr}_n`, `__gw`, `__gh`) are derived
-/// automatically. `grid` is the logical thread-grid size.
-pub fn execute(
+/// Resolve every scalar parameter of a plan to its launch value: the ABI
+/// scalars (`{img}_w/h`, `{arr}_n`, `__gw`, `__gh`) are derived from the
+/// argument shapes and the grid; user scalars come from `args` directly.
+/// These values are inlined as constants at compile time.
+pub fn resolve_scalars(
     plan: &KernelPlan,
-    args: &mut BTreeMap<String, Arg>,
+    args: &BTreeMap<String, Arg>,
     grid: (usize, usize),
-) -> Result<(), ExecError> {
-    // Resolve scalar parameter values (inlined as constants at compile).
+) -> Result<HashMap<String, Value>, ExecError> {
     let mut scalar_vals: HashMap<String, Value> = HashMap::new();
     for (name, _ty) in &plan.scalars {
         let v = if name == GRID_W {
@@ -122,9 +121,86 @@ pub fn execute(
         };
         scalar_vals.insert(name.clone(), v);
     }
+    Ok(scalar_vals)
+}
 
+/// Execute a plan over its NDRange. `args` maps every source-level
+/// parameter name to its argument; images carry their extent, and the ABI
+/// scalars are derived automatically (see [`resolve_scalars`]). `grid` is
+/// the logical thread-grid size. The plan is compiled for this launch and
+/// the compilation discarded — use [`PreparedKernel`] to amortize it.
+pub fn execute(
+    plan: &KernelPlan,
+    args: &mut BTreeMap<String, Arg>,
+    grid: (usize, usize),
+) -> Result<(), ExecError> {
+    let scalar_vals = resolve_scalars(plan, args, grid)?;
     let compiled = Compiler::compile(plan, &scalar_vals)?;
+    run_compiled(plan, &compiled, args, grid)
+}
 
+/// A kernel plan compiled once for a fixed launch shape, reusable across
+/// executions — the serving layer's cached unit (launch-time compilation
+/// is hoisted out of the request path).
+///
+/// The compiled IR inlines the launch's scalar values (grid size, image
+/// extents, array lengths, user scalars), so a prepared kernel is only
+/// valid for argument sets that resolve to the same scalars; [`Self::run`]
+/// re-derives them per call and rejects mismatches rather than silently
+/// computing with stale constants.
+#[derive(Debug, Clone)]
+pub struct PreparedKernel {
+    plan: KernelPlan,
+    compiled: CompiledPlan,
+    scalar_vals: HashMap<String, Value>,
+    grid: (usize, usize),
+}
+
+impl PreparedKernel {
+    /// Compile `plan` for the launch shape implied by `args` + `grid`.
+    /// `args` is only inspected (shapes and scalar values), not consumed.
+    pub fn prepare(
+        plan: &KernelPlan,
+        args: &BTreeMap<String, Arg>,
+        grid: (usize, usize),
+    ) -> Result<PreparedKernel, ExecError> {
+        let scalar_vals = resolve_scalars(plan, args, grid)?;
+        let compiled = Compiler::compile(plan, &scalar_vals)?;
+        Ok(PreparedKernel { plan: plan.clone(), compiled, scalar_vals, grid })
+    }
+
+    pub fn grid(&self) -> (usize, usize) {
+        self.grid
+    }
+
+    pub fn plan(&self) -> &KernelPlan {
+        &self.plan
+    }
+
+    /// Execute the prepared kernel on a fresh argument set of the same
+    /// launch shape.
+    pub fn run(&self, args: &mut BTreeMap<String, Arg>) -> Result<(), ExecError> {
+        let scalar_vals = resolve_scalars(&self.plan, args, self.grid)?;
+        if scalar_vals != self.scalar_vals {
+            return Err(ExecError::Other(format!(
+                "prepared kernel `{}` launched with different scalar values \
+                 (shapes/scalars must match those at prepare time)",
+                self.plan.name
+            )));
+        }
+        run_compiled(&self.plan, &self.compiled, args, self.grid)
+    }
+}
+
+/// Drive an already-compiled plan over the NDRange: marshal argument
+/// buffers into dense slots, run, and return the buffers to the caller
+/// (even on error).
+fn run_compiled(
+    plan: &KernelPlan,
+    compiled: &CompiledPlan,
+    args: &mut BTreeMap<String, Arg>,
+    grid: (usize, usize),
+) -> Result<(), ExecError> {
     // Move buffers out of the argument map into dense slots (plan buffers
     // first, locals after — matching the compiler's indices).
     let mut bufs: Vec<BufSlot> = Vec::with_capacity(plan.buffers.len() + plan.locals.len());
@@ -143,7 +219,7 @@ pub fn execute(
         bufs.push(BufSlot::Local { buf: Buffer::new(l.elem, 0) });
     }
 
-    let result = run_ndrange(plan, &compiled, &mut bufs, grid);
+    let result = run_ndrange(plan, compiled, &mut bufs, grid);
 
     // Move argument buffers back (even on error, so callers keep data).
     for (i, b) in plan.buffers.iter().enumerate() {
@@ -606,6 +682,50 @@ mod tests {
         cfg.unroll.insert(1, 0);
         cfg.unroll.insert(2, 0);
         assert_matches_ref(&run_blur(cfg, 41, 27));
+    }
+
+    #[test]
+    fn prepared_kernel_reusable_and_matches_execute() {
+        let src = "#pragma imcl grid(in)\n\
+            void copy(Image<float> in, Image<float> out) {\n\
+              out[idx][idy] = in[idx][idy] * 2.0f;\n\
+            }";
+        let plan = compile(src, &TuningConfig::default()).unwrap();
+        let mk_args = |seed: f64| {
+            let mut args = BTreeMap::new();
+            let input = ImageBuf::from_fn(ScalarType::F32, 8, 8, |x, y| {
+                seed + (x + 10 * y) as f64
+            });
+            args.insert("in".to_string(), Arg::Image(input));
+            args.insert("out".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 8, 8)));
+            args
+        };
+        let prepared = PreparedKernel::prepare(&plan, &mk_args(0.0), (8, 8)).unwrap();
+        // Two runs with different data both match the one-shot path.
+        for seed in [0.0, 100.0] {
+            let mut a = mk_args(seed);
+            prepared.run(&mut a).unwrap();
+            let mut b = mk_args(seed);
+            execute(&plan, &mut b, (8, 8)).unwrap();
+            assert_eq!(a["out"].image().unwrap().buf.data, b["out"].image().unwrap().buf.data);
+        }
+    }
+
+    #[test]
+    fn prepared_kernel_rejects_shape_mismatch() {
+        let src = "#pragma imcl grid(in)\n\
+            void k(Image<float> in, Image<float> out) { out[idx][idy] = in[idx][idy]; }";
+        let plan = compile(src, &TuningConfig::default()).unwrap();
+        let mut args = BTreeMap::new();
+        args.insert("in".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 8, 8)));
+        args.insert("out".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 8, 8)));
+        let prepared = PreparedKernel::prepare(&plan, &args, (8, 8)).unwrap();
+        // Same grid but differently-sized image arguments → scalar mismatch.
+        let mut wrong = BTreeMap::new();
+        wrong.insert("in".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 16, 16)));
+        wrong.insert("out".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 16, 16)));
+        let err = prepared.run(&mut wrong).unwrap_err();
+        assert!(matches!(err, ExecError::Other(_)), "{err}");
     }
 
     #[test]

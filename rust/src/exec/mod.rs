@@ -9,4 +9,4 @@ pub mod compiled;
 pub mod machine;
 
 pub use buffer::{Arg, Buffer, ImageBuf, Value};
-pub use machine::{execute, ExecError};
+pub use machine::{execute, resolve_scalars, ExecError, PreparedKernel};

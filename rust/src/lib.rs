@@ -13,6 +13,7 @@ pub mod tuner;
 pub mod baselines;
 pub mod runtime;
 pub mod pipeline;
+pub mod serve;
 pub mod report;
 pub mod bench_defs;
 pub mod testutil;

@@ -14,17 +14,22 @@ use imagecl::imagecl::frontend;
 use imagecl::pipeline::{schedule, Pipeline, Port};
 use imagecl::report::{emit_report, render_config_table, render_fig6, Ms};
 use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use imagecl::serve;
 use imagecl::transform::{
     emit_fast_filter, emit_opencl, emit_standalone_host, lower, TuningConfig,
 };
 use imagecl::tuner::{self, MlSearchOpts, Strategy};
 
 const USAGE: &str = "\
-imagecl — ImageCL compiler, auto-tuner and benchmark runner
+imagecl — ImageCL compiler, auto-tuner, serving layer and benchmark runner
 
 USAGE:
   imagecl compile <file.imcl> [--config CFG] [--emit opencl|host|fast]
   imagecl tune <kernel> [--device DEV] [--grid N] [--strategy ml|random|exhaustive]
+  imagecl serve [--requests N] [--concurrency C] [--kernels a,b,c] [--device DEV]
+                [--grid N] [--exec real|sim] [--queue-cap N] [--max-batch N]
+                [--workers N] [--strategy S] [--tuned PATH]
+                serve synthetic traffic through the plan/tune cache
   imagecl fig6 [--size N]            reproduce Figure 6 (slowdown vs baselines)
   imagecl tables [--size N]          reproduce Tables 2-5 (tuned configurations)
   imagecl pipeline [--size N]        run the Harris pipeline through PJRT
@@ -35,7 +40,9 @@ CFG example: \"wg=64x4 px=4x1 map=interleaved lmem=in cmem=f unroll=1:0\"
 <kernel> is a built-in id (sepconv_row, conv2d, sobel, harris, ...) or a path.
 ";
 
-/// Tiny flag parser: positional args + `--key value` pairs.
+/// Tiny flag parser: positional args + `--key value` pairs. Unknown
+/// flags and a trailing `--flag` with no value are hard errors (each
+/// command declares its flag set via [`Args::check_known`]).
 struct Args {
     positional: Vec<String>,
     flags: BTreeMap<String, String>,
@@ -48,15 +55,35 @@ impl Args {
         let mut it = argv.iter();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("bare `--` is not a flag".to_string());
+                }
                 let val = it
                     .next()
                     .ok_or_else(|| format!("flag --{key} needs a value"))?;
-                flags.insert(key.to_string(), val.clone());
+                if flags.insert(key.to_string(), val.clone()).is_some() {
+                    return Err(format!("flag --{key} given twice"));
+                }
             } else {
                 positional.push(a.clone());
             }
         }
         Ok(Args { positional, flags })
+    }
+
+    /// Reject any flag outside `allowed` — catches typos like
+    /// `--concurency 8` instead of silently ignoring them.
+    fn check_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for key in self.flags.keys() {
+            if !allowed.contains(&key.as_str()) {
+                return Err(if allowed.is_empty() {
+                    format!("unknown flag --{key} (this command takes no flags)")
+                } else {
+                    format!("unknown flag --{key} (expected one of: --{})", allowed.join(", --"))
+                });
+            }
+        }
+        Ok(())
     }
 
     fn flag(&self, key: &str) -> Option<&str> {
@@ -89,10 +116,12 @@ fn run() -> Result<(), String> {
     match cmd.as_str() {
         "compile" => cmd_compile(&args),
         "tune" => cmd_tune(&args),
+        "serve" => cmd_serve(&args),
         "fig6" => cmd_fig6(&args),
         "tables" => cmd_tables(&args),
         "pipeline" => cmd_pipeline(&args),
         "devices" => {
+            args.check_known(&[])?;
             println!("{:<10} {:>5} {:>6} {:>9} {:>9}", "device", "CUs", "SIMD", "GFLOP/s", "GB/s");
             for d in ALL_DEVICES {
                 println!(
@@ -103,6 +132,7 @@ fn run() -> Result<(), String> {
             Ok(())
         }
         "kernels" => {
+            args.check_known(&[])?;
             for b in &ALL {
                 for k in b.kernels {
                     println!("{:<12} ({}, {}x{})", k.id, b.display, b.paper_size.0, b.paper_size.1);
@@ -119,6 +149,7 @@ fn run() -> Result<(), String> {
 }
 
 fn cmd_compile(args: &Args) -> Result<(), String> {
+    args.check_known(&["config", "emit"])?;
     let file = args
         .positional
         .first()
@@ -149,6 +180,7 @@ fn strategy_of(args: &Args) -> Result<Strategy, String> {
 }
 
 fn cmd_tune(args: &Args) -> Result<(), String> {
+    args.check_known(&["device", "grid", "strategy"])?;
     let kernel = args.positional.first().ok_or("tune needs a kernel")?;
     let src = kernel_source(kernel)?;
     let info = KernelInfo::analyze(frontend(&src).map_err(|e| e.to_string())?);
@@ -173,6 +205,7 @@ fn cmd_tune(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_fig6(args: &Args) -> Result<(), String> {
+    args.check_known(&["size"])?;
     let n = args.usize_flag("size", 1024)?;
     let mut full = String::new();
     for bench in &ALL {
@@ -204,6 +237,7 @@ fn cmd_fig6(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_tables(args: &Args) -> Result<(), String> {
+    args.check_known(&["size"])?;
     let n = args.usize_flag("size", 1024)?;
     let strategy = baselines::imagecl_strategy();
     let mut full = String::new();
@@ -241,7 +275,94 @@ fn cmd_tables(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `imagecl serve`: spin up the kernel service (warm-starting from the
+/// tuned-config TSV when present), drive synthetic traffic through the
+/// per-device worker pools, and print throughput + latency percentiles
+/// plus the cache counters.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "requests",
+        "concurrency",
+        "kernels",
+        "device",
+        "grid",
+        "exec",
+        "queue-cap",
+        "max-batch",
+        "workers",
+        "strategy",
+        "tuned",
+    ])?;
+    let mut opts = serve::LoadGenOpts {
+        requests: args.usize_flag("requests", 1000)?,
+        concurrency: args.usize_flag("concurrency", 8)?,
+        grid: args.usize_flag("grid", 64)?,
+        queue_cap: args.usize_flag("queue-cap", 256)?,
+        max_batch: args.usize_flag("max-batch", 32)?,
+        workers_per_device: args.usize_flag("workers", 2)?,
+        ..Default::default()
+    };
+    if let Some(list) = args.flag("kernels") {
+        opts.kernels = list.split(',').filter(|k| !k.is_empty()).map(String::from).collect();
+        for k in &opts.kernels {
+            if bench_defs::kernel_by_id(k).is_none() {
+                return Err(format!("unknown kernel {k:?} (see `imagecl kernels`)"));
+            }
+        }
+    }
+    if let Some(d) = args.flag("device") {
+        if d != "all" {
+            opts.devices =
+                vec![devices::by_name(d).ok_or(format!("unknown device {d:?}"))?];
+        }
+    }
+    let exec = match args.flag("exec").unwrap_or("real") {
+        "real" => serve::ExecMode::Real,
+        "sim" => serve::ExecMode::Simulate,
+        other => return Err(format!("unknown --exec {other:?} (want real|sim)")),
+    };
+    let strategy = match args.flag("strategy") {
+        None => serve::serve_strategy(),
+        Some(_) => strategy_of(args)?,
+    };
+    let tuned_path = match args.flag("tuned") {
+        Some("none") => None,
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None => Some(serve::default_tuned_path()),
+    };
+
+    let service = serve::KernelService::new(serve::ServiceConfig {
+        strategy,
+        tuned_path: tuned_path.clone(),
+        exec,
+    });
+    let warm = service.tuned_len();
+    println!(
+        "serving {} requests (concurrency {}) over {} kernels × {} devices at {}x{} [{}]",
+        opts.requests,
+        opts.concurrency,
+        opts.kernels.len(),
+        opts.devices.len(),
+        opts.grid,
+        opts.grid,
+        if exec == serve::ExecMode::Real { "real execution" } else { "simulated" },
+    );
+    match (&tuned_path, warm) {
+        (Some(p), 0) => println!("cold start (no tuned configs at {p:?} yet)"),
+        (Some(p), n) => println!("warm start: {n} tuned configs loaded from {p:?}"),
+        (None, _) => println!("ephemeral run (no tuned-config persistence)"),
+    }
+
+    let report = serve::run_loadgen(service, &opts).map_err(|e| e.to_string())?;
+    print!("{}", report.render());
+    if report.errors > 0 {
+        return Err(format!("{} requests failed", report.errors));
+    }
+    Ok(())
+}
+
 fn cmd_pipeline(args: &Args) -> Result<(), String> {
+    args.check_known(&["size"])?;
     let n = args.usize_flag("size", 512)?;
     let mut rt = XlaRuntime::new(&default_artifact_dir()).map_err(|e| e.to_string())?;
     let img = bench_defs::synth_image(imagecl::imagecl::ScalarType::F32, n, n, 42);
@@ -275,6 +396,29 @@ fn cmd_pipeline(args: &Args) -> Result<(), String> {
             Ms::from(pl.est_ready_s)
         );
     }
+    // The same pipeline scheduled through the serving layer's plan/tune
+    // cache: per-device *tuned* estimates instead of the naive config
+    // (warm-starts from the persisted TSV when present).
+    let service = serve::KernelService::new(serve::ServiceConfig {
+        exec: serve::ExecMode::Simulate,
+        ..Default::default()
+    });
+    let tuned = service.schedule_pipeline(&p, &ALL_DEVICES, n);
+    println!(
+        "tuned schedule via plan cache (makespan {}, {} tunes / {} warm-starts):",
+        Ms::from(tuned.makespan_s),
+        service.stats().tunes,
+        service.stats().warm_starts,
+    );
+    for pl in &tuned.placements {
+        println!(
+            "  {:<8} -> {:<9} exec {}  ready {}",
+            pl.filter,
+            pl.device,
+            Ms::from(pl.est_exec_s),
+            Ms::from(pl.est_ready_s)
+        );
+    }
     Ok(())
 }
 
@@ -285,5 +429,52 @@ fn main() -> ExitCode {
             eprintln!("error: {e}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn args_parse_positional_and_flags() {
+        let a = Args::parse(&argv("sobel --grid 128 --device K40")).unwrap();
+        assert_eq!(a.positional, vec!["sobel"]);
+        assert_eq!(a.flag("grid"), Some("128"));
+        assert_eq!(a.usize_flag("grid", 0).unwrap(), 128);
+        assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn args_reject_trailing_flag_without_value() {
+        let err = Args::parse(&argv("sobel --grid")).unwrap_err();
+        assert!(err.contains("--grid needs a value"), "{err}");
+    }
+
+    #[test]
+    fn args_reject_duplicate_and_bare_dashes() {
+        assert!(Args::parse(&argv("--grid 1 --grid 2")).is_err());
+        assert!(Args::parse(&argv("-- foo")).is_err());
+    }
+
+    #[test]
+    fn args_reject_unknown_flags() {
+        let a = Args::parse(&argv("--concurency 8")).unwrap();
+        let err = a.check_known(&["concurrency", "requests"]).unwrap_err();
+        assert!(err.contains("--concurency"), "{err}");
+        assert!(err.contains("--concurrency"), "{err}");
+        let a = Args::parse(&argv("--size 4")).unwrap();
+        assert!(a.check_known(&[]).is_err());
+        assert!(a.check_known(&["size"]).is_ok());
+    }
+
+    #[test]
+    fn bad_numbers_are_errors() {
+        let a = Args::parse(&argv("--grid banana")).unwrap();
+        assert!(a.usize_flag("grid", 1).is_err());
     }
 }

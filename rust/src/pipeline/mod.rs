@@ -6,4 +6,6 @@ pub mod graph;
 pub mod scheduler;
 
 pub use graph::{Filter, FilterKind, NodeId, Pipeline, Port};
-pub use scheduler::{filter_time, schedule, transfer_time, Placement, Schedule};
+pub use scheduler::{
+    filter_time, graph_parts, schedule, schedule_by, transfer_time, Placement, Schedule,
+};

@@ -35,17 +35,26 @@ pub struct Schedule {
     pub makespan_s: f64,
 }
 
+/// The kernel stages of a composite benchmark graph, or `None` when the
+/// graph id is itself a single kernel. Shared by the naive cost model
+/// below and the serving layer's cached tuned-config estimates.
+pub fn graph_parts(graph: &str) -> Option<&'static [&'static str]> {
+    match graph {
+        "sepconv" => Some(&["sepconv_row", "sepconv_col"]),
+        "harris_pipeline" => Some(&["sobel", "harris"]),
+        _ => None,
+    }
+}
+
 /// Estimated execution time of one benchmark graph on one device at grid
-/// size n (naive tuning config; tuned-config scheduling composes with the
-/// tuner separately).
+/// size n under a fixed tuning config (tuned-config scheduling routes
+/// through `serve::KernelService::schedule_pipeline` instead).
 pub fn filter_time(dev: &DeviceSpec, graph: &str, n: usize, cfg: &TuningConfig) -> f64 {
     // Composite graphs cost the sum of their stages.
-    let parts: &[&str] = match graph {
-        "sepconv" => &["sepconv_row", "sepconv_col"],
-        "harris_pipeline" => &["sobel", "harris"],
-        other => return single_kernel_time(dev, other, n, cfg),
-    };
-    parts.iter().map(|k| single_kernel_time(dev, k, n, cfg)).sum()
+    match graph_parts(graph) {
+        Some(parts) => parts.iter().map(|k| single_kernel_time(dev, k, n, cfg)).sum(),
+        None => single_kernel_time(dev, graph, n, cfg),
+    }
 }
 
 fn single_kernel_time(dev: &DeviceSpec, kernel_id: &str, n: usize, cfg: &TuningConfig) -> f64 {
@@ -66,14 +75,29 @@ pub fn transfer_time(from: &str, to: &str, n: usize) -> f64 {
     }
 }
 
-/// Greedy earliest-finish-time scheduling (HEFT-flavoured): walk the DAG
-/// in topological order, place each artifact filter on the device that
-/// minimizes its finish time given input locations.
+/// Greedy earliest-finish-time scheduling under the naive cost model (one
+/// fixed [`TuningConfig`] for every filter/device pair).
 pub fn schedule(
     pipeline: &Pipeline,
     devices: &[&'static DeviceSpec],
     n: usize,
     cfg: &TuningConfig,
+) -> Schedule {
+    schedule_by(pipeline, devices, n, |dev, graph| filter_time(dev, graph, n, cfg))
+}
+
+/// Greedy earliest-finish-time scheduling (HEFT-flavoured) with a
+/// caller-provided execution-time estimator: walk the DAG in topological
+/// order, place each artifact filter on the device that minimizes its
+/// finish time given input locations. `exec_time(dev, graph)` supplies
+/// the per-filter cost — the naive model in [`schedule`], or per-device
+/// *tuned* estimates when scheduling routes through the serving layer's
+/// plan cache.
+pub fn schedule_by(
+    pipeline: &Pipeline,
+    devices: &[&'static DeviceSpec],
+    n: usize,
+    mut exec_time: impl FnMut(&DeviceSpec, &str) -> f64,
 ) -> Schedule {
     assert!(!devices.is_empty());
     let order = pipeline.topo_order().expect("pipeline is a DAG");
@@ -93,8 +117,8 @@ pub fn schedule(
             }
             FilterKind::Artifact { graph, .. } => {
                 let mut best: Option<(&'static DeviceSpec, f64, f64)> = None;
-                for dev in devices {
-                    let exec = filter_time(dev, graph, n, cfg);
+                for &dev in devices {
+                    let exec = exec_time(dev, graph);
                     let inputs_ready = f
                         .inputs
                         .iter()

@@ -4,14 +4,12 @@
 //! This is the Layer-3 ↔ XLA bridge (see /opt/xla-example/load_hlo for the
 //! reference wiring). HLO *text* is the interchange format — serialized
 //! jax≥0.5 protos are rejected by xla_extension 0.5.1.
-
-use std::collections::HashMap;
-use std::path::Path;
-use std::time::Instant;
-
-use anyhow::{bail, Context, Result};
-
-use super::manifest::{Artifact, Manifest};
+//!
+//! The bridge is feature-gated: with `--features xla` (and the `xla`
+//! crate in the dependency set) the real PJRT client is built; without it
+//! a stub with the identical API loads manifests but reports a clear
+//! error when execution is attempted, so every other layer builds and
+//! tests on machines without the XLA toolchain.
 
 /// A 2-D tensor travelling through the runtime (f32 host representation;
 /// uint8 artifacts convert at the boundary).
@@ -32,11 +30,19 @@ impl Tensor {
         Tensor { rows, cols, data: vec![0.0; rows * cols] }
     }
 
-    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Tensor {
+    /// Build a row-major tensor from `f(row, col)`. The parameter order is
+    /// the same as [`Tensor::new`]'s dimension order (rows first), and is
+    /// checked by `tensor_from_fn_layout` below so it cannot silently
+    /// regress to `f(col, row)`.
+    pub fn from_fn(
+        rows: usize,
+        cols: usize,
+        mut f: impl FnMut(usize, usize) -> f32,
+    ) -> Tensor {
         let mut data = Vec::with_capacity(rows * cols);
-        for r in 0..rows {
-            for c in 0..cols {
-                data.push(f(c, r));
+        for row in 0..rows {
+            for col in 0..cols {
+                data.push(f(row, col));
             }
         }
         Tensor { rows, cols, data }
@@ -47,168 +53,240 @@ impl Tensor {
     }
 }
 
-/// The XLA runtime: one PJRT CPU client plus a cache of compiled
-/// executables keyed by artifact id.
-pub struct XlaRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::time::Instant;
 
-impl XlaRuntime {
-    /// Create the CPU client and read the artifact manifest.
-    pub fn new(artifact_dir: &Path) -> Result<XlaRuntime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let manifest = Manifest::load(artifact_dir)?;
-        Ok(XlaRuntime { client, manifest, cache: HashMap::new() })
+    use anyhow::{bail, Context, Result};
+
+    use super::super::manifest::{Artifact, Manifest};
+    use super::Tensor;
+
+    /// The XLA runtime: one PJRT CPU client plus a cache of compiled
+    /// executables keyed by artifact id.
+    pub struct XlaRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (and cache) an artifact.
-    pub fn prepare(&mut self, id: &str) -> Result<()> {
-        if self.cache.contains_key(id) {
-            return Ok(());
+    impl XlaRuntime {
+        /// Create the CPU client and read the artifact manifest.
+        pub fn new(artifact_dir: &Path) -> Result<XlaRuntime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let manifest = Manifest::load(artifact_dir)?;
+            Ok(XlaRuntime { client, manifest, cache: HashMap::new() })
         }
-        let art = self.manifest.get(id)?.clone();
-        let proto = xla::HloModuleProto::from_text_file(
-            art.path.to_str().context("artifact path not UTF-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {:?}", art.path))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {id}"))?;
-        self.cache.insert(id.to_string(), exe);
-        Ok(())
-    }
 
-    /// Execute an artifact on host tensors. Inputs are converted to the
-    /// artifact's declared dtypes; outputs come back as f32 tensors.
-    pub fn execute(&mut self, id: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
-        self.prepare(id)?;
-        let art = self.manifest.get(id)?.clone();
-        let lits = make_literals(&art, inputs)?;
-        let exe = self.cache.get(id).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .with_context(|| format!("executing {id}"))?[0][0]
-            .to_literal_sync()?;
-        read_outputs(result)
-    }
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
 
-    /// Execute and time an artifact: returns (outputs, seconds) using the
-    /// best of `reps` runs after one warmup (the auto-tuner's measurement
-    /// primitive on the real-CPU path).
-    pub fn time(
-        &mut self,
-        id: &str,
-        inputs: &[&Tensor],
-        reps: usize,
-    ) -> Result<(Vec<Tensor>, f64)> {
-        self.prepare(id)?;
-        let art = self.manifest.get(id)?.clone();
-        let lits = make_literals(&art, inputs)?;
-        let exe = self.cache.get(id).unwrap();
-        // Warmup.
-        let _ = exe.execute::<xla::Literal>(&lits)?;
-        let mut best = f64::INFINITY;
-        let mut last = None;
-        for _ in 0..reps.max(1) {
-            let t0 = Instant::now();
-            let r = exe.execute::<xla::Literal>(&lits)?;
-            let dt = t0.elapsed().as_secs_f64();
-            if dt < best {
-                best = dt;
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (and cache) an artifact.
+        pub fn prepare(&mut self, id: &str) -> Result<()> {
+            if self.cache.contains_key(id) {
+                return Ok(());
             }
-            last = Some(r);
+            let art = self.manifest.get(id)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                art.path.to_str().context("artifact path not UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text {:?}", art.path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {id}"))?;
+            self.cache.insert(id.to_string(), exe);
+            Ok(())
         }
-        let result = last.unwrap()[0][0].to_literal_sync()?;
-        Ok((read_outputs(result)?, best))
-    }
-}
 
-fn make_literals(art: &Artifact, inputs: &[&Tensor]) -> Result<Vec<xla::Literal>> {
-    if inputs.len() != art.args.len() {
-        bail!(
-            "artifact {} takes {} args, got {}",
-            art.id,
-            art.args.len(),
-            inputs.len()
-        );
+        /// Execute an artifact on host tensors. Inputs are converted to the
+        /// artifact's declared dtypes; outputs come back as f32 tensors.
+        pub fn execute(&mut self, id: &str, inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+            self.prepare(id)?;
+            let art = self.manifest.get(id)?.clone();
+            let lits = make_literals(&art, inputs)?;
+            let exe = self.cache.get(id).unwrap();
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .with_context(|| format!("executing {id}"))?[0][0]
+                .to_literal_sync()?;
+            read_outputs(result)
+        }
+
+        /// Execute and time an artifact: returns (outputs, seconds) using the
+        /// best of `reps` runs after one warmup (the auto-tuner's measurement
+        /// primitive on the real-CPU path).
+        pub fn time(
+            &mut self,
+            id: &str,
+            inputs: &[&Tensor],
+            reps: usize,
+        ) -> Result<(Vec<Tensor>, f64)> {
+            self.prepare(id)?;
+            let art = self.manifest.get(id)?.clone();
+            let lits = make_literals(&art, inputs)?;
+            let exe = self.cache.get(id).unwrap();
+            // Warmup.
+            let _ = exe.execute::<xla::Literal>(&lits)?;
+            let mut best = f64::INFINITY;
+            let mut last = None;
+            for _ in 0..reps.max(1) {
+                let t0 = Instant::now();
+                let r = exe.execute::<xla::Literal>(&lits)?;
+                let dt = t0.elapsed().as_secs_f64();
+                if dt < best {
+                    best = dt;
+                }
+                last = Some(r);
+            }
+            let result = last.unwrap()[0][0].to_literal_sync()?;
+            Ok((read_outputs(result)?, best))
+        }
     }
-    let mut lits = Vec::new();
-    for (sig, t) in art.args.iter().zip(inputs) {
-        if sig.len() != t.data.len() {
+
+    fn make_literals(art: &Artifact, inputs: &[&Tensor]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != art.args.len() {
             bail!(
-                "artifact {} arg size mismatch: manifest {}x{}, tensor {}x{}",
+                "artifact {} takes {} args, got {}",
                 art.id,
-                sig.rows,
-                sig.cols,
-                t.rows,
-                t.cols
+                art.args.len(),
+                inputs.len()
             );
         }
-        let lit = match sig.dtype.as_str() {
-            "float32" => {
-                let l = xla::Literal::vec1(&t.data);
-                if sig.cols > 1 || t.cols > 1 {
-                    l.reshape(&[sig.rows as i64, sig.cols as i64])?
-                } else {
-                    l.reshape(&[sig.rows as i64])?
+        let mut lits = Vec::new();
+        for (sig, t) in art.args.iter().zip(inputs) {
+            if sig.len() != t.data.len() {
+                bail!(
+                    "artifact {} arg size mismatch: manifest {}x{}, tensor {}x{}",
+                    art.id,
+                    sig.rows,
+                    sig.cols,
+                    t.rows,
+                    t.cols
+                );
+            }
+            let lit = match sig.dtype.as_str() {
+                "float32" => {
+                    let l = xla::Literal::vec1(&t.data);
+                    if sig.cols > 1 || t.cols > 1 {
+                        l.reshape(&[sig.rows as i64, sig.cols as i64])?
+                    } else {
+                        l.reshape(&[sig.rows as i64])?
+                    }
                 }
-            }
-            "uint8" => {
-                let bytes: Vec<u8> = t.data.iter().map(|&v| v as u8).collect();
-                let dims: &[usize] = if sig.cols > 1 {
-                    &[sig.rows, sig.cols]
-                } else {
-                    &[sig.rows]
-                };
-                xla::Literal::create_from_shape_and_untyped_data(
-                    xla::ElementType::U8,
-                    dims,
-                    &bytes,
-                )?
-            }
-            other => bail!("unsupported dtype {other:?} in manifest"),
-        };
-        lits.push(lit);
+                "uint8" => {
+                    let bytes: Vec<u8> = t.data.iter().map(|&v| v as u8).collect();
+                    let dims: &[usize] = if sig.cols > 1 {
+                        &[sig.rows, sig.cols]
+                    } else {
+                        &[sig.rows]
+                    };
+                    xla::Literal::create_from_shape_and_untyped_data(
+                        xla::ElementType::U8,
+                        dims,
+                        &bytes,
+                    )?
+                }
+                other => bail!("unsupported dtype {other:?} in manifest"),
+            };
+            lits.push(lit);
+        }
+        Ok(lits)
     }
-    Ok(lits)
+
+    fn read_outputs(result: xla::Literal) -> Result<Vec<Tensor>> {
+        // aot.py lowers with return_tuple=True: result is always a tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::new();
+        for lit in parts {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let (rows, cols) = match dims.as_slice() {
+                [r, c] => (*r, *c),
+                [n] => (*n, 1),
+                [] => (1, 1),
+                other => bail!("unsupported output rank {other:?}"),
+            };
+            let data: Vec<f32> = match lit.ty()? {
+                xla::ElementType::F32 => lit.to_vec::<f32>()?,
+                xla::ElementType::U8 => {
+                    lit.to_vec::<u8>()?.into_iter().map(|v| v as f32).collect()
+                }
+                other => bail!("unsupported output dtype {other:?}"),
+            };
+            out.push(Tensor::new(rows, cols, data));
+        }
+        Ok(out)
+    }
 }
 
-fn read_outputs(result: xla::Literal) -> Result<Vec<Tensor>> {
-    // aot.py lowers with return_tuple=True: result is always a tuple.
-    let parts = result.to_tuple()?;
-    let mut out = Vec::new();
-    for lit in parts {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let (rows, cols) = match dims.as_slice() {
-            [r, c] => (*r, *c),
-            [n] => (*n, 1),
-            [] => (1, 1),
-            other => bail!("unsupported output rank {other:?}"),
-        };
-        let data: Vec<f32> = match lit.ty()? {
-            xla::ElementType::F32 => lit.to_vec::<f32>()?,
-            xla::ElementType::U8 => {
-                lit.to_vec::<u8>()?.into_iter().map(|v| v as f32).collect()
-            }
-            other => bail!("unsupported output dtype {other:?}"),
-        };
-        out.push(Tensor::new(rows, cols, data));
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::super::manifest::Manifest;
+    use super::Tensor;
+
+    const NO_XLA: &str = "imagecl was built without the `xla` feature — \
+        real PJRT artifact execution is unavailable (rebuild with \
+        `--features xla` and the `xla` crate in the dependency set)";
+
+    /// Stub runtime with the same API as the PJRT-backed one: manifests
+    /// load and validate, but executing an artifact reports a clear error.
+    pub struct XlaRuntime {
+        manifest: Manifest,
     }
-    Ok(out)
+
+    impl XlaRuntime {
+        pub fn new(artifact_dir: &Path) -> Result<XlaRuntime> {
+            let manifest = Manifest::load(artifact_dir)?;
+            Ok(XlaRuntime { manifest })
+        }
+
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (no xla feature)".to_string()
+        }
+
+        pub fn prepare(&mut self, id: &str) -> Result<()> {
+            let _ = self.manifest.get(id)?;
+            bail!("cannot compile artifact {id}: {NO_XLA}");
+        }
+
+        pub fn execute(&mut self, id: &str, _inputs: &[&Tensor]) -> Result<Vec<Tensor>> {
+            let _ = self.manifest.get(id)?;
+            bail!("cannot execute artifact {id}: {NO_XLA}");
+        }
+
+        pub fn time(
+            &mut self,
+            id: &str,
+            _inputs: &[&Tensor],
+            _reps: usize,
+        ) -> Result<(Vec<Tensor>, f64)> {
+            let _ = self.manifest.get(id)?;
+            bail!("cannot time artifact {id}: {NO_XLA}");
+        }
+    }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::XlaRuntime;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaRuntime;
 
 #[cfg(test)]
 mod tests {
@@ -216,8 +294,20 @@ mod tests {
 
     #[test]
     fn tensor_from_fn_layout() {
-        let t = Tensor::from_fn(2, 3, |x, y| (y * 10 + x) as f32);
+        // f receives (row, col); storage is row-major.
+        let t = Tensor::from_fn(2, 3, |row, col| (row * 10 + col) as f32);
         assert_eq!(t.data, vec![0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        // get() is (x, y) = (col, row).
         assert_eq!(t.get(2, 1), 12.0);
+    }
+
+    #[test]
+    fn from_fn_agrees_with_get() {
+        let t = Tensor::from_fn(4, 7, |row, col| (row * 100 + col) as f32);
+        for row in 0..4 {
+            for col in 0..7 {
+                assert_eq!(t.get(col, row), (row * 100 + col) as f32);
+            }
+        }
     }
 }

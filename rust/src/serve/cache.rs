@@ -1,0 +1,324 @@
+//! Plan/tune caching with TSV warm-start persistence.
+//!
+//! Two layers, keyed by [`PlanKey`] = (kernel, device, grid):
+//!
+//! * [`TunedStore`] — the *tuning* results (winning [`TuningConfig`] per
+//!   key), persisted as a TSV file so a restarted server warm-starts
+//!   without re-running the tuner. This is the amortization the paper's
+//!   §7 tuning-cost discussion calls for: tune once, serve forever.
+//! * [`PlanCache`] — the in-memory *plan* entries: the winning config
+//!   lowered to a [`KernelPlan`] and launch-compiled to a
+//!   [`PreparedKernel`], built once per key and shared by every worker.
+//!
+//! TSV format (one line per key, `#` comments, tab-separated):
+//!
+//! ```text
+//! # kernel  device  grid_w  grid_h  est_seconds  config
+//! sepconv_row  K40  2048  2048  1.23e-4  wg=64x4 px=4x1 map=interleaved cmem=f
+//! ```
+//!
+//! The config column reuses [`TuningConfig`]'s display/parse round-trip,
+//! so the file is both human-auditable and loss-free.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::exec::PreparedKernel;
+use crate::transform::{KernelPlan, TuningConfig};
+
+/// Cache key: one tuned implementation per kernel × device × grid.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub kernel: String,
+    pub device: &'static str,
+    pub grid: (usize, usize),
+}
+
+impl std::fmt::Display for PlanKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}@{}/{}x{}",
+            self.kernel, self.device, self.grid.0, self.grid.1
+        )
+    }
+}
+
+/// Where a key's tuning config came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuneSource {
+    /// The tuner ran in this process.
+    Fresh,
+    /// Loaded from the persisted TSV (no tuner run).
+    WarmStart,
+}
+
+/// One ready-to-serve cache entry.
+#[derive(Debug)]
+pub struct PlanEntry {
+    pub key: PlanKey,
+    pub config: TuningConfig,
+    pub plan: KernelPlan,
+    /// Launch-compiled plan for the key's grid (built against the
+    /// canonical workload shapes of the built-in kernel).
+    pub prepared: PreparedKernel,
+    /// Device-model time estimate for one execution (seconds) — feeds the
+    /// pipeline scheduler and the simulated execution mode.
+    pub est_seconds: f64,
+    pub source: TuneSource,
+}
+
+/// A tuned config as stored/loaded: config + its estimated time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedRecord {
+    pub config: TuningConfig,
+    pub est_seconds: f64,
+}
+
+/// Persistent map of tuning results. All mutation goes through
+/// [`TunedStore::insert`], which rewrites the TSV under the lock (entry
+/// counts are small — once per kernel×device×grid — so rewriting beats
+/// append-corruption headaches).
+pub struct TunedStore {
+    path: Option<PathBuf>,
+    map: Mutex<HashMap<PlanKey, TunedRecord>>,
+}
+
+impl TunedStore {
+    /// In-memory only (no persistence).
+    pub fn ephemeral() -> TunedStore {
+        TunedStore { path: None, map: Mutex::new(HashMap::new()) }
+    }
+
+    /// Backed by `path`; loads any existing file (ignoring malformed
+    /// lines with a warning rather than refusing to start).
+    pub fn open(path: &Path) -> TunedStore {
+        let mut map = HashMap::new();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            for (key, rec) in parse_tsv(&text) {
+                map.insert(key, rec);
+            }
+        }
+        TunedStore { path: Some(path.to_path_buf()), map: Mutex::new(map) }
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn lookup(&self, key: &PlanKey) -> Option<TunedRecord> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    /// Record a tuning result and persist the whole store (best effort:
+    /// serving continues even if the disk write fails).
+    pub fn insert(&self, key: PlanKey, rec: TunedRecord) {
+        let mut g = self.map.lock().unwrap();
+        g.insert(key, rec);
+        if let Some(path) = &self.path {
+            let text = render_tsv(&g);
+            if let Some(dir) = path.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            if let Err(e) = std::fs::write(path, text) {
+                eprintln!("warning: cannot persist tuned configs to {path:?}: {e}");
+            }
+        }
+    }
+}
+
+fn render_tsv(map: &HashMap<PlanKey, TunedRecord>) -> String {
+    let mut lines: Vec<String> = map
+        .iter()
+        .map(|(k, r)| {
+            format!(
+                "{}\t{}\t{}\t{}\t{:e}\t{}",
+                k.kernel, k.device, k.grid.0, k.grid.1, r.est_seconds, r.config
+            )
+        })
+        .collect();
+    lines.sort();
+    let mut out =
+        String::from("# kernel\tdevice\tgrid_w\tgrid_h\test_seconds\tconfig\n");
+    for l in lines {
+        out.push_str(&l);
+        out.push('\n');
+    }
+    out
+}
+
+fn parse_tsv(text: &str) -> Vec<(PlanKey, TunedRecord)> {
+    let mut out = Vec::new();
+    for (lno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_line(line) {
+            Some(kv) => out.push(kv),
+            None => eprintln!(
+                "warning: ignoring malformed tuned-config line {}: {line:?}",
+                lno + 1
+            ),
+        }
+    }
+    out
+}
+
+fn parse_line(line: &str) -> Option<(PlanKey, TunedRecord)> {
+    let cols: Vec<&str> = line.split('\t').collect();
+    if cols.len() != 6 {
+        return None;
+    }
+    let device = crate::devices::by_name(cols[1])?.name;
+    let key = PlanKey {
+        kernel: cols[0].to_string(),
+        device,
+        grid: (cols[2].parse().ok()?, cols[3].parse().ok()?),
+    };
+    let rec = TunedRecord {
+        est_seconds: cols[4].parse().ok()?,
+        config: TuningConfig::parse(cols[5]).ok()?,
+    };
+    Some((key, rec))
+}
+
+/// In-memory cache of ready plans. Each key gets a slot whose lock is
+/// held while the entry is built, so concurrent workers asking for the
+/// same cold key block on *that key only* (one tune per key, ever) and
+/// every other key stays serviceable.
+#[derive(Default)]
+pub struct PlanCache {
+    slots: Mutex<HashMap<PlanKey, Arc<Mutex<Option<Arc<PlanEntry>>>>>>,
+}
+
+impl PlanCache {
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// Number of *built* entries.
+    pub fn len(&self) -> usize {
+        let slots = self.slots.lock().unwrap();
+        slots
+            .values()
+            .filter(|s| s.lock().map(|g| g.is_some()).unwrap_or(false))
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Get the entry for `key`, building it with `build` on first use.
+    /// `hit` reports whether the entry already existed (for the metrics
+    /// counters, which the caller owns).
+    pub fn get_or_build<E>(
+        &self,
+        key: &PlanKey,
+        build: impl FnOnce() -> Result<PlanEntry, E>,
+    ) -> Result<(Arc<PlanEntry>, bool), E> {
+        let slot = {
+            let mut slots = self.slots.lock().unwrap();
+            slots
+                .entry(key.clone())
+                .or_insert_with(|| Arc::new(Mutex::new(None)))
+                .clone()
+        };
+        let mut guard = slot.lock().unwrap();
+        if let Some(entry) = guard.as_ref() {
+            return Ok((entry.clone(), true));
+        }
+        let entry = Arc::new(build()?);
+        *guard = Some(entry.clone());
+        Ok((entry, false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::K40;
+
+    fn key(kernel: &str) -> PlanKey {
+        PlanKey { kernel: kernel.to_string(), device: K40.name, grid: (64, 64) }
+    }
+
+    fn record() -> TunedRecord {
+        let mut config = TuningConfig::default();
+        config.wg = [64, 4];
+        config.coarsen = [4, 1];
+        config.interleaved = true;
+        config.constant_mem.insert("f".into(), true);
+        TunedRecord { config, est_seconds: 1.25e-4 }
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let mut map = HashMap::new();
+        map.insert(key("sepconv_row"), record());
+        map.insert(
+            key("conv2d"),
+            TunedRecord { config: TuningConfig::default(), est_seconds: 3.0e-3 },
+        );
+        let text = render_tsv(&map);
+        let back = parse_tsv(&text);
+        assert_eq!(back.len(), 2);
+        for (k, r) in back {
+            assert_eq!(map.get(&k), Some(&r), "{k}");
+        }
+    }
+
+    #[test]
+    fn malformed_lines_skipped() {
+        let text = "# comment\n\nnot-enough-cols\tK40\n\
+            sepconv_row\tNoSuchDevice\t64\t64\t1e-4\twg=8x8 px=1x1\n\
+            sepconv_row\tK40\t64\t64\t1e-4\twg=8x8 px=1x1\n";
+        let parsed = parse_tsv(text);
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].0, key("sepconv_row"));
+        assert_eq!(parsed[0].1.config.wg, [8, 8]);
+    }
+
+    #[test]
+    fn store_persists_and_reloads() {
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tuned_test_{}.tsv", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let store = TunedStore::open(&path);
+            assert!(store.is_empty());
+            store.insert(key("sobel"), record());
+            assert_eq!(store.len(), 1);
+        }
+        let store = TunedStore::open(&path);
+        assert_eq!(store.len(), 1);
+        assert_eq!(store.lookup(&key("sobel")), Some(record()));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn device_names_with_spaces_roundtrip() {
+        // "Intel i7" and "AMD 7970" contain spaces — the TSV is
+        // tab-separated exactly so these survive.
+        let k = PlanKey {
+            kernel: "sobel".to_string(),
+            device: crate::devices::INTEL_I7.name,
+            grid: (32, 32),
+        };
+        let mut map = HashMap::new();
+        map.insert(k.clone(), record());
+        let parsed = parse_tsv(&render_tsv(&map));
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].0, k);
+    }
+}

@@ -1,0 +1,256 @@
+//! Self-driving load generation for `imagecl serve`.
+//!
+//! The offline crate set has no network stack, so the front door is
+//! simulated: `concurrency` client threads submit `requests` requests
+//! round-robin across the kernel set and the device pools, with
+//! bounded-queue backpressure (rejected submissions are retried and
+//! counted). The run produces a [`ServeReport`] — throughput,
+//! p50/p95/p99 latency and the cache counters.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::devices::DeviceSpec;
+
+use super::worker::{submit_with_retry, DevicePool, ServeRequest};
+use super::{KernelService, ServeError, ServeReport};
+
+/// Load-generator shape.
+#[derive(Debug, Clone)]
+pub struct LoadGenOpts {
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Client threads issuing them.
+    pub concurrency: usize,
+    /// Kernel ids, assigned round-robin by request index.
+    pub kernels: Vec<String>,
+    /// Target devices, assigned round-robin by request index.
+    pub devices: Vec<&'static DeviceSpec>,
+    /// Grid (n×n) every request runs at.
+    pub grid: usize,
+    /// Admission-queue capacity per device.
+    pub queue_cap: usize,
+    /// Max same-plan batch a worker drains at once.
+    pub max_batch: usize,
+    /// Worker threads per device.
+    pub workers_per_device: usize,
+}
+
+impl Default for LoadGenOpts {
+    fn default() -> Self {
+        LoadGenOpts {
+            requests: 1000,
+            concurrency: 8,
+            kernels: vec![
+                "sepconv_row".to_string(),
+                "conv2d".to_string(),
+                "sobel".to_string(),
+                "harris".to_string(),
+            ],
+            devices: crate::devices::ALL_DEVICES.to_vec(),
+            grid: 64,
+            queue_cap: 256,
+            max_batch: 32,
+            workers_per_device: 2,
+        }
+    }
+}
+
+/// Drive `opts.requests` requests through the service and collect the
+/// report. Returns an error only for empty/invalid option sets; request
+/// failures are counted in the report instead.
+pub fn run_loadgen(
+    service: Arc<KernelService>,
+    opts: &LoadGenOpts,
+) -> Result<ServeReport, ServeError> {
+    if opts.kernels.is_empty() {
+        return Err(ServeError::InvalidOptions("the kernel set is empty".to_string()));
+    }
+    if opts.devices.is_empty() {
+        return Err(ServeError::InvalidOptions("the device set is empty".to_string()));
+    }
+    if opts.requests == 0 {
+        return Err(ServeError::InvalidOptions("--requests must be positive".to_string()));
+    }
+
+    let pools: Vec<DevicePool> = opts
+        .devices
+        .iter()
+        .map(|&dev| {
+            DevicePool::start(
+                dev,
+                service.clone(),
+                opts.workers_per_device,
+                opts.queue_cap,
+                opts.max_batch,
+            )
+        })
+        .collect();
+    let queues: Vec<_> = pools.iter().map(|p| p.queue()).collect();
+
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let t0 = Instant::now();
+
+    let clients: Vec<_> = (0..opts.concurrency.max(1))
+        .map(|client| {
+            let queues = queues.clone();
+            let kernels = opts.kernels.clone();
+            let service = service.clone();
+            let reply_tx = reply_tx.clone();
+            let (requests, concurrency, grid) =
+                (opts.requests, opts.concurrency.max(1), opts.grid);
+            std::thread::Builder::new()
+                .name(format!("imagecl-loadgen-{client}"))
+                .spawn(move || {
+                    let mut submitted = 0usize;
+                    for i in (client..requests).step_by(concurrency) {
+                        let req = ServeRequest {
+                            kernel: kernels[i % kernels.len()].clone(),
+                            grid: (grid, grid),
+                            seed: i as u64,
+                            submitted: Instant::now(),
+                            reply: reply_tx.clone(),
+                        };
+                        // Kernel cycles fastest, device advances once per
+                        // kernel cycle: the request stream covers the full
+                        // kernel × device cross-product whatever the two
+                        // set sizes are (a plain `i % devices` would pin
+                        // kernel k to device k whenever the counts match).
+                        let queue = &queues[(i / kernels.len()) % queues.len()];
+                        if submit_with_retry(queue, &service.counters, req) {
+                            submitted += 1;
+                        }
+                    }
+                    submitted
+                })
+                .expect("spawning loadgen client")
+        })
+        .collect();
+    drop(reply_tx);
+
+    let submitted: usize = clients.into_iter().map(|h| h.join().unwrap()).sum();
+
+    let mut latencies_us: Vec<u64> = Vec::with_capacity(submitted);
+    let mut per_kernel: BTreeMap<String, usize> = BTreeMap::new();
+    let mut completed = 0usize;
+    let mut errors = 0usize;
+    for received in 0..submitted {
+        // Workers hold reply senders only inside requests, so every
+        // submitted request yields exactly one reply — unless a worker
+        // died, in which case the channel disconnects and every
+        // outstanding request is accounted as failed.
+        match reply_rx.recv() {
+            Ok(reply) => {
+                latencies_us.push(reply.latency.as_micros() as u64);
+                if reply.is_ok() {
+                    completed += 1;
+                    *per_kernel.entry(reply.kernel).or_default() += 1;
+                } else {
+                    errors += 1;
+                }
+            }
+            Err(_) => {
+                errors += submitted - received;
+                break;
+            }
+        }
+    }
+    let wall = t0.elapsed();
+
+    for pool in pools {
+        pool.shutdown();
+    }
+    latencies_us.sort_unstable();
+
+    Ok(ServeReport {
+        completed,
+        errors,
+        wall,
+        latencies_us,
+        per_kernel,
+        stats: service.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{ALL_DEVICES, INTEL_I7};
+    use crate::serve::{ExecMode, KernelService, ServiceConfig};
+    use crate::tuner::Strategy;
+
+    fn sim_service() -> Arc<KernelService> {
+        KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 30, seed: 11 },
+            tuned_path: None,
+            exec: ExecMode::Simulate,
+        })
+    }
+
+    #[test]
+    fn loadgen_completes_all_requests() {
+        let service = sim_service();
+        let opts = LoadGenOpts {
+            requests: 60,
+            concurrency: 4,
+            kernels: vec![
+                "sepconv_row".to_string(),
+                "conv2d".to_string(),
+                "sobel".to_string(),
+            ],
+            devices: ALL_DEVICES.to_vec(),
+            grid: 32,
+            queue_cap: 8, // small: exercises backpressure
+            max_batch: 4,
+            workers_per_device: 2,
+        };
+        let report = run_loadgen(service.clone(), &opts).unwrap();
+        assert_eq!(report.completed, 60);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.per_kernel.values().sum::<usize>(), 60);
+        assert_eq!(report.per_kernel.len(), 3);
+        // 3 kernels × 4 devices cold keys, tuned exactly once each.
+        assert_eq!(report.stats.tunes, 12);
+        assert_eq!(report.stats.plan_compiles, 12);
+        // Re-running on the same service re-tunes nothing.
+        let report2 = run_loadgen(service, &opts).unwrap();
+        assert_eq!(report2.completed, 60);
+        assert_eq!(report2.stats.tunes, 12);
+        assert!(report2.stats.cache_hits > report.stats.cache_hits);
+    }
+
+    #[test]
+    fn loadgen_real_execution_small() {
+        let service = KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 20, seed: 5 },
+            tuned_path: None,
+            exec: ExecMode::Real,
+        });
+        let opts = LoadGenOpts {
+            requests: 6,
+            concurrency: 2,
+            kernels: vec!["sepconv_row".to_string()],
+            devices: vec![&INTEL_I7],
+            grid: 16,
+            queue_cap: 8,
+            max_batch: 4,
+            workers_per_device: 1,
+        };
+        let report = run_loadgen(service, &opts).unwrap();
+        assert_eq!(report.completed, 6);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.latencies_us.len(), 6);
+    }
+
+    #[test]
+    fn empty_options_rejected() {
+        let service = sim_service();
+        let mut opts = LoadGenOpts::default();
+        opts.kernels.clear();
+        assert!(run_loadgen(service.clone(), &opts).is_err());
+        let opts = LoadGenOpts { requests: 0, ..Default::default() };
+        assert!(run_loadgen(service, &opts).is_err());
+    }
+}

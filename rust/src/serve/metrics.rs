@@ -1,0 +1,198 @@
+//! Serving metrics: lock-free counters shared by the cache and workers,
+//! plus latency percentiles and the human-readable serve report.
+//!
+//! The counters are the observable contract of the serving layer — the
+//! warm-start acceptance check ("second run re-tunes nothing") reads
+//! `tunes` from a [`StatsSnapshot`], and the tests assert cache behaviour
+//! through them rather than through timing.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::report::Ms;
+
+/// Monotonic event counters (relaxed ordering is enough: they are only
+/// read as a snapshot after the writers quiesce, or for reporting).
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Tuner invocations (cold keys only — the amortization target).
+    pub tunes: AtomicU64,
+    /// Keys served from the persisted tuning TSV instead of the tuner.
+    pub warm_starts: AtomicU64,
+    /// Lower + launch-compile of a winning config (once per key).
+    pub plan_compiles: AtomicU64,
+    /// Plan-cache hits (request found a ready `PlanEntry`).
+    pub cache_hits: AtomicU64,
+    /// Plan-cache misses (request had to build the entry).
+    pub cache_misses: AtomicU64,
+    /// Batches executed by workers.
+    pub batches: AtomicU64,
+    /// Largest batch observed.
+    pub max_batch: AtomicU64,
+    /// Admission-queue rejections (bounded-queue backpressure).
+    pub rejected: AtomicU64,
+}
+
+impl Counters {
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn observe_batch(&self, len: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.max_batch.fetch_max(len as u64, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            tunes: self.tunes.load(Ordering::Relaxed),
+            warm_starts: self.warm_starts.load(Ordering::Relaxed),
+            plan_compiles: self.plan_compiles.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of the counters (plain integers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StatsSnapshot {
+    pub tunes: u64,
+    pub warm_starts: u64,
+    pub plan_compiles: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub batches: u64,
+    pub max_batch: u64,
+    pub rejected: u64,
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice (`q` in 0..=100).
+/// Empty input yields 0.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// The result of one serving run: what completed, how fast, and what the
+/// cache did.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub errors: usize,
+    /// Wall-clock of the whole run (admission of the first request to the
+    /// last response).
+    pub wall: Duration,
+    /// Per-request latency (admission → completion), microseconds,
+    /// ascending.
+    pub latencies_us: Vec<u64>,
+    /// Completed requests per kernel id.
+    pub per_kernel: BTreeMap<String, usize>,
+    pub stats: StatsSnapshot,
+}
+
+impl ServeReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.as_secs_f64() <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Latency percentile as [`Ms`] (q in 0..=100).
+    pub fn latency_p(&self, q: f64) -> Ms {
+        Ms(percentile(&self.latencies_us, q) as f64 / 1e3)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let s = &self.stats;
+        let _ = writeln!(out, "serve report");
+        let _ = writeln!(
+            out,
+            "  requests    {} completed, {} failed, wall {}",
+            self.completed,
+            self.errors,
+            Ms::from(self.wall)
+        );
+        let _ = writeln!(out, "  throughput  {:.0} req/s", self.throughput_rps());
+        let _ = writeln!(
+            out,
+            "  latency     p50 {}  p95 {}  p99 {}",
+            self.latency_p(50.0),
+            self.latency_p(95.0),
+            self.latency_p(99.0)
+        );
+        let _ = writeln!(
+            out,
+            "  batching    {} batches (max {}), {} admission rejections (retried)",
+            s.batches, s.max_batch, s.rejected
+        );
+        let _ = writeln!(
+            out,
+            "  plan cache  {} hits / {} misses — {} tunes, {} warm-starts, {} compiles",
+            s.cache_hits, s.cache_misses, s.tunes, s.warm_starts, s.plan_compiles
+        );
+        for (kernel, count) in &self.per_kernel {
+            let _ = writeln!(out, "    {kernel:<14} {count} requests");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 50.0), 50);
+        assert_eq!(percentile(&v, 95.0), 95);
+        assert_eq!(percentile(&v, 99.0), 99);
+        assert_eq!(percentile(&v, 100.0), 100);
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&[7], 99.0), 7);
+        assert_eq!(percentile(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn counters_snapshot() {
+        let c = Counters::default();
+        Counters::bump(&c.tunes);
+        Counters::bump(&c.cache_hits);
+        Counters::bump(&c.cache_hits);
+        c.observe_batch(3);
+        c.observe_batch(9);
+        c.observe_batch(2);
+        let s = c.snapshot();
+        assert_eq!(s.tunes, 1);
+        assert_eq!(s.cache_hits, 2);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.max_batch, 9);
+    }
+
+    #[test]
+    fn report_renders() {
+        let r = ServeReport {
+            completed: 10,
+            errors: 0,
+            wall: Duration::from_millis(20),
+            latencies_us: vec![100, 200, 300],
+            per_kernel: BTreeMap::from([("sobel".to_string(), 10)]),
+            stats: StatsSnapshot::default(),
+        };
+        let text = r.render();
+        assert!(text.contains("p50"), "{text}");
+        assert!(text.contains("sobel"), "{text}");
+        assert!(r.throughput_rps() > 0.0);
+    }
+}

@@ -1,0 +1,343 @@
+//! The serving layer: a concurrent kernel service with plan/tune caching
+//! and adaptive batching.
+//!
+//! The paper's premise is that one ImageCL source yields many tuned
+//! implementations per device — but tuning and launch compilation are
+//! expensive, so a production request path must pay them **once per
+//! (kernel, device, grid)** and amortize across every subsequent request
+//! (the overhead-reuse lesson of OpenCLIPER, and of Falch & Elster's own
+//! ML-autotuning follow-up). The pieces:
+//!
+//! * [`KernelService`] (this module) — per-[`cache::PlanKey`], runs the
+//!   tuner once, lowers the winning [`TuningConfig`] once, launch-compiles
+//!   it to a [`crate::exec::PreparedKernel`] once, and caches the result;
+//!   tuning results persist to a TSV ([`cache::TunedStore`]) so restarts
+//!   warm-start without re-tuning.
+//! * [`queue::BoundedQueue`] — non-blocking bounded admission with
+//!   same-key batch draining (adaptive batching).
+//! * [`worker::DevicePool`] — per-device worker threads executing batches
+//!   against the cache (std threads + channels; no external deps).
+//! * [`metrics`] — counters, latency percentiles and the serve report.
+//! * [`loadgen`] — the self-driving load generator behind
+//!   `imagecl serve` (the offline crate set has no network stack, so the
+//!   front door is simulated traffic).
+//!
+//! Multi-filter pipelines route through the same cache:
+//! [`KernelService::schedule_pipeline`] feeds per-device *tuned* time
+//! estimates into the HEFT scheduler instead of the naive-config model.
+
+pub mod cache;
+pub mod loadgen;
+pub mod metrics;
+pub mod queue;
+pub mod worker;
+
+pub use cache::{PlanEntry, PlanKey, TuneSource, TunedStore};
+pub use loadgen::{run_loadgen, LoadGenOpts};
+pub use metrics::{Counters, ServeReport, StatsSnapshot};
+pub use queue::{BoundedQueue, PushError};
+pub use worker::{DevicePool, ServeReply, ServeRequest};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::analysis::KernelInfo;
+use crate::bench_defs;
+use crate::devices::{self, DeviceSpec};
+use crate::exec::PreparedKernel;
+use crate::imagecl::frontend;
+use crate::pipeline::{graph_parts, schedule_by, Pipeline, Schedule};
+use crate::transform::lower;
+use crate::tuner::{self, MlSearchOpts, Strategy};
+
+use cache::{PlanCache, TunedRecord};
+
+/// Serving error.
+#[derive(Debug, thiserror::Error)]
+pub enum ServeError {
+    #[error(
+        "unknown kernel {0:?} — serving supports the built-in benchmark \
+         kernels (see `imagecl kernels`)"
+    )]
+    UnknownKernel(String),
+    #[error("compiling {kernel}: {msg}")]
+    Compile { kernel: String, msg: String },
+    #[error("executing {kernel}: {msg}")]
+    Exec { kernel: String, msg: String },
+    #[error("invalid serve options: {0}")]
+    InvalidOptions(String),
+    #[error("serving shut down before the request completed")]
+    Shutdown,
+}
+
+/// How workers execute requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Run the tuned plan for real through the NDRange interpreter (the
+    /// correctness backend); replies carry the measured execution time.
+    Real,
+    /// Report the device-model time estimate without touching pixels
+    /// (serving-overhead measurements, GPU devices on this CPU-only
+    /// testbed, and deterministic tests).
+    Simulate,
+}
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Tuner search strategy for cold keys.
+    pub strategy: Strategy,
+    /// TSV path for tuned-config persistence; `None` = in-memory only.
+    pub tuned_path: Option<PathBuf>,
+    pub exec: ExecMode,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            strategy: serve_strategy(),
+            tuned_path: Some(default_tuned_path()),
+            exec: ExecMode::Real,
+        }
+    }
+}
+
+/// Default tuner strategy for the serving path: the paper's two-phase ML
+/// search with a reduced budget — cold-start latency matters more here
+/// than squeezing the last percent, and the TSV warm-start means most
+/// processes never tune at all.
+pub fn serve_strategy() -> Strategy {
+    Strategy::MlTwoPhase(MlSearchOpts {
+        train_samples: 400,
+        top_k: 60,
+        epochs: 20,
+        ..Default::default()
+    })
+}
+
+/// Default warm-start file: `<crate>/target/serve_tuned.tsv` (override
+/// with `IMAGECL_TUNED`).
+pub fn default_tuned_path() -> PathBuf {
+    if let Ok(p) = std::env::var("IMAGECL_TUNED") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("serve_tuned.tsv")
+}
+
+/// The kernel service: tune-once / compile-once / serve-many.
+///
+/// Thread-safe behind an [`Arc`]; a cold key blocks only requests for
+/// *that key* while the tuner runs.
+pub struct KernelService {
+    config: ServiceConfig,
+    store: TunedStore,
+    plans: PlanCache,
+    pub counters: Counters,
+}
+
+impl KernelService {
+    pub fn new(config: ServiceConfig) -> Arc<KernelService> {
+        let store = match &config.tuned_path {
+            Some(p) => TunedStore::open(p),
+            None => TunedStore::ephemeral(),
+        };
+        Arc::new(KernelService {
+            config,
+            store,
+            plans: PlanCache::new(),
+            counters: Counters::default(),
+        })
+    }
+
+    pub fn exec_mode(&self) -> ExecMode {
+        self.config.exec
+    }
+
+    /// Tuned configs known to the store (loaded + freshly tuned).
+    pub fn tuned_len(&self) -> usize {
+        self.store.len()
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        self.counters.snapshot()
+    }
+
+    /// The ready-to-execute entry for `(kernel, device, grid)` — tuning,
+    /// lowering and launch-compiling on first use, cached afterwards.
+    pub fn plan(
+        &self,
+        kernel: &str,
+        dev: &'static DeviceSpec,
+        grid: (usize, usize),
+    ) -> Result<Arc<PlanEntry>, ServeError> {
+        let key = PlanKey { kernel: kernel.to_string(), device: dev.name, grid };
+        let (entry, hit) =
+            self.plans.get_or_build(&key, || self.build_entry(&key, dev))?;
+        if hit {
+            Counters::bump(&self.counters.cache_hits);
+        } else {
+            Counters::bump(&self.counters.cache_misses);
+        }
+        Ok(entry)
+    }
+
+    fn build_entry(
+        &self,
+        key: &PlanKey,
+        dev: &'static DeviceSpec,
+    ) -> Result<PlanEntry, ServeError> {
+        let Some(kdef) = bench_defs::kernel_by_id(&key.kernel) else {
+            return Err(ServeError::UnknownKernel(key.kernel.clone()));
+        };
+        let prog = frontend(kdef.source).map_err(|e| ServeError::Compile {
+            kernel: key.kernel.clone(),
+            msg: e.to_string(),
+        })?;
+        let info = KernelInfo::analyze(prog);
+
+        let (config, est_seconds, source) = match self.store.lookup(key) {
+            Some(rec) => {
+                Counters::bump(&self.counters.warm_starts);
+                (rec.config, rec.est_seconds, TuneSource::WarmStart)
+            }
+            None => {
+                Counters::bump(&self.counters.tunes);
+                let res =
+                    tuner::tune_on_simulator(&info, dev, key.grid, &self.config.strategy);
+                self.store.insert(
+                    key.clone(),
+                    TunedRecord {
+                        config: res.best.clone(),
+                        est_seconds: res.best_time,
+                    },
+                );
+                (res.best, res.best_time, TuneSource::Fresh)
+            }
+        };
+
+        let plan = lower(&info, &config).map_err(|e| ServeError::Compile {
+            kernel: key.kernel.clone(),
+            msg: e.to_string(),
+        })?;
+        Counters::bump(&self.counters.plan_compiles);
+        // Launch-compile against the canonical workload shapes for this
+        // built-in kernel at the key's grid.
+        let args = bench_defs::workload(&key.kernel, key.grid.0, key.grid.1, 0);
+        let prepared =
+            PreparedKernel::prepare(&plan, &args, key.grid).map_err(|e| {
+                ServeError::Compile { kernel: key.kernel.clone(), msg: e.to_string() }
+            })?;
+        Ok(PlanEntry {
+            key: key.clone(),
+            config,
+            plan,
+            prepared,
+            est_seconds,
+            source,
+        })
+    }
+
+    /// Tuned execution-time estimate for a benchmark graph (composite
+    /// graphs sum their stages), driving cached keys into the cache on
+    /// demand. Unknown graphs are infinitely slow rather than fatal — the
+    /// scheduler then simply never places them.
+    pub fn graph_time(&self, dev: &DeviceSpec, graph: &str, n: usize) -> f64 {
+        let Some(dev) = devices::by_name(dev.name) else {
+            return f64::INFINITY;
+        };
+        let single = [graph];
+        let parts: &[&str] = match graph_parts(graph) {
+            Some(parts) => parts,
+            None => &single,
+        };
+        let mut total = 0.0;
+        for kernel in parts {
+            match self.plan(kernel, dev, (n, n)) {
+                Ok(entry) => total += entry.est_seconds,
+                Err(_) => return f64::INFINITY,
+            }
+        }
+        total
+    }
+
+    /// HEFT-schedule a multi-filter pipeline using this service's cached
+    /// *tuned* per-device estimates instead of the naive-config model.
+    pub fn schedule_pipeline(
+        &self,
+        pipeline: &Pipeline,
+        devices: &[&'static DeviceSpec],
+        n: usize,
+    ) -> Schedule {
+        schedule_by(pipeline, devices, n, |dev, graph| self.graph_time(dev, graph, n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{INTEL_I7, K40};
+
+    fn test_service(exec: ExecMode) -> Arc<KernelService> {
+        KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 40, seed: 7 },
+            tuned_path: None,
+            exec,
+        })
+    }
+
+    #[test]
+    fn cache_hit_and_miss_counters() {
+        let svc = test_service(ExecMode::Simulate);
+        let a = svc.plan("sepconv_row", &K40, (32, 32)).unwrap();
+        let b = svc.plan("sepconv_row", &K40, (32, 32)).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1);
+        assert_eq!(s.plan_compiles, 1);
+        assert_eq!(s.cache_misses, 1);
+        assert_eq!(s.cache_hits, 1);
+        // A different device is a different key.
+        svc.plan("sepconv_row", &INTEL_I7, (32, 32)).unwrap();
+        assert_eq!(svc.stats().tunes, 2);
+    }
+
+    #[test]
+    fn unknown_kernel_is_clean_error() {
+        let svc = test_service(ExecMode::Simulate);
+        let err = svc.plan("no_such_kernel", &K40, (32, 32)).unwrap_err();
+        assert!(matches!(err, ServeError::UnknownKernel(_)), "{err}");
+        assert_eq!(svc.stats().tunes, 0);
+    }
+
+    #[test]
+    fn entry_is_executable() {
+        let svc = test_service(ExecMode::Real);
+        let entry = svc.plan("sobel", &INTEL_I7, (16, 16)).unwrap();
+        let mut args = crate::bench_defs::workload("sobel", 16, 16, 3);
+        entry.prepared.run(&mut args).unwrap();
+        assert!(entry.est_seconds > 0.0);
+        assert_eq!(entry.source, TuneSource::Fresh);
+    }
+
+    #[test]
+    fn tuned_schedule_places_all_filters() {
+        use crate::pipeline::{Pipeline, Port};
+        use crate::runtime::Tensor;
+        let svc = test_service(ExecMode::Simulate);
+        let mut p = Pipeline::new();
+        let img = p.source("img", Tensor::zeros(4, 4));
+        let sob = p.filter("sobel", &[p.port(img)]);
+        let har = p.filter(
+            "harris",
+            &[Port { node: sob, port: 0 }, Port { node: sob, port: 1 }],
+        );
+        p.output(p.port(har));
+        let s = svc.schedule_pipeline(&p, &crate::devices::ALL_DEVICES, 256);
+        assert_eq!(s.placements.len(), 2);
+        assert!(s.makespan_s.is_finite() && s.makespan_s > 0.0);
+        // Scheduling populated the cache: 2 kernels × 4 devices.
+        assert_eq!(svc.stats().tunes, 8);
+    }
+}

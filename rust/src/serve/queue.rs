@@ -1,0 +1,177 @@
+//! Bounded admission queue with same-key batch draining.
+//!
+//! Admission control is explicit: [`BoundedQueue::push`] never blocks —
+//! when the queue is at capacity the item comes straight back as
+//! [`PushError::Full`], and the caller decides (the load generator
+//! retries and counts the rejection; a network front-end would shed the
+//! request). Workers drain with [`BoundedQueue::pop_batch`], which
+//! blocks until work arrives and then takes up to `max` items *sharing
+//! the first item's key* — adaptive batching: whatever same-plan requests
+//! have piled up behind the head are grouped so the plan/buffer setup is
+//! paid once per batch, not once per request.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Why a push was refused; the item is handed back untouched.
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    /// At capacity — backpressure; retry later or shed.
+    Full(T),
+    /// The queue was closed (serving is shutting down).
+    Closed(T),
+}
+
+struct Inner<K, T> {
+    items: VecDeque<(K, T)>,
+    closed: bool,
+}
+
+/// A bounded MPMC queue of keyed items (std `Mutex` + `Condvar`; no
+/// external deps, matching the crate's offline style).
+pub struct BoundedQueue<K, T> {
+    inner: Mutex<Inner<K, T>>,
+    nonempty: Condvar,
+    cap: usize,
+}
+
+impl<K: Eq + Clone, T> BoundedQueue<K, T> {
+    /// `cap` is clamped to at least 1.
+    pub fn new(cap: usize) -> BoundedQueue<K, T> {
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            nonempty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking admission. `Err(Full)` at capacity, `Err(Closed)`
+    /// after [`Self::close`].
+    pub fn push(&self, key: K, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.items.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.items.push_back((key, item));
+        drop(g);
+        self.nonempty.notify_one();
+        Ok(())
+    }
+
+    /// Block until at least one item is queued, then take up to `max`
+    /// items with the head item's key (preserving the relative order of
+    /// everything left behind). Returns `None` once the queue is closed
+    /// *and* drained — the worker-loop exit condition.
+    pub fn pop_batch(&self, max: usize) -> Option<(K, Vec<T>)> {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                break;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.nonempty.wait(g).unwrap();
+        }
+        let (key, first) = g.items.pop_front().unwrap();
+        let mut batch = vec![first];
+        let mut rest = VecDeque::with_capacity(g.items.len());
+        while let Some((k, it)) = g.items.pop_front() {
+            if batch.len() < max && k == key {
+                batch.push(it);
+            } else {
+                rest.push_back((k, it));
+            }
+        }
+        g.items = rest;
+        Some((key, batch))
+    }
+
+    /// Stop admitting; wake every blocked worker so they can drain the
+    /// remainder and exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.nonempty.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_when_full() {
+        let q: BoundedQueue<&str, u32> = BoundedQueue::new(2);
+        assert!(q.push("a", 1).is_ok());
+        assert!(q.push("a", 2).is_ok());
+        assert_eq!(q.push("a", 3), Err(PushError::Full(3)));
+        // Draining frees capacity.
+        assert!(q.pop_batch(8).is_some());
+        assert!(q.push("a", 3).is_ok());
+    }
+
+    #[test]
+    fn batches_group_same_key_in_order() {
+        let q: BoundedQueue<char, u32> = BoundedQueue::new(16);
+        for (k, v) in [('a', 1), ('b', 2), ('a', 3), ('a', 4), ('c', 5)] {
+            q.push(k, v).unwrap();
+        }
+        // max=2: head is 'a', one more 'a' joins, the third stays queued.
+        assert_eq!(q.pop_batch(2), Some(('a', vec![1, 3])));
+        // 'b' is now the head; the leftover 'a' kept its position after it.
+        assert_eq!(q.pop_batch(2), Some(('b', vec![2])));
+        assert_eq!(q.pop_batch(2), Some(('a', vec![4])));
+        assert_eq!(q.pop_batch(2), Some(('c', vec![5])));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q: BoundedQueue<u8, u8> = BoundedQueue::new(4);
+        q.push(1, 10).unwrap();
+        q.push(1, 11).unwrap();
+        q.close();
+        assert_eq!(q.push(1, 12), Err(PushError::Closed(12)));
+        assert_eq!(q.pop_batch(8), Some((1, vec![10, 11])));
+        assert_eq!(q.pop_batch(8), None);
+    }
+
+    #[test]
+    fn blocked_worker_wakes_on_push_and_close() {
+        use std::sync::Arc;
+        let q: Arc<BoundedQueue<u8, u8>> = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let worker = std::thread::spawn(move || {
+            let mut seen = Vec::new();
+            while let Some((_, batch)) = q2.pop_batch(8) {
+                seen.extend(batch);
+            }
+            seen
+        });
+        q.push(0, 1).unwrap();
+        q.push(0, 2).unwrap();
+        q.close();
+        let seen = worker.join().unwrap();
+        assert_eq!(seen, vec![1, 2]);
+    }
+}

@@ -1,0 +1,251 @@
+//! Per-device worker pools: threads that drain the device's bounded
+//! admission queue in same-plan batches and execute them against the
+//! plan cache.
+//!
+//! A batch pays the cache lookup (and, on the first request for a key
+//! ever, the tune + compile) once; each member then only pays its own
+//! buffer setup and execution. Replies travel over a plain
+//! `std::sync::mpsc` channel supplied per request.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::bench_defs;
+use crate::devices::DeviceSpec;
+
+use super::queue::BoundedQueue;
+use super::{Counters, ExecMode, KernelService};
+
+/// Batching key: requests for the same kernel at the same grid share a
+/// prepared plan (the device is fixed per queue).
+pub type BatchKey = (String, (usize, usize));
+
+/// One serving request.
+pub struct ServeRequest {
+    pub kernel: String,
+    pub grid: (usize, usize),
+    /// Workload seed (which synthetic frame to process).
+    pub seed: u64,
+    /// Admission timestamp; latency is measured from here.
+    pub submitted: Instant,
+    /// Where the reply goes.
+    pub reply: Sender<ServeReply>,
+}
+
+impl ServeRequest {
+    pub fn batch_key(&self) -> BatchKey {
+        (self.kernel.clone(), self.grid)
+    }
+}
+
+/// One serving reply.
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    pub kernel: String,
+    pub device: &'static str,
+    /// Seconds attributed to the kernel execution: measured wall time in
+    /// [`ExecMode::Real`], the device-model estimate in
+    /// [`ExecMode::Simulate`]. `Err` carries the failure text.
+    pub result: Result<f64, String>,
+    /// Admission → completion.
+    pub latency: Duration,
+    /// Size of the batch this request was served in.
+    pub batch: usize,
+}
+
+impl ServeReply {
+    pub fn is_ok(&self) -> bool {
+        self.result.is_ok()
+    }
+}
+
+/// A device's admission queue plus its worker threads.
+pub struct DevicePool {
+    pub device: &'static DeviceSpec,
+    queue: Arc<BoundedQueue<BatchKey, ServeRequest>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl DevicePool {
+    /// Spawn `workers` threads serving `device` from a queue of capacity
+    /// `queue_cap`, batching up to `max_batch` same-key requests.
+    pub fn start(
+        device: &'static DeviceSpec,
+        service: Arc<KernelService>,
+        workers: usize,
+        queue_cap: usize,
+        max_batch: usize,
+    ) -> DevicePool {
+        let queue = Arc::new(BoundedQueue::new(queue_cap));
+        let handles = (0..workers.max(1))
+            .map(|i| {
+                let queue = queue.clone();
+                let service = service.clone();
+                std::thread::Builder::new()
+                    .name(format!("imagecl-serve-{}-{i}", device.name))
+                    .spawn(move || worker_loop(device, &service, &queue, max_batch))
+                    .expect("spawning worker thread")
+            })
+            .collect();
+        DevicePool { device, queue, workers: handles }
+    }
+
+    /// The admission side (cloneable, shared with submitters).
+    pub fn queue(&self) -> Arc<BoundedQueue<BatchKey, ServeRequest>> {
+        self.queue.clone()
+    }
+
+    /// Close admission, drain, and join the workers.
+    pub fn shutdown(self) {
+        self.queue.close();
+        for h in self.workers {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    device: &'static DeviceSpec,
+    service: &KernelService,
+    queue: &BoundedQueue<BatchKey, ServeRequest>,
+    max_batch: usize,
+) {
+    while let Some(((kernel, grid), batch)) = queue.pop_batch(max_batch) {
+        service.counters.observe_batch(batch.len());
+        let batch_len = batch.len();
+        match service.plan(&kernel, device, grid) {
+            Err(e) => {
+                let msg = e.to_string();
+                for req in batch {
+                    respond(req, device, Err(msg.clone()), batch_len);
+                }
+            }
+            Ok(entry) => {
+                for req in batch {
+                    let result = match service.exec_mode() {
+                        ExecMode::Simulate => Ok(entry.est_seconds),
+                        ExecMode::Real => {
+                            let mut args =
+                                bench_defs::workload(&kernel, grid.0, grid.1, req.seed);
+                            let t0 = Instant::now();
+                            entry
+                                .prepared
+                                .run(&mut args)
+                                .map(|()| t0.elapsed().as_secs_f64())
+                                .map_err(|e| e.to_string())
+                        }
+                    };
+                    respond(req, device, result, batch_len);
+                }
+            }
+        }
+    }
+}
+
+fn respond(
+    req: ServeRequest,
+    device: &'static DeviceSpec,
+    result: Result<f64, String>,
+    batch: usize,
+) {
+    let reply = ServeReply {
+        kernel: req.kernel,
+        device: device.name,
+        result,
+        latency: req.submitted.elapsed(),
+        batch,
+    };
+    // A dropped receiver means the client gave up; that is their call.
+    let _ = req.reply.send(reply);
+}
+
+/// Submit with bounded-queue backpressure: retry until admitted,
+/// counting at most one rejection per request (it measures shed load,
+/// not spin iterations) and backing off briefly between attempts so a
+/// full queue doesn't burn a client core. Returns `false` if the queue
+/// closed.
+pub fn submit_with_retry(
+    queue: &BoundedQueue<BatchKey, ServeRequest>,
+    counters: &Counters,
+    mut req: ServeRequest,
+) -> bool {
+    let mut rejected = false;
+    loop {
+        match queue.push(req.batch_key(), req) {
+            Ok(()) => return true,
+            Err(super::PushError::Full(r)) => {
+                if !rejected {
+                    Counters::bump(&counters.rejected);
+                    rejected = true;
+                }
+                req = r;
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            }
+            Err(super::PushError::Closed(_)) => return false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::INTEL_I7;
+    use crate::serve::ServiceConfig;
+    use crate::tuner::Strategy;
+    use std::sync::mpsc;
+
+    #[test]
+    fn pool_serves_and_shuts_down() {
+        let service = KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 30, seed: 1 },
+            tuned_path: None,
+            exec: ExecMode::Simulate,
+        });
+        let pool = DevicePool::start(&INTEL_I7, service.clone(), 2, 8, 4);
+        let (tx, rx) = mpsc::channel();
+        let queue = pool.queue();
+        for seed in 0..6 {
+            let req = ServeRequest {
+                kernel: "sobel".to_string(),
+                grid: (32, 32),
+                seed,
+                submitted: Instant::now(),
+                reply: tx.clone(),
+            };
+            assert!(submit_with_retry(&queue, &service.counters, req));
+        }
+        let replies: Vec<ServeReply> = (0..6).map(|_| rx.recv().unwrap()).collect();
+        assert!(replies.iter().all(|r| r.is_ok()));
+        assert!(replies.iter().all(|r| r.device == INTEL_I7.name));
+        pool.shutdown();
+        // One tune, one compile; every request hit the same key.
+        let s = service.stats();
+        assert_eq!(s.tunes, 1);
+        assert_eq!(s.plan_compiles, 1);
+        assert!(s.batches >= 1);
+    }
+
+    #[test]
+    fn bad_kernel_requests_get_error_replies() {
+        let service = KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 30, seed: 1 },
+            tuned_path: None,
+            exec: ExecMode::Simulate,
+        });
+        let pool = DevicePool::start(&INTEL_I7, service.clone(), 1, 4, 4);
+        let (tx, rx) = mpsc::channel();
+        let req = ServeRequest {
+            kernel: "bogus".to_string(),
+            grid: (16, 16),
+            seed: 0,
+            submitted: Instant::now(),
+            reply: tx,
+        };
+        assert!(submit_with_retry(&pool.queue(), &service.counters, req));
+        let reply = rx.recv().unwrap();
+        assert!(reply.result.is_err());
+        pool.shutdown();
+    }
+}

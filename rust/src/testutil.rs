@@ -51,6 +51,25 @@ impl Rng {
     }
 }
 
+/// Gate for real-execution (PJRT artifact) tests: returns the artifact
+/// directory only when the crate was built with the `xla` feature AND
+/// `make artifacts` has produced the manifest. Otherwise prints the skip
+/// reason and returns `None` — callers do `let Some(dir) = ... else
+/// { return };` so the suite passes cleanly on machines without the XLA
+/// toolchain.
+pub fn artifact_dir_or_skip() -> Option<std::path::PathBuf> {
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: built without the `xla` feature");
+        return None;
+    }
+    let dir = crate::runtime::default_artifact_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts missing — run `make artifacts` first ({dir:?})");
+        return None;
+    }
+    Some(dir)
+}
+
 /// Run a property over `cases` seeded cases; panics include the seed so a
 /// failure reproduces with `check_with_seed(seed, ..)`.
 pub fn check(cases: usize, mut prop: impl FnMut(&mut Rng)) {

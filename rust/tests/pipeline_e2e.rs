@@ -8,7 +8,7 @@ use imagecl::devices::ALL_DEVICES;
 use imagecl::exec::ImageBuf;
 use imagecl::imagecl::ScalarType;
 use imagecl::pipeline::{schedule, Pipeline, Port};
-use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use imagecl::runtime::{Tensor, XlaRuntime};
 use imagecl::transform::TuningConfig;
 
 const N: usize = 32;
@@ -17,9 +17,16 @@ fn tensor_of(img: &ImageBuf) -> Tensor {
     Tensor::new(img.h, img.w, img.buf.data.iter().map(|&v| v as f32).collect())
 }
 
+/// Clean skip (via `testutil::artifact_dir_or_skip`) when the `xla`
+/// feature or the AOT artifacts are absent.
+fn runtime() -> Option<XlaRuntime> {
+    let dir = imagecl::testutil::artifact_dir_or_skip()?;
+    Some(XlaRuntime::new(&dir).expect("runtime"))
+}
+
 #[test]
 fn harris_pipeline_runs_and_matches_reference() {
-    let mut rt = XlaRuntime::new(&default_artifact_dir()).expect("runtime");
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::F32, N, N, 17);
 
     let mut p = Pipeline::new();
@@ -65,7 +72,7 @@ fn harris_pipeline_runs_and_matches_reference() {
 
 #[test]
 fn sepconv_pipeline_two_stage() {
-    let mut rt = XlaRuntime::new(&default_artifact_dir()).expect("runtime");
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::F32, N, N, 29);
     let taps = Tensor::new(5, 1, vec![0.0625, 0.25, 0.375, 0.25, 0.0625]);
 

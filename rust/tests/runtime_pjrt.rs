@@ -6,15 +6,13 @@
 use imagecl::bench_defs::{gauss5, gauss5x5, reference, synth_image};
 use imagecl::exec::ImageBuf;
 use imagecl::imagecl::ScalarType;
-use imagecl::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+use imagecl::runtime::{Tensor, XlaRuntime};
 
-fn runtime() -> XlaRuntime {
-    let dir = default_artifact_dir();
-    assert!(
-        dir.join("manifest.tsv").exists(),
-        "artifacts missing — run `make artifacts` first ({dir:?})"
-    );
-    XlaRuntime::new(&dir).expect("creating runtime")
+/// Clean skip (via `testutil::artifact_dir_or_skip`) when the `xla`
+/// feature or the AOT artifacts are absent.
+fn runtime() -> Option<XlaRuntime> {
+    let dir = imagecl::testutil::artifact_dir_or_skip()?;
+    Some(XlaRuntime::new(&dir).expect("creating runtime"))
 }
 
 fn tensor_of(img: &ImageBuf) -> Tensor {
@@ -29,7 +27,7 @@ const N: usize = 32;
 
 #[test]
 fn sepconv_row_artifact_matches_reference() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::F32, N, N, 7);
     let f5: Vec<f32> = gauss5().iter().map(|&v| v as f32).collect();
     let x = tensor_of(&img);
@@ -51,7 +49,7 @@ fn sepconv_row_artifact_matches_reference() {
 
 #[test]
 fn all_sepconv_variants_agree() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::F32, N, N, 13);
     let f5: Vec<f32> = gauss5().iter().map(|&v| v as f32).collect();
     let x = tensor_of(&img);
@@ -78,7 +76,7 @@ fn all_sepconv_variants_agree() {
 
 #[test]
 fn conv2d_artifact_uchar_semantics() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::U8, N, N, 21);
     let f25: Vec<f32> = gauss5x5().iter().map(|&v| v as f32).collect();
     let x = tensor_of(&img);
@@ -93,7 +91,7 @@ fn conv2d_artifact_uchar_semantics() {
 
 #[test]
 fn sobel_artifact_two_outputs() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::F32, N, N, 3);
     let x = tensor_of(&img);
     let out = rt.execute("sobel_32_bh8u1s1", &[&x]).expect("execute");
@@ -107,7 +105,7 @@ fn sobel_artifact_two_outputs() {
 
 #[test]
 fn harris_pipeline_artifact_end_to_end() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::F32, N, N, 5);
     let x = tensor_of(&img);
     let out = rt
@@ -137,7 +135,7 @@ fn harris_pipeline_artifact_end_to_end() {
 
 #[test]
 fn timing_returns_positive_best() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::F32, N, N, 9);
     let x = tensor_of(&img);
     let (_, secs) = rt.time("sobel_32_bh8u1s1", &[&x], 3).unwrap();
@@ -146,7 +144,7 @@ fn timing_returns_positive_best() {
 
 #[test]
 fn wrong_arity_is_error() {
-    let mut rt = runtime();
+    let Some(mut rt) = runtime() else { return };
     let img = synth_image(ScalarType::F32, N, N, 9);
     let x = tensor_of(&img);
     assert!(rt.execute("sobel_32_bh8u1s1", &[&x, &x]).is_err());

@@ -1,0 +1,199 @@
+//! Serving-layer integration: cache hit/miss semantics, TSV warm-start
+//! round-trip, bounded-queue backpressure, batch grouping, and the full
+//! loadgen → worker-pool → metrics path. Everything here is
+//! deterministic — counters and counts, never wall-clock.
+
+use std::sync::Arc;
+
+use imagecl::devices::{ALL_DEVICES, INTEL_I7, K40};
+use imagecl::serve::{
+    BoundedQueue, ExecMode, KernelService, LoadGenOpts, PushError, ServiceConfig,
+    TuneSource,
+};
+use imagecl::tuner::Strategy;
+
+fn fast_strategy() -> Strategy {
+    Strategy::Random { evals: 40, seed: 13 }
+}
+
+fn service(tuned_path: Option<std::path::PathBuf>, exec: ExecMode) -> Arc<KernelService> {
+    KernelService::new(ServiceConfig { strategy: fast_strategy(), tuned_path, exec })
+}
+
+/// Unique temp path per test (tests run concurrently in one process).
+fn temp_tsv(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "imagecl_serve_test_{}_{}.tsv",
+        tag,
+        std::process::id()
+    ))
+}
+
+#[test]
+fn plan_cache_tunes_and_compiles_once_per_key() {
+    let svc = service(None, ExecMode::Simulate);
+    for _ in 0..5 {
+        svc.plan("conv2d", &K40, (32, 32)).unwrap();
+    }
+    svc.plan("conv2d", &K40, (64, 64)).unwrap(); // new grid → new key
+    svc.plan("conv2d", &INTEL_I7, (32, 32)).unwrap(); // new device → new key
+    let s = svc.stats();
+    assert_eq!(s.tunes, 3);
+    assert_eq!(s.plan_compiles, 3);
+    assert_eq!(s.cache_misses, 3);
+    assert_eq!(s.cache_hits, 4);
+    assert_eq!(s.warm_starts, 0);
+}
+
+#[test]
+fn tsv_persistence_round_trips_and_warm_starts() {
+    let path = temp_tsv("roundtrip");
+    let _ = std::fs::remove_file(&path);
+
+    // Cold service: tunes and persists.
+    let cold = service(Some(path.clone()), ExecMode::Simulate);
+    let a = cold.plan("sepconv_row", &K40, (48, 48)).unwrap();
+    let b = cold.plan("harris", &INTEL_I7, (48, 48)).unwrap();
+    assert_eq!(cold.stats().tunes, 2);
+    assert_eq!(a.source, TuneSource::Fresh);
+    assert!(path.exists(), "tuned TSV not written to {path:?}");
+
+    // Fresh service on the same file: tuner never runs, configs match.
+    let warm = service(Some(path.clone()), ExecMode::Simulate);
+    assert_eq!(warm.tuned_len(), 2);
+    let a2 = warm.plan("sepconv_row", &K40, (48, 48)).unwrap();
+    let b2 = warm.plan("harris", &INTEL_I7, (48, 48)).unwrap();
+    let s = warm.stats();
+    assert_eq!(s.tunes, 0, "warm start must not re-tune");
+    assert_eq!(s.warm_starts, 2);
+    assert_eq!(a2.source, TuneSource::WarmStart);
+    assert_eq!(a2.config, a.config);
+    assert_eq!(b2.config, b.config);
+    assert_eq!(b2.est_seconds, b.est_seconds);
+
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn bounded_queue_rejects_at_capacity() {
+    let q: BoundedQueue<u32, u32> = BoundedQueue::new(3);
+    for i in 0..3 {
+        q.push(i, i).unwrap();
+    }
+    match q.push(9, 9) {
+        Err(PushError::Full(v)) => assert_eq!(v, 9),
+        other => panic!("expected Full, got {other:?}"),
+    }
+    // Draining one batch frees space again.
+    q.pop_batch(1).unwrap();
+    q.push(9, 9).unwrap();
+}
+
+#[test]
+fn batcher_groups_same_key_requests() {
+    let q: BoundedQueue<&str, u32> = BoundedQueue::new(16);
+    let seq = [
+        ("sobel", 0),
+        ("conv2d", 1),
+        ("sobel", 2),
+        ("sobel", 3),
+        ("conv2d", 4),
+    ];
+    for (k, v) in seq {
+        q.push(k, v).unwrap();
+    }
+    // The head's key collects everything queued behind it, order kept.
+    assert_eq!(q.pop_batch(8), Some(("sobel", vec![0, 2, 3])));
+    assert_eq!(q.pop_batch(8), Some(("conv2d", vec![1, 4])));
+    assert!(q.is_empty());
+    q.close();
+    assert_eq!(q.pop_batch(8), None);
+}
+
+#[test]
+fn serve_end_to_end_sim_mode() {
+    let svc = service(None, ExecMode::Simulate);
+    let opts = LoadGenOpts {
+        requests: 80,
+        concurrency: 4,
+        kernels: vec![
+            "sepconv_row".to_string(),
+            "conv2d".to_string(),
+            "sobel".to_string(),
+            "harris".to_string(),
+        ],
+        devices: ALL_DEVICES.to_vec(),
+        grid: 32,
+        queue_cap: 8, // small queue: backpressure path gets exercised
+        max_batch: 8,
+        workers_per_device: 2,
+    };
+    let report = imagecl::serve::run_loadgen(svc.clone(), &opts).unwrap();
+    assert_eq!(report.completed, 80);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.latencies_us.len(), 80);
+    assert_eq!(report.per_kernel.len(), 4);
+    assert!(report.per_kernel.values().all(|&c| c == 20), "{:?}", report.per_kernel);
+    // 4 kernels × 4 devices unique keys.
+    assert_eq!(report.stats.tunes, 16);
+    assert_eq!(report.stats.plan_compiles, 16);
+    assert!(report.stats.batches >= 16);
+    assert!(report.stats.max_batch >= 1);
+
+    // Same service again: pure cache hits, no new tuning.
+    let report2 = imagecl::serve::run_loadgen(svc, &opts).unwrap();
+    assert_eq!(report2.completed, 80);
+    assert_eq!(report2.stats.tunes, 16);
+    assert_eq!(report2.stats.plan_compiles, 16);
+}
+
+#[test]
+fn serve_real_execution_produces_output() {
+    // Small real run through the NDRange interpreter on the CPU device.
+    let svc = service(None, ExecMode::Real);
+    let opts = LoadGenOpts {
+        requests: 8,
+        concurrency: 2,
+        kernels: vec!["sobel".to_string(), "sepconv_row".to_string()],
+        devices: vec![&INTEL_I7],
+        grid: 16,
+        queue_cap: 16,
+        max_batch: 4,
+        workers_per_device: 2,
+    };
+    let report = imagecl::serve::run_loadgen(svc, &opts).unwrap();
+    assert_eq!(report.completed, 8);
+    assert_eq!(report.errors, 0);
+}
+
+#[test]
+fn warm_start_serving_run_skips_tuner_entirely() {
+    // The acceptance path behind `imagecl serve` run twice: first run
+    // tunes and persists; a second *process* (fresh service) serves the
+    // same traffic with zero tuner invocations, observable in metrics.
+    let path = temp_tsv("serve_warm");
+    let _ = std::fs::remove_file(&path);
+    let opts = LoadGenOpts {
+        requests: 24,
+        concurrency: 3,
+        kernels: vec!["sepconv_row".to_string(), "sobel".to_string()],
+        devices: vec![&K40, &INTEL_I7],
+        grid: 32,
+        queue_cap: 16,
+        max_batch: 8,
+        workers_per_device: 1,
+    };
+
+    let first = service(Some(path.clone()), ExecMode::Simulate);
+    let r1 = imagecl::serve::run_loadgen(first, &opts).unwrap();
+    assert_eq!(r1.completed, 24);
+    assert_eq!(r1.stats.tunes, 4);
+
+    let second = service(Some(path.clone()), ExecMode::Simulate);
+    let r2 = imagecl::serve::run_loadgen(second, &opts).unwrap();
+    assert_eq!(r2.completed, 24);
+    assert_eq!(r2.stats.tunes, 0, "second run must warm-start from {path:?}");
+    assert_eq!(r2.stats.warm_starts, 4);
+
+    let _ = std::fs::remove_file(&path);
+}
