@@ -64,8 +64,10 @@ fn main() {
     let _ = std::fs::remove_file(&tsv);
     let service = KernelService::new(ServiceConfig {
         strategy: serve_strategy(),
-        tuned_path: Some(tsv.clone()),
+        db_path: Some(tsv.clone()),
+        legacy_tsv: None,
         exec: ExecMode::Real,
+        ..Default::default()
     });
     let opts = LoadGenOpts {
         requests: 600,
@@ -108,8 +110,10 @@ fn main() {
     // ever invoking the tuner (tunes == 0 in its metrics).
     let service2 = KernelService::new(ServiceConfig {
         strategy: serve_strategy(),
-        tuned_path: Some(tsv.clone()),
+        db_path: Some(tsv.clone()),
+        legacy_tsv: None,
         exec: ExecMode::Real,
+        ..Default::default()
     });
     let loaded = service2.tuned_len();
     let report2 = imagecl::serve::run_loadgen(service2, &opts).unwrap();

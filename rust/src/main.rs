@@ -3,6 +3,10 @@
 //!
 //! Argument parsing is hand-rolled (no clap in the offline crate set).
 
+// Mirrors the lib crate's allow-list for the CI clippy gate.
+#![allow(clippy::field_reassign_with_default)]
+#![allow(clippy::type_complexity)]
+
 use std::collections::BTreeMap;
 use std::process::ExitCode;
 
@@ -28,8 +32,14 @@ USAGE:
   imagecl tune <kernel> [--device DEV] [--grid N] [--strategy ml|random|exhaustive]
   imagecl serve [--requests N] [--concurrency C] [--kernels a,b,c] [--device DEV]
                 [--grid N] [--exec real|sim] [--queue-cap N] [--max-batch N]
-                [--workers N] [--strategy S] [--tuned PATH]
-                serve synthetic traffic through the plan/tune cache
+                [--workers N] [--strategy S] [--db PATH] [--legacy-tsv PATH]
+                [--plan-cache-cap N] [--transfer-budget N] [--predict-budget N]
+                serve synthetic traffic through the plan cache + tunedb
+  imagecl tunedb stats|export [--db PATH]
+  imagecl tunedb query <kernel> [--db PATH] [--device DEV] [--grid N]
+  imagecl tunedb train <kernel> [--db PATH]
+  imagecl tunedb import <legacy.tsv> [--db PATH]
+                inspect / exercise the tuning knowledge base
   imagecl fig6 [--size N]            reproduce Figure 6 (slowdown vs baselines)
   imagecl tables [--size N]          reproduce Tables 2-5 (tuned configurations)
   imagecl pipeline [--size N]        run the Harris pipeline through PJRT
@@ -117,6 +127,7 @@ fn run() -> Result<(), String> {
         "compile" => cmd_compile(&args),
         "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
+        "tunedb" => cmd_tunedb(&args),
         "fig6" => cmd_fig6(&args),
         "tables" => cmd_tables(&args),
         "pipeline" => cmd_pipeline(&args),
@@ -291,7 +302,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "max-batch",
         "workers",
         "strategy",
-        "tuned",
+        "db",
+        "legacy-tsv",
+        "plan-cache-cap",
+        "transfer-budget",
+        "predict-budget",
     ])?;
     let mut opts = serve::LoadGenOpts {
         requests: args.usize_flag("requests", 1000)?,
@@ -325,16 +340,31 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         None => serve::serve_strategy(),
         Some(_) => strategy_of(args)?,
     };
-    let tuned_path = match args.flag("tuned") {
+    let db_path = match args.flag("db") {
+        Some("none") => None,
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None => Some(imagecl::tunedb::default_db_path()),
+    };
+    let legacy_tsv = match args.flag("legacy-tsv") {
         Some("none") => None,
         Some(p) => Some(std::path::PathBuf::from(p)),
         None => Some(serve::default_tuned_path()),
     };
+    // 0 = unbounded; long-lived servers should set a cap (every new grid
+    // is a new plan-cache key).
+    let plan_cache_cap = match args.usize_flag("plan-cache-cap", 512)? {
+        0 => None,
+        n => Some(n),
+    };
 
     let service = serve::KernelService::new(serve::ServiceConfig {
         strategy,
-        tuned_path: tuned_path.clone(),
+        db_path: db_path.clone(),
+        legacy_tsv,
         exec,
+        plan_cache_cap,
+        transfer_budget: args.usize_flag("transfer-budget", 48)?,
+        predict_budget: args.usize_flag("predict-budget", 48)?,
     });
     let warm = service.tuned_len();
     println!(
@@ -347,10 +377,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         opts.grid,
         if exec == serve::ExecMode::Real { "real execution" } else { "simulated" },
     );
-    match (&tuned_path, warm) {
-        (Some(p), 0) => println!("cold start (no tuned configs at {p:?} yet)"),
-        (Some(p), n) => println!("warm start: {n} tuned configs loaded from {p:?}"),
-        (None, _) => println!("ephemeral run (no tuned-config persistence)"),
+    match (&db_path, warm) {
+        (Some(p), 0) => println!("cold start (no tuning knowledge at {p:?} yet)"),
+        (Some(p), n) => println!("warm start: {n} tuned winners known via {p:?}"),
+        (None, _) => println!("ephemeral run (no tuning-knowledge persistence)"),
     }
 
     let report = serve::run_loadgen(service, &opts).map_err(|e| e.to_string())?;
@@ -359,6 +389,125 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         return Err(format!("{} requests failed", report.errors));
     }
     Ok(())
+}
+
+/// `imagecl tunedb`: inspect and exercise the tuning knowledge base —
+/// `stats` (what it knows), `export` (dump the TSV), `query` (what each
+/// tier would answer for a key), `train` (fit the per-kernel performance
+/// model), `import` (migrate a legacy PR-1 warm-start TSV).
+fn cmd_tunedb(args: &Args) -> Result<(), String> {
+    args.check_known(&["db", "device", "grid"])?;
+    let sub = args
+        .positional
+        .first()
+        .ok_or("tunedb needs a subcommand: stats|export|query|train|import")?
+        .as_str();
+    let db_path = args
+        .flag("db")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(imagecl::tunedb::default_db_path);
+    let db = imagecl::tunedb::TuneDb::open(&db_path);
+    match sub {
+        "stats" => {
+            println!(
+                "tunedb {db_path:?}: {} records ({} winners)",
+                db.len(),
+                db.best_len()
+            );
+            // Per (kernel, device) winner counts.
+            let mut per: BTreeMap<(String, &str), (usize, usize)> = BTreeMap::new();
+            for r in db.snapshot() {
+                let e = per.entry((r.kernel.clone(), r.device)).or_default();
+                e.0 += 1;
+                if r.best {
+                    e.1 += 1;
+                }
+            }
+            for ((kernel, device), (records, winners)) in per {
+                println!("  {kernel:<14} {device:<10} {records:>6} records, {winners:>4} winners");
+            }
+            Ok(())
+        }
+        "export" => {
+            print!("{}", imagecl::tunedb::store::HEADER);
+            for r in db.snapshot() {
+                println!("{}", imagecl::tunedb::store::render_line(&r));
+            }
+            Ok(())
+        }
+        "query" => {
+            let kernel = args
+                .positional
+                .get(1)
+                .ok_or("tunedb query needs a kernel id")?;
+            let n = args.usize_flag("grid", 1024)?;
+            let devs: Vec<&devices::DeviceSpec> = match args.flag("device") {
+                Some(d) => vec![devices::by_name(d).ok_or(format!("unknown device {d:?}"))?],
+                None => ALL_DEVICES.to_vec(),
+            };
+            let model = db.model_for(kernel);
+            for dev in devs {
+                use imagecl::tunedb::Answer;
+                match db.lookup(kernel, dev.name, (n, n)) {
+                    Answer::Exact(rec) => println!(
+                        "{:<10} exact     {}  ({})",
+                        dev.name,
+                        rec.config,
+                        Ms::from(rec.seconds)
+                    ),
+                    Answer::Transfer { rec, distance } => println!(
+                        "{:<10} transfer  {}  (seed from {}x{}, distance {:.2})",
+                        dev.name, rec.config, rec.grid.0, rec.grid.1, distance
+                    ),
+                    Answer::Miss => match &model {
+                        Some(m) => println!(
+                            "{:<10} model     ({} training records, train-MSE {:.3})",
+                            dev.name, m.samples, m.train_mse
+                        ),
+                        None => println!("{:<10} miss      (cold: full search)", dev.name),
+                    },
+                }
+            }
+            Ok(())
+        }
+        "train" => {
+            let kernel = args
+                .positional
+                .get(1)
+                .ok_or("tunedb train needs a kernel id")?;
+            match db.model_for(kernel) {
+                Some(m) => {
+                    println!(
+                        "trained performance model for {kernel}: {} records, \
+                         train-MSE {:.4} (log10-seconds)",
+                        m.samples, m.train_mse
+                    );
+                    Ok(())
+                }
+                None => Err(format!(
+                    "not enough usable records to train a model for {kernel:?} \
+                     (need >= {} with feature vectors, have {} records for \
+                     this kernel)",
+                    imagecl::tunedb::MIN_TRAIN_RECORDS,
+                    db.kernel_len(kernel)
+                )),
+            }
+        }
+        "import" => {
+            let legacy = args
+                .positional
+                .get(1)
+                .ok_or("tunedb import needs a legacy TSV path")?;
+            let n = db.import_legacy_tsv(std::path::Path::new(legacy));
+            println!(
+                "imported {n} legacy warm-start configs from {legacy:?} into {db_path:?}"
+            );
+            Ok(())
+        }
+        other => Err(format!(
+            "unknown tunedb subcommand {other:?} (want stats|export|query|train|import)"
+        )),
+    }
 }
 
 fn cmd_pipeline(args: &Args) -> Result<(), String> {
@@ -396,9 +545,9 @@ fn cmd_pipeline(args: &Args) -> Result<(), String> {
             Ms::from(pl.est_ready_s)
         );
     }
-    // The same pipeline scheduled through the serving layer's plan/tune
+    // The same pipeline scheduled through the serving layer's plan
     // cache: per-device *tuned* estimates instead of the naive config
-    // (warm-starts from the persisted TSV when present).
+    // (resolved through the tuning knowledge base when it has answers).
     let service = serve::KernelService::new(serve::ServiceConfig {
         exec: serve::ExecMode::Simulate,
         ..Default::default()
@@ -418,6 +567,22 @@ fn cmd_pipeline(args: &Args) -> Result<(), String> {
             Ms::from(pl.est_exec_s),
             Ms::from(pl.est_ready_s)
         );
+    }
+    // And scheduled *purely from accumulated knowledge* — no tuner, no
+    // plan compilation: what a per-request scheduler would do.
+    let from_db = imagecl::pipeline::schedule_with_db(
+        &p,
+        &ALL_DEVICES,
+        n,
+        service.db(),
+        &TuningConfig::default(),
+    );
+    println!(
+        "knowledge-base schedule, no tuning (makespan {}):",
+        Ms::from(from_db.makespan_s)
+    );
+    for pl in &from_db.placements {
+        println!("  {:<8} -> {:<9} exec {}", pl.filter, pl.device, Ms::from(pl.est_exec_s));
     }
     Ok(())
 }

@@ -7,5 +7,6 @@ pub mod scheduler;
 
 pub use graph::{Filter, FilterKind, NodeId, Pipeline, Port};
 pub use scheduler::{
-    filter_time, graph_parts, schedule, schedule_by, transfer_time, Placement, Schedule,
+    filter_time, graph_parts, schedule, schedule_by, schedule_with_db, transfer_time,
+    Placement, Schedule,
 };

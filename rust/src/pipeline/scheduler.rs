@@ -75,6 +75,37 @@ pub fn transfer_time(from: &str, to: &str, n: usize) -> f64 {
     }
 }
 
+/// Greedy earliest-finish-time scheduling with per-device execution
+/// estimates read from the tuning knowledge base: an exact (kernel,
+/// device, grid) winner's measured time when present, the nearest-grid
+/// winner scaled by pixel count otherwise, and the naive cost model as
+/// the last resort for keys the db has never seen. Unlike
+/// `serve::KernelService::schedule_pipeline`, this never tunes — it
+/// schedules purely from accumulated knowledge, so it is cheap enough to
+/// run per request.
+pub fn schedule_with_db(
+    pipeline: &Pipeline,
+    devices: &[&'static DeviceSpec],
+    n: usize,
+    db: &crate::tunedb::TuneDb,
+    fallback_cfg: &TuningConfig,
+) -> Schedule {
+    schedule_by(pipeline, devices, n, |dev, graph| {
+        let single = [graph];
+        let parts: &[&str] = match graph_parts(graph) {
+            Some(parts) => parts,
+            None => &single,
+        };
+        parts
+            .iter()
+            .map(|k| {
+                db.estimate(k, dev.name, (n, n))
+                    .unwrap_or_else(|| single_kernel_time(dev, k, n, fallback_cfg))
+            })
+            .sum()
+    })
+}
+
 /// Greedy earliest-finish-time scheduling under the naive cost model (one
 /// fixed [`TuningConfig`] for every filter/device pair).
 pub fn schedule(
@@ -193,6 +224,45 @@ mod tests {
         let p = harris_pipeline();
         let s = schedule(&p, &[&INTEL_I7], 512, &TuningConfig::default());
         assert!(s.placements.iter().all(|pl| pl.device == "Intel i7"));
+    }
+
+    #[test]
+    fn db_schedule_uses_recorded_estimates() {
+        use crate::tunedb::{device_fingerprint, TuneDb, TuneRecord};
+        let p = harris_pipeline();
+        let db = TuneDb::ephemeral();
+        // Record knowledge that makes the K40 absurdly fast for both
+        // Harris stages: the scheduler must follow the db, not the naive
+        // model (which would never make the K40 this fast).
+        for kernel in ["sobel", "harris"] {
+            db.record(TuneRecord {
+                kernel: kernel.to_string(),
+                device: K40.name,
+                dev_fp: device_fingerprint(&K40),
+                grid: (512, 512),
+                seconds: 1e-9,
+                best: true,
+                config: TuningConfig::default(),
+                features: Vec::new(),
+            });
+        }
+        let s = schedule_with_db(&p, &ALL_DEVICES, 512, &db, &TuningConfig::default());
+        assert_eq!(s.placements.len(), 2);
+        for pl in &s.placements {
+            assert_eq!(pl.device, "K40", "{pl:?}");
+        }
+        // And the exec estimates are the recorded ones, not model output.
+        assert!(s.placements.iter().all(|pl| pl.est_exec_s <= 1e-8), "{s:?}");
+
+        // An empty db degrades to exactly the naive schedule.
+        let empty = TuneDb::ephemeral();
+        let a = schedule_with_db(&p, &ALL_DEVICES, 512, &empty, &TuningConfig::default());
+        let b = schedule(&p, &ALL_DEVICES, 512, &TuningConfig::default());
+        assert_eq!(a.placements.len(), b.placements.len());
+        for (x, y) in a.placements.iter().zip(&b.placements) {
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.est_exec_s, y.est_exec_s);
+        }
     }
 
     #[test]

@@ -5,11 +5,14 @@
 //! reference wiring). HLO *text* is the interchange format — serialized
 //! jax≥0.5 protos are rejected by xla_extension 0.5.1.
 //!
-//! The bridge is feature-gated: with `--features xla` (and the `xla`
-//! crate in the dependency set) the real PJRT client is built; without it
-//! a stub with the identical API loads manifests but reports a clear
-//! error when execution is attempted, so every other layer builds and
-//! tests on machines without the XLA toolchain.
+//! The bridge is feature-gated in two steps: `--features xla` enables the
+//! serve-layer artifact *routing* (and builds against this module's API),
+//! while the real PJRT client additionally needs `--features xla-client`
+//! plus the `xla` crate in the dependency set. Without `xla-client` a
+//! stub with the identical API loads manifests but reports a clear error
+//! when execution is attempted, so every other layer (including the
+//! artifact routing, which falls back to the interpreter at runtime)
+//! builds and tests on machines without the XLA toolchain.
 
 /// A 2-D tensor travelling through the runtime (f32 host representation;
 /// uint8 artifacts convert at the boundary).
@@ -53,7 +56,7 @@ impl Tensor {
     }
 }
 
-#[cfg(feature = "xla")]
+#[cfg(feature = "xla-client")]
 mod pjrt {
     use std::collections::HashMap;
     use std::path::Path;
@@ -228,7 +231,7 @@ mod pjrt {
     }
 }
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(feature = "xla-client"))]
 mod stub {
     use std::path::Path;
 
@@ -237,9 +240,9 @@ mod stub {
     use super::super::manifest::Manifest;
     use super::Tensor;
 
-    const NO_XLA: &str = "imagecl was built without the `xla` feature — \
+    const NO_XLA: &str = "imagecl was built without the `xla-client` feature — \
         real PJRT artifact execution is unavailable (rebuild with \
-        `--features xla` and the `xla` crate in the dependency set)";
+        `--features xla-client` and the `xla` crate in the dependency set)";
 
     /// Stub runtime with the same API as the PJRT-backed one: manifests
     /// load and validate, but executing an artifact reports a clear error.
@@ -283,9 +286,9 @@ mod stub {
     }
 }
 
-#[cfg(feature = "xla")]
+#[cfg(feature = "xla-client")]
 pub use pjrt::XlaRuntime;
-#[cfg(not(feature = "xla"))]
+#[cfg(not(feature = "xla-client"))]
 pub use stub::XlaRuntime;
 
 #[cfg(test)]

@@ -1,14 +1,14 @@
-//! Plan/tune caching with TSV warm-start persistence.
+//! Plan caching, keyed by [`PlanKey`] = (kernel, device, grid).
 //!
-//! Two layers, keyed by [`PlanKey`] = (kernel, device, grid):
-//!
-//! * [`TunedStore`] — the *tuning* results (winning [`TuningConfig`] per
-//!   key), persisted as a TSV file so a restarted server warm-starts
-//!   without re-running the tuner. This is the amortization the paper's
-//!   §7 tuning-cost discussion calls for: tune once, serve forever.
 //! * [`PlanCache`] — the in-memory *plan* entries: the winning config
 //!   lowered to a [`KernelPlan`] and launch-compiled to a
-//!   [`PreparedKernel`], built once per key and shared by every worker.
+//!   [`PreparedKernel`], built once per key and shared by every worker;
+//!   optionally bounded with LRU eviction for long-lived servers.
+//! * [`TunedStore`] — the **legacy** (PR-1) winner-per-key TSV. Tuning
+//!   results now live in the knowledge base ([`crate::tunedb`]), which
+//!   also answers nearest-grid and model-backed queries; this type
+//!   remains only to read old deployments' files, which the service
+//!   migrates into the db on startup.
 //!
 //! TSV format (one line per key, `#` comments, tab-separated):
 //!
@@ -48,10 +48,16 @@ impl std::fmt::Display for PlanKey {
 /// Where a key's tuning config came from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TuneSource {
-    /// The tuner ran in this process.
+    /// A full cold search ran in this process (no usable knowledge).
     Fresh,
-    /// Loaded from the persisted TSV (no tuner run).
+    /// Exact knowledge-base hit (no search at all).
     WarmStart,
+    /// Transfer-tuned: a nearest-grid record seeded a shrunken
+    /// neighborhood search.
+    Transfer,
+    /// Model-backed: the knowledge base's performance model ranked the
+    /// space and only the top predictions were measured.
+    Predicted,
 }
 
 /// One ready-to-serve cache entry.
@@ -192,26 +198,60 @@ fn parse_line(line: &str) -> Option<(PlanKey, TunedRecord)> {
     Some((key, rec))
 }
 
-/// In-memory cache of ready plans. Each key gets a slot whose lock is
-/// held while the entry is built, so concurrent workers asking for the
-/// same cold key block on *that key only* (one tune per key, ever) and
-/// every other key stays serviceable.
+/// One cache slot: the entry cell (locked while the entry builds, so
+/// concurrent requests for the same cold key block on *that key only*)
+/// plus its LRU stamp.
+struct Slot {
+    cell: Arc<Mutex<Option<Arc<PlanEntry>>>>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Slots {
+    map: HashMap<PlanKey, Slot>,
+    /// Monotonic access counter driving LRU order.
+    tick: u64,
+}
+
+/// In-memory cache of ready plans, optionally bounded: with a capacity,
+/// completing a build evicts least-recently-used *built* entries over
+/// the cap (in-flight builds are never evicted; outstanding `Arc`s keep
+/// evicted entries alive for their current users). Long-lived servers
+/// set a cap so an unbounded key space — every new grid is a new key —
+/// cannot grow the cache without limit; evicted keys rebuild cheaply
+/// from the tuning knowledge base.
 #[derive(Default)]
 pub struct PlanCache {
-    slots: Mutex<HashMap<PlanKey, Arc<Mutex<Option<Arc<PlanEntry>>>>>>,
+    slots: Mutex<Slots>,
+    /// `None` = unbounded.
+    cap: Option<usize>,
 }
 
 impl PlanCache {
+    /// Unbounded cache.
     pub fn new() -> PlanCache {
         PlanCache::default()
     }
 
-    /// Number of *built* entries.
+    /// Cache bounded to `cap` built entries (clamped to at least 1).
+    pub fn with_cap(cap: usize) -> PlanCache {
+        PlanCache { slots: Mutex::default(), cap: Some(cap.max(1)) }
+    }
+
+    pub fn cap(&self) -> Option<usize> {
+        self.cap
+    }
+
+    /// Number of *built* entries. `try_lock`, not `lock`: an in-flight
+    /// build holds its cell lock for the whole tune+compile, and len()
+    /// must not sleep on it while holding the slots mutex (that would
+    /// stall every other key).
     pub fn len(&self) -> usize {
         let slots = self.slots.lock().unwrap();
         slots
+            .map
             .values()
-            .filter(|s| s.lock().map(|g| g.is_some()).unwrap_or(false))
+            .filter(|s| s.cell.try_lock().map(|g| g.is_some()).unwrap_or(false))
             .count()
     }
 
@@ -220,27 +260,98 @@ impl PlanCache {
     }
 
     /// Get the entry for `key`, building it with `build` on first use.
-    /// `hit` reports whether the entry already existed (for the metrics
-    /// counters, which the caller owns).
+    /// Returns `(entry, hit, evicted)`: `hit` reports whether the entry
+    /// already existed, `evicted` how many LRU entries this call pushed
+    /// out (for the metrics counters, which the caller owns).
     pub fn get_or_build<E>(
         &self,
         key: &PlanKey,
         build: impl FnOnce() -> Result<PlanEntry, E>,
-    ) -> Result<(Arc<PlanEntry>, bool), E> {
-        let slot = {
+    ) -> Result<(Arc<PlanEntry>, bool, usize), E> {
+        let cell = {
             let mut slots = self.slots.lock().unwrap();
-            slots
+            slots.tick += 1;
+            let tick = slots.tick;
+            let slot = slots
+                .map
                 .entry(key.clone())
-                .or_insert_with(|| Arc::new(Mutex::new(None)))
-                .clone()
+                .or_insert_with(|| Slot {
+                    cell: Arc::new(Mutex::new(None)),
+                    last_used: tick,
+                });
+            slot.last_used = tick;
+            slot.cell.clone()
         };
-        let mut guard = slot.lock().unwrap();
+        let mut guard = cell.lock().unwrap();
         if let Some(entry) = guard.as_ref() {
-            return Ok((entry.clone(), true));
+            return Ok((entry.clone(), true, 0));
         }
-        let entry = Arc::new(build()?);
+        let entry = match build() {
+            Ok(e) => Arc::new(e),
+            Err(e) => {
+                // Don't leak the slot: a stream of distinct bad keys
+                // (unknown kernels, compile failures) must not grow the
+                // map forever.
+                drop(guard);
+                self.remove_if_unbuilt(key, &cell);
+                return Err(e);
+            }
+        };
         *guard = Some(entry.clone());
-        Ok((entry, false))
+        drop(guard);
+        let evicted = self.evict_over_cap(key);
+        Ok((entry, false, evicted))
+    }
+
+    /// Drop `key`'s slot if it is still this `cell` and still unbuilt
+    /// (a concurrently rebuilding or already-replaced slot is left
+    /// alone).
+    fn remove_if_unbuilt(&self, key: &PlanKey, cell: &Arc<Mutex<Option<Arc<PlanEntry>>>>) {
+        let mut slots = self.slots.lock().unwrap();
+        let unbuilt = slots.map.get(key).is_some_and(|s| {
+            Arc::ptr_eq(&s.cell, cell)
+                && s.cell.try_lock().map(|g| g.is_none()).unwrap_or(false)
+        });
+        if unbuilt {
+            slots.map.remove(key);
+        }
+    }
+
+    /// Evict least-recently-used built entries until the built count is
+    /// within the cap. `keep` (the key just built) is never evicted.
+    fn evict_over_cap(&self, keep: &PlanKey) -> usize {
+        let Some(cap) = self.cap else { return 0 };
+        let mut slots = self.slots.lock().unwrap();
+        let mut evicted = 0;
+        loop {
+            // Built entries only: a slot whose cell is locked is an
+            // in-flight build (its cell lock is held) and skipped via
+            // `try_lock`.
+            let mut built: Vec<(&PlanKey, u64)> = Vec::new();
+            for (k, s) in &slots.map {
+                if let Ok(g) = s.cell.try_lock() {
+                    if g.is_some() {
+                        built.push((k, s.last_used));
+                    }
+                }
+            }
+            if built.len() <= cap {
+                break;
+            }
+            let victim = built
+                .into_iter()
+                .filter(|(k, _)| *k != keep)
+                .min_by_key(|&(_, used)| used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(k) => {
+                    slots.map.remove(&k);
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+        evicted
     }
 }
 

@@ -184,8 +184,12 @@ mod tests {
     fn sim_service() -> Arc<KernelService> {
         KernelService::new(ServiceConfig {
             strategy: Strategy::Random { evals: 30, seed: 11 },
-            tuned_path: None,
+            db_path: None,
+            legacy_tsv: None,
             exec: ExecMode::Simulate,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 0,
         })
     }
 
@@ -225,8 +229,12 @@ mod tests {
     fn loadgen_real_execution_small() {
         let service = KernelService::new(ServiceConfig {
             strategy: Strategy::Random { evals: 20, seed: 5 },
-            tuned_path: None,
+            db_path: None,
+            legacy_tsv: None,
             exec: ExecMode::Real,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 0,
         });
         let opts = LoadGenOpts {
             requests: 6,

@@ -19,7 +19,7 @@ use crate::report::Ms;
 pub struct Counters {
     /// Tuner invocations (cold keys only — the amortization target).
     pub tunes: AtomicU64,
-    /// Keys served from the persisted tuning TSV instead of the tuner.
+    /// Keys served from an exact knowledge-base hit instead of the tuner.
     pub warm_starts: AtomicU64,
     /// Lower + launch-compile of a winning config (once per key).
     pub plan_compiles: AtomicU64,
@@ -33,11 +33,26 @@ pub struct Counters {
     pub max_batch: AtomicU64,
     /// Admission-queue rejections (bounded-queue backpressure).
     pub rejected: AtomicU64,
+    /// Cold keys transfer-tuned from a nearest-grid knowledge-base seed.
+    pub db_transfers: AtomicU64,
+    /// Cold keys tuned by measuring the performance model's top picks.
+    pub db_predictions: AtomicU64,
+    /// Plan-cache LRU evictions (bounded-cache churn).
+    pub evictions: AtomicU64,
+    /// Total measured tuner evaluations (the knowledge base exists to
+    /// shrink this).
+    pub search_evals: AtomicU64,
+    /// Requests executed through the PJRT artifact path.
+    pub pjrt_execs: AtomicU64,
 }
 
 impl Counters {
     pub fn bump(counter: &AtomicU64) {
         counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
     }
 
     pub fn observe_batch(&self, len: usize) {
@@ -55,6 +70,11 @@ impl Counters {
             batches: self.batches.load(Ordering::Relaxed),
             max_batch: self.max_batch.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            db_transfers: self.db_transfers.load(Ordering::Relaxed),
+            db_predictions: self.db_predictions.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            search_evals: self.search_evals.load(Ordering::Relaxed),
+            pjrt_execs: self.pjrt_execs.load(Ordering::Relaxed),
         }
     }
 }
@@ -70,6 +90,11 @@ pub struct StatsSnapshot {
     pub batches: u64,
     pub max_batch: u64,
     pub rejected: u64,
+    pub db_transfers: u64,
+    pub db_predictions: u64,
+    pub evictions: u64,
+    pub search_evals: u64,
+    pub pjrt_execs: u64,
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice (`q` in 0..=100).
@@ -138,9 +163,18 @@ impl ServeReport {
         );
         let _ = writeln!(
             out,
-            "  plan cache  {} hits / {} misses — {} tunes, {} warm-starts, {} compiles",
-            s.cache_hits, s.cache_misses, s.tunes, s.warm_starts, s.plan_compiles
+            "  plan cache  {} hits / {} misses ({} evictions) — {} compiles",
+            s.cache_hits, s.cache_misses, s.evictions, s.plan_compiles
         );
+        let _ = writeln!(
+            out,
+            "  tunedb      {} exact warm-starts, {} transfers, {} predicted, \
+             {} cold tunes ({} measured evals total)",
+            s.warm_starts, s.db_transfers, s.db_predictions, s.tunes, s.search_evals
+        );
+        if s.pjrt_execs > 0 {
+            let _ = writeln!(out, "  pjrt        {} artifact executions", s.pjrt_execs);
+        }
         for (kernel, count) in &self.per_kernel {
             let _ = writeln!(out, "    {kernel:<14} {count} requests");
         }

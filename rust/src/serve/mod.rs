@@ -8,11 +8,14 @@
 //! (the overhead-reuse lesson of OpenCLIPER, and of Falch & Elster's own
 //! ML-autotuning follow-up). The pieces:
 //!
-//! * [`KernelService`] (this module) — per-[`cache::PlanKey`], runs the
-//!   tuner once, lowers the winning [`TuningConfig`] once, launch-compiles
-//!   it to a [`crate::exec::PreparedKernel`] once, and caches the result;
-//!   tuning results persist to a TSV ([`cache::TunedStore`]) so restarts
-//!   warm-start without re-tuning.
+//! * [`KernelService`] (this module) — per-[`cache::PlanKey`], resolves a
+//!   tuned config once (through the tuning knowledge base's three tiers —
+//!   exact hit, nearest-grid transfer, model-backed prediction — before
+//!   falling back to a full cold search), lowers the winning
+//!   [`TuningConfig`] once, launch-compiles it to a
+//!   [`crate::exec::PreparedKernel`] once, and caches the result; every
+//!   tuning outcome is recorded in [`crate::tunedb::TuneDb`] so knowledge
+//!   accumulates across runs *and* across grids/devices.
 //! * [`queue::BoundedQueue`] — non-blocking bounded admission with
 //!   same-key batch draining (adaptive batching).
 //! * [`worker::DevicePool`] — per-device worker threads executing batches
@@ -29,6 +32,8 @@
 pub mod cache;
 pub mod loadgen;
 pub mod metrics;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 pub mod queue;
 pub mod worker;
 
@@ -47,10 +52,11 @@ use crate::devices::{self, DeviceSpec};
 use crate::exec::PreparedKernel;
 use crate::imagecl::frontend;
 use crate::pipeline::{graph_parts, schedule_by, Pipeline, Schedule};
-use crate::transform::lower;
-use crate::tuner::{self, MlSearchOpts, Strategy};
+use crate::transform::{lower, TuningConfig};
+use crate::tunedb::{Answer, TuneDb};
+use crate::tuner::{self, FeatureMap, MlSearchOpts, Strategy, TuneResult, TuningSpace};
 
-use cache::{PlanCache, TunedRecord};
+use cache::PlanCache;
 
 /// Serving error.
 #[derive(Debug, thiserror::Error)]
@@ -85,19 +91,34 @@ pub enum ExecMode {
 /// Service configuration.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
-    /// Tuner search strategy for cold keys.
+    /// Tuner search strategy for fully cold keys (no usable knowledge).
     pub strategy: Strategy,
-    /// TSV path for tuned-config persistence; `None` = in-memory only.
-    pub tuned_path: Option<PathBuf>,
+    /// Tuning-knowledge-base path; `None` = in-memory only.
+    pub db_path: Option<PathBuf>,
+    /// Legacy PR-1 warm-start TSV, imported into the knowledge base on
+    /// startup when present (migration shim; `None` = skip).
+    pub legacy_tsv: Option<PathBuf>,
     pub exec: ExecMode,
+    /// Plan-cache entry cap (LRU eviction); `None` = unbounded.
+    pub plan_cache_cap: Option<usize>,
+    /// Measured-evaluation budget when a nearest-grid seed is available
+    /// (tier-2 transfer tuning).
+    pub transfer_budget: usize,
+    /// Measured-evaluation budget when the performance model ranks the
+    /// space for a cold (kernel, device) pair (tier 3).
+    pub predict_budget: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             strategy: serve_strategy(),
-            tuned_path: Some(default_tuned_path()),
+            db_path: Some(crate::tunedb::default_db_path()),
+            legacy_tsv: Some(default_tuned_path()),
             exec: ExecMode::Real,
+            plan_cache_cap: None,
+            transfer_budget: 48,
+            predict_budget: 48,
         }
     }
 }
@@ -115,8 +136,10 @@ pub fn serve_strategy() -> Strategy {
     })
 }
 
-/// Default warm-start file: `<crate>/target/serve_tuned.tsv` (override
-/// with `IMAGECL_TUNED`).
+/// Default *legacy* (PR-1) warm-start file: `<crate>/target/serve_tuned.tsv`
+/// (override with `IMAGECL_TUNED`). New tuning outcomes go to the
+/// knowledge base ([`crate::tunedb::default_db_path`]); this file is only
+/// read, once, by the startup migration shim.
 pub fn default_tuned_path() -> PathBuf {
     if let Ok(p) = std::env::var("IMAGECL_TUNED") {
         return PathBuf::from(p);
@@ -132,22 +155,45 @@ pub fn default_tuned_path() -> PathBuf {
 /// *that key* while the tuner runs.
 pub struct KernelService {
     config: ServiceConfig,
-    store: TunedStore,
+    db: TuneDb,
     plans: PlanCache,
     pub counters: Counters,
+    /// PJRT artifact router for `ExecMode::Real` (None when the manifest
+    /// is absent); requests without a matching artifact fall back to the
+    /// NDRange interpreter.
+    #[cfg(feature = "xla")]
+    artifacts: Option<pjrt::ArtifactRouter>,
 }
 
 impl KernelService {
     pub fn new(config: ServiceConfig) -> Arc<KernelService> {
-        let store = match &config.tuned_path {
-            Some(p) => TunedStore::open(p),
-            None => TunedStore::ephemeral(),
+        let db = match &config.db_path {
+            Some(p) => TuneDb::open(p),
+            None => TuneDb::ephemeral(),
+        };
+        // Migration shim: fold any legacy PR-1 warm-start TSV into the
+        // knowledge base so existing deployments keep their tuned configs.
+        if let Some(legacy) = &config.legacy_tsv {
+            if legacy.exists() {
+                let n = db.import_legacy_tsv(legacy);
+                if n > 0 {
+                    eprintln!(
+                        "tunedb: imported {n} legacy warm-start configs from {legacy:?}"
+                    );
+                }
+            }
+        }
+        let plans = match config.plan_cache_cap {
+            Some(cap) => PlanCache::with_cap(cap),
+            None => PlanCache::new(),
         };
         Arc::new(KernelService {
             config,
-            store,
-            plans: PlanCache::new(),
+            db,
+            plans,
             counters: Counters::default(),
+            #[cfg(feature = "xla")]
+            artifacts: pjrt::ArtifactRouter::open_default(),
         })
     }
 
@@ -155,13 +201,43 @@ impl KernelService {
         self.config.exec
     }
 
-    /// Tuned configs known to the store (loaded + freshly tuned).
+    /// The tuning knowledge base backing this service.
+    pub fn db(&self) -> &TuneDb {
+        &self.db
+    }
+
+    /// Winner configs known to the knowledge base (loaded + fresh).
     pub fn tuned_len(&self) -> usize {
-        self.store.len()
+        self.db.best_len()
+    }
+
+    /// Built plan-cache entries currently held.
+    pub fn plans_len(&self) -> usize {
+        self.plans.len()
     }
 
     pub fn stats(&self) -> StatsSnapshot {
         self.counters.snapshot()
+    }
+
+    /// Execute a request through the PJRT artifact path when available
+    /// (built with `--features xla`, manifest present, artifact exists
+    /// for this kernel at this grid). `None` = use the interpreter.
+    pub fn artifact_exec(&self, kernel: &str, grid: (usize, usize), seed: u64) -> Option<f64> {
+        #[cfg(feature = "xla")]
+        {
+            if grid.0 == grid.1 {
+                if let Some(router) = &self.artifacts {
+                    if let Some(secs) = router.execute(kernel, grid.0, seed) {
+                        Counters::bump(&self.counters.pjrt_execs);
+                        return Some(secs);
+                    }
+                }
+            }
+        }
+        #[cfg(not(feature = "xla"))]
+        let _ = (kernel, grid, seed);
+        None
     }
 
     /// The ready-to-execute entry for `(kernel, device, grid)` — tuning,
@@ -173,14 +249,102 @@ impl KernelService {
         grid: (usize, usize),
     ) -> Result<Arc<PlanEntry>, ServeError> {
         let key = PlanKey { kernel: kernel.to_string(), device: dev.name, grid };
-        let (entry, hit) =
+        let (entry, hit, evicted) =
             self.plans.get_or_build(&key, || self.build_entry(&key, dev))?;
         if hit {
             Counters::bump(&self.counters.cache_hits);
         } else {
             Counters::bump(&self.counters.cache_misses);
         }
+        Counters::add(&self.counters.evictions, evicted as u64);
         Ok(entry)
+    }
+
+    /// Resolve a tuned config for a cache-missed key through the
+    /// knowledge base's tiers: exact hit → nearest-grid transfer →
+    /// model-ranked shortlist → full cold search. Every search outcome
+    /// is recorded back into the db.
+    fn resolve_config(
+        &self,
+        key: &PlanKey,
+        dev: &'static DeviceSpec,
+        info: &KernelInfo,
+    ) -> (TuningConfig, f64, TuneSource) {
+        let fm = FeatureMap::new(info);
+        let record = |res: &TuneResult| {
+            Counters::add(&self.counters.search_evals, res.evals as u64);
+            self.db.record_tune(&key.kernel, dev, key.grid, res, &fm);
+        };
+        let answer = match self.db.lookup(&key.kernel, dev.name, key.grid) {
+            // A zero budget disables the tier (tests and
+            // measure-everything deployments).
+            Answer::Transfer { .. } if self.config.transfer_budget == 0 => Answer::Miss,
+            a => a,
+        };
+        match answer {
+            Answer::Exact(rec) => {
+                Counters::bump(&self.counters.warm_starts);
+                (rec.config, rec.seconds, TuneSource::WarmStart)
+            }
+            Answer::Transfer { rec, .. } => {
+                Counters::bump(&self.counters.db_transfers);
+                let space = TuningSpace::enumerate(info, dev);
+                let res = tuner::seeded(
+                    &space,
+                    &fm,
+                    &rec.config,
+                    self.config.transfer_budget,
+                    tuner::simulator_eval(info, dev, key.grid),
+                );
+                record(&res);
+                (res.best, res.best_time, TuneSource::Transfer)
+            }
+            Answer::Miss => {
+                // One enumeration serves both the model shortlist and,
+                // if that yields nothing, the full cold search.
+                let space = TuningSpace::enumerate(info, dev);
+                // Tier 3: a model trained on this kernel's records from
+                // *other* devices/grids ranks the space; only the top
+                // predictions are measured.
+                let model = if self.config.predict_budget == 0 {
+                    None
+                } else {
+                    self.db.model_for(&key.kernel)
+                };
+                let shortlisted = model.and_then(|model| {
+                    let cands = model.rank(
+                        &space,
+                        &fm,
+                        dev,
+                        key.grid,
+                        self.config.predict_budget,
+                    );
+                    tuner::shortlist(
+                        space.len(),
+                        &cands,
+                        tuner::simulator_eval(info, dev, key.grid),
+                    )
+                });
+                match shortlisted {
+                    Some(res) => {
+                        Counters::bump(&self.counters.db_predictions);
+                        record(&res);
+                        (res.best, res.best_time, TuneSource::Predicted)
+                    }
+                    None => {
+                        Counters::bump(&self.counters.tunes);
+                        let res = tuner::tune_in_space(
+                            &space,
+                            info,
+                            &self.config.strategy,
+                            tuner::simulator_eval(info, dev, key.grid),
+                        );
+                        record(&res);
+                        (res.best, res.best_time, TuneSource::Fresh)
+                    }
+                }
+            }
+        }
     }
 
     fn build_entry(
@@ -197,25 +361,7 @@ impl KernelService {
         })?;
         let info = KernelInfo::analyze(prog);
 
-        let (config, est_seconds, source) = match self.store.lookup(key) {
-            Some(rec) => {
-                Counters::bump(&self.counters.warm_starts);
-                (rec.config, rec.est_seconds, TuneSource::WarmStart)
-            }
-            None => {
-                Counters::bump(&self.counters.tunes);
-                let res =
-                    tuner::tune_on_simulator(&info, dev, key.grid, &self.config.strategy);
-                self.store.insert(
-                    key.clone(),
-                    TunedRecord {
-                        config: res.best.clone(),
-                        est_seconds: res.best_time,
-                    },
-                );
-                (res.best, res.best_time, TuneSource::Fresh)
-            }
-        };
+        let (config, est_seconds, source) = self.resolve_config(key, dev, &info);
 
         let plan = lower(&info, &config).map_err(|e| ServeError::Compile {
             kernel: key.kernel.clone(),
@@ -279,11 +425,18 @@ mod tests {
     use super::*;
     use crate::devices::{INTEL_I7, K40};
 
+    /// Ephemeral service with the knowledge-base transfer/model tiers
+    /// disabled — these tests pin the PR-1 plan-cache semantics; the
+    /// tiers have their own tests below and in `tests/tunedb.rs`.
     fn test_service(exec: ExecMode) -> Arc<KernelService> {
         KernelService::new(ServiceConfig {
             strategy: Strategy::Random { evals: 40, seed: 7 },
-            tuned_path: None,
+            db_path: None,
+            legacy_tsv: None,
             exec,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 0,
         })
     }
 
@@ -339,5 +492,92 @@ mod tests {
         assert!(s.makespan_s.is_finite() && s.makespan_s > 0.0);
         // Scheduling populated the cache: 2 kernels × 4 devices.
         assert_eq!(svc.stats().tunes, 8);
+    }
+
+    #[test]
+    fn nearest_grid_transfer_tier_replaces_full_tune() {
+        let svc = KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 60, seed: 3 },
+            db_path: None,
+            legacy_tsv: None,
+            exec: ExecMode::Simulate,
+            plan_cache_cap: None,
+            transfer_budget: 24,
+            predict_budget: 0,
+        });
+        let warm = svc.plan("sepconv_row", &K40, (32, 32)).unwrap();
+        assert_eq!(warm.source, TuneSource::Fresh);
+        // Same kernel + device at a new grid: the knowledge base seeds a
+        // neighborhood search instead of a full cold tune.
+        let cold = svc.plan("sepconv_row", &K40, (64, 64)).unwrap();
+        assert_eq!(cold.source, TuneSource::Transfer);
+        let s = svc.stats();
+        assert_eq!(s.tunes, 1);
+        assert_eq!(s.db_transfers, 1);
+        // 60 full-search evals + 24 transfer evals.
+        assert_eq!(s.search_evals, 60 + 24);
+    }
+
+    #[test]
+    fn model_tier_serves_cold_device_without_full_tune() {
+        let svc = KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 120, seed: 9 },
+            db_path: None,
+            legacy_tsv: None,
+            exec: ExecMode::Simulate,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 24,
+        });
+        // Seed knowledge on two devices so the model has cross-device
+        // training data.
+        svc.plan("sepconv_row", &K40, (32, 32)).unwrap();
+        svc.plan("sepconv_row", &crate::devices::AMD_7970, (32, 32)).unwrap();
+        let before = svc.stats();
+        // Cold (kernel, device) pair: no same-device records at all.
+        let entry = svc.plan("sepconv_row", &INTEL_I7, (32, 32)).unwrap();
+        let s = svc.stats();
+        if entry.source == TuneSource::Predicted {
+            assert_eq!(s.tunes, before.tunes);
+            assert_eq!(s.db_predictions, 1);
+            assert!(s.search_evals - before.search_evals <= 24);
+        } else {
+            // Too few finite training records survived filtering — the
+            // service must have fallen back to a full cold search.
+            assert_eq!(entry.source, TuneSource::Fresh);
+            assert_eq!(s.tunes, before.tunes + 1);
+        }
+        assert!(entry.est_seconds.is_finite() && entry.est_seconds > 0.0);
+    }
+
+    #[test]
+    fn plan_cache_cap_evicts_lru_and_rebuilds_from_db() {
+        let svc = KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 40, seed: 5 },
+            db_path: None,
+            legacy_tsv: None,
+            exec: ExecMode::Simulate,
+            plan_cache_cap: Some(2),
+            transfer_budget: 0,
+            predict_budget: 0,
+        });
+        svc.plan("sepconv_row", &K40, (16, 16)).unwrap();
+        svc.plan("sepconv_row", &K40, (32, 32)).unwrap();
+        assert_eq!(svc.plans_len(), 2);
+        assert_eq!(svc.stats().evictions, 0);
+        // Third key evicts the LRU entry (the 16×16 plan).
+        svc.plan("sepconv_row", &K40, (48, 48)).unwrap();
+        assert_eq!(svc.plans_len(), 2);
+        assert_eq!(svc.stats().evictions, 1);
+        // The evicted key rebuilds as a cache miss but warm-starts from
+        // the knowledge base — no re-tune.
+        let tunes_before = svc.stats().tunes;
+        let entry = svc.plan("sepconv_row", &K40, (16, 16)).unwrap();
+        assert_eq!(entry.source, TuneSource::WarmStart);
+        let s = svc.stats();
+        assert_eq!(s.tunes, tunes_before);
+        assert_eq!(s.cache_misses, 4);
+        assert_eq!(s.evictions, 2);
+        assert_eq!(svc.plans_len(), 2);
     }
 }

@@ -1,0 +1,129 @@
+//! PJRT artifact routing for `imagecl serve` (built with `--features
+//! xla` only).
+//!
+//! When the crate is built with the `xla` feature and `make artifacts`
+//! has produced AOT HLO artifacts, `ExecMode::Real` requests whose
+//! (kernel, grid) matches an artifact execute through the PJRT runtime
+//! instead of the NDRange interpreter — the L3↔XLA bridge on the serving
+//! hot path. Everything else (no manifest, no matching artifact,
+//! non-square grid, or a runtime failure — including the stub runtime
+//! when the `xla-client` feature is off) falls back to the interpreter;
+//! a hard runtime failure disables the artifact path for the rest of
+//! the process so the fallback is paid once, not per request.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::bench_defs::{gauss5, gauss5x5, synth_image};
+use crate::imagecl::ScalarType;
+use crate::runtime::{default_artifact_dir, Tensor, XlaRuntime};
+
+/// A shared PJRT runtime serving artifact executions for the worker
+/// pools. `execute` is serialized behind a mutex (one PJRT CPU client);
+/// per-artifact compilation is cached inside the runtime.
+pub struct ArtifactRouter {
+    rt: Mutex<XlaRuntime>,
+    ok: AtomicBool,
+}
+
+impl ArtifactRouter {
+    /// Open an artifact directory; `None` (interpreter-only serving)
+    /// when it has no manifest.
+    pub fn open(dir: &std::path::Path) -> Option<ArtifactRouter> {
+        let rt = XlaRuntime::new(dir).ok()?;
+        Some(ArtifactRouter { rt: Mutex::new(rt), ok: AtomicBool::new(true) })
+    }
+
+    /// Open the default artifact directory.
+    pub fn open_default() -> Option<ArtifactRouter> {
+        ArtifactRouter::open(&default_artifact_dir())
+    }
+
+    /// Execute `kernel` at `n`×`n` through its artifact, returning the
+    /// measured execution seconds. `None` = no matching artifact (or the
+    /// path is disabled) — the caller falls back to the interpreter.
+    pub fn execute(&self, kernel: &str, n: usize, seed: u64) -> Option<f64> {
+        if !self.ok.load(Ordering::Relaxed) {
+            return None;
+        }
+        // Resolve the artifact first: synthesizing the input frame is
+        // O(n²) and must not be paid for requests that will fall back to
+        // the interpreter anyway (which synthesizes its own workload).
+        // The runtime mutex is released during synthesis so workers only
+        // serialize on actual PJRT use.
+        let id = {
+            let rt = self.rt.lock().unwrap();
+            rt.manifest().variants_of(kernel, n).first()?.id.clone()
+        };
+        let inputs = artifact_inputs(kernel, n, seed)?;
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let mut rt = self.rt.lock().unwrap();
+        let t0 = Instant::now();
+        match rt.execute(&id, &refs) {
+            Ok(_) => Some(t0.elapsed().as_secs_f64()),
+            Err(e) => {
+                eprintln!(
+                    "warning: PJRT artifact path disabled after failure on {id}: {e:#}"
+                );
+                self.ok.store(false, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+}
+
+/// The artifact-side input tensors for one serving request — mirrors
+/// `bench_defs::workload` (same synthetic frame per seed) so interpreter
+/// and artifact paths process the same pixels. `None` for kernels whose
+/// artifacts take a different graph shape (e.g. bare `harris`, which is
+/// only AOT-compiled as the fused `harris_pipeline`).
+fn artifact_inputs(kernel: &str, n: usize, seed: u64) -> Option<Vec<Tensor>> {
+    let image = |elem: ScalarType| {
+        let img = synth_image(elem, n, n, seed);
+        Tensor::new(n, n, img.buf.data.iter().map(|&v| v as f32).collect())
+    };
+    let filter = |f: Vec<f64>| {
+        Tensor::new(f.len(), 1, f.iter().map(|&v| v as f32).collect())
+    };
+    match kernel {
+        "sepconv_row" | "sepconv_col" => {
+            Some(vec![image(ScalarType::F32), filter(gauss5())])
+        }
+        "conv2d" => Some(vec![image(ScalarType::U8), filter(gauss5x5())]),
+        "sobel" => Some(vec![image(ScalarType::F32)]),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_shapes_match_manifest_convention() {
+        let ins = artifact_inputs("sepconv_row", 32, 7).unwrap();
+        assert_eq!(ins.len(), 2);
+        assert_eq!((ins[0].rows, ins[0].cols), (32, 32));
+        assert_eq!((ins[1].rows, ins[1].cols), (5, 1));
+        let ins = artifact_inputs("conv2d", 16, 1).unwrap();
+        assert_eq!((ins[1].rows, ins[1].cols), (25, 1));
+        assert_eq!(artifact_inputs("sobel", 16, 1).unwrap().len(), 1);
+        assert!(artifact_inputs("harris", 16, 1).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_is_interpreter_only() {
+        // An artifact dir without a manifest: the router must decline to
+        // open rather than fail requests later. (Uses the explicit-path
+        // constructor — mutating IMAGECL_ARTIFACTS would race with
+        // concurrently running artifact tests.)
+        let empty = std::env::temp_dir().join(format!(
+            "imagecl_no_artifacts_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::create_dir_all(&empty);
+        assert!(ArtifactRouter::open(&empty).is_none());
+        let _ = std::fs::remove_dir_all(&empty);
+    }
+}

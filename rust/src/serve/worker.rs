@@ -126,16 +126,25 @@ fn worker_loop(
                 for req in batch {
                     let result = match service.exec_mode() {
                         ExecMode::Simulate => Ok(entry.est_seconds),
-                        ExecMode::Real => {
-                            let mut args =
-                                bench_defs::workload(&kernel, grid.0, grid.1, req.seed);
-                            let t0 = Instant::now();
-                            entry
-                                .prepared
-                                .run(&mut args)
-                                .map(|()| t0.elapsed().as_secs_f64())
-                                .map_err(|e| e.to_string())
-                        }
+                        // Real execution prefers the PJRT artifact path
+                        // (`--features xla` + artifacts present) and
+                        // falls back to the NDRange interpreter.
+                        ExecMode::Real => match service
+                            .artifact_exec(&kernel, grid, req.seed)
+                        {
+                            Some(secs) => Ok(secs),
+                            None => {
+                                let mut args = bench_defs::workload(
+                                    &kernel, grid.0, grid.1, req.seed,
+                                );
+                                let t0 = Instant::now();
+                                entry
+                                    .prepared
+                                    .run(&mut args)
+                                    .map(|()| t0.elapsed().as_secs_f64())
+                                    .map_err(|e| e.to_string())
+                            }
+                        },
                     };
                     respond(req, device, result, batch_len);
                 }
@@ -200,8 +209,12 @@ mod tests {
     fn pool_serves_and_shuts_down() {
         let service = KernelService::new(ServiceConfig {
             strategy: Strategy::Random { evals: 30, seed: 1 },
-            tuned_path: None,
+            db_path: None,
+            legacy_tsv: None,
             exec: ExecMode::Simulate,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 0,
         });
         let pool = DevicePool::start(&INTEL_I7, service.clone(), 2, 8, 4);
         let (tx, rx) = mpsc::channel();
@@ -231,8 +244,12 @@ mod tests {
     fn bad_kernel_requests_get_error_replies() {
         let service = KernelService::new(ServiceConfig {
             strategy: Strategy::Random { evals: 30, seed: 1 },
-            tuned_path: None,
+            db_path: None,
+            legacy_tsv: None,
             exec: ExecMode::Simulate,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 0,
         });
         let pool = DevicePool::start(&INTEL_I7, service.clone(), 1, 4, 4);
         let (tx, rx) = mpsc::channel();

@@ -58,8 +58,8 @@ impl Rng {
 /// { return };` so the suite passes cleanly on machines without the XLA
 /// toolchain.
 pub fn artifact_dir_or_skip() -> Option<std::path::PathBuf> {
-    if !cfg!(feature = "xla") {
-        eprintln!("skipping: built without the `xla` feature");
+    if !cfg!(feature = "xla-client") {
+        eprintln!("skipping: built without the `xla-client` feature");
         return None;
     }
     let dir = crate::runtime::default_artifact_dir();

@@ -1,0 +1,518 @@
+//! `tunedb`: the transfer-tuning knowledge base.
+//!
+//! The serving layer (PR 1) tuned every new (kernel, device, grid) key
+//! from scratch and its flat TSV warm-start only replayed exact-key
+//! hits. This module turns tuning from a per-process cost into
+//! accumulated cross-run knowledge: every tuning outcome is persisted as
+//! a [`TuneRecord`] (kernel, device-spec fingerprint, grid, config,
+//! measured time, config feature vector), and lookups answer in three
+//! tiers:
+//!
+//! 1. **Exact** — a winner record for the precise (kernel, device, grid)
+//!    key: return its config directly, no search at all.
+//! 2. **Transfer** — same kernel + device, nearest grid by log-scale
+//!    distance: the recorded winner seeds
+//!    [`crate::tuner::search::seeded`], which searches only the seed's
+//!    feature-space neighborhood instead of the full space.
+//! 3. **Model** — no same-device knowledge at all: an MLP
+//!    ([`PerfModel`], trained on the kernel's accumulated records across
+//!    devices and grids) ranks the candidate space and only the top
+//!    predictions are measured ([`crate::tuner::search::shortlist`]).
+//!
+//! The store is an append-only TSV (`store.rs`) with an in-memory index;
+//! [`TuneDb::import_legacy_tsv`] migrates PR-1 warm-start files so
+//! existing deployments keep their tuned configs.
+
+pub mod model;
+pub mod store;
+
+pub use model::{device_features, PerfModel, MIN_TRAIN_RECORDS};
+pub use store::{device_fingerprint, TuneRecord};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::analysis::KernelInfo;
+use crate::bench_defs;
+use crate::devices::DeviceSpec;
+use crate::imagecl::frontend;
+use crate::tuner::{FeatureMap, TuneResult};
+
+/// Sampled search-history records persisted per tuning run (the winner
+/// is always recorded; history feeds model training).
+const HISTORY_SAMPLES: usize = 48;
+
+/// What the knowledge base knows about a (kernel, device, grid) key.
+#[derive(Debug, Clone)]
+pub enum Answer {
+    /// A winner record at exactly this key.
+    Exact(TuneRecord),
+    /// A winner record for the same kernel + device at the nearest other
+    /// grid (log-scale distance attached) — a warm-start seed.
+    Transfer { rec: TuneRecord, distance: f64 },
+    /// Nothing usable for this kernel + device.
+    Miss,
+}
+
+#[derive(Default)]
+struct DbInner {
+    records: Vec<TuneRecord>,
+    /// Winner-record indices per (kernel, device).
+    best: HashMap<(String, &'static str), Vec<usize>>,
+    /// All-record indices per kernel (model training set).
+    by_kernel: HashMap<String, Vec<usize>>,
+    /// Training outcomes, keyed by kernel, stamped with the record count
+    /// they saw (stale entries retrain lazily). `None` caches a *failed*
+    /// training — unusable kernels must not pay a record-set clone and
+    /// train attempt on every lookup.
+    models: HashMap<String, (usize, Option<Arc<PerfModel>>)>,
+}
+
+impl DbInner {
+    fn index(&mut self, idx: usize) {
+        let r = &self.records[idx];
+        if r.best {
+            self.best
+                .entry((r.kernel.clone(), r.device))
+                .or_default()
+                .push(idx);
+        }
+        self.by_kernel.entry(r.kernel.clone()).or_default().push(idx);
+    }
+}
+
+/// The persistent, queryable tuning knowledge base. Thread-safe; all
+/// mutation appends (memory and disk alike).
+pub struct TuneDb {
+    path: Option<PathBuf>,
+    inner: Mutex<DbInner>,
+}
+
+/// Default knowledge-base path: `<crate>/target/tunedb.tsv` (override
+/// with `IMAGECL_TUNEDB`).
+pub fn default_db_path() -> PathBuf {
+    if let Ok(p) = std::env::var("IMAGECL_TUNEDB") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("target")
+        .join("tunedb.tsv")
+}
+
+/// Log-scale distance between two grids (geometric: 512 is as far from
+/// 1024 as 1024 is from 2048).
+pub fn grid_distance(a: (usize, usize), b: (usize, usize)) -> f64 {
+    let ln = |v: usize| (v.max(1) as f64).ln();
+    let dx = ln(a.0) - ln(b.0);
+    let dy = ln(a.1) - ln(b.1);
+    (dx * dx + dy * dy).sqrt()
+}
+
+impl TuneDb {
+    /// In-memory only (no persistence).
+    pub fn ephemeral() -> TuneDb {
+        TuneDb { path: None, inner: Mutex::new(DbInner::default()) }
+    }
+
+    /// Backed by `path`; loads any existing file, skipping unusable
+    /// lines with a warning rather than refusing to start.
+    pub fn open(path: &Path) -> TuneDb {
+        let mut inner = DbInner::default();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            for rec in store::parse_file(&text) {
+                inner.records.push(rec);
+                inner.index(inner.records.len() - 1);
+            }
+        }
+        TuneDb { path: Some(path.to_path_buf()), inner: Mutex::new(inner) }
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Total records (winners + history samples).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Winner records only.
+    pub fn best_len(&self) -> usize {
+        self.inner.lock().unwrap().best.values().map(Vec::len).sum()
+    }
+
+    /// Clone of every record (CLI export / stats; records are small).
+    pub fn snapshot(&self) -> Vec<TuneRecord> {
+        self.inner.lock().unwrap().records.clone()
+    }
+
+    /// Append one record (memory + disk).
+    pub fn record(&self, rec: TuneRecord) {
+        self.record_batch(vec![rec]);
+    }
+
+    fn record_batch(&self, recs: Vec<TuneRecord>) {
+        if recs.is_empty() {
+            return;
+        }
+        if let Some(path) = &self.path {
+            store::append(path, &recs);
+        }
+        let mut g = self.inner.lock().unwrap();
+        for rec in recs {
+            g.records.push(rec);
+            let idx = g.records.len() - 1;
+            g.index(idx);
+        }
+    }
+
+    /// Record one tuning run: the winner plus up to [`HISTORY_SAMPLES`]
+    /// evenly-spaced finite history entries (model-training food).
+    pub fn record_tune(
+        &self,
+        kernel: &str,
+        dev: &'static DeviceSpec,
+        grid: (usize, usize),
+        res: &TuneResult,
+        fm: &FeatureMap,
+    ) {
+        let fp = device_fingerprint(dev);
+        let make = |config: &crate::transform::TuningConfig, seconds: f64, best: bool| TuneRecord {
+            kernel: kernel.to_string(),
+            device: dev.name,
+            dev_fp: fp,
+            grid,
+            seconds,
+            best,
+            config: config.clone(),
+            features: fm.features(config),
+        };
+        let mut recs = vec![make(&res.best, res.best_time, true)];
+        let finite: Vec<&(crate::transform::TuningConfig, f64)> =
+            res.history.iter().filter(|(_, t)| t.is_finite()).collect();
+        if !finite.is_empty() {
+            // Ceiling stride: the samples stay evenly spaced over the
+            // whole history (a floor stride would take a prefix whenever
+            // the history is under 2× the sample count, biasing the
+            // model's training set toward one corner of the space).
+            let mut step = finite.len() / HISTORY_SAMPLES;
+            if finite.len() % HISTORY_SAMPLES != 0 {
+                step += 1;
+            }
+            let step = step.max(1);
+            for (cfg, t) in finite.into_iter().step_by(step).take(HISTORY_SAMPLES) {
+                recs.push(make(cfg, *t, false));
+            }
+        }
+        self.record_batch(recs);
+    }
+
+    /// Tier-1 lookup: the latest winner record at exactly this key.
+    pub fn exact(&self, kernel: &str, device: &str, grid: (usize, usize)) -> Option<TuneRecord> {
+        let g = self.inner.lock().unwrap();
+        let idxs = g.best.get(&(kernel.to_string(), crate::devices::by_name(device)?.name))?;
+        idxs.iter()
+            .rev()
+            .map(|&i| &g.records[i])
+            .find(|r| r.grid == grid)
+            .cloned()
+    }
+
+    /// Tier-2 lookup: winner records for the same kernel + device,
+    /// sorted by ascending grid distance (ties broken latest-first),
+    /// truncated to `k`. Excludes exact-grid records.
+    pub fn nearest_grids(
+        &self,
+        kernel: &str,
+        device: &str,
+        grid: (usize, usize),
+        k: usize,
+    ) -> Vec<(TuneRecord, f64)> {
+        let Some(dev) = crate::devices::by_name(device) else { return Vec::new() };
+        let g = self.inner.lock().unwrap();
+        let Some(idxs) = g.best.get(&(kernel.to_string(), dev.name)) else {
+            return Vec::new();
+        };
+        let mut scored: Vec<(usize, f64)> = idxs
+            .iter()
+            .rev()
+            .map(|&i| (i, grid_distance(g.records[i].grid, grid)))
+            .filter(|&(i, _)| g.records[i].grid != grid)
+            .collect();
+        scored.sort_by(|a, b| {
+            a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        scored
+            .into_iter()
+            .take(k)
+            .map(|(i, d)| (g.records[i].clone(), d))
+            .collect()
+    }
+
+    /// The single nearest-grid winner (tier 2).
+    pub fn nearest_grid(
+        &self,
+        kernel: &str,
+        device: &str,
+        grid: (usize, usize),
+    ) -> Option<(TuneRecord, f64)> {
+        self.nearest_grids(kernel, device, grid, 1).into_iter().next()
+    }
+
+    /// Tiered lookup (exact, then transfer). The model tier needs the
+    /// kernel's tuning space, so it stays with the caller — see
+    /// [`TuneDb::model_for`].
+    pub fn lookup(&self, kernel: &str, device: &str, grid: (usize, usize)) -> Answer {
+        if let Some(rec) = self.exact(kernel, device, grid) {
+            return Answer::Exact(rec);
+        }
+        if let Some((rec, distance)) = self.nearest_grid(kernel, device, grid) {
+            return Answer::Transfer { rec, distance };
+        }
+        Answer::Miss
+    }
+
+    /// Tier-3 support: the kernel's performance model, trained lazily on
+    /// the current records and cached until new records arrive. `None`
+    /// when there is too little usable data.
+    pub fn model_for(&self, kernel: &str) -> Option<Arc<PerfModel>> {
+        // Snapshot the training set under the lock, but train *outside*
+        // it — training takes milliseconds and must not stall concurrent
+        // lookups/records for unrelated keys.
+        let (stamp, records) = {
+            let g = self.inner.lock().unwrap();
+            let idxs = g.by_kernel.get(kernel)?;
+            if let Some((stamp, model)) = g.models.get(kernel) {
+                if *stamp == idxs.len() {
+                    return model.clone();
+                }
+            }
+            let records: Vec<TuneRecord> =
+                idxs.iter().map(|&i| g.records[i].clone()).collect();
+            (idxs.len(), records)
+        };
+        let refs: Vec<&TuneRecord> = records.iter().collect();
+        let model = PerfModel::train(kernel, &refs).map(Arc::new);
+        // Concurrent trainers race benignly: last insert wins, and a
+        // stale stamp just means a lazy retrain on the next call. Failed
+        // trainings are cached too (retry only once new records arrive).
+        let mut g = self.inner.lock().unwrap();
+        g.models.insert(kernel.to_string(), (stamp, model.clone()));
+        model
+    }
+
+    /// Records known for one kernel (winners + history).
+    pub fn kernel_len(&self, kernel: &str) -> usize {
+        self.inner.lock().unwrap().by_kernel.get(kernel).map_or(0, Vec::len)
+    }
+
+    /// Execution-time estimate for a key, for schedulers: an exact
+    /// winner's measured time, or the nearest-grid winner's time scaled
+    /// by the pixel-count ratio. `None` = no same-device knowledge.
+    pub fn estimate(&self, kernel: &str, device: &str, grid: (usize, usize)) -> Option<f64> {
+        if let Some(rec) = self.exact(kernel, device, grid) {
+            return Some(rec.seconds);
+        }
+        let (rec, _) = self.nearest_grid(kernel, device, grid)?;
+        let pixels = (grid.0 * grid.1).max(1) as f64;
+        let rec_pixels = (rec.grid.0 * rec.grid.1).max(1) as f64;
+        Some(rec.seconds * pixels / rec_pixels)
+    }
+
+    /// Migration shim: import a legacy PR-1 warm-start TSV
+    /// (`kernel device grid_w grid_h est_seconds config`), skipping keys
+    /// the db already has an exact winner for. Feature vectors are
+    /// recomputed for built-in kernels (unknown kernels import without
+    /// features — usable for exact/transfer hits, invisible to the
+    /// model). Returns the number of records imported.
+    pub fn import_legacy_tsv(&self, path: &Path) -> usize {
+        let Ok(text) = std::fs::read_to_string(path) else { return 0 };
+        let mut fms: HashMap<String, Option<FeatureMap>> = HashMap::new();
+        let mut imported = Vec::new();
+        for mut rec in store::parse_legacy_tsv(&text) {
+            if self.exact(&rec.kernel, rec.device, rec.grid).is_some() {
+                continue;
+            }
+            let fm = fms.entry(rec.kernel.clone()).or_insert_with(|| {
+                bench_defs::kernel_by_id(&rec.kernel).and_then(|k| {
+                    frontend(k.source)
+                        .ok()
+                        .map(|prog| FeatureMap::new(&KernelInfo::analyze(prog)))
+                })
+            });
+            if let Some(fm) = fm {
+                rec.features = fm.features(&rec.config);
+            }
+            imported.push(rec);
+        }
+        let n = imported.len();
+        self.record_batch(imported);
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{INTEL_I7, K40};
+    use crate::transform::TuningConfig;
+
+    fn rec(kernel: &str, dev: &'static DeviceSpec, n: usize, secs: f64, best: bool) -> TuneRecord {
+        let mut config = TuningConfig::default();
+        config.wg = [64, 4];
+        TuneRecord {
+            kernel: kernel.to_string(),
+            device: dev.name,
+            dev_fp: device_fingerprint(dev),
+            grid: (n, n),
+            seconds: secs,
+            best,
+            config,
+            features: vec![6.0, 2.0],
+        }
+    }
+
+    #[test]
+    fn exact_prefers_latest_winner() {
+        let db = TuneDb::ephemeral();
+        db.record(rec("sobel", &K40, 64, 2e-4, true));
+        db.record(rec("sobel", &K40, 64, 1e-4, true)); // re-tune, newer
+        db.record(rec("sobel", &K40, 64, 5e-5, false)); // history, ignored
+        let hit = db.exact("sobel", K40.name, (64, 64)).unwrap();
+        assert_eq!(hit.seconds, 1e-4);
+        assert!(db.exact("sobel", K40.name, (128, 128)).is_none());
+        assert!(db.exact("sobel", INTEL_I7.name, (64, 64)).is_none());
+    }
+
+    #[test]
+    fn nearest_grid_orders_by_log_distance() {
+        let db = TuneDb::ephemeral();
+        db.record(rec("sobel", &K40, 128, 1e-4, true));
+        db.record(rec("sobel", &K40, 500, 2e-4, true));
+        db.record(rec("sobel", &K40, 2000, 3e-4, true));
+        // Log-scale: 2000 is nearer to 1024 (|ln 2000/1024| ≈ 0.67) than
+        // 500 (≈ 0.72) than 128 (≈ 2.08).
+        let hits = db.nearest_grids("sobel", K40.name, (1024, 1024), 3);
+        let grids: Vec<usize> = hits.iter().map(|(r, _)| r.grid.0).collect();
+        assert_eq!(grids, vec![2000, 500, 128]);
+        assert!(hits[0].1 < hits[1].1 && hits[1].1 < hits[2].1);
+        // Exact-grid records are excluded from transfer candidates.
+        db.record(rec("sobel", &K40, 1024, 9e-5, true));
+        let hits = db.nearest_grids("sobel", K40.name, (1024, 1024), 4);
+        assert!(hits.iter().all(|(r, _)| r.grid.0 != 1024));
+        // Other devices contribute nothing.
+        assert!(db.nearest_grid("sobel", INTEL_I7.name, (1024, 1024)).is_none());
+    }
+
+    #[test]
+    fn lookup_tiers() {
+        let db = TuneDb::ephemeral();
+        assert!(matches!(db.lookup("sobel", K40.name, (64, 64)), Answer::Miss));
+        db.record(rec("sobel", &K40, 32, 1e-4, true));
+        assert!(matches!(
+            db.lookup("sobel", K40.name, (64, 64)),
+            Answer::Transfer { .. }
+        ));
+        db.record(rec("sobel", &K40, 64, 1e-4, true));
+        assert!(matches!(db.lookup("sobel", K40.name, (64, 64)), Answer::Exact(_)));
+    }
+
+    #[test]
+    fn estimate_scales_by_pixels() {
+        let db = TuneDb::ephemeral();
+        db.record(rec("sobel", &K40, 512, 1e-3, true));
+        // Exact.
+        assert_eq!(db.estimate("sobel", K40.name, (512, 512)), Some(1e-3));
+        // Transfer: 4× the pixels → 4× the estimate.
+        let est = db.estimate("sobel", K40.name, (1024, 1024)).unwrap();
+        assert!((est - 4e-3).abs() < 1e-12, "{est}");
+        assert!(db.estimate("sobel", INTEL_I7.name, (512, 512)).is_none());
+    }
+
+    #[test]
+    fn store_reload_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_roundtrip_{}.tsv", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let db = TuneDb::open(&path);
+            assert!(db.is_empty());
+            db.record(rec("sobel", &K40, 64, 1e-4, true));
+            db.record(rec("sobel", &K40, 64, 3e-4, false));
+            db.record(rec("conv2d", &INTEL_I7, 128, 2e-3, true));
+            assert_eq!(db.len(), 3);
+            assert_eq!(db.best_len(), 2);
+        }
+        let db = TuneDb::open(&path);
+        assert_eq!(db.len(), 3);
+        assert_eq!(db.best_len(), 2);
+        let hit = db.exact("sobel", K40.name, (64, 64)).unwrap();
+        assert_eq!(hit, rec("sobel", &K40, 64, 1e-4, true));
+        assert_eq!(
+            db.exact("conv2d", INTEL_I7.name, (128, 128)).unwrap().seconds,
+            2e-3
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_import_roundtrip() {
+        use crate::serve::TunedStore;
+        use crate::serve::cache::{PlanKey, TunedRecord};
+        let legacy = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_legacy_{}.tsv", std::process::id()));
+        let _ = std::fs::remove_file(&legacy);
+        let store = TunedStore::open(&legacy);
+        let mut config = TuningConfig::default();
+        config.wg = [32, 8];
+        config.constant_mem.insert("f".into(), true);
+        store.insert(
+            PlanKey { kernel: "sepconv_row".to_string(), device: K40.name, grid: (96, 96) },
+            TunedRecord { config: config.clone(), est_seconds: 7e-4 },
+        );
+
+        let db = TuneDb::ephemeral();
+        assert_eq!(db.import_legacy_tsv(&legacy), 1);
+        let hit = db.exact("sepconv_row", K40.name, (96, 96)).unwrap();
+        assert_eq!(hit.config, config);
+        assert_eq!(hit.seconds, 7e-4);
+        // Built-in kernel → features recomputed for model training.
+        assert!(!hit.features.is_empty());
+        // Re-import is idempotent (exact key already known).
+        assert_eq!(db.import_legacy_tsv(&legacy), 0);
+        let _ = std::fs::remove_file(&legacy);
+    }
+
+    #[test]
+    fn record_tune_stores_winner_and_sampled_history() {
+        let info = crate::analysis::KernelInfo::analyze(
+            frontend(crate::bench_defs::SOBEL).unwrap(),
+        );
+        let fm = FeatureMap::new(&info);
+        let mut history = Vec::new();
+        for i in 0..200 {
+            let mut c = TuningConfig::default();
+            c.wg = [16, 1 << (i % 4)];
+            history.push((c, 1e-4 + i as f64 * 1e-6));
+        }
+        let res = TuneResult {
+            best: TuningConfig::default(),
+            best_time: 9e-5,
+            evals: 200,
+            space_size: 1000,
+            history,
+        };
+        let db = TuneDb::ephemeral();
+        db.record_tune("sobel", &K40, (64, 64), &res, &fm);
+        assert_eq!(db.best_len(), 1);
+        assert!(db.len() > 1 && db.len() <= 1 + HISTORY_SAMPLES + 1, "{}", db.len());
+        let win = db.exact("sobel", K40.name, (64, 64)).unwrap();
+        assert_eq!(win.seconds, 9e-5);
+        assert_eq!(win.features, fm.features(&win.config));
+    }
+}

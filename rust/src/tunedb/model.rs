@@ -1,0 +1,242 @@
+//! Model-backed warm starts: train the tuner's MLP on the knowledge
+//! base's accumulated records and rank candidate configurations for a
+//! *cold* (kernel, device) pair before any measurement.
+//!
+//! This is the transfer-tuning idea of Falch & Elster's companion work
+//! (arXiv:1506.00842): a performance model trained on observed
+//! (configuration, device, problem) → time samples predicts good
+//! configurations for unseen problems. Features are the per-kernel
+//! config encoding ([`crate::tuner::FeatureMap`], stored inline in each
+//! record) concatenated with a device-characteristics vector and the
+//! log grid dimensions, so one model per kernel covers every device and
+//! grid the store has seen.
+
+use crate::devices::DeviceSpec;
+use crate::transform::TuningConfig;
+use crate::tuner::{FeatureMap, Mlp, TuningSpace};
+
+use super::store::TuneRecord;
+
+/// Minimum usable records before a model is trained (below this the
+/// service falls back to a full cold search).
+pub const MIN_TRAIN_RECORDS: usize = 16;
+
+/// Training epochs — records arrive continuously, so the model is
+/// retrained cheaply and often rather than heavily and once.
+const EPOCHS: usize = 30;
+const HIDDEN: [usize; 2] = [32, 16];
+const SEED: u64 = 0x7E5B_A5ED;
+
+/// Device-characteristics features (fixed layout, log-scaled where the
+/// quantity spans orders of magnitude).
+pub fn device_features(dev: &DeviceSpec) -> Vec<f64> {
+    let lg = |v: f64| v.max(1e-12).log2();
+    vec![
+        lg(dev.compute_units as f64),
+        lg(dev.simd_width as f64),
+        dev.clock_ghz,
+        lg(dev.flops_per_cycle_cu),
+        lg(dev.mem_bw_gbs),
+        dev.global_cache_eff,
+        dev.tex_cache_eff,
+        lg(dev.tex_access_cost),
+        lg(dev.lds_access_iops),
+        lg(dev.max_wg as f64),
+        lg(dev.max_threads_per_cu as f64),
+        lg(dev.cpu_vector_width as f64),
+    ]
+}
+
+fn full_features(cfg_feats: &[f64], dev: &DeviceSpec, grid: (usize, usize)) -> Vec<f64> {
+    let mut f = cfg_feats.to_vec();
+    f.extend(device_features(dev));
+    f.push((grid.0 as f64).max(1.0).log2());
+    f.push((grid.1 as f64).max(1.0).log2());
+    f
+}
+
+/// A per-kernel performance model over the knowledge base's records.
+pub struct PerfModel {
+    pub kernel: String,
+    mlp: Mlp,
+    /// Config-feature dimensionality the model was trained with.
+    cfg_dim: usize,
+    /// Usable records the model was trained on.
+    pub samples: usize,
+    /// Mean-squared error on the training set, log10-seconds units.
+    pub train_mse: f64,
+}
+
+impl PerfModel {
+    /// Train on the kernel's records (winners and history alike). `None`
+    /// when there are too few usable records or the feature layouts
+    /// disagree (e.g. records imported without features).
+    pub fn train(kernel: &str, records: &[&TuneRecord]) -> Option<PerfModel> {
+        let mut xs: Vec<Vec<f64>> = Vec::new();
+        let mut ys: Vec<f64> = Vec::new();
+        let mut cfg_dim = None;
+        for r in records {
+            if r.features.is_empty() || !r.seconds.is_finite() || r.seconds <= 0.0 {
+                continue;
+            }
+            match cfg_dim {
+                None => cfg_dim = Some(r.features.len()),
+                Some(d) if d != r.features.len() => continue,
+                _ => {}
+            }
+            let Some(dev) = crate::devices::by_name(r.device) else { continue };
+            xs.push(full_features(&r.features, dev, r.grid));
+            ys.push(r.seconds.log10());
+        }
+        let cfg_dim = cfg_dim?;
+        if xs.len() < MIN_TRAIN_RECORDS {
+            return None;
+        }
+        let mut mlp = Mlp::new(xs[0].len(), &HIDDEN, SEED);
+        mlp.fit(&xs, &ys, EPOCHS, SEED ^ 0x77);
+        let train_mse = mlp.mse(&xs, &ys);
+        Some(PerfModel {
+            kernel: kernel.to_string(),
+            mlp,
+            cfg_dim,
+            samples: xs.len(),
+            train_mse,
+        })
+    }
+
+    /// Predicted log10-time of one configuration on `dev` at `grid`.
+    pub fn predict(&self, fm: &FeatureMap, cfg: &TuningConfig, dev: &DeviceSpec, grid: (usize, usize)) -> f64 {
+        self.mlp.predict(&full_features(&fm.features(cfg), dev, grid))
+    }
+
+    /// The `k` best-predicted configurations of `space` for a cold
+    /// (device, grid), fastest-predicted first. Empty when the kernel's
+    /// feature layout doesn't match the model (defensive — should only
+    /// happen across incompatible code versions).
+    pub fn rank(
+        &self,
+        space: &TuningSpace,
+        fm: &FeatureMap,
+        dev: &DeviceSpec,
+        grid: (usize, usize),
+        k: usize,
+    ) -> Vec<TuningConfig> {
+        if fm.dim() != self.cfg_dim || space.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let mut scored: Vec<(usize, f64)> = space
+            .configs
+            .iter()
+            .enumerate()
+            .map(|(i, cfg)| (i, self.predict(fm, cfg, dev, grid)))
+            .collect();
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        scored
+            .into_iter()
+            .take(k)
+            .map(|(i, _)| space.configs[i].clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::KernelInfo;
+    use crate::bench_defs::SEPCONV_ROW;
+    use crate::devices::{predict, KernelModel, INTEL_I7, K40};
+    use crate::imagecl::frontend;
+    use crate::tunedb::store::device_fingerprint;
+
+    fn training_records(dev: &'static DeviceSpec, n: usize) -> (KernelInfo, FeatureMap, TuningSpace, Vec<TuneRecord>) {
+        let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+        let fm = FeatureMap::new(&info);
+        let full = TuningSpace::enumerate(&info, dev);
+        let step = (full.len() / 160).max(1);
+        let configs: Vec<TuningConfig> =
+            full.configs.into_iter().step_by(step).collect();
+        let space = TuningSpace { configs };
+        let recs: Vec<TuneRecord> = space
+            .configs
+            .iter()
+            .map(|cfg| {
+                let km = KernelModel::build(&info, cfg);
+                TuneRecord {
+                    kernel: "sepconv_row".to_string(),
+                    device: dev.name,
+                    dev_fp: device_fingerprint(dev),
+                    grid: (n, n),
+                    seconds: predict(dev, &km, n, n).seconds,
+                    best: false,
+                    config: cfg.clone(),
+                    features: fm.features(cfg),
+                }
+            })
+            .filter(|r| r.seconds.is_finite())
+            .collect();
+        (info, fm, space, recs)
+    }
+
+    #[test]
+    fn too_few_records_is_none() {
+        let (_, _, _, recs) = training_records(&K40, 256);
+        let few: Vec<&TuneRecord> = recs.iter().take(MIN_TRAIN_RECORDS - 1).collect();
+        assert!(PerfModel::train("sepconv_row", &few).is_none());
+    }
+
+    #[test]
+    fn records_without_features_unusable() {
+        let (_, _, _, recs) = training_records(&K40, 256);
+        let stripped: Vec<TuneRecord> = recs
+            .iter()
+            .map(|r| TuneRecord { features: Vec::new(), ..r.clone() })
+            .collect();
+        let refs: Vec<&TuneRecord> = stripped.iter().collect();
+        assert!(PerfModel::train("sepconv_row", &refs).is_none());
+    }
+
+    #[test]
+    fn ranked_candidates_beat_the_space_median() {
+        // Train on the K40's own measurements and check the model ranks
+        // genuinely fast configs first on the same device: the best
+        // *measured* config among the model's top picks must beat the
+        // space's median config comfortably.
+        let (info, fm, space, recs) = training_records(&K40, 512);
+        let refs: Vec<&TuneRecord> = recs.iter().collect();
+        let model = PerfModel::train("sepconv_row", &refs).expect("trainable");
+        assert_eq!(model.samples, refs.len());
+        let top = model.rank(&space, &fm, &K40, (512, 512), 12);
+        assert_eq!(top.len(), 12);
+        let eval = |cfg: &TuningConfig| {
+            let km = KernelModel::build(&info, cfg);
+            predict(&K40, &km, 512, 512).seconds
+        };
+        let best_of_top =
+            top.iter().map(|c| eval(c)).fold(f64::INFINITY, f64::min);
+        let mut all: Vec<f64> =
+            recs.iter().map(|r| r.seconds).collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = all[all.len() / 2];
+        assert!(
+            best_of_top < median,
+            "model's best pick {best_of_top} not better than median {median}"
+        );
+    }
+
+    #[test]
+    fn rank_rejects_mismatched_layout() {
+        let (_, _, space, recs) = training_records(&K40, 256);
+        let refs: Vec<&TuneRecord> = recs.iter().collect();
+        let model = PerfModel::train("sepconv_row", &refs).unwrap();
+        // A feature map with a different dimensionality must yield no
+        // candidates rather than garbage.
+        let bogus = FeatureMap { arrays: Vec::new(), loops: Vec::new() };
+        assert!(model.rank(&space, &bogus, &INTEL_I7, (256, 256), 8).is_empty());
+    }
+
+    #[test]
+    fn device_features_distinguish_cpu_and_gpu() {
+        assert_ne!(device_features(&K40), device_features(&INTEL_I7));
+        assert_eq!(device_features(&K40).len(), device_features(&INTEL_I7).len());
+    }
+}

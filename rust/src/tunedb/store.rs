@@ -1,0 +1,290 @@
+//! Persistence for the tuning knowledge base: an append-only TSV of
+//! [`TuneRecord`]s plus the legacy PR-1 warm-start TSV reader.
+//!
+//! Unlike the PR-1 `TunedStore` (which kept only the winner per key and
+//! rewrote its whole file on every insert), the knowledge base is
+//! append-only: every tuning outcome — winners *and* sampled search
+//! history — is one immutable line, so concurrent servers can share a
+//! file and a crashed write loses at most its own line. Format
+//! (tab-separated, `#` comments):
+//!
+//! ```text
+//! # kernel  device  dev_fp  grid_w  grid_h  seconds  best  config  features
+//! sepconv_row  K40  a3f09c11d2e47b65  2048  2048  1.23e-4  1  wg=64x4 px=4x1 map=interleaved cmem=f  6,2,2,0,...
+//! ```
+//!
+//! `config` reuses [`TuningConfig`]'s display/parse round-trip; `features`
+//! is the comma-joined [`crate::tuner::FeatureMap`] encoding of the
+//! config, stored inline so model training never needs to re-analyze the
+//! kernel. `dev_fp` fingerprints the device spec the record was measured
+//! against — records whose fingerprint no longer matches the current
+//! spec are dropped on load (the knowledge is stale).
+
+use std::path::Path;
+
+use crate::devices::{self, DeviceSpec};
+use crate::transform::TuningConfig;
+
+/// One tuning outcome in the knowledge base.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneRecord {
+    pub kernel: String,
+    pub device: &'static str,
+    /// Fingerprint of the device spec this was measured against.
+    pub dev_fp: u64,
+    pub grid: (usize, usize),
+    /// Measured (simulator or wall-clock) execution time, seconds.
+    pub seconds: f64,
+    /// Winner of its tuning run (false = sampled search history).
+    pub best: bool,
+    pub config: TuningConfig,
+    /// Config feature vector in the kernel's `FeatureMap` layout.
+    pub features: Vec<f64>,
+}
+
+/// Stable fingerprint of a device spec (FNV-1a over its debug encoding,
+/// which covers every behavioural coefficient). Records are only trusted
+/// when the spec they were measured on still matches.
+pub fn device_fingerprint(dev: &DeviceSpec) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in format!("{dev:?}").bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+pub const HEADER: &str =
+    "# kernel\tdevice\tdev_fp\tgrid_w\tgrid_h\tseconds\tbest\tconfig\tfeatures\n";
+
+/// Render one record as its TSV line (no trailing newline).
+pub fn render_line(r: &TuneRecord) -> String {
+    let feats: Vec<String> = r.features.iter().map(|v| format!("{v:e}")).collect();
+    format!(
+        "{}\t{}\t{:016x}\t{}\t{}\t{:e}\t{}\t{}\t{}",
+        r.kernel,
+        r.device,
+        r.dev_fp,
+        r.grid.0,
+        r.grid.1,
+        r.seconds,
+        if r.best { 1 } else { 0 },
+        r.config,
+        feats.join(",")
+    )
+}
+
+/// Parse one TSV line. `None` = malformed or no longer applicable
+/// (unknown device, stale fingerprint).
+pub(crate) fn parse_line(line: &str) -> Option<TuneRecord> {
+    let cols: Vec<&str> = line.split('\t').collect();
+    if cols.len() != 9 {
+        return None;
+    }
+    let dev = devices::by_name(cols[1])?;
+    let dev_fp = u64::from_str_radix(cols[2], 16).ok()?;
+    if dev_fp != device_fingerprint(dev) {
+        return None;
+    }
+    let features = if cols[8].is_empty() {
+        Vec::new()
+    } else {
+        cols[8]
+            .split(',')
+            .map(|v| v.parse::<f64>())
+            .collect::<Result<Vec<f64>, _>>()
+            .ok()?
+    };
+    Some(TuneRecord {
+        kernel: cols[0].to_string(),
+        device: dev.name,
+        dev_fp,
+        grid: (cols[3].parse().ok()?, cols[4].parse().ok()?),
+        seconds: cols[5].parse().ok()?,
+        best: match cols[6] {
+            "1" => true,
+            "0" => false,
+            _ => return None,
+        },
+        config: TuningConfig::parse(cols[7]).ok()?,
+        features,
+    })
+}
+
+/// Parse a whole store file, warning on (and skipping) unusable lines.
+pub(crate) fn parse_file(text: &str) -> Vec<TuneRecord> {
+    let mut out = Vec::new();
+    for (lno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_line(line) {
+            Some(r) => out.push(r),
+            None => eprintln!(
+                "warning: skipping unusable tunedb line {}: {line:?}",
+                lno + 1
+            ),
+        }
+    }
+    out
+}
+
+/// Append `records` to the store file (creating it, with header, on first
+/// write). Best effort: serving continues even if the disk write fails.
+pub(crate) fn append(path: &Path, records: &[TuneRecord]) {
+    use std::io::Write as _;
+    if records.is_empty() {
+        return;
+    }
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let fresh = !path.exists();
+    let file = std::fs::OpenOptions::new().create(true).append(true).open(path);
+    match file {
+        Ok(mut f) => {
+            let mut buf = String::new();
+            if fresh {
+                buf.push_str(HEADER);
+            }
+            for r in records {
+                buf.push_str(&render_line(r));
+                buf.push('\n');
+            }
+            if let Err(e) = f.write_all(buf.as_bytes()) {
+                eprintln!("warning: cannot append to tunedb {path:?}: {e}");
+            }
+        }
+        Err(e) => eprintln!("warning: cannot open tunedb {path:?}: {e}"),
+    }
+}
+
+/// Parse the legacy PR-1 warm-start TSV (`kernel device grid_w grid_h
+/// est_seconds config`) into winner records with the current device
+/// fingerprint and no stored features (the importer computes them when
+/// the kernel is a known built-in).
+pub(crate) fn parse_legacy_tsv(text: &str) -> Vec<TuneRecord> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 6 {
+            continue;
+        }
+        let Some(dev) = devices::by_name(cols[1]) else { continue };
+        let (Ok(gw), Ok(gh)) = (cols[2].parse(), cols[3].parse()) else { continue };
+        let Ok(seconds) = cols[4].parse() else { continue };
+        let Ok(config) = TuningConfig::parse(cols[5]) else { continue };
+        out.push(TuneRecord {
+            kernel: cols[0].to_string(),
+            device: dev.name,
+            dev_fp: device_fingerprint(dev),
+            grid: (gw, gh),
+            seconds,
+            best: true,
+            config,
+            features: Vec::new(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::{INTEL_I7, K40};
+
+    fn record(best: bool) -> TuneRecord {
+        let mut config = TuningConfig::default();
+        config.wg = [64, 4];
+        config.coarsen = [4, 1];
+        config.constant_mem.insert("f".into(), true);
+        TuneRecord {
+            kernel: "sepconv_row".to_string(),
+            device: K40.name,
+            dev_fp: device_fingerprint(&K40),
+            grid: (2048, 2048),
+            seconds: 1.25e-4,
+            best,
+            config,
+            features: vec![6.0, 2.0, 2.0, 0.0, 0.5],
+        }
+    }
+
+    #[test]
+    fn line_roundtrip() {
+        for best in [true, false] {
+            let r = record(best);
+            let line = render_line(&r);
+            assert_eq!(parse_line(&line), Some(r), "{line}");
+        }
+    }
+
+    #[test]
+    fn empty_features_roundtrip() {
+        let r = TuneRecord { features: Vec::new(), ..record(true) };
+        assert_eq!(parse_line(&render_line(&r)), Some(r));
+    }
+
+    #[test]
+    fn device_names_with_spaces_roundtrip() {
+        let r = TuneRecord {
+            device: INTEL_I7.name,
+            dev_fp: device_fingerprint(&INTEL_I7),
+            ..record(true)
+        };
+        assert_eq!(parse_line(&render_line(&r)), Some(r));
+    }
+
+    #[test]
+    fn stale_fingerprint_dropped() {
+        let r = TuneRecord { dev_fp: 0xDEAD, ..record(true) };
+        assert_eq!(parse_line(&render_line(&r)), None);
+    }
+
+    #[test]
+    fn malformed_lines_skipped() {
+        let good = render_line(&record(true));
+        let text = format!("# header\n\nnot\tenough\tcols\n{good}\n");
+        let parsed = parse_file(&text);
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0], record(true));
+    }
+
+    #[test]
+    fn fingerprints_distinguish_devices() {
+        assert_ne!(device_fingerprint(&K40), device_fingerprint(&INTEL_I7));
+        assert_eq!(device_fingerprint(&K40), device_fingerprint(&K40));
+    }
+
+    #[test]
+    fn legacy_tsv_parses() {
+        let text = "# kernel\tdevice\tgrid_w\tgrid_h\test_seconds\tconfig\n\
+            sobel\tK40\t64\t64\t1e-4\twg=8x8 px=1x1\n\
+            sobel\tNoSuchDevice\t64\t64\t1e-4\twg=8x8 px=1x1\n";
+        let recs = parse_legacy_tsv(text);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].kernel, "sobel");
+        assert!(recs[0].best);
+        assert_eq!(recs[0].dev_fp, device_fingerprint(&K40));
+    }
+
+    #[test]
+    fn append_and_parse_file() {
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_store_test_{}.tsv", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        append(&path, &[record(true)]);
+        append(&path, &[record(false)]);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("# kernel"), "{text}");
+        let recs = parse_file(&text);
+        assert_eq!(recs.len(), 2);
+        assert!(recs[0].best && !recs[1].best);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -10,7 +10,9 @@ pub mod space;
 
 pub use features::FeatureMap;
 pub use nn::Mlp;
-pub use search::{exhaustive, ml_two_phase, random, MlSearchOpts, TuneResult};
+pub use search::{
+    exhaustive, ml_two_phase, random, seeded, shortlist, MlSearchOpts, TuneResult,
+};
 pub use space::TuningSpace;
 
 use crate::analysis::KernelInfo;
@@ -41,11 +43,32 @@ pub fn tune_on_simulator(
     strategy: &Strategy,
 ) -> TuneResult {
     let space = TuningSpace::enumerate(info, dev);
-    let eval = |cfg: &TuningConfig| {
+    run(&space, info, strategy, simulator_eval(info, dev, grid))
+}
+
+/// The device-model evaluator used by the `*_on_simulator` entry points.
+pub fn simulator_eval<'a>(
+    info: &'a KernelInfo,
+    dev: &'a DeviceSpec,
+    grid: (usize, usize),
+) -> impl FnMut(&TuningConfig) -> f64 + 'a {
+    move |cfg| {
         let km = KernelModel::build(info, cfg);
         predict(dev, &km, grid.0, grid.1).seconds
-    };
-    run(&space, info, strategy, eval)
+    }
+}
+
+/// Tune within an already-enumerated space. Callers that hold a space
+/// and a feature map (the serving layer's knowledge-base tiers try
+/// several search modes against one space) avoid re-enumerating per
+/// attempt.
+pub fn tune_in_space(
+    space: &TuningSpace,
+    info: &KernelInfo,
+    strategy: &Strategy,
+    eval: impl FnMut(&TuningConfig) -> f64,
+) -> TuneResult {
+    run(space, info, strategy, eval)
 }
 
 /// Tune with a caller-provided evaluator (e.g. real execution timing).

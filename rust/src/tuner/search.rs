@@ -101,6 +101,99 @@ pub fn random(
     TuneResult { best, best_time, evals: n, space_size: space.len(), history }
 }
 
+/// Warm-started neighborhood search: rank the whole space by feature
+/// distance to a `seed` configuration (a transfer-tuned prior, e.g. the
+/// winner of the nearest grid in the knowledge base) and execute only
+/// the `budget` nearest candidates. The seed itself, when present in the
+/// space, is at distance zero and is always measured — so the result is
+/// never worse than replaying the prior directly, and usually better
+/// because the neighborhood absorbs the drift between the prior's key
+/// and this one.
+pub fn seeded(
+    space: &TuningSpace,
+    fm: &FeatureMap,
+    seed: &TuningConfig,
+    budget: usize,
+    mut eval: impl FnMut(&TuningConfig) -> f64,
+) -> TuneResult {
+    assert!(!space.is_empty());
+    let budget = budget.max(1);
+    let sf = fm.features(seed);
+    let dist2 = |cfg: &TuningConfig| -> f64 {
+        fm.features(cfg)
+            .iter()
+            .zip(&sf)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    };
+    let mut scored: Vec<(usize, f64)> = space
+        .configs
+        .iter()
+        .enumerate()
+        .map(|(i, cfg)| (i, dist2(cfg)))
+        .collect();
+    scored.sort_by(|a, b| {
+        a.1.partial_cmp(&b.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    let mut best: Option<(TuningConfig, f64)> = None;
+    let mut history = Vec::new();
+    let mut evals = 0;
+    for &(i, _) in scored.iter().take(budget) {
+        let cfg = &space.configs[i];
+        let t = eval(cfg);
+        history.push((cfg.clone(), t));
+        evals += 1;
+        if t.is_finite() && best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
+            best = Some((cfg.clone(), t));
+        }
+    }
+    match best {
+        Some((best, best_time)) => TuneResult {
+            best,
+            best_time,
+            evals,
+            space_size: space.len(),
+            history,
+        },
+        // Nothing valid near the seed (it pointed at an infeasible
+        // corner) — fall back to scanning everything.
+        None => {
+            let mut res = exhaustive(space, eval);
+            res.evals += evals;
+            res
+        }
+    }
+}
+
+/// Execute an explicit candidate list (e.g. the top predictions of a
+/// knowledge-base performance model) and return the best *measured*
+/// configuration. `space_size` is carried through for reporting.
+pub fn shortlist(
+    space_size: usize,
+    candidates: &[TuningConfig],
+    mut eval: impl FnMut(&TuningConfig) -> f64,
+) -> Option<TuneResult> {
+    let mut best: Option<(TuningConfig, f64)> = None;
+    let mut history = Vec::new();
+    for cfg in candidates {
+        let t = eval(cfg);
+        history.push((cfg.clone(), t));
+        if t.is_finite() && best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
+            best = Some((cfg.clone(), t));
+        }
+    }
+    let (best, best_time) = best?;
+    Some(TuneResult {
+        best,
+        best_time,
+        evals: candidates.len(),
+        space_size,
+        history,
+    })
+}
+
 /// The two-phase ML search (paper §4).
 pub fn ml_two_phase(
     space: &TuningSpace,
@@ -265,6 +358,49 @@ mod tests {
         assert_eq!(a.best, b.best);
         assert_eq!(a.best_time, b.best_time);
         assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn seeded_search_finds_optimum_near_a_good_seed() {
+        let (info, space, fm) = setup();
+        let exh = exhaustive(&space, simulator_eval(&info));
+        // Seed with the exhaustive winner itself: the neighborhood search
+        // must rediscover it (distance 0) with a fraction of the evals.
+        let budget = (space.len() / 8).max(8);
+        let res = seeded(&space, &fm, &exh.best, budget, simulator_eval(&info));
+        assert_eq!(res.evals, budget.min(space.len()));
+        assert!(
+            res.best_time <= exh.best_time + 1e-15,
+            "seeded {} vs exhaustive {}",
+            res.best_time,
+            exh.best_time
+        );
+    }
+
+    #[test]
+    fn seeded_search_survives_infeasible_seed_region() {
+        let (_, space, fm) = setup();
+        // Every candidate is invalid: the fallback must still scan the
+        // space and the call must not panic on an all-infinite budget.
+        let only_valid = space.configs.last().unwrap().clone();
+        let res = seeded(&space, &fm, &space.configs[0], 4, |cfg| {
+            if *cfg == only_valid { 1.0 } else { f64::INFINITY }
+        });
+        assert!(res.best_time.is_finite());
+        assert_eq!(res.best, only_valid);
+    }
+
+    #[test]
+    fn shortlist_returns_best_measured() {
+        let (_, space, _) = setup();
+        let cands: Vec<TuningConfig> =
+            space.configs.iter().take(10).cloned().collect();
+        let res = shortlist(space.len(), &cands, |cfg| cfg.wg_threads() as f64)
+            .expect("some candidate is finite");
+        assert_eq!(res.evals, 10);
+        let want = cands.iter().map(|c| c.wg_threads()).min().unwrap();
+        assert_eq!(res.best.wg_threads(), want);
+        assert!(shortlist(space.len(), &[], |_| 1.0).is_none());
     }
 
     #[test]

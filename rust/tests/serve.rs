@@ -16,8 +16,19 @@ fn fast_strategy() -> Strategy {
     Strategy::Random { evals: 40, seed: 13 }
 }
 
-fn service(tuned_path: Option<std::path::PathBuf>, exec: ExecMode) -> Arc<KernelService> {
-    KernelService::new(ServiceConfig { strategy: fast_strategy(), tuned_path, exec })
+/// Service with the knowledge-base transfer/model tiers disabled (zero
+/// budgets): these tests pin the PR-1 plan-cache and exact-warm-start
+/// semantics. The tiers are covered in `tests/tunedb.rs`.
+fn service(db_path: Option<std::path::PathBuf>, exec: ExecMode) -> Arc<KernelService> {
+    KernelService::new(ServiceConfig {
+        strategy: fast_strategy(),
+        db_path,
+        legacy_tsv: None,
+        exec,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+    })
 }
 
 /// Unique temp path per test (tests run concurrently in one process).

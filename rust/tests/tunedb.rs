@@ -1,0 +1,239 @@
+//! Knowledge-base integration: the transfer-tuning acceptance criterion
+//! (a cold grid reaches a near-optimal config with a fraction of the
+//! full search's measured evaluations), the service-level tier wiring,
+//! the legacy-TSV migration shim, and db-backed pipeline scheduling.
+//! Everything is deterministic — device-model evaluations and counters,
+//! never wall-clock.
+
+use std::sync::Arc;
+
+use imagecl::analysis::KernelInfo;
+use imagecl::bench_defs::SEPCONV_ROW;
+use imagecl::devices::{predict, DeviceSpec, KernelModel, INTEL_I7, K40};
+use imagecl::imagecl::frontend;
+use imagecl::serve::{ExecMode, KernelService, ServiceConfig, TuneSource};
+use imagecl::transform::TuningConfig;
+use imagecl::tunedb::TuneDb;
+use imagecl::tuner::{exhaustive, seeded, FeatureMap, Strategy, TuningSpace};
+
+/// Unique temp path per test (tests run concurrently in one process).
+fn temp_db(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "imagecl_tunedb_test_{}_{}.tsv",
+        tag,
+        std::process::id()
+    ))
+}
+
+fn thinned_space(dev: &DeviceSpec) -> (KernelInfo, FeatureMap, TuningSpace) {
+    let info = KernelInfo::analyze(frontend(SEPCONV_ROW).unwrap());
+    let fm = FeatureMap::new(&info);
+    let full = TuningSpace::enumerate(&info, dev);
+    // Thin for test speed, like the tuner's own tests.
+    let step = if cfg!(debug_assertions) { 25 } else { 5 };
+    let configs = full.configs.into_iter().step_by(step).collect();
+    (info, fm, TuningSpace { configs })
+}
+
+fn eval_at<'a>(
+    info: &'a KernelInfo,
+    dev: &'a DeviceSpec,
+    n: usize,
+) -> impl FnMut(&TuningConfig) -> f64 + 'a {
+    move |cfg| {
+        let km = KernelModel::build(info, cfg);
+        predict(dev, &km, n, n).seconds
+    }
+}
+
+/// The PR's acceptance criterion: with a populated knowledge base, a
+/// cold (kernel, device, grid) key reaches a config within 10% of the
+/// full-search winner using ≤ 25% of the full search's measured
+/// evaluations.
+#[test]
+fn cold_grid_transfer_within_10pct_at_quarter_cost() {
+    let (info, fm, space) = thinned_space(&K40);
+
+    // Populate the knowledge base with a tune at a *different* grid.
+    let db = TuneDb::ephemeral();
+    let seed_res = exhaustive(&space, eval_at(&info, &K40, 512));
+    db.record_tune("sepconv_row", &K40, (512, 512), &seed_res, &fm);
+
+    // Full search at the cold grid — the quality/cost baseline.
+    let full = exhaustive(&space, eval_at(&info, &K40, 1024));
+    assert_eq!(full.evals, space.len());
+
+    // Cold-grid query: tier 2 hands back the 512-grid winner as a seed.
+    let (rec, dist) = db
+        .nearest_grid("sepconv_row", K40.name, (1024, 1024))
+        .expect("populated db answers the transfer tier");
+    assert_eq!(rec.grid, (512, 512));
+    assert!(dist > 0.0);
+
+    // Seeded neighborhood search with a quarter-budget ceiling.
+    let budget = (full.evals / 5).max(8);
+    let res = seeded(&space, &fm, &rec.config, budget, eval_at(&info, &K40, 1024));
+
+    assert!(
+        res.evals * 4 <= full.evals,
+        "transfer used {} evals vs full {}",
+        res.evals,
+        full.evals
+    );
+    assert!(
+        res.best_time <= full.best_time * 1.10,
+        "transfer best {} not within 10% of full-search best {} ({})",
+        res.best_time,
+        full.best_time,
+        res.best
+    );
+}
+
+/// Service-level wiring of the same property: a second process (fresh
+/// service, shared db) serving a new grid transfers instead of running
+/// the full cold search, observable in the counters.
+#[test]
+fn service_cold_grid_uses_fewer_evals_than_from_scratch() {
+    let db_path = temp_db("cold_grid");
+    let _ = std::fs::remove_file(&db_path);
+    let cold_evals = 200;
+    let transfer_budget = 32;
+    let config = |db: Option<std::path::PathBuf>| ServiceConfig {
+        strategy: Strategy::Random { evals: cold_evals, seed: 17 },
+        db_path: db,
+        legacy_tsv: None,
+        exec: ExecMode::Simulate,
+        plan_cache_cap: None,
+        transfer_budget,
+        predict_budget: 0,
+    };
+
+    // First process tunes grid 32 from scratch and persists.
+    let first = KernelService::new(config(Some(db_path.clone())));
+    let e = first.plan("sepconv_row", &K40, (32, 32)).unwrap();
+    assert_eq!(e.source, TuneSource::Fresh);
+    assert_eq!(first.stats().search_evals, cold_evals as u64);
+
+    // Second process, new grid: transfer tier, quarter of the evals.
+    let second = KernelService::new(config(Some(db_path.clone())));
+    let e = second.plan("sepconv_row", &K40, (64, 64)).unwrap();
+    assert_eq!(e.source, TuneSource::Transfer);
+    let s = second.stats();
+    assert_eq!(s.tunes, 0, "transfer must replace the full cold search");
+    assert_eq!(s.db_transfers, 1);
+    assert_eq!(s.search_evals, transfer_budget as u64);
+    assert!(s.search_evals * 4 <= cold_evals as u64);
+
+    // And the transfer outcome was recorded: a third service at the same
+    // grid warm-starts exactly.
+    let third = KernelService::new(config(Some(db_path.clone())));
+    let e = third.plan("sepconv_row", &K40, (64, 64)).unwrap();
+    assert_eq!(e.source, TuneSource::WarmStart);
+    assert_eq!(third.stats().search_evals, 0);
+
+    let _ = std::fs::remove_file(&db_path);
+}
+
+/// Migration shim end-to-end: a legacy PR-1 warm-start TSV is folded
+/// into the knowledge base on service startup, so existing deployments
+/// never re-tune their known keys.
+#[test]
+fn legacy_tsv_migrates_into_db_on_startup() {
+    use imagecl::serve::cache::{PlanKey, TunedRecord};
+    use imagecl::serve::TunedStore;
+
+    let legacy = temp_db("legacy_in");
+    let db_path = temp_db("legacy_db");
+    let _ = std::fs::remove_file(&legacy);
+    let _ = std::fs::remove_file(&db_path);
+
+    // A PR-1 deployment's tuned config.
+    let store = TunedStore::open(&legacy);
+    let mut cfg = TuningConfig::default();
+    cfg.wg = [16, 8];
+    cfg.coarsen = [2, 1];
+    cfg.constant_mem.insert("f".into(), true);
+    store.insert(
+        PlanKey { kernel: "sepconv_row".to_string(), device: K40.name, grid: (40, 40) },
+        TunedRecord { config: cfg.clone(), est_seconds: 2.5e-4 },
+    );
+
+    let svc = KernelService::new(ServiceConfig {
+        strategy: Strategy::Random { evals: 40, seed: 23 },
+        db_path: Some(db_path.clone()),
+        legacy_tsv: Some(legacy.clone()),
+        exec: ExecMode::Simulate,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+    });
+    assert_eq!(svc.tuned_len(), 1, "legacy config visible in the db");
+    let entry = svc.plan("sepconv_row", &K40, (40, 40)).unwrap();
+    assert_eq!(entry.source, TuneSource::WarmStart);
+    assert_eq!(entry.config, cfg);
+    assert_eq!(svc.stats().tunes, 0);
+
+    // The migrated record persists in the db file itself: a service
+    // without the legacy file still warm-starts.
+    let svc2 = KernelService::new(ServiceConfig {
+        strategy: Strategy::Random { evals: 40, seed: 23 },
+        db_path: Some(db_path.clone()),
+        legacy_tsv: None,
+        exec: ExecMode::Simulate,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+    });
+    let entry = svc2.plan("sepconv_row", &K40, (40, 40)).unwrap();
+    assert_eq!(entry.source, TuneSource::WarmStart);
+    assert_eq!(entry.config, cfg);
+
+    let _ = std::fs::remove_file(&legacy);
+    let _ = std::fs::remove_file(&db_path);
+}
+
+/// The knowledge base feeds the pipeline scheduler without ever tuning:
+/// recorded estimates drive placement, unknown keys fall back to the
+/// naive model.
+#[test]
+fn db_backed_schedule_needs_no_tuner() {
+    use imagecl::pipeline::{schedule_with_db, Pipeline, Port};
+    use imagecl::runtime::Tensor;
+
+    // Accumulate knowledge through a service.
+    let svc: Arc<KernelService> = KernelService::new(ServiceConfig {
+        strategy: Strategy::Random { evals: 60, seed: 29 },
+        db_path: None,
+        legacy_tsv: None,
+        exec: ExecMode::Simulate,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+    });
+    for kernel in ["sobel", "harris"] {
+        svc.plan(kernel, &K40, (256, 256)).unwrap();
+        svc.plan(kernel, &INTEL_I7, (256, 256)).unwrap();
+    }
+
+    let mut p = Pipeline::new();
+    let img = p.source("img", Tensor::zeros(4, 4));
+    let sob = p.filter("sobel", &[p.port(img)]);
+    let har = p.filter(
+        "harris",
+        &[Port { node: sob, port: 0 }, Port { node: sob, port: 1 }],
+    );
+    p.output(p.port(har));
+
+    let tunes_before = svc.stats().tunes;
+    let sched = schedule_with_db(
+        &p,
+        &[&K40, &INTEL_I7],
+        256,
+        svc.db(),
+        &TuningConfig::default(),
+    );
+    assert_eq!(sched.placements.len(), 2);
+    assert!(sched.makespan_s.is_finite() && sched.makespan_s > 0.0);
+    // Scheduling read recorded estimates — no tuner invocations at all.
+    assert_eq!(svc.stats().tunes, tunes_before);
+}
