@@ -1,0 +1,14 @@
+//! Execution-engine benchmark (`cargo bench --bench exec`): the gallery
+//! kernels — blur headline — at 1024×1024 through both the bytecode VM
+//! and the tree-walking oracle. Writes the repo-root `BENCH_exec.json`
+//! (pixels/sec per engine, VM speedup, bit-identity verdict) and exits
+//! non-zero if the engines diverge. `imagecl bench` is the CLI face of
+//! the same harness; CI runs it with `--smoke`.
+
+fn main() {
+    let opts = imagecl::exec::bench::BenchOpts::default();
+    if let Err(e) = imagecl::exec::bench::run_and_write(&opts) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -95,6 +95,40 @@ pub fn classify(kernel: &KernelFn) -> HashMap<String, Access> {
     acc
 }
 
+/// Write-set ownership: for each buffer parameter, `true` iff **every**
+/// write to it targets exactly the work-item's own grid point — `[idx]`
+/// for 1-D arrays, `[idx][idy]` for images, with no offsets or scaling.
+///
+/// This is the disjointness half of the parallel-execution proof used by
+/// the bytecode VM's NDRange driver: distinct logical threads own
+/// distinct grid points, so owned writes from different work-groups can
+/// never touch the same element and groups may execute concurrently.
+/// (The other half — nothing written is ever read — comes from
+/// [`classify`]: the buffer must be [`Access::WriteOnly`].)
+pub fn owned_writes(kernel: &KernelFn) -> HashMap<String, bool> {
+    let mut owned: HashMap<String, bool> = kernel
+        .params
+        .iter()
+        .filter(|p| p.ty.is_buffer())
+        .map(|p| (p.name.clone(), true))
+        .collect();
+    kernel.walk_stmts(&mut |s| {
+        if let Stmt::Assign { lhs: LValue::Index { base, indices }, .. } = s {
+            let ok = match indices.as_slice() {
+                [x] => *x == Expr::ident("idx"),
+                [x, y] => *x == Expr::ident("idx") && *y == Expr::ident("idy"),
+                _ => false,
+            };
+            if !ok {
+                if let Some(e) = owned.get_mut(base) {
+                    *e = false;
+                }
+            }
+        }
+    });
+    owned
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,6 +136,10 @@ mod tests {
 
     fn classify_src(src: &str) -> HashMap<String, Access> {
         classify(&Program::parse(src).unwrap().kernel)
+    }
+
+    fn owned_src(src: &str) -> HashMap<String, bool> {
+        owned_writes(&Program::parse(src).unwrap().kernel)
     }
 
     #[test]
@@ -150,6 +188,41 @@ mod tests {
         );
         assert_eq!(acc["m"], Access::ReadOnly);
         assert_eq!(acc["a"], Access::WriteOnly);
+    }
+
+    #[test]
+    fn owned_writes_detects_own_pixel_stores() {
+        let o = owned_src(
+            "#pragma imcl grid(in)\n\
+             void k(Image<float> in, Image<float> out) {\n\
+               out[idx][idy] = in[idx + 1][idy];\n\
+             }",
+        );
+        // `out` only ever written at the thread's own pixel; `in` is
+        // never written (vacuously owned).
+        assert!(o["out"]);
+        assert!(o["in"]);
+    }
+
+    #[test]
+    fn offset_or_scaled_writes_are_not_owned() {
+        let o = owned_src(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, Image<float> b, float* c) {\n\
+               a[idx + 1][idy] = 0.0f;\n\
+               b[idx][idy + idy] = 0.0f;\n\
+               c[idx + 1] = 0.0f;\n\
+             }",
+        );
+        assert!(!o["a"]);
+        assert!(!o["b"]);
+        assert!(!o["c"]);
+    }
+
+    #[test]
+    fn one_d_own_index_is_owned() {
+        let o = owned_src("#pragma imcl grid(16, 1)\nvoid k(float* a) { a[idx] = 1.0f; }");
+        assert!(o["a"]);
     }
 
     #[test]

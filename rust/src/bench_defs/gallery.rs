@@ -7,7 +7,25 @@
 //! `rust/tests/exec_sweep.rs`-style tests (see `tests` below and the
 //! integration suite) checks every tuning configuration against it.
 
-use crate::exec::ImageBuf;
+use std::collections::BTreeMap;
+
+use crate::exec::{Arg, Buffer, ImageBuf, Value};
+use crate::imagecl::ScalarType;
+
+use super::synth_image;
+
+/// 3×3 box blur (constant-0 boundary) — the canonical stencil benchmark
+/// (`imagecl bench` / `BENCH_exec.json` headline kernel).
+pub const BLUR: &str = r#"
+#pragma imcl grid(in)
+void blur(Image<float> in, Image<float> out) {
+  float sum = 0.0f;
+  for (int i = -1; i < 2; i++) {
+    for (int j = -1; j < 2; j++) { sum += in[idx + i][idy + j]; }
+  }
+  out[idx][idy] = sum / 9.0f;
+}
+"#;
 
 /// Grayscale threshold (per-pixel, no stencil — point kernels must also
 /// survive every transformation).
@@ -102,7 +120,8 @@ void blend(Image<float> a, Image<float> b, Image<float> out, float* w) {
 "#;
 
 /// All gallery kernels with display names.
-pub const GALLERY: [(&str, &str); 7] = [
+pub const GALLERY: [(&str, &str); 8] = [
+    ("blur", BLUR),
     ("threshold", THRESHOLD),
     ("erode", ERODE),
     ("dilate", DILATE),
@@ -112,9 +131,80 @@ pub const GALLERY: [(&str, &str); 7] = [
     ("blend", BLEND),
 ];
 
+/// Source text of a gallery kernel.
+pub fn gallery_source(name: &str) -> Option<&'static str> {
+    GALLERY.iter().find(|(n, _)| *n == name).map(|(_, src)| *src)
+}
+
+/// Build the canonical argument map for a gallery kernel at grid `w`×`h`
+/// (inputs synthetic, outputs zeroed). For `downsample` the grid is the
+/// *output* size and the input image is 2× larger.
+pub fn gallery_workload(name: &str, w: usize, h: usize, seed: u64) -> BTreeMap<String, Arg> {
+    let img = |s: u64| Arg::Image(synth_image(ScalarType::F32, w, h, s));
+    let out = || Arg::Image(ImageBuf::new(ScalarType::F32, w, h));
+    let mut args = BTreeMap::new();
+    match name {
+        "blur" | "erode" | "dilate" | "unsharp" | "threshold" => {
+            args.insert("in".to_string(), img(seed));
+            args.insert("out".to_string(), out());
+            if name == "unsharp" {
+                args.insert("amount".to_string(), Arg::Scalar(Value::F(0.7)));
+            }
+            if name == "threshold" {
+                args.insert("level".to_string(), Arg::Scalar(Value::F(128.0)));
+            }
+        }
+        "grad_mag" => {
+            args.insert("dx".to_string(), img(seed));
+            args.insert("dy".to_string(), img(seed ^ 0x5EED));
+            args.insert("out".to_string(), out());
+        }
+        "downsample" => {
+            args.insert(
+                "in".to_string(),
+                Arg::Image(synth_image(ScalarType::F32, 2 * w, 2 * h, seed)),
+            );
+            args.insert("out".to_string(), out());
+        }
+        "blend" => {
+            args.insert("a".to_string(), img(seed));
+            args.insert("b".to_string(), img(seed ^ 0xB1E4D));
+            args.insert("out".to_string(), out());
+            args.insert(
+                "w".to_string(),
+                Arg::Array(Buffer::from_f64(ScalarType::F32, vec![0.25, 0.75])),
+            );
+        }
+        other => panic!("unknown gallery kernel {other:?}"),
+    }
+    args
+}
+
 // ---------------------------------------------------------------------
 // References
 // ---------------------------------------------------------------------
+
+/// Blur reference mirroring the kernel's f32 arithmetic exactly: the
+/// `float sum` accumulator rounds through f32 at every step.
+pub fn ref_blur(input: &ImageBuf) -> Vec<f64> {
+    let (w, h) = (input.w as i64, input.h as i64);
+    let mut out = vec![0.0; (w * h) as usize];
+    for y in 0..h {
+        for x in 0..w {
+            let mut sum = 0.0f64;
+            for i in -1..2 {
+                for j in -1..2 {
+                    let (xx, yy) = (x + i, y + j);
+                    if xx >= 0 && xx < w && yy >= 0 && yy < h {
+                        sum = (sum + input.get(xx as usize, yy as usize)) as f32 as f64;
+                    }
+                }
+            }
+            out[(y * w + x) as usize] = (sum / 9.0) as f32 as f64;
+        }
+    }
+    out
+}
 
 pub fn ref_threshold(input: &ImageBuf, level: f64) -> Vec<f64> {
     input
@@ -219,6 +309,40 @@ mod tests {
     use super::*;
     use crate::analysis::KernelInfo;
     use crate::imagecl::frontend;
+
+    #[test]
+    fn blur_matches_reference() {
+        use crate::transform::{lower, TuningConfig};
+        let (w, h) = (17, 13);
+        let info = KernelInfo::analyze(frontend(BLUR).unwrap());
+        let plan = lower(&info, &TuningConfig::default()).unwrap();
+        let mut args = gallery_workload("blur", w, h, 5);
+        crate::exec::execute(&plan, &mut args, (w, h)).unwrap();
+        let input = synth_image(ScalarType::F32, w, h, 5);
+        let want = ref_blur(&input);
+        let out = match &args["out"] {
+            Arg::Image(i) => &i.buf.data,
+            _ => unreachable!(),
+        };
+        for i in 0..want.len() {
+            assert!(
+                (out[i] - want[i]).abs() < 1e-4,
+                "blur differs at {i}: {} vs {}",
+                out[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gallery_workloads_cover_every_kernel() {
+        for (name, _) in GALLERY {
+            let args = gallery_workload(name, 8, 6, 3);
+            assert!(!args.is_empty(), "{name}");
+        }
+        assert!(gallery_source("blur").is_some());
+        assert!(gallery_source("nope").is_none());
+    }
 
     #[test]
     fn gallery_compiles_and_analyzes() {

@@ -1,0 +1,283 @@
+//! The execution-engine benchmark behind `imagecl bench` and
+//! `benches/exec.rs`: run the gallery kernels through both engines — the
+//! bytecode VM and the tree-walking oracle — verify the outputs are
+//! bit-identical, and report throughput (pixels/sec) plus the VM's
+//! speedup as `BENCH_exec.json`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::analysis::KernelInfo;
+use crate::bench_defs::gallery::{gallery_workload, GALLERY};
+use crate::imagecl::frontend;
+use crate::transform::{lower, TuningConfig};
+
+use super::buffer::Arg;
+use super::machine::{Engine, PreparedKernel};
+
+/// Benchmark options.
+#[derive(Debug, Clone)]
+pub struct BenchOpts {
+    /// Grid (and image) size, `n`×`n`.
+    pub size: usize,
+    /// Timed repetitions per engine (best-of).
+    pub iters: usize,
+    /// Kernels to run (gallery names); empty = the whole gallery.
+    pub kernels: Vec<String>,
+    /// Output path for the JSON report; `None` = repo-root
+    /// `BENCH_exec.json`.
+    pub out: Option<PathBuf>,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts { size: 1024, iters: 3, kernels: Vec::new(), out: None }
+    }
+}
+
+impl BenchOpts {
+    /// CI smoke configuration: small grid, single repetition — exercises
+    /// both engines and the divergence check without burning minutes.
+    pub fn smoke() -> BenchOpts {
+        BenchOpts { size: 128, iters: 1, ..Default::default() }
+    }
+}
+
+/// One kernel's measurements.
+#[derive(Debug, Clone)]
+pub struct KernelBench {
+    pub name: String,
+    pub pixels: usize,
+    /// Best-of-`iters` wall time per engine, seconds.
+    pub tree_secs: f64,
+    pub vm_secs: f64,
+    /// Work-groups proven independent → VM ran groups in parallel.
+    pub parallel: bool,
+    /// VM output was bit-identical to the tree-walker's.
+    pub identical: bool,
+}
+
+impl KernelBench {
+    pub fn tree_pix_per_sec(&self) -> f64 {
+        self.pixels as f64 / self.tree_secs
+    }
+
+    pub fn vm_pix_per_sec(&self) -> f64 {
+        self.pixels as f64 / self.vm_secs
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.tree_secs / self.vm_secs
+    }
+}
+
+/// The full benchmark report.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub size: usize,
+    pub threads: usize,
+    pub kernels: Vec<KernelBench>,
+}
+
+impl BenchReport {
+    pub fn all_identical(&self) -> bool {
+        self.kernels.iter().all(|k| k.identical)
+    }
+
+    /// The headline number: the blur kernel's VM speedup over the
+    /// tree-walker (acceptance: ≥ 5× at 1024² on a multi-core box).
+    pub fn blur_speedup(&self) -> Option<f64> {
+        self.kernels.iter().find(|k| k.name == "blur").map(KernelBench::speedup)
+    }
+
+    /// Hand-rolled JSON (the offline crate set has no serde).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{{");
+        let _ = writeln!(s, "  \"size\": [{}, {}],", self.size, self.size);
+        let _ = writeln!(s, "  \"threads\": {},", self.threads);
+        let blur = self
+            .blur_speedup()
+            .map(|v| format!("{v:.3}"))
+            .unwrap_or_else(|| "null".to_string());
+        let _ = writeln!(s, "  \"blur_speedup\": {blur},");
+        let _ = writeln!(s, "  \"all_identical\": {},", self.all_identical());
+        let _ = writeln!(s, "  \"kernels\": [");
+        for (i, k) in self.kernels.iter().enumerate() {
+            let _ = writeln!(s, "    {{");
+            let _ = writeln!(s, "      \"name\": \"{}\",", k.name);
+            let _ = writeln!(s, "      \"pixels\": {},", k.pixels);
+            let _ = writeln!(s, "      \"tree_secs\": {:.6},", k.tree_secs);
+            let _ = writeln!(s, "      \"vm_secs\": {:.6},", k.vm_secs);
+            let _ = writeln!(s, "      \"tree_pix_per_sec\": {:.0},", k.tree_pix_per_sec());
+            let _ = writeln!(s, "      \"vm_pix_per_sec\": {:.0},", k.vm_pix_per_sec());
+            let _ = writeln!(s, "      \"speedup\": {:.3},", k.speedup());
+            let _ = writeln!(s, "      \"parallel\": {},", k.parallel);
+            let _ = writeln!(s, "      \"identical\": {}", k.identical);
+            let _ = writeln!(s, "    }}{}", if i + 1 < self.kernels.len() { "," } else { "" });
+        }
+        let _ = writeln!(s, "  ]");
+        let _ = writeln!(s, "}}");
+        s
+    }
+
+    /// Human-readable table.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "execution-engine benchmark — {0}×{0}, {1} thread(s)",
+            self.size, self.threads
+        );
+        let _ = writeln!(
+            s,
+            "{:<12} {:>14} {:>14} {:>9}  {:>8}  {}",
+            "kernel", "tree (Mpix/s)", "VM (Mpix/s)", "speedup", "parallel", "identical"
+        );
+        for k in &self.kernels {
+            let _ = writeln!(
+                s,
+                "{:<12} {:>14.2} {:>14.2} {:>8.2}x  {:>8}  {}",
+                k.name,
+                k.tree_pix_per_sec() / 1e6,
+                k.vm_pix_per_sec() / 1e6,
+                k.speedup(),
+                if k.parallel { "yes" } else { "no" },
+                if k.identical { "yes" } else { "DIVERGED" }
+            );
+        }
+        s
+    }
+}
+
+/// Default report path: the repository root's `BENCH_exec.json`.
+pub fn default_report_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_exec.json")
+}
+
+/// Extract every image/array payload for the bit-identity check.
+fn payloads(args: &BTreeMap<String, Arg>) -> Vec<(String, Vec<u64>)> {
+    args.iter()
+        .filter_map(|(name, a)| {
+            let data = match a {
+                Arg::Image(img) => &img.buf.data,
+                Arg::Array(b) => &b.data,
+                Arg::Scalar(_) => return None,
+            };
+            Some((name.clone(), data.iter().map(|v| v.to_bits()).collect()))
+        })
+        .collect()
+}
+
+/// Run the benchmark. Unknown kernel names are an error; divergence is
+/// reported, not fatal (callers decide — the CLI exits non-zero).
+pub fn run(opts: &BenchOpts) -> Result<BenchReport, String> {
+    let n = opts.size;
+    let names: Vec<&str> = if opts.kernels.is_empty() {
+        GALLERY.iter().map(|(name, _)| *name).collect()
+    } else {
+        opts.kernels.iter().map(String::as_str).collect()
+    };
+    let mut kernels = Vec::new();
+    for name in names {
+        let Some(src) = crate::bench_defs::gallery::gallery_source(name) else {
+            return Err(format!(
+                "unknown gallery kernel {name:?} (known: {})",
+                GALLERY.map(|(n, _)| n).join(", ")
+            ));
+        };
+        let info = KernelInfo::analyze(frontend(src).map_err(|e| e.to_string())?);
+        let plan = lower(&info, &TuningConfig::default()).map_err(|e| e.to_string())?;
+        let args = gallery_workload(name, n, n, 42);
+        let prepared =
+            PreparedKernel::prepare(&plan, &args, (n, n)).map_err(|e| e.to_string())?;
+
+        let time_engine = |engine: Engine| -> Result<(f64, Vec<(String, Vec<u64>)>), String> {
+            let mut best = f64::INFINITY;
+            let mut out = Vec::new();
+            for _ in 0..opts.iters.max(1) {
+                let mut a = gallery_workload(name, n, n, 42);
+                let t0 = Instant::now();
+                prepared
+                    .run_with(&mut a, engine)
+                    .map_err(|e| format!("{name} on {engine:?}: {e}"))?;
+                let dt = t0.elapsed().as_secs_f64();
+                if dt < best {
+                    best = dt;
+                }
+                out = payloads(&a);
+            }
+            Ok((best, out))
+        };
+
+        let (tree_secs, tree_out) = time_engine(Engine::TreeWalk)?;
+        let (vm_secs, vm_out) = time_engine(Engine::Vm)?;
+        kernels.push(KernelBench {
+            name: name.to_string(),
+            pixels: n * n,
+            tree_secs,
+            vm_secs,
+            parallel: plan.parallel_groups,
+            identical: tree_out == vm_out,
+        });
+    }
+    Ok(BenchReport {
+        size: n,
+        threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
+        kernels,
+    })
+}
+
+/// Run, print, and persist the report; `Err` on engine divergence (the
+/// differential guarantee is part of the benchmark's contract).
+pub fn run_and_write(opts: &BenchOpts) -> Result<BenchReport, String> {
+    let report = run(opts)?;
+    print!("{}", report.render());
+    let path = opts.out.clone().unwrap_or_else(default_report_path);
+    write_report(&report, &path)?;
+    println!("wrote {}", path.display());
+    if !report.all_identical() {
+        return Err("VM and tree-walker outputs diverged (see report)".to_string());
+    }
+    Ok(report)
+}
+
+fn write_report(report: &BenchReport, path: &Path) -> Result<(), String> {
+    std::fs::write(path, report.to_json())
+        .map_err(|e| format!("cannot write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_bench_runs_and_matches() {
+        let opts = BenchOpts {
+            size: 33,
+            iters: 1,
+            kernels: vec!["blur".to_string(), "blend".to_string()],
+            out: None,
+        };
+        let report = run(&opts).unwrap();
+        assert_eq!(report.kernels.len(), 2);
+        assert!(report.all_identical(), "{}", report.render());
+        assert!(report.blur_speedup().is_some());
+        let json = report.to_json();
+        assert!(json.contains("\"blur\""), "{json}");
+        assert!(json.contains("\"all_identical\": true"), "{json}");
+    }
+
+    #[test]
+    fn unknown_kernel_is_error() {
+        let opts = BenchOpts {
+            kernels: vec!["nope".to_string()],
+            ..BenchOpts::smoke()
+        };
+        assert!(run(&opts).is_err());
+    }
+}

@@ -1,4 +1,4 @@
-//! The NDRange interpreter: execute a [`KernelPlan`] with full OpenCL
+//! The NDRange execution driver: run a [`KernelPlan`] with full OpenCL
 //! execution-model emulation (work-groups, work-items, barrier-separated
 //! phases, `__local` arrays).
 //!
@@ -8,9 +8,20 @@
 //! and is caught by the equivalence tests, exactly as a wrong OpenCL
 //! kernel would be on real hardware. All accesses are bounds-checked.
 //!
-//! Plans are compiled once per launch to the slot-resolved IR of
-//! [`super::compiled`] (§Perf: ~40× over the original string-resolving
-//! interpreter), then driven over the NDRange here.
+//! Two engines share this driver (selectable via [`Engine`], default
+//! [`Engine::Auto`], overridable with `IMAGECL_EXEC=tree|vm`):
+//!
+//! * the **bytecode VM** ([`super::vm`]) — plans are compiled through the
+//!   slot-resolved IR of [`super::compiled`] down to flat, register-based
+//!   bytecode and executed with work-groups in parallel when the
+//!   write-set analysis proved them independent. This is the production
+//!   path (`PreparedKernel::run`, the serving workers, tuner
+//!   measurements).
+//! * the **tree-walker** (the [`Machine`] in this module, ~40× over the
+//!   original string-resolving interpreter) — retained as the
+//!   *differential oracle*: always serial, always `Value`-typed, the
+//!   reference the VM must match bit-for-bit (`tests/vm_differential.rs`)
+//!   and the fallback for the rare plans the VM cannot type statically.
 
 use std::collections::{BTreeMap, HashMap};
 
@@ -19,6 +30,7 @@ use crate::transform::clir::*;
 
 use super::buffer::{Arg, Buffer, Value};
 use super::compiled::{CExpr, CStmt, CompiledPlan, Compiler, Fn1, Fn2, *};
+use super::vm::{self, VmProgram};
 
 /// Runtime error (all of these indicate a compiler bug or a bad launch).
 #[derive(Debug, thiserror::Error)]
@@ -42,12 +54,44 @@ pub enum ExecError {
 }
 
 /// Iteration cap for `while` loops.
-const MAX_WHILE: usize = 1 << 24;
+pub(crate) const MAX_WHILE: usize = 1 << 24;
+
+/// Which execution engine drives the NDRange.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Engine {
+    /// The bytecode VM when the plan lowered to bytecode (and the
+    /// argument buffers match the plan's element types), the tree-walker
+    /// otherwise. `IMAGECL_EXEC=tree` forces the oracle,
+    /// `IMAGECL_EXEC=vm` insists on the VM (erroring where `Auto` would
+    /// fall back).
+    #[default]
+    Auto,
+    /// The bytecode VM, hard: executing a plan the VM cannot run is an
+    /// error rather than a silent fallback (benchmarks and differential
+    /// tests must know which engine ran).
+    Vm,
+    /// The serial tree-walking interpreter — the differential oracle.
+    TreeWalk,
+}
+
+impl Engine {
+    /// The `IMAGECL_EXEC` environment override applied to `Auto`.
+    fn resolve(self) -> Engine {
+        if self != Engine::Auto {
+            return self;
+        }
+        match std::env::var("IMAGECL_EXEC").as_deref() {
+            Ok("tree") => Engine::TreeWalk,
+            Ok("vm") => Engine::Vm,
+            _ => Engine::Auto,
+        }
+    }
+}
 
 /// A buffer during execution: either a borrowed argument or a per-group
 /// local array. Images execute through their backing `Buffer` plus
 /// extent (for texture bounds checks).
-enum BufSlot {
+pub(crate) enum BufSlot {
     Array(Buffer),
     Image { w: usize, h: usize, buf: Buffer },
     /// Local scratch (recreated per work-group).
@@ -55,14 +99,14 @@ enum BufSlot {
 }
 
 impl BufSlot {
-    fn buffer(&self) -> &Buffer {
+    pub(crate) fn buffer(&self) -> &Buffer {
         match self {
             BufSlot::Array(b) | BufSlot::Local { buf: b } => b,
             BufSlot::Image { buf, .. } => buf,
         }
     }
 
-    fn buffer_mut(&mut self) -> &mut Buffer {
+    pub(crate) fn buffer_mut(&mut self) -> &mut Buffer {
         match self {
             BufSlot::Array(b) | BufSlot::Local { buf: b } => b,
             BufSlot::Image { buf, .. } => buf,
@@ -134,9 +178,24 @@ pub fn execute(
     args: &mut BTreeMap<String, Arg>,
     grid: (usize, usize),
 ) -> Result<(), ExecError> {
+    execute_with(plan, args, grid, Engine::Auto)
+}
+
+/// [`execute`] on an explicitly chosen engine (benchmarks and the
+/// differential oracle tests).
+pub fn execute_with(
+    plan: &KernelPlan,
+    args: &mut BTreeMap<String, Arg>,
+    grid: (usize, usize),
+    engine: Engine,
+) -> Result<(), ExecError> {
     let scalar_vals = resolve_scalars(plan, args, grid)?;
     let compiled = Compiler::compile(plan, &scalar_vals)?;
-    run_compiled(plan, &compiled, args, grid)
+    let vm = match engine.resolve() {
+        Engine::TreeWalk => None,
+        _ => VmProgram::build(plan, &compiled),
+    };
+    run_compiled(plan, &compiled, vm.as_ref(), args, grid, engine)
 }
 
 /// A kernel plan compiled once for a fixed launch shape, reusable across
@@ -152,6 +211,9 @@ pub fn execute(
 pub struct PreparedKernel {
     plan: KernelPlan,
     compiled: CompiledPlan,
+    /// Bytecode lowering of `compiled` (`None` for the rare plans the VM
+    /// cannot type statically — those run on the tree-walker).
+    vm: Option<VmProgram>,
     scalar_vals: HashMap<String, Value>,
     grid: (usize, usize),
 }
@@ -166,7 +228,8 @@ impl PreparedKernel {
     ) -> Result<PreparedKernel, ExecError> {
         let scalar_vals = resolve_scalars(plan, args, grid)?;
         let compiled = Compiler::compile(plan, &scalar_vals)?;
-        Ok(PreparedKernel { plan: plan.clone(), compiled, scalar_vals, grid })
+        let vm = VmProgram::build(plan, &compiled);
+        Ok(PreparedKernel { plan: plan.clone(), compiled, vm, scalar_vals, grid })
     }
 
     pub fn grid(&self) -> (usize, usize) {
@@ -177,9 +240,23 @@ impl PreparedKernel {
         &self.plan
     }
 
+    /// Did the plan lower to bytecode (the serving/tuning fast path)?
+    pub fn has_vm(&self) -> bool {
+        self.vm.is_some()
+    }
+
     /// Execute the prepared kernel on a fresh argument set of the same
     /// launch shape.
     pub fn run(&self, args: &mut BTreeMap<String, Arg>) -> Result<(), ExecError> {
+        self.run_with(args, Engine::Auto)
+    }
+
+    /// [`Self::run`] on an explicitly chosen engine.
+    pub fn run_with(
+        &self,
+        args: &mut BTreeMap<String, Arg>,
+        engine: Engine,
+    ) -> Result<(), ExecError> {
         let scalar_vals = resolve_scalars(&self.plan, args, self.grid)?;
         if scalar_vals != self.scalar_vals {
             return Err(ExecError::Other(format!(
@@ -188,7 +265,7 @@ impl PreparedKernel {
                 self.plan.name
             )));
         }
-        run_compiled(&self.plan, &self.compiled, args, self.grid)
+        run_compiled(&self.plan, &self.compiled, self.vm.as_ref(), args, self.grid, engine)
     }
 }
 
@@ -198,8 +275,10 @@ impl PreparedKernel {
 fn run_compiled(
     plan: &KernelPlan,
     compiled: &CompiledPlan,
+    vm: Option<&VmProgram>,
     args: &mut BTreeMap<String, Arg>,
     grid: (usize, usize),
+    engine: Engine,
 ) -> Result<(), ExecError> {
     // Move buffers out of the argument map into dense slots (plan buffers
     // first, locals after — matching the compiler's indices).
@@ -215,11 +294,33 @@ fn run_compiled(
         });
     }
     for l in &plan.locals {
-        // Allocated per work-group inside run_ndrange.
+        // Allocated by the engine drivers (once per launch / per worker).
         bufs.push(BufSlot::Local { buf: Buffer::new(l.elem, 0) });
     }
 
-    let result = run_ndrange(plan, compiled, &mut bufs, grid);
+    let vm_ok = vm.is_some_and(|p| vm::args_match(p, &bufs));
+    let result = match engine.resolve() {
+        Engine::TreeWalk => run_ndrange(plan, compiled, &mut bufs, grid),
+        Engine::Vm => {
+            if vm_ok {
+                vm::run_ndrange(plan, compiled, vm.unwrap(), &mut bufs, grid)
+            } else {
+                Err(ExecError::Other(format!(
+                    "plan `{}` is not executable on the bytecode VM \
+                     (unsupported construct or argument element-type \
+                     mismatch); use Engine::Auto or Engine::TreeWalk",
+                    plan.name
+                )))
+            }
+        }
+        Engine::Auto => {
+            if vm_ok {
+                vm::run_ndrange(plan, compiled, vm.unwrap(), &mut bufs, grid)
+            } else {
+                run_ndrange(plan, compiled, &mut bufs, grid)
+            }
+        }
+    };
 
     // Move argument buffers back (even on error, so callers keep data).
     for (i, b) in plan.buffers.iter().enumerate() {
@@ -252,12 +353,17 @@ fn run_ndrange(
         slots: vec![Value::I(0); compiled.n_slots],
     };
 
+    // Local scratch: allocated once per launch (the group-shape and phase
+    // set are fixed), zero-reset between groups — fresh-allocation
+    // semantics without a per-group trip through the allocator.
+    for (li, l) in plan.locals.iter().enumerate() {
+        m.bufs[n_args + li] = BufSlot::Local { buf: Buffer::new(l.elem, l.len) };
+    }
+
     for grp_y in 0..groups[1] {
         for grp_x in 0..groups[0] {
-            // Fresh local memory per work-group.
-            for (li, l) in plan.locals.iter().enumerate() {
-                m.bufs[n_args + li] =
-                    BufSlot::Local { buf: Buffer::new(l.elem, l.len) };
+            for li in 0..plan.locals.len() {
+                m.bufs[n_args + li].buffer_mut().data.fill(0.0);
             }
             m.slots[SLOT_GRP_X as usize] = Value::I(grp_x as i64);
             m.slots[SLOT_GRP_Y as usize] = Value::I(grp_y as i64);

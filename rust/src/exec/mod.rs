@@ -3,10 +3,33 @@
 //! Executes candidate implementations ([`crate::transform::KernelPlan`])
 //! under full OpenCL NDRange emulation — the correctness oracle for every
 //! transformation on this GPU-less testbed (DESIGN.md §2).
+//!
+//! Two engines implement the same semantics:
+//!
+//! * **Bytecode VM** ([`vm`]) — plans lower through the slot-resolved IR
+//!   of [`compiled`] into flat, register-based bytecode (typed i64/f64
+//!   register files, resolved buffer indices) and execute work-groups in
+//!   parallel when the write-set analysis proved them independent. This
+//!   is the default path: `PreparedKernel::run`, the serving workers and
+//!   tuner measurements all go through it.
+//! * **Tree-walker** ([`machine`]'s `Machine`) — the original serial
+//!   interpreter, retained deliberately as the *differential oracle*: the
+//!   VM must produce bit-identical output (`tests/vm_differential.rs`
+//!   sweeps every gallery kernel × config grid), and the rare plan the VM
+//!   cannot type statically falls back to it. Force it with
+//!   `Engine::TreeWalk` or `IMAGECL_EXEC=tree`.
+//!
+//! `imagecl bench` / `benches/exec.rs` ([`bench`]) measure one engine
+//! against the other and write `BENCH_exec.json`.
 
+pub mod bench;
 pub mod buffer;
 pub mod compiled;
 pub mod machine;
+pub mod vm;
 
 pub use buffer::{Arg, Buffer, ImageBuf, Value};
-pub use machine::{execute, resolve_scalars, ExecError, PreparedKernel};
+pub use machine::{
+    execute, execute_with, resolve_scalars, Engine, ExecError, PreparedKernel,
+};
+pub use vm::VmProgram;

@@ -1,0 +1,1410 @@
+//! The bytecode VM: a flat, register-based execution engine for compiled
+//! kernel plans (§Perf, stage 2).
+//!
+//! [`super::compiled`] already resolves names to slots; this module lowers
+//! that tree IR one stage further into straight-line bytecode over *typed*
+//! register files — a `i64` file and a `f64` file — with all control flow
+//! as jumps. The hot loop then has:
+//!
+//! * no `Value` enum dispatch (operand classes are resolved statically,
+//!   mirroring the dynamic int/float promotion rules exactly);
+//! * no recursion or `Box` chasing (one linear `match` over ops);
+//! * resolved buffer indices and raw `f64` loads/stores (still
+//!   bounds-checked — an OOB access is an [`ExecError`], same as the
+//!   tree-walker).
+//!
+//! The NDRange driver here additionally executes **work-groups in
+//! parallel** across a scoped thread pool when the plan's write-set
+//! analysis proved group independence ([`KernelPlan::parallel_groups`],
+//! from `analysis/rw.rs`): every written buffer is touched only at the
+//! work-item's own grid point, and nothing written is ever read, so groups
+//! can run in any order — or concurrently — with bit-identical results.
+//! Plans that can't be proven independent run serially (still through the
+//! bytecode), and the tree-walking interpreter in [`super::machine`] is
+//! retained as the differential oracle (`Engine::TreeWalk`).
+//!
+//! Lowering is total for everything the transformations emit today; the
+//! few dynamically-typed corners of the language the register files cannot
+//! represent statically (e.g. `min(int, float)`, whose result *variant*
+//! depends on runtime values) return `None` from [`VmProgram::build`] and
+//! the plan transparently executes on the tree-walker instead.
+
+use crate::imagecl::ast::{BinOp, ScalarType, UnOp};
+use crate::transform::clir::KernelPlan;
+
+use super::buffer::Buffer;
+use super::compiled::{
+    CExpr, CStmt, CompiledPlan, Fn1, Fn2, FIRST_FREE_SLOT, SLOT_GDIM_X, SLOT_GDIM_Y,
+    SLOT_GID_X, SLOT_GID_Y, SLOT_GRP_X, SLOT_GRP_Y, SLOT_LID_X, SLOT_LID_Y,
+};
+use super::machine::{BufSlot, ExecError, MAX_WHILE};
+
+/// Launches below this many logical grid pixels run serially even when
+/// parallel execution is proven safe — thread spawn/join would dominate.
+/// (Pixels, not work-items: coarsening moves work into each item without
+/// changing how much total work the launch does.)
+const PAR_MIN_PIXELS: usize = 1 << 14;
+
+/// Comparison predicate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pred {
+    Eq,
+    Ne,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+}
+
+/// One bytecode instruction. `d`/`a`/`b`/`s` are register indices into
+/// the class-appropriate file (`I*`/`Jz`/`Jnz` → i64 file, `F*` → f64
+/// file); `buf` indexes the launch's buffer table.
+#[derive(Debug, Clone, Copy)]
+pub enum Op {
+    IConst { d: u16, v: i64 },
+    FConst { d: u16, v: f64 },
+    IMov { d: u16, s: u16 },
+    FMov { d: u16, s: u16 },
+    IToF { d: u16, s: u16 },
+    FToI { d: u16, s: u16 },
+    /// Integer wrap to a narrow type (C cast semantics).
+    IWrap { d: u16, s: u16, ty: ScalarType },
+    /// f64 → f32 → f64 (C `float` rounding).
+    F32Round { d: u16, s: u16 },
+    /// `(s != 0.0) as i64` — float truth test.
+    FNonZero { d: u16, s: u16 },
+    /// `(s != 0) as i64` — normalize an int to a 0/1 bool.
+    INorm { d: u16, s: u16 },
+
+    IAdd { d: u16, a: u16, b: u16 },
+    ISub { d: u16, a: u16, b: u16 },
+    IMul { d: u16, a: u16, b: u16 },
+    /// `d = a * b + c` (fused index math: `y * stride + x`).
+    IMulAdd { d: u16, a: u16, b: u16, c: u16 },
+    IDiv { d: u16, a: u16, b: u16 },
+    IRem { d: u16, a: u16, b: u16 },
+    INeg { d: u16, s: u16 },
+    /// Logical not: `(s == 0) as i64`.
+    INot { d: u16, s: u16 },
+    IBitNot { d: u16, s: u16 },
+    IBitAnd { d: u16, a: u16, b: u16 },
+    IBitOr { d: u16, a: u16, b: u16 },
+    IBitXor { d: u16, a: u16, b: u16 },
+    IShl { d: u16, a: u16, b: u16 },
+    IShr { d: u16, a: u16, b: u16 },
+    IMin { d: u16, a: u16, b: u16 },
+    IMax { d: u16, a: u16, b: u16 },
+    IClamp { d: u16, v: u16, lo: u16, hi: u16 },
+    IAbs { d: u16, s: u16 },
+    ICmp { p: Pred, d: u16, a: u16, b: u16 },
+
+    FAdd { d: u16, a: u16, b: u16 },
+    FSub { d: u16, a: u16, b: u16 },
+    FMul { d: u16, a: u16, b: u16 },
+    FDiv { d: u16, a: u16, b: u16 },
+    FRem { d: u16, a: u16, b: u16 },
+    FNeg { d: u16, s: u16 },
+    /// `if a <= b { a } else { b }` — matches the tree-walker's NaN
+    /// behaviour exactly (unlike `f64::min`).
+    FMin { d: u16, a: u16, b: u16 },
+    FMax { d: u16, a: u16, b: u16 },
+    FClamp { d: u16, v: u16, lo: u16, hi: u16 },
+    FCmp { p: Pred, d: u16, a: u16, b: u16 },
+    Math1 { f: Fn1, d: u16, s: u16 },
+    FPow { d: u16, a: u16, b: u16 },
+
+    Jmp { t: u32 },
+    Jz { c: u16, t: u32 },
+    Jnz { c: u16, t: u32 },
+
+    /// Load from a float-element buffer (raw f64).
+    LoadF { d: u16, buf: u16, idx: u16 },
+    /// Load from an int-element buffer (`raw as i64`).
+    LoadI { d: u16, buf: u16, idx: u16 },
+    /// Load from a bool-element buffer (`raw != 0.0`).
+    LoadB { d: u16, buf: u16, idx: u16 },
+    /// Store a float register, converting per element type (f32 rounds).
+    StoreF { buf: u16, idx: u16, s: u16, ty: ScalarType },
+    /// Store an int register, wrapping per element type.
+    StoreI { buf: u16, idx: u16, s: u16, ty: ScalarType },
+    TexLoadF { d: u16, buf: u16, x: u16, y: u16 },
+    TexLoadI { d: u16, buf: u16, x: u16, y: u16 },
+    TexStoreF { buf: u16, x: u16, y: u16, s: u16, ty: ScalarType },
+    TexStoreI { buf: u16, x: u16, y: u16, s: u16, ty: ScalarType },
+
+    /// `while` iteration cap exceeded.
+    Runaway,
+    Ret,
+}
+
+/// A kernel plan lowered all the way to bytecode: one instruction stream
+/// per barrier phase over shared register files.
+#[derive(Debug, Clone)]
+pub struct VmProgram {
+    phases: Vec<Vec<Op>>,
+    n_ri: usize,
+    n_rf: usize,
+    /// Element type of each buffer index (plan buffers, then locals) —
+    /// the lowering baked conversions for these types into the ops, so a
+    /// launch whose argument buffers disagree must use the tree-walker.
+    buf_elems: Vec<ScalarType>,
+}
+
+// ---------------------------------------------------------------------
+// Lowering: CompiledPlan (tree IR) → VmProgram (bytecode)
+// ---------------------------------------------------------------------
+
+/// Register class: which file a value lives in. Booleans are 0/1 in the
+/// i64 file (exactly the values `Value::B` can take under `as_i64`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cls {
+    I,
+    F,
+}
+
+fn cls_of(ty: ScalarType) -> Cls {
+    if ty.is_float() {
+        Cls::F
+    } else {
+        Cls::I
+    }
+}
+
+/// Marker: the expression's runtime value class cannot be pinned
+/// statically (or an op has no bytecode form) — fall back to the oracle.
+struct Unsup;
+
+struct Builder<'a> {
+    ops: Vec<Op>,
+    /// Per-slot register index (class per `slot_cls`).
+    slot_reg: &'a [u16],
+    slot_cls: &'a [Cls],
+    buf_elems: &'a [ScalarType],
+    ti_next: u16,
+    tf_next: u16,
+    max_ti: u16,
+    max_tf: u16,
+}
+
+impl VmProgram {
+    /// Lower a compiled plan to bytecode. `None` = some construct cannot
+    /// be statically typed; the caller keeps the tree-walker.
+    pub fn build(plan: &KernelPlan, compiled: &CompiledPlan) -> Option<VmProgram> {
+        let slot_cls = scan_slot_classes(compiled)?;
+        // Assign registers: slots first (builtin slots 0..8 land on int
+        // registers 0..8 because they are all class I), temps after.
+        let mut slot_reg = vec![0u16; compiled.n_slots];
+        let (mut ni, mut nf) = (0u16, 0u16);
+        for (s, cls) in slot_cls.iter().enumerate() {
+            match cls {
+                Cls::I => {
+                    slot_reg[s] = ni;
+                    ni += 1;
+                }
+                Cls::F => {
+                    slot_reg[s] = nf;
+                    nf += 1;
+                }
+            }
+        }
+        debug_assert!(
+            (0..FIRST_FREE_SLOT as usize).all(|s| slot_reg[s] == s as u16),
+            "builtin slots must map to int registers 0..8"
+        );
+        let buf_elems: Vec<ScalarType> = plan
+            .buffers
+            .iter()
+            .map(|b| b.elem)
+            .chain(plan.locals.iter().map(|l| l.elem))
+            .collect();
+        let mut phases = Vec::with_capacity(compiled.phases.len());
+        let (mut n_ri, mut n_rf) = (ni as usize, nf as usize);
+        for phase in &compiled.phases {
+            let mut b = Builder {
+                ops: Vec::new(),
+                slot_reg: &slot_reg,
+                slot_cls: &slot_cls,
+                buf_elems: &buf_elems,
+                ti_next: ni,
+                tf_next: nf,
+                max_ti: ni,
+                max_tf: nf,
+            };
+            b.stmts(phase).ok()?;
+            b.ops.push(Op::Ret);
+            n_ri = n_ri.max(b.max_ti as usize);
+            n_rf = n_rf.max(b.max_tf as usize);
+            phases.push(b.ops);
+        }
+        Some(VmProgram { phases, n_ri, n_rf, buf_elems })
+    }
+}
+
+/// Determine each slot's register class from every assignment to it
+/// (`SetVar`'s declared type; `For` counters are raw i64). A slot
+/// assigned under both classes has no static home → `None`.
+fn scan_slot_classes(compiled: &CompiledPlan) -> Option<Vec<Cls>> {
+    let mut cls: Vec<Option<Cls>> = vec![None; compiled.n_slots];
+    for s in cls.iter_mut().take(FIRST_FREE_SLOT as usize) {
+        *s = Some(Cls::I);
+    }
+    fn note(cls: &mut [Option<Cls>], slot: u32, c: Cls) -> bool {
+        match &mut cls[slot as usize] {
+            Some(prev) => *prev == c,
+            none => {
+                *none = Some(c);
+                true
+            }
+        }
+    }
+    fn visit(cls: &mut [Option<Cls>], stmts: &[CStmt]) -> bool {
+        stmts.iter().all(|s| match s {
+            CStmt::SetVar { slot, ty, .. } => note(cls, *slot, cls_of(*ty)),
+            CStmt::If { then, els, .. } => visit(cls, then) && visit(cls, els),
+            CStmt::For { slot, body, .. } => {
+                note(cls, *slot, Cls::I) && visit(cls, body)
+            }
+            CStmt::While { body, .. } => visit(cls, body),
+            _ => true,
+        })
+    }
+    for phase in &compiled.phases {
+        if !visit(&mut cls, phase) {
+            return None;
+        }
+    }
+    // Slots never assigned (compiler temporaries that ended up unused)
+    // default to the int file, matching the tree-walker's `Value::I(0)`.
+    Some(cls.into_iter().map(|c| c.unwrap_or(Cls::I)).collect())
+}
+
+impl Builder<'_> {
+    fn ti(&mut self) -> u16 {
+        let r = self.ti_next;
+        self.ti_next += 1;
+        self.max_ti = self.max_ti.max(self.ti_next);
+        r
+    }
+
+    fn tf(&mut self) -> u16 {
+        let r = self.tf_next;
+        self.tf_next += 1;
+        self.max_tf = self.max_tf.max(self.tf_next);
+        r
+    }
+
+    fn temp(&mut self, c: Cls) -> u16 {
+        match c {
+            Cls::I => self.ti(),
+            Cls::F => self.tf(),
+        }
+    }
+
+    fn here(&self) -> u32 {
+        self.ops.len() as u32
+    }
+
+    /// Patch a previously-emitted jump to target the current position.
+    fn patch(&mut self, at: u32) {
+        let t = self.here();
+        match &mut self.ops[at as usize] {
+            Op::Jmp { t: tt } | Op::Jz { t: tt, .. } | Op::Jnz { t: tt, .. } => *tt = t,
+            other => unreachable!("patching non-jump {other:?}"),
+        }
+    }
+
+    /// `as_i64` coercion: float registers truncate.
+    fn as_i(&mut self, (c, r): (Cls, u16)) -> u16 {
+        match c {
+            Cls::I => r,
+            Cls::F => {
+                let d = self.ti();
+                self.ops.push(Op::FToI { d, s: r });
+                d
+            }
+        }
+    }
+
+    /// `as_f64` coercion: int (and bool) registers widen.
+    fn as_f(&mut self, (c, r): (Cls, u16)) -> u16 {
+        match c {
+            Cls::F => r,
+            Cls::I => {
+                let d = self.tf();
+                self.ops.push(Op::IToF { d, s: r });
+                d
+            }
+        }
+    }
+
+    /// `as_bool` coercion: an int register usable as a truth value
+    /// (non-zero = true; not necessarily normalized to 0/1).
+    fn as_truth(&mut self, (c, r): (Cls, u16)) -> u16 {
+        match c {
+            Cls::I => r,
+            Cls::F => {
+                let d = self.ti();
+                self.ops.push(Op::FNonZero { d, s: r });
+                d
+            }
+        }
+    }
+
+    /// Apply `Value::cast(ty)` semantics to a register.
+    fn cast(&mut self, v: (Cls, u16), ty: ScalarType) -> (Cls, u16) {
+        match ty {
+            ScalarType::F64 => (Cls::F, self.as_f(v)),
+            ScalarType::F32 => {
+                let s = self.as_f(v);
+                let d = self.tf();
+                self.ops.push(Op::F32Round { d, s });
+                (Cls::F, d)
+            }
+            ScalarType::Bool => {
+                let (c, r) = v;
+                let d = self.ti();
+                match c {
+                    Cls::F => self.ops.push(Op::FNonZero { d, s: r }),
+                    Cls::I => self.ops.push(Op::INorm { d, s: r }),
+                }
+                (Cls::I, d)
+            }
+            _ => {
+                let s = self.as_i(v);
+                let d = self.ti();
+                self.ops.push(Op::IWrap { d, s, ty });
+                (Cls::I, d)
+            }
+        }
+    }
+
+    fn expr(&mut self, e: &CExpr) -> Result<(Cls, u16), Unsup> {
+        Ok(match e {
+            CExpr::I(v) => {
+                let d = self.ti();
+                self.ops.push(Op::IConst { d, v: *v });
+                (Cls::I, d)
+            }
+            CExpr::F(v) => {
+                let d = self.tf();
+                self.ops.push(Op::FConst { d, v: *v });
+                (Cls::F, d)
+            }
+            CExpr::B(b) => {
+                let d = self.ti();
+                self.ops.push(Op::IConst { d, v: *b as i64 });
+                (Cls::I, d)
+            }
+            CExpr::Var(slot) => {
+                (self.slot_cls[*slot as usize], self.slot_reg[*slot as usize])
+            }
+            CExpr::Unary(op, inner) => {
+                let v = self.expr(inner)?;
+                match op {
+                    UnOp::Neg => match v.0 {
+                        Cls::F => {
+                            let d = self.tf();
+                            self.ops.push(Op::FNeg { d, s: v.1 });
+                            (Cls::F, d)
+                        }
+                        Cls::I => {
+                            let d = self.ti();
+                            self.ops.push(Op::INeg { d, s: v.1 });
+                            (Cls::I, d)
+                        }
+                    },
+                    UnOp::Not => {
+                        let s = self.as_truth(v);
+                        let d = self.ti();
+                        self.ops.push(Op::INot { d, s });
+                        (Cls::I, d)
+                    }
+                    UnOp::BitNot => {
+                        let s = self.as_i(v);
+                        let d = self.ti();
+                        self.ops.push(Op::IBitNot { d, s });
+                        (Cls::I, d)
+                    }
+                }
+            }
+            CExpr::Binary(op, lhs, rhs) => self.binary(*op, lhs, rhs)?,
+            CExpr::Load { buf, idx } => {
+                let i = self.expr(idx)?;
+                let idx = self.as_i(i);
+                self.load(*buf, idx)
+            }
+            CExpr::TexRead { buf, x, y } => {
+                let xv = self.expr(x)?;
+                let x = self.as_i(xv);
+                let yv = self.expr(y)?;
+                let y = self.as_i(yv);
+                let buf = *buf as u16;
+                match cls_of(self.buf_elems[buf as usize]) {
+                    Cls::F => {
+                        let d = self.tf();
+                        self.ops.push(Op::TexLoadF { d, buf, x, y });
+                        (Cls::F, d)
+                    }
+                    Cls::I => {
+                        let d = self.ti();
+                        self.ops.push(Op::TexLoadI { d, buf, x, y });
+                        (Cls::I, d)
+                    }
+                }
+            }
+            CExpr::Call1(f, a) => {
+                let v = self.expr(a)?;
+                if *f == Fn1::Abs && v.0 == Cls::I {
+                    let d = self.ti();
+                    self.ops.push(Op::IAbs { d, s: v.1 });
+                    return Ok((Cls::I, d));
+                }
+                let f = if *f == Fn1::Abs { Fn1::Fabs } else { *f };
+                let s = self.as_f(v);
+                let d = self.tf();
+                self.ops.push(Op::Math1 { f, d, s });
+                (Cls::F, d)
+            }
+            CExpr::Call2(f, a, b) => {
+                let av = self.expr(a)?;
+                let bv = self.expr(b)?;
+                match f {
+                    Fn2::Pow => {
+                        let a = self.as_f(av);
+                        let b = self.as_f(bv);
+                        let d = self.tf();
+                        self.ops.push(Op::FPow { d, a, b });
+                        (Cls::F, d)
+                    }
+                    Fn2::Min | Fn2::Max => {
+                        // The tree-walker returns the *original* operand
+                        // value (variant and all), so a mixed int/float
+                        // min has a runtime-dependent class — unsupported.
+                        if av.0 != bv.0 {
+                            return Err(Unsup);
+                        }
+                        let d = self.temp(av.0);
+                        let op = match (f, av.0) {
+                            (Fn2::Min, Cls::I) => Op::IMin { d, a: av.1, b: bv.1 },
+                            (Fn2::Max, Cls::I) => Op::IMax { d, a: av.1, b: bv.1 },
+                            (Fn2::Min, Cls::F) => Op::FMin { d, a: av.1, b: bv.1 },
+                            (Fn2::Max, Cls::F) => Op::FMax { d, a: av.1, b: bv.1 },
+                            _ => unreachable!(),
+                        };
+                        self.ops.push(op);
+                        (av.0, d)
+                    }
+                }
+            }
+            CExpr::Clamp(v, lo, hi) => {
+                let vv = self.expr(v)?;
+                let lv = self.expr(lo)?;
+                let hv = self.expr(hi)?;
+                if vv.0 == Cls::F || lv.0 == Cls::F || hv.0 == Cls::F {
+                    // Mixed clamp promotes everything (the tree-walker
+                    // computes in f64), so the result class is static.
+                    let v = self.as_f(vv);
+                    let lo = self.as_f(lv);
+                    let hi = self.as_f(hv);
+                    let d = self.tf();
+                    self.ops.push(Op::FClamp { d, v, lo, hi });
+                    (Cls::F, d)
+                } else {
+                    let d = self.ti();
+                    self.ops.push(Op::IClamp { d, v: vv.1, lo: lv.1, hi: hv.1 });
+                    (Cls::I, d)
+                }
+            }
+            CExpr::Ternary(c, t, e2) => {
+                // Both arms must land in the same class for the result to
+                // have a static register.
+                let cls = self.peek_cls(t)?;
+                if self.peek_cls(e2)? != cls {
+                    return Err(Unsup);
+                }
+                let d = self.temp(cls);
+                let cv = self.expr(c)?;
+                let cond = self.as_truth(cv);
+                let jz = self.here();
+                self.ops.push(Op::Jz { c: cond, t: 0 });
+                let tv = self.expr(t)?;
+                self.mov(cls, d, tv.1);
+                let jend = self.here();
+                self.ops.push(Op::Jmp { t: 0 });
+                self.patch(jz);
+                let ev = self.expr(e2)?;
+                self.mov(cls, d, ev.1);
+                self.patch(jend);
+                (cls, d)
+            }
+            CExpr::Cast(ty, inner) => {
+                let v = self.expr(inner)?;
+                self.cast(v, *ty)
+            }
+        })
+    }
+
+    fn mov(&mut self, c: Cls, d: u16, s: u16) {
+        if d == s {
+            return;
+        }
+        self.ops.push(match c {
+            Cls::I => Op::IMov { d, s },
+            Cls::F => Op::FMov { d, s },
+        });
+    }
+
+    /// Static class of an expression *without* emitting code (used to
+    /// pre-agree ternary arm classes).
+    fn peek_cls(&self, e: &CExpr) -> Result<Cls, Unsup> {
+        Ok(match e {
+            CExpr::I(_) | CExpr::B(_) => Cls::I,
+            CExpr::F(_) => Cls::F,
+            CExpr::Var(slot) => self.slot_cls[*slot as usize],
+            CExpr::Unary(op, inner) => match op {
+                UnOp::Neg => self.peek_cls(inner)?,
+                UnOp::Not | UnOp::BitNot => Cls::I,
+            },
+            CExpr::Binary(op, lhs, rhs) => match op {
+                BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Rem => {
+                    if self.peek_cls(lhs)? == Cls::F || self.peek_cls(rhs)? == Cls::F {
+                        Cls::F
+                    } else {
+                        Cls::I
+                    }
+                }
+                _ => Cls::I,
+            },
+            CExpr::Load { buf, .. } => cls_of(self.buf_elems[*buf as usize]),
+            CExpr::TexRead { buf, .. } => cls_of(self.buf_elems[*buf as usize]),
+            CExpr::Call1(f, inner) => {
+                if *f == Fn1::Abs {
+                    self.peek_cls(inner)?
+                } else {
+                    Cls::F
+                }
+            }
+            CExpr::Call2(f, a, b) => match f {
+                Fn2::Pow => Cls::F,
+                Fn2::Min | Fn2::Max => {
+                    let (ca, cb) = (self.peek_cls(a)?, self.peek_cls(b)?);
+                    if ca != cb {
+                        return Err(Unsup);
+                    }
+                    ca
+                }
+            },
+            CExpr::Clamp(v, lo, hi) => {
+                if self.peek_cls(v)? == Cls::F
+                    || self.peek_cls(lo)? == Cls::F
+                    || self.peek_cls(hi)? == Cls::F
+                {
+                    Cls::F
+                } else {
+                    Cls::I
+                }
+            }
+            CExpr::Ternary(_, t, e2) => {
+                let (ct, ce) = (self.peek_cls(t)?, self.peek_cls(e2)?);
+                if ct != ce {
+                    return Err(Unsup);
+                }
+                ct
+            }
+            CExpr::Cast(ty, _) => cls_of(*ty),
+        })
+    }
+
+    fn binary(&mut self, op: BinOp, lhs: &CExpr, rhs: &CExpr) -> Result<(Cls, u16), Unsup> {
+        use BinOp::*;
+        // Short-circuit logical ops (must not evaluate rhs eagerly).
+        if op == And || op == Or {
+            let d = self.ti();
+            self.ops.push(Op::IConst { d, v: (op == Or) as i64 });
+            let lv = self.expr(lhs)?;
+            let c1 = self.as_truth(lv);
+            let skip = self.here();
+            self.ops.push(match op {
+                And => Op::Jz { c: c1, t: 0 },
+                _ => Op::Jnz { c: c1, t: 0 },
+            });
+            let rv = self.expr(rhs)?;
+            let c2 = self.as_truth(rv);
+            self.ops.push(Op::INorm { d, s: c2 });
+            self.patch(skip);
+            return Ok((Cls::I, d));
+        }
+        // Fused multiply-add for the ubiquitous `y * stride + x` pattern
+        // (all-integer only; wrapping semantics compose identically).
+        if op == Add {
+            if let Some(r) = self.try_muladd(lhs, rhs)? {
+                return Ok(r);
+            }
+        }
+        let lv = self.expr(lhs)?;
+        let rv = self.expr(rhs)?;
+        self.binop_regs(op, lv, rv)
+    }
+
+    /// `a * b + c` / `c + a * b` with all-int operands → `IMulAdd`.
+    fn try_muladd(
+        &mut self,
+        lhs: &CExpr,
+        rhs: &CExpr,
+    ) -> Result<Option<(Cls, u16)>, Unsup> {
+        // Only the `a*b + c` form fuses: evaluation order must match the
+        // tree-walker (lhs fully before rhs, and loads can trap), which
+        // IMulAdd's a, b, c operand order preserves naturally.
+        let (mul, addend) = match (lhs, rhs) {
+            (CExpr::Binary(BinOp::Mul, a, b), c) => ((a, b), c),
+            _ => return Ok(None),
+        };
+        if self.peek_cls(mul.0)? != Cls::I
+            || self.peek_cls(mul.1)? != Cls::I
+            || self.peek_cls(addend)? != Cls::I
+        {
+            return Ok(None);
+        }
+        let av = self.expr(mul.0)?;
+        let bv = self.expr(mul.1)?;
+        let cv = self.expr(addend)?;
+        let d = self.ti();
+        self.ops.push(Op::IMulAdd { d, a: av.1, b: bv.1, c: cv.1 });
+        Ok(Some((Cls::I, d)))
+    }
+
+    fn load(&mut self, buf: u32, idx: u16) -> (Cls, u16) {
+        let buf = buf as u16;
+        let elem = self.buf_elems[buf as usize];
+        if elem.is_float() {
+            let d = self.tf();
+            self.ops.push(Op::LoadF { d, buf, idx });
+            (Cls::F, d)
+        } else if elem == ScalarType::Bool {
+            let d = self.ti();
+            self.ops.push(Op::LoadB { d, buf, idx });
+            (Cls::I, d)
+        } else {
+            let d = self.ti();
+            self.ops.push(Op::LoadI { d, buf, idx });
+            (Cls::I, d)
+        }
+    }
+
+    /// Emit the store of `v` into `buf` (element-type conversion baked in).
+    fn store(&mut self, buf: u16, idx: u16, v: (Cls, u16)) {
+        let ty = self.buf_elems[buf as usize];
+        if ty.is_float() {
+            let s = self.as_f(v);
+            self.ops.push(Op::StoreF { buf, idx, s, ty });
+        } else {
+            let s = self.as_i(v);
+            self.ops.push(Op::StoreI { buf, idx, s, ty });
+        }
+    }
+
+    fn tex_store(&mut self, buf: u16, x: u16, y: u16, v: (Cls, u16)) {
+        let ty = self.buf_elems[buf as usize];
+        if ty.is_float() {
+            let s = self.as_f(v);
+            self.ops.push(Op::TexStoreF { buf, x, y, s, ty });
+        } else {
+            let s = self.as_i(v);
+            self.ops.push(Op::TexStoreI { buf, x, y, s, ty });
+        }
+    }
+
+    fn stmts(&mut self, stmts: &[CStmt]) -> Result<(), Unsup> {
+        for s in stmts {
+            // Expression temporaries never outlive their statement.
+            let (ti0, tf0) = (self.ti_next, self.tf_next);
+            self.stmt(s)?;
+            self.ti_next = ti0;
+            self.tf_next = tf0;
+        }
+        Ok(())
+    }
+
+    fn stmt(&mut self, s: &CStmt) -> Result<(), Unsup> {
+        match s {
+            CStmt::SetVar { slot, ty, value } => {
+                let v = self.expr(value)?;
+                let (c, r) = self.cast(v, *ty);
+                debug_assert_eq!(c, self.slot_cls[*slot as usize]);
+                self.mov(c, self.slot_reg[*slot as usize], r);
+            }
+            CStmt::Store { buf, idx, value, op } => {
+                let buf = *buf as u16;
+                let iv = self.expr(idx)?;
+                let idx = self.as_i(iv);
+                let v = self.expr(value)?;
+                let v = match op {
+                    None => v,
+                    Some(b) => {
+                        let cur = self.load(buf as u32, idx);
+                        self.binop_regs(*b, cur, v)?
+                    }
+                };
+                self.store(buf, idx, v);
+            }
+            CStmt::TexWrite { buf, x, y, value } => {
+                let xv = self.expr(x)?;
+                let x = self.as_i(xv);
+                let yv = self.expr(y)?;
+                let y = self.as_i(yv);
+                let v = self.expr(value)?;
+                self.tex_store(*buf as u16, x, y, v);
+            }
+            CStmt::If { cond, then, els } => {
+                let cv = self.expr(cond)?;
+                let c = self.as_truth(cv);
+                let jz = self.here();
+                self.ops.push(Op::Jz { c, t: 0 });
+                self.stmts(then)?;
+                if els.is_empty() {
+                    self.patch(jz);
+                } else {
+                    let jend = self.here();
+                    self.ops.push(Op::Jmp { t: 0 });
+                    self.patch(jz);
+                    self.stmts(els)?;
+                    self.patch(jend);
+                }
+            }
+            CStmt::For { slot, init, cond, step, body } => {
+                let ctr = self.slot_reg[*slot as usize];
+                if self.slot_cls[*slot as usize] != Cls::I {
+                    return Err(Unsup);
+                }
+                let iv = self.expr(init)?;
+                let i = self.as_i(iv);
+                self.mov(Cls::I, ctr, i);
+                let head = self.here();
+                let cv = self.expr(cond)?;
+                let c = self.as_truth(cv);
+                let jexit = self.here();
+                self.ops.push(Op::Jz { c, t: 0 });
+                self.stmts(body)?;
+                let sv = self.expr(step)?;
+                let st = self.as_i(sv);
+                self.ops.push(Op::IAdd { d: ctr, a: ctr, b: st });
+                self.ops.push(Op::Jmp { t: head });
+                self.patch(jexit);
+            }
+            CStmt::While { cond, body } => {
+                let cnt = self.ti();
+                let one = self.ti();
+                let cap = self.ti();
+                let t = self.ti();
+                self.ops.push(Op::IConst { d: cnt, v: 0 });
+                self.ops.push(Op::IConst { d: one, v: 1 });
+                self.ops.push(Op::IConst { d: cap, v: MAX_WHILE as i64 });
+                let head = self.here();
+                let cv = self.expr(cond)?;
+                let c = self.as_truth(cv);
+                let jexit = self.here();
+                self.ops.push(Op::Jz { c, t: 0 });
+                self.stmts(body)?;
+                self.ops.push(Op::IAdd { d: cnt, a: cnt, b: one });
+                self.ops.push(Op::ICmp { p: Pred::Gt, d: t, a: cnt, b: cap });
+                let jrun = self.here();
+                self.ops.push(Op::Jnz { c: t, t: 0 });
+                self.ops.push(Op::Jmp { t: head });
+                self.patch(jrun);
+                self.ops.push(Op::Runaway);
+                // Jz target: past the Runaway trap.
+                let end = self.here();
+                match &mut self.ops[jexit as usize] {
+                    Op::Jz { t, .. } => *t = end,
+                    _ => unreachable!(),
+                }
+            }
+            CStmt::Return => self.ops.push(Op::Ret),
+            CStmt::Eval(e) => {
+                self.expr(e)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply a binop to two already-evaluated registers — the shared
+    /// emitter behind [`Self::binary`] and compound stores. The And/Or
+    /// arm is the *non*-short-circuit form (both sides already
+    /// evaluated), reached only from compound stores, mirroring the
+    /// tree-walker's `binop`.
+    fn binop_regs(
+        &mut self,
+        op: BinOp,
+        lv: (Cls, u16),
+        rv: (Cls, u16),
+    ) -> Result<(Cls, u16), Unsup> {
+        use BinOp::*;
+        let float = lv.0 == Cls::F || rv.0 == Cls::F;
+        Ok(match op {
+            Add | Sub | Mul | Div | Rem => {
+                if float {
+                    let a = self.as_f(lv);
+                    let b = self.as_f(rv);
+                    let d = self.tf();
+                    self.ops.push(match op {
+                        Add => Op::FAdd { d, a, b },
+                        Sub => Op::FSub { d, a, b },
+                        Mul => Op::FMul { d, a, b },
+                        Div => Op::FDiv { d, a, b },
+                        _ => Op::FRem { d, a, b },
+                    });
+                    (Cls::F, d)
+                } else {
+                    let d = self.ti();
+                    self.ops.push(match op {
+                        Add => Op::IAdd { d, a: lv.1, b: rv.1 },
+                        Sub => Op::ISub { d, a: lv.1, b: rv.1 },
+                        Mul => Op::IMul { d, a: lv.1, b: rv.1 },
+                        Div => Op::IDiv { d, a: lv.1, b: rv.1 },
+                        _ => Op::IRem { d, a: lv.1, b: rv.1 },
+                    });
+                    (Cls::I, d)
+                }
+            }
+            Eq | Ne | Lt | Gt | Le | Ge => {
+                let p = match op {
+                    Eq => Pred::Eq,
+                    Ne => Pred::Ne,
+                    Lt => Pred::Lt,
+                    Gt => Pred::Gt,
+                    Le => Pred::Le,
+                    _ => Pred::Ge,
+                };
+                let d = self.ti();
+                if float {
+                    let a = self.as_f(lv);
+                    let b = self.as_f(rv);
+                    self.ops.push(Op::FCmp { p, d, a, b });
+                } else {
+                    self.ops.push(Op::ICmp { p, d, a: lv.1, b: rv.1 });
+                }
+                (Cls::I, d)
+            }
+            And | Or => {
+                // Non-short-circuit here (both sides already evaluated),
+                // matching the tree-walker's `binop` used by compound
+                // stores.
+                let a = self.as_truth(lv);
+                let b = self.as_truth(rv);
+                let an = self.ti();
+                self.ops.push(Op::INorm { d: an, s: a });
+                let bn = self.ti();
+                self.ops.push(Op::INorm { d: bn, s: b });
+                let d = self.ti();
+                self.ops.push(match op {
+                    And => Op::IBitAnd { d, a: an, b: bn },
+                    _ => Op::IBitOr { d, a: an, b: bn },
+                });
+                (Cls::I, d)
+            }
+            BitAnd | BitOr | BitXor | Shl | Shr => {
+                let a = self.as_i(lv);
+                let b = self.as_i(rv);
+                let d = self.ti();
+                self.ops.push(match op {
+                    BitAnd => Op::IBitAnd { d, a, b },
+                    BitOr => Op::IBitOr { d, a, b },
+                    BitXor => Op::IBitXor { d, a, b },
+                    Shl => Op::IShl { d, a, b },
+                    _ => Op::IShr { d, a, b },
+                });
+                (Cls::I, d)
+            }
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------
+
+/// Runtime trap raised by the interpreter loop (converted to [`ExecError`]
+/// with buffer names attached by the driver).
+#[derive(Debug, Clone, Copy)]
+enum Trap {
+    Oob { buf: u16, index: i64 },
+    NotImage { buf: u16 },
+    DivByZero,
+    Runaway,
+}
+
+/// A raw view of one buffer's storage for the interpreter: pointer + len,
+/// plus image extent (`w < 0` = not an image). Work-groups write disjoint
+/// elements (proven by the plan's write-set analysis) so concurrent
+/// threads may hold copies of the same view.
+#[derive(Debug, Clone, Copy)]
+struct RawBuf {
+    ptr: *mut f64,
+    len: usize,
+    w: i64,
+    h: i64,
+}
+
+impl RawBuf {
+    fn of(slot: &mut BufSlot) -> RawBuf {
+        let (w, h) = match slot {
+            BufSlot::Image { w, h, .. } => (*w as i64, *h as i64),
+            _ => (-1, -1),
+        };
+        let buf = slot.buffer_mut();
+        RawBuf { ptr: buf.data.as_mut_ptr(), len: buf.data.len(), w, h }
+    }
+
+    #[inline(always)]
+    fn read(&self, i: usize) -> f64 {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) }
+    }
+
+    #[inline(always)]
+    fn write(&self, i: usize, v: f64) {
+        debug_assert!(i < self.len);
+        unsafe { *self.ptr.add(i) = v }
+    }
+}
+
+/// The shared per-launch buffer table (argument buffers only; locals are
+/// per-thread). Safety: threads only run concurrently when the plan
+/// proved all writes disjoint (`parallel_groups`).
+struct SharedBufs(Vec<RawBuf>);
+unsafe impl Sync for SharedBufs {}
+
+#[inline(always)]
+fn ri_get(ri: &[i64], r: u16) -> i64 {
+    debug_assert!((r as usize) < ri.len());
+    unsafe { *ri.get_unchecked(r as usize) }
+}
+
+#[inline(always)]
+fn ri_set(ri: &mut [i64], r: u16, v: i64) {
+    debug_assert!((r as usize) < ri.len());
+    unsafe { *ri.get_unchecked_mut(r as usize) = v }
+}
+
+#[inline(always)]
+fn rf_get(rf: &[f64], r: u16) -> f64 {
+    debug_assert!((r as usize) < rf.len());
+    unsafe { *rf.get_unchecked(r as usize) }
+}
+
+#[inline(always)]
+fn rf_set(rf: &mut [f64], r: u16, v: f64) {
+    debug_assert!((r as usize) < rf.len());
+    unsafe { *rf.get_unchecked_mut(r as usize) = v }
+}
+
+/// `store_as` for an int register (C integer-wrap per element type).
+#[inline(always)]
+fn wrap_store(ty: ScalarType, v: i64) -> f64 {
+    match ty {
+        ScalarType::I32 => v as i32 as f64,
+        ScalarType::U32 => v as u32 as f64,
+        ScalarType::I16 => v as i16 as f64,
+        ScalarType::U16 => v as u16 as f64,
+        ScalarType::I8 => v as i8 as f64,
+        ScalarType::U8 => v as u8 as f64,
+        ScalarType::Bool => (v != 0) as i64 as f64,
+        // Float stores go through `StoreF`.
+        ScalarType::F32 | ScalarType::F64 => v as f64,
+    }
+}
+
+#[inline(always)]
+fn wrap_int(ty: ScalarType, v: i64) -> i64 {
+    match ty {
+        ScalarType::I32 => v as i32 as i64,
+        ScalarType::U32 => v as u32 as i64,
+        ScalarType::I16 => v as i16 as i64,
+        ScalarType::U16 => v as u16 as i64,
+        ScalarType::I8 => v as i8 as i64,
+        ScalarType::U8 => v as u8 as i64,
+        _ => v,
+    }
+}
+
+#[inline(always)]
+fn pred_i(p: Pred, a: i64, b: i64) -> i64 {
+    (match p {
+        Pred::Eq => a == b,
+        Pred::Ne => a != b,
+        Pred::Lt => a < b,
+        Pred::Gt => a > b,
+        Pred::Le => a <= b,
+        Pred::Ge => a >= b,
+    }) as i64
+}
+
+#[inline(always)]
+fn pred_f(p: Pred, a: f64, b: f64) -> i64 {
+    (match p {
+        Pred::Eq => a == b,
+        Pred::Ne => a != b,
+        Pred::Lt => a < b,
+        Pred::Gt => a > b,
+        Pred::Le => a <= b,
+        Pred::Ge => a >= b,
+    }) as i64
+}
+
+/// Execute one phase's bytecode for one work-item.
+fn run_ops(
+    ops: &[Op],
+    ri: &mut [i64],
+    rf: &mut [f64],
+    bufs: &[RawBuf],
+) -> Result<(), Trap> {
+    let mut pc = 0usize;
+    while pc < ops.len() {
+        match ops[pc] {
+            Op::IConst { d, v } => ri_set(ri, d, v),
+            Op::FConst { d, v } => rf_set(rf, d, v),
+            Op::IMov { d, s } => ri_set(ri, d, ri_get(ri, s)),
+            Op::FMov { d, s } => rf_set(rf, d, rf_get(rf, s)),
+            Op::IToF { d, s } => rf_set(rf, d, ri_get(ri, s) as f64),
+            Op::FToI { d, s } => ri_set(ri, d, rf_get(rf, s) as i64),
+            Op::IWrap { d, s, ty } => ri_set(ri, d, wrap_int(ty, ri_get(ri, s))),
+            Op::F32Round { d, s } => rf_set(rf, d, rf_get(rf, s) as f32 as f64),
+            Op::FNonZero { d, s } => ri_set(ri, d, (rf_get(rf, s) != 0.0) as i64),
+            Op::INorm { d, s } => ri_set(ri, d, (ri_get(ri, s) != 0) as i64),
+
+            Op::IAdd { d, a, b } => {
+                ri_set(ri, d, ri_get(ri, a).wrapping_add(ri_get(ri, b)))
+            }
+            Op::ISub { d, a, b } => {
+                ri_set(ri, d, ri_get(ri, a).wrapping_sub(ri_get(ri, b)))
+            }
+            Op::IMul { d, a, b } => {
+                ri_set(ri, d, ri_get(ri, a).wrapping_mul(ri_get(ri, b)))
+            }
+            Op::IMulAdd { d, a, b, c } => ri_set(
+                ri,
+                d,
+                ri_get(ri, a).wrapping_mul(ri_get(ri, b)).wrapping_add(ri_get(ri, c)),
+            ),
+            Op::IDiv { d, a, b } => {
+                let bv = ri_get(ri, b);
+                if bv == 0 {
+                    return Err(Trap::DivByZero);
+                }
+                ri_set(ri, d, ri_get(ri, a) / bv);
+            }
+            Op::IRem { d, a, b } => {
+                let bv = ri_get(ri, b);
+                if bv == 0 {
+                    return Err(Trap::DivByZero);
+                }
+                ri_set(ri, d, ri_get(ri, a) % bv);
+            }
+            Op::INeg { d, s } => ri_set(ri, d, ri_get(ri, s).wrapping_neg()),
+            Op::INot { d, s } => ri_set(ri, d, (ri_get(ri, s) == 0) as i64),
+            Op::IBitNot { d, s } => ri_set(ri, d, !ri_get(ri, s)),
+            Op::IBitAnd { d, a, b } => ri_set(ri, d, ri_get(ri, a) & ri_get(ri, b)),
+            Op::IBitOr { d, a, b } => ri_set(ri, d, ri_get(ri, a) | ri_get(ri, b)),
+            Op::IBitXor { d, a, b } => ri_set(ri, d, ri_get(ri, a) ^ ri_get(ri, b)),
+            Op::IShl { d, a, b } => {
+                ri_set(ri, d, ri_get(ri, a).wrapping_shl(ri_get(ri, b) as u32))
+            }
+            Op::IShr { d, a, b } => {
+                ri_set(ri, d, ri_get(ri, a).wrapping_shr(ri_get(ri, b) as u32))
+            }
+            Op::IMin { d, a, b } => ri_set(ri, d, ri_get(ri, a).min(ri_get(ri, b))),
+            Op::IMax { d, a, b } => ri_set(ri, d, ri_get(ri, a).max(ri_get(ri, b))),
+            Op::IClamp { d, v, lo, hi } => {
+                ri_set(ri, d, ri_get(ri, v).clamp(ri_get(ri, lo), ri_get(ri, hi)))
+            }
+            Op::IAbs { d, s } => ri_set(ri, d, ri_get(ri, s).abs()),
+            Op::ICmp { p, d, a, b } => {
+                ri_set(ri, d, pred_i(p, ri_get(ri, a), ri_get(ri, b)))
+            }
+
+            Op::FAdd { d, a, b } => rf_set(rf, d, rf_get(rf, a) + rf_get(rf, b)),
+            Op::FSub { d, a, b } => rf_set(rf, d, rf_get(rf, a) - rf_get(rf, b)),
+            Op::FMul { d, a, b } => rf_set(rf, d, rf_get(rf, a) * rf_get(rf, b)),
+            Op::FDiv { d, a, b } => rf_set(rf, d, rf_get(rf, a) / rf_get(rf, b)),
+            Op::FRem { d, a, b } => rf_set(rf, d, rf_get(rf, a) % rf_get(rf, b)),
+            Op::FNeg { d, s } => rf_set(rf, d, -rf_get(rf, s)),
+            Op::FMin { d, a, b } => {
+                let (av, bv) = (rf_get(rf, a), rf_get(rf, b));
+                rf_set(rf, d, if av <= bv { av } else { bv });
+            }
+            Op::FMax { d, a, b } => {
+                let (av, bv) = (rf_get(rf, a), rf_get(rf, b));
+                rf_set(rf, d, if av <= bv { bv } else { av });
+            }
+            Op::FClamp { d, v, lo, hi } => {
+                rf_set(rf, d, rf_get(rf, v).clamp(rf_get(rf, lo), rf_get(rf, hi)))
+            }
+            Op::FCmp { p, d, a, b } => {
+                ri_set(ri, d, pred_f(p, rf_get(rf, a), rf_get(rf, b)))
+            }
+            Op::Math1 { f, d, s } => {
+                let v = rf_get(rf, s);
+                rf_set(
+                    rf,
+                    d,
+                    match f {
+                        Fn1::Sqrt => v.sqrt(),
+                        Fn1::Rsqrt => 1.0 / v.sqrt(),
+                        Fn1::Fabs | Fn1::Abs => v.abs(),
+                        Fn1::Exp => v.exp(),
+                        Fn1::Log => v.ln(),
+                        Fn1::Sin => v.sin(),
+                        Fn1::Cos => v.cos(),
+                        Fn1::Floor => v.floor(),
+                        Fn1::Ceil => v.ceil(),
+                    },
+                );
+            }
+            Op::FPow { d, a, b } => {
+                rf_set(rf, d, rf_get(rf, a).powf(rf_get(rf, b)))
+            }
+
+            Op::Jmp { t } => {
+                pc = t as usize;
+                continue;
+            }
+            Op::Jz { c, t } => {
+                if ri_get(ri, c) == 0 {
+                    pc = t as usize;
+                    continue;
+                }
+            }
+            Op::Jnz { c, t } => {
+                if ri_get(ri, c) != 0 {
+                    pc = t as usize;
+                    continue;
+                }
+            }
+
+            Op::LoadF { d, buf, idx } => {
+                let b = &bufs[buf as usize];
+                let i = ri_get(ri, idx);
+                if (i as u64) >= b.len as u64 {
+                    return Err(Trap::Oob { buf, index: i });
+                }
+                rf_set(rf, d, b.read(i as usize));
+            }
+            Op::LoadI { d, buf, idx } => {
+                let b = &bufs[buf as usize];
+                let i = ri_get(ri, idx);
+                if (i as u64) >= b.len as u64 {
+                    return Err(Trap::Oob { buf, index: i });
+                }
+                ri_set(ri, d, b.read(i as usize) as i64);
+            }
+            Op::LoadB { d, buf, idx } => {
+                let b = &bufs[buf as usize];
+                let i = ri_get(ri, idx);
+                if (i as u64) >= b.len as u64 {
+                    return Err(Trap::Oob { buf, index: i });
+                }
+                ri_set(ri, d, (b.read(i as usize) != 0.0) as i64);
+            }
+            Op::StoreF { buf, idx, s, ty } => {
+                let b = &bufs[buf as usize];
+                let i = ri_get(ri, idx);
+                if (i as u64) >= b.len as u64 {
+                    return Err(Trap::Oob { buf, index: i });
+                }
+                let v = rf_get(rf, s);
+                b.write(i as usize, if ty == ScalarType::F32 { v as f32 as f64 } else { v });
+            }
+            Op::StoreI { buf, idx, s, ty } => {
+                let b = &bufs[buf as usize];
+                let i = ri_get(ri, idx);
+                if (i as u64) >= b.len as u64 {
+                    return Err(Trap::Oob { buf, index: i });
+                }
+                b.write(i as usize, wrap_store(ty, ri_get(ri, s)));
+            }
+            Op::TexLoadF { d, buf, x, y } => {
+                let b = &bufs[buf as usize];
+                if b.w < 0 {
+                    return Err(Trap::NotImage { buf });
+                }
+                let (xi, yi) = (ri_get(ri, x), ri_get(ri, y));
+                if xi < 0 || yi < 0 || xi >= b.w || yi >= b.h {
+                    return Err(Trap::Oob { buf, index: yi * b.w + xi });
+                }
+                rf_set(rf, d, b.read((yi * b.w + xi) as usize));
+            }
+            Op::TexLoadI { d, buf, x, y } => {
+                let b = &bufs[buf as usize];
+                if b.w < 0 {
+                    return Err(Trap::NotImage { buf });
+                }
+                let (xi, yi) = (ri_get(ri, x), ri_get(ri, y));
+                if xi < 0 || yi < 0 || xi >= b.w || yi >= b.h {
+                    return Err(Trap::Oob { buf, index: yi * b.w + xi });
+                }
+                ri_set(ri, d, b.read((yi * b.w + xi) as usize) as i64);
+            }
+            Op::TexStoreF { buf, x, y, s, ty } => {
+                let b = &bufs[buf as usize];
+                if b.w < 0 {
+                    return Err(Trap::NotImage { buf });
+                }
+                let (xi, yi) = (ri_get(ri, x), ri_get(ri, y));
+                if xi < 0 || yi < 0 || xi >= b.w || yi >= b.h {
+                    return Err(Trap::Oob { buf, index: yi * b.w + xi });
+                }
+                let v = rf_get(rf, s);
+                b.write(
+                    (yi * b.w + xi) as usize,
+                    if ty == ScalarType::F32 { v as f32 as f64 } else { v },
+                );
+            }
+            Op::TexStoreI { buf, x, y, s, ty } => {
+                let b = &bufs[buf as usize];
+                if b.w < 0 {
+                    return Err(Trap::NotImage { buf });
+                }
+                let (xi, yi) = (ri_get(ri, x), ri_get(ri, y));
+                if xi < 0 || yi < 0 || xi >= b.w || yi >= b.h {
+                    return Err(Trap::Oob { buf, index: yi * b.w + xi });
+                }
+                b.write((yi * b.w + xi) as usize, wrap_store(ty, ri_get(ri, s)));
+            }
+
+            Op::Runaway => return Err(Trap::Runaway),
+            Op::Ret => return Ok(()),
+        }
+        pc += 1;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// NDRange driver
+// ---------------------------------------------------------------------
+
+/// Can this launch's argument buffers execute on `prog`? The bytecode
+/// baked in the *plan's* element types; a caller passing a buffer of a
+/// different element type (legal for the tree-walker, which reads the
+/// type off the buffer at runtime) must fall back.
+pub(crate) fn args_match(prog: &VmProgram, bufs: &[BufSlot]) -> bool {
+    bufs.len() == prog.buf_elems.len()
+        && bufs
+            .iter()
+            .zip(&prog.buf_elems)
+            .all(|(slot, &elem)| slot.buffer().elem == elem)
+}
+
+/// Execute the NDRange through the bytecode VM: work-groups in parallel
+/// when the plan proved independence (and the launch is big enough to
+/// pay for threads), serially otherwise — bit-identical either way.
+pub(crate) fn run_ndrange(
+    plan: &KernelPlan,
+    compiled: &CompiledPlan,
+    prog: &VmProgram,
+    bufs: &mut [BufSlot],
+    grid: (usize, usize),
+) -> Result<(), ExecError> {
+    let (global, wg) = plan.launch_dims(grid.0, grid.1);
+    let groups = [global[0] / wg[0], global[1] / wg[1]];
+    let n_groups = groups[0] * groups[1];
+    let n_args = plan.buffers.len();
+
+    let shared = SharedBufs(
+        bufs[..n_args].iter_mut().map(RawBuf::of).collect(),
+    );
+
+    let threads = if plan.parallel_groups
+        && n_groups >= 2
+        && grid.0 * grid.1 >= PAR_MIN_PIXELS
+    {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(n_groups)
+    } else {
+        1
+    };
+
+    let run_range = |range: std::ops::Range<usize>| -> Result<(), Trap> {
+        let mut ri = vec![0i64; prog.n_ri];
+        let mut rf = vec![0f64; prog.n_rf];
+        // Local scratch: allocated once per worker, zero-reset between
+        // groups (fresh-allocation semantics without the allocator).
+        let mut locals: Vec<Buffer> =
+            plan.locals.iter().map(|l| Buffer::new(l.elem, l.len)).collect();
+        let mut view: Vec<RawBuf> = shared.0.clone();
+        view.extend(locals.iter_mut().map(|b| RawBuf {
+            ptr: b.data.as_mut_ptr(),
+            len: b.data.len(),
+            w: -1,
+            h: -1,
+        }));
+        ri[SLOT_GDIM_X as usize] = global[0] as i64;
+        ri[SLOT_GDIM_Y as usize] = global[1] as i64;
+        for g in range {
+            let (grp_x, grp_y) = (g % groups[0], g / groups[0]);
+            for l in &mut locals {
+                l.data.fill(0.0);
+            }
+            ri[SLOT_GRP_X as usize] = grp_x as i64;
+            ri[SLOT_GRP_Y as usize] = grp_y as i64;
+            for phase in &prog.phases {
+                // Barrier semantics: every work-item finishes phase k
+                // before any starts k+1.
+                for lid_y in 0..wg[1] {
+                    for lid_x in 0..wg[0] {
+                        ri[SLOT_GID_X as usize] = (grp_x * wg[0] + lid_x) as i64;
+                        ri[SLOT_GID_Y as usize] = (grp_y * wg[1] + lid_y) as i64;
+                        ri[SLOT_LID_X as usize] = lid_x as i64;
+                        ri[SLOT_LID_Y as usize] = lid_y as i64;
+                        run_ops(phase, &mut ri, &mut rf, &view)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    };
+
+    let result: Result<(), Trap> = if threads <= 1 {
+        run_range(0..n_groups)
+    } else {
+        let chunk = n_groups.div_ceil(threads);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let run_range = &run_range;
+                    let lo = t * chunk;
+                    let hi = ((t + 1) * chunk).min(n_groups);
+                    s.spawn(move || run_range(lo..hi))
+                })
+                .collect();
+            let mut out = Ok(());
+            for h in handles {
+                let r = h.join().expect("VM worker thread panicked");
+                if out.is_ok() {
+                    out = r;
+                }
+            }
+            out
+        })
+    };
+
+    result.map_err(|trap| {
+        let name = |buf: u16| compiled.buffer_names[buf as usize].clone();
+        match trap {
+            Trap::Oob { buf, index } => ExecError::OutOfBounds {
+                name: name(buf),
+                index,
+                len: if (buf as usize) < n_args {
+                    shared.0[buf as usize].len
+                } else {
+                    plan.locals[buf as usize - n_args].len
+                },
+            },
+            Trap::NotImage { buf } => ExecError::ArgKind(name(buf)),
+            Trap::DivByZero => ExecError::DivByZero,
+            Trap::Runaway => ExecError::Runaway(MAX_WHILE),
+        }
+    })
+}

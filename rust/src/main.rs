@@ -39,7 +39,11 @@ USAGE:
   imagecl tunedb query <kernel> [--db PATH] [--device DEV] [--grid N]
   imagecl tunedb train <kernel> [--db PATH]
   imagecl tunedb import <legacy.tsv> [--db PATH]
-                inspect / exercise the tuning knowledge base
+  imagecl tunedb compact [--db PATH] [--cap N]
+                inspect / exercise / compact the tuning knowledge base
+  imagecl bench [--size N] [--iters N] [--kernels a,b] [--out PATH] [--smoke]
+                run the gallery kernels through the bytecode VM and the
+                tree-walking oracle; verify bit-identity; write BENCH_exec.json
   imagecl fig6 [--size N]            reproduce Figure 6 (slowdown vs baselines)
   imagecl tables [--size N]          reproduce Tables 2-5 (tuned configurations)
   imagecl pipeline [--size N]        run the Harris pipeline through PJRT
@@ -60,6 +64,12 @@ struct Args {
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Args, String> {
+        Args::parse_with_switches(argv, &[])
+    }
+
+    /// Like [`Args::parse`], but flags named in `switches` are boolean:
+    /// their presence means `true` and they consume no value.
+    fn parse_with_switches(argv: &[String], switches: &[&str]) -> Result<Args, String> {
         let mut positional = Vec::new();
         let mut flags = BTreeMap::new();
         let mut it = argv.iter();
@@ -68,10 +78,14 @@ impl Args {
                 if key.is_empty() {
                     return Err("bare `--` is not a flag".to_string());
                 }
-                let val = it
-                    .next()
-                    .ok_or_else(|| format!("flag --{key} needs a value"))?;
-                if flags.insert(key.to_string(), val.clone()).is_some() {
+                let val = if switches.contains(&key) {
+                    "true".to_string()
+                } else {
+                    it.next()
+                        .ok_or_else(|| format!("flag --{key} needs a value"))?
+                        .clone()
+                };
+                if flags.insert(key.to_string(), val).is_some() {
                     return Err(format!("flag --{key} given twice"));
                 }
             } else {
@@ -79,6 +93,11 @@ impl Args {
             }
         }
         Ok(Args { positional, flags })
+    }
+
+    /// A boolean switch's value (absent = false).
+    fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.flag(key), Some("true") | Some("1"))
     }
 
     /// Reject any flag outside `allowed` — catches typos like
@@ -122,12 +141,14 @@ fn run() -> Result<(), String> {
         print!("{USAGE}");
         return Ok(());
     };
-    let args = Args::parse(&argv[1..])?;
+    let switches: &[&str] = if cmd == "bench" { &["smoke"] } else { &[] };
+    let args = Args::parse_with_switches(&argv[1..], switches)?;
     match cmd.as_str() {
         "compile" => cmd_compile(&args),
         "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
         "tunedb" => cmd_tunedb(&args),
+        "bench" => cmd_bench(&args),
         "fig6" => cmd_fig6(&args),
         "tables" => cmd_tables(&args),
         "pipeline" => cmd_pipeline(&args),
@@ -157,6 +178,32 @@ fn run() -> Result<(), String> {
         }
         other => Err(format!("unknown command {other:?}\n\n{USAGE}")),
     }
+}
+
+/// `imagecl bench`: the execution-engine benchmark — gallery kernels
+/// through both the bytecode VM and the tree-walking oracle, with the
+/// bit-identity check and the `BENCH_exec.json` report (see README
+/// "Execution engine"). `--smoke` is the CI configuration.
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    args.check_known(&["size", "iters", "kernels", "out", "smoke"])?;
+    let mut opts = if args.bool_flag("smoke") {
+        imagecl::exec::bench::BenchOpts::smoke()
+    } else {
+        imagecl::exec::bench::BenchOpts::default()
+    };
+    opts.size = args.usize_flag("size", opts.size)?;
+    opts.iters = args.usize_flag("iters", opts.iters)?;
+    if let Some(list) = args.flag("kernels") {
+        opts.kernels = list.split(',').filter(|k| !k.is_empty()).map(String::from).collect();
+    }
+    if let Some(p) = args.flag("out") {
+        opts.out = Some(std::path::PathBuf::from(p));
+    }
+    let report = imagecl::exec::bench::run_and_write(&opts)?;
+    if let Some(s) = report.blur_speedup() {
+        println!("blur speedup (VM vs tree-walker): {s:.2}x");
+    }
+    Ok(())
 }
 
 fn cmd_compile(args: &Args) -> Result<(), String> {
@@ -396,11 +443,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 /// tier would answer for a key), `train` (fit the per-kernel performance
 /// model), `import` (migrate a legacy PR-1 warm-start TSV).
 fn cmd_tunedb(args: &Args) -> Result<(), String> {
-    args.check_known(&["db", "device", "grid"])?;
+    args.check_known(&["db", "device", "grid", "cap"])?;
     let sub = args
         .positional
         .first()
-        .ok_or("tunedb needs a subcommand: stats|export|query|train|import")?
+        .ok_or("tunedb needs a subcommand: stats|export|query|train|import|compact")?
         .as_str();
     let db_path = args
         .flag("db")
@@ -504,8 +551,19 @@ fn cmd_tunedb(args: &Args) -> Result<(), String> {
             );
             Ok(())
         }
+        "compact" => {
+            let cap = args.usize_flag("cap", imagecl::tunedb::HISTORY_CAP_PER_KEY)?;
+            let stats = db.compact(cap);
+            println!(
+                "compacted {db_path:?}: kept {} records, removed {} \
+                 (history cap {cap} per key, latest winner per key)",
+                stats.kept, stats.removed
+            );
+            Ok(())
+        }
         other => Err(format!(
-            "unknown tunedb subcommand {other:?} (want stats|export|query|train|import)"
+            "unknown tunedb subcommand {other:?} \
+             (want stats|export|query|train|import|compact)"
         )),
     }
 }
@@ -635,6 +693,16 @@ mod tests {
         let a = Args::parse(&argv("--size 4")).unwrap();
         assert!(a.check_known(&[]).is_err());
         assert!(a.check_known(&["size"]).is_ok());
+    }
+
+    #[test]
+    fn bool_switches_parse() {
+        let a = Args::parse_with_switches(&argv("--smoke --size 64"), &["smoke"]).unwrap();
+        assert!(a.bool_flag("smoke"));
+        assert_eq!(a.usize_flag("size", 0).unwrap(), 64);
+        // Undeclared, `--smoke` still requires a value.
+        assert!(Args::parse(&argv("--smoke")).is_err());
+        assert!(!Args::parse(&argv("sobel")).unwrap().bool_flag("smoke"));
     }
 
     #[test]

@@ -44,6 +44,10 @@ pub struct Counters {
     pub search_evals: AtomicU64,
     /// Requests executed through the PJRT artifact path.
     pub pjrt_execs: AtomicU64,
+    /// Wall-clock microseconds spent inside tuner evaluators (the
+    /// measured-eval budget in *time*, not count — cheaper per-eval
+    /// execution via the bytecode VM shows up here first).
+    pub search_wall_us: AtomicU64,
 }
 
 impl Counters {
@@ -75,6 +79,7 @@ impl Counters {
             evictions: self.evictions.load(Ordering::Relaxed),
             search_evals: self.search_evals.load(Ordering::Relaxed),
             pjrt_execs: self.pjrt_execs.load(Ordering::Relaxed),
+            search_wall_us: self.search_wall_us.load(Ordering::Relaxed),
         }
     }
 }
@@ -95,6 +100,7 @@ pub struct StatsSnapshot {
     pub evictions: u64,
     pub search_evals: u64,
     pub pjrt_execs: u64,
+    pub search_wall_us: u64,
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice (`q` in 0..=100).
@@ -169,8 +175,13 @@ impl ServeReport {
         let _ = writeln!(
             out,
             "  tunedb      {} exact warm-starts, {} transfers, {} predicted, \
-             {} cold tunes ({} measured evals total)",
-            s.warm_starts, s.db_transfers, s.db_predictions, s.tunes, s.search_evals
+             {} cold tunes ({} measured evals, {} eval wall)",
+            s.warm_starts,
+            s.db_transfers,
+            s.db_predictions,
+            s.tunes,
+            s.search_evals,
+            Ms(s.search_wall_us as f64 / 1e3)
         );
         if s.pjrt_execs > 0 {
             let _ = writeln!(out, "  pjrt        {} artifact executions", s.pjrt_execs);

@@ -273,6 +273,10 @@ impl KernelService {
         let fm = FeatureMap::new(info);
         let record = |res: &TuneResult| {
             Counters::add(&self.counters.search_evals, res.evals as u64);
+            Counters::add(
+                &self.counters.search_wall_us,
+                (res.wall_secs * 1e6) as u64,
+            );
             self.db.record_tune(&key.kernel, dev, key.grid, res, &fm);
         };
         let answer = match self.db.lookup(&key.kernel, dev.name, key.grid) {

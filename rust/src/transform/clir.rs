@@ -87,6 +87,14 @@ pub struct KernelPlan {
     /// of a group before phase *k+1* is exactly OpenCL barrier semantics
     /// for the structured code we generate.
     pub phases: Vec<Vec<Stmt>>,
+    /// Work-groups proven independent by the write-set analysis
+    /// ([`crate::analysis::rw::owned_writes`]): every buffer is either
+    /// never written, or write-only with all writes at the work-item's
+    /// own grid point. Groups then write disjoint output regions and read
+    /// nothing any group writes, so the execution backend may run them
+    /// concurrently with bit-identical results. `false` = execute groups
+    /// serially.
+    pub parallel_groups: bool,
 }
 
 impl KernelPlan {
@@ -135,6 +143,7 @@ mod tests {
             scalars: vec![],
             locals: vec![],
             phases: vec![vec![]],
+            parallel_groups: false,
         }
     }
 

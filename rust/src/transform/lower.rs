@@ -204,6 +204,22 @@ pub fn lower(info: &KernelInfo, config: &TuningConfig) -> Result<KernelPlan, Tra
         phases.push(compute);
     }
 
+    // Work-group independence proof (drives the VM's parallel NDRange
+    // dispatch): every buffer must be either never written, or write-only
+    // with all writes at the work-item's own grid point. 1-D arrays are
+    // only owned under a statically 1-D grid — with a 2-D grid, threads
+    // that differ only in `idy` share every `a[idx]` element.
+    let owned = crate::analysis::rw::owned_writes(kernel);
+    let grid_is_1d = matches!(&info.prog.grid, GridSpec::Explicit(dims) if dims.get(1) == Some(&1));
+    let parallel_groups = buffers.iter().all(|b| match b.access {
+        crate::analysis::Access::Unused | crate::analysis::Access::ReadOnly => true,
+        crate::analysis::Access::WriteOnly => {
+            owned.get(&b.name).copied().unwrap_or(false)
+                && (b.image_dims.is_some() || grid_is_1d)
+        }
+        crate::analysis::Access::ReadWrite => false,
+    });
+
     Ok(KernelPlan {
         name: kernel.name.clone(),
         config: cfg,
@@ -212,6 +228,7 @@ pub fn lower(info: &KernelInfo, config: &TuningConfig) -> Result<KernelPlan, Tra
         scalars,
         locals,
         phases,
+        parallel_groups,
     })
 }
 
@@ -739,6 +756,37 @@ mod tests {
         // Scalars ABI: in_w,in_h,out_w,out_h,__gw,__gh.
         let names: Vec<&str> = p.scalars.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(names, ["in_w", "in_h", "out_w", "out_h", "__gw", "__gh"]);
+    }
+
+    #[test]
+    fn parallel_groups_proof() {
+        // blur: read-only input + write-only output at [idx][idy] → groups
+        // provably independent.
+        assert!(plan(BLUR, TuningConfig::default()).unwrap().parallel_groups);
+        // In-place update (read-write buffer) → serial.
+        let p = plan(
+            "void k(Image<float> a) { a[idx][idy] = a[idx][idy] * 2.0f; }",
+            TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(!p.parallel_groups);
+        // Offset write → not owned → serial.
+        let p = plan(
+            "#pragma imcl grid(in)\n\
+             void k(Image<float> in, Image<float> out) {\n\
+               out[idx + 1][idy] = in[idx][idy];\n\
+             }",
+            TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(!p.parallel_groups);
+        // 1-D array write at [idx] under a 1-D grid → independent.
+        let p = plan(
+            "#pragma imcl grid(64, 1)\nvoid k(float* a, float* b) { b[idx] = a[idx]; }",
+            TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(p.parallel_groups);
     }
 
     #[test]

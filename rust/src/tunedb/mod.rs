@@ -43,6 +43,20 @@ use crate::tuner::{FeatureMap, TuneResult};
 /// is always recorded; history feeds model training).
 const HISTORY_SAMPLES: usize = 48;
 
+/// Default per-(kernel, device, grid) history cap applied by compaction
+/// (~2–3 tuning runs' worth of samples). The store is append-only, so
+/// without compaction every re-tune of a hot key grows it forever.
+pub const HISTORY_CAP_PER_KEY: usize = 128;
+
+/// Outcome of a [`TuneDb::compact`] pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactStats {
+    /// Records surviving the pass.
+    pub kept: usize,
+    /// Records dropped (superseded winners + over-cap history).
+    pub removed: usize,
+}
+
 /// What the knowledge base knows about a (kernel, device, grid) key.
 #[derive(Debug, Clone)]
 pub enum Answer {
@@ -67,6 +81,41 @@ struct DbInner {
     /// training — unusable kernels must not pay a record-set clone and
     /// train attempt on every lookup.
     models: HashMap<String, (usize, Option<Arc<PerfModel>>)>,
+}
+
+/// The compaction policy over a record sequence (order-preserving):
+/// per (kernel, device, grid) key keep the latest winner and the `cap`
+/// most recent history records. Returns (kept, removed-count).
+fn compact_records(records: Vec<TuneRecord>, cap: usize) -> (Vec<TuneRecord>, usize) {
+    type Key = (String, &'static str, (usize, usize));
+    let mut last_winner: HashMap<Key, usize> = HashMap::new();
+    for (i, r) in records.iter().enumerate() {
+        if r.best {
+            last_winner.insert((r.kernel.clone(), r.device, r.grid), i);
+        }
+    }
+    let mut keep = vec![false; records.len()];
+    let mut hist_kept: HashMap<Key, usize> = HashMap::new();
+    for (i, r) in records.iter().enumerate().rev() {
+        let key = (r.kernel.clone(), r.device, r.grid);
+        if r.best {
+            keep[i] = last_winner.get(&key) == Some(&i);
+        } else {
+            let c = hist_kept.entry(key).or_insert(0);
+            if *c < cap {
+                keep[i] = true;
+                *c += 1;
+            }
+        }
+    }
+    let total = records.len();
+    let kept: Vec<TuneRecord> = records
+        .into_iter()
+        .enumerate()
+        .filter_map(|(i, r)| keep[i].then_some(r))
+        .collect();
+    let removed = total - kept.len();
+    (kept, removed)
 }
 
 impl DbInner {
@@ -116,7 +165,9 @@ impl TuneDb {
     }
 
     /// Backed by `path`; loads any existing file, skipping unusable
-    /// lines with a warning rather than refusing to start.
+    /// lines with a warning rather than refusing to start. Keys whose
+    /// history outgrew [`HISTORY_CAP_PER_KEY`] are compacted on load (and
+    /// the file rewritten), so long-lived deployments stay bounded.
     pub fn open(path: &Path) -> TuneDb {
         let mut inner = DbInner::default();
         if let Ok(text) = std::fs::read_to_string(path) {
@@ -125,7 +176,38 @@ impl TuneDb {
                 inner.index(inner.records.len() - 1);
             }
         }
-        TuneDb { path: Some(path.to_path_buf()), inner: Mutex::new(inner) }
+        let db = TuneDb { path: Some(path.to_path_buf()), inner: Mutex::new(inner) };
+        db.compact(HISTORY_CAP_PER_KEY);
+        db
+    }
+
+    /// Compact the store: per (kernel, device, grid) key, keep only the
+    /// *latest* winner record (the only one [`TuneDb::exact`] can ever
+    /// answer with) and the most recent `cap` history records; everything
+    /// older is dropped, in memory and — when anything was removed — on
+    /// disk via a full rewrite. Cached models are invalidated.
+    pub fn compact(&self, cap: usize) -> CompactStats {
+        let mut g = self.inner.lock().unwrap();
+        let old = std::mem::take(&mut g.records);
+        let total = old.len();
+        let (kept, removed) = compact_records(old, cap);
+        g.records = kept;
+        g.best.clear();
+        g.by_kernel.clear();
+        g.models.clear();
+        for i in 0..g.records.len() {
+            g.index(i);
+        }
+        debug_assert_eq!(total, g.records.len() + removed);
+        // Rewrite under the lock: concurrent `record()`s append to the
+        // file before releasing this same lock, so the rename can never
+        // clobber a record the index doesn't already hold.
+        if removed > 0 {
+            if let Some(path) = &self.path {
+                store::rewrite(path, &g.records);
+            }
+        }
+        CompactStats { kept: g.records.len(), removed }
     }
 
     pub fn path(&self) -> Option<&Path> {
@@ -160,10 +242,13 @@ impl TuneDb {
         if recs.is_empty() {
             return;
         }
+        // Disk append happens under the same lock as the in-memory index
+        // so an in-process `compact()` (which rewrites the file) can
+        // never race a concurrent append and erase it from disk.
+        let mut g = self.inner.lock().unwrap();
         if let Some(path) = &self.path {
             store::append(path, &recs);
         }
-        let mut g = self.inner.lock().unwrap();
         for rec in recs {
             g.records.push(rec);
             let idx = g.records.len() - 1;
@@ -489,6 +574,74 @@ mod tests {
     }
 
     #[test]
+    fn compact_caps_history_and_keeps_latest_winner() {
+        let db = TuneDb::ephemeral();
+        // Three generations of winners + 10 history records at one key,
+        // plus an untouched second key.
+        db.record(rec("sobel", &K40, 64, 3e-4, true));
+        db.record(rec("sobel", &K40, 64, 2e-4, true));
+        for i in 0..10 {
+            db.record(rec("sobel", &K40, 64, 1e-3 + i as f64 * 1e-5, false));
+        }
+        db.record(rec("sobel", &K40, 64, 1e-4, true));
+        db.record(rec("conv2d", &INTEL_I7, 128, 2e-3, true));
+        let stats = db.compact(4);
+        // Keeps: latest sobel winner + 4 newest history + conv2d winner.
+        assert_eq!(stats.kept, 6);
+        assert_eq!(stats.removed, 8);
+        assert_eq!(db.len(), 6);
+        assert_eq!(db.best_len(), 2);
+        // The latest winner still answers exact lookups.
+        assert_eq!(db.exact("sobel", K40.name, (64, 64)).unwrap().seconds, 1e-4);
+        // The surviving history is the most recent (largest seconds).
+        let hist: Vec<f64> = db
+            .snapshot()
+            .iter()
+            .filter(|r| !r.best)
+            .map(|r| r.seconds)
+            .collect();
+        let want: Vec<f64> = (6..10).map(|i| 1e-3 + i as f64 * 1e-5).collect();
+        assert_eq!(hist, want);
+    }
+
+    #[test]
+    fn compact_roundtrips_through_disk_and_load() {
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_compact_{}.tsv", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let db = TuneDb::open(&path);
+            // Two winner generations + more history than the load cap.
+            db.record(rec("sobel", &K40, 64, 5e-4, true));
+            for i in 0..(HISTORY_CAP_PER_KEY + 20) {
+                db.record(rec("sobel", &K40, 64, 1e-3 + i as f64 * 1e-6, false));
+            }
+            db.record(rec("sobel", &K40, 64, 1e-4, true));
+        }
+        // Reload: compaction on load trims to cap + 1 winner and rewrites
+        // the file; a second reload sees the already-compact store.
+        for _ in 0..2 {
+            let db = TuneDb::open(&path);
+            assert_eq!(db.len(), HISTORY_CAP_PER_KEY + 1);
+            assert_eq!(db.best_len(), 1);
+            let win = db.exact("sobel", K40.name, (64, 64)).unwrap();
+            assert_eq!(win.seconds, 1e-4);
+        }
+        // Explicit compaction with a tighter cap shrinks further and
+        // persists (the CLI path: `imagecl tunedb compact --cap N`).
+        {
+            let db = TuneDb::open(&path);
+            let stats = db.compact(8);
+            assert_eq!(stats.kept, 9);
+            assert!(stats.removed > 0);
+        }
+        let db = TuneDb::open(&path);
+        assert_eq!(db.len(), 9);
+        assert_eq!(db.exact("sobel", K40.name, (64, 64)).unwrap().seconds, 1e-4);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn record_tune_stores_winner_and_sampled_history() {
         let info = crate::analysis::KernelInfo::analyze(
             frontend(crate::bench_defs::SOBEL).unwrap(),
@@ -506,6 +659,7 @@ mod tests {
             evals: 200,
             space_size: 1000,
             history,
+            wall_secs: 0.02,
         };
         let db = TuneDb::ephemeral();
         db.record_tune("sobel", &K40, (64, 64), &res, &fm);

@@ -160,6 +160,26 @@ pub(crate) fn append(path: &Path, records: &[TuneRecord]) {
     }
 }
 
+/// Rewrite the whole store file (compaction). Written to a sibling temp
+/// file and renamed into place so a crash mid-rewrite never truncates
+/// the store. Best effort, like [`append`].
+pub(crate) fn rewrite(path: &Path, records: &[TuneRecord]) {
+    let mut buf = String::from(HEADER);
+    for r in records {
+        buf.push_str(&render_line(r));
+        buf.push('\n');
+    }
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let tmp = path.with_extension("tsv.tmp");
+    if let Err(e) =
+        std::fs::write(&tmp, &buf).and_then(|()| std::fs::rename(&tmp, path))
+    {
+        eprintln!("warning: cannot rewrite tunedb {path:?}: {e}");
+    }
+}
+
 /// Parse the legacy PR-1 warm-start TSV (`kernel device grid_w grid_h
 /// est_seconds config`) into winner records with the current device
 /// fingerprint and no stored features (the importer computes them when

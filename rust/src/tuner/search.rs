@@ -26,6 +26,24 @@ pub struct TuneResult {
     pub space_size: usize,
     /// (config, time) pairs in evaluation order — the search history.
     pub history: Vec<(TuningConfig, f64)>,
+    /// Wall-clock seconds spent inside the evaluator across every
+    /// measured candidate — the real cost of the search. With the
+    /// bytecode VM behind real-execution evaluators this is the number
+    /// that budget accounting (and `tunedb` acceptance comparisons)
+    /// should charge, not the eval count alone.
+    pub wall_secs: f64,
+}
+
+/// Time one evaluator call, accumulating into `wall`.
+fn timed_eval(
+    eval: &mut impl FnMut(&TuningConfig) -> f64,
+    cfg: &TuningConfig,
+    wall: &mut f64,
+) -> f64 {
+    let t0 = std::time::Instant::now();
+    let t = eval(cfg);
+    *wall += t0.elapsed().as_secs_f64();
+    t
 }
 
 /// Options for the ML two-phase search. Defaults mirror the paper's §7
@@ -62,8 +80,9 @@ pub fn exhaustive(
 ) -> TuneResult {
     let mut best: Option<(TuningConfig, f64)> = None;
     let mut evals = 0;
+    let mut wall = 0.0;
     for cfg in &space.configs {
-        let t = eval(cfg);
+        let t = timed_eval(&mut eval, cfg, &mut wall);
         evals += 1;
         if t.is_finite() && best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
             best = Some((cfg.clone(), t));
@@ -76,6 +95,7 @@ pub fn exhaustive(
         evals,
         space_size: space.len(),
         history: Vec::new(),
+        wall_secs: wall,
     }
 }
 
@@ -89,16 +109,17 @@ pub fn random(
     let mut rng = Rng::new(seed);
     let mut best: Option<(TuningConfig, f64)> = None;
     let mut history = Vec::new();
+    let mut wall = 0.0;
     for _ in 0..n {
         let cfg = space.configs[rng.below(space.len())].clone();
-        let t = eval(&cfg);
+        let t = timed_eval(&mut eval, &cfg, &mut wall);
         history.push((cfg.clone(), t));
         if t.is_finite() && best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
             best = Some((cfg, t));
         }
     }
     let (best, best_time) = best.expect("random search found no valid config");
-    TuneResult { best, best_time, evals: n, space_size: space.len(), history }
+    TuneResult { best, best_time, evals: n, space_size: space.len(), history, wall_secs: wall }
 }
 
 /// Warm-started neighborhood search: rank the whole space by feature
@@ -140,9 +161,10 @@ pub fn seeded(
     let mut best: Option<(TuningConfig, f64)> = None;
     let mut history = Vec::new();
     let mut evals = 0;
+    let mut wall = 0.0;
     for &(i, _) in scored.iter().take(budget) {
         let cfg = &space.configs[i];
-        let t = eval(cfg);
+        let t = timed_eval(&mut eval, cfg, &mut wall);
         history.push((cfg.clone(), t));
         evals += 1;
         if t.is_finite() && best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
@@ -156,12 +178,14 @@ pub fn seeded(
             evals,
             space_size: space.len(),
             history,
+            wall_secs: wall,
         },
         // Nothing valid near the seed (it pointed at an infeasible
         // corner) — fall back to scanning everything.
         None => {
             let mut res = exhaustive(space, eval);
             res.evals += evals;
+            res.wall_secs += wall;
             res
         }
     }
@@ -177,8 +201,9 @@ pub fn shortlist(
 ) -> Option<TuneResult> {
     let mut best: Option<(TuningConfig, f64)> = None;
     let mut history = Vec::new();
+    let mut wall = 0.0;
     for cfg in candidates {
-        let t = eval(cfg);
+        let t = timed_eval(&mut eval, cfg, &mut wall);
         history.push((cfg.clone(), t));
         if t.is_finite() && best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
             best = Some((cfg.clone(), t));
@@ -191,6 +216,7 @@ pub fn shortlist(
         evals: candidates.len(),
         space_size,
         history,
+        wall_secs: wall,
     })
 }
 
@@ -222,9 +248,10 @@ pub fn ml_two_phase(
     let mut xs: Vec<Vec<f64>> = Vec::new();
     let mut ys: Vec<f64> = Vec::new();
     let mut best: Option<(TuningConfig, f64)> = None;
+    let mut wall = 0.0;
     for &i in &sample_idx {
         let cfg = &space.configs[i];
-        let t = eval(cfg);
+        let t = timed_eval(&mut eval, cfg, &mut wall);
         history.push((cfg.clone(), t));
         if t.is_finite() {
             xs.push(fm.features(cfg));
@@ -241,6 +268,7 @@ pub fn ml_two_phase(
     if xs.len() < 8 {
         let mut res = exhaustive(space, eval);
         res.evals += evals;
+        res.wall_secs += wall;
         return res;
     }
 
@@ -263,7 +291,7 @@ pub fn ml_two_phase(
             continue;
         }
         let cfg = &space.configs[i];
-        let t = eval(cfg);
+        let t = timed_eval(&mut eval, cfg, &mut wall);
         history.push((cfg.clone(), t));
         evals += 1;
         taken += 1;
@@ -273,7 +301,7 @@ pub fn ml_two_phase(
     }
 
     let (best, best_time) = best.expect("ML search found no valid config");
-    TuneResult { best, best_time, evals, space_size: n, history }
+    TuneResult { best, best_time, evals, space_size: n, history, wall_secs: wall }
 }
 
 #[cfg(test)]

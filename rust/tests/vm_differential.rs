@@ -1,0 +1,273 @@
+//! Differential sweep: the bytecode VM must be **bit-identical** to the
+//! tree-walking interpreter (the retained oracle) for every gallery and
+//! paper kernel across a grid of tuning configurations — coarsening,
+//! interleaved mapping, local/image/constant memory, unrolling — plus
+//! the clamped-boundary and uchar-wrap edge cases.
+//!
+//! "Bit-identical" is literal: outputs are compared as `f64::to_bits`,
+//! not within a tolerance. The VM is only allowed to exist because this
+//! holds.
+
+use std::collections::BTreeMap;
+
+use imagecl::analysis::KernelInfo;
+use imagecl::bench_defs::gallery::{gallery_workload, GALLERY};
+use imagecl::bench_defs::{self, workload};
+use imagecl::exec::{execute_with, Arg, Buffer, Engine, ImageBuf};
+use imagecl::imagecl::{frontend, ScalarType};
+use imagecl::transform::{lower, TuningConfig};
+
+/// All image/array payloads of an argument map, as raw bits.
+fn bits(args: &BTreeMap<String, Arg>) -> Vec<(String, Vec<u64>)> {
+    args.iter()
+        .filter_map(|(name, a)| {
+            let data = match a {
+                Arg::Image(img) => &img.buf.data,
+                Arg::Array(b) => &b.data,
+                Arg::Scalar(_) => return None,
+            };
+            Some((name.clone(), data.iter().map(|v| v.to_bits()).collect()))
+        })
+        .collect()
+}
+
+/// Run `src` under `cfg` on both engines and assert exact agreement.
+/// `Engine::Vm` is hard: a plan the VM cannot lower fails the test — the
+/// whole kernel set must stay on the fast path.
+fn assert_engines_agree(
+    what: &str,
+    src: &str,
+    cfg: &TuningConfig,
+    mk_args: &dyn Fn() -> BTreeMap<String, Arg>,
+    grid: (usize, usize),
+) {
+    let info = KernelInfo::analyze(frontend(src).unwrap());
+    let plan = lower(&info, cfg).unwrap_or_else(|e| panic!("{what} under `{cfg}`: {e}"));
+    let mut tree_args = mk_args();
+    execute_with(&plan, &mut tree_args, grid, Engine::TreeWalk)
+        .unwrap_or_else(|e| panic!("{what} under `{cfg}` (tree): {e}"));
+    let mut vm_args = mk_args();
+    execute_with(&plan, &mut vm_args, grid, Engine::Vm)
+        .unwrap_or_else(|e| panic!("{what} under `{cfg}` (vm): {e}"));
+    let (t, v) = (bits(&tree_args), bits(&vm_args));
+    assert_eq!(t.len(), v.len(), "{what} under `{cfg}`: buffer sets differ");
+    for ((name, tb), (vname, vb)) in t.iter().zip(&v) {
+        assert_eq!(name, vname);
+        assert_eq!(tb.len(), vb.len(), "{what}/{name} under `{cfg}`: lengths differ");
+        for i in 0..tb.len() {
+            assert_eq!(
+                tb[i],
+                vb[i],
+                "{what} under `{cfg}`: `{name}` differs at {i}: \
+                 tree {} vs vm {}",
+                f64::from_bits(tb[i]),
+                f64::from_bits(vb[i])
+            );
+        }
+    }
+}
+
+/// The deterministic config grid for a kernel: every combination of
+/// coarsening × mapping, crossed with each memory-space choice the
+/// kernel is eligible for, plus full-unroll variants.
+fn config_grid(info: &KernelInfo) -> Vec<TuningConfig> {
+    let shapes: [(usize, usize, usize, usize, bool); 5] = [
+        (16, 16, 1, 1, false),
+        (8, 4, 2, 2, false),
+        (4, 4, 3, 2, true),
+        (8, 2, 1, 4, true),
+        (2, 2, 5, 1, false),
+    ];
+    let mut out = Vec::new();
+    for &(wx, wy, cx, cy, il) in &shapes {
+        let base = TuningConfig {
+            wg: [wx, wy],
+            coarsen: [cx, cy],
+            interleaved: il,
+            ..Default::default()
+        };
+        // Memory-space variants: global, local (eligible images), image
+        // (eligible), each with constant memory on eligible arrays.
+        let mut variants = vec![base.clone()];
+        let mut lmem = base.clone();
+        let mut any_lmem = false;
+        let mut imem = base.clone();
+        let mut any_imem = false;
+        for p in &info.prog.kernel.params {
+            if info.local_mem_eligible(&p.name) {
+                lmem.local_mem.insert(p.name.clone(), true);
+                any_lmem = true;
+            }
+            if info.image_mem_eligible(&p.name) {
+                imem.image_mem.insert(p.name.clone(), true);
+                any_imem = true;
+            }
+            for v in [&mut lmem, &mut imem] {
+                if info.constant_mem_eligible(&p.name, 64 << 10) {
+                    v.constant_mem.insert(p.name.clone(), true);
+                }
+            }
+        }
+        if any_lmem {
+            variants.push(lmem);
+        }
+        if any_imem {
+            variants.push(imem);
+        }
+        // Unrolled flavor of each variant (full unroll of every
+        // unrollable loop).
+        let unrolled: Vec<TuningConfig> = variants
+            .iter()
+            .filter(|_| !info.unrollable_loops().is_empty())
+            .map(|v| {
+                let mut u = v.clone();
+                for l in info.unrollable_loops() {
+                    u.unroll.insert(l.id, 0);
+                }
+                u
+            })
+            .collect();
+        variants.extend(unrolled);
+        out.extend(variants);
+    }
+    out
+}
+
+#[test]
+fn gallery_kernels_bit_identical_across_config_grid() {
+    // Odd size so the rounding guard paths execute.
+    let (w, h) = (33, 27);
+    for (name, src) in GALLERY {
+        let info = KernelInfo::analyze(frontend(src).unwrap());
+        let cfgs = config_grid(&info);
+        assert!(cfgs.len() >= 5, "{name}: degenerate config grid");
+        for cfg in &cfgs {
+            assert_engines_agree(
+                name,
+                src,
+                cfg,
+                &|| gallery_workload(name, w, h, 1234),
+                (w, h),
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_kernels_bit_identical_across_config_grid() {
+    // conv2d covers the uchar-wrap store path and the clamped boundary;
+    // sepconv the constant boundary + constant memory; sobel/harris the
+    // multi-output and 2×2-block shapes.
+    let (w, h) = (21, 17);
+    for kid in ["sepconv_row", "sepconv_col", "conv2d", "sobel", "harris"] {
+        let src = bench_defs::kernel_by_id(kid).unwrap().source;
+        let info = KernelInfo::analyze(frontend(src).unwrap());
+        for cfg in &config_grid(&info) {
+            assert_engines_agree(kid, src, cfg, &|| workload(kid, w, h, 77), (w, h));
+        }
+    }
+}
+
+#[test]
+fn uchar_wrap_bit_identical() {
+    // The C-cast wrap on narrow stores (300 → 44 in a uchar image) must
+    // round-trip the VM's int register file exactly.
+    let src = "void k(Image<uchar> a, Image<uchar> b) {\n\
+                 a[idx][idy] = 300;\n\
+                 b[idx][idy] = (uchar)(a[idx][idy] + idx * 251 - idy * 509);\n\
+               }";
+    let mk = || {
+        let mut args = BTreeMap::new();
+        args.insert("a".to_string(), Arg::Image(ImageBuf::new(ScalarType::U8, 13, 9)));
+        args.insert("b".to_string(), Arg::Image(ImageBuf::new(ScalarType::U8, 13, 9)));
+        args
+    };
+    for cfg_s in ["wg=16x16 px=1x1 map=blocked", "wg=4x2 px=3x2 map=interleaved"] {
+        let cfg = TuningConfig::parse(cfg_s).unwrap();
+        assert_engines_agree("uchar_wrap", src, &cfg, &mk, (13, 9));
+    }
+}
+
+#[test]
+fn clamped_boundary_bit_identical() {
+    // Clamped reads index-clamp at the edges — all-int min/max chains in
+    // the VM's int file.
+    let src = "#pragma imcl grid(in)\n\
+               #pragma imcl boundary(in, clamped)\n\
+               void k(Image<float> in, Image<float> out) {\n\
+                 out[idx][idy] = in[idx - 2][idy + 3] + in[idx + 2][idy - 3];\n\
+               }";
+    let mk = || {
+        let mut args = BTreeMap::new();
+        let input = ImageBuf::from_fn(ScalarType::F32, 19, 11, |x, y| (x * 31 + y * 7) as f64);
+        args.insert("in".to_string(), Arg::Image(input));
+        args.insert("out".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 19, 11)));
+        args
+    };
+    for cfg_s in [
+        "wg=16x16 px=1x1 map=blocked",
+        "wg=8x4 px=2x2 map=interleaved",
+        "wg=8x8 px=1x1 map=blocked lmem=in",
+    ] {
+        let cfg = TuningConfig::parse(cfg_s).unwrap();
+        assert_engines_agree("clamped", src, &cfg, &mk, (19, 11));
+    }
+}
+
+#[test]
+fn parallel_dispatch_bit_identical_at_scale() {
+    // Large enough (161×121 > the VM's parallel threshold) that proven-
+    // independent work-groups actually fan out across threads; the
+    // result must still match the serial oracle bit-for-bit — and not
+    // just under the naive config: coarsening, interleaved mapping and
+    // local-memory staging all reshape which pixels each work-item owns,
+    // so each must hold up under concurrent group execution too. Odd
+    // sizes keep the rounding-guard threads in play.
+    let (w, h) = (161, 121);
+    let src = imagecl::bench_defs::gallery::BLUR;
+    let info = KernelInfo::analyze(frontend(src).unwrap());
+    let plan = lower(&info, &TuningConfig::default()).unwrap();
+    assert!(plan.parallel_groups, "blur should prove group independence");
+    for cfg_s in [
+        "wg=16x16 px=1x1 map=blocked",
+        "wg=8x4 px=3x2 map=blocked",
+        "wg=8x8 px=2x2 map=interleaved",
+        "wg=8x8 px=1x1 map=blocked lmem=in",
+        "wg=4x4 px=2x4 map=interleaved lmem=in unroll=1:0,2:0",
+    ] {
+        let cfg = TuningConfig::parse(cfg_s).unwrap();
+        assert_engines_agree(
+            "blur-parallel",
+            src,
+            &cfg,
+            &|| gallery_workload("blur", w, h, 9),
+            (w, h),
+        );
+    }
+}
+
+#[test]
+fn scalar_and_array_params_bit_identical() {
+    // Scalars inline as constants; runtime-indexed arrays stay loads.
+    let src = "#pragma imcl grid(a)\n\
+               #pragma imcl array_size(lut, 4)\n\
+               void k(Image<float> a, float* lut, float gain, int shift) {\n\
+                 int i = (idx + shift) % 4;\n\
+                 a[idx][idy] = lut[i] * gain + (float)(i);\n\
+               }";
+    let mk = || {
+        let mut args = BTreeMap::new();
+        args.insert("a".to_string(), Arg::Image(ImageBuf::new(ScalarType::F32, 12, 10)));
+        args.insert(
+            "lut".to_string(),
+            Arg::Array(Buffer::from_f64(ScalarType::F32, vec![0.5, 1.5, 2.5, 3.5])),
+        );
+        args.insert("gain".to_string(), Arg::Scalar(imagecl::exec::Value::F(1.25)));
+        args.insert("shift".to_string(), Arg::Scalar(imagecl::exec::Value::I(3)));
+        args
+    };
+    for cfg_s in ["wg=16x16 px=1x1 map=blocked", "wg=4x4 px=2x2 map=interleaved cmem=lut"] {
+        let cfg = TuningConfig::parse(cfg_s).unwrap();
+        assert_engines_agree("scalar_array", src, &cfg, &mk, (12, 10));
+    }
+}
