@@ -236,6 +236,136 @@ impl ConstEnv {
     }
 }
 
+/// An index expression decomposed into `scale * base + offset-set` form,
+/// where `base` is one of the thread-index builtins or absent. This is
+/// the *scaled* generalization of [`Affine`] used by the strided-write
+/// disjointness proof ([`crate::analysis::rw::disjoint_writes`]): a write
+/// to `a[idx * 2 + 1]` decomposes to `base = idx, scale = 2, offsets =
+/// {1}`, and distinct threads then provably touch distinct elements
+/// whenever no two offsets differ by a multiple of the scale.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScaledAffine {
+    /// `Some("idx")` / `Some("idy")` / `Some("idz")` or `None` (pure
+    /// constant; `scale` is then 0).
+    pub base: Option<String>,
+    /// Multiplier on the base (never 0 when `base` is `Some`).
+    pub scale: i64,
+    pub offsets: ValueSet,
+}
+
+impl ScaledAffine {
+    fn constant(offsets: ValueSet) -> ScaledAffine {
+        ScaledAffine { base: None, scale: 0, offsets }
+    }
+
+    /// Normalize: a zero scale means the base contributes nothing.
+    fn norm(self) -> ScaledAffine {
+        if self.scale == 0 {
+            ScaledAffine { base: None, ..self }
+        } else {
+            self
+        }
+    }
+}
+
+/// Cross-combine two offset sets with `f`, bailing out (`None`) on
+/// overflow or when the result outgrows [`MAX_SET`].
+fn cross(
+    a: &ValueSet,
+    b: &ValueSet,
+    f: impl Fn(i64, i64) -> Option<i64>,
+) -> Option<ValueSet> {
+    if a.len().checked_mul(b.len())? > MAX_SET {
+        return None;
+    }
+    let mut out = ValueSet::new();
+    for &x in a {
+        for &y in b {
+            out.insert(f(x, y)?);
+        }
+    }
+    if out.len() > MAX_SET {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Decompose an index expression into [`ScaledAffine`] form w.r.t. the
+/// builtin thread indices. Unlike [`affine_of`] (which implements the
+/// paper's stencil restriction and rejects any scaling), this handles
+/// `idx * c`, `c * idx`, `idx + idx`, negation and constant shifts —
+/// everything a strided write pattern is made of. `None` = not
+/// decomposable (mixed bases, non-constant scale, overflow).
+pub fn scaled_affine_of(env: &ConstEnv, e: &Expr) -> Option<ScaledAffine> {
+    match e {
+        Expr::Ident(name) if crate::imagecl::sema::BUILTIN_IDS.contains(&name.as_str()) => {
+            Some(ScaledAffine { base: Some(name.clone()), scale: 1, offsets: [0].into() })
+        }
+        Expr::Binary { op: op @ (BinOp::Add | BinOp::Sub), lhs, rhs } => {
+            let a = scaled_affine_of(env, lhs)?;
+            let b = scaled_affine_of(env, rhs)?;
+            let base = match (&a.base, &b.base) {
+                (Some(x), Some(y)) if x == y => Some(x.clone()),
+                (Some(x), None) => Some(x.clone()),
+                (None, Some(y)) => Some(y.clone()),
+                (None, None) => None,
+                // Mixed bases (`idx + idy`) have no single-base form.
+                _ => return None,
+            };
+            let (scale, offsets) = if *op == BinOp::Add {
+                (a.scale.checked_add(b.scale)?, cross(&a.offsets, &b.offsets, |x, y| x.checked_add(y))?)
+            } else {
+                (a.scale.checked_sub(b.scale)?, cross(&a.offsets, &b.offsets, |x, y| x.checked_sub(y))?)
+            };
+            Some(ScaledAffine { base, scale, offsets }.norm())
+        }
+        Expr::Binary { op: BinOp::Mul, lhs, rhs } => {
+            // One side must be a *single* compile-time constant.
+            let scaled = |sa: ScaledAffine, c: i64| -> Option<ScaledAffine> {
+                let offsets: Option<ValueSet> =
+                    sa.offsets.iter().map(|&v| v.checked_mul(c)).collect();
+                Some(
+                    ScaledAffine {
+                        base: sa.base,
+                        scale: sa.scale.checked_mul(c)?,
+                        offsets: offsets?,
+                    }
+                    .norm(),
+                )
+            };
+            if let Some(c) = env.eval_const(rhs) {
+                return scaled(scaled_affine_of(env, lhs)?, c);
+            }
+            if let Some(c) = env.eval_const(lhs) {
+                return scaled(scaled_affine_of(env, rhs)?, c);
+            }
+            None
+        }
+        Expr::Unary { op: UnOp::Neg, expr } => {
+            let a = scaled_affine_of(env, expr)?;
+            let offsets: Option<ValueSet> =
+                a.offsets.iter().map(|&v| v.checked_neg()).collect();
+            Some(
+                ScaledAffine {
+                    base: a.base,
+                    scale: a.scale.checked_neg()?,
+                    offsets: offsets?,
+                }
+                .norm(),
+            )
+        }
+        // Casts are NOT transparent here: a narrowing cast wraps at
+        // runtime (`a[(uchar)idx]` collides for idx and idx+256), so
+        // seeing through one would make the disjointness proof unsound.
+        // (The paper-restricted [`affine_of`] never accepted casts
+        // either.) Rejecting them keeps exotic write indices on the
+        // conservative serial path.
+        Expr::Cast { .. } => None,
+        other => env.eval_set(other).map(ScaledAffine::constant),
+    }
+}
+
 /// An index expression decomposed into `base + offset-set` form, where
 /// `base` is one of the thread-index builtins or absent (paper §5.2.4:
 /// references must have the form `image[idx + c1][idy + c2]`).
@@ -410,5 +540,78 @@ mod tests {
         let env = ConstEnv::default();
         let e = Expr::bin(BinOp::Div, Expr::int(4), Expr::int(0));
         assert!(env.eval_set(&e).is_none());
+    }
+
+    #[test]
+    fn scaled_affine_handles_strided_forms() {
+        let env = ConstEnv::default();
+        // idx * 2 + 1
+        let e = Expr::add(
+            Expr::mul(Expr::ident("idx"), Expr::int(2)),
+            Expr::int(1),
+        );
+        let a = scaled_affine_of(&env, &e).unwrap();
+        assert_eq!(a.base.as_deref(), Some("idx"));
+        assert_eq!(a.scale, 2);
+        assert_eq!(a.offsets, ValueSet::from([1]));
+        // 3 * idy
+        let e = Expr::mul(Expr::int(3), Expr::ident("idy"));
+        let a = scaled_affine_of(&env, &e).unwrap();
+        assert_eq!((a.base.as_deref(), a.scale), (Some("idy"), 3));
+        // idx + idx (the downsample idiom for idx * 2)
+        let e = Expr::add(Expr::ident("idx"), Expr::ident("idx"));
+        let a = scaled_affine_of(&env, &e).unwrap();
+        assert_eq!((a.base.as_deref(), a.scale), (Some("idx"), 2));
+        assert_eq!(a.offsets, ValueSet::from([0]));
+        // Plain idx + c stays scale 1.
+        let e = Expr::add(Expr::ident("idx"), Expr::int(4));
+        let a = scaled_affine_of(&env, &e).unwrap();
+        assert_eq!((a.scale, a.offsets.clone()), (1, ValueSet::from([4])));
+    }
+
+    #[test]
+    fn scaled_affine_with_loop_offsets() {
+        let (env, _) = env_of(
+            "void k(float* a) { for (int i = 0; i < 2; i++) { a[idx * 2 + i] = 0.0f; } }",
+        );
+        let e = Expr::add(
+            Expr::mul(Expr::ident("idx"), Expr::int(2)),
+            Expr::ident("i"),
+        );
+        let a = scaled_affine_of(&env, &e).unwrap();
+        assert_eq!((a.base.as_deref(), a.scale), (Some("idx"), 2));
+        assert_eq!(a.offsets, ValueSet::from([0, 1]));
+    }
+
+    #[test]
+    fn scaled_affine_rejects_mixed_and_runtime() {
+        let env = ConstEnv::default();
+        // idx + idy: no single base.
+        let e = Expr::add(Expr::ident("idx"), Expr::ident("idy"));
+        assert!(scaled_affine_of(&env, &e).is_none());
+        // idx * idx: non-constant scale.
+        let e = Expr::mul(Expr::ident("idx"), Expr::ident("idx"));
+        assert!(scaled_affine_of(&env, &e).is_none());
+        // Runtime value.
+        assert!(scaled_affine_of(&env, &Expr::ident("n")).is_none());
+        // idx - idx degenerates to a pure constant.
+        let e = Expr::sub(Expr::ident("idx"), Expr::ident("idx"));
+        let a = scaled_affine_of(&env, &e).unwrap();
+        assert_eq!((a.base, a.scale), (None, 0));
+    }
+
+    #[test]
+    fn scaled_affine_rejects_casts() {
+        // `(uchar)idx` wraps at runtime: idx = 0 and idx = 256 hit the
+        // same element, so a cast must never look affine to the
+        // disjointness proof — standalone or nested.
+        let env = ConstEnv::default();
+        let cast = Expr::Cast {
+            ty: crate::imagecl::ScalarType::U8,
+            expr: Box::new(Expr::ident("idx")),
+        };
+        assert!(scaled_affine_of(&env, &cast).is_none());
+        let nested = Expr::add(cast, Expr::int(1));
+        assert!(scaled_affine_of(&env, &nested).is_none());
     }
 }

@@ -17,7 +17,7 @@ pub mod stencil;
 
 use std::collections::HashMap;
 
-pub use constprop::{affine_of, Affine, ConstEnv, ValueSet};
+pub use constprop::{affine_of, scaled_affine_of, Affine, ConstEnv, ScaledAffine, ValueSet};
 pub use cost::ThreadCost;
 pub use loops::LoopInfo;
 pub use rw::Access;

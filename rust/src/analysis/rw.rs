@@ -9,6 +9,8 @@ use std::collections::HashMap;
 
 use crate::imagecl::ast::*;
 
+use super::constprop::{scaled_affine_of, ConstEnv, ValueSet, MAX_SET};
+
 /// Access classification of one buffer parameter.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Access {
@@ -129,6 +131,140 @@ pub fn owned_writes(kernel: &KernelFn) -> HashMap<String, bool> {
     owned
 }
 
+/// Per-dimension write pattern accumulated across every store to one
+/// buffer: all writes must share one stride, offsets are unioned.
+#[derive(Debug, Clone)]
+struct DimWrites {
+    scale: i64,
+    offsets: ValueSet,
+}
+
+/// Per-buffer accumulation state for [`disjoint_writes`].
+#[derive(Debug, Clone)]
+enum WriteAcc {
+    /// Never written (vacuously disjoint).
+    NoWrites,
+    /// Every write so far is affine in the dimension's own thread index.
+    Dims(Vec<DimWrites>),
+    /// Some write doesn't fit the provable pattern.
+    Bad,
+}
+
+/// Affine strided-write disjointness: for each buffer parameter, `true`
+/// iff distinct logical threads provably write **disjoint** element
+/// sets. This generalizes [`owned_writes`] from the exact
+/// `a[idx]` / `a[idx][idy]` form to *scaled* affine forms like
+/// `a[idx * 2]` / `a[idx * 2 + 1]` (upsampling, interleaved-channel and
+/// block-layout writes), using [`scaled_affine_of`] from the constant
+/// propagation environment.
+///
+/// The proof per dimension: every write's index must decompose to
+/// `scale * id + d` with one shared non-zero `scale` (the dimension's own
+/// thread index — `idx` for x, `idy` for y) and compile-time offset set
+/// `D`. Two threads `i ≠ j` (or one thread's two offsets `d1 ≠ d2`)
+/// collide in that dimension only if `scale | (d1 - d2)`, so requiring
+/// every pair of distinct offsets to be non-divisible by the scale makes
+/// the dimension injective. Any two distinct threads differ in `idx` or
+/// `idy`, so injectivity of the matching dimension separates their
+/// pixels. (For 1-D arrays the caller must additionally know the grid is
+/// 1-D — threads differing only in `idy` share every `a[f(idx)]`
+/// element; see the gate in `transform::lower`.)
+pub fn disjoint_writes(kernel: &KernelFn, env: &ConstEnv) -> HashMap<String, bool> {
+    let mut acc: HashMap<String, WriteAcc> = kernel
+        .params
+        .iter()
+        .filter(|p| p.ty.is_buffer())
+        .map(|p| (p.name.clone(), WriteAcc::NoWrites))
+        .collect();
+
+    kernel.walk_stmts(&mut |s| {
+        let Stmt::Assign { lhs: LValue::Index { base, indices }, .. } = s else {
+            return;
+        };
+        let Some(entry) = acc.get_mut(base) else { return };
+        if matches!(entry, WriteAcc::Bad) {
+            return;
+        }
+        // Expected base ident per dimension: [idx] for 1-D, [idx][idy]
+        // for images (3-D is rejected by the lowering anyway).
+        let expected: &[&str] = match indices.len() {
+            1 => &["idx"],
+            2 => &["idx", "idy"],
+            _ => {
+                *entry = WriteAcc::Bad;
+                return;
+            }
+        };
+        let mut dims = Vec::with_capacity(indices.len());
+        for (ix, &want) in indices.iter().zip(expected) {
+            match scaled_affine_of(env, ix) {
+                Some(sa) if sa.base.as_deref() == Some(want) && sa.scale != 0 => {
+                    dims.push(DimWrites { scale: sa.scale, offsets: sa.offsets });
+                }
+                _ => {
+                    *entry = WriteAcc::Bad;
+                    return;
+                }
+            }
+        }
+        let replace = match entry {
+            WriteAcc::NoWrites => Some(WriteAcc::Dims(dims)),
+            WriteAcc::Dims(prev) => {
+                let mut ok = true;
+                for (p, d) in prev.iter_mut().zip(dims) {
+                    if p.scale != d.scale {
+                        ok = false;
+                        break;
+                    }
+                    p.offsets.extend(d.offsets);
+                    if p.offsets.len() > MAX_SET {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    None
+                } else {
+                    Some(WriteAcc::Bad)
+                }
+            }
+            WriteAcc::Bad => None,
+        };
+        if let Some(r) = replace {
+            *entry = r;
+        }
+    });
+
+    acc.into_iter()
+        .map(|(name, a)| {
+            let ok = match a {
+                WriteAcc::NoWrites => true,
+                WriteAcc::Bad => false,
+                WriteAcc::Dims(dims) => dims.iter().all(dim_injective),
+            };
+            (name, ok)
+        })
+        .collect()
+}
+
+/// Is `scale * id + D` injective over distinct `(id, d)` pairs? Needs
+/// every pair of *distinct* offsets to differ by a non-multiple of the
+/// scale (a multiple difference is exactly what lets thread `i + k`'s
+/// offset land on thread `i`'s element).
+fn dim_injective(dim: &DimWrites) -> bool {
+    debug_assert_ne!(dim.scale, 0);
+    let offs: Vec<i64> = dim.offsets.iter().copied().collect();
+    for (k, &d1) in offs.iter().enumerate() {
+        for &d2 in &offs[k + 1..] {
+            match d1.checked_sub(d2) {
+                Some(diff) if diff % dim.scale != 0 => {}
+                _ => return false,
+            }
+        }
+    }
+    true
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,5 +368,103 @@ mod tests {
              void k(Image<float> a, float* lut) { a[(int)(lut[0])][idy] = 0.0f; }",
         );
         assert_eq!(acc["lut"], Access::ReadOnly);
+    }
+
+    fn disjoint_src(src: &str) -> HashMap<String, bool> {
+        let p = Program::parse(src).unwrap();
+        let env = ConstEnv::build(&p.kernel);
+        disjoint_writes(&p.kernel, &env)
+    }
+
+    #[test]
+    fn disjoint_covers_owned_forms() {
+        let d = disjoint_src(
+            "#pragma imcl grid(in)\n\
+             void k(Image<float> in, Image<float> out) {\n\
+               out[idx][idy] = in[idx + 1][idy];\n\
+             }",
+        );
+        assert!(d["out"]);
+        assert!(d["in"]); // never written → vacuously disjoint
+    }
+
+    #[test]
+    fn strided_writes_are_disjoint() {
+        // Interleaved-channel write: each thread owns {2*idx, 2*idx + 1}.
+        let d = disjoint_src(
+            "#pragma imcl grid(16, 1)\n\
+             void k(float* a) { a[idx * 2] = 0.0f; a[idx * 2 + 1] = 1.0f; }",
+        );
+        assert!(d["a"]);
+        // Loop-offset flavor of the same pattern.
+        let d = disjoint_src(
+            "#pragma imcl grid(16, 1)\n\
+             void k(float* a) {\n\
+               for (int i = 0; i < 2; i++) { a[idx * 2 + i] = 0.0f; }\n\
+             }",
+        );
+        assert!(d["a"]);
+        // 2-D block write: out[idx*2 + i][idy*2 + j] covers a 2x2 tile.
+        let d = disjoint_src(
+            "#pragma imcl grid(out)\n\
+             void k(Image<float> out) {\n\
+               for (int i = 0; i < 2; i++) {\n\
+                 for (int j = 0; j < 2; j++) { out[idx * 2 + i][idy * 2 + j] = 0.0f; }\n\
+               }\n\
+             }",
+        );
+        assert!(d["out"]);
+    }
+
+    #[test]
+    fn constant_offset_write_is_disjoint() {
+        // a[idx + 1]: shifted but still one element per thread (bounds
+        // are the runtime's problem, not the disjointness proof's).
+        let d = disjoint_src("#pragma imcl grid(16, 1)\nvoid k(float* a) { a[idx + 1] = 0.0f; }");
+        assert!(d["a"]);
+    }
+
+    #[test]
+    fn colliding_strides_rejected() {
+        // Offsets 0 and 2 differ by the stride → thread i+1 lands on
+        // thread i's element.
+        let d = disjoint_src(
+            "#pragma imcl grid(16, 1)\n\
+             void k(float* a) { a[idx * 2] = 0.0f; a[idx * 2 + 2] = 1.0f; }",
+        );
+        assert!(!d["a"]);
+        // Two unit-stride offsets always collide.
+        let d = disjoint_src(
+            "#pragma imcl grid(16, 1)\n\
+             void k(float* a) { a[idx] = 0.0f; a[idx + 1] = 1.0f; }",
+        );
+        assert!(!d["a"]);
+        // Mismatched strides across writes are not provable.
+        let d = disjoint_src(
+            "#pragma imcl grid(16, 1)\n\
+             void k(float* a) { a[idx * 2] = 0.0f; a[idx * 3] = 1.0f; }",
+        );
+        assert!(!d["a"]);
+    }
+
+    #[test]
+    fn non_affine_writes_rejected() {
+        let d = disjoint_src(
+            "#pragma imcl grid(a)\n\
+             void k(Image<float> a, float* lut) {\n\
+               a[(int)(lut[0])][idy] = 0.0f;\n\
+             }",
+        );
+        assert!(!d["a"]);
+        // idy used in the x dimension: wrong base for the dimension.
+        let d = disjoint_src(
+            "#pragma imcl grid(a)\nvoid k(Image<float> a) { a[idy][idx] = 0.0f; }",
+        );
+        assert!(!d["a"]);
+        // Scale that cancels to zero writes one shared element.
+        let d = disjoint_src(
+            "#pragma imcl grid(16, 1)\nvoid k(float* a) { a[idx - idx] = 0.0f; }",
+        );
+        assert!(!d["a"]);
     }
 }

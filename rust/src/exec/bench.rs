@@ -1,8 +1,13 @@
 //! The execution-engine benchmark behind `imagecl bench` and
-//! `benches/exec.rs`: run the gallery kernels through both engines — the
-//! bytecode VM and the tree-walking oracle — verify the outputs are
-//! bit-identical, and report throughput (pixels/sec) plus the VM's
-//! speedup as `BENCH_exec.json`.
+//! `benches/exec.rs`: run the gallery kernels through the engine ladder
+//! — the tree-walking oracle, the unoptimized VM (the PR-3 baseline),
+//! the optimized scalar VM, and the optimized+batched VM — verify every
+//! VM variant's output is bit-identical to the oracle, and report
+//! per-engine throughput (pixels/sec) plus the speedups as
+//! `BENCH_exec.json`. [`run_and_write`] additionally enforces the
+//! regression gate: on the blur workload the optimized VM must not lose
+//! to the unoptimized VM (within timer-noise slack) — CI runs this via
+//! `imagecl bench --smoke`.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -38,24 +43,32 @@ impl Default for BenchOpts {
 }
 
 impl BenchOpts {
-    /// CI smoke configuration: small grid, single repetition — exercises
-    /// both engines and the divergence check without burning minutes.
+    /// CI smoke configuration: small grid, two repetitions — exercises
+    /// every engine, the divergence check and the optimizer regression
+    /// gate without burning minutes (best-of-2 keeps the gate off timer
+    /// noise).
     pub fn smoke() -> BenchOpts {
-        BenchOpts { size: 128, iters: 1, ..Default::default() }
+        BenchOpts { size: 128, iters: 2, ..Default::default() }
     }
 }
 
-/// One kernel's measurements.
+/// One kernel's measurements across the engine ladder.
 #[derive(Debug, Clone)]
 pub struct KernelBench {
     pub name: String,
     pub pixels: usize,
     /// Best-of-`iters` wall time per engine, seconds.
     pub tree_secs: f64,
+    /// Unoptimized, unbatched VM — the PR-3 baseline.
+    pub vm_unopt_secs: f64,
+    /// Optimized VM, scalar loop (isolates the optimizer pipeline).
+    pub vm_scalar_secs: f64,
+    /// Optimized VM with batched row interpretation (the full path).
     pub vm_secs: f64,
-    /// Work-groups proven independent → VM ran groups in parallel.
+    /// Work-groups proven independent → VM ran groups in parallel (and
+    /// rows batched where specialization succeeded).
     pub parallel: bool,
-    /// VM output was bit-identical to the tree-walker's.
+    /// Every VM variant's output was bit-identical to the tree-walker's.
     pub identical: bool,
 }
 
@@ -68,8 +81,22 @@ impl KernelBench {
         self.pixels as f64 / self.vm_secs
     }
 
+    pub fn vm_unopt_pix_per_sec(&self) -> f64 {
+        self.pixels as f64 / self.vm_unopt_secs
+    }
+
+    pub fn vm_scalar_pix_per_sec(&self) -> f64 {
+        self.pixels as f64 / self.vm_scalar_secs
+    }
+
+    /// Full VM vs the oracle.
     pub fn speedup(&self) -> f64 {
         self.tree_secs / self.vm_secs
+    }
+
+    /// Optimizer + batching vs the PR-3 VM (the acceptance headline).
+    pub fn opt_speedup(&self) -> f64 {
+        self.vm_unopt_secs / self.vm_secs
     }
 }
 
@@ -92,17 +119,50 @@ impl BenchReport {
         self.kernels.iter().find(|k| k.name == "blur").map(KernelBench::speedup)
     }
 
+    /// Optimizer + batching speedup over the PR-3 VM on blur (the PR-5
+    /// acceptance headline; ≥ 1.5× expected at 1024²).
+    pub fn blur_opt_speedup(&self) -> Option<f64> {
+        self.kernels
+            .iter()
+            .find(|k| k.name == "blur")
+            .map(KernelBench::opt_speedup)
+    }
+
+    /// The CI regression gate: `Err` when the optimized+batched VM lost
+    /// to the unoptimized VM on the blur workload (with slack for timer
+    /// noise on the smoke grid).
+    pub fn check_opt_regression(&self) -> Result<(), String> {
+        const SLACK: f64 = 1.25;
+        let Some(b) = self.kernels.iter().find(|k| k.name == "blur") else {
+            return Ok(()); // blur not in this run's kernel set
+        };
+        if b.vm_secs > b.vm_unopt_secs * SLACK {
+            return Err(format!(
+                "regression gate: optimized VM ({:.3} ms) is slower than the \
+                 unoptimized VM ({:.3} ms) on blur ({:.2}x, allowed slack {SLACK}x)",
+                b.vm_secs * 1e3,
+                b.vm_unopt_secs * 1e3,
+                b.opt_speedup(),
+            ));
+        }
+        Ok(())
+    }
+
     /// Hand-rolled JSON (the offline crate set has no serde).
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{{");
         let _ = writeln!(s, "  \"size\": [{}, {}],", self.size, self.size);
         let _ = writeln!(s, "  \"threads\": {},", self.threads);
-        let blur = self
-            .blur_speedup()
-            .map(|v| format!("{v:.3}"))
-            .unwrap_or_else(|| "null".to_string());
-        let _ = writeln!(s, "  \"blur_speedup\": {blur},");
+        let fmt = |v: Option<f64>| {
+            v.map(|v| format!("{v:.3}")).unwrap_or_else(|| "null".to_string())
+        };
+        let _ = writeln!(s, "  \"blur_speedup\": {},", fmt(self.blur_speedup()));
+        let _ = writeln!(
+            s,
+            "  \"blur_opt_speedup\": {},",
+            fmt(self.blur_opt_speedup())
+        );
         let _ = writeln!(s, "  \"all_identical\": {},", self.all_identical());
         let _ = writeln!(s, "  \"kernels\": [");
         for (i, k) in self.kernels.iter().enumerate() {
@@ -110,10 +170,23 @@ impl BenchReport {
             let _ = writeln!(s, "      \"name\": \"{}\",", k.name);
             let _ = writeln!(s, "      \"pixels\": {},", k.pixels);
             let _ = writeln!(s, "      \"tree_secs\": {:.6},", k.tree_secs);
+            let _ = writeln!(s, "      \"vm_unopt_secs\": {:.6},", k.vm_unopt_secs);
+            let _ = writeln!(s, "      \"vm_scalar_secs\": {:.6},", k.vm_scalar_secs);
             let _ = writeln!(s, "      \"vm_secs\": {:.6},", k.vm_secs);
             let _ = writeln!(s, "      \"tree_pix_per_sec\": {:.0},", k.tree_pix_per_sec());
+            let _ = writeln!(
+                s,
+                "      \"vm_unopt_pix_per_sec\": {:.0},",
+                k.vm_unopt_pix_per_sec()
+            );
+            let _ = writeln!(
+                s,
+                "      \"vm_scalar_pix_per_sec\": {:.0},",
+                k.vm_scalar_pix_per_sec()
+            );
             let _ = writeln!(s, "      \"vm_pix_per_sec\": {:.0},", k.vm_pix_per_sec());
             let _ = writeln!(s, "      \"speedup\": {:.3},", k.speedup());
+            let _ = writeln!(s, "      \"opt_speedup\": {:.3},", k.opt_speedup());
             let _ = writeln!(s, "      \"parallel\": {},", k.parallel);
             let _ = writeln!(s, "      \"identical\": {}", k.identical);
             let _ = writeln!(s, "    }}{}", if i + 1 < self.kernels.len() { "," } else { "" });
@@ -128,22 +201,25 @@ impl BenchReport {
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "execution-engine benchmark — {0}×{0}, {1} thread(s)",
+            "execution-engine benchmark — {0}×{0}, {1} thread(s)  (Mpix/s per engine)",
             self.size, self.threads
         );
         let _ = writeln!(
             s,
-            "{:<12} {:>14} {:>14} {:>9}  {:>8}  {}",
-            "kernel", "tree (Mpix/s)", "VM (Mpix/s)", "speedup", "parallel", "identical"
+            "{:<12} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8}  {:>8}  {}",
+            "kernel", "tree", "vm-unopt", "vm-scalar", "vm", "speedup", "vs-PR3", "parallel", "identical"
         );
         for k in &self.kernels {
             let _ = writeln!(
                 s,
-                "{:<12} {:>14.2} {:>14.2} {:>8.2}x  {:>8}  {}",
+                "{:<12} {:>10.2} {:>10.2} {:>10.2} {:>10.2} {:>7.2}x {:>7.2}x  {:>8}  {}",
                 k.name,
                 k.tree_pix_per_sec() / 1e6,
+                k.vm_unopt_pix_per_sec() / 1e6,
+                k.vm_scalar_pix_per_sec() / 1e6,
                 k.vm_pix_per_sec() / 1e6,
                 k.speedup(),
+                k.opt_speedup(),
                 if k.parallel { "yes" } else { "no" },
                 if k.identical { "yes" } else { "DIVERGED" }
             );
@@ -215,14 +291,20 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport, String> {
         };
 
         let (tree_secs, tree_out) = time_engine(Engine::TreeWalk)?;
+        let (vm_unopt_secs, unopt_out) = time_engine(Engine::VmUnopt)?;
+        let (vm_scalar_secs, scalar_out) = time_engine(Engine::VmScalar)?;
         let (vm_secs, vm_out) = time_engine(Engine::Vm)?;
+        let identical =
+            tree_out == vm_out && tree_out == scalar_out && tree_out == unopt_out;
         kernels.push(KernelBench {
             name: name.to_string(),
             pixels: n * n,
             tree_secs,
+            vm_unopt_secs,
+            vm_scalar_secs,
             vm_secs,
             parallel: plan.parallel_groups,
-            identical: tree_out == vm_out,
+            identical,
         });
     }
     Ok(BenchReport {
@@ -233,7 +315,9 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport, String> {
 }
 
 /// Run, print, and persist the report; `Err` on engine divergence (the
-/// differential guarantee is part of the benchmark's contract).
+/// differential guarantee is part of the benchmark's contract) or when
+/// the optimized VM regressed below the unoptimized VM on blur (the CI
+/// performance gate).
 pub fn run_and_write(opts: &BenchOpts) -> Result<BenchReport, String> {
     let report = run(opts)?;
     print!("{}", report.render());
@@ -243,6 +327,7 @@ pub fn run_and_write(opts: &BenchOpts) -> Result<BenchReport, String> {
     if !report.all_identical() {
         return Err("VM and tree-walker outputs diverged (see report)".to_string());
     }
+    report.check_opt_regression()?;
     Ok(report)
 }
 
@@ -267,9 +352,34 @@ mod tests {
         assert_eq!(report.kernels.len(), 2);
         assert!(report.all_identical(), "{}", report.render());
         assert!(report.blur_speedup().is_some());
+        assert!(report.blur_opt_speedup().is_some());
         let json = report.to_json();
         assert!(json.contains("\"blur\""), "{json}");
+        assert!(json.contains("\"vm_unopt_pix_per_sec\""), "{json}");
+        assert!(json.contains("\"blur_opt_speedup\""), "{json}");
         assert!(json.contains("\"all_identical\": true"), "{json}");
+    }
+
+    #[test]
+    fn regression_gate_trips_on_slower_optimized_vm() {
+        let k = |unopt: f64, opt: f64| KernelBench {
+            name: "blur".to_string(),
+            pixels: 1 << 14,
+            tree_secs: 1.0,
+            vm_unopt_secs: unopt,
+            vm_scalar_secs: opt,
+            vm_secs: opt,
+            parallel: true,
+            identical: true,
+        };
+        let ok = BenchReport { size: 128, threads: 1, kernels: vec![k(1.0, 0.5)] };
+        assert!(ok.check_opt_regression().is_ok());
+        let bad = BenchReport { size: 128, threads: 1, kernels: vec![k(0.5, 1.0)] };
+        let err = bad.check_opt_regression().unwrap_err();
+        assert!(err.contains("regression gate"), "{err}");
+        // A kernel set without blur has nothing to gate.
+        let none = BenchReport { size: 128, threads: 1, kernels: vec![] };
+        assert!(none.check_opt_regression().is_ok());
     }
 
     #[test]

@@ -9,14 +9,17 @@
 //! kernel would be on real hardware. All accesses are bounds-checked.
 //!
 //! Two engines share this driver (selectable via [`Engine`], default
-//! [`Engine::Auto`], overridable with `IMAGECL_EXEC=tree|vm`):
+//! [`Engine::Auto`], overridable with
+//! `IMAGECL_EXEC=tree|vm|vm-scalar|vm-unopt`):
 //!
 //! * the **bytecode VM** ([`super::vm`]) — plans are compiled through the
 //!   slot-resolved IR of [`super::compiled`] down to flat, register-based
-//!   bytecode and executed with work-groups in parallel when the
-//!   write-set analysis proved them independent. This is the production
-//!   path (`PreparedKernel::run`, the serving workers, tuner
-//!   measurements).
+//!   bytecode, optimized by [`super::opt`]'s pass pipeline, and executed
+//!   with work-groups (or rows) in parallel and rows batched over SIMD
+//!   lanes when the write-set analysis proved independence. This is the
+//!   production path (`PreparedKernel::run`, the serving workers, tuner
+//!   measurements). `Engine::VmScalar` / `Engine::VmUnopt` pin the
+//!   scalar and pre-optimizer variants for differential testing.
 //! * the **tree-walker** (the [`Machine`] in this module, ~40× over the
 //!   original string-resolving interpreter) — retained as the
 //!   *differential oracle*: always serial, always `Value`-typed, the
@@ -61,15 +64,23 @@ pub(crate) const MAX_WHILE: usize = 1 << 24;
 pub enum Engine {
     /// The bytecode VM when the plan lowered to bytecode (and the
     /// argument buffers match the plan's element types), the tree-walker
-    /// otherwise. `IMAGECL_EXEC=tree` forces the oracle,
-    /// `IMAGECL_EXEC=vm` insists on the VM (erroring where `Auto` would
-    /// fall back).
+    /// otherwise. `IMAGECL_EXEC=tree` forces the oracle;
+    /// `IMAGECL_EXEC=vm|vm-scalar|vm-unopt` insists on the matching VM
+    /// variant (erroring where `Auto` would fall back).
     #[default]
     Auto,
-    /// The bytecode VM, hard: executing a plan the VM cannot run is an
-    /// error rather than a silent fallback (benchmarks and differential
-    /// tests must know which engine ran).
+    /// The optimized bytecode VM with batched row interpretation, hard:
+    /// executing a plan the VM cannot run is an error rather than a
+    /// silent fallback (benchmarks and differential tests must know
+    /// which engine ran).
     Vm,
+    /// The optimized VM with batching disabled — isolates the optimizer
+    /// pipeline's contribution in the differential grid and benchmarks.
+    VmScalar,
+    /// The *unoptimized*, unbatched VM — the PR-3 baseline, kept
+    /// addressable for the differential grid and the bench regression
+    /// gate.
+    VmUnopt,
     /// The serial tree-walking interpreter — the differential oracle.
     TreeWalk,
 }
@@ -83,6 +94,8 @@ impl Engine {
         match std::env::var("IMAGECL_EXEC").as_deref() {
             Ok("tree") => Engine::TreeWalk,
             Ok("vm") => Engine::Vm,
+            Ok("vm-scalar") => Engine::VmScalar,
+            Ok("vm-unopt") => Engine::VmUnopt,
             _ => Engine::Auto,
         }
     }
@@ -193,6 +206,7 @@ pub fn execute_with(
     let compiled = Compiler::compile(plan, &scalar_vals)?;
     let vm = match engine.resolve() {
         Engine::TreeWalk => None,
+        Engine::VmUnopt => VmProgram::build_with(plan, &compiled, false),
         _ => VmProgram::build(plan, &compiled),
     };
     run_compiled(plan, &compiled, vm.as_ref(), args, grid, engine)
@@ -211,9 +225,14 @@ pub fn execute_with(
 pub struct PreparedKernel {
     plan: KernelPlan,
     compiled: CompiledPlan,
-    /// Bytecode lowering of `compiled` (`None` for the rare plans the VM
-    /// cannot type statically — those run on the tree-walker).
+    /// Optimized bytecode lowering of `compiled` (`None` for the rare
+    /// plans the VM cannot type statically — those run on the
+    /// tree-walker).
     vm: Option<VmProgram>,
+    /// The unoptimized lowering, kept so `Engine::VmUnopt` (differential
+    /// grid, bench regression gate) measures the PR-3 baseline without a
+    /// per-run rebuild.
+    vm_unopt: Option<VmProgram>,
     scalar_vals: HashMap<String, Value>,
     grid: (usize, usize),
 }
@@ -229,7 +248,8 @@ impl PreparedKernel {
         let scalar_vals = resolve_scalars(plan, args, grid)?;
         let compiled = Compiler::compile(plan, &scalar_vals)?;
         let vm = VmProgram::build(plan, &compiled);
-        Ok(PreparedKernel { plan: plan.clone(), compiled, vm, scalar_vals, grid })
+        let vm_unopt = VmProgram::build_with(plan, &compiled, false);
+        Ok(PreparedKernel { plan: plan.clone(), compiled, vm, vm_unopt, scalar_vals, grid })
     }
 
     pub fn grid(&self) -> (usize, usize) {
@@ -265,7 +285,11 @@ impl PreparedKernel {
                 self.plan.name
             )));
         }
-        run_compiled(&self.plan, &self.compiled, self.vm.as_ref(), args, self.grid, engine)
+        let vm = match engine.resolve() {
+            Engine::VmUnopt => self.vm_unopt.as_ref(),
+            _ => self.vm.as_ref(),
+        };
+        run_compiled(&self.plan, &self.compiled, vm, args, self.grid, engine)
     }
 }
 
@@ -299,11 +323,16 @@ fn run_compiled(
     }
 
     let vm_ok = vm.is_some_and(|p| vm::args_match(p, &bufs));
-    let result = match engine.resolve() {
+    let resolved = engine.resolve();
+    // Batched row interpretation is the default VM behaviour;
+    // `VmScalar`/`VmUnopt` pin the scalar loop for the differential grid
+    // and the bench's engine isolation.
+    let batch = !matches!(resolved, Engine::VmScalar | Engine::VmUnopt);
+    let result = match resolved {
         Engine::TreeWalk => run_ndrange(plan, compiled, &mut bufs, grid),
-        Engine::Vm => {
+        Engine::Vm | Engine::VmScalar | Engine::VmUnopt => {
             if vm_ok {
-                vm::run_ndrange(plan, compiled, vm.unwrap(), &mut bufs, grid)
+                vm::run_ndrange(plan, compiled, vm.unwrap(), &mut bufs, grid, batch)
             } else {
                 Err(ExecError::Other(format!(
                     "plan `{}` is not executable on the bytecode VM \
@@ -315,7 +344,7 @@ fn run_compiled(
         }
         Engine::Auto => {
             if vm_ok {
-                vm::run_ndrange(plan, compiled, vm.unwrap(), &mut bufs, grid)
+                vm::run_ndrange(plan, compiled, vm.unwrap(), &mut bufs, grid, batch)
             } else {
                 run_ndrange(plan, compiled, &mut bufs, grid)
             }

@@ -8,24 +8,33 @@
 //!
 //! * **Bytecode VM** ([`vm`]) — plans lower through the slot-resolved IR
 //!   of [`compiled`] into flat, register-based bytecode (typed i64/f64
-//!   register files, resolved buffer indices) and execute work-groups in
-//!   parallel when the write-set analysis proved them independent. This
+//!   register files, resolved buffer indices), run through the
+//!   [`opt`]imizer pipeline (copy/constant propagation, jump folding,
+//!   dead-move elimination, `IMulAdd` re-fusion, DCE), and execute
+//!   work-groups — or, for barrier-free plans with few large groups,
+//!   work-item rows — in parallel when the write-set analysis proved
+//!   them independent. Rows whose control flow [`opt::specialize`] can
+//!   decide from the launch geometry additionally run through the
+//!   batched lane interpreter (SIMD-shaped, interior/border split). This
 //!   is the default path: `PreparedKernel::run`, the serving workers and
 //!   tuner measurements all go through it.
 //! * **Tree-walker** ([`machine`]'s `Machine`) — the original serial
 //!   interpreter, retained deliberately as the *differential oracle*: the
 //!   VM must produce bit-identical output (`tests/vm_differential.rs`
-//!   sweeps every gallery kernel × config grid), and the rare plan the VM
-//!   cannot type statically falls back to it. Force it with
-//!   `Engine::TreeWalk` or `IMAGECL_EXEC=tree`.
+//!   sweeps every gallery kernel × config grid × engine variant), and
+//!   the rare plan the VM cannot type statically falls back to it. Force
+//!   an engine with `Engine::TreeWalk` / `Engine::VmScalar` /
+//!   `Engine::VmUnopt`, or `IMAGECL_EXEC=tree|vm|vm-scalar|vm-unopt`.
 //!
-//! `imagecl bench` / `benches/exec.rs` ([`bench`]) measure one engine
-//! against the other and write `BENCH_exec.json`.
+//! `imagecl bench` / `benches/exec.rs` ([`bench`]) measure the engines
+//! against each other and write `BENCH_exec.json` (with a regression
+//! gate: the optimized VM must not lose to the unoptimized VM on blur).
 
 pub mod bench;
 pub mod buffer;
 pub mod compiled;
 pub mod machine;
+pub mod opt;
 pub mod vm;
 
 pub use buffer::{Arg, Buffer, ImageBuf, Value};

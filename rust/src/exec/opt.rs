@@ -1,0 +1,1423 @@
+//! The bytecode optimizer pipeline and the trace specializer (§Perf,
+//! stage 3).
+//!
+//! [`super::vm`] lowers compiled plans into flat register bytecode with
+//! a pattern-shaped redundancy: every `SetVar` computes into a fresh
+//! temporary and then moves it into the variable's register, boundary
+//! ternaries re-evaluate `inside(x, y)` chains whose answer the launch
+//! geometry already determines, and index math that crossed a statement
+//! boundary misses the `IMulAdd` fusion. This module removes all of that
+//! *after* lowering, plan-agnostically, so every plan — gallery, paper,
+//! user-supplied — benefits without the lowering growing special cases.
+//!
+//! # Passes and their ordering invariants
+//!
+//! [`optimize`] runs the pipeline over every phase; [`optimize_ops`] is
+//! the per-stream driver. Order matters:
+//!
+//! 1. **`propagate`** — forward copy + constant propagation with
+//!    folding (including `Jz`/`Jnz` on known registers, which become
+//!    `Jmp`/[`Op::Nop`]). Must run first: it canonicalizes operands so
+//!    the later pattern passes see through copies. State is reset at
+//!    every jump target — the pass is deliberately local to extended
+//!    basic blocks, which keeps it linear and obviously sound.
+//! 2. **`fuse_muladd`** — rewrites `t = a*b; d = t + c` pairs into
+//!    `IMulAdd`, leaving the original multiply for DCE to collect once
+//!    the temporary is provably dead. Runs after propagation so copies
+//!    don't hide the pair, and before liveness so the dead multiply is
+//!    visible to the same round's DCE.
+//! 3. **`coalesce_moves`** — the dead-move elimination after `SetVar`:
+//!    a defining op immediately followed by a move of its result into a
+//!    variable register is rewritten to target the variable directly
+//!    (requires fresh liveness: the temporary must be dead past the
+//!    move).
+//! 4. **`dce`** — backward-liveness dead-code elimination (recomputed
+//!    after coalescing, which changes def sites). Ops that can trap or
+//!    panic (loads, stores, div/rem, clamps, `abs`) are never removed,
+//!    dead or not: error behaviour is part of the engine contract.
+//! 5. **`compact`** — strips the [`Op::Nop`]s the earlier passes left
+//!    and remaps jump targets. Must run last in a round; every other
+//!    pass relies on instruction indices being stable.
+//!
+//! Rounds repeat until a fixpoint (bounded), because each pass exposes
+//! work for the others (a folded jump makes code dead; a removed move
+//! makes a constant propagate further).
+//!
+//! Registers below `VmProgram::n_slot_ri`/`n_slot_rf` are **variable
+//! slots**: like the tree-walker's slot frame they persist across
+//! work-items and phases, so liveness treats them as live-out at every
+//! `Ret`. Temporaries above them die at the phase exit. No pass may
+//! reorder instructions or move one across a trapping op — everything
+//! here either rewrites in place or deletes.
+//!
+//! # The trace specializer
+//!
+//! [`specialize`] powers the VM's batched row interpretation: given the
+//! index ranges of one work-group (or one row), it walks the phase
+//! bytecode with **interval arithmetic** over the integer registers and
+//! follows every branch whose condition the intervals decide — the grid
+//! rounding guard, boundary ternaries in the image interior, and
+//! constant-trip `for` loops (which simply unroll into the trace). The
+//! result is a straight-line, branch-free trace that is *exactly* the
+//! instruction sequence every item in the batch would execute, then
+//! cleaned by the same optimizer pipeline (boundary-condition
+//! computations whose `Jz` disappeared fold away as dead code). A branch
+//! the intervals cannot decide aborts specialization (`None`) and the
+//! row runs scalar — this is the interior/border split.
+
+use crate::imagecl::ast::ScalarType;
+
+use super::compiled::{
+    SLOT_GDIM_X, SLOT_GDIM_Y, SLOT_GID_X, SLOT_GID_Y, SLOT_GRP_X, SLOT_GRP_Y,
+    SLOT_LID_X, SLOT_LID_Y,
+};
+use super::vm::{pred_f, pred_i, wrap_int, Op, Pred, VmProgram};
+
+/// Upper bound on optimizer rounds (each round is a full pass pipeline;
+/// fixpoint is normally reached in two).
+const MAX_ROUNDS: usize = 4;
+
+/// Specialization gives up after this many simulated steps (runaway
+/// loops the intervals happen to decide forever).
+const MAX_TRACE_STEPS: usize = 1 << 14;
+
+/// Maximum emitted trace length (fully unrolled loops are the common
+/// case; anything bigger stops paying for itself).
+const MAX_TRACE_LEN: usize = 1 << 12;
+
+/// Optimize every phase of a lowered program in place.
+pub fn optimize(prog: &mut VmProgram) {
+    let (n_ri, n_rf) = (prog.n_ri, prog.n_rf);
+    let (nsi, nsf) = (prog.n_slot_ri, prog.n_slot_rf);
+    for phase in &mut prog.phases {
+        optimize_ops(phase, n_ri, n_rf, nsi, nsf);
+    }
+}
+
+/// The per-stream pass driver (see the module docs for pass ordering).
+pub(crate) fn optimize_ops(
+    ops: &mut Vec<Op>,
+    n_ri: usize,
+    n_rf: usize,
+    n_slot_ri: usize,
+    n_slot_rf: usize,
+) {
+    for _ in 0..MAX_ROUNDS {
+        let before = ops.len();
+        propagate(ops, n_ri, n_rf);
+        fuse_muladd(ops);
+        let live = liveness(ops, n_ri, n_rf, n_slot_ri, n_slot_rf);
+        coalesce_moves(ops, &live, n_ri, n_rf, n_slot_ri, n_slot_rf);
+        let live = liveness(ops, n_ri, n_rf, n_slot_ri, n_slot_rf);
+        dce(ops, &live, n_ri, n_rf, n_slot_ri, n_slot_rf);
+        compact(ops);
+        if ops.len() == before {
+            break;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Register references: which file, which index.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum R {
+    I(u16),
+    F(u16),
+}
+
+/// Destination register of an op, if it has one.
+fn def_of(op: &Op) -> Option<R> {
+    Some(match *op {
+        Op::IConst { d, .. }
+        | Op::IMov { d, .. }
+        | Op::FToI { d, .. }
+        | Op::IWrap { d, .. }
+        | Op::FNonZero { d, .. }
+        | Op::INorm { d, .. }
+        | Op::IAdd { d, .. }
+        | Op::ISub { d, .. }
+        | Op::IMul { d, .. }
+        | Op::IMulAdd { d, .. }
+        | Op::IDiv { d, .. }
+        | Op::IRem { d, .. }
+        | Op::INeg { d, .. }
+        | Op::INot { d, .. }
+        | Op::IBitNot { d, .. }
+        | Op::IBitAnd { d, .. }
+        | Op::IBitOr { d, .. }
+        | Op::IBitXor { d, .. }
+        | Op::IShl { d, .. }
+        | Op::IShr { d, .. }
+        | Op::IMin { d, .. }
+        | Op::IMax { d, .. }
+        | Op::IClamp { d, .. }
+        | Op::IAbs { d, .. }
+        | Op::ICmp { d, .. }
+        | Op::FCmp { d, .. }
+        | Op::LoadI { d, .. }
+        | Op::LoadB { d, .. }
+        | Op::TexLoadI { d, .. } => R::I(d),
+        Op::FConst { d, .. }
+        | Op::FMov { d, .. }
+        | Op::IToF { d, .. }
+        | Op::F32Round { d, .. }
+        | Op::FAdd { d, .. }
+        | Op::FSub { d, .. }
+        | Op::FMul { d, .. }
+        | Op::FDiv { d, .. }
+        | Op::FRem { d, .. }
+        | Op::FNeg { d, .. }
+        | Op::FMin { d, .. }
+        | Op::FMax { d, .. }
+        | Op::FClamp { d, .. }
+        | Op::Math1 { d, .. }
+        | Op::FPow { d, .. }
+        | Op::LoadF { d, .. }
+        | Op::TexLoadF { d, .. } => R::F(d),
+        Op::StoreF { .. }
+        | Op::StoreI { .. }
+        | Op::TexStoreF { .. }
+        | Op::TexStoreI { .. }
+        | Op::Jmp { .. }
+        | Op::Jz { .. }
+        | Op::Jnz { .. }
+        | Op::Runaway
+        | Op::Ret
+        | Op::Nop => return None,
+    })
+}
+
+/// Rewrite the destination register of an op that has one (the move
+/// coalescer's tool). Caller guarantees `def_of` is `Some` of the same
+/// register file.
+fn set_def(op: &mut Op, nd: u16) {
+    match op {
+        Op::IConst { d, .. }
+        | Op::IMov { d, .. }
+        | Op::FToI { d, .. }
+        | Op::IWrap { d, .. }
+        | Op::FNonZero { d, .. }
+        | Op::INorm { d, .. }
+        | Op::IAdd { d, .. }
+        | Op::ISub { d, .. }
+        | Op::IMul { d, .. }
+        | Op::IMulAdd { d, .. }
+        | Op::IDiv { d, .. }
+        | Op::IRem { d, .. }
+        | Op::INeg { d, .. }
+        | Op::INot { d, .. }
+        | Op::IBitNot { d, .. }
+        | Op::IBitAnd { d, .. }
+        | Op::IBitOr { d, .. }
+        | Op::IBitXor { d, .. }
+        | Op::IShl { d, .. }
+        | Op::IShr { d, .. }
+        | Op::IMin { d, .. }
+        | Op::IMax { d, .. }
+        | Op::IClamp { d, .. }
+        | Op::IAbs { d, .. }
+        | Op::ICmp { d, .. }
+        | Op::FCmp { d, .. }
+        | Op::LoadI { d, .. }
+        | Op::LoadB { d, .. }
+        | Op::TexLoadI { d, .. }
+        | Op::FConst { d, .. }
+        | Op::FMov { d, .. }
+        | Op::IToF { d, .. }
+        | Op::F32Round { d, .. }
+        | Op::FAdd { d, .. }
+        | Op::FSub { d, .. }
+        | Op::FMul { d, .. }
+        | Op::FDiv { d, .. }
+        | Op::FRem { d, .. }
+        | Op::FNeg { d, .. }
+        | Op::FMin { d, .. }
+        | Op::FMax { d, .. }
+        | Op::FClamp { d, .. }
+        | Op::Math1 { d, .. }
+        | Op::FPow { d, .. }
+        | Op::LoadF { d, .. }
+        | Op::TexLoadF { d, .. } => *d = nd,
+        other => unreachable!("set_def on def-less op {other:?}"),
+    }
+}
+
+/// A mutable reference to one *source* operand, tagged with its file.
+enum SrcRef<'a> {
+    I(&'a mut u16),
+    F(&'a mut u16),
+}
+
+/// Visit every source-operand register of an op, mutably — the single
+/// source of truth for operand shapes. `uses_of` (read-only) and the
+/// copy-propagation operand rewriter are both built on this, so a new
+/// op variant only has to get its operands right once.
+fn each_src(op: &mut Op, mut f: impl FnMut(SrcRef)) {
+    match op {
+        Op::IConst { .. }
+        | Op::FConst { .. }
+        | Op::Jmp { .. }
+        | Op::Runaway
+        | Op::Ret
+        | Op::Nop => {}
+        Op::IMov { s, .. }
+        | Op::IWrap { s, .. }
+        | Op::INorm { s, .. }
+        | Op::INeg { s, .. }
+        | Op::INot { s, .. }
+        | Op::IBitNot { s, .. }
+        | Op::IAbs { s, .. }
+        | Op::IToF { s, .. } => f(SrcRef::I(s)),
+        Op::FMov { s, .. }
+        | Op::FToI { s, .. }
+        | Op::F32Round { s, .. }
+        | Op::FNonZero { s, .. }
+        | Op::FNeg { s, .. }
+        | Op::Math1 { s, .. } => f(SrcRef::F(s)),
+        Op::IAdd { a, b, .. }
+        | Op::ISub { a, b, .. }
+        | Op::IMul { a, b, .. }
+        | Op::IDiv { a, b, .. }
+        | Op::IRem { a, b, .. }
+        | Op::IBitAnd { a, b, .. }
+        | Op::IBitOr { a, b, .. }
+        | Op::IBitXor { a, b, .. }
+        | Op::IShl { a, b, .. }
+        | Op::IShr { a, b, .. }
+        | Op::IMin { a, b, .. }
+        | Op::IMax { a, b, .. }
+        | Op::ICmp { a, b, .. } => {
+            f(SrcRef::I(a));
+            f(SrcRef::I(b));
+        }
+        Op::IMulAdd { a, b, c, .. } => {
+            f(SrcRef::I(a));
+            f(SrcRef::I(b));
+            f(SrcRef::I(c));
+        }
+        Op::IClamp { v, lo, hi, .. } => {
+            f(SrcRef::I(v));
+            f(SrcRef::I(lo));
+            f(SrcRef::I(hi));
+        }
+        Op::FAdd { a, b, .. }
+        | Op::FSub { a, b, .. }
+        | Op::FMul { a, b, .. }
+        | Op::FDiv { a, b, .. }
+        | Op::FRem { a, b, .. }
+        | Op::FMin { a, b, .. }
+        | Op::FMax { a, b, .. }
+        | Op::FCmp { a, b, .. }
+        | Op::FPow { a, b, .. } => {
+            f(SrcRef::F(a));
+            f(SrcRef::F(b));
+        }
+        Op::FClamp { v, lo, hi, .. } => {
+            f(SrcRef::F(v));
+            f(SrcRef::F(lo));
+            f(SrcRef::F(hi));
+        }
+        Op::Jz { c, .. } | Op::Jnz { c, .. } => f(SrcRef::I(c)),
+        Op::LoadF { idx, .. } | Op::LoadI { idx, .. } | Op::LoadB { idx, .. } => {
+            f(SrcRef::I(idx))
+        }
+        Op::StoreF { idx, s, .. } => {
+            f(SrcRef::I(idx));
+            f(SrcRef::F(s));
+        }
+        Op::StoreI { idx, s, .. } => {
+            f(SrcRef::I(idx));
+            f(SrcRef::I(s));
+        }
+        Op::TexLoadF { x, y, .. } | Op::TexLoadI { x, y, .. } => {
+            f(SrcRef::I(x));
+            f(SrcRef::I(y));
+        }
+        Op::TexStoreF { x, y, s, .. } => {
+            f(SrcRef::I(x));
+            f(SrcRef::I(y));
+            f(SrcRef::F(s));
+        }
+        Op::TexStoreI { x, y, s, .. } => {
+            f(SrcRef::I(x));
+            f(SrcRef::I(y));
+            f(SrcRef::I(s));
+        }
+    }
+}
+
+/// Visit every *source* register of an op (read-only view over
+/// [`each_src`]; `Op` is `Copy`, so the scratch clone is free).
+fn uses_of(op: &Op, mut f: impl FnMut(R)) {
+    let mut scratch = *op;
+    each_src(&mut scratch, |s| {
+        f(match s {
+            SrcRef::I(r) => R::I(*r),
+            SrcRef::F(r) => R::F(*r),
+        })
+    });
+}
+
+/// Removable when dead? `false` for anything that traps (loads, stores,
+/// div/rem), panics on degenerate inputs (clamps with inverted bounds,
+/// `i64::MIN.abs()`), or affects control flow — error behaviour is part
+/// of the bit-identity contract with the tree-walking oracle.
+fn is_pure(op: &Op) -> bool {
+    !matches!(
+        op,
+        Op::IDiv { .. }
+            | Op::IRem { .. }
+            | Op::IClamp { .. }
+            | Op::FClamp { .. }
+            | Op::IAbs { .. }
+            | Op::LoadF { .. }
+            | Op::LoadI { .. }
+            | Op::LoadB { .. }
+            | Op::StoreF { .. }
+            | Op::StoreI { .. }
+            | Op::TexLoadF { .. }
+            | Op::TexLoadI { .. }
+            | Op::TexStoreF { .. }
+            | Op::TexStoreI { .. }
+            | Op::Jmp { .. }
+            | Op::Jz { .. }
+            | Op::Jnz { .. }
+            | Op::Runaway
+            | Op::Ret
+    )
+}
+
+/// `true` at every index some jump targets (extended-basic-block
+/// boundaries; dataflow state resets there).
+fn jump_targets(ops: &[Op]) -> Vec<bool> {
+    let mut t = vec![false; ops.len() + 1];
+    for op in ops {
+        match op {
+            Op::Jmp { t: x } | Op::Jz { t: x, .. } | Op::Jnz { t: x, .. } => {
+                t[*x as usize] = true;
+            }
+            _ => {}
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Pass 1: copy + constant propagation with folding.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum VI {
+    Unk,
+    Const(i64),
+    /// Register currently equal to another (canonical, non-copy) one.
+    Copy(u16),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum VF {
+    Unk,
+    Const(f64),
+    Copy(u16),
+}
+
+fn propagate(ops: &mut [Op], n_ri: usize, n_rf: usize) {
+    let labels = jump_targets(ops);
+    let mut vi = vec![VI::Unk; n_ri];
+    let mut vf = vec![VF::Unk; n_rf];
+    for pc in 0..ops.len() {
+        if labels[pc] {
+            vi.fill(VI::Unk);
+            vf.fill(VF::Unk);
+        }
+        rewrite_operands(&mut ops[pc], &vi, &vf);
+        if let Some(folded) = fold(&ops[pc], &vi, &vf) {
+            ops[pc] = folded;
+        }
+        match ops[pc] {
+            // Fallthrough after these is unreachable; reset so stale
+            // facts never leak into code another jump lands in.
+            Op::Jmp { .. } | Op::Ret | Op::Runaway => {
+                vi.fill(VI::Unk);
+                vf.fill(VF::Unk);
+            }
+            ref op => {
+                if let Some(def) = def_of(op) {
+                    let op = *op;
+                    kill(&mut vi, &mut vf, def);
+                    match op {
+                        Op::IConst { d, v } => vi[d as usize] = VI::Const(v),
+                        Op::FConst { d, v } => vf[d as usize] = VF::Const(v),
+                        // Operands were canonicalized above, so a
+                        // surviving move's source is a plain register:
+                        // record the equality.
+                        Op::IMov { d, s } => vi[d as usize] = VI::Copy(s),
+                        Op::FMov { d, s } => vf[d as usize] = VF::Copy(s),
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Forget everything about a redefined register, including copies of it.
+fn kill(vi: &mut [VI], vf: &mut [VF], def: R) {
+    match def {
+        R::I(d) => {
+            for v in vi.iter_mut() {
+                if *v == VI::Copy(d) {
+                    *v = VI::Unk;
+                }
+            }
+            vi[d as usize] = VI::Unk;
+        }
+        R::F(d) => {
+            for v in vf.iter_mut() {
+                if matches!(*v, VF::Copy(s) if s == d) {
+                    *v = VF::Unk;
+                }
+            }
+            vf[d as usize] = VF::Unk;
+        }
+    }
+}
+
+/// Replace source operands that are known copies by their canonical
+/// register (destinations stay). Built on [`each_src`], the shared
+/// operand-shape visitor.
+fn rewrite_operands(op: &mut Op, vi: &[VI], vf: &[VF]) {
+    each_src(op, |s| match s {
+        SrcRef::I(r) => {
+            if let VI::Copy(c) = vi[*r as usize] {
+                *r = c;
+            }
+        }
+        SrcRef::F(r) => {
+            if let VF::Copy(c) = vf[*r as usize] {
+                *r = c;
+            }
+        }
+    });
+}
+
+/// Constant-fold one op under the current facts, replicating runtime
+/// semantics *exactly* (wrapping int arithmetic, the tree-walker's
+/// NaN-exact min/max, `f32` rounding). Ops whose folding would change
+/// trap/panic behaviour (div by a zero constant, inverted clamp bounds,
+/// `abs(i64::MIN)`) stay unfolded.
+fn fold(op: &Op, vi: &[VI], vf: &[VF]) -> Option<Op> {
+    let ci = |r: u16| match vi[r as usize] {
+        VI::Const(v) => Some(v),
+        _ => None,
+    };
+    let cf = |r: u16| match vf[r as usize] {
+        VF::Const(v) => Some(v),
+        _ => None,
+    };
+    Some(match *op {
+        Op::IMov { d, s } if d == s => Op::Nop,
+        Op::FMov { d, s } if d == s => Op::Nop,
+        Op::IMov { d, s } => Op::IConst { d, v: ci(s)? },
+        Op::FMov { d, s } => Op::FConst { d, v: cf(s)? },
+        Op::IToF { d, s } => Op::FConst { d, v: ci(s)? as f64 },
+        Op::FToI { d, s } => Op::IConst { d, v: cf(s)? as i64 },
+        Op::IWrap { d, s, ty } => Op::IConst { d, v: wrap_int(ty, ci(s)?) },
+        Op::F32Round { d, s } => Op::FConst { d, v: cf(s)? as f32 as f64 },
+        Op::FNonZero { d, s } => Op::IConst { d, v: (cf(s)? != 0.0) as i64 },
+        Op::INorm { d, s } => Op::IConst { d, v: (ci(s)? != 0) as i64 },
+        Op::IAdd { d, a, b } => Op::IConst { d, v: ci(a)?.wrapping_add(ci(b)?) },
+        Op::ISub { d, a, b } => Op::IConst { d, v: ci(a)?.wrapping_sub(ci(b)?) },
+        Op::IMul { d, a, b } => Op::IConst { d, v: ci(a)?.wrapping_mul(ci(b)?) },
+        Op::IMulAdd { d, a, b, c } => Op::IConst {
+            d,
+            v: ci(a)?.wrapping_mul(ci(b)?).wrapping_add(ci(c)?),
+        },
+        Op::IDiv { d, a, b } => {
+            let bv = ci(b)?;
+            if bv == 0 {
+                return None; // keep the runtime trap
+            }
+            Op::IConst { d, v: ci(a)?.checked_div(bv)? }
+        }
+        Op::IRem { d, a, b } => {
+            let bv = ci(b)?;
+            if bv == 0 {
+                return None;
+            }
+            Op::IConst { d, v: ci(a)?.checked_rem(bv)? }
+        }
+        Op::INeg { d, s } => Op::IConst { d, v: ci(s)?.wrapping_neg() },
+        Op::INot { d, s } => Op::IConst { d, v: (ci(s)? == 0) as i64 },
+        Op::IBitNot { d, s } => Op::IConst { d, v: !ci(s)? },
+        Op::IBitAnd { d, a, b } => Op::IConst { d, v: ci(a)? & ci(b)? },
+        Op::IBitOr { d, a, b } => Op::IConst { d, v: ci(a)? | ci(b)? },
+        Op::IBitXor { d, a, b } => Op::IConst { d, v: ci(a)? ^ ci(b)? },
+        Op::IShl { d, a, b } => Op::IConst { d, v: ci(a)?.wrapping_shl(ci(b)? as u32) },
+        Op::IShr { d, a, b } => Op::IConst { d, v: ci(a)?.wrapping_shr(ci(b)? as u32) },
+        Op::IMin { d, a, b } => Op::IConst { d, v: ci(a)?.min(ci(b)?) },
+        Op::IMax { d, a, b } => Op::IConst { d, v: ci(a)?.max(ci(b)?) },
+        Op::IClamp { d, v, lo, hi } => {
+            let (x, l, h) = (ci(v)?, ci(lo)?, ci(hi)?);
+            if l > h {
+                return None; // keep the runtime panic
+            }
+            Op::IConst { d, v: x.clamp(l, h) }
+        }
+        Op::IAbs { d, s } => Op::IConst { d, v: ci(s)?.checked_abs()? },
+        Op::ICmp { p, d, a, b } => Op::IConst { d, v: pred_i(p, ci(a)?, ci(b)?) },
+        Op::FCmp { p, d, a, b } => Op::IConst { d, v: pred_f(p, cf(a)?, cf(b)?) },
+        Op::FAdd { d, a, b } => Op::FConst { d, v: cf(a)? + cf(b)? },
+        Op::FSub { d, a, b } => Op::FConst { d, v: cf(a)? - cf(b)? },
+        Op::FMul { d, a, b } => Op::FConst { d, v: cf(a)? * cf(b)? },
+        Op::FDiv { d, a, b } => Op::FConst { d, v: cf(a)? / cf(b)? },
+        Op::FRem { d, a, b } => Op::FConst { d, v: cf(a)? % cf(b)? },
+        Op::FNeg { d, s } => Op::FConst { d, v: -cf(s)? },
+        Op::FMin { d, a, b } => {
+            let (x, y) = (cf(a)?, cf(b)?);
+            Op::FConst { d, v: if x <= y { x } else { y } }
+        }
+        Op::FMax { d, a, b } => {
+            let (x, y) = (cf(a)?, cf(b)?);
+            Op::FConst { d, v: if x <= y { y } else { x } }
+        }
+        Op::Jz { c, t } => {
+            if ci(c)? == 0 {
+                Op::Jmp { t }
+            } else {
+                Op::Nop
+            }
+        }
+        Op::Jnz { c, t } => {
+            if ci(c)? != 0 {
+                Op::Jmp { t }
+            } else {
+                Op::Nop
+            }
+        }
+        // Transcendentals and clamps with NaN-able bounds stay runtime.
+        _ => return None,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Pass 2: IMulAdd re-fusion.
+// ---------------------------------------------------------------------
+
+/// Rewrite `t = x * y; d = t + c` (or `d = c + t`) into
+/// `d = x*y + c`, leaving the multiply for DCE. Only adjacent pairs
+/// with no label between them, and only when the multiply's inputs are
+/// not its own destination (their values must still be current at the
+/// add).
+fn fuse_muladd(ops: &mut [Op]) {
+    let labels = jump_targets(ops);
+    for pc in 1..ops.len() {
+        if labels[pc] {
+            continue;
+        }
+        let Op::IAdd { d, a, b } = ops[pc] else { continue };
+        let Op::IMul { d: t, a: x, b: y } = ops[pc - 1] else { continue };
+        if t == x || t == y {
+            continue;
+        }
+        let c = if a == t && b != t {
+            b
+        } else if b == t && a != t {
+            a
+        } else {
+            continue;
+        };
+        ops[pc] = Op::IMulAdd { d, a: x, b: y, c };
+    }
+}
+
+// ---------------------------------------------------------------------
+// Liveness, move coalescing, DCE.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct BitSet(Vec<u64>);
+
+impl BitSet {
+    fn new(n: usize) -> BitSet {
+        BitSet(vec![0; n.div_ceil(64)])
+    }
+
+    fn set(&mut self, i: usize) {
+        self.0[i / 64] |= 1u64 << (i % 64);
+    }
+
+    fn clear(&mut self, i: usize) {
+        self.0[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    fn get(&self, i: usize) -> bool {
+        self.0[i / 64] & (1u64 << (i % 64)) != 0
+    }
+
+    fn union_with(&mut self, o: &BitSet) {
+        for (a, b) in self.0.iter_mut().zip(&o.0) {
+            *a |= *b;
+        }
+    }
+}
+
+/// Combined register index: int file first, float file after.
+fn ridx(r: R, n_ri: usize) -> usize {
+    match r {
+        R::I(i) => i as usize,
+        R::F(f) => n_ri + f as usize,
+    }
+}
+
+/// Registers live at every phase exit: the variable slots (they persist
+/// across work-items and phases, exactly like the tree-walker's frame).
+fn slot_live(n_ri: usize, n_rf: usize, n_slot_ri: usize, n_slot_rf: usize) -> BitSet {
+    let mut s = BitSet::new(n_ri + n_rf);
+    for r in 0..n_slot_ri {
+        s.set(r);
+    }
+    for r in 0..n_slot_rf {
+        s.set(n_ri + r);
+    }
+    s
+}
+
+/// Per-instruction live-in sets by backward fixpoint iteration.
+fn liveness(
+    ops: &[Op],
+    n_ri: usize,
+    n_rf: usize,
+    n_slot_ri: usize,
+    n_slot_rf: usize,
+) -> Vec<BitSet> {
+    let n = n_ri + n_rf;
+    let len = ops.len();
+    let slots = slot_live(n_ri, n_rf, n_slot_ri, n_slot_rf);
+    let mut live_in: Vec<BitSet> = (0..len).map(|_| BitSet::new(n)).collect();
+    loop {
+        let mut changed = false;
+        for pc in (0..len).rev() {
+            let mut lin = live_out(ops, &live_in, &slots, pc, n);
+            if let Some(def) = def_of(&ops[pc]) {
+                lin.clear(ridx(def, n_ri));
+            }
+            uses_of(&ops[pc], |r| lin.set(ridx(r, n_ri)));
+            if lin != live_in[pc] {
+                live_in[pc] = lin;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    live_in
+}
+
+/// Union of successors' live-in (slot registers at phase exits).
+fn live_out(
+    ops: &[Op],
+    live_in: &[BitSet],
+    slots: &BitSet,
+    pc: usize,
+    n: usize,
+) -> BitSet {
+    let len = ops.len();
+    let mut out = BitSet::new(n);
+    let mut succ = |t: usize, out: &mut BitSet| {
+        if t < len {
+            out.union_with(&live_in[t]);
+        } else {
+            out.union_with(slots);
+        }
+    };
+    match ops[pc] {
+        Op::Ret => out.union_with(slots),
+        Op::Runaway => {}
+        Op::Jmp { t } => succ(t as usize, &mut out),
+        Op::Jz { t, .. } | Op::Jnz { t, .. } => {
+            succ(pc + 1, &mut out);
+            succ(t as usize, &mut out);
+        }
+        _ => succ(pc + 1, &mut out),
+    }
+    out
+}
+
+/// Dead-move elimination after `SetVar`: a defining op immediately
+/// followed by a move of its result into another register of the same
+/// file, where the temporary dies at the move, is retargeted to write
+/// the destination directly and the move erased. (The lowering emits
+/// exactly this shape for every variable assignment.)
+fn coalesce_moves(
+    ops: &mut [Op],
+    live_in: &[BitSet],
+    n_ri: usize,
+    n_rf: usize,
+    n_slot_ri: usize,
+    n_slot_rf: usize,
+) {
+    if ops.len() < 2 {
+        return;
+    }
+    let n = n_ri + n_rf;
+    let labels = jump_targets(ops);
+    let slots = slot_live(n_ri, n_rf, n_slot_ri, n_slot_rf);
+    for pc in 0..ops.len() - 1 {
+        // The move must be fall-through-only reachable from its definer.
+        if labels[pc + 1] {
+            continue;
+        }
+        let (t, dst) = match ops[pc + 1] {
+            Op::IMov { d, s } if d != s => {
+                if def_of(&ops[pc]) != Some(R::I(s)) {
+                    continue;
+                }
+                (R::I(s), d)
+            }
+            Op::FMov { d, s } if d != s => {
+                if def_of(&ops[pc]) != Some(R::F(s)) {
+                    continue;
+                }
+                (R::F(s), d)
+            }
+            _ => continue,
+        };
+        // The temporary must be dead past the move. (Liveness at
+        // positions ≥ pc+2 is unaffected by this rewrite, so the sets
+        // stay valid as we sweep forward.)
+        if live_out(ops, live_in, &slots, pc + 1, n).get(ridx(t, n_ri)) {
+            continue;
+        }
+        set_def(&mut ops[pc], dst);
+        ops[pc + 1] = Op::Nop;
+    }
+}
+
+/// Remove pure ops whose destination is dead.
+fn dce(
+    ops: &mut [Op],
+    live_in: &[BitSet],
+    n_ri: usize,
+    n_rf: usize,
+    n_slot_ri: usize,
+    n_slot_rf: usize,
+) {
+    let n = n_ri + n_rf;
+    let slots = slot_live(n_ri, n_rf, n_slot_ri, n_slot_rf);
+    for pc in 0..ops.len() {
+        let Some(def) = def_of(&ops[pc]) else { continue };
+        if !is_pure(&ops[pc]) {
+            continue;
+        }
+        if !live_out(ops, live_in, &slots, pc, n).get(ridx(def, n_ri)) {
+            ops[pc] = Op::Nop;
+        }
+    }
+}
+
+/// Strip `Nop`s and remap every jump target.
+fn compact(ops: &mut Vec<Op>) {
+    let mut map = vec![0u32; ops.len() + 1];
+    let mut n = 0u32;
+    for (i, op) in ops.iter().enumerate() {
+        map[i] = n;
+        if !matches!(op, Op::Nop) {
+            n += 1;
+        }
+    }
+    map[ops.len()] = n;
+    ops.retain(|op| !matches!(op, Op::Nop));
+    for op in ops.iter_mut() {
+        match op {
+            Op::Jmp { t } | Op::Jz { t, .. } | Op::Jnz { t, .. } => {
+                *t = map[*t as usize];
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace specialization (batched interpretation's front door).
+// ---------------------------------------------------------------------
+
+/// An inclusive integer interval. `UNK` is the full i64 range.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct Iv {
+    lo: i64,
+    hi: i64,
+}
+
+impl Iv {
+    const UNK: Iv = Iv { lo: i64::MIN, hi: i64::MAX };
+
+    fn exact(v: i64) -> Iv {
+        Iv { lo: v, hi: v }
+    }
+
+    fn bool_any() -> Iv {
+        Iv { lo: 0, hi: 1 }
+    }
+}
+
+/// The index-register ranges one batch is specialized under.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SpecEnv {
+    gid_x: Iv,
+    gid_y: Iv,
+    lid_x: Iv,
+    lid_y: Iv,
+    grp_x: i64,
+    grp_y: i64,
+    gdim_x: i64,
+    gdim_y: i64,
+}
+
+impl SpecEnv {
+    /// Ranges covering every work-item of one group — a successful
+    /// group-wide specialization serves all of its rows.
+    pub(crate) fn for_group(
+        grp: (usize, usize),
+        wg: [usize; 2],
+        global: [usize; 2],
+    ) -> SpecEnv {
+        SpecEnv {
+            gid_x: Iv {
+                lo: (grp.0 * wg[0]) as i64,
+                hi: (grp.0 * wg[0] + wg[0] - 1) as i64,
+            },
+            gid_y: Iv {
+                lo: (grp.1 * wg[1]) as i64,
+                hi: (grp.1 * wg[1] + wg[1] - 1) as i64,
+            },
+            lid_x: Iv { lo: 0, hi: (wg[0] - 1) as i64 },
+            lid_y: Iv { lo: 0, hi: (wg[1] - 1) as i64 },
+            grp_x: grp.0 as i64,
+            grp_y: grp.1 as i64,
+            gdim_x: global[0] as i64,
+            gdim_y: global[1] as i64,
+        }
+    }
+
+    /// Ranges for a single row (`lid_y` exact): the finer fallback that
+    /// implements interior/border row splitting inside border groups.
+    pub(crate) fn for_row(
+        grp: (usize, usize),
+        wg: [usize; 2],
+        global: [usize; 2],
+        lid_y: usize,
+    ) -> SpecEnv {
+        let mut env = SpecEnv::for_group(grp, wg, global);
+        env.lid_y = Iv::exact(lid_y as i64);
+        env.gid_y = Iv::exact((grp.1 * wg[1] + lid_y) as i64);
+        env
+    }
+}
+
+/// Walk `prog.phases[phase]` under `env`, following every branch the
+/// intervals decide, and return the straight-line trace of ops every
+/// item in the batch would execute — or `None` as soon as a branch
+/// stays undecided (data-dependent condition, border-straddling index
+/// range, float condition). Constant-trip loops unroll into the trace;
+/// the optimizer pipeline then deletes the decided conditions' dead
+/// computation.
+pub(crate) fn specialize(prog: &VmProgram, phase: usize, env: &SpecEnv) -> Option<Vec<Op>> {
+    let ops = &prog.phases[phase];
+    let mut iv = vec![Iv::UNK; prog.n_ri];
+    iv[SLOT_GID_X as usize] = env.gid_x;
+    iv[SLOT_GID_Y as usize] = env.gid_y;
+    iv[SLOT_LID_X as usize] = env.lid_x;
+    iv[SLOT_LID_Y as usize] = env.lid_y;
+    iv[SLOT_GRP_X as usize] = Iv::exact(env.grp_x);
+    iv[SLOT_GRP_Y as usize] = Iv::exact(env.grp_y);
+    iv[SLOT_GDIM_X as usize] = Iv::exact(env.gdim_x);
+    iv[SLOT_GDIM_Y as usize] = Iv::exact(env.gdim_y);
+    let mut out: Vec<Op> = Vec::new();
+    let mut pc = 0usize;
+    let mut steps = 0usize;
+    while pc < ops.len() {
+        steps += 1;
+        if steps > MAX_TRACE_STEPS || out.len() > MAX_TRACE_LEN {
+            return None;
+        }
+        match ops[pc] {
+            Op::Jmp { t } => {
+                pc = t as usize;
+            }
+            Op::Jz { c, t } => match truth(iv[c as usize]) {
+                Some(true) => pc += 1,
+                Some(false) => pc = t as usize,
+                None => return None,
+            },
+            Op::Jnz { c, t } => match truth(iv[c as usize]) {
+                Some(true) => pc = t as usize,
+                Some(false) => pc += 1,
+                None => return None,
+            },
+            Op::Ret => break,
+            Op::Runaway => return None,
+            op => {
+                eval_interval(&mut iv, &op);
+                out.push(op);
+                pc += 1;
+            }
+        }
+    }
+    out.push(Op::Ret);
+    optimize_ops(&mut out, prog.n_ri, prog.n_rf, prog.n_slot_ri, prog.n_slot_rf);
+    Some(out)
+}
+
+/// Decided truthiness of an interval (`None` = straddles zero).
+fn truth(v: Iv) -> Option<bool> {
+    if v.lo == 0 && v.hi == 0 {
+        Some(false)
+    } else if v.lo > 0 || v.hi < 0 {
+        Some(true)
+    } else {
+        None
+    }
+}
+
+fn add_iv(a: Iv, b: Iv) -> Iv {
+    match (a.lo.checked_add(b.lo), a.hi.checked_add(b.hi)) {
+        (Some(lo), Some(hi)) => Iv { lo, hi },
+        _ => Iv::UNK,
+    }
+}
+
+fn sub_iv(a: Iv, b: Iv) -> Iv {
+    match (a.lo.checked_sub(b.hi), a.hi.checked_sub(b.lo)) {
+        (Some(lo), Some(hi)) => Iv { lo, hi },
+        _ => Iv::UNK,
+    }
+}
+
+fn mul_iv(a: Iv, b: Iv) -> Iv {
+    let c = [
+        a.lo as i128 * b.lo as i128,
+        a.lo as i128 * b.hi as i128,
+        a.hi as i128 * b.lo as i128,
+        a.hi as i128 * b.hi as i128,
+    ];
+    let lo = *c.iter().min().unwrap();
+    let hi = *c.iter().max().unwrap();
+    if lo < i64::MIN as i128 || hi > i64::MAX as i128 {
+        Iv::UNK
+    } else {
+        Iv { lo: lo as i64, hi: hi as i64 }
+    }
+}
+
+fn neg_iv(a: Iv) -> Iv {
+    match (a.hi.checked_neg(), a.lo.checked_neg()) {
+        (Some(lo), Some(hi)) => Iv { lo, hi },
+        _ => Iv::UNK,
+    }
+}
+
+/// Interval of `max(min(v, hi), lo)` — the clamp formula, monotone in
+/// every argument (computed without `clamp` itself, which asserts
+/// ordered bounds).
+fn clamp_iv(v: Iv, lo: Iv, hi: Iv) -> Iv {
+    Iv {
+        lo: v.lo.min(hi.lo).max(lo.lo),
+        hi: v.hi.min(hi.hi).max(lo.hi),
+    }
+}
+
+fn abs_iv(a: Iv) -> Iv {
+    let (Some(al), Some(ah)) = (a.lo.checked_abs(), a.hi.checked_abs()) else {
+        return Iv::UNK;
+    };
+    if a.lo >= 0 {
+        a
+    } else if a.hi <= 0 {
+        Iv { lo: ah, hi: al }
+    } else {
+        Iv { lo: 0, hi: al.max(ah) }
+    }
+}
+
+fn cmp_iv(p: Pred, a: Iv, b: Iv) -> Iv {
+    let t = |c: bool| Iv::exact(c as i64);
+    match p {
+        Pred::Lt if a.hi < b.lo => t(true),
+        Pred::Lt if a.lo >= b.hi => t(false),
+        Pred::Le if a.hi <= b.lo => t(true),
+        Pred::Le if a.lo > b.hi => t(false),
+        Pred::Gt if a.lo > b.hi => t(true),
+        Pred::Gt if a.hi <= b.lo => t(false),
+        Pred::Ge if a.lo >= b.hi => t(true),
+        Pred::Ge if a.hi < b.lo => t(false),
+        Pred::Eq if a.lo == a.hi && b.lo == b.hi && a.lo == b.lo => t(true),
+        Pred::Eq if a.hi < b.lo || b.hi < a.lo => t(false),
+        Pred::Ne if a.hi < b.lo || b.hi < a.lo => t(true),
+        Pred::Ne if a.lo == a.hi && b.lo == b.hi && a.lo == b.lo => t(false),
+        _ => Iv::bool_any(),
+    }
+}
+
+fn within01(a: Iv) -> bool {
+    a.lo >= 0 && a.hi <= 1
+}
+
+/// Integer wrap (`IWrap`) bounds per target type.
+fn wrap_bounds(ty: ScalarType) -> Option<(i64, i64)> {
+    Some(match ty {
+        ScalarType::I32 => (i32::MIN as i64, i32::MAX as i64),
+        ScalarType::U32 => (0, u32::MAX as i64),
+        ScalarType::I16 => (i16::MIN as i64, i16::MAX as i64),
+        ScalarType::U16 => (0, u16::MAX as i64),
+        ScalarType::I8 => (i8::MIN as i64, i8::MAX as i64),
+        ScalarType::U8 => (0, u8::MAX as i64),
+        _ => return None,
+    })
+}
+
+/// Advance the interval state over one non-branch op. Anything not
+/// modeled simply makes its destination unknown — soundly, since only
+/// branch decisions consume the intervals.
+fn eval_interval(iv: &mut [Iv], op: &Op) {
+    let d = match def_of(op) {
+        Some(R::I(d)) => d as usize,
+        // Float destinations (or no destination): nothing tracked.
+        _ => return,
+    };
+    let v = |r: u16, iv: &[Iv]| iv[r as usize];
+    iv[d] = match *op {
+        Op::IConst { v, .. } => Iv::exact(v),
+        Op::IMov { s, .. } => v(s, iv),
+        Op::IAdd { a, b, .. } => add_iv(v(a, iv), v(b, iv)),
+        Op::ISub { a, b, .. } => sub_iv(v(a, iv), v(b, iv)),
+        Op::IMul { a, b, .. } => mul_iv(v(a, iv), v(b, iv)),
+        Op::IMulAdd { a, b, c, .. } => add_iv(mul_iv(v(a, iv), v(b, iv)), v(c, iv)),
+        Op::INeg { s, .. } => neg_iv(v(s, iv)),
+        Op::IMin { a, b, .. } => Iv {
+            lo: v(a, iv).lo.min(v(b, iv).lo),
+            hi: v(a, iv).hi.min(v(b, iv).hi),
+        },
+        Op::IMax { a, b, .. } => Iv {
+            lo: v(a, iv).lo.max(v(b, iv).lo),
+            hi: v(a, iv).hi.max(v(b, iv).hi),
+        },
+        Op::IClamp { v: x, lo, hi, .. } => clamp_iv(v(x, iv), v(lo, iv), v(hi, iv)),
+        Op::IAbs { s, .. } => abs_iv(v(s, iv)),
+        Op::IWrap { s, ty, .. } => match wrap_bounds(ty) {
+            Some((lo, hi)) => {
+                let x = v(s, iv);
+                if x.lo >= lo && x.hi <= hi {
+                    x
+                } else {
+                    Iv { lo, hi }
+                }
+            }
+            None => Iv::UNK,
+        },
+        Op::ICmp { p, a, b, .. } => cmp_iv(p, v(a, iv), v(b, iv)),
+        Op::INorm { s, .. } => match truth(v(s, iv)) {
+            Some(true) => Iv::exact(1),
+            Some(false) => Iv::exact(0),
+            None => Iv::bool_any(),
+        },
+        Op::INot { s, .. } => match truth(v(s, iv)) {
+            Some(true) => Iv::exact(0),
+            Some(false) => Iv::exact(1),
+            None => Iv::bool_any(),
+        },
+        Op::IBitAnd { a, b, .. } if within01(v(a, iv)) && within01(v(b, iv)) => Iv {
+            lo: v(a, iv).lo & v(b, iv).lo,
+            hi: v(a, iv).hi & v(b, iv).hi,
+        },
+        Op::IBitOr { a, b, .. } if within01(v(a, iv)) && within01(v(b, iv)) => Iv {
+            lo: v(a, iv).lo | v(b, iv).lo,
+            hi: v(a, iv).hi | v(b, iv).hi,
+        },
+        // FCmp / FNonZero land in the int file with boolean range.
+        Op::FCmp { .. } | Op::FNonZero { .. } => Iv::bool_any(),
+        Op::LoadB { .. } => Iv::bool_any(),
+        _ => Iv::UNK,
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Execute a stream on fresh register files via the scalar
+    /// interpreter (no buffers → only pure/jump ops testable here).
+    fn run(ops: &[Op], n_ri: usize, n_rf: usize) -> (Vec<i64>, Vec<f64>) {
+        let mut ri = vec![0i64; n_ri];
+        let mut rf = vec![0f64; n_rf];
+        super::super::vm::run_ops_pure(ops, &mut ri, &mut rf).unwrap();
+        (ri, rf)
+    }
+
+    /// Optimize with every register a "slot" (live at exit) so results
+    /// stay observable, unless a temp count is given.
+    fn opt_all_slots(mut ops: Vec<Op>, n_ri: usize, n_rf: usize) -> Vec<Op> {
+        optimize_ops(&mut ops, n_ri, n_rf, n_ri, n_rf);
+        ops
+    }
+
+    #[test]
+    fn jz_on_known_register_folds() {
+        // r0 = 1; if r0 == 0 jump over r1 = 5. The Jz is dead (cond
+        // known non-zero) and folds to nothing.
+        let ops = vec![
+            Op::IConst { d: 0, v: 1 },
+            Op::Jz { c: 0, t: 3 },
+            Op::IConst { d: 1, v: 5 },
+            Op::Ret,
+        ];
+        let o = opt_all_slots(ops.clone(), 2, 0);
+        assert!(
+            !o.iter().any(|op| matches!(op, Op::Jz { .. })),
+            "Jz should fold: {o:?}"
+        );
+        assert_eq!(run(&o, 2, 0).0, run(&ops, 2, 0).0);
+        // Taken direction: cond known zero → unconditional Jmp, and the
+        // skipped store side never executes.
+        let ops = vec![
+            Op::IConst { d: 0, v: 0 },
+            Op::Jz { c: 0, t: 3 },
+            Op::IConst { d: 1, v: 5 },
+            Op::IConst { d: 1, v: 7 },
+            Op::Ret,
+        ];
+        let o = opt_all_slots(ops.clone(), 2, 0);
+        assert!(
+            !o.iter().any(|op| matches!(op, Op::Jz { .. })),
+            "decided Jz should become Jmp: {o:?}"
+        );
+        assert_eq!(run(&o, 2, 0).0, run(&ops, 2, 0).0);
+    }
+
+    #[test]
+    fn dead_move_after_setvar_coalesces() {
+        // The SetVar shape with a *runtime* input (r0 is set by the
+        // driver, so nothing folds): compute into temp r2, move into
+        // slot r1. Coalescing retargets the add and erases the move.
+        let ops = vec![
+            Op::IAdd { d: 2, a: 0, b: 0 },
+            Op::IMov { d: 1, s: 2 },
+            Op::Ret,
+        ];
+        let mut o = ops.clone();
+        // r0, r1 are slots; r2 is a temp.
+        optimize_ops(&mut o, 3, 0, 2, 0);
+        assert!(
+            !o.iter().any(|op| matches!(op, Op::IMov { .. })),
+            "move should coalesce away: {o:?}"
+        );
+        assert!(
+            o.iter().any(|op| matches!(op, Op::IAdd { d: 1, a: 0, b: 0 })),
+            "add should retarget the slot: {o:?}"
+        );
+        let mut ri = vec![21, 0, 0];
+        let mut rf = vec![];
+        super::super::vm::run_ops_pure(&o, &mut ri, &mut rf).unwrap();
+        assert_eq!(ri[1], 42);
+        // And the constant-input flavor folds end-to-end instead.
+        let ops = vec![
+            Op::IConst { d: 1, v: 3 },
+            Op::IAdd { d: 2, a: 1, b: 1 },
+            Op::IMov { d: 0, s: 2 },
+            Op::Ret,
+        ];
+        let mut o = ops.clone();
+        optimize_ops(&mut o, 3, 0, 2, 0);
+        assert!(!o.iter().any(|op| matches!(op, Op::IMov { .. })), "{o:?}");
+        let (ri, _) = run(&o, 3, 0);
+        assert_eq!(ri[0], 6);
+    }
+
+    #[test]
+    fn copy_propagation_sees_through_moves() {
+        // r1 = r0; r2 = r1 + r1 → operands canonicalize to r0, and the
+        // intermediate copy dies.
+        let ops = vec![
+            Op::IConst { d: 0, v: 21 },
+            Op::IMov { d: 1, s: 0 },
+            Op::IAdd { d: 2, a: 1, b: 1 },
+            Op::Ret,
+        ];
+        let mut o = ops.clone();
+        optimize_ops(&mut o, 3, 0, 1, 0); // only r0 is a slot
+        let (ri, _) = run(&o, 3, 0);
+        assert_eq!(ri[2], 0, "temp r2 was dead and should not be written");
+        // With r2 observable the value must survive end-to-end.
+        let o2 = opt_all_slots(ops.clone(), 3, 0);
+        assert_eq!(run(&o2, 3, 0).0[2], 42);
+    }
+
+    #[test]
+    fn constants_fold_through_arithmetic() {
+        let ops = vec![
+            Op::IConst { d: 1, v: 6 },
+            Op::IConst { d: 2, v: 7 },
+            Op::IMul { d: 0, a: 1, b: 2 },
+            Op::Ret,
+        ];
+        let mut o = ops.clone();
+        optimize_ops(&mut o, 3, 0, 1, 0);
+        // The multiply folds to a constant write of r0; the const setup
+        // for r1/r2 dies.
+        assert!(
+            o.iter().any(|op| matches!(op, Op::IConst { d: 0, v: 42 })),
+            "{o:?}"
+        );
+        assert!(!o.iter().any(|op| matches!(op, Op::IMul { .. })), "{o:?}");
+        assert_eq!(run(&o, 3, 0).0[0], 42);
+    }
+
+    #[test]
+    fn muladd_refuses_and_fuses_correctly() {
+        // t = a*b; d = t + c  →  d = a*b + c, multiply collected once
+        // the temporary dies. Slots are r0..r3 (inputs + result), the
+        // multiply temporary is r4.
+        let ops = vec![
+            Op::IMul { d: 4, a: 0, b: 1 },
+            Op::IAdd { d: 3, a: 4, b: 2 },
+            Op::Ret,
+        ];
+        // With t (r4) declared a live slot the multiply must survive.
+        let mut o = ops.clone();
+        optimize_ops(&mut o, 5, 0, 5, 0);
+        assert!(o.iter().any(|op| matches!(op, Op::IMul { .. })), "{o:?}");
+        assert!(o.iter().any(|op| matches!(op, Op::IMulAdd { .. })), "{o:?}");
+        // With t a temp, the pair fuses and the multiply dies.
+        let mut o = ops.clone();
+        optimize_ops(&mut o, 5, 0, 4, 0);
+        assert!(!o.iter().any(|op| matches!(op, Op::IMul { .. })), "{o:?}");
+        assert!(o.iter().any(|op| matches!(op, Op::IMulAdd { .. })), "{o:?}");
+        // Semantics: run the fused form against hand arithmetic. The
+        // inputs stay runtime registers (set directly, not by consts in
+        // the stream, so folding can't bypass the fused op).
+        let mut ri = vec![0i64; 5];
+        ri[0] = 11;
+        ri[1] = 5;
+        ri[2] = 9;
+        let mut rf = vec![0f64; 0];
+        super::super::vm::run_ops_pure(&o, &mut ri, &mut rf).unwrap();
+        assert_eq!(ri[3], 11 * 5 + 9);
+    }
+
+    #[test]
+    fn trapping_ops_survive_dce() {
+        // A division whose result is dead must NOT be removed (it can
+        // trap at runtime and the oracle would too).
+        let ops = vec![
+            Op::IConst { d: 1, v: 10 },
+            Op::IConst { d: 2, v: 0 },
+            Op::IDiv { d: 3, a: 1, b: 2 },
+            Op::Ret,
+        ];
+        let mut o = ops.clone();
+        optimize_ops(&mut o, 4, 0, 1, 0); // r3 dead
+        assert!(
+            o.iter().any(|op| matches!(op, Op::IDiv { .. })),
+            "dead div must survive: {o:?}"
+        );
+    }
+
+    #[test]
+    fn compaction_remaps_jump_targets() {
+        // A Jnz over a dead computation: after DCE + compaction the
+        // branch must still land on the live store.
+        let ops = vec![
+            Op::IConst { d: 1, v: 1 },     // 0: cond (temp, live at Jnz)
+            Op::Jnz { c: 1, t: 4 },        // 1: jump over the dead stretch
+            Op::IConst { d: 2, v: 9 },     // 2: dead
+            Op::IConst { d: 3, v: 9 },     // 3: dead
+            Op::IConst { d: 0, v: 5 },     // 4: live slot write
+            Op::Ret,                       // 5
+        ];
+        let mut o = ops.clone();
+        optimize_ops(&mut o, 4, 0, 1, 0);
+        let (ri, _) = run(&o, 4, 0);
+        assert_eq!(ri[0], 5, "{o:?}");
+        assert!(o.len() < ops.len(), "{o:?}");
+    }
+
+    #[test]
+    fn float_copy_and_const_propagation_is_bit_exact() {
+        let third = 1.0f64 / 3.0;
+        let ops = vec![
+            Op::FConst { d: 1, v: third },
+            Op::FMov { d: 2, s: 1 },
+            Op::FAdd { d: 0, a: 2, b: 2 },
+            Op::Ret,
+        ];
+        let mut o = ops.clone();
+        optimize_ops(&mut o, 0, 3, 0, 1);
+        let (_, rf) = run(&o, 0, 3);
+        let (_, rf_ref) = run(&ops, 0, 3);
+        assert_eq!(rf[0].to_bits(), rf_ref[0].to_bits());
+    }
+
+    #[test]
+    fn specializer_decides_guard_and_unrolls_loops() {
+        // A synthetic phase mimicking the lowered shape: a guard on
+        // gid_x < 100, then a constant-trip loop summing into a slot.
+        // Register 8 = slot acc, 9 = loop counter, 10..12 temps.
+        let ops = vec![
+            // if !(gid_x < 100) → Ret
+            Op::IConst { d: 10, v: 100 },                       // 0
+            Op::ICmp { p: Pred::Lt, d: 11, a: SLOT_GID_X as u16, b: 10 }, // 1
+            Op::Jz { c: 11, t: 12 },                            // 2
+            // acc = 0; for i in 0..3 { acc += gid_x }
+            Op::IConst { d: 8, v: 0 },                          // 3
+            Op::IConst { d: 9, v: 0 },                          // 4
+            // loop head
+            Op::IConst { d: 10, v: 3 },                         // 5
+            Op::ICmp { p: Pred::Lt, d: 11, a: 9, b: 10 },       // 6
+            Op::Jz { c: 11, t: 12 },                            // 7
+            Op::IAdd { d: 8, a: 8, b: SLOT_GID_X as u16 },      // 8
+            Op::IConst { d: 10, v: 1 },                         // 9
+            Op::IAdd { d: 9, a: 9, b: 10 },                     // 10
+            Op::Jmp { t: 5 },                                   // 11
+            Op::Ret,                                            // 12
+        ];
+        let prog = VmProgram {
+            phases: vec![ops],
+            n_ri: 12,
+            n_rf: 0,
+            n_slot_ri: 10,
+            n_slot_rf: 0,
+            buf_elems: vec![],
+        };
+        // Interior: gid_x in [16, 31] decides the guard and the loop
+        // fully unrolls into a branch-free trace.
+        let env = SpecEnv::for_group((1, 0), [16, 1], [64, 1]);
+        let trace = specialize(&prog, 0, &env).expect("interior specializes");
+        assert!(
+            !trace.iter().any(|op| matches!(
+                op,
+                Op::Jmp { .. } | Op::Jz { .. } | Op::Jnz { .. }
+            )),
+            "{trace:?}"
+        );
+        // Border: gid_x in [96, 111] straddles the guard → undecidable.
+        let env = SpecEnv::for_group((6, 0), [16, 1], [112, 1]);
+        assert!(specialize(&prog, 0, &env).is_none());
+    }
+
+    #[test]
+    fn interval_comparisons_decide_correctly() {
+        let a = Iv { lo: 5, hi: 9 };
+        let b = Iv { lo: 10, hi: 20 };
+        assert_eq!(cmp_iv(Pred::Lt, a, b), Iv::exact(1));
+        assert_eq!(cmp_iv(Pred::Ge, a, b), Iv::exact(0));
+        assert_eq!(cmp_iv(Pred::Lt, b, a), Iv::exact(0));
+        let c = Iv { lo: 8, hi: 12 };
+        assert_eq!(cmp_iv(Pred::Lt, a, c), Iv::bool_any());
+        assert_eq!(truth(Iv::exact(0)), Some(false));
+        assert_eq!(truth(Iv::exact(-3)), Some(true));
+        assert_eq!(truth(Iv { lo: -1, hi: 1 }), None);
+    }
+}

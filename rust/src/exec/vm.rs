@@ -15,19 +15,40 @@
 //!
 //! The NDRange driver here additionally executes **work-groups in
 //! parallel** across a scoped thread pool when the plan's write-set
-//! analysis proved group independence ([`KernelPlan::parallel_groups`],
-//! from `analysis/rw.rs`): every written buffer is touched only at the
-//! work-item's own grid point, and nothing written is ever read, so groups
-//! can run in any order — or concurrently — with bit-identical results.
-//! Plans that can't be proven independent run serially (still through the
-//! bytecode), and the tree-walking interpreter in [`super::machine`] is
-//! retained as the differential oracle (`Engine::TreeWalk`).
+//! analysis proved independence ([`KernelPlan::parallel_groups`], from
+//! `analysis/rw.rs`): every written buffer is touched only at elements
+//! the work-item provably owns (its own grid point, or a disjoint affine
+//! strided pattern), and nothing written is ever read, so groups can run
+//! in any order — or concurrently — with bit-identical results.
+//! Barrier-free single-phase plans with too few groups to fill the pool
+//! partition at work-item-*row* granularity instead
+//! ([`KernelPlan::row_parallel`]). Plans that can't be proven
+//! independent run serially (still through the bytecode), and the
+//! tree-walking interpreter in [`super::machine`] is retained as the
+//! differential oracle (`Engine::TreeWalk`).
 //!
 //! Lowering is total for everything the transformations emit today; the
 //! few dynamically-typed corners of the language the register files cannot
 //! represent statically (e.g. `min(int, float)`, whose result *variant*
 //! depends on runtime values) return `None` from [`VmProgram::build`] and
 //! the plan transparently executes on the tree-walker instead.
+//!
+//! Two further stages sit on top of the raw bytecode (PR 5):
+//!
+//! * an **optimizer pipeline** ([`super::opt`]) — peephole/dataflow
+//!   passes (copy/constant propagation, `Jz` folding on known registers,
+//!   dead-move elimination after `SetVar` lowering, `IMulAdd` re-fusion,
+//!   dead-code elimination) run over every phase at build time;
+//! * **row-batched interpretation** — when the plan's write-set analysis
+//!   proved work-*items* independent ([`KernelPlan::batchable`]), the
+//!   driver asks [`super::opt::specialize`] for a branch-free trace of
+//!   the phase under this group/row's known index ranges (interval
+//!   analysis decides grid guards, boundary ternaries and constant-trip
+//!   loops), and executes a whole row of work-items per instruction over
+//!   fixed-width register lanes ([`LANES`]) the autovectorizer can turn
+//!   into SIMD. Border rows/groups whose branches stay data- or
+//!   position-dependent fall back to the scalar loop — interior/border
+//!   splitting at trace granularity.
 
 use crate::imagecl::ast::{BinOp, ScalarType, UnOp};
 use crate::transform::clir::KernelPlan;
@@ -38,12 +59,32 @@ use super::compiled::{
     SLOT_GID_X, SLOT_GID_Y, SLOT_GRP_X, SLOT_GRP_Y, SLOT_LID_X, SLOT_LID_Y,
 };
 use super::machine::{BufSlot, ExecError, MAX_WHILE};
+use super::opt;
 
 /// Launches below this many logical grid pixels run serially even when
 /// parallel execution is proven safe — thread spawn/join would dominate.
 /// (Pixels, not work-items: coarsening moves work into each item without
 /// changing how much total work the launch does.)
 const PAR_MIN_PIXELS: usize = 1 << 14;
+
+/// Lane width of the batched interpreter: this many work-items execute
+/// each instruction together over fixed-width register lanes (arrays the
+/// autovectorizer can turn into SIMD).
+pub(crate) const LANES: usize = 8;
+
+/// Work-group widths below this run scalar even when a batched trace
+/// exists — lane setup would outweigh the win.
+const MIN_BATCH_WIDTH: usize = 4;
+
+/// Prefer row-granular work partitioning when whole groups cannot keep
+/// this many× the thread pool busy (plans with few large groups).
+const ROW_PARTITION_FACTOR: usize = 2;
+
+/// Give up on per-row specialization for a group after this many failed
+/// rows: border groups fail only at their edge rows, while phases with
+/// data-dependent branches fail on *every* row — this caps their probe
+/// cost at two interval walks per group instead of one per row.
+const MAX_ROW_SPEC_FAILS: u32 = 2;
 
 /// Comparison predicate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -135,19 +176,28 @@ pub enum Op {
     /// `while` iteration cap exceeded.
     Runaway,
     Ret,
+    /// Erased by an optimizer pass; removed again by compaction. Never
+    /// present in a finished program, but executing one is a no-op.
+    Nop,
 }
 
 /// A kernel plan lowered all the way to bytecode: one instruction stream
 /// per barrier phase over shared register files.
 #[derive(Debug, Clone)]
 pub struct VmProgram {
-    phases: Vec<Vec<Op>>,
-    n_ri: usize,
-    n_rf: usize,
+    pub(crate) phases: Vec<Vec<Op>>,
+    pub(crate) n_ri: usize,
+    pub(crate) n_rf: usize,
+    /// Registers below these indices in each file are backed by variable
+    /// slots: like the tree-walker's slot frame they persist across
+    /// work-items and phases, so the optimizer must treat them as live at
+    /// every phase exit. Registers at or above are statement temporaries.
+    pub(crate) n_slot_ri: usize,
+    pub(crate) n_slot_rf: usize,
     /// Element type of each buffer index (plan buffers, then locals) —
     /// the lowering baked conversions for these types into the ops, so a
     /// launch whose argument buffers disagree must use the tree-walker.
-    buf_elems: Vec<ScalarType>,
+    pub(crate) buf_elems: Vec<ScalarType>,
 }
 
 // ---------------------------------------------------------------------
@@ -187,9 +237,22 @@ struct Builder<'a> {
 }
 
 impl VmProgram {
-    /// Lower a compiled plan to bytecode. `None` = some construct cannot
-    /// be statically typed; the caller keeps the tree-walker.
+    /// Lower a compiled plan to bytecode and run the optimizer pipeline
+    /// over it. `None` = some construct cannot be statically typed; the
+    /// caller keeps the tree-walker.
     pub fn build(plan: &KernelPlan, compiled: &CompiledPlan) -> Option<VmProgram> {
+        Self::build_with(plan, compiled, true)
+    }
+
+    /// [`Self::build`] with the optimizer pipeline optional — the
+    /// unoptimized program is the PR-3 baseline kept addressable for the
+    /// differential grid (`Engine::VmUnopt`) and the bench regression
+    /// gate.
+    pub fn build_with(
+        plan: &KernelPlan,
+        compiled: &CompiledPlan,
+        optimize: bool,
+    ) -> Option<VmProgram> {
         let slot_cls = scan_slot_classes(compiled)?;
         // Assign registers: slots first (builtin slots 0..8 land on int
         // registers 0..8 because they are all class I), temps after.
@@ -236,7 +299,18 @@ impl VmProgram {
             n_rf = n_rf.max(b.max_tf as usize);
             phases.push(b.ops);
         }
-        Some(VmProgram { phases, n_ri, n_rf, buf_elems })
+        let mut prog = VmProgram {
+            phases,
+            n_ri,
+            n_rf,
+            n_slot_ri: ni as usize,
+            n_slot_rf: nf as usize,
+            buf_elems,
+        };
+        if optimize {
+            opt::optimize(&mut prog);
+        }
+        Some(prog)
     }
 }
 
@@ -1000,7 +1074,7 @@ fn rf_set(rf: &mut [f64], r: u16, v: f64) {
 
 /// `store_as` for an int register (C integer-wrap per element type).
 #[inline(always)]
-fn wrap_store(ty: ScalarType, v: i64) -> f64 {
+pub(crate) fn wrap_store(ty: ScalarType, v: i64) -> f64 {
     match ty {
         ScalarType::I32 => v as i32 as f64,
         ScalarType::U32 => v as u32 as f64,
@@ -1015,7 +1089,7 @@ fn wrap_store(ty: ScalarType, v: i64) -> f64 {
 }
 
 #[inline(always)]
-fn wrap_int(ty: ScalarType, v: i64) -> i64 {
+pub(crate) fn wrap_int(ty: ScalarType, v: i64) -> i64 {
     match ty {
         ScalarType::I32 => v as i32 as i64,
         ScalarType::U32 => v as u32 as i64,
@@ -1028,7 +1102,7 @@ fn wrap_int(ty: ScalarType, v: i64) -> i64 {
 }
 
 #[inline(always)]
-fn pred_i(p: Pred, a: i64, b: i64) -> i64 {
+pub(crate) fn pred_i(p: Pred, a: i64, b: i64) -> i64 {
     (match p {
         Pred::Eq => a == b,
         Pred::Ne => a != b,
@@ -1040,7 +1114,7 @@ fn pred_i(p: Pred, a: i64, b: i64) -> i64 {
 }
 
 #[inline(always)]
-fn pred_f(p: Pred, a: f64, b: f64) -> i64 {
+pub(crate) fn pred_f(p: Pred, a: f64, b: f64) -> i64 {
     (match p {
         Pred::Eq => a == b,
         Pred::Ne => a != b,
@@ -1273,8 +1347,512 @@ fn run_ops(
 
             Op::Runaway => return Err(Trap::Runaway),
             Op::Ret => return Ok(()),
+            Op::Nop => {}
         }
         pc += 1;
+    }
+    Ok(())
+}
+
+/// Buffer-free scalar execution for optimizer unit tests (`Trap` mapped
+/// to a debug string since no buffer names exist here).
+#[cfg(test)]
+pub(crate) fn run_ops_pure(
+    ops: &[Op],
+    ri: &mut [i64],
+    rf: &mut [f64],
+) -> Result<(), String> {
+    run_ops(ops, ri, rf, &[]).map_err(|t| format!("{t:?}"))
+}
+
+/// Execute a straight-line trace for up to [`LANES`] work-items at once.
+/// Registers are lane arrays: pure arithmetic runs full-width (the shape
+/// the autovectorizer turns into SIMD), while anything that can trap,
+/// panic or touch memory — loads, stores, texture ops, div/rem, clamps,
+/// `abs` — covers only the `n` *active* lanes (inactive lanes hold
+/// garbage from earlier batches). The trace must be branch-free, which
+/// [`opt::specialize`] guarantees.
+///
+/// Success outputs are bit-identical to scalar execution (same ops, same
+/// order per item, and items were proven to write disjoint elements). On
+/// a *trap*, which item's trap surfaces first can differ from the serial
+/// item order — error states are not part of the bit-identity contract.
+#[allow(clippy::needless_range_loop)]
+fn run_ops_batch(
+    ops: &[Op],
+    ri: &mut [[i64; LANES]],
+    rf: &mut [[f64; LANES]],
+    bufs: &[RawBuf],
+    n: usize,
+) -> Result<(), Trap> {
+    debug_assert!(n >= 1 && n <= LANES);
+    for op in ops {
+        match *op {
+            Op::IConst { d, v } => ri[d as usize] = [v; LANES],
+            Op::FConst { d, v } => rf[d as usize] = [v; LANES],
+            Op::IMov { d, s } => ri[d as usize] = ri[s as usize],
+            Op::FMov { d, s } => rf[d as usize] = rf[s as usize],
+            Op::IToF { d, s } => {
+                let x = ri[s as usize];
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] as f64;
+                }
+            }
+            Op::FToI { d, s } => {
+                let x = rf[s as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] as i64;
+                }
+            }
+            Op::IWrap { d, s, ty } => {
+                let x = ri[s as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = wrap_int(ty, x[l]);
+                }
+            }
+            Op::F32Round { d, s } => {
+                let x = rf[s as usize];
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] as f32 as f64;
+                }
+            }
+            Op::FNonZero { d, s } => {
+                let x = rf[s as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = (x[l] != 0.0) as i64;
+                }
+            }
+            Op::INorm { d, s } => {
+                let x = ri[s as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = (x[l] != 0) as i64;
+                }
+            }
+
+            Op::IAdd { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].wrapping_add(y[l]);
+                }
+            }
+            Op::ISub { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].wrapping_sub(y[l]);
+                }
+            }
+            Op::IMul { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].wrapping_mul(y[l]);
+                }
+            }
+            Op::IMulAdd { d, a, b, c } => {
+                let (x, y, z) = (ri[a as usize], ri[b as usize], ri[c as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].wrapping_mul(y[l]).wrapping_add(z[l]);
+                }
+            }
+            Op::IDiv { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..n {
+                    if y[l] == 0 {
+                        return Err(Trap::DivByZero);
+                    }
+                    o[l] = x[l] / y[l];
+                }
+            }
+            Op::IRem { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..n {
+                    if y[l] == 0 {
+                        return Err(Trap::DivByZero);
+                    }
+                    o[l] = x[l] % y[l];
+                }
+            }
+            Op::INeg { d, s } => {
+                let x = ri[s as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].wrapping_neg();
+                }
+            }
+            Op::INot { d, s } => {
+                let x = ri[s as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = (x[l] == 0) as i64;
+                }
+            }
+            Op::IBitNot { d, s } => {
+                let x = ri[s as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = !x[l];
+                }
+            }
+            Op::IBitAnd { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] & y[l];
+                }
+            }
+            Op::IBitOr { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] | y[l];
+                }
+            }
+            Op::IBitXor { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] ^ y[l];
+                }
+            }
+            Op::IShl { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].wrapping_shl(y[l] as u32);
+                }
+            }
+            Op::IShr { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].wrapping_shr(y[l] as u32);
+                }
+            }
+            Op::IMin { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].min(y[l]);
+                }
+            }
+            Op::IMax { d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l].max(y[l]);
+                }
+            }
+            Op::IClamp { d, v, lo, hi } => {
+                // Active lanes only: `clamp` panics on inverted bounds,
+                // and inactive-lane garbage must not fault spuriously.
+                let (x, l0, h0) = (ri[v as usize], ri[lo as usize], ri[hi as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..n {
+                    o[l] = x[l].clamp(l0[l], h0[l]);
+                }
+            }
+            Op::IAbs { d, s } => {
+                // Active lanes only: `i64::MIN.abs()` panics.
+                let x = ri[s as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..n {
+                    o[l] = x[l].abs();
+                }
+            }
+            Op::ICmp { p, d, a, b } => {
+                let (x, y) = (ri[a as usize], ri[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = pred_i(p, x[l], y[l]);
+                }
+            }
+
+            Op::FAdd { d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] + y[l];
+                }
+            }
+            Op::FSub { d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] - y[l];
+                }
+            }
+            Op::FMul { d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] * y[l];
+                }
+            }
+            Op::FDiv { d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] / y[l];
+                }
+            }
+            Op::FRem { d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = x[l] % y[l];
+                }
+            }
+            Op::FNeg { d, s } => {
+                let x = rf[s as usize];
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = -x[l];
+                }
+            }
+            Op::FMin { d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = if x[l] <= y[l] { x[l] } else { y[l] };
+                }
+            }
+            Op::FMax { d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..LANES {
+                    o[l] = if x[l] <= y[l] { y[l] } else { x[l] };
+                }
+            }
+            Op::FClamp { d, v, lo, hi } => {
+                // Active lanes only: `f64::clamp` panics on NaN bounds.
+                let (x, l0, h0) = (rf[v as usize], rf[lo as usize], rf[hi as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..n {
+                    o[l] = x[l].clamp(l0[l], h0[l]);
+                }
+            }
+            Op::FCmp { p, d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..LANES {
+                    o[l] = pred_f(p, x[l], y[l]);
+                }
+            }
+            Op::Math1 { f, d, s } => {
+                let x = rf[s as usize];
+                let o = &mut rf[d as usize];
+                for l in 0..n {
+                    let v = x[l];
+                    o[l] = match f {
+                        Fn1::Sqrt => v.sqrt(),
+                        Fn1::Rsqrt => 1.0 / v.sqrt(),
+                        Fn1::Fabs | Fn1::Abs => v.abs(),
+                        Fn1::Exp => v.exp(),
+                        Fn1::Log => v.ln(),
+                        Fn1::Sin => v.sin(),
+                        Fn1::Cos => v.cos(),
+                        Fn1::Floor => v.floor(),
+                        Fn1::Ceil => v.ceil(),
+                    };
+                }
+            }
+            Op::FPow { d, a, b } => {
+                let (x, y) = (rf[a as usize], rf[b as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..n {
+                    o[l] = x[l].powf(y[l]);
+                }
+            }
+
+            Op::LoadF { d, buf, idx } => {
+                let bf = &bufs[buf as usize];
+                let ix = ri[idx as usize];
+                let o = &mut rf[d as usize];
+                for l in 0..n {
+                    let i = ix[l];
+                    if (i as u64) >= bf.len as u64 {
+                        return Err(Trap::Oob { buf, index: i });
+                    }
+                    o[l] = bf.read(i as usize);
+                }
+            }
+            Op::LoadI { d, buf, idx } => {
+                let bf = &bufs[buf as usize];
+                let ix = ri[idx as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..n {
+                    let i = ix[l];
+                    if (i as u64) >= bf.len as u64 {
+                        return Err(Trap::Oob { buf, index: i });
+                    }
+                    o[l] = bf.read(i as usize) as i64;
+                }
+            }
+            Op::LoadB { d, buf, idx } => {
+                let bf = &bufs[buf as usize];
+                let ix = ri[idx as usize];
+                let o = &mut ri[d as usize];
+                for l in 0..n {
+                    let i = ix[l];
+                    if (i as u64) >= bf.len as u64 {
+                        return Err(Trap::Oob { buf, index: i });
+                    }
+                    o[l] = (bf.read(i as usize) != 0.0) as i64;
+                }
+            }
+            Op::StoreF { buf, idx, s, ty } => {
+                let bf = &bufs[buf as usize];
+                let ix = ri[idx as usize];
+                let v = rf[s as usize];
+                for l in 0..n {
+                    let i = ix[l];
+                    if (i as u64) >= bf.len as u64 {
+                        return Err(Trap::Oob { buf, index: i });
+                    }
+                    bf.write(
+                        i as usize,
+                        if ty == ScalarType::F32 { v[l] as f32 as f64 } else { v[l] },
+                    );
+                }
+            }
+            Op::StoreI { buf, idx, s, ty } => {
+                let bf = &bufs[buf as usize];
+                let ix = ri[idx as usize];
+                let v = ri[s as usize];
+                for l in 0..n {
+                    let i = ix[l];
+                    if (i as u64) >= bf.len as u64 {
+                        return Err(Trap::Oob { buf, index: i });
+                    }
+                    bf.write(i as usize, wrap_store(ty, v[l]));
+                }
+            }
+            Op::TexLoadF { d, buf, x, y } => {
+                let bf = &bufs[buf as usize];
+                if bf.w < 0 {
+                    return Err(Trap::NotImage { buf });
+                }
+                let (xs, ys) = (ri[x as usize], ri[y as usize]);
+                let o = &mut rf[d as usize];
+                for l in 0..n {
+                    let (xi, yi) = (xs[l], ys[l]);
+                    if xi < 0 || yi < 0 || xi >= bf.w || yi >= bf.h {
+                        return Err(Trap::Oob { buf, index: yi * bf.w + xi });
+                    }
+                    o[l] = bf.read((yi * bf.w + xi) as usize);
+                }
+            }
+            Op::TexLoadI { d, buf, x, y } => {
+                let bf = &bufs[buf as usize];
+                if bf.w < 0 {
+                    return Err(Trap::NotImage { buf });
+                }
+                let (xs, ys) = (ri[x as usize], ri[y as usize]);
+                let o = &mut ri[d as usize];
+                for l in 0..n {
+                    let (xi, yi) = (xs[l], ys[l]);
+                    if xi < 0 || yi < 0 || xi >= bf.w || yi >= bf.h {
+                        return Err(Trap::Oob { buf, index: yi * bf.w + xi });
+                    }
+                    o[l] = bf.read((yi * bf.w + xi) as usize) as i64;
+                }
+            }
+            Op::TexStoreF { buf, x, y, s, ty } => {
+                let bf = &bufs[buf as usize];
+                if bf.w < 0 {
+                    return Err(Trap::NotImage { buf });
+                }
+                let (xs, ys) = (ri[x as usize], ri[y as usize]);
+                let v = rf[s as usize];
+                for l in 0..n {
+                    let (xi, yi) = (xs[l], ys[l]);
+                    if xi < 0 || yi < 0 || xi >= bf.w || yi >= bf.h {
+                        return Err(Trap::Oob { buf, index: yi * bf.w + xi });
+                    }
+                    bf.write(
+                        (yi * bf.w + xi) as usize,
+                        if ty == ScalarType::F32 { v[l] as f32 as f64 } else { v[l] },
+                    );
+                }
+            }
+            Op::TexStoreI { buf, x, y, s, ty } => {
+                let bf = &bufs[buf as usize];
+                if bf.w < 0 {
+                    return Err(Trap::NotImage { buf });
+                }
+                let (xs, ys) = (ri[x as usize], ri[y as usize]);
+                let v = ri[s as usize];
+                for l in 0..n {
+                    let (xi, yi) = (xs[l], ys[l]);
+                    if xi < 0 || yi < 0 || xi >= bf.w || yi >= bf.h {
+                        return Err(Trap::Oob { buf, index: yi * bf.w + xi });
+                    }
+                    bf.write((yi * bf.w + xi) as usize, wrap_store(ty, v[l]));
+                }
+            }
+
+            Op::Ret => return Ok(()),
+            Op::Nop => {}
+            Op::Jmp { .. } | Op::Jz { .. } | Op::Jnz { .. } | Op::Runaway => {
+                unreachable!("control flow in a batched trace: {op:?}")
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Execute one row of work-items (`lid_x` = 0..`wg0`, fixed `lid_y`)
+/// through a specialized trace, [`LANES`] items per dispatch with a
+/// short tail batch.
+///
+/// Lanes start from whatever the previous batch left in the registers —
+/// no cross-item state is carried, only the builtin index registers are
+/// (re)initialized. That is sound because the IR can never read a
+/// variable slot before writing it within one item: every `Decl` lowers
+/// to a `SetVar` (uninitialized declarations compile to an assignment of
+/// 0 in `exec/compiled.rs`), sema rejects undeclared uses, and `For`
+/// counters are written by their init before the first condition read.
+/// The tree-walker's cross-item slot persistence is therefore
+/// unobservable by any compilable program.
+#[allow(clippy::too_many_arguments, clippy::needless_range_loop)]
+fn run_row_batched(
+    trace: &[Op],
+    ri: &mut [[i64; LANES]],
+    rf: &mut [[f64; LANES]],
+    bufs: &[RawBuf],
+    global: [usize; 2],
+    wg0: usize,
+    grp: (usize, usize),
+    lid_y: usize,
+    gid_y: usize,
+) -> Result<(), Trap> {
+    let base = grp.0 * wg0;
+    let mut lid_x = 0usize;
+    while lid_x < wg0 {
+        let n = LANES.min(wg0 - lid_x);
+        for l in 0..LANES {
+            ri[SLOT_GID_X as usize][l] = (base + lid_x + l) as i64;
+            ri[SLOT_LID_X as usize][l] = (lid_x + l) as i64;
+        }
+        ri[SLOT_GID_Y as usize] = [gid_y as i64; LANES];
+        ri[SLOT_LID_Y as usize] = [lid_y as i64; LANES];
+        ri[SLOT_GRP_X as usize] = [grp.0 as i64; LANES];
+        ri[SLOT_GRP_Y as usize] = [grp.1 as i64; LANES];
+        ri[SLOT_GDIM_X as usize] = [global[0] as i64; LANES];
+        ri[SLOT_GDIM_Y as usize] = [global[1] as i64; LANES];
+        run_ops_batch(trace, ri, rf, bufs, n)?;
+        lid_x += n;
     }
     Ok(())
 }
@@ -1295,15 +1873,20 @@ pub(crate) fn args_match(prog: &VmProgram, bufs: &[BufSlot]) -> bool {
             .all(|(slot, &elem)| slot.buffer().elem == elem)
 }
 
-/// Execute the NDRange through the bytecode VM: work-groups in parallel
-/// when the plan proved independence (and the launch is big enough to
-/// pay for threads), serially otherwise — bit-identical either way.
+/// Execute the NDRange through the bytecode VM: work-groups (or, for
+/// barrier-free plans with too few groups, work-item *rows*) in parallel
+/// when the plan proved independence and the launch is big enough to pay
+/// for threads, serially otherwise — bit-identical either way. With
+/// `batch`, rows whose control flow the specializer can decide from the
+/// group's index ranges execute through the batched lane interpreter;
+/// border rows and data-dependent branches fall back to the scalar loop.
 pub(crate) fn run_ndrange(
     plan: &KernelPlan,
     compiled: &CompiledPlan,
     prog: &VmProgram,
     bufs: &mut [BufSlot],
     grid: (usize, usize),
+    batch: bool,
 ) -> Result<(), ExecError> {
     let (global, wg) = plan.launch_dims(grid.0, grid.1);
     let groups = [global[0] / wg[0], global[1] / wg[1]];
@@ -1314,21 +1897,29 @@ pub(crate) fn run_ndrange(
         bufs[..n_args].iter_mut().map(RawBuf::of).collect(),
     );
 
-    let threads = if plan.parallel_groups
-        && n_groups >= 2
-        && grid.0 * grid.1 >= PAR_MIN_PIXELS
-    {
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(n_groups)
-    } else {
-        1
-    };
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let par_ok = plan.parallel_groups && grid.0 * grid.1 >= PAR_MIN_PIXELS;
+    // Row-granular partitioning when whole groups cannot keep the pool
+    // busy (few large groups) — only for barrier-free single-phase plans
+    // (`KernelPlan::row_parallel`), where splitting a group across
+    // threads cannot violate barrier semantics or share local scratch.
+    let unit_rows = par_ok
+        && plan.row_parallel
+        && wg[1] >= 2
+        && n_groups < avail * ROW_PARTITION_FACTOR;
+    let n_units = if unit_rows { n_groups * wg[1] } else { n_groups };
+    let threads = if par_ok && n_units >= 2 { avail.min(n_units) } else { 1 };
+
+    // Batched interpretation needs the per-*item* independence proof: a
+    // batch interleaves several items' instruction streams, so items must
+    // not communicate through buffers within a phase.
+    let batch = batch && plan.batchable && wg[0] >= MIN_BATCH_WIDTH;
 
     let run_range = |range: std::ops::Range<usize>| -> Result<(), Trap> {
         let mut ri = vec![0i64; prog.n_ri];
         let mut rf = vec![0f64; prog.n_rf];
+        let mut bri = vec![[0i64; LANES]; if batch { prog.n_ri } else { 0 }];
+        let mut brf = vec![[0f64; LANES]; if batch { prog.n_rf } else { 0 }];
         // Local scratch: allocated once per worker, zero-reset between
         // groups (fresh-allocation semantics without the allocator).
         let mut locals: Vec<Buffer> =
@@ -1342,23 +1933,93 @@ pub(crate) fn run_ndrange(
         }));
         ri[SLOT_GDIM_X as usize] = global[0] as i64;
         ri[SLOT_GDIM_Y as usize] = global[1] as i64;
-        for g in range {
+        // Specialized-trace cache, one entry per worker: (phase, group) →
+        // the group-wide trace (`None` = this group needs per-row
+        // specialization or the scalar loop) plus the count of failed
+        // row-specialization attempts (capped by MAX_ROW_SPEC_FAILS so
+        // never-specializing phases don't pay an interval walk per row).
+        // Workers visit consecutive units, so one entry captures almost
+        // all reuse.
+        let mut tcache: Option<((usize, usize), Option<Vec<Op>>, u32)> = None;
+        for u in range {
+            let (g, only_row) = if unit_rows {
+                (u / wg[1], Some(u % wg[1]))
+            } else {
+                (u, None)
+            };
             let (grp_x, grp_y) = (g % groups[0], g / groups[0]);
             for l in &mut locals {
                 l.data.fill(0.0);
             }
             ri[SLOT_GRP_X as usize] = grp_x as i64;
             ri[SLOT_GRP_Y as usize] = grp_y as i64;
-            for phase in &prog.phases {
+            for (pi, phase) in prog.phases.iter().enumerate() {
                 // Barrier semantics: every work-item finishes phase k
-                // before any starts k+1.
-                for lid_y in 0..wg[1] {
-                    for lid_x in 0..wg[0] {
-                        ri[SLOT_GID_X as usize] = (grp_x * wg[0] + lid_x) as i64;
-                        ri[SLOT_GID_Y as usize] = (grp_y * wg[1] + lid_y) as i64;
-                        ri[SLOT_LID_X as usize] = lid_x as i64;
-                        ri[SLOT_LID_Y as usize] = lid_y as i64;
-                        run_ops(phase, &mut ri, &mut rf, &view)?;
+                // before any starts k+1. (Row units only exist for
+                // single-phase plans, so a split group never spans a
+                // barrier.)
+                let rows = match only_row {
+                    Some(r) => r..r + 1,
+                    None => 0..wg[1],
+                };
+                for lid_y in rows {
+                    let gid_y = grp_y * wg[1] + lid_y;
+                    let mut batched = false;
+                    if batch {
+                        if tcache.as_ref().map(|(k, _, _)| *k) != Some((pi, g)) {
+                            let env = opt::SpecEnv::for_group(
+                                (grp_x, grp_y),
+                                wg,
+                                global,
+                            );
+                            tcache =
+                                Some(((pi, g), opt::specialize(prog, pi, &env), 0));
+                        }
+                        let (_, group_trace, row_fails) =
+                            tcache.as_mut().unwrap();
+                        // Per-row fallback: the group straddles a border,
+                        // but this row alone may still be decidable.
+                        let row_trace;
+                        let trace = match group_trace {
+                            Some(t) => Some(&*t),
+                            None if *row_fails < MAX_ROW_SPEC_FAILS => {
+                                let env = opt::SpecEnv::for_row(
+                                    (grp_x, grp_y),
+                                    wg,
+                                    global,
+                                    lid_y,
+                                );
+                                row_trace = opt::specialize(prog, pi, &env);
+                                if row_trace.is_none() {
+                                    *row_fails += 1;
+                                }
+                                row_trace.as_ref()
+                            }
+                            None => None,
+                        };
+                        if let Some(trace) = trace {
+                            run_row_batched(
+                                trace,
+                                &mut bri,
+                                &mut brf,
+                                &view,
+                                global,
+                                wg[0],
+                                (grp_x, grp_y),
+                                lid_y,
+                                gid_y,
+                            )?;
+                            batched = true;
+                        }
+                    }
+                    if !batched {
+                        for lid_x in 0..wg[0] {
+                            ri[SLOT_GID_X as usize] = (grp_x * wg[0] + lid_x) as i64;
+                            ri[SLOT_GID_Y as usize] = gid_y as i64;
+                            ri[SLOT_LID_X as usize] = lid_x as i64;
+                            ri[SLOT_LID_Y as usize] = lid_y as i64;
+                            run_ops(phase, &mut ri, &mut rf, &view)?;
+                        }
                     }
                 }
             }
@@ -1367,15 +2028,15 @@ pub(crate) fn run_ndrange(
     };
 
     let result: Result<(), Trap> = if threads <= 1 {
-        run_range(0..n_groups)
+        run_range(0..n_units)
     } else {
-        let chunk = n_groups.div_ceil(threads);
+        let chunk = n_units.div_ceil(threads);
         std::thread::scope(|s| {
             let handles: Vec<_> = (0..threads)
                 .map(|t| {
                     let run_range = &run_range;
                     let lo = t * chunk;
-                    let hi = ((t + 1) * chunk).min(n_groups);
+                    let hi = ((t + 1) * chunk).min(n_units);
                     s.spawn(move || run_range(lo..hi))
                 })
                 .collect();

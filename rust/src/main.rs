@@ -42,8 +42,10 @@ USAGE:
   imagecl tunedb compact [--db PATH] [--cap N]
                 inspect / exercise / compact the tuning knowledge base
   imagecl bench [--size N] [--iters N] [--kernels a,b] [--out PATH] [--smoke]
-                run the gallery kernels through the bytecode VM and the
-                tree-walking oracle; verify bit-identity; write BENCH_exec.json
+                run the gallery kernels through the engine ladder (tree
+                oracle, unoptimized VM, optimized scalar VM, batched VM);
+                verify bit-identity; write BENCH_exec.json; fail if the
+                optimized VM regressed below the unoptimized VM on blur
   imagecl fig6 [--size N]            reproduce Figure 6 (slowdown vs baselines)
   imagecl tables [--size N]          reproduce Tables 2-5 (tuned configurations)
   imagecl pipeline [--size N]        run the Harris pipeline through PJRT
@@ -52,6 +54,8 @@ USAGE:
 
 CFG example: \"wg=64x4 px=4x1 map=interleaved lmem=in cmem=f unroll=1:0\"
 <kernel> is a built-in id (sepconv_row, conv2d, sobel, harris, ...) or a path.
+Env: IMAGECL_EXEC=tree|vm|vm-scalar|vm-unopt forces the execution engine
+     (tree oracle / batched VM / optimizer-only VM / PR-3 baseline VM).
 ";
 
 /// Tiny flag parser: positional args + `--key value` pairs. Unknown
@@ -202,6 +206,9 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     let report = imagecl::exec::bench::run_and_write(&opts)?;
     if let Some(s) = report.blur_speedup() {
         println!("blur speedup (VM vs tree-walker): {s:.2}x");
+    }
+    if let Some(s) = report.blur_opt_speedup() {
+        println!("blur speedup (optimized+batched VM vs PR-3 VM): {s:.2}x");
     }
     Ok(())
 }
@@ -457,9 +464,10 @@ fn cmd_tunedb(args: &Args) -> Result<(), String> {
     match sub {
         "stats" => {
             println!(
-                "tunedb {db_path:?}: {} records ({} winners)",
+                "tunedb {db_path:?}: {} records ({} winners, {} wall-clock samples)",
                 db.len(),
-                db.best_len()
+                db.best_len(),
+                db.wall_len()
             );
             // Per (kernel, device) winner counts.
             let mut per: BTreeMap<(String, &str), (usize, usize)> = BTreeMap::new();

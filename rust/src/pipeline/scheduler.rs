@@ -242,6 +242,7 @@ mod tests {
                 grid: (512, 512),
                 seconds: 1e-9,
                 best: true,
+                wall: false,
                 config: TuningConfig::default(),
                 features: Vec::new(),
             });

@@ -73,6 +73,14 @@ pub struct PlanEntry {
     /// pipeline scheduler and the simulated execution mode.
     pub est_seconds: f64,
     pub source: TuneSource,
+    /// The config's feature vector (the kernel's `FeatureMap` layout),
+    /// kept so real-execution wall-clock feedback can be recorded into
+    /// the knowledge base without re-analyzing the kernel.
+    pub features: Vec<f64>,
+    /// Set once the first real-execution wall time for this entry has
+    /// been recorded (one ground-truth sample per entry is enough; the
+    /// request path must not grow the store per request).
+    pub wall_recorded: std::sync::atomic::AtomicBool,
 }
 
 /// A tuned config as stored/loaded: config + its estimated time.

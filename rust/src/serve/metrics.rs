@@ -48,6 +48,12 @@ pub struct Counters {
     /// measured-eval budget in *time*, not count — cheaper per-eval
     /// execution via the bytecode VM shows up here first).
     pub search_wall_us: AtomicU64,
+    /// Per-kernel model refreshes scheduled onto the background trainer
+    /// (the request path itself never trains).
+    pub model_trains: AtomicU64,
+    /// Real-execution wall-clock samples fed back into the knowledge
+    /// base (one per plan-cache entry).
+    pub wall_records: AtomicU64,
 }
 
 impl Counters {
@@ -80,6 +86,8 @@ impl Counters {
             search_evals: self.search_evals.load(Ordering::Relaxed),
             pjrt_execs: self.pjrt_execs.load(Ordering::Relaxed),
             search_wall_us: self.search_wall_us.load(Ordering::Relaxed),
+            model_trains: self.model_trains.load(Ordering::Relaxed),
+            wall_records: self.wall_records.load(Ordering::Relaxed),
         }
     }
 }
@@ -101,6 +109,8 @@ pub struct StatsSnapshot {
     pub search_evals: u64,
     pub pjrt_execs: u64,
     pub search_wall_us: u64,
+    pub model_trains: u64,
+    pub wall_records: u64,
 }
 
 /// Nearest-rank percentile over an ascending-sorted slice (`q` in 0..=100).
@@ -183,6 +193,13 @@ impl ServeReport {
             s.search_evals,
             Ms(s.search_wall_us as f64 / 1e3)
         );
+        if s.model_trains > 0 || s.wall_records > 0 {
+            let _ = writeln!(
+                out,
+                "  feedback    {} background model refreshes, {} wall-clock samples recorded",
+                s.model_trains, s.wall_records
+            );
+        }
         if s.pjrt_execs > 0 {
             let _ = writeln!(out, "  pjrt        {} artifact executions", s.pjrt_execs);
         }

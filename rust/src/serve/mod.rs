@@ -43,8 +43,10 @@ pub use metrics::{Counters, ServeReport, StatsSnapshot};
 pub use queue::{BoundedQueue, PushError};
 pub use worker::{DevicePool, ServeReply, ServeRequest};
 
+use std::collections::HashSet;
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::analysis::KernelInfo;
 use crate::bench_defs;
@@ -53,10 +55,88 @@ use crate::exec::PreparedKernel;
 use crate::imagecl::frontend;
 use crate::pipeline::{graph_parts, schedule_by, Pipeline, Schedule};
 use crate::transform::{lower, TuningConfig};
-use crate::tunedb::{Answer, TuneDb};
+use crate::tunedb::{Answer, PerfModel, TuneDb};
 use crate::tuner::{self, FeatureMap, MlSearchOpts, Strategy, TuneResult, TuningSpace};
 
 use cache::PlanCache;
+
+/// A message to the background model trainer.
+enum TrainMsg {
+    /// Retrain this kernel's performance model.
+    Kernel(String),
+    /// Ack once every previously queued message is processed (tests and
+    /// orderly shutdown).
+    Flush(mpsc::Sender<()>),
+}
+
+/// The background model trainer: the serve request path never fits an
+/// MLP — it uses whatever model is cached (stale is fine; it converges
+/// one refresh behind the data) and pushes the kernel name here. A
+/// dedicated thread drains the queue and calls
+/// [`TuneDb::refresh_model`]. The thread holds only the `Arc<TuneDb>`
+/// (no service back-reference → no leak cycle) and exits when the
+/// service drops its sender.
+struct ModelTrainer {
+    /// Mutex-wrapped so the service stays `Sync` on every toolchain
+    /// (plain `mpsc::Sender` is not `Sync` everywhere); sends are rare
+    /// (one per stale kernel) so the lock is uncontended.
+    tx: Mutex<mpsc::Sender<TrainMsg>>,
+    /// Kernels queued but not yet trained (dedupe: a hot kernel must not
+    /// flood the queue with identical refresh requests).
+    pending: Arc<Mutex<HashSet<String>>>,
+}
+
+impl ModelTrainer {
+    fn start(db: Arc<TuneDb>) -> Option<ModelTrainer> {
+        let (tx, rx) = mpsc::channel::<TrainMsg>();
+        let pending: Arc<Mutex<HashSet<String>>> = Arc::default();
+        let worker_pending = pending.clone();
+        std::thread::Builder::new()
+            .name("imagecl-model-train".to_string())
+            .spawn(move || {
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        TrainMsg::Kernel(kernel) => {
+                            let _ = db.refresh_model(&kernel);
+                            worker_pending.lock().unwrap().remove(&kernel);
+                        }
+                        TrainMsg::Flush(ack) => {
+                            let _ = ack.send(());
+                        }
+                    }
+                }
+            })
+            .ok()?;
+        Some(ModelTrainer { tx: Mutex::new(tx), pending })
+    }
+
+    /// Queue a refresh unless one is already pending. `true` if queued.
+    fn schedule(&self, kernel: &str) -> bool {
+        let mut p = self.pending.lock().unwrap();
+        if !p.insert(kernel.to_string()) {
+            return false;
+        }
+        drop(p);
+        let sent = self
+            .tx
+            .lock()
+            .unwrap()
+            .send(TrainMsg::Kernel(kernel.to_string()))
+            .is_ok();
+        if !sent {
+            // Trainer thread is gone; forget the reservation.
+            self.pending.lock().unwrap().remove(kernel);
+        }
+        sent
+    }
+
+    /// Send a flush marker; returns the ack receiver.
+    fn flush(&self) -> Option<mpsc::Receiver<()>> {
+        let (ack_tx, ack_rx) = mpsc::channel();
+        self.tx.lock().unwrap().send(TrainMsg::Flush(ack_tx)).ok()?;
+        Some(ack_rx)
+    }
+}
 
 /// Serving error.
 #[derive(Debug, thiserror::Error)]
@@ -155,9 +235,13 @@ pub fn default_tuned_path() -> PathBuf {
 /// *that key* while the tuner runs.
 pub struct KernelService {
     config: ServiceConfig,
-    db: TuneDb,
+    db: Arc<TuneDb>,
     plans: PlanCache,
     pub counters: Counters,
+    /// Background model trainer (absent when the model tier is disabled
+    /// via `predict_budget == 0`). The request path reads cached models
+    /// and schedules refreshes here; it never trains inline.
+    trainer: Option<ModelTrainer>,
     /// PJRT artifact router for `ExecMode::Real` (None when the manifest
     /// is absent); requests without a matching artifact fall back to the
     /// NDRange interpreter.
@@ -167,10 +251,10 @@ pub struct KernelService {
 
 impl KernelService {
     pub fn new(config: ServiceConfig) -> Arc<KernelService> {
-        let db = match &config.db_path {
+        let db = Arc::new(match &config.db_path {
             Some(p) => TuneDb::open(p),
             None => TuneDb::ephemeral(),
-        };
+        });
         // Migration shim: fold any legacy PR-1 warm-start TSV into the
         // knowledge base so existing deployments keep their tuned configs.
         if let Some(legacy) = &config.legacy_tsv {
@@ -187,14 +271,69 @@ impl KernelService {
             Some(cap) => PlanCache::with_cap(cap),
             None => PlanCache::new(),
         };
+        let trainer = if config.predict_budget > 0 {
+            ModelTrainer::start(db.clone())
+        } else {
+            None
+        };
         Arc::new(KernelService {
             config,
             db,
             plans,
             counters: Counters::default(),
+            trainer,
             #[cfg(feature = "xla")]
             artifacts: pjrt::ArtifactRouter::open_default(),
         })
+    }
+
+    /// The kernel's performance model without ever training on the
+    /// caller's thread: returns the cached (possibly stale) model
+    /// immediately and, when records have arrived since the last fit,
+    /// schedules a background retrain. The first cold request after new
+    /// knowledge may therefore miss the model tier — the *next* one
+    /// benefits. Serve never blocks a request on training.
+    fn model_nonblocking(&self, kernel: &str) -> Option<Arc<PerfModel>> {
+        let Some(trainer) = &self.trainer else {
+            // Model tier disabled; callers only reach this with a
+            // positive predict budget, but stay safe.
+            return None;
+        };
+        let (model, fresh) = self.db.cached_model(kernel);
+        if !fresh && trainer.schedule(kernel) {
+            Counters::bump(&self.counters.model_trains);
+        }
+        model
+    }
+
+    /// Block until the background trainer has drained everything queued
+    /// so far (tests and orderly shutdown; a no-op without a trainer).
+    pub fn flush_model_training(&self) {
+        if let Some(trainer) = &self.trainer {
+            if let Some(ack) = trainer.flush() {
+                let _ = ack.recv();
+            }
+        }
+    }
+
+    /// Feed one measured real-execution wall time back into the
+    /// knowledge base — once per cache entry, so the store grows with
+    /// the *plan* population, not the request count. The recorded sample
+    /// carries the config's feature vector and the `wall` flag, giving
+    /// the per-kernel model ground truth from the hardware it actually
+    /// serves on.
+    pub fn observe_wall(&self, entry: &PlanEntry, dev: &'static DeviceSpec, secs: f64) {
+        if !entry.wall_recorded.swap(true, Ordering::Relaxed) {
+            self.db.record_wall(
+                &entry.key.kernel,
+                dev,
+                entry.key.grid,
+                &entry.config,
+                entry.features.clone(),
+                secs,
+            );
+            Counters::bump(&self.counters.wall_records);
+        }
     }
 
     pub fn exec_mode(&self) -> ExecMode {
@@ -269,15 +408,15 @@ impl KernelService {
         key: &PlanKey,
         dev: &'static DeviceSpec,
         info: &KernelInfo,
+        fm: &FeatureMap,
     ) -> (TuningConfig, f64, TuneSource) {
-        let fm = FeatureMap::new(info);
         let record = |res: &TuneResult| {
             Counters::add(&self.counters.search_evals, res.evals as u64);
             Counters::add(
                 &self.counters.search_wall_us,
                 (res.wall_secs * 1e6) as u64,
             );
-            self.db.record_tune(&key.kernel, dev, key.grid, res, &fm);
+            self.db.record_tune(&key.kernel, dev, key.grid, res, fm);
         };
         let answer = match self.db.lookup(&key.kernel, dev.name, key.grid) {
             // A zero budget disables the tier (tests and
@@ -295,7 +434,7 @@ impl KernelService {
                 let space = TuningSpace::enumerate(info, dev);
                 let res = tuner::seeded(
                     &space,
-                    &fm,
+                    fm,
                     &rec.config,
                     self.config.transfer_budget,
                     tuner::simulator_eval(info, dev, key.grid),
@@ -310,15 +449,18 @@ impl KernelService {
                 // Tier 3: a model trained on this kernel's records from
                 // *other* devices/grids ranks the space; only the top
                 // predictions are measured.
+                // Tier 3 is cached-model-only on the request path: the
+                // first miss after fresh knowledge schedules a
+                // background fit and falls through to the cold search.
                 let model = if self.config.predict_budget == 0 {
                     None
                 } else {
-                    self.db.model_for(&key.kernel)
+                    self.model_nonblocking(&key.kernel)
                 };
                 let shortlisted = model.and_then(|model| {
                     let cands = model.rank(
                         &space,
-                        &fm,
+                        fm,
                         dev,
                         key.grid,
                         self.config.predict_budget,
@@ -364,8 +506,9 @@ impl KernelService {
             msg: e.to_string(),
         })?;
         let info = KernelInfo::analyze(prog);
+        let fm = FeatureMap::new(&info);
 
-        let (config, est_seconds, source) = self.resolve_config(key, dev, &info);
+        let (config, est_seconds, source) = self.resolve_config(key, dev, &info, &fm);
 
         let plan = lower(&info, &config).map_err(|e| ServeError::Compile {
             kernel: key.kernel.clone(),
@@ -379,6 +522,7 @@ impl KernelService {
             PreparedKernel::prepare(&plan, &args, key.grid).map_err(|e| {
                 ServeError::Compile { kernel: key.kernel.clone(), msg: e.to_string() }
             })?;
+        let features = fm.features(&config);
         Ok(PlanEntry {
             key: key.clone(),
             config,
@@ -386,6 +530,8 @@ impl KernelService {
             prepared,
             est_seconds,
             source,
+            features,
+            wall_recorded: std::sync::atomic::AtomicBool::new(false),
         })
     }
 
@@ -534,10 +680,14 @@ mod tests {
             predict_budget: 24,
         });
         // Seed knowledge on two devices so the model has cross-device
-        // training data.
+        // training data, then let the background trainer fit it (the
+        // request path itself never trains — it only schedules).
         svc.plan("sepconv_row", &K40, (32, 32)).unwrap();
         svc.plan("sepconv_row", &crate::devices::AMD_7970, (32, 32)).unwrap();
+        let _ = svc.model_nonblocking("sepconv_row");
+        svc.flush_model_training();
         let before = svc.stats();
+        assert!(before.model_trains >= 1);
         // Cold (kernel, device) pair: no same-device records at all.
         let entry = svc.plan("sepconv_row", &INTEL_I7, (32, 32)).unwrap();
         let s = svc.stats();
@@ -552,6 +702,50 @@ mod tests {
             assert_eq!(s.tunes, before.tunes + 1);
         }
         assert!(entry.est_seconds.is_finite() && entry.est_seconds > 0.0);
+    }
+
+    #[test]
+    fn request_path_never_trains_inline() {
+        let svc = KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 60, seed: 11 },
+            db_path: None,
+            legacy_tsv: None,
+            exec: ExecMode::Simulate,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 24,
+        });
+        // Seed one device — records now exist, so the model cache is
+        // stale.
+        svc.plan("sobel", &K40, (32, 32)).unwrap();
+        let (model, fresh) = svc.db().cached_model("sobel");
+        assert!(model.is_none() && !fresh);
+        // A cold request for another device consults the model tier:
+        // with nothing cached it must fall through to a cold search
+        // (never fit inline) and leave a refresh scheduled behind.
+        let entry = svc.plan("sobel", &INTEL_I7, (32, 32)).unwrap();
+        assert_eq!(entry.source, TuneSource::Fresh);
+        assert!(svc.stats().model_trains >= 1);
+        // After the background trainer drains, the cache is resolved
+        // (fitted or a cached failed fit) up to the records seen then.
+        svc.flush_model_training();
+    }
+
+    #[test]
+    fn real_execution_records_wall_clock_once_per_entry() {
+        let svc = test_service(ExecMode::Real);
+        let entry = svc.plan("sobel", &INTEL_I7, (16, 16)).unwrap();
+        assert_eq!(svc.db().wall_len(), 0);
+        svc.observe_wall(&entry, &INTEL_I7, 1.25e-3);
+        svc.observe_wall(&entry, &INTEL_I7, 9.9e-3); // deduped
+        assert_eq!(svc.db().wall_len(), 1);
+        assert_eq!(svc.stats().wall_records, 1);
+        let wall: Vec<_> =
+            svc.db().snapshot().into_iter().filter(|r| r.wall).collect();
+        assert_eq!(wall[0].seconds, 1.25e-3);
+        assert_eq!(wall[0].kernel, "sobel");
+        assert_eq!(wall[0].features, entry.features);
+        assert!(!wall[0].features.is_empty());
     }
 
     #[test]

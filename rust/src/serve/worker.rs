@@ -138,11 +138,18 @@ fn worker_loop(
                                     &kernel, grid.0, grid.1, req.seed,
                                 );
                                 let t0 = Instant::now();
-                                entry
+                                let r = entry
                                     .prepared
                                     .run(&mut args)
                                     .map(|()| t0.elapsed().as_secs_f64())
-                                    .map_err(|e| e.to_string())
+                                    .map_err(|e| e.to_string());
+                                if let Ok(secs) = r {
+                                    // Real-execution ground truth back
+                                    // into the knowledge base (once per
+                                    // cache entry).
+                                    service.observe_wall(&entry, device, secs);
+                                }
+                                r
                             }
                         },
                     };

@@ -88,13 +88,27 @@ pub struct KernelPlan {
     /// for the structured code we generate.
     pub phases: Vec<Vec<Stmt>>,
     /// Work-groups proven independent by the write-set analysis
-    /// ([`crate::analysis::rw::owned_writes`]): every buffer is either
-    /// never written, or write-only with all writes at the work-item's
-    /// own grid point. Groups then write disjoint output regions and read
+    /// ([`crate::analysis::rw::disjoint_writes`]): every buffer is either
+    /// never written, or write-only with all writes at elements the
+    /// work-item provably owns (its own grid point, or an affine strided
+    /// pattern like `a[idx * 2 + 1]` whose offsets never collide across
+    /// threads). Groups then write disjoint output regions and read
     /// nothing any group writes, so the execution backend may run them
     /// concurrently with bit-identical results. `false` = execute groups
     /// serially.
     pub parallel_groups: bool,
+    /// The same disjointness proof, one level finer: individual
+    /// *work-items* are independent, so the bytecode VM may execute a
+    /// whole row of items per dispatch through its batched (SIMD-lane)
+    /// interpreter. Implied by `parallel_groups` today (the proof is
+    /// per-item), kept separate so future group-cooperative plans can
+    /// stay group-parallel without claiming item independence.
+    pub batchable: bool,
+    /// Single-phase plans with no `__local` scratch have no barriers and
+    /// no per-group shared state, so the parallel NDRange driver may
+    /// partition work at work-item-row granularity (finer than whole
+    /// groups) when there are too few groups to feed the thread pool.
+    pub row_parallel: bool,
 }
 
 impl KernelPlan {
@@ -144,6 +158,8 @@ mod tests {
             locals: vec![],
             phases: vec![vec![]],
             parallel_groups: false,
+            batchable: false,
+            row_parallel: false,
         }
     }
 

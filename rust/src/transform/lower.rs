@@ -204,21 +204,31 @@ pub fn lower(info: &KernelInfo, config: &TuningConfig) -> Result<KernelPlan, Tra
         phases.push(compute);
     }
 
-    // Work-group independence proof (drives the VM's parallel NDRange
-    // dispatch): every buffer must be either never written, or write-only
-    // with all writes at the work-item's own grid point. 1-D arrays are
-    // only owned under a statically 1-D grid — with a 2-D grid, threads
-    // that differ only in `idy` share every `a[idx]` element.
-    let owned = crate::analysis::rw::owned_writes(kernel);
+    // Work-item independence proof (drives the VM's parallel NDRange
+    // dispatch *and* its batched row interpretation): every buffer must
+    // be either never written, or write-only with all writes at elements
+    // the work-item provably owns — its own grid point, or an affine
+    // strided pattern (`a[idx * 2 + 1]`-style) whose offsets never
+    // collide across threads (`analysis::rw::disjoint_writes`). 1-D
+    // arrays are only owned under a statically 1-D grid — with a 2-D
+    // grid, threads that differ only in `idy` share every `a[f(idx)]`
+    // element.
+    let disjoint = crate::analysis::rw::disjoint_writes(kernel, &info.env);
     let grid_is_1d = matches!(&info.prog.grid, GridSpec::Explicit(dims) if dims.get(1) == Some(&1));
     let parallel_groups = buffers.iter().all(|b| match b.access {
         crate::analysis::Access::Unused | crate::analysis::Access::ReadOnly => true,
         crate::analysis::Access::WriteOnly => {
-            owned.get(&b.name).copied().unwrap_or(false)
+            disjoint.get(&b.name).copied().unwrap_or(false)
                 && (b.image_dims.is_some() || grid_is_1d)
         }
         crate::analysis::Access::ReadWrite => false,
     });
+    // The proof above is per work-item, so item-level batching is safe
+    // exactly when group-level parallelism is; row-granular partitioning
+    // additionally needs barrier-free single-phase plans (no `__local`
+    // group state to share, no phase fence to respect).
+    let batchable = parallel_groups;
+    let row_parallel = parallel_groups && phases.len() == 1 && locals.is_empty();
 
     Ok(KernelPlan {
         name: kernel.name.clone(),
@@ -229,6 +239,8 @@ pub fn lower(info: &KernelInfo, config: &TuningConfig) -> Result<KernelPlan, Tra
         locals,
         phases,
         parallel_groups,
+        batchable,
+        row_parallel,
     })
 }
 
@@ -761,19 +773,32 @@ mod tests {
     #[test]
     fn parallel_groups_proof() {
         // blur: read-only input + write-only output at [idx][idy] → groups
-        // provably independent.
-        assert!(plan(BLUR, TuningConfig::default()).unwrap().parallel_groups);
+        // provably independent (and items batchable / row-partitionable).
+        let p = plan(BLUR, TuningConfig::default()).unwrap();
+        assert!(p.parallel_groups && p.batchable && p.row_parallel);
         // In-place update (read-write buffer) → serial.
         let p = plan(
             "void k(Image<float> a) { a[idx][idy] = a[idx][idy] * 2.0f; }",
             TuningConfig::default(),
         )
         .unwrap();
-        assert!(!p.parallel_groups);
-        // Offset write → not owned → serial.
+        assert!(!p.parallel_groups && !p.batchable && !p.row_parallel);
+        // Constant-offset write: still one element per thread → the
+        // affine disjointness proof admits it.
         let p = plan(
             "#pragma imcl grid(in)\n\
              void k(Image<float> in, Image<float> out) {\n\
+               out[idx + 1][idy] = in[idx][idy];\n\
+             }",
+            TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(p.parallel_groups);
+        // Colliding offsets (thread i+1 hits thread i's pixel) → serial.
+        let p = plan(
+            "#pragma imcl grid(in)\n\
+             void k(Image<float> in, Image<float> out) {\n\
+               out[idx][idy] = in[idx][idy];\n\
                out[idx + 1][idy] = in[idx][idy];\n\
              }",
             TuningConfig::default(),
@@ -787,6 +812,30 @@ mod tests {
         )
         .unwrap();
         assert!(p.parallel_groups);
+        // Strided upsample-style write (each thread owns a 2-element
+        // block) → independent under the scaled-affine proof.
+        let p = plan(
+            "#pragma imcl grid(64, 1)\n\
+             void k(float* a, float* b) {\n\
+               b[idx * 2] = a[idx];\n\
+               b[idx * 2 + 1] = a[idx];\n\
+             }",
+            TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(p.parallel_groups);
+    }
+
+    #[test]
+    fn local_mem_plans_stay_group_parallel_not_row_parallel() {
+        let mut cfg = TuningConfig::default();
+        cfg.local_mem.insert("in".into(), true);
+        let p = plan(BLUR, cfg).unwrap();
+        // Two barrier phases + group-shared local scratch: groups can fan
+        // out and rows can batch, but a group cannot be split across
+        // threads.
+        assert!(p.parallel_groups && p.batchable);
+        assert!(!p.row_parallel);
     }
 
     #[test]

@@ -274,6 +274,7 @@ impl TuneDb {
             grid,
             seconds,
             best,
+            wall: false,
             config: config.clone(),
             features: fm.features(config),
         };
@@ -295,6 +296,41 @@ impl TuneDb {
             }
         }
         self.record_batch(recs);
+    }
+
+    /// Record one *real-execution* wall-clock measurement of a served
+    /// config (the worker-side timing that `TuneResult::wall_secs`
+    /// accounts for searches): stored as non-winner history flagged
+    /// `wall`, so the per-kernel model accumulates ground truth from the
+    /// hardware it actually serves on alongside simulator estimates.
+    pub fn record_wall(
+        &self,
+        kernel: &str,
+        dev: &'static DeviceSpec,
+        grid: (usize, usize),
+        config: &crate::transform::TuningConfig,
+        features: Vec<f64>,
+        secs: f64,
+    ) {
+        if !secs.is_finite() || secs <= 0.0 {
+            return;
+        }
+        self.record(TuneRecord {
+            kernel: kernel.to_string(),
+            device: dev.name,
+            dev_fp: device_fingerprint(dev),
+            grid,
+            seconds: secs,
+            best: false,
+            wall: true,
+            config: config.clone(),
+            features,
+        });
+    }
+
+    /// Wall-clock (real-execution) records currently held.
+    pub fn wall_len(&self) -> usize {
+        self.inner.lock().unwrap().records.iter().filter(|r| r.wall).count()
     }
 
     /// Tier-1 lookup: the latest winner record at exactly this key.
@@ -360,6 +396,31 @@ impl TuneDb {
             return Answer::Transfer { rec, distance };
         }
         Answer::Miss
+    }
+
+    /// The kernel's cached model **without training**: `(model, fresh)`.
+    /// `fresh == false` means records arrived since the model was fitted
+    /// (or none was ever fitted while training data exists). Callers
+    /// that must not block — the serve request path — use whatever is
+    /// cached and hand the retrain to a background thread
+    /// ([`Self::refresh_model`]; see `serve`'s model trainer).
+    pub fn cached_model(&self, kernel: &str) -> (Option<Arc<PerfModel>>, bool) {
+        let g = self.inner.lock().unwrap();
+        let n = g.by_kernel.get(kernel).map_or(0, Vec::len);
+        match g.models.get(kernel) {
+            Some((stamp, model)) => (model.clone(), *stamp == n),
+            // No cache entry: fresh only in the trivial no-records case
+            // (nothing to train on → nothing to schedule).
+            None => (None, n == 0),
+        }
+    }
+
+    /// Train (or retrain) the kernel's model on the current records,
+    /// blocking the caller — the CLI's `tunedb train` and the serving
+    /// layer's *background* trainer thread use this; the request path
+    /// never should.
+    pub fn refresh_model(&self, kernel: &str) -> Option<Arc<PerfModel>> {
+        self.model_for(kernel)
     }
 
     /// Tier-3 support: the kernel's performance model, trained lazily on
@@ -457,9 +518,47 @@ mod tests {
             grid: (n, n),
             seconds: secs,
             best,
+            wall: false,
             config,
             features: vec![6.0, 2.0],
         }
+    }
+
+    #[test]
+    fn wall_records_stored_and_counted() {
+        let db = TuneDb::ephemeral();
+        db.record(rec("sobel", &K40, 64, 1e-4, true));
+        assert_eq!(db.wall_len(), 0);
+        db.record_wall("sobel", &K40, (64, 64), &TuningConfig::default(), vec![1.0], 2.5e-4);
+        // Non-finite / non-positive measurements are dropped.
+        db.record_wall("sobel", &K40, (64, 64), &TuningConfig::default(), vec![], f64::NAN);
+        db.record_wall("sobel", &K40, (64, 64), &TuningConfig::default(), vec![], 0.0);
+        assert_eq!(db.wall_len(), 1);
+        assert_eq!(db.len(), 2);
+        let wall: Vec<TuneRecord> =
+            db.snapshot().into_iter().filter(|r| r.wall).collect();
+        assert_eq!(wall.len(), 1);
+        assert!(!wall[0].best);
+        assert_eq!(wall[0].seconds, 2.5e-4);
+        // Wall history never answers exact-winner lookups.
+        assert_eq!(db.exact("sobel", K40.name, (64, 64)).unwrap().seconds, 1e-4);
+    }
+
+    #[test]
+    fn cached_model_reports_staleness_without_training() {
+        let db = TuneDb::ephemeral();
+        // Empty: nothing cached, and nothing to train → fresh.
+        assert!(matches!(db.cached_model("sobel"), (None, true)));
+        db.record(rec("sobel", &K40, 64, 1e-4, true));
+        // Records exist but no fit ran yet → stale, still no model.
+        assert!(matches!(db.cached_model("sobel"), (None, false)));
+        // A (failed — too few records) training is cached as fresh.
+        assert!(db.refresh_model("sobel").is_none());
+        let (m, fresh) = db.cached_model("sobel");
+        assert!(m.is_none() && fresh);
+        // New records invalidate the cache again.
+        db.record(rec("sobel", &K40, 128, 2e-4, true));
+        assert!(!db.cached_model("sobel").1);
     }
 
     #[test]

@@ -168,6 +168,7 @@ mod tests {
                     grid: (n, n),
                     seconds: predict(dev, &km, n, n).seconds,
                     best: false,
+                    wall: false,
                     config: cfg.clone(),
                     features: fm.features(cfg),
                 }

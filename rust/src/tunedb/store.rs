@@ -18,7 +18,10 @@
 //! config, stored inline so model training never needs to re-analyze the
 //! kernel. `dev_fp` fingerprints the device spec the record was measured
 //! against — records whose fingerprint no longer matches the current
-//! spec are dropped on load (the knowledge is stale).
+//! spec are dropped on load (the knowledge is stale). The trailing `src`
+//! column distinguishes simulator estimates (`sim`) from real-execution
+//! wall-clock measurements (`wall`, fed back by the serving workers);
+//! nine-column files from before the column exist parse as `sim`.
 
 use std::path::Path;
 
@@ -37,6 +40,11 @@ pub struct TuneRecord {
     pub seconds: f64,
     /// Winner of its tuning run (false = sampled search history).
     pub best: bool,
+    /// `seconds` is a *real-execution wall-clock* measurement (a serving
+    /// worker timed this config on the hardware it serves on) rather
+    /// than a simulator estimate — ground truth the model can learn the
+    /// actual machine from.
+    pub wall: bool,
     pub config: TuningConfig,
     /// Config feature vector in the kernel's `FeatureMap` layout.
     pub features: Vec<f64>,
@@ -55,13 +63,13 @@ pub fn device_fingerprint(dev: &DeviceSpec) -> u64 {
 }
 
 pub const HEADER: &str =
-    "# kernel\tdevice\tdev_fp\tgrid_w\tgrid_h\tseconds\tbest\tconfig\tfeatures\n";
+    "# kernel\tdevice\tdev_fp\tgrid_w\tgrid_h\tseconds\tbest\tconfig\tfeatures\tsrc\n";
 
 /// Render one record as its TSV line (no trailing newline).
 pub fn render_line(r: &TuneRecord) -> String {
     let feats: Vec<String> = r.features.iter().map(|v| format!("{v:e}")).collect();
     format!(
-        "{}\t{}\t{:016x}\t{}\t{}\t{:e}\t{}\t{}\t{}",
+        "{}\t{}\t{:016x}\t{}\t{}\t{:e}\t{}\t{}\t{}\t{}",
         r.kernel,
         r.device,
         r.dev_fp,
@@ -70,15 +78,17 @@ pub fn render_line(r: &TuneRecord) -> String {
         r.seconds,
         if r.best { 1 } else { 0 },
         r.config,
-        feats.join(",")
+        feats.join(","),
+        if r.wall { "wall" } else { "sim" }
     )
 }
 
 /// Parse one TSV line. `None` = malformed or no longer applicable
-/// (unknown device, stale fingerprint).
+/// (unknown device, stale fingerprint). Nine columns (pre-`src` files)
+/// parse as simulator records.
 pub(crate) fn parse_line(line: &str) -> Option<TuneRecord> {
     let cols: Vec<&str> = line.split('\t').collect();
-    if cols.len() != 9 {
+    if cols.len() != 9 && cols.len() != 10 {
         return None;
     }
     let dev = devices::by_name(cols[1])?;
@@ -95,6 +105,11 @@ pub(crate) fn parse_line(line: &str) -> Option<TuneRecord> {
             .collect::<Result<Vec<f64>, _>>()
             .ok()?
     };
+    let wall = match cols.get(9) {
+        None | Some(&"sim") => false,
+        Some(&"wall") => true,
+        _ => return None,
+    };
     Some(TuneRecord {
         kernel: cols[0].to_string(),
         device: dev.name,
@@ -106,6 +121,7 @@ pub(crate) fn parse_line(line: &str) -> Option<TuneRecord> {
             "0" => false,
             _ => return None,
         },
+        wall,
         config: TuningConfig::parse(cols[7]).ok()?,
         features,
     })
@@ -130,6 +146,22 @@ pub(crate) fn parse_file(text: &str) -> Vec<TuneRecord> {
     out
 }
 
+/// The one serialization path for store writes: records rendered to
+/// their TSV block, optionally headed. Both [`append`] (header only on a
+/// fresh file) and [`rewrite`] (always headed) go through here, so the
+/// on-disk format cannot drift between the two write sites.
+fn render_block(records: &[TuneRecord], with_header: bool) -> String {
+    let mut buf = String::new();
+    if with_header {
+        buf.push_str(HEADER);
+    }
+    for r in records {
+        buf.push_str(&render_line(r));
+        buf.push('\n');
+    }
+    buf
+}
+
 /// Append `records` to the store file (creating it, with header, on first
 /// write). Best effort: serving continues even if the disk write fails.
 pub(crate) fn append(path: &Path, records: &[TuneRecord]) {
@@ -144,14 +176,7 @@ pub(crate) fn append(path: &Path, records: &[TuneRecord]) {
     let file = std::fs::OpenOptions::new().create(true).append(true).open(path);
     match file {
         Ok(mut f) => {
-            let mut buf = String::new();
-            if fresh {
-                buf.push_str(HEADER);
-            }
-            for r in records {
-                buf.push_str(&render_line(r));
-                buf.push('\n');
-            }
+            let buf = render_block(records, fresh);
             if let Err(e) = f.write_all(buf.as_bytes()) {
                 eprintln!("warning: cannot append to tunedb {path:?}: {e}");
             }
@@ -162,13 +187,10 @@ pub(crate) fn append(path: &Path, records: &[TuneRecord]) {
 
 /// Rewrite the whole store file (compaction). Written to a sibling temp
 /// file and renamed into place so a crash mid-rewrite never truncates
-/// the store. Best effort, like [`append`].
+/// the store. Best effort, like [`append`] — and sharing its
+/// serialization path ([`render_block`]).
 pub(crate) fn rewrite(path: &Path, records: &[TuneRecord]) {
-    let mut buf = String::from(HEADER);
-    for r in records {
-        buf.push_str(&render_line(r));
-        buf.push('\n');
-    }
+    let buf = render_block(records, true);
     if let Some(dir) = path.parent() {
         let _ = std::fs::create_dir_all(dir);
     }
@@ -206,6 +228,7 @@ pub(crate) fn parse_legacy_tsv(text: &str) -> Vec<TuneRecord> {
             grid: (gw, gh),
             seconds,
             best: true,
+            wall: false,
             config,
             features: Vec::new(),
         });
@@ -230,6 +253,7 @@ mod tests {
             grid: (2048, 2048),
             seconds: 1.25e-4,
             best,
+            wall: false,
             config,
             features: vec![6.0, 2.0, 2.0, 0.0, 0.5],
         }
@@ -242,6 +266,21 @@ mod tests {
             let line = render_line(&r);
             assert_eq!(parse_line(&line), Some(r), "{line}");
         }
+    }
+
+    #[test]
+    fn wall_flag_roundtrips_and_legacy_lines_parse_as_sim() {
+        let r = TuneRecord { wall: true, best: false, ..record(false) };
+        let line = render_line(&r);
+        assert!(line.ends_with("\twall"), "{line}");
+        assert_eq!(parse_line(&line), Some(r));
+        // A pre-`src` nine-column line (strip the trailing column) is a
+        // simulator record.
+        let nine = render_line(&record(true));
+        let nine = nine.rsplit_once('\t').unwrap().0;
+        let parsed = parse_line(nine).unwrap();
+        assert!(!parsed.wall);
+        assert_eq!(parsed, record(true));
     }
 
     #[test]

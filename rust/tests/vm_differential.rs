@@ -2,7 +2,11 @@
 //! tree-walking interpreter (the retained oracle) for every gallery and
 //! paper kernel across a grid of tuning configurations — coarsening,
 //! interleaved mapping, local/image/constant memory, unrolling — plus
-//! the clamped-boundary and uchar-wrap edge cases.
+//! the clamped-boundary and uchar-wrap edge cases. The engine axis spans
+//! the full VM ladder: `VmUnopt` (no optimizer, scalar), `VmScalar`
+//! (optimizer on, batching off) and `Vm` (optimizer + batched row
+//! interpretation), so the optimizer pipeline and the batched
+//! interpreter are each individually pinned to the oracle.
 //!
 //! "Bit-identical" is literal: outputs are compared as `f64::to_bits`,
 //! not within a tolerance. The VM is only allowed to exist because this
@@ -31,9 +35,13 @@ fn bits(args: &BTreeMap<String, Arg>) -> Vec<(String, Vec<u64>)> {
         .collect()
 }
 
-/// Run `src` under `cfg` on both engines and assert exact agreement.
-/// `Engine::Vm` is hard: a plan the VM cannot lower fails the test — the
-/// whole kernel set must stay on the fast path.
+/// Every VM variant the differential grid pins to the oracle.
+const VM_ENGINES: [Engine; 3] = [Engine::VmUnopt, Engine::VmScalar, Engine::Vm];
+
+/// Run `src` under `cfg` on the oracle and every VM variant
+/// (unoptimized, optimizer-only, optimizer+batched) and assert exact
+/// agreement. The VM engines are hard: a plan the VM cannot lower fails
+/// the test — the whole kernel set must stay on the fast path.
 fn assert_engines_agree(
     what: &str,
     src: &str,
@@ -46,23 +54,34 @@ fn assert_engines_agree(
     let mut tree_args = mk_args();
     execute_with(&plan, &mut tree_args, grid, Engine::TreeWalk)
         .unwrap_or_else(|e| panic!("{what} under `{cfg}` (tree): {e}"));
-    let mut vm_args = mk_args();
-    execute_with(&plan, &mut vm_args, grid, Engine::Vm)
-        .unwrap_or_else(|e| panic!("{what} under `{cfg}` (vm): {e}"));
-    let (t, v) = (bits(&tree_args), bits(&vm_args));
-    assert_eq!(t.len(), v.len(), "{what} under `{cfg}`: buffer sets differ");
-    for ((name, tb), (vname, vb)) in t.iter().zip(&v) {
-        assert_eq!(name, vname);
-        assert_eq!(tb.len(), vb.len(), "{what}/{name} under `{cfg}`: lengths differ");
-        for i in 0..tb.len() {
+    let t = bits(&tree_args);
+    for engine in VM_ENGINES {
+        let mut vm_args = mk_args();
+        execute_with(&plan, &mut vm_args, grid, engine)
+            .unwrap_or_else(|e| panic!("{what} under `{cfg}` ({engine:?}): {e}"));
+        let v = bits(&vm_args);
+        assert_eq!(
+            t.len(),
+            v.len(),
+            "{what} under `{cfg}` ({engine:?}): buffer sets differ"
+        );
+        for ((name, tb), (vname, vb)) in t.iter().zip(&v) {
+            assert_eq!(name, vname);
             assert_eq!(
-                tb[i],
-                vb[i],
-                "{what} under `{cfg}`: `{name}` differs at {i}: \
-                 tree {} vs vm {}",
-                f64::from_bits(tb[i]),
-                f64::from_bits(vb[i])
+                tb.len(),
+                vb.len(),
+                "{what}/{name} under `{cfg}` ({engine:?}): lengths differ"
             );
+            for i in 0..tb.len() {
+                assert_eq!(
+                    tb[i],
+                    vb[i],
+                    "{what} under `{cfg}` ({engine:?}): `{name}` differs at {i}: \
+                     tree {} vs vm {}",
+                    f64::from_bits(tb[i]),
+                    f64::from_bits(vb[i])
+                );
+            }
         }
     }
 }
@@ -243,6 +262,50 @@ fn parallel_dispatch_bit_identical_at_scale() {
             &|| gallery_workload("blur", w, h, 9),
             (w, h),
         );
+    }
+}
+
+#[test]
+fn row_partitioned_and_strided_plans_bit_identical() {
+    // Few large groups (heavy coarsening): the driver may partition at
+    // work-item-row granularity instead of whole groups; results must
+    // still match the serial oracle bit-for-bit across every engine.
+    let src = imagecl::bench_defs::gallery::BLUR;
+    for cfg_s in ["wg=16x16 px=8x8 map=blocked", "wg=32x8 px=4x8 map=blocked"] {
+        let cfg = TuningConfig::parse(cfg_s).unwrap();
+        assert_engines_agree(
+            "blur-row-partition",
+            src,
+            &cfg,
+            &|| gallery_workload("blur", 256, 256, 3),
+            (256, 256),
+        );
+    }
+    // Strided writes (each thread owns an interleaved element pair) are
+    // newly parallel + batchable under the affine disjointness proof.
+    let strided = "#pragma imcl grid(256, 1)\n\
+        void k(float* a, float* b) {\n\
+          b[idx * 2] = a[idx] * 2.0f;\n\
+          b[idx * 2 + 1] = a[idx] + 1.0f;\n\
+        }";
+    let info = KernelInfo::analyze(frontend(strided).unwrap());
+    let plan = lower(&info, &TuningConfig::default()).unwrap();
+    assert!(plan.parallel_groups, "strided writes should prove disjoint");
+    let mk = || {
+        let mut args = BTreeMap::new();
+        args.insert(
+            "a".to_string(),
+            Arg::Array(Buffer::from_f64(
+                ScalarType::F32,
+                (0..256).map(|i| (i % 37) as f64).collect(),
+            )),
+        );
+        args.insert("b".to_string(), Arg::Array(Buffer::new(ScalarType::F32, 512)));
+        args
+    };
+    for cfg_s in ["wg=16x16 px=1x1 map=blocked", "wg=64x1 px=2x1 map=blocked"] {
+        let cfg = TuningConfig::parse(cfg_s).unwrap();
+        assert_engines_agree("strided", strided, &cfg, &mk, (256, 1));
     }
 }
 
