@@ -130,5 +130,24 @@ fn main() {
     assert_eq!(report2.stats.warm_starts as usize, KERNELS.len());
 
     let _ = std::fs::remove_file(&tsv);
+
+    // Observability epilogue: loadgen published the metrics registry on
+    // completion, so the report can explain itself — the exec-tier
+    // profile table plus the serve-side latency histogram percentiles.
+    let _ = writeln!(out, "\n=== observability ===");
+    out.push_str(&imagecl::exec::profile::profiler().render());
+    let lat = imagecl::obs::registry().histogram(
+        "imagecl_serve_latency_us",
+        "Request latency (admission to reply), microseconds",
+        &[],
+    );
+    let _ = writeln!(
+        out,
+        "registry latency histogram: {} samples, p50 ~{}us p99 ~{}us",
+        lat.count(),
+        lat.percentile(50.0),
+        lat.percentile(99.0)
+    );
+
     emit_report("serve.txt", &out);
 }

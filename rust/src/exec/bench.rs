@@ -324,6 +324,10 @@ pub fn run_and_write(opts: &BenchOpts) -> Result<BenchReport, String> {
     let path = opts.out.clone().unwrap_or_else(default_report_path);
     write_report(&report, &path)?;
     println!("wrote {}", path.display());
+    match append_history(&report, &path) {
+        Ok(hist) => println!("appended {}", hist.display()),
+        Err(e) => eprintln!("warning: {e}"),
+    }
     if !report.all_identical() {
         return Err("VM and tree-walker outputs diverged (see report)".to_string());
     }
@@ -334,6 +338,35 @@ pub fn run_and_write(opts: &BenchOpts) -> Result<BenchReport, String> {
 fn write_report(report: &BenchReport, path: &Path) -> Result<(), String> {
     std::fs::write(path, report.to_json())
         .map_err(|e| format!("cannot write {}: {e}", path.display()))
+}
+
+/// Append a timestamped entry to `BENCH_exec_history.json` next to the
+/// snapshot report — an append-only record of every bench run (ROADMAP
+/// #3), while the snapshot file stays authoritative for the CI gate. A
+/// missing or malformed history file is replaced with a fresh array.
+fn append_history(report: &BenchReport, snapshot_path: &Path) -> Result<PathBuf, String> {
+    let path = snapshot_path.with_file_name("BENCH_exec_history.json");
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let entry = format!(
+        "{{\"unix_time\": {unix_time}, \"report\": {}}}",
+        report.to_json().trim_end()
+    );
+    let existing = std::fs::read_to_string(&path).unwrap_or_default();
+    let trimmed = existing.trim_end();
+    let body = match trimmed.strip_suffix(']') {
+        Some(stripped) => match stripped.trim_start().strip_prefix('[') {
+            Some(inner) if inner.trim().is_empty() => format!("[\n{entry}\n]\n"),
+            Some(_) => format!("{}\n,\n{entry}\n]\n", stripped.trim_end()),
+            None => format!("[\n{entry}\n]\n"),
+        },
+        None => format!("[\n{entry}\n]\n"),
+    };
+    std::fs::write(&path, body)
+        .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
+    Ok(path)
 }
 
 #[cfg(test)]
@@ -380,6 +413,44 @@ mod tests {
         // A kernel set without blur has nothing to gate.
         let none = BenchReport { size: 128, threads: 1, kernels: vec![] };
         assert!(none.check_opt_regression().is_ok());
+    }
+
+    #[test]
+    fn history_appends_accumulate() {
+        let dir = std::env::temp_dir().join(format!(
+            "imagecl_bench_hist_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let snap = dir.join("BENCH_exec.json");
+        let report = BenchReport {
+            size: 16,
+            threads: 1,
+            kernels: vec![KernelBench {
+                name: "blur".to_string(),
+                pixels: 256,
+                tree_secs: 1.0,
+                vm_unopt_secs: 0.5,
+                vm_scalar_secs: 0.4,
+                vm_secs: 0.25,
+                parallel: false,
+                identical: true,
+            }],
+        };
+        let hist = append_history(&report, &snap).unwrap();
+        let hist2 = append_history(&report, &snap).unwrap();
+        assert_eq!(hist, hist2);
+        assert_eq!(hist.file_name().unwrap(), "BENCH_exec_history.json");
+        let body = std::fs::read_to_string(&hist).unwrap();
+        assert!(body.trim_start().starts_with('['), "{body}");
+        assert!(body.trim_end().ends_with(']'), "{body}");
+        assert_eq!(body.matches("\"unix_time\"").count(), 2, "{body}");
+        // Malformed history is replaced, not corrupted further.
+        std::fs::write(&hist, "not json").unwrap();
+        append_history(&report, &snap).unwrap();
+        let body = std::fs::read_to_string(&hist).unwrap();
+        assert_eq!(body.matches("\"unix_time\"").count(), 1, "{body}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

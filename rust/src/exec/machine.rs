@@ -33,6 +33,7 @@ use crate::transform::clir::*;
 
 use super::buffer::{Arg, Buffer, Value};
 use super::compiled::{CExpr, CStmt, CompiledPlan, Compiler, Fn1, Fn2, *};
+use super::profile;
 use super::vm::{self, VmProgram};
 
 /// Runtime error (all of these indicate a compiler bug or a bad launch).
@@ -209,7 +210,9 @@ pub fn execute_with(
         Engine::VmUnopt => VmProgram::build_with(plan, &compiled, false),
         _ => VmProgram::build(plan, &compiled),
     };
-    run_compiled(plan, &compiled, vm.as_ref(), args, grid, engine)
+    let key = profile::PlanKey::new(&plan.name, "host", grid);
+    record_opt_build(&key, vm.as_ref());
+    run_compiled(plan, &compiled, vm.as_ref(), args, grid, engine, &key)
 }
 
 /// A kernel plan compiled once for a fixed launch shape, reusable across
@@ -235,21 +238,47 @@ pub struct PreparedKernel {
     vm_unopt: Option<VmProgram>,
     scalar_vals: HashMap<String, Value>,
     grid: (usize, usize),
+    /// Execution-tier profiler key: which (kernel, device, grid) this
+    /// prepared plan's launches are attributed to.
+    key: profile::PlanKey,
 }
 
 impl PreparedKernel {
     /// Compile `plan` for the launch shape implied by `args` + `grid`.
     /// `args` is only inspected (shapes and scalar values), not consumed.
+    /// Profiler attribution lands under the placeholder device `"host"`;
+    /// callers that know the target device use [`Self::prepare_on`].
     pub fn prepare(
         plan: &KernelPlan,
         args: &BTreeMap<String, Arg>,
         grid: (usize, usize),
     ) -> Result<PreparedKernel, ExecError> {
+        Self::prepare_on(plan, args, grid, "host")
+    }
+
+    /// [`Self::prepare`] with explicit profiler device attribution (the
+    /// serving layer compiles per device; `"host"` otherwise).
+    pub fn prepare_on(
+        plan: &KernelPlan,
+        args: &BTreeMap<String, Arg>,
+        grid: (usize, usize),
+        device: &'static str,
+    ) -> Result<PreparedKernel, ExecError> {
         let scalar_vals = resolve_scalars(plan, args, grid)?;
         let compiled = Compiler::compile(plan, &scalar_vals)?;
         let vm = VmProgram::build(plan, &compiled);
         let vm_unopt = VmProgram::build_with(plan, &compiled, false);
-        Ok(PreparedKernel { plan: plan.clone(), compiled, vm, vm_unopt, scalar_vals, grid })
+        let key = profile::PlanKey::new(&plan.name, device, grid);
+        record_opt_build(&key, vm.as_ref());
+        Ok(PreparedKernel {
+            plan: plan.clone(),
+            compiled,
+            vm,
+            vm_unopt,
+            scalar_vals,
+            grid,
+            key,
+        })
     }
 
     pub fn grid(&self) -> (usize, usize) {
@@ -289,7 +318,17 @@ impl PreparedKernel {
             Engine::VmUnopt => self.vm_unopt.as_ref(),
             _ => self.vm.as_ref(),
         };
-        run_compiled(&self.plan, &self.compiled, vm, args, self.grid, engine)
+        run_compiled(&self.plan, &self.compiled, vm, args, self.grid, engine, &self.key)
+    }
+}
+
+/// Attribute an optimized build's pass statistics and optimizer wall
+/// time to the plan's profile.
+fn record_opt_build(key: &profile::PlanKey, vm: Option<&VmProgram>) {
+    if let Some(prog) = vm {
+        if let Some(stats) = &prog.opt_stats {
+            profile::profiler().record_opt(key, stats, prog.opt_wall_us);
+        }
     }
 }
 
@@ -303,6 +342,7 @@ fn run_compiled(
     args: &mut BTreeMap<String, Arg>,
     grid: (usize, usize),
     engine: Engine,
+    key: &profile::PlanKey,
 ) -> Result<(), ExecError> {
     // Move buffers out of the argument map into dense slots (plan buffers
     // first, locals after — matching the compiler's indices).
@@ -328,11 +368,24 @@ fn run_compiled(
     // `VmScalar`/`VmUnopt` pin the scalar loop for the differential grid
     // and the bench's engine isolation.
     let batch = !matches!(resolved, Engine::VmScalar | Engine::VmUnopt);
+    // Tier attribution for the profiler: which engine actually runs,
+    // and whether `Auto` *wanted* the VM but fell back to the oracle.
+    let tier = match resolved {
+        Engine::TreeWalk => profile::Tier::Tree,
+        Engine::VmUnopt => profile::Tier::VmUnopt,
+        Engine::VmScalar => profile::Tier::VmScalar,
+        Engine::Vm => profile::Tier::Vm,
+        Engine::Auto if vm_ok => profile::Tier::Vm,
+        Engine::Auto => profile::Tier::Tree,
+    };
+    let fallback = matches!(resolved, Engine::Auto) && !vm_ok;
+    let t_exec = std::time::Instant::now();
     let result = match resolved {
-        Engine::TreeWalk => run_ndrange(plan, compiled, &mut bufs, grid),
+        Engine::TreeWalk => run_ndrange(plan, compiled, &mut bufs, grid).map(|()| None),
         Engine::Vm | Engine::VmScalar | Engine::VmUnopt => {
             if vm_ok {
                 vm::run_ndrange(plan, compiled, vm.unwrap(), &mut bufs, grid, batch)
+                    .map(Some)
             } else {
                 Err(ExecError::Other(format!(
                     "plan `{}` is not executable on the bytecode VM \
@@ -345,11 +398,16 @@ fn run_compiled(
         Engine::Auto => {
             if vm_ok {
                 vm::run_ndrange(plan, compiled, vm.unwrap(), &mut bufs, grid, batch)
+                    .map(Some)
             } else {
-                run_ndrange(plan, compiled, &mut bufs, grid)
+                run_ndrange(plan, compiled, &mut bufs, grid).map(|()| None)
             }
         }
     };
+    if let Ok(stats) = &result {
+        let wall_us = t_exec.elapsed().as_micros() as u64;
+        profile::profiler().record_run(key, tier, fallback, wall_us, *stats);
+    }
 
     // Move argument buffers back (even on error, so callers keep data).
     for (i, b) in plan.buffers.iter().enumerate() {
@@ -363,7 +421,7 @@ fn run_compiled(
         };
         args.insert(b.name.clone(), arg);
     }
-    result
+    result.map(|_| ())
 }
 
 fn run_ndrange(

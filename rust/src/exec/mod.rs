@@ -35,6 +35,7 @@ pub mod buffer;
 pub mod compiled;
 pub mod machine;
 pub mod opt;
+pub mod profile;
 pub mod vm;
 
 pub use buffer::{Arg, Buffer, ImageBuf, Value};

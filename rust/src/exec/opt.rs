@@ -85,13 +85,52 @@ const MAX_TRACE_STEPS: usize = 1 << 14;
 /// case; anything bigger stops paying for itself).
 const MAX_TRACE_LEN: usize = 1 << 12;
 
-/// Optimize every phase of a lowered program in place.
-pub fn optimize(prog: &mut VmProgram) {
+/// Per-pass optimizer statistics: how many live instructions each pass
+/// eliminated (passes mark victims `Nop`; `compact` strips them, so
+/// eliminations are measured as non-`Nop` op-count deltas), plus the
+/// number of pipeline rounds run before the fixpoint. Accumulated
+/// across phases per program and surfaced through the execution-tier
+/// profiler ([`crate::exec::profile`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct OptStats {
+    pub rounds: u64,
+    pub propagate: u64,
+    pub fuse_muladd: u64,
+    pub coalesce: u64,
+    pub dce: u64,
+}
+
+impl OptStats {
+    /// Total instructions eliminated across all passes.
+    pub fn eliminated(&self) -> u64 {
+        self.propagate + self.fuse_muladd + self.coalesce + self.dce
+    }
+
+    pub fn merge(&mut self, other: &OptStats) {
+        self.rounds += other.rounds;
+        self.propagate += other.propagate;
+        self.fuse_muladd += other.fuse_muladd;
+        self.coalesce += other.coalesce;
+        self.dce += other.dce;
+    }
+}
+
+/// Live (non-`Nop`) instruction count — the measure pass statistics
+/// are deltas of.
+fn live_len(ops: &[Op]) -> u64 {
+    ops.iter().filter(|op| !matches!(op, Op::Nop)).count() as u64
+}
+
+/// Optimize every phase of a lowered program in place; returns the
+/// pass statistics summed over the phases.
+pub fn optimize(prog: &mut VmProgram) -> OptStats {
     let (n_ri, n_rf) = (prog.n_ri, prog.n_rf);
     let (nsi, nsf) = (prog.n_slot_ri, prog.n_slot_rf);
+    let mut total = OptStats::default();
     for phase in &mut prog.phases {
-        optimize_ops(phase, n_ri, n_rf, nsi, nsf);
+        total.merge(&optimize_ops(phase, n_ri, n_rf, nsi, nsf));
     }
+    total
 }
 
 /// The per-stream pass driver (see the module docs for pass ordering).
@@ -101,20 +140,32 @@ pub(crate) fn optimize_ops(
     n_rf: usize,
     n_slot_ri: usize,
     n_slot_rf: usize,
-) {
+) -> OptStats {
+    let mut stats = OptStats::default();
     for _ in 0..MAX_ROUNDS {
         let before = ops.len();
+        stats.rounds += 1;
+        let l0 = live_len(ops);
         propagate(ops, n_ri, n_rf);
+        let l1 = live_len(ops);
         fuse_muladd(ops);
+        let l2 = live_len(ops);
         let live = liveness(ops, n_ri, n_rf, n_slot_ri, n_slot_rf);
         coalesce_moves(ops, &live, n_ri, n_rf, n_slot_ri, n_slot_rf);
+        let l3 = live_len(ops);
         let live = liveness(ops, n_ri, n_rf, n_slot_ri, n_slot_rf);
         dce(ops, &live, n_ri, n_rf, n_slot_ri, n_slot_rf);
+        let l4 = live_len(ops);
+        stats.propagate += l0.saturating_sub(l1);
+        stats.fuse_muladd += l1.saturating_sub(l2);
+        stats.coalesce += l2.saturating_sub(l3);
+        stats.dce += l3.saturating_sub(l4);
         compact(ops);
         if ops.len() == before {
             break;
         }
     }
+    stats
 }
 
 // ---------------------------------------------------------------------
@@ -1390,6 +1441,8 @@ mod tests {
             n_slot_ri: 10,
             n_slot_rf: 0,
             buf_elems: vec![],
+            opt_stats: None,
+            opt_wall_us: 0,
         };
         // Interior: gid_x in [16, 31] decides the guard and the loop
         // fully unrolls into a branch-free trace.

@@ -1,0 +1,459 @@
+//! The execution-tier profiler: per-plan accounting of *which* engine
+//! tier actually ran (tree-walker oracle, unoptimized VM, scalar VM,
+//! batched VM), batched-vs-scalar row coverage, parallel-group
+//! utilization, optimizer pass statistics, and per-phase wall time
+//! (lower / optimize / specialize / execute) — keyed per
+//! (kernel, device, grid).
+//!
+//! The hot-path cost is one `Instant` pair around the launch plus one
+//! mutex lock per launch to fold a [`RunStats`] into the plan's
+//! profile; the VM's inner loops only bump thread-local counters that
+//! are flushed once per worker. Snapshots render as a table
+//! ([`Profiler::render`]) and publish into the `obs` metrics registry
+//! ([`Profiler::publish`]) for the Prometheus/JSON exporters.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::obs;
+
+use super::opt::OptStats;
+
+/// The engine tier that actually executed a launch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Tree-walking oracle (forced, or VM fallback).
+    Tree,
+    /// Unoptimized, unbatched VM (the PR-3 baseline).
+    VmUnopt,
+    /// Optimized VM, scalar row loop.
+    VmScalar,
+    /// Optimized VM with batched row interpretation (the full path).
+    Vm,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 4] = [Tier::Tree, Tier::VmUnopt, Tier::VmScalar, Tier::Vm];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Tree => "tree",
+            Tier::VmUnopt => "vm-unopt",
+            Tier::VmScalar => "vm-scalar",
+            Tier::Vm => "vm",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Tier::Tree => 0,
+            Tier::VmUnopt => 1,
+            Tier::VmScalar => 2,
+            Tier::Vm => 3,
+        }
+    }
+}
+
+/// A compilation/execution phase whose wall time is attributed per
+/// plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Lower,
+    Optimize,
+    Specialize,
+    Execute,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 4] =
+        [Phase::Lower, Phase::Optimize, Phase::Specialize, Phase::Execute];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Lower => "lower",
+            Phase::Optimize => "optimize",
+            Phase::Specialize => "specialize",
+            Phase::Execute => "execute",
+        }
+    }
+
+    fn idx(self) -> usize {
+        match self {
+            Phase::Lower => 0,
+            Phase::Optimize => 1,
+            Phase::Specialize => 2,
+            Phase::Execute => 3,
+        }
+    }
+}
+
+/// What one VM NDRange launch did, reported by `vm::run_ndrange`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RunStats {
+    /// Work-item rows that ran through the batched lane interpreter.
+    pub rows_batched: u64,
+    /// Rows that fell back to the scalar per-item loop.
+    pub rows_scalar: u64,
+    /// Work-groups (or row partitions) dispatched.
+    pub groups: u64,
+    /// Worker threads the launch actually spawned (1 = serial).
+    pub threads: u64,
+    /// Thread-pool width available to the launch.
+    pub pool: u64,
+    /// Wall time spent in row/group specialization, microseconds.
+    pub spec_wall_us: u64,
+}
+
+/// Identifies a profiled plan: which kernel, on which device, at which
+/// launch grid.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct PlanKey {
+    pub kernel: String,
+    pub device: &'static str,
+    pub grid: (usize, usize),
+}
+
+impl PlanKey {
+    pub fn new(kernel: &str, device: &'static str, grid: (usize, usize)) -> PlanKey {
+        PlanKey { kernel: kernel.to_string(), device, grid }
+    }
+
+    pub fn grid_label(&self) -> String {
+        format!("{}x{}", self.grid.0, self.grid.1)
+    }
+}
+
+/// Accumulated profile for one plan key.
+#[derive(Debug, Clone, Default)]
+pub struct TierProfile {
+    /// Launches per tier, indexed per [`Tier::idx`].
+    pub runs: [u64; 4],
+    /// Launches where `Engine::Auto` wanted the VM but fell back to
+    /// the tree-walker (program untypeable or argument mismatch).
+    pub fallbacks: u64,
+    pub rows_batched: u64,
+    pub rows_scalar: u64,
+    pub groups_dispatched: u64,
+    /// Worker-thread slots used, summed over launches.
+    pub thread_slots: u64,
+    /// Widest thread pool observed.
+    pub pool_width: u64,
+    /// Wall per phase, microseconds, indexed per [`Phase::idx`].
+    pub phase_us: [u64; 4],
+    /// How many optimized programs contributed to `opt`.
+    pub opt_runs: u64,
+    pub opt: OptStats,
+}
+
+impl TierProfile {
+    pub fn total_runs(&self) -> u64 {
+        self.runs.iter().sum()
+    }
+
+    fn rows_total(&self) -> u64 {
+        self.rows_batched + self.rows_scalar
+    }
+
+    /// Fraction of VM rows that ran batched. The batched and scalar
+    /// fractions sum to exactly 1.0 when any VM rows ran, and to 0.0
+    /// for tree-only plans — never more than 1.0.
+    pub fn batched_frac(&self) -> f64 {
+        let total = self.rows_total();
+        if total == 0 {
+            0.0
+        } else {
+            self.rows_batched as f64 / total as f64
+        }
+    }
+
+    /// Fraction of VM rows that ran through the scalar loop.
+    pub fn scalar_frac(&self) -> f64 {
+        let total = self.rows_total();
+        if total == 0 {
+            0.0
+        } else {
+            self.rows_scalar as f64 / total as f64
+        }
+    }
+
+    /// Parallel-group utilization: average worker threads per launch
+    /// over the pool width (1.0 = every launch filled the pool).
+    pub fn utilization(&self) -> f64 {
+        let runs = self.total_runs();
+        if runs == 0 || self.pool_width == 0 {
+            return 0.0;
+        }
+        (self.thread_slots as f64 / runs as f64) / self.pool_width as f64
+    }
+}
+
+/// The process-global profiler: plan key → accumulated profile.
+#[derive(Debug, Default)]
+pub struct Profiler {
+    plans: Mutex<BTreeMap<PlanKey, TierProfile>>,
+}
+
+/// The process-global profiler instance.
+pub fn profiler() -> &'static Profiler {
+    static PROFILER: OnceLock<Profiler> = OnceLock::new();
+    PROFILER.get_or_init(Profiler::default)
+}
+
+impl Profiler {
+    /// Fold one launch into the plan's profile.
+    pub fn record_run(
+        &self,
+        key: &PlanKey,
+        tier: Tier,
+        fallback: bool,
+        wall_us: u64,
+        stats: Option<RunStats>,
+    ) {
+        let mut plans = self.plans.lock().unwrap();
+        let p = plans.entry(key.clone()).or_default();
+        p.runs[tier.idx()] += 1;
+        if fallback {
+            p.fallbacks += 1;
+        }
+        p.phase_us[Phase::Execute.idx()] += wall_us;
+        if let Some(s) = stats {
+            p.rows_batched += s.rows_batched;
+            p.rows_scalar += s.rows_scalar;
+            p.groups_dispatched += s.groups;
+            p.thread_slots += s.threads;
+            p.pool_width = p.pool_width.max(s.pool);
+            p.phase_us[Phase::Specialize.idx()] += s.spec_wall_us;
+        }
+    }
+
+    /// Attribute `us` microseconds of `phase` wall time to a plan.
+    pub fn add_phase(&self, key: &PlanKey, phase: Phase, us: u64) {
+        let mut plans = self.plans.lock().unwrap();
+        let p = plans.entry(key.clone()).or_default();
+        p.phase_us[phase.idx()] += us;
+    }
+
+    /// Fold one optimized build's pass statistics into a plan.
+    pub fn record_opt(&self, key: &PlanKey, stats: &OptStats, wall_us: u64) {
+        let mut plans = self.plans.lock().unwrap();
+        let p = plans.entry(key.clone()).or_default();
+        p.opt_runs += 1;
+        p.opt.merge(stats);
+        p.phase_us[Phase::Optimize.idx()] += wall_us;
+    }
+
+    /// Point-in-time copy of every plan profile, key-sorted.
+    pub fn snapshot(&self) -> Vec<(PlanKey, TierProfile)> {
+        let plans = self.plans.lock().unwrap();
+        plans.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    /// Drop all accumulated profiles (tests and bench isolation).
+    pub fn reset(&self) {
+        self.plans.lock().unwrap().clear();
+    }
+
+    /// Human-readable per-plan table (the "tier-profiler table" in the
+    /// README).
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let snap = self.snapshot();
+        let mut s = String::new();
+        if snap.is_empty() {
+            let _ = writeln!(s, "(no plans profiled)");
+            return s;
+        }
+        let _ = writeln!(
+            s,
+            "{:<34} {:>5} {:>5} {:>5} {:>5} {:>5} {:>6} {:>6} {:>5} {:>9} {:>9}",
+            "plan (kernel@device grid)",
+            "tree",
+            "vmU",
+            "vmS",
+            "vm",
+            "fall",
+            "batch%",
+            "util%",
+            "elim",
+            "opt_us",
+            "exec_us"
+        );
+        for (key, p) in &snap {
+            let plan = format!("{}@{} {}", key.kernel, key.device, key.grid_label());
+            let _ = writeln!(
+                s,
+                "{:<34} {:>5} {:>5} {:>5} {:>5} {:>5} {:>5.1}% {:>5.1}% {:>5} {:>9} {:>9}",
+                plan,
+                p.runs[0],
+                p.runs[1],
+                p.runs[2],
+                p.runs[3],
+                p.fallbacks,
+                p.batched_frac() * 100.0,
+                p.utilization() * 100.0,
+                p.opt.eliminated(),
+                p.phase_us[Phase::Optimize.idx()],
+                p.phase_us[Phase::Execute.idx()],
+            );
+        }
+        s
+    }
+
+    /// Publish every profile into the `obs` metrics registry under
+    /// `imagecl_exec_*`, labeled by kernel/device/grid. Counters use
+    /// `set_max`, so repeated publishes stay monotone.
+    pub fn publish(&self) {
+        let reg = obs::registry();
+        for (key, p) in self.snapshot() {
+            let grid = key.grid_label();
+            let base: [(&str, &str); 3] =
+                [("kernel", &key.kernel), ("device", key.device), ("grid", &grid)];
+            for tier in Tier::ALL {
+                let mut labels = base.to_vec();
+                labels.push(("tier", tier.name()));
+                reg.counter(
+                    "imagecl_exec_tier_runs_total",
+                    "Launches per engine tier",
+                    &labels,
+                )
+                .set_max(p.runs[tier.idx()]);
+            }
+            reg.counter(
+                "imagecl_exec_fallbacks_total",
+                "Auto launches that fell back to the tree-walker",
+                &base,
+            )
+            .set_max(p.fallbacks);
+            for (mode, rows) in
+                [("batched", p.rows_batched), ("scalar", p.rows_scalar)]
+            {
+                let mut labels = base.to_vec();
+                labels.push(("mode", mode));
+                reg.counter(
+                    "imagecl_exec_rows_total",
+                    "VM work-item rows by interpretation mode",
+                    &labels,
+                )
+                .set_max(rows);
+            }
+            for phase in Phase::ALL {
+                let mut labels = base.to_vec();
+                labels.push(("phase", phase.name()));
+                reg.counter(
+                    "imagecl_exec_phase_us_total",
+                    "Wall time per compilation/execution phase, microseconds",
+                    &labels,
+                )
+                .set_max(p.phase_us[phase.idx()]);
+            }
+            reg.counter(
+                "imagecl_exec_groups_dispatched_total",
+                "Work-groups (or row partitions) dispatched",
+                &base,
+            )
+            .set_max(p.groups_dispatched);
+            reg.counter(
+                "imagecl_exec_thread_slots_total",
+                "Worker-thread slots used, summed over launches",
+                &base,
+            )
+            .set_max(p.thread_slots);
+            reg.gauge(
+                "imagecl_exec_pool_width",
+                "Widest thread pool observed for the plan",
+                &base,
+            )
+            .set(p.pool_width as f64);
+            reg.gauge(
+                "imagecl_exec_utilization_ratio",
+                "Average worker threads per launch over the pool width",
+                &base,
+            )
+            .set(p.utilization());
+            for (pass, n) in [
+                ("propagate", p.opt.propagate),
+                ("fuse_muladd", p.opt.fuse_muladd),
+                ("coalesce", p.opt.coalesce),
+                ("dce", p.opt.dce),
+            ] {
+                let mut labels = base.to_vec();
+                labels.push(("pass", pass));
+                reg.counter(
+                    "imagecl_exec_opt_eliminated_total",
+                    "Instructions eliminated per optimizer pass",
+                    &labels,
+                )
+                .set_max(n);
+            }
+            reg.counter(
+                "imagecl_exec_opt_rounds_total",
+                "Optimizer pipeline rounds run",
+                &base,
+            )
+            .set_max(p.opt.rounds);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coverage_fractions_sum_to_at_most_one() {
+        let p = Profiler::default();
+        let key = PlanKey::new("blur", "test-dev", (64, 64));
+        p.record_run(
+            &key,
+            Tier::Vm,
+            false,
+            100,
+            Some(RunStats {
+                rows_batched: 48,
+                rows_scalar: 16,
+                groups: 4,
+                threads: 4,
+                pool: 8,
+                spec_wall_us: 5,
+            }),
+        );
+        p.record_run(&key, Tier::Tree, true, 50, None);
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 1);
+        let prof = &snap[0].1;
+        assert_eq!(prof.total_runs(), 2);
+        assert_eq!(prof.fallbacks, 1);
+        let total = prof.batched_frac() + prof.scalar_frac();
+        assert!(total <= 1.0 + 1e-9, "{total}");
+        assert!((total - 1.0).abs() < 1e-9, "rows were recorded: {total}");
+        assert!((prof.batched_frac() - 0.75).abs() < 1e-9);
+        assert!((prof.utilization() - 0.25).abs() < 1e-9, "(4/2 threads)/8 pool");
+        assert_eq!(prof.phase_us[Phase::Execute.idx()], 150);
+        assert_eq!(prof.phase_us[Phase::Specialize.idx()], 5);
+    }
+
+    #[test]
+    fn empty_profile_has_zero_fractions() {
+        let p = TierProfile::default();
+        assert_eq!(p.batched_frac() + p.scalar_frac(), 0.0);
+        assert_eq!(p.utilization(), 0.0);
+    }
+
+    #[test]
+    fn opt_stats_accumulate_and_render() {
+        let p = Profiler::default();
+        let key = PlanKey::new("sobel", "test-dev", (32, 32));
+        let stats = OptStats { rounds: 2, propagate: 3, fuse_muladd: 1, coalesce: 2, dce: 7 };
+        p.record_opt(&key, &stats, 40);
+        p.add_phase(&key, Phase::Lower, 11);
+        let snap = p.snapshot();
+        assert_eq!(snap[0].1.opt.eliminated(), 13);
+        assert_eq!(snap[0].1.opt_runs, 1);
+        assert_eq!(snap[0].1.phase_us[Phase::Lower.idx()], 11);
+        assert_eq!(snap[0].1.phase_us[Phase::Optimize.idx()], 40);
+        let table = p.render();
+        assert!(table.contains("sobel@test-dev 32x32"), "{table}");
+        p.reset();
+        assert!(p.snapshot().is_empty());
+    }
+}

@@ -60,6 +60,7 @@ use super::compiled::{
 };
 use super::machine::{BufSlot, ExecError, MAX_WHILE};
 use super::opt;
+use super::profile;
 
 /// Launches below this many logical grid pixels run serially even when
 /// parallel execution is proven safe — thread spawn/join would dominate.
@@ -198,6 +199,11 @@ pub struct VmProgram {
     /// the lowering baked conversions for these types into the ops, so a
     /// launch whose argument buffers disagree must use the tree-walker.
     pub(crate) buf_elems: Vec<ScalarType>,
+    /// Optimizer pass statistics from build time (`None` when the
+    /// pipeline was skipped, i.e. the `VmUnopt` baseline).
+    pub(crate) opt_stats: Option<opt::OptStats>,
+    /// Wall time the optimizer pipeline took at build, microseconds.
+    pub(crate) opt_wall_us: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -306,9 +312,14 @@ impl VmProgram {
             n_slot_ri: ni as usize,
             n_slot_rf: nf as usize,
             buf_elems,
+            opt_stats: None,
+            opt_wall_us: 0,
         };
         if optimize {
-            opt::optimize(&mut prog);
+            let t0 = std::time::Instant::now();
+            let stats = opt::optimize(&mut prog);
+            prog.opt_wall_us = t0.elapsed().as_micros() as u64;
+            prog.opt_stats = Some(stats);
         }
         Some(prog)
     }
@@ -1880,6 +1891,9 @@ pub(crate) fn args_match(prog: &VmProgram, bufs: &[BufSlot]) -> bool {
 /// `batch`, rows whose control flow the specializer can decide from the
 /// group's index ranges execute through the batched lane interpreter;
 /// border rows and data-dependent branches fall back to the scalar loop.
+/// Returns what the launch did — row coverage, dispatch width,
+/// specialization wall — for the execution-tier profiler; workers
+/// count into locals and flush once, so the hot loops stay untouched.
 pub(crate) fn run_ndrange(
     plan: &KernelPlan,
     compiled: &CompiledPlan,
@@ -1887,7 +1901,7 @@ pub(crate) fn run_ndrange(
     bufs: &mut [BufSlot],
     grid: (usize, usize),
     batch: bool,
-) -> Result<(), ExecError> {
+) -> Result<profile::RunStats, ExecError> {
     let (global, wg) = plan.launch_dims(grid.0, grid.1);
     let groups = [global[0] / wg[0], global[1] / wg[1]];
     let n_groups = groups[0] * groups[1];
@@ -1915,7 +1929,18 @@ pub(crate) fn run_ndrange(
     // not communicate through buffers within a phase.
     let batch = batch && plan.batchable && wg[0] >= MIN_BATCH_WIDTH;
 
+    // Launch-wide profiling tallies. Workers accumulate into plain
+    // locals and flush here once at the end of their range, so the
+    // per-row loops never touch shared state.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    let tally_batched = AtomicU64::new(0);
+    let tally_scalar = AtomicU64::new(0);
+    let tally_spec_us = AtomicU64::new(0);
+
     let run_range = |range: std::ops::Range<usize>| -> Result<(), Trap> {
+        let mut w_batched = 0u64;
+        let mut w_scalar = 0u64;
+        let mut w_spec_us = 0u64;
         let mut ri = vec![0i64; prog.n_ri];
         let mut rf = vec![0f64; prog.n_rf];
         let mut bri = vec![[0i64; LANES]; if batch { prog.n_ri } else { 0 }];
@@ -1972,8 +1997,10 @@ pub(crate) fn run_ndrange(
                                 wg,
                                 global,
                             );
-                            tcache =
-                                Some(((pi, g), opt::specialize(prog, pi, &env), 0));
+                            let t0 = std::time::Instant::now();
+                            let trace = opt::specialize(prog, pi, &env);
+                            w_spec_us += t0.elapsed().as_micros() as u64;
+                            tcache = Some(((pi, g), trace, 0));
                         }
                         let (_, group_trace, row_fails) =
                             tcache.as_mut().unwrap();
@@ -1989,7 +2016,9 @@ pub(crate) fn run_ndrange(
                                     global,
                                     lid_y,
                                 );
+                                let t0 = std::time::Instant::now();
                                 row_trace = opt::specialize(prog, pi, &env);
+                                w_spec_us += t0.elapsed().as_micros() as u64;
                                 if row_trace.is_none() {
                                     *row_fails += 1;
                                 }
@@ -2012,7 +2041,10 @@ pub(crate) fn run_ndrange(
                             batched = true;
                         }
                     }
-                    if !batched {
+                    if batched {
+                        w_batched += 1;
+                    } else {
+                        w_scalar += 1;
                         for lid_x in 0..wg[0] {
                             ri[SLOT_GID_X as usize] = (grp_x * wg[0] + lid_x) as i64;
                             ri[SLOT_GID_Y as usize] = gid_y as i64;
@@ -2024,6 +2056,9 @@ pub(crate) fn run_ndrange(
                 }
             }
         }
+        tally_batched.fetch_add(w_batched, Ordering::Relaxed);
+        tally_scalar.fetch_add(w_scalar, Ordering::Relaxed);
+        tally_spec_us.fetch_add(w_spec_us, Ordering::Relaxed);
         Ok(())
     };
 
@@ -2067,5 +2102,13 @@ pub(crate) fn run_ndrange(
             Trap::DivByZero => ExecError::DivByZero,
             Trap::Runaway => ExecError::Runaway(MAX_WHILE),
         }
+    })?;
+    Ok(profile::RunStats {
+        rows_batched: tally_batched.into_inner(),
+        rows_scalar: tally_scalar.into_inner(),
+        groups: n_units as u64,
+        threads: threads as u64,
+        pool: avail as u64,
+        spec_wall_us: tally_spec_us.into_inner(),
     })
 }

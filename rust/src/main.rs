@@ -46,6 +46,13 @@ USAGE:
                 oracle, unoptimized VM, optimized scalar VM, batched VM);
                 verify bit-identity; write BENCH_exec.json; fail if the
                 optimized VM regressed below the unoptimized VM on blur
+  imagecl stats [--prom|--json] [--traces N] [--requests N] [--grid N]
+                [--kernels a,b] [--exec real|sim] [--lint PATH]
+                drive a short synthetic burst through the serving stack,
+                then export the metrics registry — Prometheus text
+                (--prom), JSON (--json) or a human summary with recent
+                request traces. --lint PATH instead checks a Prometheus
+                dump with the in-repo parser (the CI gate)
   imagecl fig6 [--size N]            reproduce Figure 6 (slowdown vs baselines)
   imagecl tables [--size N]          reproduce Tables 2-5 (tuned configurations)
   imagecl pipeline [--size N]        run the Harris pipeline through PJRT
@@ -145,12 +152,17 @@ fn run() -> Result<(), String> {
         print!("{USAGE}");
         return Ok(());
     };
-    let switches: &[&str] = if cmd == "bench" { &["smoke"] } else { &[] };
+    let switches: &[&str] = match cmd.as_str() {
+        "bench" => &["smoke"],
+        "stats" => &["prom", "json"],
+        _ => &[],
+    };
     let args = Args::parse_with_switches(&argv[1..], switches)?;
     match cmd.as_str() {
         "compile" => cmd_compile(&args),
         "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
+        "stats" => cmd_stats(&args),
         "tunedb" => cmd_tunedb(&args),
         "bench" => cmd_bench(&args),
         "fig6" => cmd_fig6(&args),
@@ -439,6 +451,83 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
     let report = serve::run_loadgen(service, &opts).map_err(|e| e.to_string())?;
     print!("{}", report.render());
+    // Loadgen published the metrics registry on completion; the
+    // tier-profiler table explains where the execution time went.
+    print!("{}", imagecl::exec::profile::profiler().render());
+    if report.errors > 0 {
+        return Err(format!("{} requests failed", report.errors));
+    }
+    Ok(())
+}
+
+/// `imagecl stats`: exercise the full serving stack with a short
+/// synthetic burst (real execution by default, ephemeral knowledge
+/// base), then export the observability state — Prometheus text
+/// (`--prom`), JSON (`--json`) or a human summary with the tier-profiler
+/// table and the most recent request traces. `--lint PATH` skips the
+/// burst and checks a Prometheus text dump with the in-repo parser
+/// instead (the CI gate; no promtool in the offline toolchain).
+fn cmd_stats(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "prom", "json", "traces", "lint", "requests", "grid", "kernels", "exec",
+    ])?;
+    if let Some(path) = args.flag("lint") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {path:?}: {e}"))?;
+        let (families, samples) = imagecl::obs::export::lint_prometheus(&text)?;
+        println!("{path}: OK — {families} metric families, {samples} samples");
+        return Ok(());
+    }
+    if args.bool_flag("prom") && args.bool_flag("json") {
+        return Err("--prom and --json are mutually exclusive".to_string());
+    }
+    let traces = args.usize_flag("traces", 3)?;
+    let mut opts = serve::LoadGenOpts {
+        requests: args.usize_flag("requests", 32)?,
+        concurrency: 4,
+        grid: args.usize_flag("grid", 32)?,
+        queue_cap: 64,
+        max_batch: 8,
+        workers_per_device: 1,
+        ..Default::default()
+    };
+    if let Some(list) = args.flag("kernels") {
+        opts.kernels =
+            list.split(',').filter(|k| !k.is_empty()).map(String::from).collect();
+        for k in &opts.kernels {
+            if bench_defs::kernel_by_id(k).is_none() {
+                return Err(format!("unknown kernel {k:?} (see `imagecl kernels`)"));
+            }
+        }
+    }
+    let exec = match args.flag("exec").unwrap_or("real") {
+        "real" => serve::ExecMode::Real,
+        "sim" => serve::ExecMode::Simulate,
+        other => return Err(format!("unknown --exec {other:?} (want real|sim)")),
+    };
+    // Ephemeral db + fixed cheap strategy: `stats` is a diagnostic, not
+    // a tuning run — it must not grow the persistent knowledge base.
+    let service = serve::KernelService::new(serve::ServiceConfig {
+        strategy: Strategy::Random { evals: 40, seed: 7 },
+        db_path: None,
+        legacy_tsv: None,
+        exec,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+    });
+    let report = serve::run_loadgen(service, &opts).map_err(|e| e.to_string())?;
+    if args.bool_flag("prom") {
+        print!("{}", imagecl::obs::export::prometheus());
+    } else if args.bool_flag("json") {
+        print!("{}", imagecl::obs::export::json(traces));
+    } else {
+        print!("{}", report.render());
+        print!("{}", imagecl::exec::profile::profiler().render());
+        if traces > 0 {
+            print!("{}", imagecl::obs::export::render_traces(traces));
+        }
+    }
     if report.errors > 0 {
         return Err(format!("{} requests failed", report.errors));
     }

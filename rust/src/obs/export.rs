@@ -1,0 +1,424 @@
+//! Exporters over the metrics registry and the span ring: Prometheus
+//! text exposition, structured JSON, rendered trace trees — plus the
+//! tiny in-repo Prometheus linter CI runs instead of `promtool`.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+use super::metrics::{registry, Kind, Sample};
+use super::trace::{tracer, SpanRecord};
+
+/// Splice an `le` label into an already-rendered label string.
+fn with_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("{{le=\"{le}\"}}")
+    } else {
+        format!("{},le=\"{le}\"}}", &labels[..labels.len() - 1])
+    }
+}
+
+/// Render the whole registry in Prometheus text exposition format.
+pub fn prometheus() -> String {
+    let mut s = String::new();
+    for fam in registry().snapshot() {
+        let _ = writeln!(s, "# HELP {} {}", fam.name, fam.help);
+        let _ = writeln!(s, "# TYPE {} {}", fam.name, fam.kind.as_str());
+        for (labels, sample) in &fam.series {
+            match sample {
+                Sample::Counter(v) => {
+                    let _ = writeln!(s, "{}{} {}", fam.name, labels, v);
+                }
+                Sample::Gauge(v) => {
+                    let _ = writeln!(s, "{}{} {}", fam.name, labels, v);
+                }
+                Sample::Histogram { buckets, sum, count } => {
+                    for (upper, cum) in buckets {
+                        let _ = writeln!(
+                            s,
+                            "{}_bucket{} {}",
+                            fam.name,
+                            with_le(labels, &upper.to_string()),
+                            cum
+                        );
+                    }
+                    let _ = writeln!(
+                        s,
+                        "{}_bucket{} {}",
+                        fam.name,
+                        with_le(labels, "+Inf"),
+                        count
+                    );
+                    let _ = writeln!(s, "{}_sum{} {}", fam.name, labels, sum);
+                    let _ = writeln!(s, "{}_count{} {}", fam.name, labels, count);
+                }
+            }
+        }
+    }
+    s
+}
+
+fn json_escape(v: &str) -> String {
+    let mut s = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => s.push_str("\\\\"),
+            '"' => s.push_str("\\\""),
+            '\n' => s.push_str("\\n"),
+            '\t' => s.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(s, "\\u{:04x}", c as u32);
+            }
+            c => s.push(c),
+        }
+    }
+    s
+}
+
+fn percentile_of(buckets: &[(u64, u64)], count: u64, q: f64) -> u64 {
+    if count == 0 {
+        return 0;
+    }
+    let rank = ((q / 100.0 * count as f64).ceil() as u64).clamp(1, count);
+    for (upper, cum) in buckets {
+        if *cum >= rank {
+            return *upper;
+        }
+    }
+    buckets.last().map(|(u, _)| *u).unwrap_or(0)
+}
+
+/// Render the registry plus the `traces` most recent complete traces
+/// as structured JSON (hand-rolled — the offline crate set has no
+/// serde).
+pub fn json(traces: usize) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"metrics\": [");
+    let fams = registry().snapshot();
+    for (fi, fam) in fams.iter().enumerate() {
+        let _ = writeln!(s, "    {{");
+        let _ = writeln!(s, "      \"name\": \"{}\",", json_escape(fam.name));
+        let _ = writeln!(s, "      \"kind\": \"{}\",", fam.kind.as_str());
+        let _ = writeln!(s, "      \"series\": [");
+        for (si, (labels, sample)) in fam.series.iter().enumerate() {
+            let comma = if si + 1 < fam.series.len() { "," } else { "" };
+            match sample {
+                Sample::Counter(v) => {
+                    let _ = writeln!(
+                        s,
+                        "        {{\"labels\": \"{}\", \"value\": {}}}{comma}",
+                        json_escape(labels),
+                        v
+                    );
+                }
+                Sample::Gauge(v) => {
+                    let _ = writeln!(
+                        s,
+                        "        {{\"labels\": \"{}\", \"value\": {}}}{comma}",
+                        json_escape(labels),
+                        if v.is_finite() { format!("{v}") } else { "null".to_string() }
+                    );
+                }
+                Sample::Histogram { buckets, sum, count } => {
+                    let _ = writeln!(
+                        s,
+                        "        {{\"labels\": \"{}\", \"count\": {}, \"sum\": {}, \
+                         \"p50\": {}, \"p90\": {}, \"p99\": {}}}{comma}",
+                        json_escape(labels),
+                        count,
+                        sum,
+                        percentile_of(buckets, *count, 50.0),
+                        percentile_of(buckets, *count, 90.0),
+                        percentile_of(buckets, *count, 99.0),
+                    );
+                }
+            }
+        }
+        let _ = writeln!(s, "      ]");
+        let _ = writeln!(s, "    }}{}", if fi + 1 < fams.len() { "," } else { "" });
+    }
+    let _ = writeln!(s, "  ],");
+    let _ = writeln!(s, "  \"traces\": [");
+    let grouped = group_traces(&tracer().snapshot(), traces);
+    for (ti, (trace, spans)) in grouped.iter().enumerate() {
+        let _ = writeln!(s, "    {{");
+        let _ = writeln!(s, "      \"trace\": {trace},");
+        let _ = writeln!(s, "      \"spans\": [");
+        for (si, r) in spans.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "        {{\"span\": {}, \"parent\": {}, \"name\": \"{}\", \
+                 \"start_us\": {}, \"dur_us\": {}}}{}",
+                r.span,
+                r.parent,
+                json_escape(r.name),
+                r.start_us,
+                r.dur_us,
+                if si + 1 < spans.len() { "," } else { "" }
+            );
+        }
+        let _ = writeln!(s, "      ]");
+        let _ = writeln!(s, "    }}{}", if ti + 1 < grouped.len() { "," } else { "" });
+    }
+    let _ = writeln!(s, "  ]");
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// Group resident spans into complete traces (root still resident),
+/// newest-first by root start, keeping at most `n`.
+fn group_traces(snap: &[SpanRecord], n: usize) -> Vec<(u64, Vec<SpanRecord>)> {
+    let mut by_trace: BTreeMap<u64, Vec<SpanRecord>> = BTreeMap::new();
+    for r in snap {
+        by_trace.entry(r.trace).or_default().push(*r);
+    }
+    let mut traces: Vec<(u64, Vec<SpanRecord>)> = by_trace
+        .into_iter()
+        .filter(|(_, spans)| spans.iter().any(|r| r.parent == 0))
+        .collect();
+    // Newest root first; partially evicted traces were filtered above.
+    traces.sort_by_key(|(_, spans)| {
+        std::cmp::Reverse(
+            spans.iter().filter(|r| r.parent == 0).map(|r| r.start_us).max().unwrap_or(0),
+        )
+    });
+    traces.truncate(n);
+    traces
+}
+
+/// Render the `n` most recent complete traces as indented trees.
+pub fn render_traces(n: usize) -> String {
+    let mut s = String::new();
+    let grouped = group_traces(&tracer().snapshot(), n);
+    if grouped.is_empty() {
+        let _ = writeln!(s, "(no complete traces resident)");
+        return s;
+    }
+    for (trace, spans) in &grouped {
+        let _ = writeln!(s, "trace {trace}");
+        let mut children: BTreeMap<u64, Vec<&SpanRecord>> = BTreeMap::new();
+        let mut roots: Vec<&SpanRecord> = Vec::new();
+        let ids: BTreeSet<u64> = spans.iter().map(|r| r.span).collect();
+        for r in spans {
+            if r.parent != 0 && ids.contains(&r.parent) {
+                children.entry(r.parent).or_default().push(r);
+            } else {
+                roots.push(r);
+            }
+        }
+        fn emit(
+            s: &mut String,
+            r: &SpanRecord,
+            children: &BTreeMap<u64, Vec<&SpanRecord>>,
+            depth: usize,
+        ) {
+            if depth > 16 {
+                return; // defensive: malformed parent links
+            }
+            let _ = writeln!(
+                s,
+                "  {:indent$}{:<w$} {:>9} us",
+                "",
+                r.name,
+                r.dur_us,
+                indent = depth * 2,
+                w = 28usize.saturating_sub(depth * 2),
+            );
+            if let Some(kids) = children.get(&r.span) {
+                let mut kids = kids.clone();
+                kids.sort_by_key(|k| (k.start_us, k.span));
+                for k in kids {
+                    emit(s, k, children, depth + 1);
+                }
+            }
+        }
+        roots.sort_by_key(|r| (r.start_us, r.span));
+        for r in roots {
+            emit(&mut s, r, &children, 0);
+        }
+    }
+    s
+}
+
+/// Lint Prometheus text exposition: every sample must belong to a
+/// family with a preceding `# TYPE` line, series must be unique per
+/// (name, label-set), names must match the Prometheus charset and
+/// carry the `imagecl_` prefix, `_bucket` samples must be labeled with
+/// `le`, and values must parse. Returns `(families, samples)` counted.
+///
+/// This is the "tiny in-repo parser" the CI step uses instead of an
+/// external `promtool` dependency.
+pub fn lint_prometheus(text: &str) -> Result<(usize, usize), String> {
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    let mut seen: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut samples = 0usize;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        let err = |msg: String| Err(format!("line {}: {msg}", ln + 1));
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let (Some(name), Some(kind)) = (parts.next(), parts.next()) else {
+                return err("malformed # TYPE line".to_string());
+            };
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return err(format!("unknown metric type {kind:?}"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return err(format!("duplicate # TYPE for {name}"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP and free comments
+        }
+        // Sample line: name[{labels}] value
+        let (name_labels, value) = split_sample(line).map_err(|m| format!("line {}: {m}", ln + 1))?;
+        let (name, labels) = match name_labels.find('{') {
+            Some(i) => (&name_labels[..i], &name_labels[i..]),
+            None => (name_labels, ""),
+        };
+        if !valid_name(name) {
+            return err(format!("invalid metric name {name:?}"));
+        }
+        if !name.starts_with("imagecl_") {
+            return err(format!("metric {name} missing imagecl_ prefix"));
+        }
+        if value.parse::<f64>().is_err() {
+            return err(format!("unparseable value {value:?} for {name}"));
+        }
+        // Resolve the declaring family: histogram children map to the
+        // base name, everything else declares under its own name.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let base = name.strip_suffix(suf)?;
+                (types.get(base).map(String::as_str) == Some("histogram")).then_some(base)
+            })
+            .unwrap_or(name);
+        match types.get(family) {
+            Some(_) => {}
+            None => return err(format!("sample {name} has no preceding # TYPE")),
+        }
+        if name.ends_with("_bucket")
+            && types.get(family).map(String::as_str) == Some("histogram")
+            && !labels.contains("le=\"")
+        {
+            return err(format!("histogram sample {name} lacks an le label"));
+        }
+        if !seen.insert((name.to_string(), labels.to_string())) {
+            return err(format!("duplicate series {name}{labels}"));
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        return Err("no samples found".to_string());
+    }
+    Ok((types.len(), samples))
+}
+
+/// Split a sample line into `(name_with_labels, value)`, respecting
+/// quoted label values (which may contain spaces and escaped quotes).
+fn split_sample(line: &str) -> Result<(&str, &str), String> {
+    let bytes = line.as_bytes();
+    let mut in_quotes = false;
+    let mut escaped = false;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'\\' if in_quotes && !escaped => escaped = true,
+            b'"' if !escaped => in_quotes = !in_quotes,
+            b' ' | b'\t' if !in_quotes => {
+                return Ok((&line[..i], line[i..].trim()));
+            }
+            _ => escaped = false,
+        }
+    }
+    Err("sample line has no value".to_string())
+}
+
+fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_' || c == ':')
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::span;
+
+    #[test]
+    fn export_lints_clean() {
+        let reg = registry();
+        reg.counter("imagecl_export_test_total", "test counter", &[("k", "v")]).add(3);
+        reg.gauge("imagecl_export_test_gauge", "test gauge", &[]).set(1.5);
+        let h = reg.histogram("imagecl_export_test_us", "test histogram", &[]);
+        h.observe(7);
+        h.observe(900);
+        let text = prometheus();
+        let (families, samples) = lint_prometheus(&text).expect(&text);
+        assert!(families >= 3, "{text}");
+        assert!(samples >= 5, "{text}");
+        assert!(text.contains("# TYPE imagecl_export_test_us histogram"), "{text}");
+        assert!(text.contains("imagecl_export_test_us_bucket{le=\"7\"} 1"), "{text}");
+        assert!(text.contains("imagecl_export_test_us_bucket{le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("imagecl_export_test_total{k=\"v\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn lint_rejects_malformed_exposition() {
+        let no_type = "imagecl_x_total 1\n";
+        assert!(lint_prometheus(no_type).unwrap_err().contains("no preceding # TYPE"));
+
+        let dup = "# TYPE imagecl_x_total counter\n\
+                   imagecl_x_total 1\nimagecl_x_total 2\n";
+        assert!(lint_prometheus(dup).unwrap_err().contains("duplicate series"));
+
+        let unprefixed = "# TYPE foo_total counter\nfoo_total 1\n";
+        assert!(lint_prometheus(unprefixed).unwrap_err().contains("imagecl_ prefix"));
+
+        let unlabeled_bucket = "# TYPE imagecl_h histogram\n\
+                                imagecl_h_bucket 1\nimagecl_h_sum 1\nimagecl_h_count 1\n";
+        assert!(lint_prometheus(unlabeled_bucket).unwrap_err().contains("le label"));
+
+        let bad_value = "# TYPE imagecl_x_total counter\nimagecl_x_total banana\n";
+        assert!(lint_prometheus(bad_value).unwrap_err().contains("unparseable value"));
+
+        assert!(lint_prometheus("").unwrap_err().contains("no samples"));
+    }
+
+    #[test]
+    fn lint_handles_spaces_inside_label_values() {
+        let text = "# TYPE imagecl_x_total counter\n\
+                    imagecl_x_total{k=\"a b\"} 1\n";
+        assert_eq!(lint_prometheus(text).unwrap(), (1, 1));
+    }
+
+    #[test]
+    fn traces_render_as_trees() {
+        {
+            let _root = span("testexport.root");
+            let _child = span("testexport.child");
+        }
+        let out = render_traces(64);
+        assert!(out.contains("testexport.root"), "{out}");
+        assert!(out.contains("testexport.child"), "{out}");
+        // The child is indented under its root.
+        let root_line = out.lines().find(|l| l.contains("testexport.root")).unwrap();
+        let child_line = out.lines().find(|l| l.contains("testexport.child")).unwrap();
+        let indent = |l: &str| l.len() - l.trim_start().len();
+        assert!(indent(child_line) > indent(root_line), "{out}");
+    }
+
+    #[test]
+    fn json_is_braced_and_mentions_metrics() {
+        registry().counter("imagecl_export_json_total", "j", &[]).inc();
+        let j = json(4);
+        assert!(j.trim_start().starts_with('{'), "{j}");
+        assert!(j.trim_end().ends_with('}'), "{j}");
+        assert!(j.contains("imagecl_export_json_total"), "{j}");
+        assert!(j.contains("\"traces\""), "{j}");
+    }
+}

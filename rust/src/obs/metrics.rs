@@ -1,0 +1,454 @@
+//! The metrics registry: named counters, gauges, and log-linear
+//! histograms behind a process-global [`Registry`].
+//!
+//! Metric names follow `imagecl_<subsystem>_<name>_<unit>` (see the
+//! README's Observability section). A (name, label-set) pair maps to
+//! exactly one handle: repeated `counter(...)` calls with the same name
+//! and labels return the same `Arc<Counter>`, so call sites can either
+//! cache the handle or re-look it up — both hit the same atomic.
+//!
+//! Histograms are log-linear: values below 16 get one exact bucket
+//! each; above that, every power-of-two octave is split into 8 linear
+//! sub-buckets. That bounds the relative quantile error to ~12.5% with
+//! a fixed 496-slot table and no allocation on the observe path —
+//! replacing the sorted-vec percentiles `serve::metrics` used to keep.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Raise to `n` if currently below it. Used to publish accumulated
+    /// absolutes (per-service `Counters`, the exec profiler) into the
+    /// registry idempotently while keeping the exported series
+    /// monotone across repeated publishes.
+    pub fn set_max(&self, n: u64) {
+        self.0.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a point-in-time `f64` (stored as bits in an atomic).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Values `0..EXACT_BUCKETS` get one exact bucket each.
+const EXACT_BUCKETS: usize = 16;
+/// Linear sub-buckets per power-of-two octave above the exact range.
+const SUBDIV: usize = 8;
+/// First octave covered by the log-linear range (2^4 = 16).
+const FIRST_OCTAVE: usize = 4;
+/// Last representable octave for a `u64` value.
+const LAST_OCTAVE: usize = 63;
+/// Total bucket count (496): fixed, so `observe` never allocates.
+const BUCKETS: usize = EXACT_BUCKETS + (LAST_OCTAVE - FIRST_OCTAVE + 1) * SUBDIV;
+
+fn bucket_index(v: u64) -> usize {
+    if v < EXACT_BUCKETS as u64 {
+        return v as usize;
+    }
+    let octave = 63 - v.leading_zeros() as usize;
+    let sub = ((v >> (octave - 3)) & (SUBDIV as u64 - 1)) as usize;
+    EXACT_BUCKETS + (octave - FIRST_OCTAVE) * SUBDIV + sub
+}
+
+/// Inclusive upper bound of bucket `i` (the value reported for any
+/// quantile landing in it).
+fn bucket_upper(i: usize) -> u64 {
+    if i < EXACT_BUCKETS {
+        return i as u64;
+    }
+    let r = i - EXACT_BUCKETS;
+    let octave = r / SUBDIV + FIRST_OCTAVE;
+    let sub = (r % SUBDIV) as u64;
+    (1u64 << octave)
+        .saturating_add((sub + 1).saturating_mul(1u64 << (octave - 3)))
+        .saturating_sub(1)
+}
+
+/// A log-linear histogram over `u64` observations (typically
+/// microseconds). Observe is wait-free: one `fetch_add` per field.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        let mut buckets = Vec::with_capacity(BUCKETS);
+        buckets.resize_with(BUCKETS, AtomicU64::default);
+        Histogram { buckets, sum: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Nearest-rank percentile over the buckets; returns the upper
+    /// bound of the bucket holding the ranked observation. Empty
+    /// histograms report 0; `q` is clamped to `[0, 100]` (NaN → 100).
+    pub fn percentile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let q = if q.is_nan() { 100.0 } else { q.clamp(0.0, 100.0) };
+        let rank = ((q / 100.0 * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+
+    /// Non-empty buckets as `(upper_bound, count)` in ascending order.
+    pub fn nonzero_buckets(&self) -> Vec<(u64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then(|| (bucket_upper(i), n))
+            })
+            .collect()
+    }
+}
+
+/// The three exported metric kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Handle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+#[derive(Debug)]
+struct Family {
+    kind: Kind,
+    help: &'static str,
+    /// Keyed by the rendered label string (`{k="v",...}` or empty).
+    series: BTreeMap<String, Handle>,
+}
+
+/// A point-in-time reading of one series, for the exporters.
+#[derive(Debug, Clone)]
+pub enum Sample {
+    Counter(u64),
+    Gauge(f64),
+    /// `buckets` are *cumulative* `(upper_bound, count_le)` pairs over
+    /// the non-empty buckets, ready for `_bucket{le="..."}` lines.
+    Histogram { buckets: Vec<(u64, u64)>, sum: u64, count: u64 },
+}
+
+/// A point-in-time reading of one metric family.
+#[derive(Debug, Clone)]
+pub struct FamilySnapshot {
+    pub name: &'static str,
+    pub kind: Kind,
+    pub help: &'static str,
+    /// `(rendered_labels, sample)`, sorted by label string.
+    pub series: Vec<(String, Sample)>,
+}
+
+/// Renders a label set as `{k="v",k2="v2"}` (sorted by key, values
+/// escaped) or the empty string for no labels.
+pub fn render_labels(labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let mut sorted: Vec<&(&str, &str)> = labels.iter().collect();
+    sorted.sort_by_key(|(k, _)| *k);
+    let mut s = String::from("{");
+    for (i, (k, v)) in sorted.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(k);
+        s.push_str("=\"");
+        for c in v.chars() {
+            match c {
+                '\\' => s.push_str("\\\\"),
+                '"' => s.push_str("\\\""),
+                '\n' => s.push_str("\\n"),
+                c => s.push(c),
+            }
+        }
+        s.push('"');
+    }
+    s.push('}');
+    s
+}
+
+/// The metric registry: name → family → label-set → handle.
+///
+/// Lookups take one mutex; the returned `Arc` handles are lock-free to
+/// bump, so hot paths should hold on to their handle.
+#[derive(Debug, Default)]
+pub struct Registry {
+    families: Mutex<BTreeMap<&'static str, Family>>,
+}
+
+impl Registry {
+    /// Get or create a counter. Panics if `name` is already registered
+    /// with a different kind (a programming error, caught in tests).
+    pub fn counter(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Counter> {
+        match self.handle(name, help, labels, Kind::Counter) {
+            Handle::Counter(c) => c,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get or create a gauge (same contract as [`Registry::counter`]).
+    pub fn gauge(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Gauge> {
+        match self.handle(name, help, labels, Kind::Gauge) {
+            Handle::Gauge(g) => g,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Get or create a histogram (same contract as
+    /// [`Registry::counter`]).
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Arc<Histogram> {
+        match self.handle(name, help, labels, Kind::Histogram) {
+            Handle::Histogram(h) => h,
+            _ => unreachable!(),
+        }
+    }
+
+    fn handle(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        kind: Kind,
+    ) -> Handle {
+        let key = render_labels(labels);
+        let mut fams = self.families.lock().unwrap();
+        let fam = fams
+            .entry(name)
+            .or_insert_with(|| Family { kind, help, series: BTreeMap::new() });
+        assert!(
+            fam.kind == kind,
+            "metric {name} already registered as {:?}, requested {:?}",
+            fam.kind,
+            kind
+        );
+        fam.series
+            .entry(key)
+            .or_insert_with(|| match kind {
+                Kind::Counter => Handle::Counter(Arc::new(Counter::default())),
+                Kind::Gauge => Handle::Gauge(Arc::new(Gauge::default())),
+                Kind::Histogram => Handle::Histogram(Arc::new(Histogram::default())),
+            })
+            .clone()
+    }
+
+    /// Read every family for export, sorted by name.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let fams = self.families.lock().unwrap();
+        fams.iter()
+            .map(|(name, fam)| FamilySnapshot {
+                name,
+                kind: fam.kind,
+                help: fam.help,
+                series: fam
+                    .series
+                    .iter()
+                    .map(|(labels, h)| {
+                        let sample = match h {
+                            Handle::Counter(c) => Sample::Counter(c.get()),
+                            Handle::Gauge(g) => Sample::Gauge(g.get()),
+                            Handle::Histogram(h) => {
+                                let mut cum = 0u64;
+                                let buckets = h
+                                    .nonzero_buckets()
+                                    .into_iter()
+                                    .map(|(upper, n)| {
+                                        cum += n;
+                                        (upper, cum)
+                                    })
+                                    .collect();
+                                Sample::Histogram {
+                                    buckets,
+                                    sum: h.sum(),
+                                    count: h.count(),
+                                }
+                            }
+                        };
+                        (labels.clone(), sample)
+                    })
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+/// The process-global registry every subsystem publishes into.
+pub fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(Registry::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_and_upper_are_consistent() {
+        // Every value lands in a bucket whose upper bound is >= the
+        // value, and bucket uppers are non-decreasing with the value.
+        let mut prev_upper = 0;
+        for v in (0..4096u64).chain([1 << 20, 1 << 40, u64::MAX / 2, u64::MAX]) {
+            let i = bucket_index(v);
+            let upper = bucket_upper(i);
+            assert!(upper >= v, "value {v} bucket {i} upper {upper}");
+            assert!(upper >= prev_upper, "upper regressed at {v}");
+            prev_upper = upper;
+        }
+        // Small values are exact.
+        for v in 0..16u64 {
+            assert_eq!(bucket_upper(bucket_index(v)), v);
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_nearest_rank() {
+        let h = Histogram::default();
+        assert_eq!(h.percentile(50.0), 0, "empty histogram reports 0");
+        for v in [1u64, 2, 3, 4, 5] {
+            h.observe(v);
+        }
+        // Small values are exact buckets, so nearest-rank matches the
+        // sorted-vec convention from serve::metrics.
+        assert_eq!(h.percentile(0.0), 1);
+        assert_eq!(h.percentile(50.0), 3);
+        assert_eq!(h.percentile(100.0), 5);
+        assert_eq!(h.percentile(f64::NAN), 5);
+        assert_eq!(h.percentile(250.0), 5);
+        assert_eq!(h.sum(), 15);
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn histogram_relative_error_bounded() {
+        let h = Histogram::default();
+        h.observe(1_000_000);
+        let p = h.percentile(99.0) as f64;
+        assert!(p >= 1_000_000.0);
+        assert!(p <= 1_000_000.0 * 1.13, "p={p}");
+    }
+
+    #[test]
+    fn registry_reuses_series_and_checks_kind() {
+        let reg = Registry::default();
+        let a = reg.counter("imagecl_test_total", "help", &[("k", "v")]);
+        let b = reg.counter("imagecl_test_total", "help", &[("k", "v")]);
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3, "same (name, labels) shares one atomic");
+        let other = reg.counter("imagecl_test_total", "help", &[("k", "w")]);
+        assert_eq!(other.get(), 0);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].series.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn registry_panics_on_kind_mismatch() {
+        let reg = Registry::default();
+        let _ = reg.counter("imagecl_test_total", "help", &[]);
+        let _ = reg.gauge("imagecl_test_total", "help", &[]);
+    }
+
+    #[test]
+    fn labels_render_sorted_and_escaped() {
+        assert_eq!(render_labels(&[]), "");
+        let s = render_labels(&[("z", "1"), ("a", "x\"y\\z")]);
+        assert_eq!(s, "{a=\"x\\\"y\\\\z\",z=\"1\"}");
+    }
+
+    #[test]
+    fn counter_set_max_is_monotone() {
+        let c = Counter::default();
+        c.set_max(5);
+        c.set_max(3);
+        assert_eq!(c.get(), 5);
+        c.set_max(9);
+        assert_eq!(c.get(), 9);
+    }
+}

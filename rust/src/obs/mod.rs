@@ -1,0 +1,44 @@
+//! `obs` — the observability substrate: span tracing, a metrics
+//! registry, and exporters.
+//!
+//! Three pieces, layered so each is usable alone:
+//!
+//! * [`trace`] — lightweight spans with parent/child nesting and a
+//!   per-request trace ID. `obs::span("tune.search")` opens a span as
+//!   a child of the calling thread's current span (or a fresh root);
+//!   the guard records itself into a fixed ring buffer on drop.
+//!   Cross-thread continuation (a request hopping from the submitting
+//!   client to a device worker) uses [`span_under`] with the trace and
+//!   parent IDs carried in the request.
+//! * [`metrics`] — named counters, gauges, and log-linear histograms
+//!   under a process-global [`registry`]. Naming scheme:
+//!   `imagecl_<subsystem>_<name>_<unit>` (e.g.
+//!   `imagecl_serve_latency_us`); variants live in labels, not names.
+//! * [`export`] — Prometheus text format, structured JSON, trace-tree
+//!   rendering, and the in-repo Prometheus linter used by CI.
+//!
+//! # Ring-buffer drop policy
+//!
+//! The tracer keeps the most recent [`trace::RING_CAPACITY`] (8192)
+//! span records in a ring. A writer claims its slot with a single
+//! atomic `fetch_add` on the ring cursor — writers never contend on
+//! slot *choice*, and never block waiting for space: when the ring is
+//! full the oldest record is overwritten unconditionally. The
+//! trade-off is deliberate: under overload tracing degrades by
+//! forgetting the past, never by slowing the present. Eviction can
+//! orphan a trace (its children overwritten while the root survives,
+//! or vice versa); the exporters therefore treat "root span resident"
+//! as the completeness signal and skip traces without one rather than
+//! rendering a misleading fragment.
+//!
+//! The execution-tier profiler (which engine tier ran, batched vs
+//! scalar row coverage, optimizer pass statistics, per-phase wall
+//! time) lives in [`crate::exec::profile`] and publishes into this
+//! module's registry via `profile::publish`.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{registry, Counter, Gauge, Histogram, Registry};
+pub use trace::{record_span, span, span_under, tracer, SpanGuard, SpanRecord};

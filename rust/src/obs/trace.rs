@@ -1,0 +1,272 @@
+//! The span tracer: lightweight, allocation-frugal spans with
+//! parent/child nesting and a per-request trace ID, recorded into a
+//! fixed-capacity ring buffer.
+//!
+//! A span is opened with [`span`] (child of the calling thread's
+//! current span, or a fresh root) or [`span_under`] (explicit parent —
+//! used to continue a request's trace on a worker thread), and is
+//! recorded when its [`SpanGuard`] drops. Records are `Copy` and hold
+//! only a `&'static str` name, so the hot path allocates nothing; the
+//! per-thread parent stack is the only non-atomic state and it never
+//! crosses threads.
+//!
+//! Ring-buffer drop policy: the buffer holds the most recent
+//! [`RING_CAPACITY`] span records. Writers claim a slot with one
+//! atomic `fetch_add` on the cursor (lock-free — no writer ever waits
+//! for a reader or another writer to choose a slot) and overwrite the
+//! oldest record unconditionally. Under overload the *oldest spans are
+//! silently dropped*, which can orphan a trace (children evicted
+//! before the root is read); [`render_traces`](super::export) only
+//! walks traces whose root is still resident, so partially evicted
+//! traces disappear rather than render misleadingly truncated.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Capacity of the span ring buffer (records, not bytes).
+pub const RING_CAPACITY: usize = 8192;
+
+/// One completed span. `parent == 0` marks a trace root.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    pub trace: u64,
+    pub span: u64,
+    pub parent: u64,
+    pub name: &'static str,
+    /// Microseconds since the tracer's epoch (first use in-process).
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+/// The process-global tracer: a ring of span slots plus the ID well.
+#[derive(Debug)]
+pub struct Tracer {
+    epoch: Instant,
+    slots: Vec<Mutex<Option<SpanRecord>>>,
+    cursor: AtomicU64,
+    next_id: AtomicU64,
+}
+
+impl Tracer {
+    fn with_capacity(cap: usize) -> Tracer {
+        let mut slots = Vec::with_capacity(cap);
+        slots.resize_with(cap, || Mutex::new(None));
+        Tracer {
+            epoch: Instant::now(),
+            slots,
+            cursor: AtomicU64::new(0),
+            // 0 is reserved to mean "no parent" / "no trace".
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Allocate a fresh span/trace ID (monotone, never 0).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Append a record, overwriting the oldest when full.
+    pub fn record(&self, rec: SpanRecord) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
+        *self.slots[i].lock().unwrap() = Some(rec);
+    }
+
+    /// Microseconds from the tracer epoch to `t` (0 if `t` predates
+    /// the epoch — only possible for instants captured before the
+    /// first tracer use).
+    pub fn micros_since_epoch(&self, t: Instant) -> u64 {
+        t.checked_duration_since(self.epoch)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0)
+    }
+
+    /// All resident records, sorted by `(trace, start_us, span)`.
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let mut out: Vec<SpanRecord> =
+            self.slots.iter().filter_map(|s| *s.lock().unwrap()).collect();
+        out.sort_by_key(|r| (r.trace, r.start_us, r.span));
+        out
+    }
+}
+
+/// The process-global tracer instance.
+pub fn tracer() -> &'static Tracer {
+    static TRACER: OnceLock<Tracer> = OnceLock::new();
+    TRACER.get_or_init(|| Tracer::with_capacity(RING_CAPACITY))
+}
+
+thread_local! {
+    /// The calling thread's open-span stack: `(trace, span)` pairs.
+    static STACK: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// An open span; records itself into the ring when dropped.
+#[derive(Debug)]
+pub struct SpanGuard {
+    trace: u64,
+    span: u64,
+    parent: u64,
+    name: &'static str,
+    start: Instant,
+}
+
+impl SpanGuard {
+    pub fn trace_id(&self) -> u64 {
+        self.trace
+    }
+
+    pub fn span_id(&self) -> u64 {
+        self.span
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+        let t = tracer();
+        t.record(SpanRecord {
+            trace: self.trace,
+            span: self.span,
+            parent: self.parent,
+            name: self.name,
+            start_us: t.micros_since_epoch(self.start),
+            dur_us: self.start.elapsed().as_micros() as u64,
+        });
+    }
+}
+
+/// Open a span as a child of the calling thread's current span, or as
+/// a fresh root (new trace ID) when none is open.
+pub fn span(name: &'static str) -> SpanGuard {
+    let t = tracer();
+    let (trace, parent) = STACK
+        .with(|s| s.borrow().last().copied())
+        .unwrap_or((0, 0));
+    let trace = if trace == 0 { t.next_id() } else { trace };
+    let id = t.next_id();
+    STACK.with(|s| s.borrow_mut().push((trace, id)));
+    SpanGuard { trace, span: id, parent, name, start: Instant::now() }
+}
+
+/// Open a span under an explicit `(trace, parent)` — used to continue
+/// a request's trace on a worker thread where the thread-local stack
+/// is empty. Spans opened with [`span`] while this guard is live nest
+/// under it as usual.
+pub fn span_under(trace: u64, parent: u64, name: &'static str) -> SpanGuard {
+    let t = tracer();
+    let id = t.next_id();
+    STACK.with(|s| s.borrow_mut().push((trace, id)));
+    SpanGuard { trace, span: id, parent, name, start: Instant::now() }
+}
+
+/// Record an already-measured span directly (no nesting side effects).
+/// Used for request roots whose lifetime is tracked by an `Instant`
+/// carried in the request rather than a guard on one thread.
+pub fn record_span(
+    trace: u64,
+    span: u64,
+    parent: u64,
+    name: &'static str,
+    start: Instant,
+    dur_us: u64,
+) {
+    let t = tracer();
+    t.record(SpanRecord {
+        trace,
+        span,
+        parent,
+        name,
+        start_us: t.micros_since_epoch(start),
+        dur_us,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spans_nest_on_one_thread() {
+        let (trace, outer_id, inner_parent);
+        {
+            let outer = span("test.outer");
+            trace = outer.trace_id();
+            outer_id = outer.span_id();
+            {
+                let inner = span("test.inner");
+                assert_eq!(inner.trace_id(), trace);
+                inner_parent = outer_id;
+                drop(inner);
+            }
+        }
+        let snap = tracer().snapshot();
+        let inner = snap
+            .iter()
+            .find(|r| r.trace == trace && r.name == "test.inner")
+            .expect("inner span recorded");
+        assert_eq!(inner.parent, inner_parent);
+        let outer = snap
+            .iter()
+            .find(|r| r.trace == trace && r.name == "test.outer")
+            .expect("outer span recorded");
+        assert_eq!(outer.parent, 0, "outer is a root");
+        assert!(outer.start_us <= inner.start_us);
+    }
+
+    #[test]
+    fn span_under_continues_a_trace_across_threads() {
+        let t = tracer();
+        let trace = t.next_id();
+        let root = t.next_id();
+        std::thread::spawn(move || {
+            let g = span_under(trace, root, "test.worker");
+            let child = span("test.worker_child");
+            assert_eq!(child.trace_id(), trace);
+            drop(child);
+            drop(g);
+        })
+        .join()
+        .unwrap();
+        let snap = t.snapshot();
+        let worker = snap
+            .iter()
+            .find(|r| r.trace == trace && r.name == "test.worker")
+            .expect("worker span recorded");
+        assert_eq!(worker.parent, root);
+        let child = snap
+            .iter()
+            .find(|r| r.trace == trace && r.name == "test.worker_child")
+            .expect("nested span recorded");
+        assert_eq!(child.parent, worker.span);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest() {
+        let t = Tracer::with_capacity(4);
+        for i in 0..6u64 {
+            t.record(SpanRecord {
+                trace: 1,
+                span: i + 1,
+                parent: 0,
+                name: "test.ring",
+                start_us: i,
+                dur_us: 0,
+            });
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 4);
+        // Spans 1 and 2 (the oldest) were dropped.
+        assert!(snap.iter().all(|r| r.span >= 3), "{snap:?}");
+    }
+
+    #[test]
+    fn record_span_handles_pre_epoch_instants() {
+        let t = tracer();
+        // An Instant from "before" the epoch must clamp to 0, not panic.
+        assert_eq!(t.micros_since_epoch(t.epoch), 0);
+    }
+}

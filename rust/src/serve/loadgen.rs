@@ -106,13 +106,14 @@ pub fn run_loadgen(
                 .spawn(move || {
                     let mut submitted = 0usize;
                     for i in (client..requests).step_by(concurrency) {
-                        let req = ServeRequest {
-                            kernel: kernels[i % kernels.len()].clone(),
-                            grid: (grid, grid),
-                            seed: i as u64,
-                            submitted: Instant::now(),
-                            reply: reply_tx.clone(),
-                        };
+                        // `new` allocates the trace/root-span IDs the
+                        // worker side continues the trace under.
+                        let req = ServeRequest::new(
+                            &kernels[i % kernels.len()],
+                            (grid, grid),
+                            i as u64,
+                            reply_tx.clone(),
+                        );
                         // Kernel cycles fastest, device advances once per
                         // kernel cycle: the request stream covers the full
                         // kernel × device cross-product whatever the two
@@ -163,6 +164,20 @@ pub fn run_loadgen(
         pool.shutdown();
     }
     latencies_us.sort_unstable();
+
+    // Publish observability state on completion — service counters,
+    // tunedb gauges, the exec-tier profiler, and the latency
+    // distribution — so `obs::export` output is populated after every
+    // loadgen run (the CLI and `benches/serve.rs` read it from there).
+    service.publish_obs();
+    let lat = crate::obs::registry().histogram(
+        "imagecl_serve_latency_us",
+        "Request latency (admission to reply), microseconds",
+        &[],
+    );
+    for &us in &latencies_us {
+        lat.observe(us);
+    }
 
     Ok(ServeReport {
         completed,
@@ -223,6 +238,12 @@ mod tests {
         assert_eq!(report2.completed, 60);
         assert_eq!(report2.stats.tunes, 12);
         assert!(report2.stats.cache_hits > report.stats.cache_hits);
+        // The delta view says the same thing as increments, without
+        // depending on absolute values carried over from phase one.
+        let d = report2.stats.delta(&report.stats);
+        assert_eq!(d.tunes, 0, "warm second run tunes nothing");
+        assert_eq!(d.plan_compiles, 0);
+        assert!(d.cache_hits > 0);
     }
 
     #[test]

@@ -5,6 +5,14 @@
 //! warm-start acceptance check ("second run re-tunes nothing") reads
 //! `tunes` from a [`StatsSnapshot`], and the tests assert cache behaviour
 //! through them rather than through timing.
+//!
+//! This module is now a thin façade over [`crate::obs`]: the counters
+//! stay per-service atomics (tests construct several services in one
+//! process and pin exact counts), and [`Counters::publish`] mirrors
+//! them into the global `obs` registry as `imagecl_serve_*` series for
+//! the Prometheus/JSON exporters. Latency distribution lives in an
+//! `obs` log-linear histogram (`imagecl_serve_latency_us`), with the
+//! sorted-vec [`percentile`] kept for the in-run [`ServeReport`].
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -90,6 +98,81 @@ impl Counters {
             wall_records: self.wall_records.load(Ordering::Relaxed),
         }
     }
+
+    /// Mirror the counters into the global [`crate::obs`] registry as
+    /// `imagecl_serve_*` series. Values are absolutes published via
+    /// `Counter::set_max`, so repeated publishes — or several services
+    /// in one process — keep the exported series monotone.
+    pub fn publish(&self) {
+        let reg = crate::obs::registry();
+        let s = self.snapshot();
+        let counters: [(&'static str, &'static str, u64); 15] = [
+            ("imagecl_serve_tunes_total", "Cold-key tuner invocations", s.tunes),
+            (
+                "imagecl_serve_warm_starts_total",
+                "Keys served from an exact knowledge-base hit",
+                s.warm_starts,
+            ),
+            (
+                "imagecl_serve_plan_compiles_total",
+                "Lower + launch-compiles of winning configs",
+                s.plan_compiles,
+            ),
+            ("imagecl_serve_cache_hits_total", "Plan-cache hits", s.cache_hits),
+            ("imagecl_serve_cache_misses_total", "Plan-cache misses", s.cache_misses),
+            ("imagecl_serve_batches_total", "Batches executed by workers", s.batches),
+            (
+                "imagecl_serve_rejected_total",
+                "Admission-queue rejections (backpressure)",
+                s.rejected,
+            ),
+            (
+                "imagecl_serve_db_transfers_total",
+                "Cold keys transfer-tuned from a nearest-grid seed",
+                s.db_transfers,
+            ),
+            (
+                "imagecl_serve_db_predictions_total",
+                "Cold keys tuned via performance-model shortlists",
+                s.db_predictions,
+            ),
+            ("imagecl_serve_evictions_total", "Plan-cache LRU evictions", s.evictions),
+            (
+                "imagecl_serve_search_evals_total",
+                "Measured tuner evaluations",
+                s.search_evals,
+            ),
+            (
+                "imagecl_serve_pjrt_execs_total",
+                "Requests executed through the PJRT artifact path",
+                s.pjrt_execs,
+            ),
+            (
+                "imagecl_serve_search_wall_us_total",
+                "Wall-clock microseconds inside tuner evaluators",
+                s.search_wall_us,
+            ),
+            (
+                "imagecl_serve_model_trains_total",
+                "Background per-kernel model refreshes",
+                s.model_trains,
+            ),
+            (
+                "imagecl_serve_wall_records_total",
+                "Real-execution wall samples recorded to the knowledge base",
+                s.wall_records,
+            ),
+        ];
+        for (name, help, v) in counters {
+            reg.counter(name, help, &[]).set_max(v);
+        }
+        reg.gauge(
+            "imagecl_serve_max_batch",
+            "Largest request batch observed",
+            &[],
+        )
+        .set(s.max_batch as f64);
+    }
 }
 
 /// A point-in-time copy of the counters (plain integers).
@@ -113,14 +196,46 @@ pub struct StatsSnapshot {
     pub wall_records: u64,
 }
 
-/// Nearest-rank percentile over an ascending-sorted slice (`q` in 0..=100).
-/// Empty input yields 0.
-pub fn percentile(sorted: &[u64], q: f64) -> u64 {
-    if sorted.is_empty() {
-        return 0;
+impl StatsSnapshot {
+    /// Counter increments since `earlier` (field-wise saturating
+    /// subtraction), so loadgen and tests can assert on what a phase
+    /// *did* rather than on absolute values that race when counters
+    /// carry over between service phases. `max_batch` is a high-water
+    /// mark, not a counter — the later value is kept as-is.
+    #[must_use]
+    pub fn delta(&self, earlier: &StatsSnapshot) -> StatsSnapshot {
+        StatsSnapshot {
+            tunes: self.tunes.saturating_sub(earlier.tunes),
+            warm_starts: self.warm_starts.saturating_sub(earlier.warm_starts),
+            plan_compiles: self.plan_compiles.saturating_sub(earlier.plan_compiles),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            cache_misses: self.cache_misses.saturating_sub(earlier.cache_misses),
+            batches: self.batches.saturating_sub(earlier.batches),
+            max_batch: self.max_batch,
+            rejected: self.rejected.saturating_sub(earlier.rejected),
+            db_transfers: self.db_transfers.saturating_sub(earlier.db_transfers),
+            db_predictions: self.db_predictions.saturating_sub(earlier.db_predictions),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            search_evals: self.search_evals.saturating_sub(earlier.search_evals),
+            pjrt_execs: self.pjrt_execs.saturating_sub(earlier.pjrt_execs),
+            search_wall_us: self.search_wall_us.saturating_sub(earlier.search_wall_us),
+            model_trains: self.model_trains.saturating_sub(earlier.model_trains),
+            wall_records: self.wall_records.saturating_sub(earlier.wall_records),
+        }
     }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice. Total on
+/// every input: empty yields 0, `q` is clamped to `[0, 100]` (NaN →
+/// 100), and the rank can never index out of bounds — single-element
+/// slices return that element for any `q`.
+pub fn percentile(sorted: &[u64], q: f64) -> u64 {
+    let Some(&last) = sorted.last() else {
+        return 0;
+    };
+    let q = if q.is_nan() { 100.0 } else { q.clamp(0.0, 100.0) };
     let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
-    sorted[rank.clamp(1, sorted.len()) - 1]
+    sorted.get(rank.max(1) - 1).copied().unwrap_or(last)
 }
 
 /// The result of one serving run: what completed, how fast, and what the
@@ -224,6 +339,51 @@ mod tests {
         assert_eq!(percentile(&v, 0.0), 1);
         assert_eq!(percentile(&[7], 99.0), 7);
         assert_eq!(percentile(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn percentile_is_total_on_edge_inputs() {
+        // Empty and single-element slices for every pathological q.
+        for q in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -5.0, 0.0, 100.0, 1e18] {
+            assert_eq!(percentile(&[], q), 0);
+            assert_eq!(percentile(&[42], q), 42);
+        }
+        let v = [10, 20];
+        assert_eq!(percentile(&v, -1.0), 10, "negative q clamps to 0");
+        assert_eq!(percentile(&v, 101.0), 20, "q > 100 clamps to 100");
+        assert_eq!(percentile(&v, f64::NAN), 20, "NaN reads as the max");
+    }
+
+    #[test]
+    fn snapshot_delta_reports_increments() {
+        let c = Counters::default();
+        Counters::bump(&c.tunes);
+        c.observe_batch(4);
+        let before = c.snapshot();
+        Counters::bump(&c.tunes);
+        Counters::bump(&c.cache_hits);
+        Counters::add(&c.search_evals, 5);
+        c.observe_batch(9);
+        let d = c.snapshot().delta(&before);
+        assert_eq!(d.tunes, 1, "only the second bump counts");
+        assert_eq!(d.cache_hits, 1);
+        assert_eq!(d.search_evals, 5);
+        assert_eq!(d.batches, 1);
+        assert_eq!(d.max_batch, 9, "high-water mark keeps the later value");
+        // Saturating: a nonsense ordering must not underflow.
+        let zero = before.delta(&c.snapshot());
+        assert_eq!(zero.tunes, 0);
+    }
+
+    #[test]
+    fn counters_publish_into_registry() {
+        let c = Counters::default();
+        Counters::add(&c.tunes, 3);
+        c.observe_batch(7);
+        c.publish();
+        let reg = crate::obs::registry();
+        assert!(reg.counter("imagecl_serve_tunes_total", "", &[]).get() >= 3);
+        assert!(reg.counter("imagecl_serve_batches_total", "", &[]).get() >= 1);
     }
 
     #[test]

@@ -51,7 +51,8 @@ use std::sync::{mpsc, Arc, Mutex};
 use crate::analysis::KernelInfo;
 use crate::bench_defs;
 use crate::devices::{self, DeviceSpec};
-use crate::exec::PreparedKernel;
+use crate::exec::{profile, PreparedKernel};
+use crate::obs;
 use crate::imagecl::frontend;
 use crate::pipeline::{graph_parts, schedule_by, Pipeline, Schedule};
 use crate::transform::{lower, TuningConfig};
@@ -359,6 +360,17 @@ impl KernelService {
         self.counters.snapshot()
     }
 
+    /// Publish this service's observability state into the global
+    /// metrics registry: serve counters (`imagecl_serve_*`), the tuning
+    /// knowledge base (`imagecl_tunedb_*`) and the execution-tier
+    /// profiler (`imagecl_exec_*`). Idempotent — counters publish as
+    /// max-absolutes — so callers re-publish freely before each export.
+    pub fn publish_obs(&self) {
+        self.counters.publish();
+        self.db.publish_obs();
+        profile::profiler().publish();
+    }
+
     /// Execute a request through the PJRT artifact path when available
     /// (built with `--features xla`, manifest present, artifact exists
     /// for this kernel at this grid). `None` = use the interpreter.
@@ -388,6 +400,7 @@ impl KernelService {
         grid: (usize, usize),
     ) -> Result<Arc<PlanEntry>, ServeError> {
         let key = PlanKey { kernel: kernel.to_string(), device: dev.name, grid };
+        let _cache_span = obs::span("serve.cache");
         let (entry, hit, evicted) =
             self.plans.get_or_build(&key, || self.build_entry(&key, dev))?;
         if hit {
@@ -418,11 +431,16 @@ impl KernelService {
             );
             self.db.record_tune(&key.kernel, dev, key.grid, res, fm);
         };
-        let answer = match self.db.lookup(&key.kernel, dev.name, key.grid) {
-            // A zero budget disables the tier (tests and
-            // measure-everything deployments).
-            Answer::Transfer { .. } if self.config.transfer_budget == 0 => Answer::Miss,
-            a => a,
+        let answer = {
+            let _db_span = obs::span("tunedb.query");
+            match self.db.lookup(&key.kernel, dev.name, key.grid) {
+                // A zero budget disables the tier (tests and
+                // measure-everything deployments).
+                Answer::Transfer { .. } if self.config.transfer_budget == 0 => {
+                    Answer::Miss
+                }
+                a => a,
+            }
         };
         match answer {
             Answer::Exact(rec) => {
@@ -431,6 +449,7 @@ impl KernelService {
             }
             Answer::Transfer { rec, .. } => {
                 Counters::bump(&self.counters.db_transfers);
+                let _search_span = obs::span("tune.search");
                 let space = TuningSpace::enumerate(info, dev);
                 let res = tuner::seeded(
                     &space,
@@ -443,6 +462,7 @@ impl KernelService {
                 (res.best, res.best_time, TuneSource::Transfer)
             }
             Answer::Miss => {
+                let _search_span = obs::span("tune.search");
                 // One enumeration serves both the model shortlist and,
                 // if that yields nothing, the full cold search.
                 let space = TuningSpace::enumerate(info, dev);
@@ -510,17 +530,26 @@ impl KernelService {
 
         let (config, est_seconds, source) = self.resolve_config(key, dev, &info, &fm);
 
+        let _compile_span = obs::span("plan.compile");
+        let pkey = profile::PlanKey::new(&key.kernel, dev.name, key.grid);
+        let t_lower = std::time::Instant::now();
         let plan = lower(&info, &config).map_err(|e| ServeError::Compile {
             kernel: key.kernel.clone(),
             msg: e.to_string(),
         })?;
+        profile::profiler().add_phase(
+            &pkey,
+            profile::Phase::Lower,
+            t_lower.elapsed().as_micros() as u64,
+        );
         Counters::bump(&self.counters.plan_compiles);
         // Launch-compile against the canonical workload shapes for this
         // built-in kernel at the key's grid.
         let args = bench_defs::workload(&key.kernel, key.grid.0, key.grid.1, 0);
-        let prepared =
-            PreparedKernel::prepare(&plan, &args, key.grid).map_err(|e| {
-                ServeError::Compile { kernel: key.kernel.clone(), msg: e.to_string() }
+        let prepared = PreparedKernel::prepare_on(&plan, &args, key.grid, dev.name)
+            .map_err(|e| ServeError::Compile {
+                kernel: key.kernel.clone(),
+                msg: e.to_string(),
             })?;
         let features = fm.features(&config);
         Ok(PlanEntry {

@@ -14,6 +14,7 @@ use std::time::{Duration, Instant};
 
 use crate::bench_defs;
 use crate::devices::DeviceSpec;
+use crate::obs;
 
 use super::queue::BoundedQueue;
 use super::{Counters, ExecMode, KernelService};
@@ -32,9 +33,35 @@ pub struct ServeRequest {
     pub submitted: Instant,
     /// Where the reply goes.
     pub reply: Sender<ServeReply>,
+    /// Trace ID for the request's spans (0 = untraced).
+    pub trace: u64,
+    /// Root span ID. The worker records the root ("request",
+    /// admission → reply) under this ID right before sending the
+    /// reply, so a received reply implies the full trace is resident.
+    pub root_span: u64,
 }
 
 impl ServeRequest {
+    /// Build a request with a fresh trace/root-span ID pair and the
+    /// admission timestamp set to now.
+    pub fn new(
+        kernel: &str,
+        grid: (usize, usize),
+        seed: u64,
+        reply: Sender<ServeReply>,
+    ) -> ServeRequest {
+        let t = obs::tracer();
+        ServeRequest {
+            kernel: kernel.to_string(),
+            grid,
+            seed,
+            submitted: Instant::now(),
+            reply,
+            trace: t.next_id(),
+            root_span: t.next_id(),
+        }
+    }
+
     pub fn batch_key(&self) -> BatchKey {
         (self.kernel.clone(), self.grid)
     }
@@ -115,7 +142,15 @@ fn worker_loop(
     while let Some(((kernel, grid), batch)) = queue.pop_batch(max_batch) {
         service.counters.observe_batch(batch.len());
         let batch_len = batch.len();
-        match service.plan(&kernel, device, grid) {
+        // The batch pays planning once; its spans (cache lookup, tunedb
+        // query, tuner search, plan compile) nest under the *lead*
+        // request's trace.
+        let planned = {
+            let _plan_span = (batch[0].trace != 0)
+                .then(|| obs::span_under(batch[0].trace, batch[0].root_span, "serve.plan"));
+            service.plan(&kernel, device, grid)
+        };
+        match planned {
             Err(e) => {
                 let msg = e.to_string();
                 for req in batch {
@@ -124,8 +159,13 @@ fn worker_loop(
             }
             Ok(entry) => {
                 for req in batch {
+                    let _exec_span = (req.trace != 0)
+                        .then(|| obs::span_under(req.trace, req.root_span, "serve.execute"));
                     let result = match service.exec_mode() {
-                        ExecMode::Simulate => Ok(entry.est_seconds),
+                        ExecMode::Simulate => {
+                            let _g = obs::span("exec.simulate");
+                            Ok(entry.est_seconds)
+                        }
                         // Real execution prefers the PJRT artifact path
                         // (`--features xla` + artifacts present) and
                         // falls back to the NDRange interpreter.
@@ -134,6 +174,7 @@ fn worker_loop(
                         {
                             Some(secs) => Ok(secs),
                             None => {
+                                let _g = obs::span("exec.run");
                                 let mut args = bench_defs::workload(
                                     &kernel, grid.0, grid.1, req.seed,
                                 );
@@ -153,6 +194,7 @@ fn worker_loop(
                             }
                         },
                     };
+                    drop(_exec_span);
                     respond(req, device, result, batch_len);
                 }
             }
@@ -166,11 +208,25 @@ fn respond(
     result: Result<f64, String>,
     batch: usize,
 ) {
+    let latency = req.submitted.elapsed();
+    // Record the request's root span BEFORE the reply leaves: a client
+    // that has received a reply can rely on the whole trace (root and
+    // children) being resident in the ring.
+    if req.trace != 0 {
+        obs::record_span(
+            req.trace,
+            req.root_span,
+            0,
+            "request",
+            req.submitted,
+            latency.as_micros() as u64,
+        );
+    }
     let reply = ServeReply {
         kernel: req.kernel,
         device: device.name,
         result,
-        latency: req.submitted.elapsed(),
+        latency,
         batch,
     };
     // A dropped receiver means the client gave up; that is their call.
@@ -187,6 +243,8 @@ pub fn submit_with_retry(
     counters: &Counters,
     mut req: ServeRequest,
 ) -> bool {
+    let _submit_span = (req.trace != 0)
+        .then(|| obs::span_under(req.trace, req.root_span, "serve.submit"));
     let mut rejected = false;
     loop {
         match queue.push(req.batch_key(), req) {
@@ -227,13 +285,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let queue = pool.queue();
         for seed in 0..6 {
-            let req = ServeRequest {
-                kernel: "sobel".to_string(),
-                grid: (32, 32),
-                seed,
-                submitted: Instant::now(),
-                reply: tx.clone(),
-            };
+            let req = ServeRequest::new("sobel", (32, 32), seed, tx.clone());
             assert!(submit_with_retry(&queue, &service.counters, req));
         }
         let replies: Vec<ServeReply> = (0..6).map(|_| rx.recv().unwrap()).collect();
@@ -260,13 +312,7 @@ mod tests {
         });
         let pool = DevicePool::start(&INTEL_I7, service.clone(), 1, 4, 4);
         let (tx, rx) = mpsc::channel();
-        let req = ServeRequest {
-            kernel: "bogus".to_string(),
-            grid: (16, 16),
-            seed: 0,
-            submitted: Instant::now(),
-            reply: tx,
-        };
+        let req = ServeRequest::new("bogus", (16, 16), 0, tx);
         assert!(submit_with_retry(&pool.queue(), &service.counters, req));
         let reply = rx.recv().unwrap();
         assert!(reply.result.is_err());

@@ -31,6 +31,7 @@ pub use store::{device_fingerprint, TuneRecord};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::analysis::KernelInfo;
@@ -67,6 +68,25 @@ pub enum Answer {
     Transfer { rec: TuneRecord, distance: f64 },
     /// Nothing usable for this kernel + device.
     Miss,
+}
+
+/// Lifetime activity counters for one knowledge base, published to the
+/// global metrics registry as `imagecl_tunedb_*` by
+/// [`TuneDb::publish_obs`]. Plain atomics outside the index mutex: the
+/// hot lookup path bumps them without extending the critical section.
+#[derive(Default)]
+pub struct DbCounters {
+    /// Lookups answered by an exact-key winner (tier 1).
+    pub lookups_exact: AtomicU64,
+    /// Lookups answered by a nearest-grid transfer seed (tier 2).
+    pub lookups_transfer: AtomicU64,
+    /// Lookups with no same-device knowledge at all.
+    pub lookups_miss: AtomicU64,
+    /// Records appended (winners, history and wall samples alike).
+    pub records_appended: AtomicU64,
+    /// Model (re)trainings actually executed (cache misses in
+    /// [`TuneDb::model_for`], not calls).
+    pub model_refreshes: AtomicU64,
 }
 
 #[derive(Default)]
@@ -136,6 +156,8 @@ impl DbInner {
 pub struct TuneDb {
     path: Option<PathBuf>,
     inner: Mutex<DbInner>,
+    /// Activity counters (see [`DbCounters`]).
+    pub obs: DbCounters,
 }
 
 /// Default knowledge-base path: `<crate>/target/tunedb.tsv` (override
@@ -161,7 +183,11 @@ pub fn grid_distance(a: (usize, usize), b: (usize, usize)) -> f64 {
 impl TuneDb {
     /// In-memory only (no persistence).
     pub fn ephemeral() -> TuneDb {
-        TuneDb { path: None, inner: Mutex::new(DbInner::default()) }
+        TuneDb {
+            path: None,
+            inner: Mutex::new(DbInner::default()),
+            obs: DbCounters::default(),
+        }
     }
 
     /// Backed by `path`; loads any existing file, skipping unusable
@@ -176,7 +202,11 @@ impl TuneDb {
                 inner.index(inner.records.len() - 1);
             }
         }
-        let db = TuneDb { path: Some(path.to_path_buf()), inner: Mutex::new(inner) };
+        let db = TuneDb {
+            path: Some(path.to_path_buf()),
+            inner: Mutex::new(inner),
+            obs: DbCounters::default(),
+        };
         db.compact(HISTORY_CAP_PER_KEY);
         db
     }
@@ -242,6 +272,7 @@ impl TuneDb {
         if recs.is_empty() {
             return;
         }
+        self.obs.records_appended.fetch_add(recs.len() as u64, Ordering::Relaxed);
         // Disk append happens under the same lock as the in-memory index
         // so an in-process `compact()` (which rewrites the file) can
         // never race a concurrent append and erase it from disk.
@@ -390,11 +421,14 @@ impl TuneDb {
     /// [`TuneDb::model_for`].
     pub fn lookup(&self, kernel: &str, device: &str, grid: (usize, usize)) -> Answer {
         if let Some(rec) = self.exact(kernel, device, grid) {
+            self.obs.lookups_exact.fetch_add(1, Ordering::Relaxed);
             return Answer::Exact(rec);
         }
         if let Some((rec, distance)) = self.nearest_grid(kernel, device, grid) {
+            self.obs.lookups_transfer.fetch_add(1, Ordering::Relaxed);
             return Answer::Transfer { rec, distance };
         }
+        self.obs.lookups_miss.fetch_add(1, Ordering::Relaxed);
         Answer::Miss
     }
 
@@ -443,6 +477,7 @@ impl TuneDb {
             (idxs.len(), records)
         };
         let refs: Vec<&TuneRecord> = records.iter().collect();
+        self.obs.model_refreshes.fetch_add(1, Ordering::Relaxed);
         let model = PerfModel::train(kernel, &refs).map(Arc::new);
         // Concurrent trainers race benignly: last insert wins, and a
         // stale stamp just means a lazy retrain on the next call. Failed
@@ -468,6 +503,54 @@ impl TuneDb {
         let pixels = (grid.0 * grid.1).max(1) as f64;
         let rec_pixels = (rec.grid.0 * rec.grid.1).max(1) as f64;
         Some(rec.seconds * pixels / rec_pixels)
+    }
+
+    /// Publish this knowledge base's state into the global metrics
+    /// registry as `imagecl_tunedb_*`. Counters publish via
+    /// max-absolute (idempotent re-publish); sizes are gauges because
+    /// compaction shrinks them.
+    pub fn publish_obs(&self) {
+        let reg = crate::obs::registry();
+        let counters: [(&str, &str, &AtomicU64); 5] = [
+            (
+                "imagecl_tunedb_lookups_exact_total",
+                "Lookups answered by an exact-key winner (tier 1)",
+                &self.obs.lookups_exact,
+            ),
+            (
+                "imagecl_tunedb_lookups_transfer_total",
+                "Lookups answered by a nearest-grid transfer seed (tier 2)",
+                &self.obs.lookups_transfer,
+            ),
+            (
+                "imagecl_tunedb_lookups_miss_total",
+                "Lookups with no same-device knowledge",
+                &self.obs.lookups_miss,
+            ),
+            (
+                "imagecl_tunedb_records_appended_total",
+                "Records appended to the knowledge base",
+                &self.obs.records_appended,
+            ),
+            (
+                "imagecl_tunedb_model_refreshes_total",
+                "Performance-model trainings executed",
+                &self.obs.model_refreshes,
+            ),
+        ];
+        for (name, help, v) in counters {
+            reg.counter(name, help, &[]).set_max(v.load(Ordering::Relaxed));
+        }
+        reg.gauge("imagecl_tunedb_records", "Records currently held", &[])
+            .set(self.len() as f64);
+        reg.gauge("imagecl_tunedb_winners", "Winner records currently held", &[])
+            .set(self.best_len() as f64);
+        reg.gauge(
+            "imagecl_tunedb_wall_records",
+            "Real-execution wall records currently held",
+            &[],
+        )
+        .set(self.wall_len() as f64);
     }
 
     /// Migration shim: import a legacy PR-1 warm-start TSV
@@ -522,6 +605,22 @@ mod tests {
             config,
             features: vec![6.0, 2.0],
         }
+    }
+
+    #[test]
+    fn db_counters_track_lookups_and_appends() {
+        let db = TuneDb::ephemeral();
+        let _ = db.lookup("sobel", K40.name, (64, 64)); // miss
+        db.record(rec("sobel", &K40, 32, 1e-4, true));
+        let _ = db.lookup("sobel", K40.name, (64, 64)); // transfer
+        db.record(rec("sobel", &K40, 64, 1e-4, true));
+        let _ = db.lookup("sobel", K40.name, (64, 64)); // exact
+        assert_eq!(db.obs.lookups_miss.load(Ordering::Relaxed), 1);
+        assert_eq!(db.obs.lookups_transfer.load(Ordering::Relaxed), 1);
+        assert_eq!(db.obs.lookups_exact.load(Ordering::Relaxed), 1);
+        assert_eq!(db.obs.records_appended.load(Ordering::Relaxed), 2);
+        // Publishing registers the family set without panicking.
+        db.publish_obs();
     }
 
     #[test]

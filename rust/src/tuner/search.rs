@@ -7,6 +7,7 @@
 //! best *measured* configuration. Exhaustive and pure-random search are
 //! provided as baselines and for tests.
 
+use crate::obs;
 use crate::testutil::Rng;
 use crate::transform::TuningConfig;
 
@@ -46,6 +47,27 @@ fn timed_eval(
     t
 }
 
+/// Record one finished search into the metrics registry: the measured
+/// candidate count and the evaluator wall time, labeled by strategy.
+/// One registry access per *search* (not per eval) keeps the overhead
+/// off the evaluation loop.
+fn observe_search(strategy: &'static str, evals: u64, wall_secs: f64) {
+    let reg = obs::registry();
+    let labels = [("strategy", strategy)];
+    reg.counter(
+        "imagecl_tuner_evals_total",
+        "Candidate evaluations executed by the tuner",
+        &labels,
+    )
+    .add(evals);
+    reg.histogram(
+        "imagecl_tuner_search_wall_us",
+        "Evaluator wall time per tuning search, microseconds",
+        &labels,
+    )
+    .observe((wall_secs * 1e6) as u64);
+}
+
 /// Options for the ML two-phase search. Defaults mirror the paper's §7
 /// tuning-cost discussion (~1700 executed candidates per device/benchmark).
 #[derive(Debug, Clone, PartialEq)]
@@ -78,6 +100,7 @@ pub fn exhaustive(
     space: &TuningSpace,
     mut eval: impl FnMut(&TuningConfig) -> f64,
 ) -> TuneResult {
+    let _span = obs::span("tune.exhaustive");
     let mut best: Option<(TuningConfig, f64)> = None;
     let mut evals = 0;
     let mut wall = 0.0;
@@ -88,6 +111,7 @@ pub fn exhaustive(
             best = Some((cfg.clone(), t));
         }
     }
+    observe_search("exhaustive", evals as u64, wall);
     let (best, best_time) = best.expect("space contained no valid config");
     TuneResult {
         best,
@@ -106,6 +130,7 @@ pub fn random(
     seed: u64,
     mut eval: impl FnMut(&TuningConfig) -> f64,
 ) -> TuneResult {
+    let _span = obs::span("tune.random");
     let mut rng = Rng::new(seed);
     let mut best: Option<(TuningConfig, f64)> = None;
     let mut history = Vec::new();
@@ -118,6 +143,7 @@ pub fn random(
             best = Some((cfg, t));
         }
     }
+    observe_search("random", n as u64, wall);
     let (best, best_time) = best.expect("random search found no valid config");
     TuneResult { best, best_time, evals: n, space_size: space.len(), history, wall_secs: wall }
 }
@@ -138,6 +164,7 @@ pub fn seeded(
     mut eval: impl FnMut(&TuningConfig) -> f64,
 ) -> TuneResult {
     assert!(!space.is_empty());
+    let _span = obs::span("tune.seeded");
     let budget = budget.max(1);
     let sf = fm.features(seed);
     let dist2 = |cfg: &TuningConfig| -> f64 {
@@ -171,6 +198,7 @@ pub fn seeded(
             best = Some((cfg.clone(), t));
         }
     }
+    observe_search("seeded", evals as u64, wall);
     match best {
         Some((best, best_time)) => TuneResult {
             best,
@@ -199,6 +227,7 @@ pub fn shortlist(
     candidates: &[TuningConfig],
     mut eval: impl FnMut(&TuningConfig) -> f64,
 ) -> Option<TuneResult> {
+    let _span = obs::span("tune.shortlist");
     let mut best: Option<(TuningConfig, f64)> = None;
     let mut history = Vec::new();
     let mut wall = 0.0;
@@ -209,6 +238,7 @@ pub fn shortlist(
             best = Some((cfg.clone(), t));
         }
     }
+    observe_search("shortlist", candidates.len() as u64, wall);
     let (best, best_time) = best?;
     Some(TuneResult {
         best,
@@ -228,6 +258,7 @@ pub fn ml_two_phase(
     mut eval: impl FnMut(&TuningConfig) -> f64,
 ) -> TuneResult {
     assert!(!space.is_empty());
+    let _span = obs::span("tune.ml");
     let mut rng = Rng::new(opts.seed);
     let n = space.len();
     let mut history: Vec<(TuningConfig, f64)> = Vec::new();
@@ -249,15 +280,18 @@ pub fn ml_two_phase(
     let mut ys: Vec<f64> = Vec::new();
     let mut best: Option<(TuningConfig, f64)> = None;
     let mut wall = 0.0;
-    for &i in &sample_idx {
-        let cfg = &space.configs[i];
-        let t = timed_eval(&mut eval, cfg, &mut wall);
-        history.push((cfg.clone(), t));
-        if t.is_finite() {
-            xs.push(fm.features(cfg));
-            ys.push(t.log10());
-            if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
-                best = Some((cfg.clone(), t));
+    {
+        let _p1 = obs::span("tune.ml.sample");
+        for &i in &sample_idx {
+            let cfg = &space.configs[i];
+            let t = timed_eval(&mut eval, cfg, &mut wall);
+            history.push((cfg.clone(), t));
+            if t.is_finite() {
+                xs.push(fm.features(cfg));
+                ys.push(t.log10());
+                if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
+                    best = Some((cfg.clone(), t));
+                }
             }
         }
     }
@@ -266,6 +300,7 @@ pub fn ml_two_phase(
     // Degenerate spaces: nothing valid in the sample → fall back to
     // scanning everything.
     if xs.len() < 8 {
+        observe_search("ml_two_phase", evals as u64, wall);
         let mut res = exhaustive(space, eval);
         res.evals += evals;
         res.wall_secs += wall;
@@ -274,9 +309,13 @@ pub fn ml_two_phase(
 
     // Train the ANN performance model on log-times.
     let mut nn = Mlp::new(fm.dim(), &opts.hidden, opts.seed ^ 0x51E9);
-    nn.fit(&xs, &ys, opts.epochs, opts.seed ^ 0x77);
+    {
+        let _train = obs::span("tune.ml.train");
+        nn.fit(&xs, &ys, opts.epochs, opts.seed ^ 0x77);
+    }
 
     // Phase 2: predict the whole space, execute the top-k predictions.
+    let _p2 = obs::span("tune.ml.rank");
     let mut scored: Vec<(usize, f64)> = (0..n)
         .map(|i| (i, nn.predict(&fm.features(&space.configs[i]))))
         .collect();
@@ -299,6 +338,7 @@ pub fn ml_two_phase(
             best = Some((cfg.clone(), t));
         }
     }
+    observe_search("ml_two_phase", evals as u64, wall);
 
     let (best, best_time) = best.expect("ML search found no valid config");
     TuneResult { best, best_time, evals, space_size: n, history, wall_secs: wall }

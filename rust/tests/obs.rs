@@ -1,0 +1,159 @@
+//! Observability integration: a serving burst must leave complete
+//! traces in the span ring, a lintable Prometheus export in the metrics
+//! registry, and coherent execution-tier profiler coverage.
+//!
+//! One test function drives everything: the tracer, registry and
+//! profiler are process globals, so splitting the assertions across
+//! parallel `#[test]`s would race their contents.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use imagecl::devices::INTEL_I7;
+use imagecl::exec::profile;
+use imagecl::obs;
+use imagecl::serve::worker::submit_with_retry;
+use imagecl::serve::{
+    DevicePool, ExecMode, KernelService, ServeReply, ServeRequest, ServiceConfig,
+};
+use imagecl::tuner::Strategy;
+
+fn real_service() -> Arc<KernelService> {
+    KernelService::new(ServiceConfig {
+        strategy: Strategy::Random { evals: 20, seed: 9 },
+        db_path: None,
+        legacy_tsv: None,
+        exec: ExecMode::Real,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+    })
+}
+
+/// Drive `n` real-execution requests through a fresh pool, returning
+/// their trace IDs (replies are asserted OK).
+fn burst(service: &Arc<KernelService>, n: u64) -> Vec<u64> {
+    let pool = DevicePool::start(&INTEL_I7, service.clone(), 2, 16, 4);
+    let (tx, rx) = mpsc::channel();
+    let queue = pool.queue();
+    let mut traces = Vec::new();
+    for seed in 0..n {
+        let kernel = if seed % 2 == 0 { "sobel" } else { "sepconv_row" };
+        let req = ServeRequest::new(kernel, (16, 16), seed, tx.clone());
+        traces.push(req.trace);
+        assert!(submit_with_retry(&queue, &service.counters, req));
+    }
+    let replies: Vec<ServeReply> = (0..n).map(|_| rx.recv().unwrap()).collect();
+    assert!(replies.iter().all(ServeReply::is_ok));
+    pool.shutdown();
+    traces
+}
+
+/// Counter sample values from a Prometheus text export, keyed by the
+/// full series (name + rendered labels).
+fn counter_values(text: &str) -> BTreeMap<String, f64> {
+    let mut counters = BTreeSet::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            if let (Some(name), Some("counter")) = (it.next(), it.next()) {
+                counters.insert(name.to_string());
+            }
+        }
+    }
+    let mut vals = BTreeMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let Some((series, val)) = line.rsplit_once(' ') else { continue };
+        let base = series.split('{').next().unwrap_or(series);
+        if counters.contains(base) {
+            if let Ok(v) = val.trim().parse::<f64>() {
+                vals.insert(series.to_string(), v);
+            }
+        }
+    }
+    vals
+}
+
+#[test]
+fn burst_yields_traces_lintable_export_and_coherent_profile() {
+    let service = real_service();
+    let traces = burst(&service, 10);
+
+    // (i) Every completed request left a full trace in the ring: one
+    // root span named "request" (recorded before the reply was sent)
+    // plus at least serve.submit, serve.execute and the exec.* leaf.
+    let snap = obs::tracer().snapshot();
+    for &trace in &traces {
+        let spans: Vec<_> = snap.iter().filter(|s| s.trace == trace).collect();
+        let roots: Vec<_> = spans.iter().filter(|s| s.parent == 0).collect();
+        assert_eq!(roots.len(), 1, "trace {trace} has {} roots", roots.len());
+        assert_eq!(roots[0].name, "request");
+        let children = spans.len() - 1;
+        assert!(
+            children >= 3,
+            "trace {trace} has only {children} child spans: \
+             {:?}",
+            spans.iter().map(|s| s.name).collect::<Vec<_>>()
+        );
+    }
+    // The batch leads' planning path produced the deep spans somewhere.
+    for name in ["serve.plan", "serve.cache", "tunedb.query", "tune.search"] {
+        assert!(snap.iter().any(|s| s.name == name), "no {name} span recorded");
+    }
+
+    // (ii) The Prometheus export passes the in-repo linter and covers
+    // every instrumented subsystem.
+    service.publish_obs();
+    let text1 = obs::export::prometheus();
+    let (families, samples) =
+        obs::export::lint_prometheus(&text1).expect("export must lint clean");
+    assert!(families > 0 && samples >= families);
+    for needle in
+        ["imagecl_serve_", "imagecl_tunedb_", "imagecl_tuner_", "imagecl_exec_"]
+    {
+        assert!(text1.contains(needle), "export missing {needle} metrics");
+    }
+    // Counters are monotone across sequential exports.
+    let counters1 = counter_values(&text1);
+    assert!(!counters1.is_empty());
+    burst(&service, 6);
+    service.publish_obs();
+    let text2 = obs::export::prometheus();
+    obs::export::lint_prometheus(&text2).expect("second export must lint clean");
+    let counters2 = counter_values(&text2);
+    for (series, v1) in &counters1 {
+        let v2 = counters2
+            .get(series)
+            .unwrap_or_else(|| panic!("counter {series} vanished"));
+        assert!(v2 >= v1, "counter {series} went backwards: {v1} -> {v2}");
+    }
+
+    // (iii) Tier-profiler coverage is coherent: per plan, the batched
+    // and scalar row fractions sum to at most 1.0, and utilization is a
+    // ratio.
+    let profiles = profile::profiler().snapshot();
+    assert!(!profiles.is_empty(), "real execution must populate the profiler");
+    for (key, p) in &profiles {
+        let cover = p.batched_frac() + p.scalar_frac();
+        assert!(
+            cover <= 1.0 + 1e-9,
+            "plan {}@{} coverage {cover} exceeds 1.0",
+            key.kernel,
+            key.device
+        );
+        assert!(p.utilization() <= 1.0 + 1e-9);
+    }
+    assert!(profiles.iter().any(|(_, p)| p.total_runs() > 0));
+}
+
+#[test]
+fn linter_rejects_duplicate_series_and_unlabeled_buckets() {
+    let dup = "# TYPE imagecl_a_total counter\nimagecl_a_total 1\nimagecl_a_total 2\n";
+    assert!(obs::export::lint_prometheus(dup).is_err());
+    let nolabel = "# TYPE imagecl_h histogram\nimagecl_h_bucket 1\n";
+    assert!(obs::export::lint_prometheus(nolabel).is_err());
+}
