@@ -78,6 +78,7 @@ fn main() {
         queue_cap: 256,
         max_batch: 32,
         workers_per_device: 2,
+        obs_addr: None,
     };
     let report = imagecl::serve::run_loadgen(service, &opts).unwrap();
     let cached_per_req = report.wall.as_secs_f64() / report.completed.max(1) as f64;

@@ -156,11 +156,20 @@ pub fn by_id(id: &str) -> Option<&'static Benchmark> {
     ALL.iter().find(|b| b.id == id)
 }
 
+/// Look up a servable kernel by id: the paper benchmarks first, then
+/// the example-gallery kernels (blur, threshold, ...) so `imagecl
+/// serve`/`stats` can exercise the full built-in set.
 pub fn kernel_by_id(id: &str) -> Option<KernelDef> {
     ALL.iter()
         .flat_map(|b| b.kernels.iter())
         .find(|k| k.id == id)
         .copied()
+        .or_else(|| {
+            gallery::GALLERY
+                .iter()
+                .find(|(n, _)| *n == id)
+                .map(|&(n, src)| KernelDef { id: n, table_name: n, source: src })
+        })
 }
 
 /// A normalized 5-tap Gaussian-ish filter.
@@ -250,7 +259,12 @@ pub fn workload(kernel_id: &str, w: usize, h: usize, seed: u64) -> BTreeMap<Stri
                 Arg::Image(ImageBuf::new(ScalarType::F32, w, h)),
             );
         }
-        other => panic!("unknown kernel id {other:?}"),
+        other => {
+            if gallery::gallery_source(other).is_some() {
+                return gallery::gallery_workload(other, w, h, seed);
+            }
+            panic!("unknown kernel id {other:?}")
+        }
     }
     args
 }
@@ -318,6 +332,16 @@ mod tests {
         assert!(matches!(args["f"], Arg::Array(_)));
         let args = workload("harris", 8, 8, 1);
         assert_eq!(args.len(), 3);
+    }
+
+    #[test]
+    fn gallery_kernels_are_servable_by_id() {
+        let k = kernel_by_id("blur").expect("gallery fallback");
+        assert_eq!(k.id, "blur");
+        let args = workload("blur", 8, 8, 1);
+        assert!(matches!(args["in"], Arg::Image(_)));
+        assert!(kernel_by_id("sepconv_row").is_some(), "paper kernels still resolve");
+        assert!(kernel_by_id("no_such_kernel").is_none());
     }
 
     #[test]

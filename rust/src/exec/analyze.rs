@@ -1,0 +1,368 @@
+//! Bench-history regression analysis: `imagecl bench analyze`.
+//!
+//! Every `imagecl bench` run appends a timestamped report to
+//! `BENCH_exec_history.json` (see [`super::bench`]). This module reads
+//! that history back and asks, per kernel: *is the latest run's
+//! `vm_pix_per_sec` throughput credibly worse than what this machine
+//! has been producing?*
+//!
+//! The detector is deliberately robust rather than clever:
+//!
+//! * The **baseline** is the *median* of up to `window` previous runs
+//!   at the same grid size — medians shrug off the odd run that raced
+//!   a compile job for the CPU.
+//! * The **threshold** is noise-aware: `max(min_rel, 4 * MAD/median)`,
+//!   where MAD is the median absolute deviation of the baseline runs.
+//!   A quiet history tightens toward `min_rel` (default 30%); a noisy
+//!   CI host widens its own bar instead of crying wolf.
+//! * Fewer than `min_runs` prior runs at this size → *insufficient
+//!   history*, which **passes**: a fresh clone must not fail its first
+//!   CI run.
+//!
+//! The verdict is machine-readable ([`Analysis::to_json`]) and the CLI
+//! exits nonzero on any regression, which is the whole CI contract.
+
+use std::path::PathBuf;
+
+use crate::jsonlite::{self, Json};
+
+/// Analyzer knobs (CLI: `--history`, `--window`, `--min-runs`,
+/// `--threshold`).
+#[derive(Debug, Clone)]
+pub struct AnalyzeOpts {
+    /// Path to `BENCH_exec_history.json`.
+    pub history: PathBuf,
+    /// Max previous runs forming the baseline.
+    pub window: usize,
+    /// Minimum previous runs before verdicts are rendered at all.
+    pub min_runs: usize,
+    /// Floor on the relative-drop threshold (0.30 = 30%).
+    pub min_rel: f64,
+}
+
+impl Default for AnalyzeOpts {
+    fn default() -> AnalyzeOpts {
+        AnalyzeOpts {
+            history: super::bench::default_history_path(),
+            window: 8,
+            min_runs: 3,
+            min_rel: 0.30,
+        }
+    }
+}
+
+/// Per-kernel verdict.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Pass,
+    Regressed,
+    /// Not enough same-size history to judge (counts as a pass).
+    InsufficientHistory,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::InsufficientHistory => "insufficient-history",
+        }
+    }
+}
+
+/// One kernel's analysis row.
+#[derive(Debug, Clone)]
+pub struct KernelAnalysis {
+    pub name: String,
+    /// Latest run's throughput (pixels/second).
+    pub latest: f64,
+    /// Median of the baseline runs (0 when none).
+    pub baseline: f64,
+    /// Baseline runs actually used.
+    pub runs: usize,
+    /// Relative drop vs baseline (positive = slower; 0 when no baseline).
+    pub drop_rel: f64,
+    /// The noise-aware threshold this row was judged against.
+    pub threshold: f64,
+    pub verdict: Verdict,
+}
+
+/// The full analysis over the latest history entry.
+#[derive(Debug, Clone)]
+pub struct Analysis {
+    /// Grid size (n×n) of the latest run — baselines are same-size only.
+    pub size: usize,
+    pub kernels: Vec<KernelAnalysis>,
+}
+
+impl Analysis {
+    /// Kernels whose verdict is [`Verdict::Regressed`].
+    pub fn regressions(&self) -> Vec<&KernelAnalysis> {
+        self.kernels.iter().filter(|k| k.verdict == Verdict::Regressed).collect()
+    }
+
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "bench history analysis (grid {0}x{0})", self.size);
+        let _ = writeln!(
+            s,
+            "{:<14} {:>14} {:>14} {:>5} {:>8} {:>9}  verdict",
+            "kernel", "latest pix/s", "baseline", "runs", "drop", "threshold"
+        );
+        for k in &self.kernels {
+            let _ = writeln!(
+                s,
+                "{:<14} {:>14.3e} {:>14.3e} {:>5} {:>7.1}% {:>8.1}%  {}",
+                k.name,
+                k.latest,
+                k.baseline,
+                k.runs,
+                k.drop_rel * 100.0,
+                k.threshold * 100.0,
+                k.verdict.as_str()
+            );
+        }
+        s
+    }
+
+    /// Machine-readable verdict document for CI.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "{{");
+        let _ = writeln!(s, "  \"size\": [{0}, {0}],", self.size);
+        let _ = writeln!(s, "  \"regressed\": {},", !self.regressions().is_empty());
+        let _ = writeln!(s, "  \"kernels\": [");
+        for (i, k) in self.kernels.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "    {{\"name\": \"{}\", \"latest_pix_per_sec\": {:.1}, \
+                 \"baseline_pix_per_sec\": {:.1}, \"baseline_runs\": {}, \
+                 \"drop_rel\": {:.4}, \"threshold\": {:.4}, \"verdict\": \"{}\"}}{}",
+                k.name.replace('\\', "\\\\").replace('"', "\\\""),
+                k.latest,
+                k.baseline,
+                k.runs,
+                k.drop_rel,
+                k.threshold,
+                k.verdict.as_str(),
+                if i + 1 < self.kernels.len() { "," } else { "" }
+            );
+        }
+        let _ = writeln!(s, "  ]");
+        let _ = writeln!(s, "}}");
+        s
+    }
+}
+
+fn median(sorted: &[f64]) -> f64 {
+    match sorted.len() {
+        0 => 0.0,
+        n if n % 2 == 1 => sorted[n / 2],
+        n => (sorted[n / 2 - 1] + sorted[n / 2]) / 2.0,
+    }
+}
+
+/// One history entry flattened to what the analyzer needs.
+struct Entry {
+    size: usize,
+    /// (kernel name, vm_pix_per_sec), in report order.
+    kernels: Vec<(String, f64)>,
+}
+
+fn parse_entries(doc: &Json) -> Result<Vec<Entry>, String> {
+    let arr = doc.as_arr().ok_or("history root is not an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, item) in arr.iter().enumerate() {
+        let report = item.get("report").ok_or_else(|| format!("entry {i}: no report"))?;
+        let size = report
+            .get("size")
+            .and_then(Json::as_arr)
+            .and_then(|s| s.first())
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("entry {i}: no size"))? as usize;
+        let kernels = report
+            .get("kernels")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("entry {i}: no kernels"))?
+            .iter()
+            .filter_map(|k| {
+                let name = k.get("name")?.as_str()?.to_string();
+                let pps = k.get("vm_pix_per_sec")?.as_f64()?;
+                Some((name, pps))
+            })
+            .collect();
+        out.push(Entry { size, kernels });
+    }
+    Ok(out)
+}
+
+/// Analyze a history document (the text of `BENCH_exec_history.json`).
+/// The last entry is "the run under test"; earlier same-size entries
+/// form the baseline. Exposed for tests; [`run`] is the file-reading
+/// wrapper the CLI calls.
+pub fn analyze_history(text: &str, opts: &AnalyzeOpts) -> Result<Analysis, String> {
+    let doc = jsonlite::parse(text).map_err(|e| format!("history is not JSON: {e}"))?;
+    let entries = parse_entries(&doc)?;
+    let latest = entries.last().ok_or("history is empty")?;
+    let prior: Vec<&Entry> = entries[..entries.len() - 1]
+        .iter()
+        .filter(|e| e.size == latest.size)
+        .collect();
+    let kernels = latest
+        .kernels
+        .iter()
+        .map(|(name, latest_pps)| {
+            // Up to `window` most recent prior observations of this kernel.
+            let mut history: Vec<f64> = prior
+                .iter()
+                .rev()
+                .filter_map(|e| {
+                    e.kernels.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+                })
+                .take(opts.window)
+                .collect();
+            if history.len() < opts.min_runs {
+                return KernelAnalysis {
+                    name: name.clone(),
+                    latest: *latest_pps,
+                    baseline: 0.0,
+                    runs: history.len(),
+                    drop_rel: 0.0,
+                    threshold: opts.min_rel,
+                    verdict: Verdict::InsufficientHistory,
+                };
+            }
+            history.sort_by(|a, b| a.total_cmp(b));
+            let baseline = median(&history);
+            let mut devs: Vec<f64> =
+                history.iter().map(|v| (v - baseline).abs()).collect();
+            devs.sort_by(|a, b| a.total_cmp(b));
+            let mad = median(&devs);
+            let noise_rel = if baseline > 0.0 { 4.0 * mad / baseline } else { 0.0 };
+            let threshold = opts.min_rel.max(noise_rel);
+            let drop_rel =
+                if baseline > 0.0 { 1.0 - latest_pps / baseline } else { 0.0 };
+            let verdict =
+                if drop_rel > threshold { Verdict::Regressed } else { Verdict::Pass };
+            KernelAnalysis {
+                name: name.clone(),
+                latest: *latest_pps,
+                baseline,
+                runs: history.len(),
+                drop_rel,
+                threshold,
+                verdict,
+            }
+        })
+        .collect();
+    Ok(Analysis { size: latest.size, kernels })
+}
+
+/// Read and analyze `opts.history` from disk.
+pub fn run(opts: &AnalyzeOpts) -> Result<Analysis, String> {
+    let text = std::fs::read_to_string(&opts.history)
+        .map_err(|e| format!("cannot read {}: {e}", opts.history.display()))?;
+    analyze_history(&text, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(size: usize, blur_pps: f64, sobel_pps: f64) -> String {
+        format!(
+            "{{\"unix_time\": 0, \"report\": {{\"size\": [{size}, {size}], \
+             \"kernels\": [\
+             {{\"name\": \"blur\", \"vm_pix_per_sec\": {blur_pps}}}, \
+             {{\"name\": \"sobel\", \"vm_pix_per_sec\": {sobel_pps}}}]}}}}"
+        )
+    }
+
+    fn history(entries: &[String]) -> String {
+        format!("[\n{}\n]", entries.join(",\n"))
+    }
+
+    fn opts() -> AnalyzeOpts {
+        AnalyzeOpts {
+            history: PathBuf::new(),
+            window: 8,
+            min_runs: 3,
+            min_rel: 0.30,
+        }
+    }
+
+    #[test]
+    fn steady_history_passes() {
+        let runs: Vec<String> =
+            (0..5).map(|i| entry(128, 1.0e6 + i as f64, 2.0e6)).collect();
+        let a = analyze_history(&history(&runs), &opts()).unwrap();
+        assert_eq!(a.size, 128);
+        assert!(a.regressions().is_empty(), "{}", a.render());
+        assert!(a.kernels.iter().all(|k| k.verdict == Verdict::Pass));
+    }
+
+    #[test]
+    fn injected_2x_regression_is_caught() {
+        // Four steady runs, then blur collapses to half throughput.
+        let mut runs: Vec<String> =
+            (0..4).map(|_| entry(128, 1.0e6, 2.0e6)).collect();
+        runs.push(entry(128, 0.5e6, 2.0e6));
+        let a = analyze_history(&history(&runs), &opts()).unwrap();
+        let reg = a.regressions();
+        assert_eq!(reg.len(), 1, "{}", a.render());
+        assert_eq!(reg[0].name, "blur");
+        assert!((reg[0].drop_rel - 0.5).abs() < 1e-9);
+        // The JSON verdict is machine-readable and flags the run.
+        let v = crate::jsonlite::parse(&a.to_json()).unwrap();
+        assert_eq!(v.get("regressed").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn short_history_is_insufficient_not_failing() {
+        let runs = vec![entry(128, 1.0e6, 2.0e6), entry(128, 0.1e6, 2.0e6)];
+        let a = analyze_history(&history(&runs), &opts()).unwrap();
+        assert!(a.regressions().is_empty());
+        assert!(a
+            .kernels
+            .iter()
+            .all(|k| k.verdict == Verdict::InsufficientHistory));
+    }
+
+    #[test]
+    fn baseline_ignores_other_sizes() {
+        // Plenty of 64×64 history, but only two 128×128 runs: the size
+        // change must not compare across sizes.
+        let mut runs: Vec<String> = (0..6).map(|_| entry(64, 9.0e6, 9.0e6)).collect();
+        runs.push(entry(128, 1.0e6, 2.0e6));
+        runs.push(entry(128, 0.4e6, 2.0e6));
+        let a = analyze_history(&history(&runs), &opts()).unwrap();
+        assert_eq!(a.size, 128);
+        assert!(a
+            .kernels
+            .iter()
+            .all(|k| k.verdict == Verdict::InsufficientHistory));
+    }
+
+    #[test]
+    fn noisy_history_widens_the_threshold() {
+        // Baseline alternates 1.0 / 2.0 Mpix/s (median 1.5, MAD 0.5):
+        // noise threshold 4*0.5/1.5 ≈ 1.33 ⇒ even a 60% drop passes.
+        let mut runs: Vec<String> = (0..6)
+            .map(|i| entry(128, if i % 2 == 0 { 1.0e6 } else { 2.0e6 }, 2.0e6))
+            .collect();
+        runs.push(entry(128, 0.6e6, 2.0e6));
+        let a = analyze_history(&history(&runs), &opts()).unwrap();
+        let blur = a.kernels.iter().find(|k| k.name == "blur").unwrap();
+        assert!(blur.threshold > 1.0, "{}", a.render());
+        assert_eq!(blur.verdict, Verdict::Pass, "{}", a.render());
+    }
+
+    #[test]
+    fn malformed_history_is_an_error() {
+        assert!(analyze_history("not json", &opts()).is_err());
+        assert!(analyze_history("[]", &opts()).is_err());
+        assert!(analyze_history("{\"k\": 1}", &opts()).is_err());
+    }
+}

@@ -235,6 +235,12 @@ pub fn default_report_path() -> PathBuf {
         .join("BENCH_exec.json")
 }
 
+/// Where [`append_history`] accumulates runs for the default report
+/// path — the input `imagecl bench analyze` reads back.
+pub fn default_history_path() -> PathBuf {
+    default_report_path().with_file_name("BENCH_exec_history.json")
+}
+
 /// Extract every image/array payload for the bit-identity check.
 fn payloads(args: &BTreeMap<String, Arg>) -> Vec<(String, Vec<u64>)> {
     args.iter()

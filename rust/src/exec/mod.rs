@@ -30,6 +30,7 @@
 //! against each other and write `BENCH_exec.json` (with a regression
 //! gate: the optimized VM must not lose to the unoptimized VM on blur).
 
+pub mod analyze;
 pub mod bench;
 pub mod buffer;
 pub mod compiled;

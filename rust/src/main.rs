@@ -34,7 +34,12 @@ USAGE:
                 [--grid N] [--exec real|sim] [--queue-cap N] [--max-batch N]
                 [--workers N] [--strategy S] [--db PATH] [--legacy-tsv PATH]
                 [--plan-cache-cap N] [--transfer-budget N] [--predict-budget N]
-                serve synthetic traffic through the plan cache + tunedb
+                [--obs-addr HOST:PORT] [--slo SPEC]
+                serve synthetic traffic through the plan cache + tunedb.
+                --obs-addr serves /metrics /healthz /traces /profile /slo
+                live for the duration of the run (port 0 picks a free
+                port, printed on startup); --slo sets latency objectives,
+                e.g. \"default=100ms,target=0.99,blur=5ms\" (us|ms|s)
   imagecl tunedb stats|export [--db PATH]
   imagecl tunedb query <kernel> [--db PATH] [--device DEV] [--grid N]
   imagecl tunedb train <kernel> [--db PATH]
@@ -46,13 +51,27 @@ USAGE:
                 oracle, unoptimized VM, optimized scalar VM, batched VM);
                 verify bit-identity; write BENCH_exec.json; fail if the
                 optimized VM regressed below the unoptimized VM on blur
+  imagecl bench analyze [--history PATH] [--window N] [--min-runs N]
+                [--threshold F] [--ci]
+                compare the latest BENCH_exec_history.json entry against
+                a median-of-previous-runs baseline with a noise-aware
+                threshold; write BENCH_analysis.json beside the history
+                and exit nonzero on a credible throughput regression
+                (--ci prints the JSON verdict and passes when the
+                history file does not exist yet)
   imagecl stats [--prom|--json] [--traces N] [--requests N] [--grid N]
                 [--kernels a,b] [--exec real|sim] [--lint PATH]
+                [--url http://HOST:PORT] [--chrome PATH]
                 drive a short synthetic burst through the serving stack,
                 then export the metrics registry — Prometheus text
                 (--prom), JSON (--json) or a human summary with recent
-                request traces. --lint PATH instead checks a Prometheus
-                dump with the in-repo parser (the CI gate)
+                request traces and the SLO table. --lint PATH instead
+                checks a Prometheus dump with the in-repo parser (the CI
+                gate). --url fetches /metrics, /traces and /slo from a
+                live --obs-addr server instead of running a local burst.
+                --chrome PATH writes the traces as a Chrome/Perfetto
+                trace-event file (open in chrome://tracing or
+                ui.perfetto.dev)
   imagecl fig6 [--size N]            reproduce Figure 6 (slowdown vs baselines)
   imagecl tables [--size N]          reproduce Tables 2-5 (tuned configurations)
   imagecl pipeline [--size N]        run the Harris pipeline through PJRT
@@ -153,7 +172,7 @@ fn run() -> Result<(), String> {
         return Ok(());
     };
     let switches: &[&str] = match cmd.as_str() {
-        "bench" => &["smoke"],
+        "bench" => &["smoke", "ci"],
         "stats" => &["prom", "json"],
         _ => &[],
     };
@@ -201,6 +220,9 @@ fn run() -> Result<(), String> {
 /// bit-identity check and the `BENCH_exec.json` report (see README
 /// "Execution engine"). `--smoke` is the CI configuration.
 fn cmd_bench(args: &Args) -> Result<(), String> {
+    if args.positional.first().map(String::as_str) == Some("analyze") {
+        return cmd_bench_analyze(args);
+    }
     args.check_known(&["size", "iters", "kernels", "out", "smoke"])?;
     let mut opts = if args.bool_flag("smoke") {
         imagecl::exec::bench::BenchOpts::smoke()
@@ -221,6 +243,58 @@ fn cmd_bench(args: &Args) -> Result<(), String> {
     }
     if let Some(s) = report.blur_opt_speedup() {
         println!("blur speedup (optimized+batched VM vs PR-3 VM): {s:.2}x");
+    }
+    Ok(())
+}
+
+/// `imagecl bench analyze`: the bench-history regression gate — judge
+/// the latest `BENCH_exec_history.json` entry against a robust baseline
+/// of previous same-size runs (see `exec::analyze` for the statistics)
+/// and exit nonzero on a credible regression. `--ci` prints the JSON
+/// verdict and treats a missing history file as a pass (a fresh clone
+/// has no history to regress against).
+fn cmd_bench_analyze(args: &Args) -> Result<(), String> {
+    use imagecl::exec::analyze;
+    args.check_known(&["history", "window", "min-runs", "threshold", "ci"])?;
+    let mut opts = analyze::AnalyzeOpts::default();
+    if let Some(p) = args.flag("history") {
+        opts.history = std::path::PathBuf::from(p);
+    }
+    opts.window = args.usize_flag("window", opts.window)?.max(1);
+    opts.min_runs = args.usize_flag("min-runs", opts.min_runs)?.max(1);
+    if let Some(t) = args.flag("threshold") {
+        opts.min_rel = t
+            .parse::<f64>()
+            .ok()
+            .filter(|v| v.is_finite() && *v > 0.0)
+            .ok_or_else(|| format!("bad --threshold: {t:?} (want a fraction like 0.3)"))?;
+    }
+    let ci = args.bool_flag("ci");
+    if ci && !opts.history.exists() {
+        println!(
+            "no bench history at {} yet — nothing to regress against",
+            opts.history.display()
+        );
+        return Ok(());
+    }
+    let analysis = analyze::run(&opts)?;
+    if ci {
+        print!("{}", analysis.to_json());
+    } else {
+        print!("{}", analysis.render());
+    }
+    let out = opts.history.with_file_name("BENCH_analysis.json");
+    if let Err(e) = std::fs::write(&out, analysis.to_json()) {
+        eprintln!("warning: cannot write {}: {e}", out.display());
+    } else {
+        eprintln!("wrote {}", out.display());
+    }
+    let regs = analysis.regressions();
+    if !regs.is_empty() {
+        return Err(format!(
+            "performance regression in {} (vs median of previous runs)",
+            regs.iter().map(|k| k.name.as_str()).collect::<Vec<_>>().join(", ")
+        ));
     }
     Ok(())
 }
@@ -373,7 +447,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "plan-cache-cap",
         "transfer-budget",
         "predict-budget",
+        "obs-addr",
+        "slo",
     ])?;
+    if let Some(spec) = args.flag("slo") {
+        imagecl::obs::slo::engine()
+            .configure(imagecl::obs::slo::SloSpec::parse(spec)?);
+    }
     let mut opts = serve::LoadGenOpts {
         requests: args.usize_flag("requests", 1000)?,
         concurrency: args.usize_flag("concurrency", 8)?,
@@ -383,6 +463,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         workers_per_device: args.usize_flag("workers", 2)?,
         ..Default::default()
     };
+    opts.obs_addr = args.flag("obs-addr").map(String::from);
     if let Some(list) = args.flag("kernels") {
         opts.kernels = list.split(',').filter(|k| !k.is_empty()).map(String::from).collect();
         for k in &opts.kernels {
@@ -454,6 +535,11 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     // Loadgen published the metrics registry on completion; the
     // tier-profiler table explains where the execution time went.
     print!("{}", imagecl::exec::profile::profiler().render());
+    let slo = imagecl::obs::slo::engine().report();
+    if !slo.kernels.is_empty() {
+        println!("SLO attainment (target {:.2}%):", slo.target * 100.0);
+        print!("{}", slo.render());
+    }
     if report.errors > 0 {
         return Err(format!("{} requests failed", report.errors));
     }
@@ -470,6 +556,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 fn cmd_stats(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "prom", "json", "traces", "lint", "requests", "grid", "kernels", "exec",
+        "url", "chrome",
     ])?;
     if let Some(path) = args.flag("lint") {
         let text = std::fs::read_to_string(path)
@@ -482,6 +569,9 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
         return Err("--prom and --json are mutually exclusive".to_string());
     }
     let traces = args.usize_flag("traces", 3)?;
+    if let Some(url) = args.flag("url") {
+        return stats_from_url(args, url, traces);
+    }
     let mut opts = serve::LoadGenOpts {
         requests: args.usize_flag("requests", 32)?,
         concurrency: 4,
@@ -517,6 +607,11 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
         predict_budget: 0,
     });
     let report = serve::run_loadgen(service, &opts).map_err(|e| e.to_string())?;
+    if let Some(path) = args.flag("chrome") {
+        let doc = imagecl::obs::export::chrome_trace(traces.max(16));
+        std::fs::write(path, &doc).map_err(|e| format!("cannot write {path:?}: {e}"))?;
+        println!("wrote Chrome trace to {path} (open in chrome://tracing)");
+    }
     if args.bool_flag("prom") {
         print!("{}", imagecl::obs::export::prometheus());
     } else if args.bool_flag("json") {
@@ -524,12 +619,58 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
     } else {
         print!("{}", report.render());
         print!("{}", imagecl::exec::profile::profiler().render());
+        let slo = imagecl::obs::slo::engine().report();
+        if !slo.kernels.is_empty() {
+            println!("SLO attainment (target {:.2}%):", slo.target * 100.0);
+            print!("{}", slo.render());
+        }
         if traces > 0 {
             print!("{}", imagecl::obs::export::render_traces(traces));
         }
     }
     if report.errors > 0 {
         return Err(format!("{} requests failed", report.errors));
+    }
+    Ok(())
+}
+
+/// `imagecl stats --url`: read a live `--obs-addr` server instead of
+/// running a local burst — `--prom` relays `/metrics` verbatim,
+/// `--chrome PATH` saves `/traces?format=chrome`, and the default
+/// summary prints linted `/metrics` counts, `/slo` and the trace trees.
+fn stats_from_url(args: &Args, url: &str, traces: usize) -> Result<(), String> {
+    use imagecl::obs::http::http_get;
+    let base = url.trim_end_matches('/');
+    let fetch = |path: &str| -> Result<String, String> {
+        let (status, body) = http_get(&format!("{base}{path}"))?;
+        if status != 200 {
+            return Err(format!("GET {base}{path} -> HTTP {status}"));
+        }
+        Ok(body)
+    };
+    if args.bool_flag("json") {
+        return Err("--json is not supported with --url (use --prom or the summary)"
+            .to_string());
+    }
+    if let Some(path) = args.flag("chrome") {
+        let doc = fetch(&format!("/traces?format=chrome&traces={}", traces.max(16)))?;
+        std::fs::write(path, &doc).map_err(|e| format!("cannot write {path:?}: {e}"))?;
+        println!("wrote Chrome trace from {base} to {path}");
+        return Ok(());
+    }
+    let metrics = fetch("/metrics")?;
+    if args.bool_flag("prom") {
+        print!("{metrics}");
+        return Ok(());
+    }
+    let (families, samples) = imagecl::obs::export::lint_prometheus(&metrics)?;
+    println!("{base}/metrics: OK — {families} metric families, {samples} samples");
+    println!("{base}/healthz: {}", fetch("/healthz")?.trim_end());
+    println!("{base}/slo:");
+    print!("{}", fetch("/slo")?);
+    if traces > 0 {
+        println!("{base}/traces:");
+        print!("{}", fetch(&format!("/traces?format=tree&traces={traces}"))?);
     }
     Ok(())
 }

@@ -17,8 +17,29 @@ fn with_le(labels: &str, le: &str) -> String {
     }
 }
 
+/// Publish the observability layer's own silent-loss signals into the
+/// registry (monotone via `set_max`): span-ring overwrites and
+/// histogram top-octave clamps. Called by every exporter so a scrape
+/// always carries fresh values.
+fn publish_self_metrics() {
+    let reg = registry();
+    reg.counter(
+        "imagecl_obs_trace_drops_total",
+        "Span records evicted by ring overwrite before export",
+        &[],
+    )
+    .set_max(tracer().drops());
+    reg.counter(
+        "imagecl_obs_hist_clamped_total",
+        "Histogram observations in the saturating top octave",
+        &[],
+    )
+    .set_max(super::metrics::hist_clamped_total());
+}
+
 /// Render the whole registry in Prometheus text exposition format.
 pub fn prometheus() -> String {
+    publish_self_metrics();
     let mut s = String::new();
     for fam in registry().snapshot() {
         let _ = writeln!(s, "# HELP {} {}", fam.name, fam.help);
@@ -87,10 +108,55 @@ fn percentile_of(buckets: &[(u64, u64)], count: u64, q: f64) -> u64 {
     buckets.last().map(|(u, _)| *u).unwrap_or(0)
 }
 
+/// Write the `n` most recent complete traces as a JSON array at the
+/// given base indentation (shared by [`json`] and [`traces_json`]).
+fn write_trace_array(s: &mut String, n: usize, pad: &str) {
+    let _ = writeln!(s, "{pad}[");
+    let grouped = group_traces(&tracer().snapshot(), n);
+    for (ti, (trace, spans)) in grouped.iter().enumerate() {
+        let _ = writeln!(s, "{pad}  {{");
+        let _ = writeln!(s, "{pad}    \"trace\": {trace},");
+        let _ = writeln!(s, "{pad}    \"spans\": [");
+        for (si, r) in spans.iter().enumerate() {
+            let _ = writeln!(
+                s,
+                "{pad}      {{\"span\": {}, \"parent\": {}, \"name\": \"{}\", \
+                 \"detail\": \"{}\", \"tid\": {}, \"device\": \"{}\", \
+                 \"start_us\": {}, \"dur_us\": {}}}{}",
+                r.span,
+                r.parent,
+                json_escape(r.name),
+                json_escape(r.detail),
+                r.tid,
+                json_escape(r.device),
+                r.start_us,
+                r.dur_us,
+                if si + 1 < spans.len() { "," } else { "" }
+            );
+        }
+        let _ = writeln!(s, "{pad}    ]");
+        let _ = writeln!(s, "{pad}  }}{}", if ti + 1 < grouped.len() { "," } else { "" });
+    }
+    let _ = writeln!(s, "{pad}]");
+}
+
+/// The `n` most recent complete traces as a standalone JSON document
+/// (`{"traces": [...]}`) — the `/traces` endpoint's default payload.
+pub fn traces_json(n: usize) -> String {
+    publish_self_metrics();
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "  \"traces\":");
+    write_trace_array(&mut s, n, "  ");
+    let _ = writeln!(s, "}}");
+    s
+}
+
 /// Render the registry plus the `traces` most recent complete traces
 /// as structured JSON (hand-rolled — the offline crate set has no
 /// serde).
 pub fn json(traces: usize) -> String {
+    publish_self_metrics();
     let mut s = String::new();
     let _ = writeln!(s, "{{");
     let _ = writeln!(s, "  \"metrics\": [");
@@ -138,29 +204,72 @@ pub fn json(traces: usize) -> String {
         let _ = writeln!(s, "    }}{}", if fi + 1 < fams.len() { "," } else { "" });
     }
     let _ = writeln!(s, "  ],");
-    let _ = writeln!(s, "  \"traces\": [");
-    let grouped = group_traces(&tracer().snapshot(), traces);
-    for (ti, (trace, spans)) in grouped.iter().enumerate() {
-        let _ = writeln!(s, "    {{");
-        let _ = writeln!(s, "      \"trace\": {trace},");
-        let _ = writeln!(s, "      \"spans\": [");
-        for (si, r) in spans.iter().enumerate() {
-            let _ = writeln!(
-                s,
-                "        {{\"span\": {}, \"parent\": {}, \"name\": \"{}\", \
-                 \"start_us\": {}, \"dur_us\": {}}}{}",
-                r.span,
-                r.parent,
-                json_escape(r.name),
-                r.start_us,
-                r.dur_us,
-                if si + 1 < spans.len() { "," } else { "" }
-            );
-        }
-        let _ = writeln!(s, "      ]");
-        let _ = writeln!(s, "    }}{}", if ti + 1 < grouped.len() { "," } else { "" });
+    let _ = writeln!(s, "  \"traces\":");
+    write_trace_array(&mut s, traces, "  ");
+    let _ = writeln!(s, "}}");
+    s
+}
+
+/// Export the `n` most recent complete traces in the Chrome/Perfetto
+/// trace-event format (`chrome://tracing`, <https://ui.perfetto.dev>).
+///
+/// Mapping: each *device* becomes a process (pid), each recording
+/// *thread* a tid within it, and every span renders as an "X"
+/// (complete) event with `ts`/`dur` in microseconds and args carrying
+/// the span/trace IDs plus the kernel id for request roots. Metadata
+/// ("M") events name the processes and threads so the viewer shows
+/// device/worker labels instead of bare numbers.
+pub fn chrome_trace(n: usize) -> String {
+    let grouped = group_traces(&tracer().snapshot(), n);
+    // Stable pid per device: sorted distinct names, pid = index + 1.
+    let devices: BTreeSet<&'static str> =
+        grouped.iter().flat_map(|(_, spans)| spans.iter().map(|r| r.device)).collect();
+    let pid_of: BTreeMap<&'static str, u64> =
+        devices.iter().enumerate().map(|(i, d)| (*d, i as u64 + 1)).collect();
+    let mut events: Vec<String> = Vec::new();
+    for (device, pid) in &pid_of {
+        let label = if device.is_empty() { "host" } else { device };
+        events.push(format!(
+            "  {{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": 0, \
+             \"args\": {{\"name\": \"{}\"}}}}",
+            json_escape(label)
+        ));
     }
-    let _ = writeln!(s, "  ]");
+    let mut named_tids: BTreeSet<(u64, u64)> = BTreeSet::new();
+    let mut spans: Vec<&SpanRecord> =
+        grouped.iter().flat_map(|(_, spans)| spans.iter()).collect();
+    spans.sort_by_key(|r| (r.start_us, r.span));
+    for r in &spans {
+        let pid = pid_of[r.device];
+        if named_tids.insert((pid, r.tid)) {
+            events.push(format!(
+                "  {{\"name\": \"thread_name\", \"ph\": \"M\", \"pid\": {pid}, \
+                 \"tid\": {}, \"args\": {{\"name\": \"thread-{}\"}}}}",
+                r.tid, r.tid
+            ));
+        }
+        events.push(format!(
+            "  {{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \
+             \"pid\": {pid}, \"tid\": {}, \"cat\": \"imagecl\", \
+             \"args\": {{\"trace\": {}, \"span\": {}, \"parent\": {}, \"kernel\": \"{}\"}}}}",
+            json_escape(r.name),
+            r.start_us,
+            r.dur_us,
+            r.tid,
+            r.trace,
+            r.span,
+            r.parent,
+            json_escape(r.detail),
+        ));
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "{{");
+    let _ = writeln!(s, "\"displayTimeUnit\": \"ms\",");
+    let _ = writeln!(s, "\"traceEvents\": [");
+    for (i, e) in events.iter().enumerate() {
+        let _ = writeln!(s, "{e}{}", if i + 1 < events.len() { "," } else { "" });
+    }
+    let _ = writeln!(s, "]");
     let _ = writeln!(s, "}}");
     s
 }

@@ -1,0 +1,367 @@
+//! A dependency-free HTTP observability endpoint (std `TcpListener`,
+//! tiny request parser) plus the matching one-shot GET client used by
+//! `imagecl stats --url`.
+//!
+//! The server is deliberately minimal: GET-only, HTTP/1.0-style
+//! `Connection: close` responses, one connection served at a time on a
+//! single accept thread with a short read timeout — plenty for a
+//! scrape endpoint, and nothing to tune or exhaust. Routes:
+//!
+//! | path       | payload                                                |
+//! |------------|--------------------------------------------------------|
+//! | `/`        | plain-text index of the routes below                   |
+//! | `/metrics` | Prometheus text exposition of the metrics registry     |
+//! | `/healthz` | JSON liveness: queue depth, workers, tunedb (200/503)  |
+//! | `/traces`  | recent trace trees (`?format=chrome\|tree\|json`)      |
+//! | `/profile` | execution-tier profiler tables                         |
+//! | `/slo`     | SLO attainment + burn table (`?format=json`)           |
+//!
+//! Shutdown is graceful: [`ObsServer::shutdown`] flips the stop flag,
+//! pokes the listener with a self-connection so a blocked `accept`
+//! returns, and joins the thread — any in-flight response finishes
+//! writing before the socket closes.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::{export, slo};
+
+/// A point-in-time health snapshot from the serving stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HealthReport {
+    /// Requests currently queued across all device queues.
+    pub queue_depth: usize,
+    /// Total queue capacity across all device queues.
+    pub queue_cap: usize,
+    /// Worker threads attached to device queues.
+    pub workers: usize,
+    /// False once shutdown began (queues closed to new work).
+    pub accepting: bool,
+    /// Rows visible in the tuning database.
+    pub tunedb_records: usize,
+    /// False when the tuning database could not be read.
+    pub tunedb_ok: bool,
+}
+
+impl HealthReport {
+    /// Liveness verdict: still accepting, workers attached, tunedb
+    /// reachable (queue *fullness* is load, not un-health).
+    pub fn healthy(&self) -> bool {
+        self.accepting && self.workers > 0 && self.tunedb_ok
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"healthy\": {}, \"accepting\": {}, \"workers\": {}, \
+             \"queue_depth\": {}, \"queue_cap\": {}, \
+             \"tunedb_records\": {}, \"tunedb_ok\": {}}}\n",
+            self.healthy(),
+            self.accepting,
+            self.workers,
+            self.queue_depth,
+            self.queue_cap,
+            self.tunedb_records,
+            self.tunedb_ok,
+        )
+    }
+}
+
+/// Produces a fresh [`HealthReport`] on every `/healthz` hit.
+pub type HealthFn = Arc<dyn Fn() -> HealthReport + Send + Sync>;
+
+/// Called before rendering `/metrics` so gauges published lazily by
+/// the serving stack (queue depth, cache sizes) are fresh per scrape.
+pub type PublishFn = Arc<dyn Fn() + Send + Sync>;
+
+/// Handle to a running observability server; join via [`Self::shutdown`].
+pub struct ObsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<()>,
+}
+
+impl std::fmt::Debug for ObsServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsServer").field("addr", &self.addr).finish()
+    }
+}
+
+impl ObsServer {
+    /// Bind `addr` (`HOST:PORT`; port 0 picks a free one — read the
+    /// result back from [`Self::addr`]) and serve until shutdown.
+    pub fn start(
+        addr: &str,
+        health: HealthFn,
+        publish: Option<PublishFn>,
+    ) -> Result<ObsServer, String> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| format!("obs: cannot bind {addr}: {e}"))?;
+        let bound = listener
+            .local_addr()
+            .map_err(|e| format!("obs: no local addr: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("obs-http".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    // One connection at a time; a stuck client can stall
+                    // a scrape but not the process (short read timeout).
+                    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                    let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+                    let _ = serve_one(stream, &health, publish.as_ref());
+                }
+            })
+            .map_err(|e| format!("obs: cannot spawn server thread: {e}"))?;
+        Ok(ObsServer { addr: bound, stop, handle })
+    }
+
+    /// The address actually bound (resolves `:0` port requests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, wake the accept loop, and join the thread. Any
+    /// response already being written completes first.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke a blocked accept() so the loop observes the flag.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        let _ = self.handle.join();
+    }
+}
+
+/// Read one request, route it, write one response, close.
+fn serve_one(
+    mut stream: TcpStream,
+    health: &HealthFn,
+    publish: Option<&PublishFn>,
+) -> std::io::Result<()> {
+    let mut buf = [0u8; 4096];
+    let mut req = Vec::new();
+    // Read until the header terminator (we never consume a body).
+    loop {
+        let n = stream.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        req.extend_from_slice(&buf[..n]);
+        if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 16 * 1024 {
+            break;
+        }
+    }
+    let text = String::from_utf8_lossy(&req);
+    let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or("/"));
+    let (status, content_type, body) = if method != "GET" {
+        (405, "text/plain", "method not allowed\n".to_string())
+    } else {
+        route(target, health, publish)
+    };
+    let reason = match status {
+        200 => "OK",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Dispatch a request target to `(status, content-type, body)`.
+fn route(
+    target: &str,
+    health: &HealthFn,
+    publish: Option<&PublishFn>,
+) -> (u16, &'static str, String) {
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    let param = |key: &str| {
+        query
+            .split('&')
+            .find_map(|kv| kv.split_once('=').filter(|(k, _)| *k == key).map(|(_, v)| v))
+    };
+    match path {
+        "/" => (
+            200,
+            "text/plain",
+            "imagecl observability endpoint\n\
+             /metrics   Prometheus text exposition\n\
+             /healthz   liveness JSON (200 healthy / 503 unhealthy)\n\
+             /traces    recent traces (?format=chrome|tree|json, ?traces=N)\n\
+             /profile   execution-tier profiler tables\n\
+             /slo       SLO attainment and burn rates (?format=json)\n"
+                .to_string(),
+        ),
+        "/metrics" => {
+            if let Some(p) = publish {
+                p();
+            }
+            (200, "text/plain", export::prometheus())
+        }
+        "/healthz" => {
+            let h = health();
+            let status = if h.healthy() { 200 } else { 503 };
+            (status, "application/json", h.to_json())
+        }
+        "/traces" => {
+            let n = param("traces").and_then(|v| v.parse().ok()).unwrap_or(16);
+            match param("format").unwrap_or("json") {
+                "chrome" => (200, "application/json", export::chrome_trace(n)),
+                "tree" => (200, "text/plain", export::render_traces(n)),
+                _ => (200, "application/json", export::traces_json(n)),
+            }
+        }
+        "/profile" => (200, "text/plain", crate::exec::profile::profiler().render()),
+        "/slo" => {
+            let report = slo::engine().report();
+            match param("format") {
+                Some("json") => (200, "application/json", report.to_json()),
+                _ => (200, "text/plain", report.render()),
+            }
+        }
+        _ => (404, "text/plain", format!("no route {path}\n")),
+    }
+}
+
+/// One-shot HTTP GET against `http://HOST:PORT/path`, returning
+/// `(status, body)` — the client side of `imagecl stats --url`.
+pub fn http_get(url: &str) -> Result<(u16, String), String> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| format!("unsupported URL {url:?} (http:// only)"))?;
+    let (hostport, path) = match rest.split_once('/') {
+        Some((h, p)) => (h, format!("/{p}")),
+        None => (rest, "/".to_string()),
+    };
+    let mut stream = TcpStream::connect(hostport)
+        .map_err(|e| format!("connect {hostport}: {e}"))?;
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+    let req = format!(
+        "GET {path} HTTP/1.1\r\nHost: {hostport}\r\nConnection: close\r\n\r\n"
+    );
+    stream.write_all(req.as_bytes()).map_err(|e| format!("send: {e}"))?;
+    let mut resp = Vec::new();
+    stream.read_to_end(&mut resp).map_err(|e| format!("recv: {e}"))?;
+    let text = String::from_utf8_lossy(&resp).into_owned();
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| "malformed HTTP response (no header terminator)".to_string())?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| format!("malformed status line {:?}", head.lines().next()))?;
+    Ok((status, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_health() -> HealthFn {
+        Arc::new(|| HealthReport {
+            queue_depth: 1,
+            queue_cap: 8,
+            workers: 2,
+            accepting: true,
+            tunedb_records: 3,
+            tunedb_ok: true,
+        })
+    }
+
+    #[test]
+    fn health_json_and_verdict() {
+        let h = (test_health())();
+        assert!(h.healthy());
+        let v = crate::jsonlite::parse(&h.to_json()).unwrap();
+        assert_eq!(v.get("workers").unwrap().as_f64(), Some(2.0));
+        assert_eq!(v.get("healthy").unwrap().as_bool(), Some(true));
+        let dead = HealthReport { workers: 0, ..h };
+        assert!(!dead.healthy());
+    }
+
+    #[test]
+    fn server_routes_and_shuts_down() {
+        let srv = ObsServer::start("127.0.0.1:0", test_health(), None).unwrap();
+        let base = format!("http://{}", srv.addr());
+
+        let (status, body) = http_get(&format!("{base}/")).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("/metrics"), "{body}");
+
+        crate::obs::metrics::registry()
+            .counter("imagecl_obs_http_test_total", "t", &[])
+            .inc();
+        let (status, body) = http_get(&format!("{base}/metrics")).unwrap();
+        assert_eq!(status, 200);
+        assert!(body.contains("imagecl_obs_http_test_total"), "{body}");
+        export::lint_prometheus(&body).expect(&body);
+
+        let (status, body) = http_get(&format!("{base}/healthz")).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(
+            crate::jsonlite::parse(&body).unwrap().get("healthy").unwrap().as_bool(),
+            Some(true)
+        );
+
+        let (status, body) = http_get(&format!("{base}/traces?format=chrome")).unwrap();
+        assert_eq!(status, 200);
+        assert!(
+            crate::jsonlite::parse(&body).unwrap().get("traceEvents").is_some(),
+            "{body}"
+        );
+
+        let (status, _) = http_get(&format!("{base}/slo?format=json")).unwrap();
+        assert_eq!(status, 200);
+
+        let (status, body) = http_get(&format!("{base}/nope")).unwrap();
+        assert_eq!(status, 404, "{body}");
+
+        let addr = srv.addr();
+        srv.shutdown();
+        // The listener is gone: either refused outright or accepted by
+        // nothing (read returns no response).
+        assert!(http_get(&format!("http://{addr}/")).is_err());
+    }
+
+    #[test]
+    fn unhealthy_reports_503() {
+        let health: HealthFn = Arc::new(|| HealthReport {
+            queue_depth: 0,
+            queue_cap: 8,
+            workers: 0,
+            accepting: false,
+            tunedb_records: 0,
+            tunedb_ok: false,
+        });
+        let srv = ObsServer::start("127.0.0.1:0", health, None).unwrap();
+        let (status, body) = http_get(&format!("http://{}/healthz", srv.addr())).unwrap();
+        assert_eq!(status, 503);
+        assert!(body.contains("\"healthy\": false"), "{body}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn client_rejects_non_http_urls() {
+        assert!(http_get("https://example.com/").is_err());
+        assert!(http_get("ftp://x/").is_err());
+    }
+}

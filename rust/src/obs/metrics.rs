@@ -68,6 +68,23 @@ const LAST_OCTAVE: usize = 63;
 /// Total bucket count (496): fixed, so `observe` never allocates.
 const BUCKETS: usize = EXACT_BUCKETS + (LAST_OCTAVE - FIRST_OCTAVE + 1) * SUBDIV;
 
+/// Observations at or above this value land in the final octave, where
+/// [`bucket_upper`] saturates and the ~12.5% relative-error guarantee no
+/// longer holds — the histogram effectively *clamps* them.
+const CLAMP_THRESHOLD: u64 = 1 << LAST_OCTAVE;
+
+/// Process-wide count of clamped histogram observations (any histogram).
+/// Exported as `imagecl_obs_hist_clamped_total`; a nonzero value means
+/// some series' tail quantiles are untrustworthy (the observations were
+/// astronomically large — usually a unit bug upstream).
+static HIST_CLAMPED: AtomicU64 = AtomicU64::new(0);
+
+/// Total histogram observations that fell into the saturating top
+/// octave since process start.
+pub fn hist_clamped_total() -> u64 {
+    HIST_CLAMPED.load(Ordering::Relaxed)
+}
+
 fn bucket_index(v: u64) -> usize {
     if v < EXACT_BUCKETS as u64 {
         return v as usize;
@@ -110,6 +127,9 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn observe(&self, v: u64) {
+        if v >= CLAMP_THRESHOLD {
+            HIST_CLAMPED.fetch_add(1, Ordering::Relaxed);
+        }
         self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
@@ -410,6 +430,18 @@ mod tests {
         let p = h.percentile(99.0) as f64;
         assert!(p >= 1_000_000.0);
         assert!(p <= 1_000_000.0 * 1.13, "p={p}");
+    }
+
+    #[test]
+    fn top_octave_observations_count_as_clamped() {
+        let h = Histogram::default();
+        let before = hist_clamped_total();
+        h.observe(1_000_000); // well within the accurate range
+        assert_eq!(hist_clamped_total(), before, "normal values don't clamp");
+        h.observe(u64::MAX);
+        h.observe(CLAMP_THRESHOLD);
+        assert_eq!(hist_clamped_total(), before + 2);
+        assert_eq!(h.count(), 3, "clamped observations still count");
     }
 
     #[test]

@@ -15,7 +15,13 @@
 //!   `imagecl_<subsystem>_<name>_<unit>` (e.g.
 //!   `imagecl_serve_latency_us`); variants live in labels, not names.
 //! * [`export`] — Prometheus text format, structured JSON, trace-tree
-//!   rendering, and the in-repo Prometheus linter used by CI.
+//!   rendering, Chrome/Perfetto trace-event export, and the in-repo
+//!   Prometheus linter used by CI.
+//! * [`slo`] — per-kernel latency objectives with attainment and
+//!   multi-window error-budget burn rates (`/slo`, `imagecl stats`).
+//! * [`http`] — the dependency-free HTTP endpoint (`imagecl serve
+//!   --obs-addr`) exposing all of the above live, plus the matching
+//!   GET client for `imagecl stats --url`.
 //!
 //! # Ring-buffer drop policy
 //!
@@ -31,14 +37,34 @@
 //! as the completeness signal and skip traces without one rather than
 //! rendering a misleading fragment.
 //!
+//! # Reading the silent-loss metrics
+//!
+//! Both lossy degradations above are themselves counted, so "is my
+//! telemetry lying to me?" is answerable from `/metrics`:
+//!
+//! * `imagecl_obs_trace_drops_total` — span records evicted by ring
+//!   overwrite. A non-zero *rate* during a scrape interval means the
+//!   trace views are incomplete for that window: raise the scrape
+//!   frequency or treat `/traces` as a sample, not a census. A large
+//!   static value with zero rate is history, not an active problem.
+//! * `imagecl_obs_hist_clamped_total` — histogram observations that
+//!   landed in the saturating top octave (≥ 2^63). Any growth means
+//!   some `_bucket`/`_sum` figures understate reality — typically a
+//!   unit bug (seconds recorded as µs) rather than a genuine 292k-year
+//!   latency; find the offending series before trusting percentiles.
+//!
 //! The execution-tier profiler (which engine tier ran, batched vs
 //! scalar row coverage, optimizer pass statistics, per-phase wall
 //! time) lives in [`crate::exec::profile`] and publishes into this
 //! module's registry via `profile::publish`.
 
 pub mod export;
+pub mod http;
 pub mod metrics;
+pub mod slo;
 pub mod trace;
 
 pub use metrics::{registry, Counter, Gauge, Histogram, Registry};
-pub use trace::{record_span, span, span_under, tracer, SpanGuard, SpanRecord};
+pub use trace::{
+    record_span, set_thread_device, span, span_under, tracer, SpanGuard, SpanRecord,
+};

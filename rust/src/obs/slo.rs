@@ -1,0 +1,456 @@
+//! The SLO engine: per-kernel latency objectives, attainment, and
+//! multi-window error-budget burn rates.
+//!
+//! An *objective* is a latency bound (e.g. "blur requests complete in
+//! 5 ms") paired with a *target* fraction (e.g. 0.99: at most 1% of
+//! requests may miss the bound). The engine records every served
+//! request as good (within the objective, no error) or bad, and
+//! reports:
+//!
+//! - **attainment** — the lifetime fraction of good requests per
+//!   kernel, compared against the target;
+//! - **burn rate** — over each trailing window, the bad fraction
+//!   divided by the budget `(1 - target)`. Burn 1.0 means the error
+//!   budget is being consumed exactly as provisioned; burn 2.0 means
+//!   the budget for the window is exhausted in half the window. The
+//!   standard multi-window alert pairs a short window (fast burn,
+//!   page) with a long one (slow burn, ticket) — here 5m and 1h.
+//!
+//! Objectives come from `--slo` on `imagecl serve` / `imagecl stats`
+//! (see [`SloSpec::parse`]) with sane defaults otherwise. The engine
+//! keeps its own monotone epoch so tests can inject events at chosen
+//! offsets via [`SloEngine::record_at_us`].
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default per-request latency objective when a kernel has no explicit
+/// entry: 100 ms, generous enough for interpreted tiers on CI hosts.
+pub const DEFAULT_OBJECTIVE_US: u64 = 100_000;
+
+/// Default attainment target (fraction of requests that must be good).
+pub const DEFAULT_TARGET: f64 = 0.99;
+
+/// Per-kernel event history cap — bounds memory under sustained load;
+/// 16k events comfortably covers an hour at loadgen rates.
+const MAX_EVENTS_PER_KERNEL: usize = 16_384;
+
+/// Burn-rate windows rendered in reports: (label, width in µs).
+pub const BURN_WINDOWS_US: [(&str, u64); 2] = [("5m", 300_000_000), ("1h", 3_600_000_000)];
+
+/// A parsed SLO specification: a default objective plus per-kernel
+/// overrides and a shared attainment target.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloSpec {
+    pub default_objective_us: u64,
+    pub target: f64,
+    pub per_kernel: BTreeMap<String, u64>,
+}
+
+impl Default for SloSpec {
+    fn default() -> SloSpec {
+        SloSpec {
+            default_objective_us: DEFAULT_OBJECTIVE_US,
+            target: DEFAULT_TARGET,
+            per_kernel: BTreeMap::new(),
+        }
+    }
+}
+
+impl SloSpec {
+    /// Parse a comma-separated spec like
+    /// `default=100ms,target=0.99,blur=5ms,sobel=800us`. Latencies
+    /// accept `us`, `ms` and `s` suffixes (bare numbers are µs);
+    /// `target` is a fraction in (0, 1).
+    pub fn parse(text: &str) -> Result<SloSpec, String> {
+        let mut spec = SloSpec::default();
+        for part in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("SLO entry {part:?} is not key=value"))?;
+            let (key, val) = (key.trim(), val.trim());
+            if key == "target" {
+                let t: f64 =
+                    val.parse().map_err(|_| format!("bad SLO target {val:?}"))?;
+                if !(t > 0.0 && t < 1.0) {
+                    return Err(format!("SLO target {t} must be in (0, 1)"));
+                }
+                spec.target = t;
+            } else {
+                let us = parse_latency_us(val)?;
+                if key == "default" {
+                    spec.default_objective_us = us;
+                } else {
+                    spec.per_kernel.insert(key.to_string(), us);
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The objective for `kernel` (override or default).
+    pub fn objective_us(&self, kernel: &str) -> u64 {
+        self.per_kernel.get(kernel).copied().unwrap_or(self.default_objective_us)
+    }
+}
+
+/// Parse `5ms` / `800us` / `1.5s` / bare-µs into microseconds.
+fn parse_latency_us(text: &str) -> Result<u64, String> {
+    let (num, scale) = if let Some(n) = text.strip_suffix("us") {
+        (n, 1.0)
+    } else if let Some(n) = text.strip_suffix("ms") {
+        (n, 1e3)
+    } else if let Some(n) = text.strip_suffix('s') {
+        (n, 1e6)
+    } else {
+        (text, 1.0)
+    };
+    let v: f64 = num.trim().parse().map_err(|_| format!("bad latency {text:?}"))?;
+    if !(v.is_finite() && v > 0.0) {
+        return Err(format!("latency {text:?} must be positive"));
+    }
+    Ok((v * scale).round() as u64)
+}
+
+#[derive(Debug)]
+struct KernelSlo {
+    objective_us: u64,
+    good: u64,
+    total: u64,
+    /// Recent events as (engine-epoch-µs, was_good), oldest first.
+    events: VecDeque<(u64, bool)>,
+}
+
+/// Attainment and burn for one kernel, as reported.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelSloReport {
+    pub kernel: String,
+    pub objective_us: u64,
+    pub good: u64,
+    pub total: u64,
+    /// Lifetime good fraction (1.0 when no requests yet).
+    pub attainment: f64,
+    /// Burn rate per window, aligned with [`BURN_WINDOWS_US`].
+    pub burn: Vec<(&'static str, f64)>,
+}
+
+/// A full SLO report: the shared target plus one row per kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloReport {
+    pub target: f64,
+    pub kernels: Vec<KernelSloReport>,
+}
+
+/// The SLO engine: thread-safe recorder + reporter.
+#[derive(Debug)]
+pub struct SloEngine {
+    epoch: Instant,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    spec: SloSpec,
+    kernels: BTreeMap<String, KernelSlo>,
+}
+
+impl Default for SloEngine {
+    fn default() -> SloEngine {
+        SloEngine::new(SloSpec::default())
+    }
+}
+
+impl SloEngine {
+    pub fn new(spec: SloSpec) -> SloEngine {
+        SloEngine {
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner { spec, kernels: BTreeMap::new() }),
+        }
+    }
+
+    /// Swap in a new spec; existing kernels adopt the new objectives
+    /// (their event history is kept — objectives judge future events).
+    pub fn configure(&self, spec: SloSpec) {
+        let mut inner = self.inner.lock().unwrap();
+        for (name, k) in inner.kernels.iter_mut() {
+            k.objective_us = spec.objective_us(name);
+        }
+        inner.spec = spec;
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record a served request for `kernel` with the given latency.
+    pub fn record(&self, kernel: &str, latency_us: u64) {
+        let at = self.now_us();
+        self.record_at_us(kernel, at, Some(latency_us));
+    }
+
+    /// Record a failed request (always bad, regardless of latency).
+    pub fn record_error(&self, kernel: &str) {
+        let at = self.now_us();
+        self.record_at_us(kernel, at, None);
+    }
+
+    /// Record at an explicit engine-epoch offset — the deterministic
+    /// entry point tests use. `latency_us: None` means the request
+    /// errored (bad regardless of the objective).
+    pub fn record_at_us(&self, kernel: &str, at_us: u64, latency_us: Option<u64>) {
+        let mut inner = self.inner.lock().unwrap();
+        let objective = inner.spec.objective_us(kernel);
+        let k = inner.kernels.entry(kernel.to_string()).or_insert_with(|| KernelSlo {
+            objective_us: objective,
+            good: 0,
+            total: 0,
+            events: VecDeque::new(),
+        });
+        let good = latency_us.is_some_and(|l| l <= k.objective_us);
+        k.total += 1;
+        if good {
+            k.good += 1;
+        }
+        k.events.push_back((at_us, good));
+        if k.events.len() > MAX_EVENTS_PER_KERNEL {
+            k.events.pop_front();
+        }
+        // Prune events older than the widest burn window.
+        let horizon = BURN_WINDOWS_US.iter().map(|(_, w)| *w).max().unwrap_or(0);
+        while let Some(&(t, _)) = k.events.front() {
+            if at_us.saturating_sub(t) > horizon {
+                k.events.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Build the report as of "now" on the engine clock.
+    pub fn report(&self) -> SloReport {
+        self.report_at_us(self.now_us())
+    }
+
+    /// Build the report as of an explicit engine-epoch offset.
+    pub fn report_at_us(&self, now_us: u64) -> SloReport {
+        let inner = self.inner.lock().unwrap();
+        let target = inner.spec.target;
+        let budget = (1.0 - target).max(1e-9);
+        let kernels = inner
+            .kernels
+            .iter()
+            .map(|(name, k)| {
+                let attainment =
+                    if k.total == 0 { 1.0 } else { k.good as f64 / k.total as f64 };
+                let burn = BURN_WINDOWS_US
+                    .iter()
+                    .map(|&(label, width)| {
+                        let cutoff = now_us.saturating_sub(width);
+                        let (mut total, mut bad) = (0u64, 0u64);
+                        for &(t, good) in k.events.iter().rev() {
+                            if t < cutoff {
+                                break; // events are time-ordered
+                            }
+                            total += 1;
+                            if !good {
+                                bad += 1;
+                            }
+                        }
+                        let bad_frac =
+                            if total == 0 { 0.0 } else { bad as f64 / total as f64 };
+                        (label, bad_frac / budget)
+                    })
+                    .collect();
+                KernelSloReport {
+                    kernel: name.clone(),
+                    objective_us: k.objective_us,
+                    good: k.good,
+                    total: k.total,
+                    attainment,
+                    burn,
+                }
+            })
+            .collect();
+        SloReport { target, kernels }
+    }
+}
+
+impl SloReport {
+    /// True when every kernel meets its target lifetime attainment.
+    pub fn all_met(&self) -> bool {
+        self.kernels.iter().all(|k| k.attainment >= self.target)
+    }
+
+    /// Render as an aligned operator table.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        if self.kernels.is_empty() {
+            let _ = writeln!(s, "(no SLO observations yet)");
+            return s;
+        }
+        let _ = writeln!(
+            s,
+            "{:<14} {:>12} {:>8} {:>10} {:>8} {:>9} {:>9}  status",
+            "kernel", "objective", "total", "attain", "target", "burn(5m)", "burn(1h)"
+        );
+        for k in &self.kernels {
+            let burn5 = k.burn.first().map(|(_, b)| *b).unwrap_or(0.0);
+            let burn1h = k.burn.get(1).map(|(_, b)| *b).unwrap_or(0.0);
+            let status = if k.attainment >= self.target { "ok" } else { "MISSING" };
+            let _ = writeln!(
+                s,
+                "{:<14} {:>10}us {:>8} {:>9.4}% {:>7.2}% {:>9.2} {:>9.2}  {status}",
+                k.kernel,
+                k.objective_us,
+                k.total,
+                k.attainment * 100.0,
+                self.target * 100.0,
+                burn5,
+                burn1h,
+            );
+        }
+        s
+    }
+
+    /// Render as a JSON document (hand-rolled; no serde offline).
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "{{");
+        let _ = writeln!(s, "  \"target\": {},", self.target);
+        let _ = writeln!(s, "  \"all_met\": {},", self.all_met());
+        let _ = writeln!(s, "  \"kernels\": [");
+        for (i, k) in self.kernels.iter().enumerate() {
+            let burns: Vec<String> = k
+                .burn
+                .iter()
+                .map(|(label, b)| format!("\"{label}\": {b:.4}"))
+                .collect();
+            let _ = writeln!(
+                s,
+                "    {{\"kernel\": \"{}\", \"objective_us\": {}, \"good\": {}, \
+                 \"total\": {}, \"attainment\": {:.6}, \"burn\": {{{}}}}}{}",
+                k.kernel.replace('\\', "\\\\").replace('"', "\\\""),
+                k.objective_us,
+                k.good,
+                k.total,
+                k.attainment,
+                burns.join(", "),
+                if i + 1 < self.kernels.len() { "," } else { "" }
+            );
+        }
+        let _ = writeln!(s, "  ]");
+        let _ = writeln!(s, "}}");
+        s
+    }
+}
+
+/// The process-global SLO engine (default spec until configured).
+pub fn engine() -> &'static SloEngine {
+    static ENGINE: OnceLock<SloEngine> = OnceLock::new();
+    ENGINE.get_or_init(SloEngine::default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_suffixes_overrides_and_target() {
+        let s = SloSpec::parse("default=100ms, target=0.995, blur=5ms, sobel=800us, conv2d=1.5s")
+            .unwrap();
+        assert_eq!(s.default_objective_us, 100_000);
+        assert_eq!(s.target, 0.995);
+        assert_eq!(s.objective_us("blur"), 5_000);
+        assert_eq!(s.objective_us("sobel"), 800);
+        assert_eq!(s.objective_us("conv2d"), 1_500_000);
+        assert_eq!(s.objective_us("unlisted"), 100_000);
+    }
+
+    #[test]
+    fn spec_rejects_malformed_entries() {
+        assert!(SloSpec::parse("blur").is_err());
+        assert!(SloSpec::parse("target=1.5").is_err());
+        assert!(SloSpec::parse("blur=-3ms").is_err());
+        assert!(SloSpec::parse("blur=banana").is_err());
+    }
+
+    #[test]
+    fn attainment_counts_good_and_bad() {
+        let e = SloEngine::new(SloSpec::parse("default=1ms,target=0.9").unwrap());
+        for _ in 0..9 {
+            e.record_at_us("blur", 1_000, Some(500)); // good
+        }
+        e.record_at_us("blur", 1_000, Some(5_000)); // bad: over objective
+        let r = e.report_at_us(2_000);
+        assert_eq!(r.kernels.len(), 1);
+        let k = &r.kernels[0];
+        assert_eq!((k.good, k.total), (9, 10));
+        assert!((k.attainment - 0.9).abs() < 1e-12);
+        assert!(r.all_met());
+    }
+
+    #[test]
+    fn errors_are_always_bad() {
+        let e = SloEngine::new(SloSpec::default());
+        e.record_at_us("sobel", 0, None);
+        let r = e.report_at_us(1);
+        assert_eq!(r.kernels[0].good, 0);
+        assert!(!r.all_met());
+    }
+
+    #[test]
+    fn burn_rate_is_windowed() {
+        // target 0.99 → budget 1%. 10% bad in-window → burn 10.
+        let e = SloEngine::new(SloSpec::parse("default=1ms,target=0.99").unwrap());
+        let hour_us = 3_600_000_000u64;
+        // Old bad events: outside both windows at report time.
+        for i in 0..50 {
+            e.record_at_us("blur", i, Some(10_000));
+        }
+        // Recent: 90 good + 10 bad inside the 5m window.
+        let now = 2 * hour_us;
+        for i in 0..90 {
+            e.record_at_us("blur", now - 1_000 - i, Some(100));
+        }
+        for i in 0..10 {
+            e.record_at_us("blur", now - 500 - i, Some(10_000));
+        }
+        let r = e.report_at_us(now);
+        let k = &r.kernels[0];
+        let burn5 = k.burn[0].1;
+        let burn1h = k.burn[1].1;
+        assert!((burn5 - 10.0).abs() < 1e-6, "burn5 = {burn5}");
+        // Same events fall in the 1h window too (old ones pruned/outside).
+        assert!((burn1h - 10.0).abs() < 1e-6, "burn1h = {burn1h}");
+    }
+
+    #[test]
+    fn configure_updates_objectives_in_place() {
+        let e = SloEngine::new(SloSpec::default());
+        e.record_at_us("blur", 0, Some(50_000)); // good under 100ms default
+        e.configure(SloSpec::parse("blur=1ms").unwrap());
+        e.record_at_us("blur", 1, Some(50_000)); // now bad under 1ms
+        let r = e.report_at_us(2);
+        assert_eq!((r.kernels[0].good, r.kernels[0].total), (1, 2));
+        assert_eq!(r.kernels[0].objective_us, 1_000);
+    }
+
+    #[test]
+    fn report_renders_table_and_json() {
+        let e = SloEngine::new(SloSpec::default());
+        e.record_at_us("blur", 0, Some(1));
+        let r = e.report_at_us(1);
+        let table = r.render();
+        assert!(table.contains("blur"), "{table}");
+        assert!(table.contains("burn(5m)"), "{table}");
+        let json = r.to_json();
+        let v = crate::jsonlite::parse(&json).expect(&json);
+        assert_eq!(v.get("all_met").unwrap().as_bool(), Some(true));
+        let ks = v.get("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(ks[0].get("kernel").unwrap().as_str(), Some("blur"));
+        assert!(ks[0].path(&["burn", "5m"]).is_some());
+    }
+}

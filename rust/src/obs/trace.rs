@@ -20,7 +20,7 @@
 //! walks traces whose root is still resident, so partially evicted
 //! traces disappear rather than render misleadingly truncated.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
@@ -35,6 +35,15 @@ pub struct SpanRecord {
     pub span: u64,
     pub parent: u64,
     pub name: &'static str,
+    /// Extra context carried without allocation (a built-in kernel id
+    /// for request roots, `""` elsewhere). Exported as Chrome-trace
+    /// `args.kernel`.
+    pub detail: &'static str,
+    /// Recording thread (process-unique, assigned on first span).
+    pub tid: u64,
+    /// Device the recording thread serves ([`set_thread_device`];
+    /// `""` for unattributed threads).
+    pub device: &'static str,
     /// Microseconds since the tracer's epoch (first use in-process).
     pub start_us: u64,
     pub dur_us: u64,
@@ -47,6 +56,10 @@ pub struct Tracer {
     slots: Vec<Mutex<Option<SpanRecord>>>,
     cursor: AtomicU64,
     next_id: AtomicU64,
+    /// Records overwritten before any reader saw them leave the ring —
+    /// the silent-loss signal exported as
+    /// `imagecl_obs_trace_drops_total`.
+    dropped: AtomicU64,
 }
 
 impl Tracer {
@@ -59,6 +72,7 @@ impl Tracer {
             cursor: AtomicU64::new(0),
             // 0 is reserved to mean "no parent" / "no trace".
             next_id: AtomicU64::new(1),
+            dropped: AtomicU64::new(0),
         }
     }
 
@@ -70,7 +84,16 @@ impl Tracer {
     /// Append a record, overwriting the oldest when full.
     pub fn record(&self, rec: SpanRecord) {
         let i = self.cursor.fetch_add(1, Ordering::Relaxed) as usize % self.slots.len();
-        *self.slots[i].lock().unwrap() = Some(rec);
+        let mut slot = self.slots[i].lock().unwrap();
+        if slot.is_some() {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        *slot = Some(rec);
+    }
+
+    /// Span records evicted by ring overwrite since process start.
+    pub fn drops(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
     }
 
     /// Microseconds from the tracer epoch to `t` (0 if `t` predates
@@ -97,9 +120,34 @@ pub fn tracer() -> &'static Tracer {
     TRACER.get_or_init(|| Tracer::with_capacity(RING_CAPACITY))
 }
 
+/// Well for process-unique thread IDs (std's `ThreadId` has no stable
+/// integer form on this toolchain).
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
 thread_local! {
     /// The calling thread's open-span stack: `(trace, span)` pairs.
     static STACK: RefCell<Vec<(u64, u64)>> = const { RefCell::new(Vec::new()) };
+    /// This thread's process-unique trace ID (lazily assigned).
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    /// The device this thread serves, for span attribution.
+    static DEVICE: Cell<&'static str> = const { Cell::new("") };
+}
+
+/// The calling thread's process-unique ID (assigned on first use).
+pub fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// Attribute the calling thread's future spans to `device` (worker
+/// threads call this once at startup; Chrome-trace export groups spans
+/// into processes by it).
+pub fn set_thread_device(device: &'static str) {
+    DEVICE.with(|d| d.set(device));
+}
+
+/// The calling thread's device attribution (`""` when unset).
+pub fn thread_device() -> &'static str {
+    DEVICE.with(|d| d.get())
 }
 
 /// An open span; records itself into the ring when dropped.
@@ -133,6 +181,9 @@ impl Drop for SpanGuard {
             span: self.span,
             parent: self.parent,
             name: self.name,
+            detail: "",
+            tid: current_tid(),
+            device: thread_device(),
             start_us: t.micros_since_epoch(self.start),
             dur_us: self.start.elapsed().as_micros() as u64,
         });
@@ -165,12 +216,15 @@ pub fn span_under(trace: u64, parent: u64, name: &'static str) -> SpanGuard {
 
 /// Record an already-measured span directly (no nesting side effects).
 /// Used for request roots whose lifetime is tracked by an `Instant`
-/// carried in the request rather than a guard on one thread.
+/// carried in the request rather than a guard on one thread. `detail`
+/// is free static context (the kernel id for request roots, `""` when
+/// there is nothing to say).
 pub fn record_span(
     trace: u64,
     span: u64,
     parent: u64,
     name: &'static str,
+    detail: &'static str,
     start: Instant,
     dur_us: u64,
 ) {
@@ -180,6 +234,9 @@ pub fn record_span(
         span,
         parent,
         name,
+        detail,
+        tid: current_tid(),
+        device: thread_device(),
         start_us: t.micros_since_epoch(start),
         dur_us,
     });
@@ -247,20 +304,49 @@ mod tests {
     #[test]
     fn ring_overwrites_oldest() {
         let t = Tracer::with_capacity(4);
+        assert_eq!(t.drops(), 0);
         for i in 0..6u64 {
             t.record(SpanRecord {
                 trace: 1,
                 span: i + 1,
                 parent: 0,
                 name: "test.ring",
+                detail: "",
+                tid: 0,
+                device: "",
                 start_us: i,
                 dur_us: 0,
             });
         }
         let snap = t.snapshot();
         assert_eq!(snap.len(), 4);
-        // Spans 1 and 2 (the oldest) were dropped.
+        // Spans 1 and 2 (the oldest) were dropped — and counted.
         assert!(snap.iter().all(|r| r.span >= 3), "{snap:?}");
+        assert_eq!(t.drops(), 2);
+    }
+
+    #[test]
+    fn spans_carry_thread_identity() {
+        let tid_here = current_tid();
+        assert!(tid_here > 0);
+        assert_eq!(current_tid(), tid_here, "tid is stable per thread");
+        let other = std::thread::spawn(|| {
+            set_thread_device("test-dev");
+            let g = span("test.tid");
+            let (trace, sid) = (g.trace_id(), g.span_id());
+            drop(g);
+            (trace, sid, current_tid())
+        })
+        .join()
+        .unwrap();
+        assert_ne!(other.2, tid_here, "each thread gets its own tid");
+        let rec = tracer()
+            .snapshot()
+            .into_iter()
+            .find(|r| r.trace == other.0 && r.span == other.1)
+            .expect("span recorded");
+        assert_eq!(rec.tid, other.2);
+        assert_eq!(rec.device, "test-dev");
     }
 
     #[test]

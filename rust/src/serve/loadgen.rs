@@ -36,6 +36,10 @@ pub struct LoadGenOpts {
     pub max_batch: usize,
     /// Worker threads per device.
     pub workers_per_device: usize,
+    /// `HOST:PORT` to serve the live observability endpoint on for the
+    /// duration of the run (`None` disables it; port 0 picks a free
+    /// port, reported in [`ServeReport::obs_bound`]).
+    pub obs_addr: Option<String>,
 }
 
 impl Default for LoadGenOpts {
@@ -54,6 +58,7 @@ impl Default for LoadGenOpts {
             queue_cap: 256,
             max_batch: 32,
             workers_per_device: 2,
+            obs_addr: None,
         }
     }
 }
@@ -90,6 +95,35 @@ pub fn run_loadgen(
         .collect();
     let queues: Vec<_> = pools.iter().map(|p| p.queue()).collect();
 
+    // Optional live observability endpoint for the duration of the run.
+    let obs_server = match &opts.obs_addr {
+        None => None,
+        Some(addr) => {
+            let health_queues = queues.clone();
+            let health_service = service.clone();
+            let workers = opts.devices.len() * opts.workers_per_device.max(1);
+            let health: crate::obs::http::HealthFn = Arc::new(move || {
+                crate::obs::http::HealthReport {
+                    queue_depth: health_queues.iter().map(|q| q.len()).sum(),
+                    queue_cap: health_queues.iter().map(|q| q.capacity()).sum(),
+                    workers,
+                    accepting: health_queues.iter().all(|q| !q.is_closed()),
+                    tunedb_records: health_service.db().len(),
+                    tunedb_ok: true,
+                }
+            });
+            let publish_service = service.clone();
+            let publish: crate::obs::http::PublishFn =
+                Arc::new(move || publish_service.publish_obs());
+            let server =
+                crate::obs::http::ObsServer::start(addr, health, Some(publish))
+                    .map_err(ServeError::InvalidOptions)?;
+            eprintln!("obs endpoint listening on http://{}", server.addr());
+            Some(server)
+        }
+    };
+    let obs_bound = obs_server.as_ref().map(|s| s.addr());
+
     let (reply_tx, reply_rx) = mpsc::channel();
     let t0 = Instant::now();
 
@@ -104,6 +138,7 @@ pub fn run_loadgen(
             std::thread::Builder::new()
                 .name(format!("imagecl-loadgen-{client}"))
                 .spawn(move || {
+                    crate::obs::set_thread_device("client");
                     let mut submitted = 0usize;
                     for i in (client..requests).step_by(concurrency) {
                         // `new` allocates the trace/root-span IDs the
@@ -144,11 +179,14 @@ pub fn run_loadgen(
         // outstanding request is accounted as failed.
         match reply_rx.recv() {
             Ok(reply) => {
-                latencies_us.push(reply.latency.as_micros() as u64);
+                let us = reply.latency.as_micros() as u64;
+                latencies_us.push(us);
                 if reply.is_ok() {
+                    crate::obs::slo::engine().record(&reply.kernel, us);
                     completed += 1;
                     *per_kernel.entry(reply.kernel).or_default() += 1;
                 } else {
+                    crate::obs::slo::engine().record_error(&reply.kernel);
                     errors += 1;
                 }
             }
@@ -179,6 +217,14 @@ pub fn run_loadgen(
         lat.observe(us);
     }
 
+    // The obs server is drained only AFTER the final snapshot above, so
+    // the last scrape a client can land sees the completed run; shutdown
+    // lets any in-flight response finish writing before the socket
+    // closes.
+    if let Some(server) = obs_server {
+        server.shutdown();
+    }
+
     Ok(ServeReport {
         completed,
         errors,
@@ -186,6 +232,7 @@ pub fn run_loadgen(
         latencies_us,
         per_kernel,
         stats: service.stats(),
+        obs_bound,
     })
 }
 
@@ -224,6 +271,7 @@ mod tests {
             queue_cap: 8, // small: exercises backpressure
             max_batch: 4,
             workers_per_device: 2,
+            obs_addr: None,
         };
         let report = run_loadgen(service.clone(), &opts).unwrap();
         assert_eq!(report.completed, 60);
@@ -266,6 +314,7 @@ mod tests {
             queue_cap: 8,
             max_batch: 4,
             workers_per_device: 1,
+            obs_addr: None,
         };
         let report = run_loadgen(service, &opts).unwrap();
         assert_eq!(report.completed, 6);

@@ -253,6 +253,10 @@ pub struct ServeReport {
     /// Completed requests per kernel id.
     pub per_kernel: BTreeMap<String, usize>,
     pub stats: StatsSnapshot,
+    /// Address the observability HTTP server bound during the run
+    /// (`None` when `--obs-addr` was not given). Useful when the
+    /// requested port was 0.
+    pub obs_bound: Option<std::net::SocketAddr>,
 }
 
 impl ServeReport {
@@ -411,6 +415,7 @@ mod tests {
             latencies_us: vec![100, 200, 300],
             per_kernel: BTreeMap::from([("sobel".to_string(), 10)]),
             stats: StatsSnapshot::default(),
+            obs_bound: None,
         };
         let text = r.render();
         assert!(text.contains("p50"), "{text}");

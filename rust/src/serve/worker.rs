@@ -139,6 +139,9 @@ fn worker_loop(
     queue: &BoundedQueue<BatchKey, ServeRequest>,
     max_batch: usize,
 ) {
+    // Spans recorded on this thread (plan, execute, request roots) are
+    // attributed to this device in the Chrome-trace export.
+    obs::set_thread_device(device.name);
     while let Some(((kernel, grid), batch)) = queue.pop_batch(max_batch) {
         service.counters.observe_batch(batch.len());
         let batch_len = batch.len();
@@ -213,11 +216,17 @@ fn respond(
     // that has received a reply can rely on the whole trace (root and
     // children) being resident in the ring.
     if req.trace != 0 {
+        // The detail field wants a &'static str; resolve the kernel id
+        // through the built-in tables (covers everything servable).
+        let kernel_id = crate::bench_defs::kernel_by_id(&req.kernel)
+            .map(|k| k.id)
+            .unwrap_or("");
         obs::record_span(
             req.trace,
             req.root_span,
             0,
             "request",
+            kernel_id,
             req.submitted,
             latency.as_micros() as u64,
         );

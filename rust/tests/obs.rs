@@ -157,3 +157,161 @@ fn linter_rejects_duplicate_series_and_unlabeled_buckets() {
     let nolabel = "# TYPE imagecl_h histogram\nimagecl_h_bucket 1\n";
     assert!(obs::export::lint_prometheus(nolabel).is_err());
 }
+
+#[test]
+fn prometheus_export_escapes_hostile_label_values() {
+    // Label values with quotes, backslashes and newlines must render as
+    // \" \\ \n escape sequences — and the escaped export must still
+    // both lint and round-trip the sample-splitting logic.
+    obs::registry()
+        .counter(
+            "imagecl_obs_escape_test_total",
+            "escaping test",
+            &[("path", "C:\\tmp\\\"quoted\" multi\nline")],
+        )
+        .inc();
+    let text = obs::export::prometheus();
+    let line = text
+        .lines()
+        .find(|l| l.starts_with("imagecl_obs_escape_test_total"))
+        .expect("escaped series rendered");
+    assert!(line.contains("C:\\\\tmp\\\\\\\"quoted\\\""), "{line}");
+    assert!(line.contains("multi\\nline"), "{line}");
+    assert!(!line.contains('\n'), "newline leaked into the sample line");
+    obs::export::lint_prometheus(&text).expect("escaped export lints");
+}
+
+#[test]
+fn chrome_trace_export_is_valid_and_stable() {
+    // Spans from a device-attributed thread...
+    std::thread::spawn(|| {
+        obs::set_thread_device("chrome-test-dev");
+        let _root = obs::span("chrometest.root");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let _child = obs::span("chrometest.child");
+    })
+    .join()
+    .unwrap();
+    let doc = obs::export::chrome_trace(256);
+
+    // ...render as a valid trace-event JSON document.
+    let v = imagecl::jsonlite::parse(&doc).expect(&doc);
+    let events = v.get("traceEvents").and_then(|e| e.as_arr()).expect(&doc);
+    assert!(!events.is_empty());
+    let phase = |e: &imagecl::jsonlite::Json| {
+        e.get("ph").and_then(|p| p.as_str()).unwrap_or("").to_string()
+    };
+    let ours: Vec<_> = events
+        .iter()
+        .filter(|e| {
+            phase(e) == "X"
+                && e.get("name")
+                    .and_then(|n| n.as_str())
+                    .is_some_and(|n| n.starts_with("chrometest."))
+        })
+        .collect();
+    assert_eq!(ours.len(), 2, "{doc}");
+
+    // "X" events are emitted in non-decreasing ts order.
+    let ts: Vec<f64> = events
+        .iter()
+        .filter(|e| phase(e) == "X")
+        .map(|e| e.get("ts").unwrap().as_f64().unwrap())
+        .collect();
+    assert!(ts.windows(2).all(|w| w[0] <= w[1]), "ts not monotone: {ts:?}");
+
+    // Same thread ⇒ same pid/tid on both spans; the device has a
+    // process_name metadata record carrying its name.
+    let pid = ours[0].get("pid").unwrap().as_f64().unwrap();
+    let tid = ours[0].get("tid").unwrap().as_f64().unwrap();
+    assert_eq!(ours[1].get("pid").unwrap().as_f64(), Some(pid));
+    assert_eq!(ours[1].get("tid").unwrap().as_f64(), Some(tid));
+    assert!(events.iter().any(|e| {
+        phase(e) == "M"
+            && e.get("pid").unwrap().as_f64() == Some(pid)
+            && e.path(&["args", "name"]).and_then(|n| n.as_str())
+                == Some("chrome-test-dev")
+    }));
+
+    // Args carry the span identity for cross-referencing with /traces.
+    for e in &ours {
+        assert!(e.path(&["args", "span"]).is_some());
+        assert!(e.path(&["args", "trace"]).is_some());
+    }
+    // Parent/child share a trace and the child points at the root.
+    let root = ours
+        .iter()
+        .find(|e| e.get("name").unwrap().as_str() == Some("chrometest.root"))
+        .unwrap();
+    let child = ours
+        .iter()
+        .find(|e| e.get("name").unwrap().as_str() == Some("chrometest.child"))
+        .unwrap();
+    assert_eq!(
+        root.path(&["args", "trace"]).unwrap().as_f64(),
+        child.path(&["args", "trace"]).unwrap().as_f64()
+    );
+    assert_eq!(
+        child.path(&["args", "parent"]).unwrap().as_f64(),
+        root.path(&["args", "span"]).unwrap().as_f64()
+    );
+}
+
+#[test]
+fn loadgen_obs_server_reports_slo_and_drains_on_completion() {
+    use imagecl::serve::{run_loadgen, LoadGenOpts};
+
+    let service = KernelService::new(ServiceConfig {
+        strategy: Strategy::Random { evals: 20, seed: 3 },
+        db_path: None,
+        legacy_tsv: None,
+        exec: ExecMode::Simulate,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+    });
+    let opts = LoadGenOpts {
+        requests: 24,
+        concurrency: 3,
+        // blur is gallery-sourced: the kernel_by_id fallback makes it
+        // servable, and the SLO engine must end up reporting on it.
+        kernels: vec!["blur".to_string(), "sobel".to_string()],
+        devices: vec![&INTEL_I7],
+        grid: 16,
+        queue_cap: 16,
+        max_batch: 4,
+        workers_per_device: 1,
+        obs_addr: Some("127.0.0.1:0".to_string()),
+    };
+    let report = run_loadgen(service, &opts).unwrap();
+    assert_eq!(report.completed, 24);
+
+    // The server bound a real port (0 was resolved) and was drained
+    // before run_loadgen returned: connecting now must fail.
+    let bound = report.obs_bound.expect("obs server bound an address");
+    assert!(bound.port() != 0);
+    assert!(
+        std::net::TcpStream::connect_timeout(
+            &bound,
+            std::time::Duration::from_millis(500)
+        )
+        .is_err(),
+        "obs server still accepting after loadgen returned"
+    );
+
+    // Shutdown ordering: the final snapshot was published before the
+    // drain, so the registry holds the run's latency histogram...
+    let text = obs::export::prometheus();
+    obs::export::lint_prometheus(&text).expect("final export lints");
+    assert!(text.contains("imagecl_serve_latency_us"), "{text}");
+
+    // ...and the SLO engine saw every completed request, blur included.
+    let slo = obs::slo::engine().report();
+    let blur = slo
+        .kernels
+        .iter()
+        .find(|k| k.kernel == "blur")
+        .expect("blur SLO row");
+    assert!(blur.total >= 12, "{slo:?}");
+    assert_eq!(blur.burn.len(), 2, "5m + 1h burn windows");
+}

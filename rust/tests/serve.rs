@@ -138,6 +138,7 @@ fn serve_end_to_end_sim_mode() {
         queue_cap: 8, // small queue: backpressure path gets exercised
         max_batch: 8,
         workers_per_device: 2,
+        obs_addr: None,
     };
     let report = imagecl::serve::run_loadgen(svc.clone(), &opts).unwrap();
     assert_eq!(report.completed, 80);
@@ -171,6 +172,7 @@ fn serve_real_execution_produces_output() {
         queue_cap: 16,
         max_batch: 4,
         workers_per_device: 2,
+        obs_addr: None,
     };
     let report = imagecl::serve::run_loadgen(svc, &opts).unwrap();
     assert_eq!(report.completed, 8);
@@ -193,6 +195,7 @@ fn warm_start_serving_run_skips_tuner_entirely() {
         queue_cap: 16,
         max_batch: 8,
         workers_per_device: 1,
+        obs_addr: None,
     };
 
     let first = service(Some(path.clone()), ExecMode::Simulate);
