@@ -20,7 +20,11 @@ use imagecl::devices::INTEL_I7;
 use imagecl::exec::PreparedKernel;
 use imagecl::imagecl::frontend;
 use imagecl::report::{emit_report, Ms};
-use imagecl::serve::{serve_strategy, ExecMode, KernelService, LoadGenOpts, ServiceConfig};
+use imagecl::serve::metrics::percentile;
+use imagecl::serve::{
+    serve_strategy, ExecMode, KernelService, LoadGenOpts, NetServer, NetServerOpts,
+    ServiceConfig,
+};
 use imagecl::transform::lower;
 use imagecl::tuner::tune_on_simulator;
 
@@ -79,6 +83,7 @@ fn main() {
         max_batch: 32,
         workers_per_device: 2,
         obs_addr: None,
+        ..Default::default()
     };
     let report = imagecl::serve::run_loadgen(service, &opts).unwrap();
     let cached_per_req = report.wall.as_secs_f64() / report.completed.max(1) as f64;
@@ -129,6 +134,52 @@ fn main() {
     );
     assert_eq!(report2.stats.tunes, 0, "warm restart must not re-tune");
     assert_eq!(report2.stats.warm_starts as usize, KERNELS.len());
+
+    // Remote serving: the same warm-started service behind the TCP
+    // front-end, driven over localhost at the same offered load. The
+    // acceptance target is p99 within 2x of the in-process path (plus an
+    // absolute allowance — at tens-of-microsecond in-process latencies,
+    // two loopback syscalls per request are a fixed cost, not a
+    // regression).
+    let service3 = KernelService::new(ServiceConfig {
+        strategy: serve_strategy(),
+        db_path: Some(tsv.clone()),
+        legacy_tsv: None,
+        exec: ExecMode::Real,
+        ..Default::default()
+    });
+    let srv = NetServer::start(
+        service3.clone(),
+        NetServerOpts {
+            devices: vec![&INTEL_I7],
+            workers_per_device: 2,
+            queue_cap: 256,
+            max_batch: 32,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let remote_opts =
+        LoadGenOpts { remote: Some(srv.addr().to_string()), ..opts.clone() };
+    let report3 = imagecl::serve::run_loadgen(service3, &remote_opts).unwrap();
+    srv.shutdown();
+    assert_eq!(report3.completed, report3.latencies_us.len());
+    let in_p99 = percentile(&report2.latencies_us, 99.0);
+    let tcp_p99 = percentile(&report3.latencies_us, 99.0);
+    let _ = writeln!(
+        out,
+        "\nremote serving (localhost TCP, {} requests): {:.0} req/s, \
+         p99 {}us vs in-process p99 {}us",
+        report3.completed,
+        report3.throughput_rps(),
+        tcp_p99,
+        in_p99
+    );
+    let tcp_budget = (in_p99 * 2).max(in_p99 + 2_000);
+    assert!(
+        tcp_p99 <= tcp_budget,
+        "TCP p99 {tcp_p99}us exceeds budget {tcp_budget}us (in-process p99 {in_p99}us)"
+    );
 
     let _ = std::fs::remove_file(&tsv);
 

@@ -269,6 +269,52 @@ pub fn workload(kernel_id: &str, w: usize, h: usize, seed: u64) -> BTreeMap<Stri
     args
 }
 
+/// FNV-1a checksum over an argument map's full contents (names, shapes
+/// and every element's f64 bit pattern). Two executions of the same
+/// workload produced bit-identical buffers iff their checksums match —
+/// the serving layer's replies carry this so the chaos test can compare
+/// fault-path outputs against the tree-walk oracle without shipping
+/// whole images over the wire.
+pub fn args_checksum(args: &BTreeMap<String, Arg>) -> u64 {
+    fn eat(h: &mut u64, bytes: &[u8]) {
+        for &b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    fn eat_u64(h: &mut u64, v: u64) {
+        eat(h, &v.to_le_bytes());
+    }
+    let mut h: u64 = 0xcbf29ce484222325;
+    for (name, arg) in args {
+        eat(&mut h, name.as_bytes());
+        match arg {
+            Arg::Image(img) => {
+                eat_u64(&mut h, img.w as u64);
+                eat_u64(&mut h, img.h as u64);
+                for v in &img.buf.data {
+                    eat_u64(&mut h, v.to_bits());
+                }
+            }
+            Arg::Array(buf) => {
+                eat_u64(&mut h, buf.data.len() as u64);
+                for v in &buf.data {
+                    eat_u64(&mut h, v.to_bits());
+                }
+            }
+            Arg::Scalar(v) => {
+                let bits = match v {
+                    crate::exec::Value::I(i) => *i as u64,
+                    crate::exec::Value::F(f) => f.to_bits(),
+                    crate::exec::Value::B(b) => *b as u64,
+                };
+                eat_u64(&mut h, bits);
+            }
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

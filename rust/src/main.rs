@@ -35,11 +35,28 @@ USAGE:
                 [--workers N] [--strategy S] [--db PATH] [--legacy-tsv PATH]
                 [--plan-cache-cap N] [--transfer-budget N] [--predict-budget N]
                 [--obs-addr HOST:PORT] [--slo SPEC]
+                [--listen HOST:PORT | --remote HOST:PORT] [--tenants a,b]
+                [--tenant-quota RATE[:BURST]] [--request-deadline DUR]
+                [--faults SPEC] [--metrics-out PATH]
                 serve synthetic traffic through the plan cache + tunedb.
                 --obs-addr serves /metrics /healthz /traces /profile /slo
                 live for the duration of the run (port 0 picks a free
                 port, printed on startup); --slo sets latency objectives,
-                e.g. \"default=100ms,target=0.99,blur=5ms\" (us|ms|s)
+                e.g. \"default=100ms,target=0.99,blur=5ms\" (us|ms|s).
+                --listen runs the TCP front-end (wire protocol v1) until
+                a client sends a SHUTDOWN frame, then drains gracefully;
+                --remote drives the load generator against such a server
+                instead of in-process pools. --tenant-quota caps each
+                tenant's admission rate, --request-deadline bounds
+                admission+queue+execution (us|ms|s), --faults injects
+                deterministic chaos, e.g.
+                \"exec_panic=0.01,net_drop=0.05,exec_delay=20ms,seed=7\",
+                and --metrics-out writes the final metrics JSON snapshot
+  imagecl submit <kernel> --remote HOST:PORT [--device DEV] [--grid N]
+                [--seed N] [--tenant T] [--request-deadline DUR]
+                [--ping] [--shutdown]
+                submit one request to an `imagecl serve --listen` server
+                over TCP (or --ping it / ask it to --shutdown and drain)
   imagecl tunedb stats|export [--db PATH]
   imagecl tunedb query <kernel> [--db PATH] [--device DEV] [--grid N]
   imagecl tunedb train <kernel> [--db PATH]
@@ -174,6 +191,7 @@ fn run() -> Result<(), String> {
     let switches: &[&str] = match cmd.as_str() {
         "bench" => &["smoke", "ci"],
         "stats" => &["prom", "json"],
+        "submit" => &["ping", "shutdown"],
         _ => &[],
     };
     let args = Args::parse_with_switches(&argv[1..], switches)?;
@@ -181,6 +199,7 @@ fn run() -> Result<(), String> {
         "compile" => cmd_compile(&args),
         "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
         "stats" => cmd_stats(&args),
         "tunedb" => cmd_tunedb(&args),
         "bench" => cmd_bench(&args),
@@ -426,10 +445,51 @@ fn cmd_tables(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Validate a `HOST:PORT` flag value without resolving it (bind/connect
+/// surface reachability problems later; this catches shape mistakes
+/// with an actionable message). IPv6 literals use the bracketed form.
+fn host_port(flag: &str, v: &str) -> Result<String, String> {
+    let shape_err =
+        || format!("bad --{flag} {v:?} (want HOST:PORT, e.g. 127.0.0.1:7878)");
+    let (host, port) = v.rsplit_once(':').ok_or_else(shape_err)?;
+    if host.is_empty() || port.parse::<u16>().is_err() {
+        return Err(shape_err());
+    }
+    Ok(v.to_string())
+}
+
+/// Parse an optional duration flag in the SLO syntax (`us`/`ms`/`s`).
+fn duration_flag(
+    args: &Args,
+    key: &str,
+) -> Result<Option<std::time::Duration>, String> {
+    match args.flag(key) {
+        None => Ok(None),
+        Some(v) => {
+            let us = imagecl::obs::slo::parse_latency_us(v).map_err(|e| {
+                format!("bad --{key}: {e} (want e.g. 800us, 250ms or 2s)")
+            })?;
+            Ok(Some(std::time::Duration::from_micros(us)))
+        }
+    }
+}
+
+/// `--metrics-out PATH`: dump the final metrics-registry JSON snapshot
+/// (the CI chaos job uploads this as its run artifact).
+fn write_metrics_out(args: &Args) -> Result<(), String> {
+    let Some(path) = args.flag("metrics-out") else {
+        return Ok(());
+    };
+    let doc = imagecl::obs::export::json(0);
+    std::fs::write(path, &doc).map_err(|e| format!("cannot write {path:?}: {e}"))?;
+    eprintln!("wrote metrics JSON to {path}");
+    Ok(())
+}
+
 /// `imagecl serve`: spin up the kernel service (warm-starting from the
-/// tuned-config TSV when present), drive synthetic traffic through the
-/// per-device worker pools, and print throughput + latency percentiles
-/// plus the cache counters.
+/// tuned-config TSV when present) and either drive synthetic traffic
+/// through it (in-process pools, or over TCP against a `--remote`
+/// server) or expose it as a long-running TCP front-end (`--listen`).
 fn cmd_serve(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "requests",
@@ -449,6 +509,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "predict-budget",
         "obs-addr",
         "slo",
+        "listen",
+        "remote",
+        "tenants",
+        "tenant-quota",
+        "request-deadline",
+        "faults",
+        "metrics-out",
     ])?;
     if let Some(spec) = args.flag("slo") {
         imagecl::obs::slo::engine()
@@ -478,6 +545,45 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
                 vec![devices::by_name(d).ok_or(format!("unknown device {d:?}"))?];
         }
     }
+    // PR-8 front-end / robustness flags — all validated up front, so a
+    // typo fails with an actionable message before any thread spawns.
+    let listen = args.flag("listen").map(|v| host_port("listen", v)).transpose()?;
+    opts.remote = args.flag("remote").map(|v| host_port("remote", v)).transpose()?;
+    if listen.is_some() && opts.remote.is_some() {
+        return Err("--listen and --remote are mutually exclusive \
+                    (--listen runs a server, --remote drives one)"
+            .to_string());
+    }
+    if let Some(list) = args.flag("tenants") {
+        opts.tenants = list
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(String::from)
+            .collect();
+        if opts.tenants.is_empty() {
+            return Err(format!(
+                "bad --tenants {list:?} (want a comma-separated list, \
+                 e.g. \"team-a,team-b\")"
+            ));
+        }
+    }
+    let quota = args.flag("tenant-quota").map(serve::TenantQuota::parse).transpose()?;
+    opts.deadline = duration_flag(args, "request-deadline")?;
+    let faults = args.flag("faults").map(serve::FaultSpec::parse).transpose()?;
+    if opts.remote.is_some() {
+        for (flag, set) in
+            [("--faults", faults.is_some()), ("--tenant-quota", quota.is_some())]
+        {
+            if set {
+                return Err(format!(
+                    "{flag} configures the serving process — pass it to the \
+                     `imagecl serve --listen` server, not to a --remote client"
+                ));
+            }
+        }
+    }
+    opts.quota = quota;
     let exec = match args.flag("exec").unwrap_or("real") {
         "real" => serve::ExecMode::Real,
         "sim" => serve::ExecMode::Simulate,
@@ -513,21 +619,36 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         transfer_budget: args.usize_flag("transfer-budget", 48)?,
         predict_budget: args.usize_flag("predict-budget", 48)?,
     });
+    if let Some(spec) = faults {
+        if spec.active() {
+            eprintln!("chaos: fault injection armed ({spec:?})");
+        }
+        service.set_faults(serve::FaultInjector::new(spec));
+    }
     let warm = service.tuned_len();
-    println!(
-        "serving {} requests (concurrency {}) over {} kernels × {} devices at {}x{} [{}]",
-        opts.requests,
-        opts.concurrency,
-        opts.kernels.len(),
-        opts.devices.len(),
-        opts.grid,
-        opts.grid,
-        if exec == serve::ExecMode::Real { "real execution" } else { "simulated" },
-    );
     match (&db_path, warm) {
         (Some(p), 0) => println!("cold start (no tuning knowledge at {p:?} yet)"),
         (Some(p), n) => println!("warm start: {n} tuned winners known via {p:?}"),
         (None, _) => println!("ephemeral run (no tuning-knowledge persistence)"),
+    }
+    if let Some(addr) = listen {
+        return serve_listen(args, service, &opts, &addr);
+    }
+    match &opts.remote {
+        Some(addr) => println!(
+            "driving {} requests (concurrency {}) over TCP against {addr}",
+            opts.requests, opts.concurrency
+        ),
+        None => println!(
+            "serving {} requests (concurrency {}) over {} kernels × {} devices at {}x{} [{}]",
+            opts.requests,
+            opts.concurrency,
+            opts.kernels.len(),
+            opts.devices.len(),
+            opts.grid,
+            opts.grid,
+            if exec == serve::ExecMode::Real { "real execution" } else { "simulated" },
+        ),
     }
 
     let report = serve::run_loadgen(service, &opts).map_err(|e| e.to_string())?;
@@ -540,10 +661,139 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         println!("SLO attainment (target {:.2}%):", slo.target * 100.0);
         print!("{}", slo.render());
     }
+    write_metrics_out(args)?;
     if report.errors > 0 {
         return Err(format!("{} requests failed", report.errors));
     }
     Ok(())
+}
+
+/// `imagecl serve --listen`: run the TCP front-end until a client sends
+/// a `SHUTDOWN` frame, then drain gracefully — finish everything
+/// admitted, flush background model training, publish a final metrics
+/// snapshot, join every thread.
+fn serve_listen(
+    args: &Args,
+    service: std::sync::Arc<serve::KernelService>,
+    opts: &serve::LoadGenOpts,
+    addr: &str,
+) -> Result<(), String> {
+    let srv = serve::NetServer::start(
+        service.clone(),
+        serve::NetServerOpts {
+            addr: addr.to_string(),
+            devices: opts.devices.clone(),
+            workers_per_device: opts.workers_per_device,
+            queue_cap: opts.queue_cap,
+            max_batch: opts.max_batch,
+            quota: opts.quota,
+            default_deadline: opts.deadline,
+            ..Default::default()
+        },
+    )?;
+    let obs_server = match &opts.obs_addr {
+        None => None,
+        Some(obs_addr) => {
+            let publish_service = service.clone();
+            let publish: imagecl::obs::http::PublishFn =
+                std::sync::Arc::new(move || publish_service.publish_obs());
+            let server = imagecl::obs::http::ObsServer::start(
+                obs_addr,
+                srv.health_fn(),
+                Some(publish),
+            )?;
+            println!("obs endpoint listening on http://{}", server.addr());
+            Some(server)
+        }
+    };
+    let bound = srv.addr();
+    println!(
+        "listening on {bound} (wire protocol v{}) — drain with: \
+         imagecl submit --shutdown --remote {bound}",
+        imagecl::serve::net::VERSION
+    );
+    srv.wait();
+    println!("drain requested: finishing in-flight requests, flushing state");
+    srv.shutdown();
+    if let Some(server) = obs_server {
+        server.shutdown();
+    }
+    let s = service.stats();
+    println!(
+        "drained cleanly: {} wire requests ({} shed, {} over-quota, \
+         {} past-deadline, {} caught panics, {} quarantined plans)",
+        s.net_requests,
+        s.sheds,
+        s.quota_rejects,
+        s.deadline_rejects,
+        s.exec_panics,
+        s.quarantines
+    );
+    write_metrics_out(args)
+}
+
+/// `imagecl submit`: one request to a `--listen` server over the wire
+/// protocol — or `--ping` it, or ask it to `--shutdown` and drain. The
+/// client retries transport failures and retryable statuses with capped
+/// exponential backoff.
+fn cmd_submit(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "remote",
+        "device",
+        "grid",
+        "seed",
+        "tenant",
+        "request-deadline",
+        "ping",
+        "shutdown",
+    ])?;
+    let addr = host_port(
+        "remote",
+        args.flag("remote").ok_or(
+            "submit needs --remote HOST:PORT (a running `imagecl serve --listen` server)",
+        )?,
+    )?;
+    let seed = args.usize_flag("seed", 0)? as u64;
+    let mut client = serve::NetClient::new(&addr, seed);
+    if args.bool_flag("ping") {
+        client.ping()?;
+        println!("{addr}: OK");
+        return Ok(());
+    }
+    if args.bool_flag("shutdown") {
+        client.shutdown_server()?;
+        println!("{addr}: draining");
+        return Ok(());
+    }
+    let kernel = args
+        .positional
+        .first()
+        .ok_or("submit needs a kernel id (or --ping / --shutdown)")?;
+    let n = args.usize_flag("grid", 64)?;
+    let mut spec = imagecl::serve::net::SubmitSpec::new(kernel, (n, n), seed);
+    if let Some(d) = args.flag("device") {
+        spec.device = d.to_string();
+    }
+    if let Some(t) = args.flag("tenant") {
+        spec.tenant = t.to_string();
+    }
+    if let Some(deadline) = duration_flag(args, "request-deadline")? {
+        spec.deadline_us = deadline.as_micros() as u64;
+    }
+    match client.submit(&spec) {
+        Ok(reply) => {
+            println!(
+                "{kernel} on {}: {} (checksum {:#018x}, server latency {}us, batch {})",
+                reply.device,
+                Ms::from(reply.seconds),
+                reply.checksum,
+                reply.latency_us,
+                reply.batch
+            );
+            Ok(())
+        }
+        Err(e) => Err(format!("submit {kernel}: {e}")),
+    }
 }
 
 /// `imagecl stats`: exercise the full serving stack with a short

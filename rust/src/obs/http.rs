@@ -4,8 +4,12 @@
 //!
 //! The server is deliberately minimal: GET-only, HTTP/1.0-style
 //! `Connection: close` responses, one connection served at a time on a
-//! single accept thread with a short read timeout — plenty for a
-//! scrape endpoint, and nothing to tune or exhaust. Routes:
+//! single accept thread. Request reads go through the serving layer's
+//! guarded reader ([`crate::serve::net::read_http_head`]): an overall
+//! per-request deadline defeats slow-loris senders (408 reply) and a
+//! size cap defeats oversized requests (413 reply), so a hostile
+//! client can delay one scrape but never wedge or balloon the
+//! process. Routes:
 //!
 //! | path       | payload                                                |
 //! |------------|--------------------------------------------------------|
@@ -41,6 +45,9 @@ pub struct HealthReport {
     pub workers: usize,
     /// False once shutdown began (queues closed to new work).
     pub accepting: bool,
+    /// True while any admission queue is at capacity (new submissions
+    /// are being shed). Load signal, not un-health.
+    pub shedding: bool,
     /// Rows visible in the tuning database.
     pub tunedb_records: usize,
     /// False when the tuning database could not be read.
@@ -56,11 +63,12 @@ impl HealthReport {
 
     pub fn to_json(&self) -> String {
         format!(
-            "{{\"healthy\": {}, \"accepting\": {}, \"workers\": {}, \
-             \"queue_depth\": {}, \"queue_cap\": {}, \
+            "{{\"healthy\": {}, \"accepting\": {}, \"shedding\": {}, \
+             \"workers\": {}, \"queue_depth\": {}, \"queue_cap\": {}, \
              \"tunedb_records\": {}, \"tunedb_ok\": {}}}\n",
             self.healthy(),
             self.accepting,
+            self.shedding,
             self.workers,
             self.queue_depth,
             self.queue_cap,
@@ -114,8 +122,7 @@ impl ObsServer {
                     }
                     let Ok(stream) = conn else { continue };
                     // One connection at a time; a stuck client can stall
-                    // a scrape but not the process (short read timeout).
-                    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                    // a scrape but not the process (guarded reads).
                     let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
                     let _ = serve_one(stream, &health, publish.as_ref());
                 }
@@ -139,37 +146,55 @@ impl ObsServer {
     }
 }
 
+/// Guards on reading one request head: 16 KiB is far beyond any real
+/// scrape request, and two seconds of total read time defeats a
+/// slow-loris sender (the guard bounds the *whole* read, not each
+/// `read()` call — trickling one byte per second gets cut off).
+const READ_GUARDS: crate::serve::net::ReadGuards = crate::serve::net::ReadGuards {
+    max_bytes: 16 * 1024,
+    deadline: Duration::from_secs(2),
+};
+
 /// Read one request, route it, write one response, close.
 fn serve_one(
     mut stream: TcpStream,
     health: &HealthFn,
     publish: Option<&PublishFn>,
 ) -> std::io::Result<()> {
-    let mut buf = [0u8; 4096];
-    let mut req = Vec::new();
-    // Read until the header terminator (we never consume a body).
-    loop {
-        let n = stream.read(&mut buf)?;
-        if n == 0 {
-            break;
+    use crate::serve::net::{read_http_head, ReadError};
+    // Read until the header terminator (we never consume a body),
+    // guarded against slow and oversized senders.
+    let (req, guard_reply) = match read_http_head(&mut stream, &READ_GUARDS) {
+        Ok(req) => (req, None),
+        Err(ReadError::TimedOut) => {
+            (Vec::new(), Some((408, "request timed out\n")))
         }
-        req.extend_from_slice(&buf[..n]);
-        if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 16 * 1024 {
-            break;
+        Err(ReadError::TooLarge) => {
+            (Vec::new(), Some((413, "request too large\n")))
         }
-    }
-    let text = String::from_utf8_lossy(&req);
-    let mut parts = text.lines().next().unwrap_or("").split_whitespace();
-    let (method, target) = (parts.next().unwrap_or(""), parts.next().unwrap_or("/"));
-    let (status, content_type, body) = if method != "GET" {
-        (405, "text/plain", "method not allowed\n".to_string())
-    } else {
-        route(target, health, publish)
+        Err(ReadError::Eof) => (Vec::new(), None),
+        Err(ReadError::Io(e)) => return Err(e),
+    };
+    let (status, content_type, body) = match guard_reply {
+        Some((status, msg)) => (status, "text/plain", msg.to_string()),
+        None => {
+            let text = String::from_utf8_lossy(&req);
+            let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+            let (method, target) =
+                (parts.next().unwrap_or(""), parts.next().unwrap_or("/"));
+            if method != "GET" {
+                (405, "text/plain", "method not allowed\n".to_string())
+            } else {
+                route(target, health, publish)
+            }
+        }
     };
     let reason = match status {
         200 => "OK",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
         503 => "Service Unavailable",
         _ => "Error",
     };
@@ -282,6 +307,7 @@ mod tests {
             queue_cap: 8,
             workers: 2,
             accepting: true,
+            shedding: false,
             tunedb_records: 3,
             tunedb_ok: true,
         })
@@ -349,6 +375,7 @@ mod tests {
             queue_cap: 8,
             workers: 0,
             accepting: false,
+            shedding: true,
             tunedb_records: 0,
             tunedb_ok: false,
         });
@@ -363,5 +390,48 @@ mod tests {
     fn client_rejects_non_http_urls() {
         assert!(http_get("https://example.com/").is_err());
         assert!(http_get("ftp://x/").is_err());
+    }
+
+    /// Raw-socket request against the server, returning the status code
+    /// parsed from whatever reply (if any) comes back.
+    fn raw_request(addr: SocketAddr, payload: &[u8], then_stall: bool) -> Option<u16> {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(payload).unwrap();
+        if !then_stall {
+            // Half-close so the server sees EOF if it keeps reading.
+            let _ = stream.shutdown(std::net::Shutdown::Write);
+        }
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+        let mut resp = Vec::new();
+        let _ = stream.read_to_end(&mut resp);
+        let text = String::from_utf8_lossy(&resp);
+        text.split_whitespace().nth(1).and_then(|s| s.parse().ok())
+    }
+
+    #[test]
+    fn slow_loris_request_gets_408() {
+        let srv = ObsServer::start("127.0.0.1:0", test_health(), None).unwrap();
+        // Partial request line, never finished: the read guard's overall
+        // deadline (2s) must cut it off with 408 instead of waiting for
+        // the terminator forever.
+        let status = raw_request(srv.addr(), b"GET /metr", true);
+        assert_eq!(status, Some(408));
+        // The server is still serving afterwards.
+        let (status, _) = http_get(&format!("http://{}/healthz", srv.addr())).unwrap();
+        assert_eq!(status, 200);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn oversized_request_gets_413() {
+        let srv = ObsServer::start("127.0.0.1:0", test_health(), None).unwrap();
+        // 3× the cap with no header terminator.
+        let mut payload = b"GET / HTTP/1.1\r\nX-Junk: ".to_vec();
+        payload.resize(48 * 1024, b'a');
+        let status = raw_request(srv.addr(), &payload, true);
+        assert_eq!(status, Some(413));
+        let (status, _) = http_get(&format!("http://{}/", srv.addr())).unwrap();
+        assert_eq!(status, 200);
+        srv.shutdown();
     }
 }

@@ -95,8 +95,10 @@ impl SloSpec {
     }
 }
 
-/// Parse `5ms` / `800us` / `1.5s` / bare-µs into microseconds.
-fn parse_latency_us(text: &str) -> Result<u64, String> {
+/// Parse `5ms` / `800us` / `1.5s` / bare-µs into microseconds. Public:
+/// the serve CLI reuses this syntax for `--request-deadline` and the
+/// fault injector's `exec_delay`.
+pub fn parse_latency_us(text: &str) -> Result<u64, String> {
     let (num, scale) = if let Some(n) = text.strip_suffix("us") {
         (n, 1.0)
     } else if let Some(n) = text.strip_suffix("ms") {

@@ -1,0 +1,537 @@
+//! Admission control: typed rejections, per-tenant token-bucket quotas,
+//! and deficit-round-robin (DRR) fair queueing.
+//!
+//! The pre-PR8 serving stack admitted requests through a plain bounded
+//! queue — fair only by accident, and its single failure mode (queue
+//! full) was indistinguishable from every other error. This module
+//! gives the front-end the three properties a shared service needs:
+//!
+//! * **Typed rejection** ([`Reject`]): a request that cannot be served
+//!   is told *why* (`SHED`, `QUOTA`, `DEADLINE`, ...) in a reply the
+//!   client can dispatch on — retryable conditions (shed, panic) are
+//!   distinct from permanent ones (quota, deadline, bad request).
+//! * **Quota isolation** ([`TokenBuckets`]): per-tenant token buckets
+//!   bound each tenant's admission *rate*; a hot tenant exhausts its
+//!   own bucket, not the queue.
+//! * **Fair service** ([`FairQueue`]): tenants' queued requests are
+//!   drained deficit-round-robin, so a deep backlog from one tenant
+//!   cannot starve another's single request. Within a tenant, same-plan
+//!   requests still batch (same contract as `queue::BoundedQueue`).
+//!
+//! Shedding happens at *admission* (queue at capacity → immediate
+//! `SHED`), which keeps queueing delay bounded instead of letting p99
+//! collapse under overload.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use super::metrics::Counters;
+use super::worker::{BatchKey, ServeRequest};
+
+/// Why a request was not served. The wire protocol carries these as
+/// one-byte status codes; [`Reject::code`] is the human-readable name
+/// used in logs, replies and the README error table.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reject {
+    /// Admission queue at capacity — load was shed. Retryable.
+    Shed,
+    /// The tenant's token bucket is empty. Not retryable (retrying
+    /// immediately would just burn the refill).
+    Quota,
+    /// The request's deadline expired (at admission or while queued).
+    Deadline,
+    /// Kernel planning or execution failed; carries the error text.
+    Exec(String),
+    /// Kernel execution panicked (caught by the worker's isolation
+    /// boundary). Retryable — the plan may be quarantined by the time
+    /// the retry lands, routing it to the tree-walk oracle.
+    Panic,
+    /// The server is draining or the queue closed. Not retryable on
+    /// the same connection.
+    Shutdown,
+    /// The request frame was malformed (wire-level decode failure).
+    BadRequest(String),
+}
+
+impl Reject {
+    /// Stable short code (also the wire status name).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Reject::Shed => "SHED",
+            Reject::Quota => "QUOTA",
+            Reject::Deadline => "DEADLINE",
+            Reject::Exec(_) => "EXEC",
+            Reject::Panic => "PANIC",
+            Reject::Shutdown => "SHUTDOWN",
+            Reject::BadRequest(_) => "BADREQ",
+        }
+    }
+
+    /// Whether a client retry has any chance of succeeding. Only
+    /// transient conditions qualify; retrying `QUOTA`/`DEADLINE`/
+    /// `EXEC`/`BADREQ` would re-fail deterministically (or waste the
+    /// tenant's refill).
+    pub fn retryable(&self) -> bool {
+        matches!(self, Reject::Shed | Reject::Panic)
+    }
+}
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::Exec(msg) => write!(f, "EXEC: {msg}"),
+            Reject::BadRequest(msg) => write!(f, "BADREQ: {msg}"),
+            other => f.write_str(other.code()),
+        }
+    }
+}
+
+/// Count a rejection in the serve metrics. Kept here (not inside
+/// [`FairQueue`]) so the queue stays a pure data structure and every
+/// admission path — in-process loadgen, the TCP front-end — funnels
+/// through one metrics mapping.
+pub fn bump_reject(counters: &Counters, rej: &Reject) {
+    match rej {
+        Reject::Shed => Counters::bump(&counters.sheds),
+        Reject::Quota => Counters::bump(&counters.quota_rejects),
+        Reject::Deadline => Counters::bump(&counters.deadline_rejects),
+        // Panics are counted at the catch site (`exec_panics`), exec
+        // errors in the report's error tally, shutdown/badreq at the
+        // net layer.
+        _ => {}
+    }
+}
+
+/// A tenant's admission budget: sustained rate plus burst headroom.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantQuota {
+    /// Sustained requests per second.
+    pub rate: f64,
+    /// Bucket capacity (max burst admitted at once).
+    pub burst: f64,
+}
+
+impl TenantQuota {
+    /// Parse `"RATE"` or `"RATE:BURST"` (the `--tenant-quota` flag).
+    /// Burst defaults to the rate (a one-second bucket).
+    pub fn parse(text: &str) -> Result<TenantQuota, String> {
+        let (rate_s, burst_s) = match text.split_once(':') {
+            Some((r, b)) => (r, Some(b)),
+            None => (text, None),
+        };
+        let num = |what: &str, v: &str| -> Result<f64, String> {
+            v.trim()
+                .parse::<f64>()
+                .ok()
+                .filter(|x| x.is_finite() && *x > 0.0)
+                .ok_or_else(|| {
+                    format!(
+                        "bad --tenant-quota {what} {v:?} (want a positive \
+                         number, e.g. \"100\" or \"100:25\" for RATE:BURST)"
+                    )
+                })
+        };
+        let rate = num("rate", rate_s)?;
+        let burst = match burst_s {
+            Some(b) => num("burst", b)?,
+            None => rate,
+        };
+        Ok(TenantQuota { rate, burst })
+    }
+}
+
+/// Per-tenant token buckets sharing one [`TenantQuota`]. `None` quota
+/// means unlimited (the default). One instance is shared across every
+/// device queue so the quota bounds the tenant's *global* admission
+/// rate, not per-device.
+#[derive(Debug)]
+pub struct TokenBuckets {
+    quota: Option<TenantQuota>,
+    /// tenant → (tokens, last refill instant).
+    state: Mutex<HashMap<String, (f64, Instant)>>,
+}
+
+impl TokenBuckets {
+    /// No quota: every `try_take` succeeds.
+    pub fn unlimited() -> TokenBuckets {
+        TokenBuckets { quota: None, state: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn with(quota: Option<TenantQuota>) -> TokenBuckets {
+        TokenBuckets { quota, state: Mutex::new(HashMap::new()) }
+    }
+
+    /// Take one token from `tenant`'s bucket; `false` means the quota
+    /// is exhausted right now. Buckets start full (burst tokens) and
+    /// refill continuously at `rate` tokens/second.
+    pub fn try_take(&self, tenant: &str) -> bool {
+        let Some(q) = self.quota else { return true };
+        let now = Instant::now();
+        let mut state = self.state.lock().unwrap();
+        let (tokens, last) =
+            state.entry(tenant.to_string()).or_insert((q.burst, now));
+        *tokens = (*tokens + now.duration_since(*last).as_secs_f64() * q.rate)
+            .min(q.burst);
+        *last = now;
+        if *tokens >= 1.0 {
+            *tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Why a push was refused; carries the request back so the caller can
+/// reply to it.
+pub type PushReject = (ServeRequest, Reject);
+
+struct FqInner {
+    /// Per-tenant FIFO of queued requests.
+    tenants: HashMap<String, VecDeque<ServeRequest>>,
+    /// Round-robin ring of tenants with queued work (front = next up).
+    ring: VecDeque<String>,
+    /// DRR deficit per active tenant (requests it may drain this round).
+    deficit: HashMap<String, usize>,
+    len: usize,
+    closed: bool,
+}
+
+/// Bounded, multi-tenant admission queue with deficit-round-robin
+/// draining and same-plan batching. The surface mirrors
+/// [`super::queue::BoundedQueue`] (push / pop_batch / close) so the
+/// worker loop is agnostic to which one feeds it.
+pub struct FairQueue {
+    inner: Mutex<FqInner>,
+    ready: Condvar,
+    cap: usize,
+    /// Requests added to a tenant's deficit per DRR visit.
+    quantum: usize,
+    buckets: std::sync::Arc<TokenBuckets>,
+}
+
+impl FairQueue {
+    pub const DEFAULT_QUANTUM: usize = 4;
+
+    pub fn new(
+        cap: usize,
+        quantum: usize,
+        buckets: std::sync::Arc<TokenBuckets>,
+    ) -> FairQueue {
+        FairQueue {
+            inner: Mutex::new(FqInner {
+                tenants: HashMap::new(),
+                ring: VecDeque::new(),
+                deficit: HashMap::new(),
+                len: 0,
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            cap: cap.max(1),
+            quantum: quantum.max(1),
+            buckets,
+        }
+    }
+
+    /// Admit `req` or refuse it with a typed reason. Checks run in
+    /// cost order: a closed queue and an already-dead deadline refuse
+    /// before the quota is charged, so rejected requests never burn
+    /// tenant tokens.
+    pub fn push(&self, req: ServeRequest) -> Result<(), PushReject> {
+        let now = Instant::now();
+        if let Some(deadline) = req.deadline {
+            if now >= deadline {
+                return Err((req, Reject::Deadline));
+            }
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err((req, Reject::Shutdown));
+        }
+        if inner.len >= self.cap {
+            return Err((req, Reject::Shed));
+        }
+        if !self.buckets.try_take(&req.tenant) {
+            return Err((req, Reject::Quota));
+        }
+        let tenant = req.tenant.clone();
+        match inner.tenants.entry(tenant.clone()) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                e.get_mut().push_back(req);
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(VecDeque::from([req]));
+                inner.ring.push_back(tenant.clone());
+                inner.deficit.insert(tenant, 0);
+            }
+        }
+        inner.len += 1;
+        drop(inner);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until work is available (or the queue is closed *and*
+    /// drained → `None`), then drain up to `max_batch` same-plan
+    /// requests from the tenant at the front of the DRR ring.
+    ///
+    /// The visited tenant's deficit grows by the quantum; the batch is
+    /// the leading request's plan-key run within that tenant (order of
+    /// its other requests preserved), capped by both `max_batch` and
+    /// the deficit. The tenant then rotates to the back of the ring —
+    /// so a tenant with one queued request waits at most one ring
+    /// cycle, no matter how deep another tenant's backlog is.
+    pub fn pop_batch(&self, max_batch: usize) -> Option<(BatchKey, Vec<ServeRequest>)> {
+        let max_batch = max_batch.max(1);
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.len > 0 {
+                break;
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.ready.wait(inner).unwrap();
+        }
+        let tenant = inner.ring.pop_front().expect("len > 0 implies ring nonempty");
+        let budget = {
+            let d = inner.deficit.entry(tenant.clone()).or_insert(0);
+            // Cap the carried deficit: an often-skipped tenant must not
+            // bank an unbounded burst entitlement.
+            *d = (*d + self.quantum).min(self.quantum * 2);
+            (*d).min(max_batch)
+        };
+        let fifo = inner.tenants.get_mut(&tenant).expect("ring tenant has a queue");
+        let key = fifo.front().expect("ring tenant queue nonempty").batch_key();
+        let mut batch = Vec::new();
+        let mut rest = VecDeque::with_capacity(fifo.len());
+        while let Some(req) = fifo.pop_front() {
+            if batch.len() < budget && req.batch_key() == key {
+                batch.push(req);
+            } else {
+                rest.push_back(req);
+            }
+        }
+        *fifo = rest;
+        inner.len -= batch.len();
+        if fifo.is_empty() {
+            inner.tenants.remove(&tenant);
+            inner.deficit.remove(&tenant);
+        } else {
+            let d = inner.deficit.get_mut(&tenant).expect("deficit tracked");
+            *d -= batch.len();
+            inner.ring.push_back(tenant);
+        }
+        if inner.len > 0 {
+            // More work queued: wake another worker.
+            self.ready.notify_one();
+        }
+        Some((key, batch))
+    }
+
+    /// Close admission; queued requests still drain. Wakes all waiters.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::INTEL_I7;
+    use crate::serve::faults::{FaultInjector, FaultSpec};
+    use crate::serve::worker::DevicePool;
+    use crate::serve::{ExecMode, KernelService, ServiceConfig};
+    use crate::tuner::Strategy;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn req(tenant: &str, kernel: &str) -> (ServeRequest, mpsc::Receiver<super::super::ServeReply>) {
+        let (tx, rx) = mpsc::channel();
+        let r = ServeRequest::new(kernel, (16, 16), 0, tx).with_tenant(tenant);
+        (r, rx)
+    }
+
+    fn sim_service() -> Arc<KernelService> {
+        KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 30, seed: 1 },
+            db_path: None,
+            legacy_tsv: None,
+            exec: ExecMode::Simulate,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 0,
+        })
+    }
+
+    #[test]
+    fn quota_parse_accepts_rate_and_rate_burst() {
+        assert_eq!(
+            TenantQuota::parse("100").unwrap(),
+            TenantQuota { rate: 100.0, burst: 100.0 }
+        );
+        assert_eq!(
+            TenantQuota::parse("50:10").unwrap(),
+            TenantQuota { rate: 50.0, burst: 10.0 }
+        );
+        for bad in ["", "abc", "-5", "0", "10:", "10:-1", "10:0", "inf"] {
+            let err = TenantQuota::parse(bad).unwrap_err();
+            assert!(err.contains("--tenant-quota"), "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn queue_overflow_sheds_with_typed_error_and_metric() {
+        let counters = Counters::default();
+        let q = FairQueue::new(2, 4, Arc::new(TokenBuckets::unlimited()));
+        let (a, _ra) = req("t1", "sobel");
+        let (b, _rb) = req("t1", "sobel");
+        q.push(a).unwrap();
+        q.push(b).unwrap();
+        let (c, _rc) = req("t1", "sobel");
+        let (returned, rej) = q.push(c).unwrap_err();
+        assert_eq!(rej, Reject::Shed);
+        assert_eq!(returned.kernel, "sobel", "request comes back to the caller");
+        assert!(rej.retryable());
+        bump_reject(&counters, &rej);
+        assert_eq!(counters.snapshot().sheds, 1);
+        assert_eq!(q.len(), 2, "shed request was never enqueued");
+    }
+
+    #[test]
+    fn tenant_quota_exhaustion_rejects_with_typed_error_and_metric() {
+        let counters = Counters::default();
+        // 2-token burst, negligible refill within the test's lifetime.
+        let buckets = Arc::new(TokenBuckets::with(Some(TenantQuota {
+            rate: 0.001,
+            burst: 2.0,
+        })));
+        let q = FairQueue::new(64, 4, buckets);
+        let (a, _ra) = req("hot", "sobel");
+        let (b, _rb) = req("hot", "sobel");
+        q.push(a).unwrap();
+        q.push(b).unwrap();
+        let (c, _rc) = req("hot", "sobel");
+        let (_, rej) = q.push(c).unwrap_err();
+        assert_eq!(rej, Reject::Quota);
+        assert!(!rej.retryable());
+        bump_reject(&counters, &rej);
+        assert_eq!(counters.snapshot().quota_rejects, 1);
+        // Another tenant's bucket is untouched.
+        let (d, _rd) = req("cold", "sobel");
+        q.push(d).unwrap();
+    }
+
+    #[test]
+    fn deadline_expired_while_queued_is_rejected_with_metric() {
+        // One worker, and every execution sleeps 30ms (injected delay):
+        // request B's 5ms deadline is guaranteed to expire while B waits
+        // behind A.
+        let service = sim_service();
+        service.set_faults(FaultInjector::new(FaultSpec {
+            exec_delay: Duration::from_millis(30),
+            ..Default::default()
+        }));
+        let pool = DevicePool::start(&INTEL_I7, service.clone(), 1, 8, 4);
+        let queue = pool.queue();
+        let (a, ra) = req("t1", "sobel");
+        queue.push(a).unwrap();
+        // Wait until the worker has picked A up (queue drained) so B
+        // can only be served after A's injected 30ms delay.
+        while !queue.is_empty() {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let (b, rb) = req("t1", "sepconv_row");
+        let b = b.with_deadline(Some(std::time::Instant::now() + Duration::from_millis(5)));
+        queue.push(b).unwrap();
+        assert!(ra.recv().unwrap().is_ok());
+        let reply = rb.recv().unwrap();
+        assert_eq!(reply.result, Err(Reject::Deadline));
+        pool.shutdown();
+        assert_eq!(service.stats().deadline_rejects, 1);
+        // An already-expired deadline is refused at admission too.
+        let q = FairQueue::new(8, 4, Arc::new(TokenBuckets::unlimited()));
+        let (c, _rc) = req("t1", "sobel");
+        let c = c.with_deadline(Some(std::time::Instant::now() - Duration::from_millis(1)));
+        let (_, rej) = q.push(c).unwrap_err();
+        assert_eq!(rej, Reject::Deadline);
+    }
+
+    #[test]
+    fn closed_queue_refuses_with_shutdown() {
+        let q = FairQueue::new(8, 4, Arc::new(TokenBuckets::unlimited()));
+        q.close();
+        let (a, _ra) = req("t1", "sobel");
+        let (_, rej) = q.push(a).unwrap_err();
+        assert_eq!(rej, Reject::Shutdown);
+        assert!(q.pop_batch(4).is_none(), "closed + drained pops None");
+    }
+
+    #[test]
+    fn drr_interleaves_tenants_instead_of_draining_backlogs() {
+        let q = FairQueue::new(256, 2, Arc::new(TokenBuckets::unlimited()));
+        // Tenant "bulk" enqueues a deep backlog first; "inter" adds one.
+        let mut receivers = Vec::new();
+        for _ in 0..20 {
+            let (r, rx) = req("bulk", "sobel");
+            q.push(r).unwrap();
+            receivers.push(rx);
+        }
+        let (r, rx) = req("inter", "sobel");
+        q.push(r).unwrap();
+        receivers.push(rx);
+        // First pop serves "bulk" (ring order), but the second must
+        // reach "inter" — not continue down bulk's backlog.
+        let (_, first) = q.pop_batch(64).unwrap();
+        assert!(first.iter().all(|r| r.tenant == "bulk"));
+        assert!(first.len() <= 4, "quantum bounds a single visit, got {}", first.len());
+        let (_, second) = q.pop_batch(64).unwrap();
+        assert!(
+            second.iter().all(|r| r.tenant == "inter"),
+            "one-request tenant served on the very next visit"
+        );
+        // Everything drains eventually.
+        q.close();
+        let mut drained = first.len() + second.len();
+        while let Some((_, batch)) = q.pop_batch(64) {
+            drained += batch.len();
+        }
+        assert_eq!(drained, 21);
+    }
+
+    #[test]
+    fn pop_batches_same_plan_within_tenant() {
+        let q = FairQueue::new(64, 8, Arc::new(TokenBuckets::unlimited()));
+        let (a, _ra) = req("t", "sobel");
+        let (b, _rb) = req("t", "sepconv_row");
+        let (c, _rc) = req("t", "sobel");
+        q.push(a).unwrap();
+        q.push(b).unwrap();
+        q.push(c).unwrap();
+        let ((kernel, _), batch) = q.pop_batch(8).unwrap();
+        assert_eq!(kernel, "sobel");
+        assert_eq!(batch.len(), 2, "both sobel requests batch past the sepconv");
+        let ((kernel, _), batch) = q.pop_batch(8).unwrap();
+        assert_eq!(kernel, "sepconv_row");
+        assert_eq!(batch.len(), 1);
+    }
+}

@@ -311,6 +311,16 @@ impl PlanCache {
         Ok((entry, false, evicted))
     }
 
+    /// Evict `key` unconditionally (the poisoned-plan quarantine path:
+    /// a plan whose executions keep panicking is removed so the next
+    /// request rebuilds — and, while quarantined, runs through the
+    /// tree-walk oracle instead). Returns whether a slot was dropped.
+    /// Outstanding `Arc<PlanEntry>`s keep the evicted entry alive for
+    /// in-flight batches; only future lookups miss.
+    pub fn remove(&self, key: &PlanKey) -> bool {
+        self.slots.lock().unwrap().map.remove(key).is_some()
+    }
+
     /// Drop `key`'s slot if it is still this `cell` and still unbuilt
     /// (a concurrently rebuilding or already-replaced slot is left
     /// alone).

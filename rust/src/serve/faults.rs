@@ -1,0 +1,350 @@
+//! Deterministic, seedable fault injection for the serving stack.
+//!
+//! The chaos acceptance test (tests/chaos.rs) needs the serving layer to
+//! misbehave *reproducibly*: the same seed must panic the same requests,
+//! drop the same connections and fail the same tunedb writes on every
+//! run. So every injection site draws from a counter-keyed splitmix64
+//! stream — no global RNG state, no wall-clock — and each site keeps its
+//! own injected-count atomic, published as
+//! `imagecl_faults_injected_total{site=...}` so a chaos run can prove
+//! the faults actually fired (a zero-injection pass is vacuous).
+//!
+//! Sites threaded through the stack:
+//!
+//! * `exec_panic`  — panic inside the worker's kernel execution (caught
+//!   by the `catch_unwind` isolation; drives the poisoned-plan
+//!   quarantine).
+//! * `exec_delay`  — fixed sleep before execution (deadline/shed paths).
+//! * `tunedb_io`   — fail the knowledge base's disk append (serving
+//!   must continue on memory alone).
+//! * `net_drop`    — drop a client connection after a request frame is
+//!   read but before it is admitted (clients see a transport error and
+//!   retry; dropping pre-admission keeps execution exactly-once).
+//!
+//! Spec syntax (the `--faults` flag):
+//! `"exec_panic=0.01,tunedb_io=0.02,net_drop=0.05,exec_delay=20ms,seed=7"`.
+
+use std::panic::PanicHookInfo;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Once};
+use std::time::Duration;
+
+/// Panic payload used by injected `exec_panic` faults. A process-wide
+/// hook (installed lazily, once) suppresses the default "thread
+/// panicked" stderr print for this payload only — a chaos run injects
+/// hundreds of panics by design and must not bury real ones in noise.
+pub struct InjectedPanic;
+
+fn install_quiet_hook() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info: &PanicHookInfo<'_>| {
+            if info.payload().downcast_ref::<InjectedPanic>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Parsed fault rates/durations (the `--faults` spec).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Probability a kernel execution panics.
+    pub exec_panic: f64,
+    /// Probability a tunedb disk append fails.
+    pub tunedb_io: f64,
+    /// Probability a just-read request frame's connection is dropped.
+    pub net_drop: f64,
+    /// Fixed pre-execution delay (applies to every request when set).
+    pub exec_delay: Duration,
+    /// Stream seed; the same seed replays the same faults.
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            exec_panic: 0.0,
+            tunedb_io: 0.0,
+            net_drop: 0.0,
+            exec_delay: Duration::ZERO,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse `"site=rate,...,exec_delay=DUR,seed=N"`. Rates must be in
+    /// `[0, 1]`; durations use the SLO syntax (`us`/`ms`/`s` suffix).
+    pub fn parse(text: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                format!("bad --faults entry {part:?} (want key=value)")
+            })?;
+            let rate = |v: &str| -> Result<f64, String> {
+                v.parse::<f64>()
+                    .ok()
+                    .filter(|r| r.is_finite() && (0.0..=1.0).contains(r))
+                    .ok_or_else(|| {
+                        format!("bad --faults {key}={v:?} (want a rate in 0..=1)")
+                    })
+            };
+            match key {
+                "exec_panic" => spec.exec_panic = rate(val)?,
+                "tunedb_io" => spec.tunedb_io = rate(val)?,
+                "net_drop" => spec.net_drop = rate(val)?,
+                "exec_delay" => {
+                    let us = crate::obs::slo::parse_latency_us(val)
+                        .map_err(|e| format!("bad --faults exec_delay: {e}"))?;
+                    spec.exec_delay = Duration::from_micros(us);
+                }
+                "seed" => {
+                    spec.seed = val.parse().map_err(|_| {
+                        format!("bad --faults seed={val:?} (want an integer)")
+                    })?;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown --faults key {other:?} (expected exec_panic, \
+                         tunedb_io, net_drop, exec_delay or seed)"
+                    ))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Any fault can actually fire.
+    pub fn active(&self) -> bool {
+        self.exec_panic > 0.0
+            || self.tunedb_io > 0.0
+            || self.net_drop > 0.0
+            || !self.exec_delay.is_zero()
+    }
+}
+
+/// One injection site's deterministic decision stream plus its
+/// injected-event counter.
+#[derive(Debug, Default)]
+struct Site {
+    /// Decisions drawn so far (the stream position).
+    draws: AtomicU64,
+    /// Decisions that came up "inject".
+    injected: AtomicU64,
+}
+
+/// The per-service fault injector. Instance-scoped (no process globals)
+/// so concurrent tests — and a server plus its in-process test oracle —
+/// never share fault streams.
+pub struct FaultInjector {
+    spec: FaultSpec,
+    exec_panic: Site,
+    tunedb_io: Site,
+    net_drop: Site,
+}
+
+impl std::fmt::Debug for FaultInjector {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjector").field("spec", &self.spec).finish()
+    }
+}
+
+/// splitmix64: a tiny, high-quality mixer — the per-site streams are
+/// `mix(seed ^ site_tag ^ draw_index)`, so decision `n` at a site is a
+/// pure function of the spec seed.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+impl FaultInjector {
+    /// An injector that never fires (the production default).
+    pub fn disabled() -> Arc<FaultInjector> {
+        FaultInjector::new(FaultSpec::default())
+    }
+
+    pub fn new(spec: FaultSpec) -> Arc<FaultInjector> {
+        if spec.exec_panic > 0.0 {
+            install_quiet_hook();
+        }
+        Arc::new(FaultInjector {
+            spec,
+            exec_panic: Site::default(),
+            tunedb_io: Site::default(),
+            net_drop: Site::default(),
+        })
+    }
+
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// Draw the site's next decision: `true` = inject.
+    fn roll(&self, site: &Site, tag: u64, rate: f64) -> bool {
+        if rate <= 0.0 {
+            return false;
+        }
+        let n = site.draws.fetch_add(1, Ordering::Relaxed);
+        let u = mix(self.spec.seed ^ tag ^ n.wrapping_mul(0x2545f4914f6cdd1d));
+        let hit = (u >> 11) as f64 / (1u64 << 53) as f64 + f64::EPSILON > 1.0 - rate;
+        if hit {
+            site.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Sleep the configured `exec_delay` (no-op when zero), then panic
+    /// this execution if the `exec_panic` stream says so.
+    pub fn before_exec(&self) {
+        if !self.spec.exec_delay.is_zero() {
+            std::thread::sleep(self.spec.exec_delay);
+        }
+        if self.roll(&self.exec_panic, 0x45584543, self.spec.exec_panic) {
+            std::panic::panic_any(InjectedPanic);
+        }
+    }
+
+    /// Should this tunedb disk append fail?
+    pub fn tunedb_io(&self) -> bool {
+        self.roll(&self.tunedb_io, 0x54554e45, self.spec.tunedb_io)
+    }
+
+    /// Should this just-read request frame's connection be dropped?
+    pub fn net_drop(&self) -> bool {
+        self.roll(&self.net_drop, 0x4e455444, self.spec.net_drop)
+    }
+
+    /// Injected-event counts so far: (exec_panic, tunedb_io, net_drop).
+    pub fn injected(&self) -> (u64, u64, u64) {
+        (
+            self.exec_panic.injected.load(Ordering::Relaxed),
+            self.tunedb_io.injected.load(Ordering::Relaxed),
+            self.net_drop.injected.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Total injected events across every site.
+    pub fn injected_total(&self) -> u64 {
+        let (a, b, c) = self.injected();
+        a + b + c
+    }
+
+    /// Publish per-site injected counts as
+    /// `imagecl_faults_injected_total{site=...}` (idempotent max-absolute
+    /// publish, like the serve counters).
+    pub fn publish_obs(&self) {
+        let reg = crate::obs::registry();
+        let (panics, tunedb, drops) = self.injected();
+        for (site, v) in
+            [("exec_panic", panics), ("tunedb_io", tunedb), ("net_drop", drops)]
+        {
+            reg.counter(
+                "imagecl_faults_injected_total",
+                "Faults injected by the chaos layer, per site",
+                &[("site", site)],
+            )
+            .set_max(v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parses_the_issue_example() {
+        let s = FaultSpec::parse(
+            "exec_panic=0.01,tunedb_io=0.02,net_drop=0.05,exec_delay=20ms",
+        )
+        .unwrap();
+        assert_eq!(s.exec_panic, 0.01);
+        assert_eq!(s.tunedb_io, 0.02);
+        assert_eq!(s.net_drop, 0.05);
+        assert_eq!(s.exec_delay, Duration::from_millis(20));
+        assert_eq!(s.seed, 0);
+        assert!(s.active());
+        assert!(!FaultSpec::default().active());
+    }
+
+    #[test]
+    fn spec_rejects_malformed_entries() {
+        for bad in [
+            "exec_panic",          // no value
+            "exec_panic=2.0",      // rate out of range
+            "exec_panic=-0.1",     // negative rate
+            "exec_panic=NaN",      // non-finite
+            "exec_delay=fast",     // unparsable duration
+            "seed=banana",         // non-integer seed
+            "made_up_site=0.5",    // unknown key
+        ] {
+            let err = FaultSpec::parse(bad).unwrap_err();
+            assert!(err.contains("--faults"), "{bad:?} -> {err}");
+        }
+        // Empty spec and stray commas are fine (everything disabled).
+        assert!(!FaultSpec::parse("").unwrap().active());
+        assert!(!FaultSpec::parse(" , ,").unwrap().active());
+    }
+
+    #[test]
+    fn same_seed_same_decisions() {
+        let spec = FaultSpec { net_drop: 0.3, seed: 42, ..Default::default() };
+        let a = FaultInjector::new(spec);
+        let b = FaultInjector::new(spec);
+        let da: Vec<bool> = (0..64).map(|_| a.net_drop()).collect();
+        let db: Vec<bool> = (0..64).map(|_| b.net_drop()).collect();
+        assert_eq!(da, db);
+        assert!(da.iter().any(|&x| x), "a 30% stream should fire in 64 draws");
+        assert!(da.iter().any(|&x| !x));
+        assert_eq!(a.injected().2, da.iter().filter(|&&x| x).count() as u64);
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = FaultInjector::new(FaultSpec {
+            net_drop: 0.5,
+            seed: 1,
+            ..Default::default()
+        });
+        let b = FaultInjector::new(FaultSpec {
+            net_drop: 0.5,
+            seed: 2,
+            ..Default::default()
+        });
+        let da: Vec<bool> = (0..128).map(|_| a.net_drop()).collect();
+        let db: Vec<bool> = (0..128).map(|_| b.net_drop()).collect();
+        assert_ne!(da, db);
+    }
+
+    #[test]
+    fn disabled_injector_never_fires() {
+        let f = FaultInjector::disabled();
+        for _ in 0..100 {
+            assert!(!f.tunedb_io());
+            assert!(!f.net_drop());
+            f.before_exec(); // must not panic
+        }
+        assert_eq!(f.injected_total(), 0);
+    }
+
+    #[test]
+    fn rate_one_always_fires_and_panics_are_quiet_typed() {
+        let f = FaultInjector::new(FaultSpec {
+            exec_panic: 1.0,
+            seed: 3,
+            ..Default::default()
+        });
+        let caught = std::panic::catch_unwind(|| f.before_exec());
+        let payload = caught.unwrap_err();
+        assert!(payload.downcast_ref::<InjectedPanic>().is_some());
+        assert_eq!(f.injected().0, 1);
+    }
+}

@@ -1,21 +1,26 @@
 //! Self-driving load generation for `imagecl serve`.
 //!
-//! The offline crate set has no network stack, so the front door is
-//! simulated: `concurrency` client threads submit `requests` requests
-//! round-robin across the kernel set and the device pools, with
-//! bounded-queue backpressure (rejected submissions are retried and
-//! counted). The run produces a [`ServeReport`] — throughput,
-//! p50/p95/p99 latency and the cache counters.
+//! `concurrency` client threads submit `requests` requests round-robin
+//! across the kernel set and the device pools, with fair-queue
+//! backpressure (shed submissions are retried and counted). Two
+//! transports: the default in-process path drives the device pools
+//! directly; `remote: Some(addr)` drives an external `imagecl serve
+//! --listen` server over the TCP wire protocol (`serve/net.rs`) with
+//! one [`NetClient`] per client thread. Either way the run produces a
+//! [`ServeReport`] — throughput, p50/p95/p99 latency, typed-rejection
+//! counts and the cache counters.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::devices::DeviceSpec;
 
+use super::admission::{TenantQuota, TokenBuckets};
+use super::net::{NetClient, NetError, SubmitSpec};
 use super::worker::{submit_with_retry, DevicePool, ServeRequest};
-use super::{KernelService, ServeError, ServeReport};
+use super::{FairQueue, KernelService, ServeError, ServeReport};
 
 /// Load-generator shape.
 #[derive(Debug, Clone)]
@@ -40,6 +45,16 @@ pub struct LoadGenOpts {
     /// duration of the run (`None` disables it; port 0 picks a free
     /// port, reported in [`ServeReport::obs_bound`]).
     pub obs_addr: Option<String>,
+    /// Tenant ids; client thread `c` bills against `tenants[c % len]`.
+    pub tenants: Vec<String>,
+    /// Per-request serve-by deadline (admission + queueing + execution).
+    pub deadline: Option<Duration>,
+    /// Per-tenant admission quota, shared across every device pool
+    /// (in-process mode only; a remote server configures its own).
+    pub quota: Option<TenantQuota>,
+    /// Drive an external server at `HOST:PORT` over TCP instead of
+    /// in-process pools.
+    pub remote: Option<String>,
 }
 
 impl Default for LoadGenOpts {
@@ -59,17 +74,15 @@ impl Default for LoadGenOpts {
             max_batch: 32,
             workers_per_device: 2,
             obs_addr: None,
+            tenants: vec!["anon".to_string()],
+            deadline: None,
+            quota: None,
+            remote: None,
         }
     }
 }
 
-/// Drive `opts.requests` requests through the service and collect the
-/// report. Returns an error only for empty/invalid option sets; request
-/// failures are counted in the report instead.
-pub fn run_loadgen(
-    service: Arc<KernelService>,
-    opts: &LoadGenOpts,
-) -> Result<ServeReport, ServeError> {
+fn validate(opts: &LoadGenOpts) -> Result<(), ServeError> {
     if opts.kernels.is_empty() {
         return Err(ServeError::InvalidOptions("the kernel set is empty".to_string()));
     }
@@ -79,17 +92,37 @@ pub fn run_loadgen(
     if opts.requests == 0 {
         return Err(ServeError::InvalidOptions("--requests must be positive".to_string()));
     }
+    if opts.tenants.is_empty() {
+        return Err(ServeError::InvalidOptions("the tenant set is empty".to_string()));
+    }
+    Ok(())
+}
 
+/// Drive `opts.requests` requests through the service and collect the
+/// report. Returns an error only for empty/invalid option sets; request
+/// failures and rejections are counted in the report instead.
+pub fn run_loadgen(
+    service: Arc<KernelService>,
+    opts: &LoadGenOpts,
+) -> Result<ServeReport, ServeError> {
+    validate(opts)?;
+    if opts.remote.is_some() {
+        return run_loadgen_remote(service, opts);
+    }
+
+    let buckets = Arc::new(TokenBuckets::with(opts.quota));
     let pools: Vec<DevicePool> = opts
         .devices
         .iter()
         .map(|&dev| {
-            DevicePool::start(
+            DevicePool::start_with(
                 dev,
                 service.clone(),
                 opts.workers_per_device,
                 opts.queue_cap,
                 opts.max_batch,
+                buckets.clone(),
+                FairQueue::DEFAULT_QUANTUM,
             )
         })
         .collect();
@@ -108,6 +141,9 @@ pub fn run_loadgen(
                     queue_cap: health_queues.iter().map(|q| q.capacity()).sum(),
                     workers,
                     accepting: health_queues.iter().all(|q| !q.is_closed()),
+                    shedding: health_queues
+                        .iter()
+                        .any(|q| q.len() >= q.capacity()),
                     tunedb_records: health_service.db().len(),
                     tunedb_ok: true,
                 }
@@ -133,6 +169,8 @@ pub fn run_loadgen(
             let kernels = opts.kernels.clone();
             let service = service.clone();
             let reply_tx = reply_tx.clone();
+            let tenant = opts.tenants[client % opts.tenants.len()].clone();
+            let deadline = opts.deadline;
             let (requests, concurrency, grid) =
                 (opts.requests, opts.concurrency.max(1), opts.grid);
             std::thread::Builder::new()
@@ -148,7 +186,9 @@ pub fn run_loadgen(
                             (grid, grid),
                             i as u64,
                             reply_tx.clone(),
-                        );
+                        )
+                        .with_tenant(&tenant)
+                        .with_deadline(deadline.map(|d| Instant::now() + d));
                         // Kernel cycles fastest, device advances once per
                         // kernel cycle: the request stream covers the full
                         // kernel × device cross-product whatever the two
@@ -172,6 +212,7 @@ pub fn run_loadgen(
     let mut per_kernel: BTreeMap<String, usize> = BTreeMap::new();
     let mut completed = 0usize;
     let mut errors = 0usize;
+    let mut rejections = 0usize;
     for received in 0..submitted {
         // Workers hold reply senders only inside requests, so every
         // submitted request yields exactly one reply — unless a worker
@@ -181,13 +222,20 @@ pub fn run_loadgen(
             Ok(reply) => {
                 let us = reply.latency.as_micros() as u64;
                 latencies_us.push(us);
-                if reply.is_ok() {
-                    crate::obs::slo::engine().record(&reply.kernel, us);
-                    completed += 1;
-                    *per_kernel.entry(reply.kernel).or_default() += 1;
-                } else {
-                    crate::obs::slo::engine().record_error(&reply.kernel);
-                    errors += 1;
+                match &reply.result {
+                    Ok(_) => {
+                        crate::obs::slo::engine().record(&reply.kernel, us);
+                        completed += 1;
+                        *per_kernel.entry(reply.kernel).or_default() += 1;
+                    }
+                    Err(super::Reject::Exec(_)) => {
+                        crate::obs::slo::engine().record_error(&reply.kernel);
+                        errors += 1;
+                    }
+                    Err(_) => {
+                        crate::obs::slo::engine().record_error(&reply.kernel);
+                        rejections += 1;
+                    }
                 }
             }
             Err(_) => {
@@ -228,6 +276,7 @@ pub fn run_loadgen(
     Ok(ServeReport {
         completed,
         errors,
+        rejections,
         wall,
         latencies_us,
         per_kernel,
@@ -236,10 +285,115 @@ pub fn run_loadgen(
     })
 }
 
+/// One remote-submit outcome, sent back to the aggregating thread.
+enum RemoteOutcome {
+    Ok { kernel: String, latency_us: u64 },
+    Rejected { kernel: String },
+    Transport,
+}
+
+/// Remote transport: same request stream as the in-process path, but
+/// each client thread drives its own [`NetClient`] against
+/// `opts.remote`. Latencies are the server-reported admission → reply
+/// times, so the report is directly comparable with in-process runs
+/// (the wire adds its overhead to wall time, not to the latency
+/// histogram).
+fn run_loadgen_remote(
+    service: Arc<KernelService>,
+    opts: &LoadGenOpts,
+) -> Result<ServeReport, ServeError> {
+    let addr = opts.remote.clone().expect("checked by caller");
+    let (tx, rx) = mpsc::channel::<RemoteOutcome>();
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..opts.concurrency.max(1))
+        .map(|client| {
+            let addr = addr.clone();
+            let kernels = opts.kernels.clone();
+            let devices: Vec<&'static str> =
+                opts.devices.iter().map(|d| d.name).collect();
+            let tenant = opts.tenants[client % opts.tenants.len()].clone();
+            let deadline_us = opts
+                .deadline
+                .map(|d| d.as_micros() as u64)
+                .unwrap_or(0);
+            let tx = tx.clone();
+            let (requests, concurrency, grid) =
+                (opts.requests, opts.concurrency.max(1), opts.grid);
+            std::thread::Builder::new()
+                .name(format!("imagecl-loadgen-net-{client}"))
+                .spawn(move || {
+                    let mut net = NetClient::new(&addr, client as u64);
+                    for i in (client..requests).step_by(concurrency) {
+                        let kernel = kernels[i % kernels.len()].clone();
+                        let mut spec = SubmitSpec::new(&kernel, (grid, grid), i as u64);
+                        spec.device =
+                            devices[(i / kernels.len()) % devices.len()].to_string();
+                        spec.tenant = tenant.clone();
+                        spec.deadline_us = deadline_us;
+                        let outcome = match net.submit(&spec) {
+                            Ok(reply) => RemoteOutcome::Ok {
+                                kernel,
+                                latency_us: reply.latency_us,
+                            },
+                            Err(NetError::Rejected(_)) => {
+                                RemoteOutcome::Rejected { kernel }
+                            }
+                            Err(NetError::Transport(_)) => RemoteOutcome::Transport,
+                        };
+                        if tx.send(outcome).is_err() {
+                            return;
+                        }
+                    }
+                })
+                .expect("spawning remote loadgen client")
+        })
+        .collect();
+    drop(tx);
+
+    let mut latencies_us: Vec<u64> = Vec::with_capacity(opts.requests);
+    let mut per_kernel: BTreeMap<String, usize> = BTreeMap::new();
+    let mut completed = 0usize;
+    let mut errors = 0usize;
+    let mut rejections = 0usize;
+    for outcome in rx {
+        match outcome {
+            RemoteOutcome::Ok { kernel, latency_us } => {
+                crate::obs::slo::engine().record(&kernel, latency_us);
+                latencies_us.push(latency_us);
+                completed += 1;
+                *per_kernel.entry(kernel).or_default() += 1;
+            }
+            RemoteOutcome::Rejected { kernel } => {
+                crate::obs::slo::engine().record_error(&kernel);
+                rejections += 1;
+            }
+            RemoteOutcome::Transport => errors += 1,
+        }
+    }
+    for h in clients {
+        let _ = h.join();
+    }
+    let wall = t0.elapsed();
+    latencies_us.sort_unstable();
+    service.publish_obs();
+
+    Ok(ServeReport {
+        completed,
+        errors,
+        rejections,
+        wall,
+        latencies_us,
+        per_kernel,
+        stats: service.stats(),
+        obs_bound: None,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::devices::{ALL_DEVICES, INTEL_I7};
+    use crate::serve::net::{NetServer, NetServerOpts};
     use crate::serve::{ExecMode, KernelService, ServiceConfig};
     use crate::tuner::Strategy;
 
@@ -271,11 +425,12 @@ mod tests {
             queue_cap: 8, // small: exercises backpressure
             max_batch: 4,
             workers_per_device: 2,
-            obs_addr: None,
+            ..Default::default()
         };
         let report = run_loadgen(service.clone(), &opts).unwrap();
         assert_eq!(report.completed, 60);
         assert_eq!(report.errors, 0);
+        assert_eq!(report.rejections, 0);
         assert_eq!(report.per_kernel.values().sum::<usize>(), 60);
         assert_eq!(report.per_kernel.len(), 3);
         // 3 kernels × 4 devices cold keys, tuned exactly once each.
@@ -314,12 +469,45 @@ mod tests {
             queue_cap: 8,
             max_batch: 4,
             workers_per_device: 1,
-            obs_addr: None,
+            ..Default::default()
         };
         let report = run_loadgen(service, &opts).unwrap();
         assert_eq!(report.completed, 6);
         assert_eq!(report.errors, 0);
         assert_eq!(report.latencies_us.len(), 6);
+    }
+
+    #[test]
+    fn loadgen_remote_drives_the_wire() {
+        let service = sim_service();
+        let srv = NetServer::start(
+            service.clone(),
+            NetServerOpts {
+                devices: vec![&INTEL_I7],
+                workers_per_device: 2,
+                queue_cap: 32,
+                max_batch: 8,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let opts = LoadGenOpts {
+            requests: 24,
+            concurrency: 3,
+            kernels: vec!["sobel".to_string(), "conv2d".to_string()],
+            devices: vec![&INTEL_I7],
+            grid: 32,
+            tenants: vec!["a".to_string(), "b".to_string()],
+            remote: Some(srv.addr().to_string()),
+            ..Default::default()
+        };
+        let report = run_loadgen(service.clone(), &opts).unwrap();
+        assert_eq!(report.completed, 24);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.rejections, 0);
+        assert_eq!(report.latencies_us.len(), 24);
+        assert!(service.stats().net_requests >= 24);
+        srv.shutdown();
     }
 
     #[test]
@@ -329,6 +517,8 @@ mod tests {
         opts.kernels.clear();
         assert!(run_loadgen(service.clone(), &opts).is_err());
         let opts = LoadGenOpts { requests: 0, ..Default::default() };
+        assert!(run_loadgen(service.clone(), &opts).is_err());
+        let opts = LoadGenOpts { tenants: Vec::new(), ..Default::default() };
         assert!(run_loadgen(service, &opts).is_err());
     }
 }

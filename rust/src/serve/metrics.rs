@@ -62,6 +62,22 @@ pub struct Counters {
     /// Real-execution wall-clock samples fed back into the knowledge
     /// base (one per plan-cache entry).
     pub wall_records: AtomicU64,
+    /// Requests shed at admission (queue at capacity → typed `SHED`).
+    pub sheds: AtomicU64,
+    /// Requests refused because the tenant's token bucket was empty.
+    pub quota_rejects: AtomicU64,
+    /// Requests whose deadline expired (at admission or while queued).
+    pub deadline_rejects: AtomicU64,
+    /// Kernel executions that panicked and were caught by the worker's
+    /// isolation boundary.
+    pub exec_panics: AtomicU64,
+    /// Plans quarantined after repeated panics (evicted from the cache,
+    /// execution routed to the tree-walk oracle).
+    pub quarantines: AtomicU64,
+    /// Requests received over the TCP front-end.
+    pub net_requests: AtomicU64,
+    /// Connections dropped by injected `net_drop` faults.
+    pub net_drops: AtomicU64,
 }
 
 impl Counters {
@@ -96,6 +112,13 @@ impl Counters {
             search_wall_us: self.search_wall_us.load(Ordering::Relaxed),
             model_trains: self.model_trains.load(Ordering::Relaxed),
             wall_records: self.wall_records.load(Ordering::Relaxed),
+            sheds: self.sheds.load(Ordering::Relaxed),
+            quota_rejects: self.quota_rejects.load(Ordering::Relaxed),
+            deadline_rejects: self.deadline_rejects.load(Ordering::Relaxed),
+            exec_panics: self.exec_panics.load(Ordering::Relaxed),
+            quarantines: self.quarantines.load(Ordering::Relaxed),
+            net_requests: self.net_requests.load(Ordering::Relaxed),
+            net_drops: self.net_drops.load(Ordering::Relaxed),
         }
     }
 
@@ -106,7 +129,7 @@ impl Counters {
     pub fn publish(&self) {
         let reg = crate::obs::registry();
         let s = self.snapshot();
-        let counters: [(&'static str, &'static str, u64); 15] = [
+        let counters: [(&'static str, &'static str, u64); 22] = [
             ("imagecl_serve_tunes_total", "Cold-key tuner invocations", s.tunes),
             (
                 "imagecl_serve_warm_starts_total",
@@ -162,6 +185,41 @@ impl Counters {
                 "Real-execution wall samples recorded to the knowledge base",
                 s.wall_records,
             ),
+            (
+                "imagecl_serve_sheds_total",
+                "Requests shed at admission (queue at capacity)",
+                s.sheds,
+            ),
+            (
+                "imagecl_serve_quota_rejects_total",
+                "Requests refused by tenant token-bucket quotas",
+                s.quota_rejects,
+            ),
+            (
+                "imagecl_serve_deadline_rejects_total",
+                "Requests whose deadline expired before execution",
+                s.deadline_rejects,
+            ),
+            (
+                "imagecl_serve_exec_panics_total",
+                "Kernel executions that panicked (caught by worker isolation)",
+                s.exec_panics,
+            ),
+            (
+                "imagecl_serve_quarantines_total",
+                "Plans quarantined to the tree-walk oracle after repeated panics",
+                s.quarantines,
+            ),
+            (
+                "imagecl_serve_net_requests_total",
+                "Requests received over the TCP front-end",
+                s.net_requests,
+            ),
+            (
+                "imagecl_serve_net_drops_total",
+                "Connections dropped by injected net faults",
+                s.net_drops,
+            ),
         ];
         for (name, help, v) in counters {
             reg.counter(name, help, &[]).set_max(v);
@@ -194,6 +252,13 @@ pub struct StatsSnapshot {
     pub search_wall_us: u64,
     pub model_trains: u64,
     pub wall_records: u64,
+    pub sheds: u64,
+    pub quota_rejects: u64,
+    pub deadline_rejects: u64,
+    pub exec_panics: u64,
+    pub quarantines: u64,
+    pub net_requests: u64,
+    pub net_drops: u64,
 }
 
 impl StatsSnapshot {
@@ -221,6 +286,15 @@ impl StatsSnapshot {
             search_wall_us: self.search_wall_us.saturating_sub(earlier.search_wall_us),
             model_trains: self.model_trains.saturating_sub(earlier.model_trains),
             wall_records: self.wall_records.saturating_sub(earlier.wall_records),
+            sheds: self.sheds.saturating_sub(earlier.sheds),
+            quota_rejects: self.quota_rejects.saturating_sub(earlier.quota_rejects),
+            deadline_rejects: self
+                .deadline_rejects
+                .saturating_sub(earlier.deadline_rejects),
+            exec_panics: self.exec_panics.saturating_sub(earlier.exec_panics),
+            quarantines: self.quarantines.saturating_sub(earlier.quarantines),
+            net_requests: self.net_requests.saturating_sub(earlier.net_requests),
+            net_drops: self.net_drops.saturating_sub(earlier.net_drops),
         }
     }
 }
@@ -244,6 +318,11 @@ pub fn percentile(sorted: &[u64], q: f64) -> u64 {
 pub struct ServeReport {
     pub completed: usize,
     pub errors: usize,
+    /// Requests that ended in a typed rejection (`SHED`/`QUOTA`/
+    /// `DEADLINE`/`SHUTDOWN`) after the client's retry budget — counted
+    /// separately from `errors` because a rejection is the admission
+    /// layer *working*, not the execution layer failing.
+    pub rejections: usize,
     /// Wall-clock of the whole run (admission of the first request to the
     /// last response).
     pub wall: Duration,
@@ -278,9 +357,10 @@ impl ServeReport {
         let _ = writeln!(out, "serve report");
         let _ = writeln!(
             out,
-            "  requests    {} completed, {} failed, wall {}",
+            "  requests    {} completed, {} failed, {} rejected, wall {}",
             self.completed,
             self.errors,
+            self.rejections,
             Ms::from(self.wall)
         );
         let _ = writeln!(out, "  throughput  {:.0} req/s", self.throughput_rps());
@@ -317,6 +397,27 @@ impl ServeReport {
                 out,
                 "  feedback    {} background model refreshes, {} wall-clock samples recorded",
                 s.model_trains, s.wall_records
+            );
+        }
+        if s.sheds + s.quota_rejects + s.deadline_rejects > 0 {
+            let _ = writeln!(
+                out,
+                "  admission   {} shed, {} over-quota, {} past-deadline",
+                s.sheds, s.quota_rejects, s.deadline_rejects
+            );
+        }
+        if s.exec_panics > 0 || s.quarantines > 0 {
+            let _ = writeln!(
+                out,
+                "  isolation   {} exec panics caught, {} plans quarantined",
+                s.exec_panics, s.quarantines
+            );
+        }
+        if s.net_requests > 0 {
+            let _ = writeln!(
+                out,
+                "  network     {} wire requests, {} injected drops",
+                s.net_requests, s.net_drops
             );
         }
         if s.pjrt_execs > 0 {
@@ -411,6 +512,7 @@ mod tests {
         let r = ServeReport {
             completed: 10,
             errors: 0,
+            rejections: 0,
             wall: Duration::from_millis(20),
             latencies_us: vec![100, 200, 300],
             per_kernel: BTreeMap::from([("sobel".to_string(), 10)]),

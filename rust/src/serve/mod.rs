@@ -29,17 +29,23 @@
 //! [`KernelService::schedule_pipeline`] feeds per-device *tuned* time
 //! estimates into the HEFT scheduler instead of the naive-config model.
 
+pub mod admission;
 pub mod cache;
+pub mod faults;
 pub mod loadgen;
 pub mod metrics;
+pub mod net;
 #[cfg(feature = "xla")]
 pub mod pjrt;
 pub mod queue;
 pub mod worker;
 
+pub use admission::{FairQueue, Reject, TenantQuota, TokenBuckets};
 pub use cache::{PlanEntry, PlanKey, TuneSource, TunedStore};
+pub use faults::{FaultInjector, FaultSpec};
 pub use loadgen::{run_loadgen, LoadGenOpts};
 pub use metrics::{Counters, ServeReport, StatsSnapshot};
+pub use net::{NetClient, NetServer, NetServerOpts};
 pub use queue::{BoundedQueue, PushError};
 pub use worker::{DevicePool, ServeReply, ServeRequest};
 
@@ -243,6 +249,15 @@ pub struct KernelService {
     /// via `predict_budget == 0`). The request path reads cached models
     /// and schedules refreshes here; it never trains inline.
     trainer: Option<ModelTrainer>,
+    /// Fault injector (chaos testing; [`faults::FaultInjector::disabled`]
+    /// in production). Swappable after construction so callers don't
+    /// thread it through every `ServiceConfig` literal.
+    faults: Mutex<Arc<faults::FaultInjector>>,
+    /// Panic counts per plan key, driving the poisoned-plan quarantine:
+    /// at [`KernelService::QUARANTINE_THRESHOLD`] caught panics the
+    /// cached plan is evicted and the key's executions reroute to the
+    /// tree-walk oracle.
+    panics: Mutex<std::collections::HashMap<PlanKey, u64>>,
     /// PJRT artifact router for `ExecMode::Real` (None when the manifest
     /// is absent); requests without a matching artifact fall back to the
     /// NDRange interpreter.
@@ -283,9 +298,57 @@ impl KernelService {
             plans,
             counters: Counters::default(),
             trainer,
+            faults: Mutex::new(faults::FaultInjector::disabled()),
+            panics: Mutex::default(),
             #[cfg(feature = "xla")]
             artifacts: pjrt::ArtifactRouter::open_default(),
         })
+    }
+
+    /// Caught panics for one plan key before it is quarantined.
+    pub const QUARANTINE_THRESHOLD: u64 = 3;
+
+    /// Install a fault injector (chaos tests and `--faults`). Also
+    /// threads it into the tuning knowledge base's IO path.
+    pub fn set_faults(&self, injector: Arc<faults::FaultInjector>) {
+        self.db.set_faults(injector.clone());
+        *self.faults.lock().unwrap() = injector;
+    }
+
+    /// The active fault injector (cheap Arc clone per call).
+    pub fn faults(&self) -> Arc<faults::FaultInjector> {
+        self.faults.lock().unwrap().clone()
+    }
+
+    /// Record a caught execution panic for `key`. Crossing the
+    /// quarantine threshold evicts the cached plan and marks the key
+    /// poisoned — subsequent executions run through the tree-walk
+    /// oracle. Returns `true` exactly when this call quarantined.
+    pub fn note_panic(&self, key: &PlanKey) -> bool {
+        let mut panics = self.panics.lock().unwrap();
+        let count = panics.entry(key.clone()).or_insert(0);
+        *count += 1;
+        let newly = *count == Self::QUARANTINE_THRESHOLD;
+        drop(panics);
+        if newly {
+            self.plans.remove(key);
+            Counters::bump(&self.counters.quarantines);
+            eprintln!(
+                "serve: quarantining plan {key} after {} panics \
+                 (tree-walk oracle takes over)",
+                Self::QUARANTINE_THRESHOLD
+            );
+        }
+        newly
+    }
+
+    /// Whether `key`'s executions are routed to the tree-walk oracle.
+    pub fn is_quarantined(&self, key: &PlanKey) -> bool {
+        self.panics
+            .lock()
+            .unwrap()
+            .get(key)
+            .is_some_and(|&n| n >= Self::QUARANTINE_THRESHOLD)
     }
 
     /// The kernel's performance model without ever training on the

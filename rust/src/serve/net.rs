@@ -1,0 +1,1174 @@
+//! The TCP front-end: a dependency-free length-prefixed protocol over
+//! std `TcpListener` (mirroring `obs/http.rs`'s pattern), putting the
+//! fair-admission serving stack behind a real wire.
+//!
+//! ## Frame layout
+//!
+//! Every message — request or reply — is one frame:
+//!
+//! ```text
+//! [u32 LE payload length][payload ≤ 64 KiB]
+//! payload: [u16 LE magic 0x4943][u8 version][u8 opcode][body]
+//! str16  : [u16 LE length][UTF-8 bytes]
+//! ```
+//!
+//! Opcodes: `SUBMIT` (1), `PING` (2), `SHUTDOWN` (3). A `SUBMIT` body:
+//!
+//! ```text
+//! kernel str16 · device str16 ("" = round-robin) · grid_w u32 ·
+//! grid_h u32 · seed u64 · tenant str16 · deadline_us u64 (0 = none)
+//! ```
+//!
+//! Replies carry a status byte (`OK`=0, `SHED`=1, `QUOTA`=2,
+//! `DEADLINE`=3, `EXEC`=4, `PANIC`=5, `SHUTDOWN`=6, `BADREQ`=7), then
+//! `device str16 · message str16 · seconds u64 (f64 bits) ·
+//! checksum u64 · latency_us u64 · batch u32`.
+//!
+//! ## Failure semantics
+//!
+//! * Reads are guarded ([`ReadGuards`]): a frame must arrive whole
+//!   within a deadline and under a size cap — a slow-loris or oversized
+//!   sender loses the connection, never wedges a thread. The same
+//!   guards back `obs/http.rs`'s request reader.
+//! * Every accepted `SUBMIT` gets **exactly one** reply: success or a
+//!   typed rejection. Injected `net_drop` faults fire *before*
+//!   admission, so a dropped connection never duplicates execution —
+//!   the client retries and the request runs once.
+//! * [`NetClient::submit`] retries transport errors and retryable
+//!   statuses (`SHED`, `PANIC`) with capped exponential backoff +
+//!   jitter; `QUOTA`/`DEADLINE`/`EXEC`/`BADREQ` fail fast.
+//! * Graceful drain (the `SHUTDOWN` frame, or [`NetServer::shutdown`]):
+//!   stop accepting, reply `SHUTDOWN` to new submits, finish everything
+//!   queued, flush tunedb model training, publish a final metrics
+//!   snapshot, join every thread.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::devices::DeviceSpec;
+
+use super::admission::{bump_reject, Reject, TenantQuota, TokenBuckets};
+use super::worker::{DevicePool, ServeReply, ServeRequest};
+use super::{Counters, FairQueue, KernelService};
+
+pub const MAGIC: u16 = 0x4943; // "IC"
+pub const VERSION: u8 = 1;
+/// Frame payload cap. Requests are tiny; this bounds a hostile sender.
+pub const MAX_FRAME: usize = 64 * 1024;
+
+pub const OP_SUBMIT: u8 = 1;
+pub const OP_PING: u8 = 2;
+pub const OP_SHUTDOWN: u8 = 3;
+
+pub const STATUS_OK: u8 = 0;
+pub const STATUS_SHED: u8 = 1;
+pub const STATUS_QUOTA: u8 = 2;
+pub const STATUS_DEADLINE: u8 = 3;
+pub const STATUS_EXEC: u8 = 4;
+pub const STATUS_PANIC: u8 = 5;
+pub const STATUS_SHUTDOWN: u8 = 6;
+pub const STATUS_BADREQ: u8 = 7;
+
+/// Wire status → stable name (the README error table).
+pub fn status_name(status: u8) -> &'static str {
+    match status {
+        STATUS_OK => "OK",
+        STATUS_SHED => "SHED",
+        STATUS_QUOTA => "QUOTA",
+        STATUS_DEADLINE => "DEADLINE",
+        STATUS_EXEC => "EXEC",
+        STATUS_PANIC => "PANIC",
+        STATUS_SHUTDOWN => "SHUTDOWN",
+        STATUS_BADREQ => "BADREQ",
+        _ => "UNKNOWN",
+    }
+}
+
+fn reject_status(rej: &Reject) -> u8 {
+    match rej {
+        Reject::Shed => STATUS_SHED,
+        Reject::Quota => STATUS_QUOTA,
+        Reject::Deadline => STATUS_DEADLINE,
+        Reject::Exec(_) => STATUS_EXEC,
+        Reject::Panic => STATUS_PANIC,
+        Reject::Shutdown => STATUS_SHUTDOWN,
+        Reject::BadRequest(_) => STATUS_BADREQ,
+    }
+}
+
+/// Statuses a client retry can fix (mirrors [`Reject::retryable`]).
+pub fn status_retryable(status: u8) -> bool {
+    matches!(status, STATUS_SHED | STATUS_PANIC)
+}
+
+// ---------------------------------------------------------------------------
+// Guarded reads (shared with obs/http.rs)
+// ---------------------------------------------------------------------------
+
+/// Limits on reading one message from a connection: total size and an
+/// overall deadline measured from the first byte. Both bound hostile or
+/// wedged peers (slow-loris, oversized frames).
+#[derive(Debug, Clone, Copy)]
+pub struct ReadGuards {
+    pub max_bytes: usize,
+    pub deadline: Duration,
+}
+
+impl Default for ReadGuards {
+    fn default() -> Self {
+        ReadGuards { max_bytes: MAX_FRAME, deadline: Duration::from_secs(2) }
+    }
+}
+
+/// Why a guarded read failed.
+#[derive(Debug)]
+pub enum ReadError {
+    /// The message exceeded [`ReadGuards::max_bytes`].
+    TooLarge,
+    /// The deadline expired before the message completed (slow-loris).
+    TimedOut,
+    /// The peer closed mid-message.
+    Eof,
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ReadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReadError::TooLarge => write!(f, "message too large"),
+            ReadError::TimedOut => write!(f, "read timed out"),
+            ReadError::Eof => write!(f, "connection closed mid-message"),
+            ReadError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Fill `buf` completely, holding the overall `deadline` measured from
+/// `start`. The socket's read timeout is re-armed to the remaining
+/// budget each iteration, so a peer trickling one byte per timeout
+/// window still cannot stretch the read past the deadline.
+fn read_exact_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    start: Instant,
+    guards: &ReadGuards,
+) -> Result<(), ReadError> {
+    let mut off = 0;
+    while off < buf.len() {
+        let elapsed = start.elapsed();
+        if elapsed >= guards.deadline {
+            return Err(ReadError::TimedOut);
+        }
+        let _ = stream.set_read_timeout(Some(guards.deadline - elapsed));
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => return Err(ReadError::Eof),
+            Ok(n) => off += n,
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one HTTP request head (through `\r\n\r\n`) under `guards` —
+/// the hardened reader behind `obs/http.rs`. Returns the bytes read;
+/// an early clean EOF returns what arrived (the caller's parser deals
+/// with it), while a cap or deadline violation is a typed error the
+/// caller maps to 413/408.
+pub fn read_http_head(
+    stream: &mut TcpStream,
+    guards: &ReadGuards,
+) -> Result<Vec<u8>, ReadError> {
+    let start = Instant::now();
+    let mut req = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        if req.windows(4).any(|w| w == b"\r\n\r\n") {
+            return Ok(req);
+        }
+        if req.len() > guards.max_bytes {
+            return Err(ReadError::TooLarge);
+        }
+        let elapsed = start.elapsed();
+        if elapsed >= guards.deadline {
+            return Err(ReadError::TimedOut);
+        }
+        let _ = stream.set_read_timeout(Some(guards.deadline - elapsed));
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(req),
+            Ok(n) => req.extend_from_slice(&buf[..n]),
+            Err(e) if is_timeout(&e) => {
+                // The socket timeout may fire early relative to our
+                // deadline bookkeeping; the loop head re-checks.
+                if start.elapsed() >= guards.deadline {
+                    return Err(ReadError::TimedOut);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+}
+
+/// Read one length-prefixed frame. While *idle* (no byte of the next
+/// frame yet) the read waits indefinitely in short slices, returning
+/// `Ok(None)` on clean close or when `stop` flips (server drain) —
+/// unless `idle_limit` is set, after which idling errors `TimedOut`
+/// (the client side's overall reply timeout). Once the first byte
+/// arrives, the frame must complete within `guards.deadline`.
+pub fn read_frame(
+    stream: &mut TcpStream,
+    guards: &ReadGuards,
+    stop: &AtomicBool,
+    idle_limit: Option<Duration>,
+) -> Result<Option<Vec<u8>>, ReadError> {
+    let mut len_buf = [0u8; 4];
+    let idle_start = Instant::now();
+    let start = loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        if let Some(limit) = idle_limit {
+            if idle_start.elapsed() >= limit {
+                return Err(ReadError::TimedOut);
+            }
+        }
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(250)));
+        match stream.read(&mut len_buf[..1]) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break Instant::now(),
+            Err(e) if is_timeout(&e) => continue,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            // A peer that vanished while we were idle is a clean end of
+            // the connection, not a protocol failure.
+            Err(_) => return Ok(None),
+        }
+    };
+    read_exact_deadline(stream, &mut len_buf[1..], start, guards)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > guards.max_bytes {
+        return Err(ReadError::TooLarge);
+    }
+    let mut payload = vec![0u8; len];
+    read_exact_deadline(stream, &mut payload, start, guards)?;
+    Ok(Some(payload))
+}
+
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    let mut frame = Vec::with_capacity(4 + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(payload);
+    stream.write_all(&frame)?;
+    stream.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------------
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    let bytes = s.as_bytes();
+    let len = bytes.len().min(u16::MAX as usize);
+    buf.extend_from_slice(&(len as u16).to_le_bytes());
+    buf.extend_from_slice(&bytes[..len]);
+}
+
+struct Cursor<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(data: &'a [u8]) -> Cursor<'a> {
+        Cursor { data, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.data.len())
+            .ok_or_else(|| format!("frame truncated at byte {}", self.pos))?;
+        let s = &self.data[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn str16(&mut self) -> Result<String, String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "invalid UTF-8".to_string())
+    }
+}
+
+fn header(opcode: u8) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(64);
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.push(VERSION);
+    buf.push(opcode);
+    buf
+}
+
+/// Parse + validate a payload's versioned header, returning the opcode
+/// and a cursor at the body.
+fn decode_header(payload: &[u8]) -> Result<(u8, Cursor<'_>), String> {
+    let mut c = Cursor::new(payload);
+    let magic = c.u16()?;
+    if magic != MAGIC {
+        return Err(format!("bad magic {magic:#06x} (want {MAGIC:#06x})"));
+    }
+    let version = c.u8()?;
+    if version != VERSION {
+        return Err(format!("unsupported protocol version {version} (want {VERSION})"));
+    }
+    let opcode = c.u8()?;
+    Ok((opcode, c))
+}
+
+/// One request as carried on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubmitSpec {
+    pub kernel: String,
+    /// Target device name; empty = server round-robins across pools.
+    pub device: String,
+    pub grid: (usize, usize),
+    pub seed: u64,
+    pub tenant: String,
+    /// Serve-by budget relative to server receipt, µs; 0 = none (the
+    /// server's default deadline, if configured, applies).
+    pub deadline_us: u64,
+}
+
+impl SubmitSpec {
+    pub fn new(kernel: &str, grid: (usize, usize), seed: u64) -> SubmitSpec {
+        SubmitSpec {
+            kernel: kernel.to_string(),
+            device: String::new(),
+            grid,
+            seed,
+            tenant: "anon".to_string(),
+            deadline_us: 0,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = header(OP_SUBMIT);
+        put_str(&mut buf, &self.kernel);
+        put_str(&mut buf, &self.device);
+        buf.extend_from_slice(&(self.grid.0 as u32).to_le_bytes());
+        buf.extend_from_slice(&(self.grid.1 as u32).to_le_bytes());
+        buf.extend_from_slice(&self.seed.to_le_bytes());
+        put_str(&mut buf, &self.tenant);
+        buf.extend_from_slice(&self.deadline_us.to_le_bytes());
+        buf
+    }
+
+    fn decode(c: &mut Cursor<'_>) -> Result<SubmitSpec, String> {
+        let kernel = c.str16()?;
+        let device = c.str16()?;
+        let grid = (c.u32()? as usize, c.u32()? as usize);
+        let seed = c.u64()?;
+        let tenant = c.str16()?;
+        let deadline_us = c.u64()?;
+        if kernel.is_empty() {
+            return Err("empty kernel name".to_string());
+        }
+        if grid.0 == 0 || grid.1 == 0 {
+            return Err(format!("bad grid {}x{}", grid.0, grid.1));
+        }
+        Ok(SubmitSpec { kernel, device, grid, seed, tenant, deadline_us })
+    }
+}
+
+/// One reply as carried on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetReply {
+    pub status: u8,
+    pub device: String,
+    /// Error text for `EXEC`/`BADREQ`; empty otherwise.
+    pub message: String,
+    /// Execution seconds (0 on rejection).
+    pub seconds: f64,
+    /// Output checksum (real execution only; 0 otherwise).
+    pub checksum: u64,
+    /// Server-side admission → reply latency.
+    pub latency_us: u64,
+    pub batch: u32,
+}
+
+impl NetReply {
+    pub fn code(&self) -> &'static str {
+        status_name(self.status)
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.status == STATUS_OK
+    }
+
+    fn rejection(status: u8, message: &str) -> NetReply {
+        NetReply {
+            status,
+            device: String::new(),
+            message: message.to_string(),
+            seconds: 0.0,
+            checksum: 0,
+            latency_us: 0,
+            batch: 0,
+        }
+    }
+
+    fn from_serve(reply: &ServeReply) -> NetReply {
+        let (status, message, seconds) = match &reply.result {
+            Ok(secs) => (STATUS_OK, String::new(), *secs),
+            Err(rej) => {
+                let msg = match rej {
+                    Reject::Exec(m) | Reject::BadRequest(m) => m.clone(),
+                    _ => String::new(),
+                };
+                (reject_status(rej), msg, 0.0)
+            }
+        };
+        NetReply {
+            status,
+            device: reply.device.to_string(),
+            message,
+            seconds,
+            checksum: reply.checksum,
+            latency_us: reply.latency.as_micros() as u64,
+            batch: reply.batch as u32,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = header(OP_SUBMIT);
+        buf.push(self.status);
+        put_str(&mut buf, &self.device);
+        put_str(&mut buf, &self.message);
+        buf.extend_from_slice(&self.seconds.to_bits().to_le_bytes());
+        buf.extend_from_slice(&self.checksum.to_le_bytes());
+        buf.extend_from_slice(&self.latency_us.to_le_bytes());
+        buf.extend_from_slice(&self.batch.to_le_bytes());
+        buf
+    }
+
+    fn decode(c: &mut Cursor<'_>) -> Result<NetReply, String> {
+        Ok(NetReply {
+            status: c.u8()?,
+            device: c.str16()?,
+            message: c.str16()?,
+            seconds: f64::from_bits(c.u64()?),
+            checksum: c.u64()?,
+            latency_us: c.u64()?,
+            batch: c.u32()?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// Front-end configuration.
+#[derive(Debug, Clone)]
+pub struct NetServerOpts {
+    /// Bind address (`HOST:PORT`; port 0 picks a free one).
+    pub addr: String,
+    pub devices: Vec<&'static DeviceSpec>,
+    pub workers_per_device: usize,
+    pub queue_cap: usize,
+    pub max_batch: usize,
+    /// DRR quantum (requests per tenant visit).
+    pub quantum: usize,
+    /// Per-tenant admission quota; `None` = unlimited.
+    pub quota: Option<TenantQuota>,
+    /// Deadline applied to requests that don't carry one; `None` = best
+    /// effort.
+    pub default_deadline: Option<Duration>,
+    /// Per-frame read guards for client connections.
+    pub guards: ReadGuards,
+}
+
+impl Default for NetServerOpts {
+    fn default() -> Self {
+        NetServerOpts {
+            addr: "127.0.0.1:0".to_string(),
+            devices: Vec::new(),
+            workers_per_device: 2,
+            queue_cap: 64,
+            max_batch: 8,
+            quantum: FairQueue::DEFAULT_QUANTUM,
+            quota: None,
+            default_deadline: None,
+            guards: ReadGuards::default(),
+        }
+    }
+}
+
+/// State shared between the accept loop, connection handlers and the
+/// shutdown path.
+struct Shared {
+    service: Arc<KernelService>,
+    queues: Vec<(&'static DeviceSpec, Arc<FairQueue>)>,
+    /// Set when drain starts: new submits get `SHUTDOWN` replies, idle
+    /// connection reads return and their threads exit.
+    draining: AtomicBool,
+    /// Set by a client `SHUTDOWN` frame; [`NetServer::wait`] watches it.
+    drain_requested: Mutex<bool>,
+    drain_cv: Condvar,
+    next_device: AtomicUsize,
+    default_deadline: Option<Duration>,
+    guards: ReadGuards,
+    /// Worker threads across all pools (the `/healthz` report).
+    workers: usize,
+}
+
+impl Shared {
+    fn request_drain(&self) {
+        *self.drain_requested.lock().unwrap() = true;
+        self.drain_cv.notify_all();
+    }
+}
+
+/// A running TCP front-end. Dropping without [`NetServer::shutdown`]
+/// leaks the accept thread; call shutdown (tests and the CLI both do).
+pub struct NetServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    pools: Vec<DevicePool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind, spawn device pools and the accept loop, and start serving.
+    pub fn start(
+        service: Arc<KernelService>,
+        opts: NetServerOpts,
+    ) -> Result<NetServer, String> {
+        if opts.devices.is_empty() {
+            return Err("serve/net: no devices configured".to_string());
+        }
+        let listener = TcpListener::bind(&opts.addr)
+            .map_err(|e| format!("serve/net: cannot bind {}: {e}", opts.addr))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| format!("serve/net: no local addr: {e}"))?;
+        let buckets = Arc::new(TokenBuckets::with(opts.quota));
+        let pools: Vec<DevicePool> = opts
+            .devices
+            .iter()
+            .map(|dev| {
+                DevicePool::start_with(
+                    dev,
+                    service.clone(),
+                    opts.workers_per_device,
+                    opts.queue_cap,
+                    opts.max_batch,
+                    buckets.clone(),
+                    opts.quantum,
+                )
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            service,
+            queues: pools.iter().map(|p| (p.device, p.queue())).collect(),
+            draining: AtomicBool::new(false),
+            drain_requested: Mutex::new(false),
+            drain_cv: Condvar::new(),
+            next_device: AtomicUsize::new(0),
+            default_deadline: opts.default_deadline,
+            guards: opts.guards,
+            workers: opts.devices.len() * opts.workers_per_device.max(1),
+        });
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::default();
+        let accept_shared = shared.clone();
+        let accept_conns = conns.clone();
+        let accept = std::thread::Builder::new()
+            .name("imagecl-net-accept".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_shared.draining.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let conn_shared = accept_shared.clone();
+                    let handle = std::thread::Builder::new()
+                        .name("imagecl-net-conn".to_string())
+                        .spawn(move || handle_conn(&conn_shared, stream));
+                    if let Ok(h) = handle {
+                        let mut guard = accept_conns.lock().unwrap();
+                        // Reap finished handlers so a long-lived server
+                        // doesn't accumulate dead JoinHandles.
+                        guard.retain(|j| !j.is_finished());
+                        guard.push(h);
+                    }
+                }
+            })
+            .map_err(|e| format!("serve/net: cannot spawn accept thread: {e}"))?;
+        Ok(NetServer { shared, addr, pools, accept: Some(accept), conns })
+    }
+
+    /// The address actually bound (resolves `:0` port requests).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Whether any device queue is at capacity right now (the
+    /// `/healthz` shed signal).
+    pub fn shedding(&self) -> bool {
+        self.shared.queues.iter().any(|(_, q)| q.len() >= q.capacity())
+    }
+
+    /// Total queued requests / total capacity across device queues.
+    pub fn queue_depth(&self) -> (usize, usize) {
+        let depth = self.shared.queues.iter().map(|(_, q)| q.len()).sum();
+        let cap = self.shared.queues.iter().map(|(_, q)| q.capacity()).sum();
+        (depth, cap)
+    }
+
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// A `/healthz` closure over this server's live state, for wiring
+    /// an [`crate::obs::http::ObsServer`] next to the TCP front-end
+    /// (`imagecl serve --listen --obs-addr`).
+    pub fn health_fn(&self) -> crate::obs::http::HealthFn {
+        let shared = self.shared.clone();
+        Arc::new(move || crate::obs::http::HealthReport {
+            queue_depth: shared.queues.iter().map(|(_, q)| q.len()).sum(),
+            queue_cap: shared.queues.iter().map(|(_, q)| q.capacity()).sum(),
+            workers: shared.workers,
+            accepting: !shared.draining.load(Ordering::SeqCst),
+            shedding: shared
+                .queues
+                .iter()
+                .any(|(_, q)| q.len() >= q.capacity()),
+            tunedb_records: shared.service.db().len(),
+            tunedb_ok: true,
+        })
+    }
+
+    /// Block until a client sends a `SHUTDOWN` frame (the CLI's
+    /// serve-until-told-to-stop mode), then return so the caller can
+    /// invoke [`NetServer::shutdown`].
+    pub fn wait(&self) {
+        let mut requested = self.shared.drain_requested.lock().unwrap();
+        while !*requested {
+            requested = self.shared.drain_cv.wait(requested).unwrap();
+        }
+    }
+
+    /// Graceful drain: stop accepting, refuse new submits with typed
+    /// `SHUTDOWN` replies, finish every queued request, flush background
+    /// model training, publish a final metrics snapshot, join all
+    /// threads. No admitted request is lost.
+    pub fn shutdown(mut self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // Poke a blocked accept() so the loop observes the flag.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Close admission and drain: workers finish everything queued.
+        for pool in self.pools.drain(..) {
+            pool.shutdown();
+        }
+        // Final flush: background trainer, then one last metrics
+        // publish so exporters see the drained totals.
+        self.shared.service.flush_model_training();
+        self.shared.service.publish_obs();
+        self.shared.service.faults().publish_obs();
+        // Connection handlers exit on the draining flag (idle reads
+        // return `None`) or after their last in-flight reply.
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Serve one client connection: read frames, dispatch, reply, repeat
+/// until the peer closes, the guards trip, or the server drains.
+fn handle_conn(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    loop {
+        let payload =
+            match read_frame(&mut stream, &shared.guards, &shared.draining, None) {
+                Ok(Some(p)) => p,
+                // Clean close, or the server is draining: if an earlier
+                // submit on this connection is still in flight its reply
+                // already went out (we only reach the next read after
+                // replying), so nothing is lost.
+                Ok(None) => return,
+                // TooLarge / TimedOut / mid-frame EOF: the stream can no
+                // longer be trusted to be frame-aligned. Drop it.
+                Err(_) => return,
+            };
+        let (opcode, mut cursor) = match decode_header(&payload) {
+            Ok(hc) => hc,
+            Err(msg) => {
+                // Unversioned garbage: reply once, then close (framing
+                // may be fine but the peer clearly isn't speaking our
+                // protocol).
+                let _ = write_frame(
+                    &mut stream,
+                    &NetReply::rejection(STATUS_BADREQ, &msg).encode(),
+                );
+                return;
+            }
+        };
+        match opcode {
+            OP_PING => {
+                let reply = NetReply::rejection(STATUS_OK, "");
+                if write_frame(&mut stream, &reply.encode()).is_err() {
+                    return;
+                }
+            }
+            OP_SHUTDOWN => {
+                // Ack first, then signal: the sender gets confirmation
+                // that drain is underway.
+                let _ = write_frame(
+                    &mut stream,
+                    &NetReply::rejection(STATUS_OK, "").encode(),
+                );
+                shared.request_drain();
+                return;
+            }
+            OP_SUBMIT => {
+                Counters::bump(&shared.service.counters.net_requests);
+                if shared.draining.load(Ordering::SeqCst) {
+                    let reply = NetReply::rejection(STATUS_SHUTDOWN, "");
+                    let _ = write_frame(&mut stream, &reply.encode());
+                    continue;
+                }
+                // Injected connection drop: fires BEFORE admission so
+                // the request never executes — the client's retry is
+                // the only execution. Exactly-once stays intact.
+                if shared.service.faults().net_drop() {
+                    Counters::bump(&shared.service.counters.net_drops);
+                    return;
+                }
+                let spec = match SubmitSpec::decode(&mut cursor) {
+                    Ok(s) => s,
+                    Err(msg) => {
+                        let reply = NetReply::rejection(STATUS_BADREQ, &msg);
+                        if write_frame(&mut stream, &reply.encode()).is_err() {
+                            return;
+                        }
+                        continue;
+                    }
+                };
+                let reply = serve_submit(shared, &spec);
+                if write_frame(&mut stream, &reply.encode()).is_err() {
+                    return;
+                }
+            }
+            other => {
+                let reply = NetReply::rejection(
+                    STATUS_BADREQ,
+                    &format!("unknown opcode {other}"),
+                );
+                if write_frame(&mut stream, &reply.encode()).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Admit one decoded submit and wait for its reply.
+fn serve_submit(shared: &Shared, spec: &SubmitSpec) -> NetReply {
+    // Resolve the target queue: named device, or round-robin.
+    let slot = if spec.device.is_empty() {
+        let i = shared.next_device.fetch_add(1, Ordering::Relaxed);
+        Some(&shared.queues[i % shared.queues.len()])
+    } else {
+        shared.queues.iter().find(|(d, _)| d.name == spec.device)
+    };
+    let Some((_, queue)) = slot else {
+        return NetReply::rejection(
+            STATUS_BADREQ,
+            &format!("no serving pool for device {:?}", spec.device),
+        );
+    };
+    let (tx, rx) = mpsc::channel();
+    let deadline = if spec.deadline_us > 0 {
+        Some(Instant::now() + Duration::from_micros(spec.deadline_us))
+    } else {
+        shared.default_deadline.map(|d| Instant::now() + d)
+    };
+    let req = ServeRequest::new(&spec.kernel, spec.grid, spec.seed, tx)
+        .with_tenant(&spec.tenant)
+        .with_deadline(deadline);
+    match queue.push(req) {
+        Ok(()) => match rx.recv() {
+            Ok(reply) => NetReply::from_serve(&reply),
+            // Worker pool tore down under us (hard shutdown).
+            Err(_) => NetReply::rejection(STATUS_SHUTDOWN, ""),
+        },
+        Err((_, rej)) => {
+            bump_reject(&shared.service.counters, &rej);
+            let msg = match &rej {
+                Reject::Exec(m) | Reject::BadRequest(m) => m.clone(),
+                _ => String::new(),
+            };
+            NetReply::rejection(reject_status(&rej), &msg)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Client-side failure.
+#[derive(Debug)]
+pub enum NetError {
+    /// Connection-level failure (connect/read/write) after retries.
+    Transport(String),
+    /// The server answered with a non-OK status after retries.
+    Rejected(NetReply),
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Transport(msg) => write!(f, "transport: {msg}"),
+            NetError::Rejected(r) => {
+                write!(f, "{}", r.code())?;
+                if !r.message.is_empty() {
+                    write!(f, ": {}", r.message)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Blocking client with a persistent connection, automatic reconnect,
+/// and capped exponential backoff + jitter on retryable failures only
+/// (transport errors, `SHED`, `PANIC`). Used by `imagecl submit` and by
+/// loadgen's `--remote` mode.
+pub struct NetClient {
+    addr: String,
+    stream: Option<TcpStream>,
+    rng: crate::testutil::Rng,
+    /// Total attempts per submit (first try + retries).
+    pub max_attempts: u32,
+    /// Overall wait for one reply (covers cold-key tuning).
+    pub reply_timeout: Duration,
+}
+
+const BACKOFF_BASE: Duration = Duration::from_millis(1);
+const BACKOFF_CAP: Duration = Duration::from_millis(100);
+
+impl NetClient {
+    pub fn new(addr: &str, seed: u64) -> NetClient {
+        NetClient {
+            addr: addr.to_string(),
+            stream: None,
+            rng: crate::testutil::Rng::new(seed ^ 0x6e65745f636c6e74),
+            max_attempts: 6,
+            reply_timeout: Duration::from_secs(120),
+        }
+    }
+
+    fn stream(&mut self) -> Result<&mut TcpStream, String> {
+        if self.stream.is_none() {
+            let stream = TcpStream::connect(&self.addr)
+                .map_err(|e| format!("connect {}: {e}", self.addr))?;
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+            self.stream = Some(stream);
+        }
+        Ok(self.stream.as_mut().expect("just connected"))
+    }
+
+    /// One request/reply round trip; any failure poisons the cached
+    /// connection so the next attempt reconnects.
+    fn round_trip(&mut self, payload: &[u8]) -> Result<NetReply, String> {
+        let timeout = self.reply_timeout;
+        let result = (|| {
+            let stream = self.stream()?;
+            write_frame(stream, payload).map_err(|e| format!("send: {e}"))?;
+            let guards =
+                ReadGuards { max_bytes: MAX_FRAME, deadline: Duration::from_secs(5) };
+            let stop = AtomicBool::new(false);
+            match read_frame(stream, &guards, &stop, Some(timeout)) {
+                Ok(Some(reply)) => Ok(reply),
+                Ok(None) => Err("server closed the connection".to_string()),
+                Err(e) => Err(format!("recv: {e}")),
+            }
+        })();
+        match result {
+            Ok(payload) => {
+                let (opcode, mut c) = decode_header(&payload)
+                    .map_err(|e| format!("bad reply header: {e}"))?;
+                if opcode != OP_SUBMIT {
+                    return Err(format!("unexpected reply opcode {opcode}"));
+                }
+                NetReply::decode(&mut c).map_err(|e| format!("bad reply: {e}"))
+            }
+            Err(e) => {
+                self.stream = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn backoff(&mut self, attempt: u32) {
+        let exp = BACKOFF_BASE.saturating_mul(1u32 << attempt.min(10)).min(BACKOFF_CAP);
+        let jitter = Duration::from_micros(
+            self.rng.below(((exp.as_micros() as usize) / 2).max(1)) as u64,
+        );
+        std::thread::sleep(exp + jitter);
+    }
+
+    /// Submit a request; retries transport failures and retryable
+    /// statuses with capped exponential backoff + jitter. Returns the
+    /// successful reply, or the last failure once attempts run out —
+    /// non-retryable rejections (`QUOTA`, `DEADLINE`, `EXEC`, `BADREQ`,
+    /// `SHUTDOWN`) return immediately.
+    pub fn submit(&mut self, spec: &SubmitSpec) -> Result<NetReply, NetError> {
+        let payload = spec.encode();
+        let mut last = NetError::Transport("no attempt made".to_string());
+        for attempt in 0..self.max_attempts {
+            if attempt > 0 {
+                self.backoff(attempt - 1);
+            }
+            match self.round_trip(&payload) {
+                Ok(reply) if reply.is_ok() => return Ok(reply),
+                Ok(reply) if status_retryable(reply.status) => {
+                    last = NetError::Rejected(reply);
+                }
+                Ok(reply) => return Err(NetError::Rejected(reply)),
+                Err(msg) => last = NetError::Transport(msg),
+            }
+        }
+        Err(last)
+    }
+
+    /// Liveness probe (no retry).
+    pub fn ping(&mut self) -> Result<(), String> {
+        let reply = self.round_trip(&header(OP_PING))?;
+        if reply.is_ok() {
+            Ok(())
+        } else {
+            Err(format!("ping answered {}", reply.code()))
+        }
+    }
+
+    /// Ask the server to drain gracefully; returns once acknowledged.
+    pub fn shutdown_server(&mut self) -> Result<(), String> {
+        let reply = self.round_trip(&header(OP_SHUTDOWN))?;
+        if reply.is_ok() {
+            Ok(())
+        } else {
+            Err(format!("shutdown answered {}", reply.code()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::INTEL_I7;
+    use crate::serve::{ExecMode, ServiceConfig};
+    use crate::tuner::Strategy;
+
+    fn sim_service() -> Arc<KernelService> {
+        KernelService::new(ServiceConfig {
+            strategy: Strategy::Random { evals: 30, seed: 1 },
+            db_path: None,
+            legacy_tsv: None,
+            exec: ExecMode::Simulate,
+            plan_cache_cap: None,
+            transfer_budget: 0,
+            predict_budget: 0,
+        })
+    }
+
+    fn server(service: Arc<KernelService>) -> NetServer {
+        NetServer::start(
+            service,
+            NetServerOpts {
+                devices: vec![&INTEL_I7],
+                workers_per_device: 2,
+                queue_cap: 16,
+                max_batch: 4,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn submit_spec_and_reply_round_trip_the_codec() {
+        let mut spec = SubmitSpec::new("sobel", (64, 48), 7);
+        spec.tenant = "tenant-a".to_string();
+        spec.device = "Intel i7".to_string();
+        spec.deadline_us = 1_500_000;
+        let payload = spec.encode();
+        let (opcode, mut c) = decode_header(&payload).unwrap();
+        assert_eq!(opcode, OP_SUBMIT);
+        assert_eq!(SubmitSpec::decode(&mut c).unwrap(), spec);
+
+        let reply = NetReply {
+            status: STATUS_EXEC,
+            device: "Intel i7".to_string(),
+            message: "boom".to_string(),
+            seconds: 1.25e-3,
+            checksum: 0xDEADBEEF,
+            latency_us: 421,
+            batch: 3,
+        };
+        let payload = reply.encode();
+        let (_, mut c) = decode_header(&payload).unwrap();
+        assert_eq!(NetReply::decode(&mut c).unwrap(), reply);
+        assert_eq!(reply.code(), "EXEC");
+    }
+
+    #[test]
+    fn header_rejects_wrong_magic_and_version() {
+        let mut bad_magic = header(OP_PING);
+        bad_magic[0] = 0xFF;
+        assert!(decode_header(&bad_magic).unwrap_err().contains("magic"));
+        let mut bad_version = header(OP_PING);
+        bad_version[2] = 99;
+        assert!(decode_header(&bad_version).unwrap_err().contains("version"));
+        let (op, _) = decode_header(&header(OP_PING)).unwrap();
+        assert_eq!(op, OP_PING);
+    }
+
+    #[test]
+    fn decode_rejects_truncated_and_invalid_bodies() {
+        let spec = SubmitSpec::new("sobel", (16, 16), 0);
+        let payload = spec.encode();
+        // Truncate mid-body: every prefix must error, never panic.
+        for cut in 4..payload.len() {
+            let (_, mut c) = decode_header(&payload[..cut]).unwrap();
+            assert!(SubmitSpec::decode(&mut c).is_err(), "cut at {cut}");
+        }
+        // Zero grid is rejected semantically.
+        let zero = SubmitSpec { grid: (0, 4), ..spec };
+        let payload = zero.encode();
+        let (_, mut c) = decode_header(&payload).unwrap();
+        assert!(SubmitSpec::decode(&mut c).unwrap_err().contains("grid"));
+    }
+
+    #[test]
+    fn server_serves_ping_submit_and_typed_errors_over_tcp() {
+        let service = sim_service();
+        let srv = server(service.clone());
+        let mut client = NetClient::new(&srv.addr().to_string(), 1);
+        client.ping().unwrap();
+
+        let reply = client.submit(&SubmitSpec::new("sobel", (32, 32), 0)).unwrap();
+        assert!(reply.is_ok());
+        assert_eq!(reply.device, INTEL_I7.name);
+        assert!(reply.seconds > 0.0);
+
+        // Unknown kernel → typed EXEC rejection, not a dropped conn.
+        let err = client.submit(&SubmitSpec::new("bogus", (16, 16), 0)).unwrap_err();
+        match err {
+            NetError::Rejected(r) => {
+                assert_eq!(r.status, STATUS_EXEC);
+                assert!(r.message.contains("bogus"), "{}", r.message);
+            }
+            other => panic!("want Rejected, got {other:?}"),
+        }
+
+        // Unknown device → BADREQ.
+        let mut spec = SubmitSpec::new("sobel", (16, 16), 0);
+        spec.device = "No Such GPU".to_string();
+        let err = client.submit(&spec).unwrap_err();
+        assert!(matches!(err, NetError::Rejected(ref r) if r.status == STATUS_BADREQ));
+
+        assert!(service.stats().net_requests >= 3);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn shutdown_frame_drains_and_new_submits_are_refused() {
+        let service = sim_service();
+        let srv = server(service);
+        let addr = srv.addr().to_string();
+        let mut client = NetClient::new(&addr, 2);
+        assert!(client.submit(&SubmitSpec::new("sobel", (16, 16), 0)).unwrap().is_ok());
+        client.shutdown_server().unwrap();
+        srv.wait(); // returns because the frame set the drain flag
+        srv.shutdown();
+        // Server gone: connection refused or immediate close.
+        let mut late = NetClient::new(&addr, 3);
+        assert!(late.submit(&SubmitSpec::new("sobel", (16, 16), 0)).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_is_dropped_not_served() {
+        let service = sim_service();
+        let srv = server(service);
+        let mut stream = TcpStream::connect(srv.addr()).unwrap();
+        // Claim a payload far over MAX_FRAME; the guard must drop the
+        // connection rather than allocate/read it.
+        stream
+            .write_all(&((MAX_FRAME as u32 + 10) as u32).to_le_bytes())
+            .unwrap();
+        stream.write_all(&[0u8; 16]).unwrap();
+        let mut buf = [0u8; 16];
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
+        // Read returns 0 (server closed) — not a reply frame.
+        assert_eq!(stream.read(&mut buf).unwrap_or(0), 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn read_frame_times_out_on_slow_loris() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let guards = ReadGuards {
+                max_bytes: MAX_FRAME,
+                deadline: Duration::from_millis(200),
+            };
+            let stop = AtomicBool::new(false);
+            read_frame(&mut stream, &guards, &stop, None)
+        });
+        let mut client = TcpStream::connect(addr).unwrap();
+        // Send one byte of the length prefix, then stall.
+        client.write_all(&[4]).unwrap();
+        let result = t.join().unwrap();
+        assert!(matches!(result, Err(ReadError::TimedOut)), "{result:?}");
+    }
+}

@@ -1,4 +1,4 @@
-//! Per-device worker pools: threads that drain the device's bounded
+//! Per-device worker pools: threads that drain the device's fair
 //! admission queue in same-plan batches and execute them against the
 //! plan cache.
 //!
@@ -6,6 +6,14 @@
 //! ever, the tune + compile) once; each member then only pays its own
 //! buffer setup and execution. Replies travel over a plain
 //! `std::sync::mpsc` channel supplied per request.
+//!
+//! Robustness (PR 8): execution runs inside a `catch_unwind` boundary —
+//! a panicking kernel produces a typed `PANIC` reply instead of killing
+//! the worker thread; repeated panics for one plan key trip the
+//! service's quarantine ([`KernelService::note_panic`]), which evicts
+//! the cached plan and reroutes the key to the tree-walk oracle.
+//! Requests whose deadline expired while queued are rejected with
+//! `DEADLINE` before any execution is spent on them.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -14,9 +22,10 @@ use std::time::{Duration, Instant};
 
 use crate::bench_defs;
 use crate::devices::DeviceSpec;
+use crate::exec::Engine;
 use crate::obs;
 
-use super::queue::BoundedQueue;
+use super::admission::{bump_reject, FairQueue, Reject, TokenBuckets};
 use super::{Counters, ExecMode, KernelService};
 
 /// Batching key: requests for the same kernel at the same grid share a
@@ -31,6 +40,11 @@ pub struct ServeRequest {
     pub seed: u64,
     /// Admission timestamp; latency is measured from here.
     pub submitted: Instant,
+    /// Tenant the request bills against (quota + fair queueing).
+    pub tenant: String,
+    /// Serve-by deadline; `None` = best effort. Checked at admission
+    /// and again when a worker picks the request up.
+    pub deadline: Option<Instant>,
     /// Where the reply goes.
     pub reply: Sender<ServeReply>,
     /// Trace ID for the request's spans (0 = untraced).
@@ -43,7 +57,8 @@ pub struct ServeRequest {
 
 impl ServeRequest {
     /// Build a request with a fresh trace/root-span ID pair and the
-    /// admission timestamp set to now.
+    /// admission timestamp set to now. Tenant defaults to `"anon"`,
+    /// deadline to best-effort.
     pub fn new(
         kernel: &str,
         grid: (usize, usize),
@@ -56,10 +71,22 @@ impl ServeRequest {
             grid,
             seed,
             submitted: Instant::now(),
+            tenant: "anon".to_string(),
+            deadline: None,
             reply,
             trace: t.next_id(),
             root_span: t.next_id(),
         }
+    }
+
+    pub fn with_tenant(mut self, tenant: &str) -> ServeRequest {
+        self.tenant = tenant.to_string();
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<Instant>) -> ServeRequest {
+        self.deadline = deadline;
+        self
     }
 
     pub fn batch_key(&self) -> BatchKey {
@@ -74,8 +101,13 @@ pub struct ServeReply {
     pub device: &'static str,
     /// Seconds attributed to the kernel execution: measured wall time in
     /// [`ExecMode::Real`], the device-model estimate in
-    /// [`ExecMode::Simulate`]. `Err` carries the failure text.
-    pub result: Result<f64, String>,
+    /// [`ExecMode::Simulate`]. `Err` carries the typed rejection.
+    pub result: Result<f64, Reject>,
+    /// FNV-1a checksum over the output buffers ([`ExecMode::Real`] only;
+    /// 0 in simulate mode and on errors). The chaos test compares this
+    /// against the tree-walk oracle to prove fault-path replies are
+    /// still bit-identical.
+    pub checksum: u64,
     /// Admission → completion.
     pub latency: Duration,
     /// Size of the batch this request was served in.
@@ -86,18 +118,24 @@ impl ServeReply {
     pub fn is_ok(&self) -> bool {
         self.result.is_ok()
     }
+
+    /// The reply's typed rejection, if any.
+    pub fn reject(&self) -> Option<&Reject> {
+        self.result.as_ref().err()
+    }
 }
 
 /// A device's admission queue plus its worker threads.
 pub struct DevicePool {
     pub device: &'static DeviceSpec,
-    queue: Arc<BoundedQueue<BatchKey, ServeRequest>>,
+    queue: Arc<FairQueue>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl DevicePool {
     /// Spawn `workers` threads serving `device` from a queue of capacity
-    /// `queue_cap`, batching up to `max_batch` same-key requests.
+    /// `queue_cap`, batching up to `max_batch` same-key requests. No
+    /// tenant quota, default DRR quantum.
     pub fn start(
         device: &'static DeviceSpec,
         service: Arc<KernelService>,
@@ -105,7 +143,30 @@ impl DevicePool {
         queue_cap: usize,
         max_batch: usize,
     ) -> DevicePool {
-        let queue = Arc::new(BoundedQueue::new(queue_cap));
+        DevicePool::start_with(
+            device,
+            service,
+            workers,
+            queue_cap,
+            max_batch,
+            Arc::new(TokenBuckets::unlimited()),
+            FairQueue::DEFAULT_QUANTUM,
+        )
+    }
+
+    /// [`DevicePool::start`] with explicit admission policy: a shared
+    /// token-bucket set (share one `Arc` across pools to make quotas
+    /// global rather than per-device) and the DRR quantum.
+    pub fn start_with(
+        device: &'static DeviceSpec,
+        service: Arc<KernelService>,
+        workers: usize,
+        queue_cap: usize,
+        max_batch: usize,
+        buckets: Arc<TokenBuckets>,
+        quantum: usize,
+    ) -> DevicePool {
+        let queue = Arc::new(FairQueue::new(queue_cap, quantum, buckets));
         let handles = (0..workers.max(1))
             .map(|i| {
                 let queue = queue.clone();
@@ -120,7 +181,7 @@ impl DevicePool {
     }
 
     /// The admission side (cloneable, shared with submitters).
-    pub fn queue(&self) -> Arc<BoundedQueue<BatchKey, ServeRequest>> {
+    pub fn queue(&self) -> Arc<FairQueue> {
         self.queue.clone()
     }
 
@@ -133,10 +194,84 @@ impl DevicePool {
     }
 }
 
+/// Execute one request against a ready plan entry. Returns
+/// `(seconds, checksum)` or a typed rejection. All fault injection and
+/// the panic-isolation boundary live here.
+fn execute_one(
+    service: &KernelService,
+    device: &'static DeviceSpec,
+    entry: &super::PlanEntry,
+    req: &ServeRequest,
+) -> Result<(f64, u64), Reject> {
+    let quarantined = service.is_quarantined(&entry.key);
+    let faults = service.faults();
+    match service.exec_mode() {
+        ExecMode::Simulate => {
+            let _g = obs::span("exec.simulate");
+            // Injected delay/panic apply in simulate mode too (they
+            // model a wedged or crashing executor, which simulation is
+            // not immune to) — but a quarantined key is served through
+            // the stable fallback and skips injection, mirroring the
+            // real-mode contract.
+            if !quarantined {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                    || faults.before_exec(),
+                ));
+                if r.is_err() {
+                    Counters::bump(&service.counters.exec_panics);
+                    service.note_panic(&entry.key);
+                    return Err(Reject::Panic);
+                }
+            }
+            Ok((entry.est_seconds, 0))
+        }
+        // Real execution prefers the PJRT artifact path (`--features
+        // xla` + artifacts present) and falls back to the NDRange
+        // interpreter.
+        ExecMode::Real => {
+            if let Some(secs) = service.artifact_exec(&req.kernel, req.grid, req.seed)
+            {
+                return Ok((secs, 0));
+            }
+            let _g = obs::span("exec.run");
+            let mut args =
+                bench_defs::workload(&req.kernel, req.grid.0, req.grid.1, req.seed);
+            let t0 = Instant::now();
+            let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if quarantined {
+                    // Poisoned plan: the cached entry was evicted and
+                    // the key's executions run through the serial
+                    // tree-walk oracle — slower, but the reference
+                    // semantics.
+                    entry.prepared.run_with(&mut args, Engine::TreeWalk)
+                } else {
+                    faults.before_exec();
+                    entry.prepared.run(&mut args)
+                }
+            }));
+            match run {
+                Err(_) => {
+                    Counters::bump(&service.counters.exec_panics);
+                    service.note_panic(&entry.key);
+                    Err(Reject::Panic)
+                }
+                Ok(Err(e)) => Err(Reject::Exec(e.to_string())),
+                Ok(Ok(())) => {
+                    let secs = t0.elapsed().as_secs_f64();
+                    // Real-execution ground truth back into the
+                    // knowledge base (once per cache entry).
+                    service.observe_wall(entry, device, secs);
+                    Ok((secs, bench_defs::args_checksum(&args)))
+                }
+            }
+        }
+    }
+}
+
 fn worker_loop(
     device: &'static DeviceSpec,
     service: &KernelService,
-    queue: &BoundedQueue<BatchKey, ServeRequest>,
+    queue: &FairQueue,
     max_batch: usize,
 ) {
     // Spans recorded on this thread (plan, execute, request roots) are
@@ -157,48 +292,31 @@ fn worker_loop(
             Err(e) => {
                 let msg = e.to_string();
                 for req in batch {
-                    respond(req, device, Err(msg.clone()), batch_len);
+                    respond(req, device, Err(Reject::Exec(msg.clone())), 0, batch_len);
                 }
             }
             Ok(entry) => {
                 for req in batch {
+                    // Deadline re-check: the request may have aged out
+                    // while queued (or while this batch planned). Reject
+                    // before spending execution on it.
+                    if let Some(deadline) = req.deadline {
+                        if Instant::now() >= deadline {
+                            bump_reject(&service.counters, &Reject::Deadline);
+                            respond(req, device, Err(Reject::Deadline), 0, batch_len);
+                            continue;
+                        }
+                    }
                     let _exec_span = (req.trace != 0)
                         .then(|| obs::span_under(req.trace, req.root_span, "serve.execute"));
-                    let result = match service.exec_mode() {
-                        ExecMode::Simulate => {
-                            let _g = obs::span("exec.simulate");
-                            Ok(entry.est_seconds)
-                        }
-                        // Real execution prefers the PJRT artifact path
-                        // (`--features xla` + artifacts present) and
-                        // falls back to the NDRange interpreter.
-                        ExecMode::Real => match service
-                            .artifact_exec(&kernel, grid, req.seed)
-                        {
-                            Some(secs) => Ok(secs),
-                            None => {
-                                let _g = obs::span("exec.run");
-                                let mut args = bench_defs::workload(
-                                    &kernel, grid.0, grid.1, req.seed,
-                                );
-                                let t0 = Instant::now();
-                                let r = entry
-                                    .prepared
-                                    .run(&mut args)
-                                    .map(|()| t0.elapsed().as_secs_f64())
-                                    .map_err(|e| e.to_string());
-                                if let Ok(secs) = r {
-                                    // Real-execution ground truth back
-                                    // into the knowledge base (once per
-                                    // cache entry).
-                                    service.observe_wall(&entry, device, secs);
-                                }
-                                r
-                            }
-                        },
-                    };
+                    let outcome = execute_one(service, device, &entry, &req);
                     drop(_exec_span);
-                    respond(req, device, result, batch_len);
+                    match outcome {
+                        Ok((secs, checksum)) => {
+                            respond(req, device, Ok(secs), checksum, batch_len)
+                        }
+                        Err(rej) => respond(req, device, Err(rej), 0, batch_len),
+                    }
                 }
             }
         }
@@ -208,7 +326,8 @@ fn worker_loop(
 fn respond(
     req: ServeRequest,
     device: &'static DeviceSpec,
-    result: Result<f64, String>,
+    result: Result<f64, Reject>,
+    checksum: u64,
     batch: usize,
 ) {
     let latency = req.submitted.elapsed();
@@ -235,6 +354,7 @@ fn respond(
         kernel: req.kernel,
         device: device.name,
         result,
+        checksum,
         latency,
         batch,
     };
@@ -242,31 +362,49 @@ fn respond(
     let _ = req.reply.send(reply);
 }
 
-/// Submit with bounded-queue backpressure: retry until admitted,
-/// counting at most one rejection per request (it measures shed load,
-/// not spin iterations) and backing off briefly between attempts so a
-/// full queue doesn't burn a client core. Returns `false` if the queue
-/// closed.
+/// Submit with backpressure: retry `SHED` (queue full) and `QUOTA`
+/// (bucket refills with time) until admitted, counting at most one
+/// rejection per request (it measures shed load, not spin iterations)
+/// and backing off briefly between attempts so a full queue doesn't
+/// burn a client core. A `DEADLINE` refusal delivers the typed reply to
+/// the request's own channel (exactly one outcome either way) and
+/// returns `true`; only a closed queue returns `false`.
 pub fn submit_with_retry(
-    queue: &BoundedQueue<BatchKey, ServeRequest>,
+    queue: &FairQueue,
     counters: &Counters,
     mut req: ServeRequest,
 ) -> bool {
     let _submit_span = (req.trace != 0)
         .then(|| obs::span_under(req.trace, req.root_span, "serve.submit"));
-    let mut rejected = false;
+    let mut counted = false;
     loop {
-        match queue.push(req.batch_key(), req) {
+        match queue.push(req) {
             Ok(()) => return true,
-            Err(super::PushError::Full(r)) => {
-                if !rejected {
-                    Counters::bump(&counters.rejected);
-                    rejected = true;
+            Err((r, rej)) => match rej {
+                Reject::Shed | Reject::Quota => {
+                    if !counted {
+                        Counters::bump(&counters.rejected);
+                        bump_reject(counters, &rej);
+                        counted = true;
+                    }
+                    req = r;
+                    std::thread::sleep(std::time::Duration::from_micros(100));
                 }
-                req = r;
-                std::thread::sleep(std::time::Duration::from_micros(100));
-            }
-            Err(super::PushError::Closed(_)) => return false,
+                Reject::Deadline => {
+                    bump_reject(counters, &Reject::Deadline);
+                    let reply = ServeReply {
+                        kernel: r.kernel.clone(),
+                        device: "",
+                        result: Err(Reject::Deadline),
+                        checksum: 0,
+                        latency: r.submitted.elapsed(),
+                        batch: 0,
+                    };
+                    let _ = r.reply.send(reply);
+                    return true;
+                }
+                _ => return false,
+            },
         }
     }
 }
@@ -275,13 +413,13 @@ pub fn submit_with_retry(
 mod tests {
     use super::*;
     use crate::devices::INTEL_I7;
+    use crate::serve::faults::{FaultInjector, FaultSpec};
     use crate::serve::ServiceConfig;
     use crate::tuner::Strategy;
     use std::sync::mpsc;
 
-    #[test]
-    fn pool_serves_and_shuts_down() {
-        let service = KernelService::new(ServiceConfig {
+    fn sim_service() -> Arc<KernelService> {
+        KernelService::new(ServiceConfig {
             strategy: Strategy::Random { evals: 30, seed: 1 },
             db_path: None,
             legacy_tsv: None,
@@ -289,7 +427,12 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 0,
-        });
+        })
+    }
+
+    #[test]
+    fn pool_serves_and_shuts_down() {
+        let service = sim_service();
         let pool = DevicePool::start(&INTEL_I7, service.clone(), 2, 8, 4);
         let (tx, rx) = mpsc::channel();
         let queue = pool.queue();
@@ -310,21 +453,46 @@ mod tests {
 
     #[test]
     fn bad_kernel_requests_get_error_replies() {
-        let service = KernelService::new(ServiceConfig {
-            strategy: Strategy::Random { evals: 30, seed: 1 },
-            db_path: None,
-            legacy_tsv: None,
-            exec: ExecMode::Simulate,
-            plan_cache_cap: None,
-            transfer_budget: 0,
-            predict_budget: 0,
-        });
+        let service = sim_service();
         let pool = DevicePool::start(&INTEL_I7, service.clone(), 1, 4, 4);
         let (tx, rx) = mpsc::channel();
         let req = ServeRequest::new("bogus", (16, 16), 0, tx);
         assert!(submit_with_retry(&pool.queue(), &service.counters, req));
         let reply = rx.recv().unwrap();
         assert!(reply.result.is_err());
+        assert!(matches!(reply.reject(), Some(Reject::Exec(_))));
         pool.shutdown();
+    }
+
+    #[test]
+    fn panicking_execution_is_caught_and_quarantine_trips() {
+        let service = sim_service();
+        // Every execution panics until the key is quarantined; the
+        // quarantined fallback then serves cleanly.
+        service.set_faults(FaultInjector::new(FaultSpec {
+            exec_panic: 1.0,
+            seed: 5,
+            ..Default::default()
+        }));
+        let pool = DevicePool::start(&INTEL_I7, service.clone(), 1, 8, 1);
+        let queue = pool.queue();
+        let mut outcomes = Vec::new();
+        for seed in 0..5 {
+            let (tx, rx) = mpsc::channel();
+            let req = ServeRequest::new("sobel", (16, 16), seed, tx);
+            assert!(submit_with_retry(&queue, &service.counters, req));
+            outcomes.push(rx.recv().unwrap());
+        }
+        pool.shutdown();
+        let panics =
+            outcomes.iter().filter(|r| r.reject() == Some(&Reject::Panic)).count();
+        let ok = outcomes.iter().filter(|r| r.is_ok()).count();
+        assert_eq!(panics as u64, KernelService::QUARANTINE_THRESHOLD);
+        assert_eq!(ok, outcomes.len() - panics, "post-quarantine requests succeed");
+        let s = service.stats();
+        assert_eq!(s.exec_panics, KernelService::QUARANTINE_THRESHOLD);
+        assert_eq!(s.quarantines, 1);
+        // The worker thread survived every panic (it served all 5).
+        assert!(Reject::Panic.retryable());
     }
 }

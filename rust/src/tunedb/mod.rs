@@ -87,6 +87,12 @@ pub struct DbCounters {
     /// Model (re)trainings actually executed (cache misses in
     /// [`TuneDb::model_for`], not calls).
     pub model_refreshes: AtomicU64,
+    /// Unusable store lines skipped on load (truncated trailing record
+    /// from a crashed append, corrupt or stale lines).
+    pub skipped_lines: AtomicU64,
+    /// Disk appends skipped by injected `tunedb_io` faults (chaos
+    /// testing; the in-memory index still gets the records).
+    pub io_faults: AtomicU64,
 }
 
 #[derive(Default)]
@@ -158,6 +164,11 @@ pub struct TuneDb {
     inner: Mutex<DbInner>,
     /// Activity counters (see [`DbCounters`]).
     pub obs: DbCounters,
+    /// Fault injector for chaos testing (disabled by default); its
+    /// `tunedb_io` site makes disk appends fail while the in-memory
+    /// index stays correct — the crash-safety path `open()` already
+    /// tolerates.
+    faults: Mutex<Arc<crate::serve::faults::FaultInjector>>,
 }
 
 /// Default knowledge-base path: `<crate>/target/tunedb.tsv` (override
@@ -187,6 +198,7 @@ impl TuneDb {
             path: None,
             inner: Mutex::new(DbInner::default()),
             obs: DbCounters::default(),
+            faults: Mutex::new(crate::serve::faults::FaultInjector::disabled()),
         }
     }
 
@@ -196,8 +208,11 @@ impl TuneDb {
     /// the file rewritten), so long-lived deployments stay bounded.
     pub fn open(path: &Path) -> TuneDb {
         let mut inner = DbInner::default();
+        let mut skipped = 0;
         if let Ok(text) = std::fs::read_to_string(path) {
-            for rec in store::parse_file(&text) {
+            let (recs, n_skipped) = store::parse_file(&text);
+            skipped = n_skipped;
+            for rec in recs {
                 inner.records.push(rec);
                 inner.index(inner.records.len() - 1);
             }
@@ -206,9 +221,17 @@ impl TuneDb {
             path: Some(path.to_path_buf()),
             inner: Mutex::new(inner),
             obs: DbCounters::default(),
+            faults: Mutex::new(crate::serve::faults::FaultInjector::disabled()),
         };
+        db.obs.skipped_lines.store(skipped as u64, Ordering::Relaxed);
         db.compact(HISTORY_CAP_PER_KEY);
         db
+    }
+
+    /// Install a fault injector (chaos testing). Its `tunedb_io` site
+    /// makes subsequent disk appends fail.
+    pub fn set_faults(&self, injector: Arc<crate::serve::faults::FaultInjector>) {
+        *self.faults.lock().unwrap() = injector;
     }
 
     /// Compact the store: per (kernel, device, grid) key, keep only the
@@ -278,7 +301,21 @@ impl TuneDb {
         // never race a concurrent append and erase it from disk.
         let mut g = self.inner.lock().unwrap();
         if let Some(path) = &self.path {
-            store::append(path, &recs);
+            // Injected IO fault: only the disk append is lost (matching
+            // a real failed write — `store::append` is best-effort);
+            // the in-memory index stays correct, so serving answers
+            // don't change. A restart would re-tune, which `open()`'s
+            // skip-and-warn load path tolerates.
+            let injector = self.faults.lock().unwrap().clone();
+            if injector.tunedb_io() {
+                self.obs.io_faults.fetch_add(1, Ordering::Relaxed);
+                eprintln!(
+                    "warning: injected tunedb_io fault: dropping disk append of {} record(s)",
+                    recs.len()
+                );
+            } else {
+                store::append(path, &recs);
+            }
         }
         for rec in recs {
             g.records.push(rec);
@@ -511,7 +548,7 @@ impl TuneDb {
     /// compaction shrinks them.
     pub fn publish_obs(&self) {
         let reg = crate::obs::registry();
-        let counters: [(&str, &str, &AtomicU64); 5] = [
+        let counters: [(&str, &str, &AtomicU64); 7] = [
             (
                 "imagecl_tunedb_lookups_exact_total",
                 "Lookups answered by an exact-key winner (tier 1)",
@@ -536,6 +573,16 @@ impl TuneDb {
                 "imagecl_tunedb_model_refreshes_total",
                 "Performance-model trainings executed",
                 &self.obs.model_refreshes,
+            ),
+            (
+                "imagecl_tunedb_skipped_lines",
+                "Unusable store lines skipped on load (truncated/corrupt)",
+                &self.obs.skipped_lines,
+            ),
+            (
+                "imagecl_tunedb_io_faults_total",
+                "Disk appends dropped by injected tunedb_io faults",
+                &self.obs.io_faults,
             ),
         ];
         for (name, help, v) in counters {
@@ -836,6 +883,51 @@ mod tests {
         let db = TuneDb::open(&path);
         assert_eq!(db.len(), 9);
         assert_eq!(db.exact("sobel", K40.name, (64, 64)).unwrap().seconds, 1e-4);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_tolerates_truncated_trailing_record() {
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_trunc_{}.tsv", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let db = TuneDb::open(&path);
+            db.record(rec("sobel", &K40, 64, 1e-4, true));
+            db.record(rec("conv2d", &INTEL_I7, 128, 2e-3, true));
+        }
+        // Simulate a crash mid-append: chop the file mid-way through the
+        // last record's line.
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cut = text.trim_end().len() - 17;
+        std::fs::write(&path, &text[..cut]).unwrap();
+        // Load succeeds, keeps the intact record, counts the skip.
+        let db = TuneDb::open(&path);
+        assert_eq!(db.len(), 1);
+        assert!(db.exact("sobel", K40.name, (64, 64)).is_some());
+        assert_eq!(db.obs.skipped_lines.load(Ordering::Relaxed), 1);
+        db.publish_obs(); // registers the skipped-lines family
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn injected_io_fault_drops_disk_append_only() {
+        use crate::serve::faults::{FaultInjector, FaultSpec};
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_iofault_{}.tsv", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let db = TuneDb::open(&path);
+            let spec = FaultSpec { tunedb_io: 1.0, ..FaultSpec::default() };
+            db.set_faults(FaultInjector::new(spec));
+            db.record(rec("sobel", &K40, 64, 1e-4, true));
+            // In-memory index is intact: lookups still answer.
+            assert!(db.exact("sobel", K40.name, (64, 64)).is_some());
+            assert_eq!(db.obs.io_faults.load(Ordering::Relaxed), 1);
+        }
+        // The append never reached disk.
+        let db = TuneDb::open(&path);
+        assert!(db.is_empty());
         let _ = std::fs::remove_file(&path);
     }
 

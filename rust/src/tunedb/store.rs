@@ -127,9 +127,13 @@ pub(crate) fn parse_line(line: &str) -> Option<TuneRecord> {
     })
 }
 
-/// Parse a whole store file, warning on (and skipping) unusable lines.
-pub(crate) fn parse_file(text: &str) -> Vec<TuneRecord> {
+/// Parse a whole store file, warning on (and skipping) unusable lines —
+/// including a truncated trailing record from a crashed append. Returns
+/// the records plus the skipped-line count (crash-safety telemetry:
+/// `imagecl_tunedb_skipped_lines_total`).
+pub(crate) fn parse_file(text: &str) -> (Vec<TuneRecord>, usize) {
     let mut out = Vec::new();
+    let mut skipped = 0;
     for (lno, line) in text.lines().enumerate() {
         let line = line.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -137,13 +141,16 @@ pub(crate) fn parse_file(text: &str) -> Vec<TuneRecord> {
         }
         match parse_line(line) {
             Some(r) => out.push(r),
-            None => eprintln!(
-                "warning: skipping unusable tunedb line {}: {line:?}",
-                lno + 1
-            ),
+            None => {
+                skipped += 1;
+                eprintln!(
+                    "warning: skipping unusable tunedb line {}: {line:?}",
+                    lno + 1
+                );
+            }
         }
     }
-    out
+    (out, skipped)
 }
 
 /// The one serialization path for store writes: records rendered to
@@ -309,9 +316,36 @@ mod tests {
     fn malformed_lines_skipped() {
         let good = render_line(&record(true));
         let text = format!("# header\n\nnot\tenough\tcols\n{good}\n");
-        let parsed = parse_file(&text);
+        let (parsed, skipped) = parse_file(&text);
         assert_eq!(parsed.len(), 1);
+        assert_eq!(skipped, 1);
         assert_eq!(parsed[0], record(true));
+    }
+
+    #[test]
+    fn truncated_trailing_record_is_skipped_not_fatal() {
+        // A crash mid-append leaves a partial final line. Loading must
+        // keep every complete record and count exactly one skip —
+        // regardless of where the truncation lands.
+        let a = render_line(&record(true));
+        let b = render_line(&record(false));
+        for cut in 1..b.len() {
+            let text = format!("{a}\n{}", &b[..cut]);
+            // Stay on a UTF-8 boundary (the record content is ASCII, but
+            // guard anyway).
+            if !text.is_char_boundary(text.len()) {
+                continue;
+            }
+            let (parsed, skipped) = parse_file(&text);
+            // The complete record always survives; the partial line is
+            // either skipped (counted) or — when the cut lands on a
+            // column boundary that happens to form a shorter valid
+            // record (TSV has no length prefix) — parsed. Never fatal,
+            // never corrupts the preceding record.
+            assert!(!parsed.is_empty(), "cut at {cut}");
+            assert_eq!(parsed[0], record(true), "cut at {cut}");
+            assert_eq!(parsed.len() + skipped, 2, "cut at {cut}");
+        }
     }
 
     #[test]
@@ -341,7 +375,8 @@ mod tests {
         append(&path, &[record(false)]);
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with("# kernel"), "{text}");
-        let recs = parse_file(&text);
+        let (recs, skipped) = parse_file(&text);
+        assert_eq!(skipped, 0);
         assert_eq!(recs.len(), 2);
         assert!(recs[0].best && !recs[1].best);
         let _ = std::fs::remove_file(&path);

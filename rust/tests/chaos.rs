@@ -1,0 +1,313 @@
+//! Chaos acceptance tests (PR 8): the full wire path under seeded fault
+//! injection must lose nothing and answer nothing wrongly.
+//!
+//! What "nothing lost, nothing wrong" means here:
+//!
+//! * every submitted request gets exactly one reply (the client call
+//!   returns exactly once, with a typed outcome — no hangs, no silent
+//!   drops even when connections are chopped mid-flight);
+//! * every `OK` reply's checksum is bit-identical to the serial
+//!   tree-walk oracle for that (kernel, grid, seed) workload — fault
+//!   paths (retries after injected panics/drops, quarantined plans) may
+//!   change *where* a request executes, never *what* it computes;
+//! * the injected faults actually fired (a zero-injection pass proves
+//!   nothing — the injector's per-site counters are part of the
+//!   acceptance), and graceful drain finishes all in-flight work.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use imagecl::analysis::KernelInfo;
+use imagecl::bench_defs::{args_checksum, kernel_by_id, workload};
+use imagecl::devices::INTEL_I7;
+use imagecl::exec::{Engine, PreparedKernel};
+use imagecl::imagecl::frontend;
+use imagecl::serve::metrics::percentile;
+use imagecl::serve::net::{SubmitSpec, STATUS_SHUTDOWN};
+use imagecl::serve::{
+    ExecMode, FaultInjector, FaultSpec, KernelService, LoadGenOpts, NetClient,
+    NetError, NetServer, NetServerOpts, ServiceConfig,
+};
+use imagecl::transform::lower;
+use imagecl::tuner::{tune_on_simulator, Strategy};
+
+const GRID: (usize, usize) = (16, 16);
+
+fn service(exec: ExecMode, db: Option<std::path::PathBuf>) -> Arc<KernelService> {
+    KernelService::new(ServiceConfig {
+        strategy: Strategy::Random { evals: 20, seed: 1 },
+        db_path: db,
+        legacy_tsv: None,
+        exec,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+    })
+}
+
+fn server(svc: Arc<KernelService>, workers: usize, max_batch: usize) -> NetServer {
+    NetServer::start(
+        svc,
+        NetServerOpts {
+            devices: vec![&INTEL_I7],
+            workers_per_device: workers,
+            queue_cap: 32,
+            max_batch,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// Reference answer: run the workload through the serial tree-walk
+/// interpreter and checksum the outputs. Any valid plan config computes
+/// the same bits (the repo's bit-identity invariant), so one tuned plan
+/// per kernel serves every seed.
+fn oracle_checksums(kernels: &[&str], seeds: u64) -> BTreeMap<(String, u64), u64> {
+    let mut out = BTreeMap::new();
+    for kernel in kernels {
+        let kdef = kernel_by_id(kernel).unwrap();
+        let info = KernelInfo::analyze(frontend(kdef.source).unwrap());
+        let res = tune_on_simulator(
+            &info,
+            &INTEL_I7,
+            GRID,
+            &Strategy::Random { evals: 5, seed: 1 },
+        );
+        let plan = lower(&info, &res.best).unwrap();
+        for seed in 0..seeds {
+            let mut args = workload(kernel, GRID.0, GRID.1, seed);
+            let prepared = PreparedKernel::prepare(&plan, &args, GRID).unwrap();
+            prepared.run_with(&mut args, Engine::TreeWalk).unwrap();
+            out.insert((kernel.to_string(), seed), args_checksum(&args));
+        }
+    }
+    out
+}
+
+/// The headline chaos run: real execution over TCP with panics injected
+/// into kernels, connections dropped post-read, every tunedb disk append
+/// failed, and a fixed pre-execution delay — all from one fixed seed.
+/// Zero lost requests, zero wrong answers, clean drain.
+#[test]
+fn chaos_wire_path_loses_nothing_and_answers_match_the_oracle() {
+    let kernels = ["sobel", "sepconv_row"];
+    // 4 client threads × 5 seeds each → seeds 0..20 per kernel.
+    let seeds_per_thread = 5u64;
+    let oracle = oracle_checksums(&kernels, 4 * seeds_per_thread);
+
+    let tsv = std::env::temp_dir()
+        .join(format!("imagecl_chaos_{}.tsv", std::process::id()));
+    let _ = std::fs::remove_file(&tsv);
+    let svc = service(ExecMode::Real, Some(tsv.clone()));
+    // tunedb_io=1 makes *every* disk append fail — serving must run on
+    // memory alone. The panic/drop rates are high enough that the fixed
+    // seed's first ~60 draws contain hits with near-certainty.
+    svc.set_faults(FaultInjector::new(
+        FaultSpec::parse("exec_panic=0.15,net_drop=0.2,tunedb_io=1.0,exec_delay=200us,seed=42")
+            .unwrap(),
+    ));
+    let srv = server(svc.clone(), 2, 4);
+    let addr = srv.addr().to_string();
+
+    // 4 client threads, each its own connection and retry stream.
+    let replies: Vec<(String, u64, Result<imagecl::serve::net::NetReply, String>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4u64)
+                .map(|t| {
+                    let addr = addr.clone();
+                    let kernels = &kernels;
+                    scope.spawn(move || {
+                        let mut client = NetClient::new(&addr, 100 + t);
+                        // Enough attempts that exhausting the retry
+                        // budget under these fault rates is a
+                        // non-event (p(fail)^12 per request).
+                        client.max_attempts = 12;
+                        let mut got = Vec::new();
+                        for i in 0..seeds_per_thread {
+                            for &kernel in kernels {
+                                let seed = t * seeds_per_thread + i;
+                                let spec = SubmitSpec::new(kernel, GRID, seed);
+                                let r = client
+                                    .submit(&spec)
+                                    .map_err(|e| e.to_string());
+                                got.push((kernel.to_string(), seed, r));
+                            }
+                        }
+                        got
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+
+    // Exactly one outcome per request, all of them successes: injected
+    // drops/panics are absorbed by the client's bounded retry, never by
+    // losing the request.
+    assert_eq!(replies.len(), 4 * seeds_per_thread as usize * kernels.len());
+    for (kernel, seed, r) in &replies {
+        let reply = r.as_ref().unwrap_or_else(|e| {
+            panic!("{kernel}/{seed} lost to chaos: {e}");
+        });
+        assert!(reply.is_ok(), "{kernel}/{seed}: {}", reply.code());
+        // Bit-identity: the reply's checksum matches the tree-walk
+        // oracle regardless of which path (plan cache, retry after
+        // panic, quarantine fallback) served it.
+        let want = oracle[&(kernel.clone(), *seed)];
+        assert_eq!(
+            reply.checksum, want,
+            "{kernel}/{seed}: wire answer diverged from the oracle"
+        );
+    }
+
+    // The chaos actually happened: the deterministic streams fired at
+    // every site (tunedb_io=1.0 fires on the first append; the seeded
+    // panic/drop streams fire well within this many draws).
+    let (panics, tunedb, drops) = svc.faults().injected();
+    assert!(panics + drops > 0, "no exec/net faults fired — vacuous run");
+    assert!(tunedb > 0, "no tunedb appends attempted — vacuous run");
+    let stats = svc.stats();
+    assert_eq!(stats.exec_panics, panics, "every injected panic was caught");
+    assert_eq!(stats.net_drops, drops);
+    assert!(stats.net_requests >= replies.len() as u64);
+
+    // Graceful drain via the wire: stop accepting, finish in-flight,
+    // then the process-side join.
+    let mut closer = NetClient::new(&addr, 999);
+    closer.shutdown_server().unwrap();
+    srv.wait();
+    srv.shutdown();
+    let mut late = NetClient::new(&addr, 1000);
+    assert!(late.submit(&SubmitSpec::new("sobel", GRID, 0)).is_err());
+    let _ = std::fs::remove_file(&tsv);
+}
+
+/// A plan that panics on every execution is quarantined after the
+/// threshold and the key reroutes to the tree-walk fallback — observed
+/// end-to-end through the TCP client's retry loop.
+#[test]
+fn chaos_quarantine_trips_over_the_wire() {
+    let svc = service(ExecMode::Simulate, None);
+    svc.set_faults(FaultInjector::new(FaultSpec {
+        exec_panic: 1.0,
+        seed: 7,
+        ..Default::default()
+    }));
+    let srv = server(svc.clone(), 1, 1);
+    let mut client = NetClient::new(&srv.addr().to_string(), 5);
+
+    // Attempts 1..=3 panic (each caught by worker isolation), tripping
+    // the quarantine; the retry loop's 4th attempt is served by the
+    // fallback. One submit call, one OK reply.
+    let reply = client.submit(&SubmitSpec::new("sobel", GRID, 0)).unwrap();
+    assert!(reply.is_ok(), "{}", reply.code());
+    let stats = svc.stats();
+    assert_eq!(stats.exec_panics, KernelService::QUARANTINE_THRESHOLD);
+    assert_eq!(stats.quarantines, 1);
+
+    // The key stays quarantined: later requests succeed first try and
+    // inject nothing further.
+    let before = svc.faults().injected().0;
+    for seed in 1..4 {
+        assert!(client.submit(&SubmitSpec::new("sobel", GRID, seed)).unwrap().is_ok());
+    }
+    assert_eq!(svc.faults().injected().0, before);
+    srv.shutdown();
+}
+
+/// Drain during a burst: every submit issued around the shutdown frame
+/// still gets exactly one typed outcome — `OK` for whatever was
+/// admitted, `SHUTDOWN` (or a terminal transport error once the listener
+/// is gone) for the rest. Nothing hangs, nothing is half-answered.
+#[test]
+fn chaos_graceful_drain_mid_burst_loses_no_request() {
+    let svc = service(ExecMode::Simulate, None);
+    // A per-request delay so the burst is still in the queues when the
+    // shutdown frame lands.
+    svc.set_faults(FaultInjector::new(
+        FaultSpec::parse("exec_delay=2ms,seed=3").unwrap(),
+    ));
+    let srv = server(svc.clone(), 1, 2);
+    let addr = srv.addr().to_string();
+
+    let outcomes: Vec<Result<u8, String>> = std::thread::scope(|scope| {
+        let clients: Vec<_> = (0..3u64)
+            .map(|t| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut client = NetClient::new(&addr, 20 + t);
+                    (0..10u64)
+                        .map(|seed| match client
+                            .submit(&SubmitSpec::new("sobel", GRID, seed))
+                        {
+                            Ok(r) => Ok(r.status),
+                            Err(NetError::Rejected(r)) => Ok(r.status),
+                            Err(NetError::Transport(e)) => Err(e),
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        // Let the burst get going, then pull the plug mid-flight.
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let mut closer = NetClient::new(&addr, 99);
+        closer.shutdown_server().unwrap();
+        clients.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    srv.wait();
+    srv.shutdown();
+
+    assert_eq!(outcomes.len(), 30, "every submit returned exactly once");
+    let ok = outcomes.iter().filter(|o| matches!(o, Ok(0))).count();
+    let refused = outcomes
+        .iter()
+        .filter(|o| matches!(o, Ok(s) if *s == STATUS_SHUTDOWN))
+        .count();
+    let transport = outcomes.iter().filter(|o| o.is_err()).count();
+    assert_eq!(ok + refused + transport, 30);
+    assert!(ok >= 1, "requests admitted before the drain completed");
+    // Unexpected statuses (EXEC/BADREQ/...) would mean drain corrupted
+    // an answer; there must be none.
+    assert!(outcomes
+        .iter()
+        .all(|o| !matches!(o, Ok(s) if *s != 0 && *s != STATUS_SHUTDOWN)));
+}
+
+/// Remote serving stays in the same latency class as in-process serving
+/// at the same offered load: p99 within 2x, plus an absolute allowance
+/// for the two loopback syscalls (dominant at sub-millisecond simulated
+/// latencies).
+#[test]
+fn chaos_remote_p99_within_budget_of_in_process() {
+    let opts = LoadGenOpts {
+        requests: 120,
+        concurrency: 4,
+        kernels: vec!["sobel".to_string(), "sepconv_row".to_string()],
+        devices: vec![&INTEL_I7],
+        grid: GRID.0,
+        queue_cap: 64,
+        max_batch: 8,
+        workers_per_device: 2,
+        ..Default::default()
+    };
+
+    let local = service(ExecMode::Simulate, None);
+    let in_process = imagecl::serve::run_loadgen(local, &opts).unwrap();
+    assert_eq!(in_process.completed, opts.requests);
+
+    let remote_svc = service(ExecMode::Simulate, None);
+    let srv = server(remote_svc.clone(), 2, 8);
+    let remote_opts =
+        LoadGenOpts { remote: Some(srv.addr().to_string()), ..opts.clone() };
+    let remote = imagecl::serve::run_loadgen(remote_svc, &remote_opts).unwrap();
+    srv.shutdown();
+    assert_eq!(remote.completed, opts.requests);
+
+    let in_p99 = percentile(&in_process.latencies_us, 99.0);
+    let tcp_p99 = percentile(&remote.latencies_us, 99.0);
+    let budget = (in_p99 * 2).max(in_p99 + 20_000);
+    assert!(
+        tcp_p99 <= budget,
+        "remote p99 {tcp_p99}us vs in-process {in_p99}us (budget {budget}us)"
+    );
+}

@@ -282,6 +282,7 @@ fn loadgen_obs_server_reports_slo_and_drains_on_completion() {
         max_batch: 4,
         workers_per_device: 1,
         obs_addr: Some("127.0.0.1:0".to_string()),
+        ..Default::default()
     };
     let report = run_loadgen(service, &opts).unwrap();
     assert_eq!(report.completed, 24);

@@ -139,6 +139,7 @@ fn serve_end_to_end_sim_mode() {
         max_batch: 8,
         workers_per_device: 2,
         obs_addr: None,
+        ..Default::default()
     };
     let report = imagecl::serve::run_loadgen(svc.clone(), &opts).unwrap();
     assert_eq!(report.completed, 80);
@@ -173,6 +174,7 @@ fn serve_real_execution_produces_output() {
         max_batch: 4,
         workers_per_device: 2,
         obs_addr: None,
+        ..Default::default()
     };
     let report = imagecl::serve::run_loadgen(svc, &opts).unwrap();
     assert_eq!(report.completed, 8);
@@ -196,6 +198,7 @@ fn warm_start_serving_run_skips_tuner_entirely() {
         max_batch: 8,
         workers_per_device: 1,
         obs_addr: None,
+        ..Default::default()
     };
 
     let first = service(Some(path.clone()), ExecMode::Simulate);
