@@ -43,6 +43,35 @@ impl Stencil {
         self.min_dy = self.min_dy.min(dy);
         self.max_dy = self.max_dy.max(dy);
     }
+
+    /// Halo composition for producer→consumer fusion (Minkowski sum).
+    ///
+    /// If a producer stage reads its input with stencil `self` to write one
+    /// output pixel, and a consumer stage reads that output with stencil
+    /// `outer`, then the fused kernel reads the producer's *input* with the
+    /// dilated stencil `self ⊕ outer`: every consumer offset `(cx, cy)`
+    /// demands the producer value at `(idx+cx, idy+cy)`, which in turn reads
+    /// the input at `(idx+cx+px, idy+cy+py)` for every producer offset
+    /// `(px, py)`. The bounding boxes therefore add component-wise.
+    pub fn compose(&self, outer: &Stencil) -> Stencil {
+        Stencil {
+            min_dx: self.min_dx + outer.min_dx,
+            max_dx: self.max_dx + outer.max_dx,
+            min_dy: self.min_dy + outer.min_dy,
+            max_dy: self.max_dy + outer.max_dy,
+        }
+    }
+
+    /// Bounding box of two stencils (used when several fused images pull
+    /// from the same input: the staged halo must cover both).
+    pub fn union(&self, other: &Stencil) -> Stencil {
+        Stencil {
+            min_dx: self.min_dx.min(other.min_dx),
+            max_dx: self.max_dx.max(other.max_dx),
+            min_dy: self.min_dy.min(other.min_dy),
+            max_dy: self.max_dy.max(other.max_dy),
+        }
+    }
 }
 
 /// Why stencil extraction failed for an image (local memory then unusable).
@@ -206,6 +235,30 @@ mod tests {
              }",
         );
         assert!(matches!(st["a"], Err(StencilFailure::NonAffineIndex(_))));
+    }
+
+    #[test]
+    fn compose_is_minkowski_sum() {
+        // Sobel reads (-1..1, -1..1); Harris reads its gradients at
+        // (0..1, 0..1) — fused, the input halo is (-1..2, -1..2).
+        let sobel = Stencil { min_dx: -1, max_dx: 1, min_dy: -1, max_dy: 1 };
+        let harris = Stencil { min_dx: 0, max_dx: 1, min_dy: 0, max_dy: 1 };
+        assert_eq!(
+            sobel.compose(&harris),
+            Stencil { min_dx: -1, max_dx: 2, min_dy: -1, max_dy: 2 }
+        );
+        // Composing with a point consumer is the identity.
+        assert_eq!(sobel.compose(&Stencil::POINT), sobel);
+        assert_eq!(Stencil::POINT.compose(&sobel), sobel);
+    }
+
+    #[test]
+    fn union_is_bounding_box() {
+        let a = Stencil { min_dx: -2, max_dx: 0, min_dy: 0, max_dy: 1 };
+        let b = Stencil { min_dx: 0, max_dx: 1, min_dy: -1, max_dy: 0 };
+        let u = a.union(&b);
+        assert_eq!(u, Stencil { min_dx: -2, max_dx: 1, min_dy: -1, max_dy: 1 });
+        assert_eq!(u, b.union(&a));
     }
 
     #[test]

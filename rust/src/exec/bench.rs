@@ -100,12 +100,61 @@ impl KernelBench {
     }
 }
 
+/// The Harris pipeline as an end-to-end fusion benchmark: the staged
+/// two-kernel form (Sobel materializes `dx`/`dy`, Harris consumes them)
+/// against the single fused kernel in each legal [`FuseMode`], all on
+/// the optimized VM. The headline pipeline measurement of
+/// `BENCH_exec.json`.
+#[derive(Debug, Clone)]
+pub struct HarrisFused {
+    pub pixels: usize,
+    /// Best-of end-to-end staged time (both kernels, optimized VM).
+    pub staged_secs: f64,
+    /// Best-of fused time, recompute-in-register mode.
+    pub inline_secs: f64,
+    /// Best-of fused time, local-stage mode (`None` when illegal).
+    pub lstage_secs: Option<f64>,
+    /// Intermediate-image bytes the fused forms never materialize.
+    pub intermediate_bytes: usize,
+    /// Every fused output was bit-identical to the staged output.
+    pub identical: bool,
+}
+
+impl HarrisFused {
+    /// The faster fused mode's time.
+    pub fn best_fused_secs(&self) -> f64 {
+        match self.lstage_secs {
+            Some(l) => self.inline_secs.min(l),
+            None => self.inline_secs,
+        }
+    }
+
+    pub fn best_mode(&self) -> &'static str {
+        match self.lstage_secs {
+            Some(l) if l < self.inline_secs => "lstage",
+            _ => "inline",
+        }
+    }
+
+    /// Fused-vs-staged end-to-end speedup (the fusion headline).
+    pub fn speedup(&self) -> f64 {
+        self.staged_secs / self.best_fused_secs()
+    }
+
+    /// End-to-end pipeline throughput of the best fused form.
+    pub fn frames_per_sec(&self) -> f64 {
+        1.0 / self.best_fused_secs()
+    }
+}
+
 /// The full benchmark report.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
     pub size: usize,
     pub threads: usize,
     pub kernels: Vec<KernelBench>,
+    /// Present on full-gallery runs: the fused Harris pipeline section.
+    pub harris: Option<HarrisFused>,
 }
 
 impl BenchReport {
@@ -126,6 +175,39 @@ impl BenchReport {
             .iter()
             .find(|k| k.name == "blur")
             .map(KernelBench::opt_speedup)
+    }
+
+    /// Fused-vs-staged Harris speedup, when the section ran.
+    pub fn harris_fused_speedup(&self) -> Option<f64> {
+        self.harris.as_ref().map(HarrisFused::speedup)
+    }
+
+    /// The fusion CI gate: `Err` when the best fused Harris form lost to
+    /// the staged pipeline (with slack for timer noise — fusion must
+    /// never be a regression, or the tuner's no-fuse option would always
+    /// win and the pass would be dead weight).
+    pub fn check_fused_regression(&self) -> Result<(), String> {
+        const SLACK: f64 = 1.25;
+        let Some(h) = &self.harris else {
+            return Ok(()); // section not in this run's kernel set
+        };
+        if !h.identical {
+            return Err(
+                "fusion gate: fused Harris output diverged from the staged pipeline"
+                    .to_string(),
+            );
+        }
+        if h.best_fused_secs() > h.staged_secs * SLACK {
+            return Err(format!(
+                "fusion gate: best fused Harris ({:.3} ms, {}) is slower than the \
+                 staged pipeline ({:.3} ms) ({:.2}x, allowed slack {SLACK}x)",
+                h.best_fused_secs() * 1e3,
+                h.best_mode(),
+                h.staged_secs * 1e3,
+                h.speedup(),
+            ));
+        }
+        Ok(())
     }
 
     /// The CI regression gate: `Err` when the optimized+batched VM lost
@@ -163,6 +245,33 @@ impl BenchReport {
             "  \"blur_opt_speedup\": {},",
             fmt(self.blur_opt_speedup())
         );
+        let _ = writeln!(
+            s,
+            "  \"harris_fused_speedup\": {},",
+            fmt(self.harris_fused_speedup())
+        );
+        let _ = writeln!(
+            s,
+            "  \"harris_intermediate_bytes_eliminated\": {},",
+            self.harris.as_ref().map(|h| h.intermediate_bytes).unwrap_or(0)
+        );
+        if let Some(h) = &self.harris {
+            let _ = writeln!(s, "  \"harris_fused\": {{");
+            let _ = writeln!(s, "    \"pixels\": {},", h.pixels);
+            let _ = writeln!(s, "    \"staged_secs\": {:.6},", h.staged_secs);
+            let _ = writeln!(s, "    \"inline_secs\": {:.6},", h.inline_secs);
+            let _ = writeln!(
+                s,
+                "    \"lstage_secs\": {},",
+                h.lstage_secs
+                    .map(|v| format!("{v:.6}"))
+                    .unwrap_or_else(|| "null".to_string())
+            );
+            let _ = writeln!(s, "    \"best_mode\": \"{}\",", h.best_mode());
+            let _ = writeln!(s, "    \"frames_per_sec\": {:.2},", h.frames_per_sec());
+            let _ = writeln!(s, "    \"identical\": {}", h.identical);
+            let _ = writeln!(s, "  }},");
+        }
         let _ = writeln!(s, "  \"all_identical\": {},", self.all_identical());
         let _ = writeln!(s, "  \"kernels\": [");
         for (i, k) in self.kernels.iter().enumerate() {
@@ -222,6 +331,23 @@ impl BenchReport {
                 k.opt_speedup(),
                 if k.parallel { "yes" } else { "no" },
                 if k.identical { "yes" } else { "DIVERGED" }
+            );
+        }
+        if let Some(h) = &self.harris {
+            let _ = writeln!(
+                s,
+                "harris pipeline: staged {:.3} ms, fused inline {:.3} ms, lstage {} → \
+                 {:.2}x ({}), {:.1} frames/s, {} intermediate bytes eliminated, {}",
+                h.staged_secs * 1e3,
+                h.inline_secs * 1e3,
+                h.lstage_secs
+                    .map(|v| format!("{:.3} ms", v * 1e3))
+                    .unwrap_or_else(|| "n/a".to_string()),
+                h.speedup(),
+                h.best_mode(),
+                h.frames_per_sec(),
+                h.intermediate_bytes,
+                if h.identical { "bit-identical" } else { "DIVERGED" }
             );
         }
         s
@@ -313,17 +439,168 @@ pub fn run(opts: &BenchOpts) -> Result<BenchReport, String> {
             identical,
         });
     }
+    // Full-gallery runs additionally measure the fused Harris pipeline
+    // (the `harris_fused` row rides the same engine ladder, so `bench
+    // analyze` gates its throughput history like any gallery kernel).
+    let harris = if opts.kernels.is_empty() {
+        let (row, section) = bench_harris(n, opts.iters)?;
+        kernels.push(row);
+        Some(section)
+    } else {
+        None
+    };
     Ok(BenchReport {
         size: n,
         threads: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1),
         kernels,
+        harris,
     })
 }
 
+/// Measure the Harris pipeline end to end: staged (Sobel then Harris,
+/// gradients materialized) against the fused kernel in both modes. The
+/// returned [`KernelBench`] row runs the *inline* fused plan down the
+/// engine ladder; the [`HarrisFused`] section carries the staged-vs-fused
+/// comparison on the optimized VM, with all fused outputs bit-compared
+/// against the staged pipeline's.
+fn bench_harris(n: usize, iters: usize) -> Result<(KernelBench, HarrisFused), String> {
+    use crate::pipeline::fusion::{self, fused_workload, image_bits};
+    use crate::transform::{lower_fused, FuseMode};
+
+    let fk = fusion::fused_by_id("fused_sobel_harris")
+        .ok_or_else(|| "fused_sobel_harris is not registered".to_string())?;
+    let seed = 42;
+    let iters = iters.max(1);
+
+    // Staged pipeline, optimized VM, best-of-iters end to end.
+    let plan_for = |id: &str| -> Result<crate::transform::KernelPlan, String> {
+        let kdef = crate::bench_defs::kernel_by_id(id)
+            .ok_or_else(|| format!("unknown kernel {id:?}"))?;
+        let info = KernelInfo::analyze(frontend(kdef.source).map_err(|e| e.to_string())?);
+        lower(&info, &TuningConfig::default()).map_err(|e| e.to_string())
+    };
+    let sobel_plan = plan_for("sobel")?;
+    let harris_plan = plan_for("harris")?;
+    let sobel_prep = PreparedKernel::prepare(
+        &sobel_plan,
+        &crate::bench_defs::workload("sobel", n, n, seed),
+        (n, n),
+    )
+    .map_err(|e| e.to_string())?;
+    let harris_prep = PreparedKernel::prepare(
+        &harris_plan,
+        &crate::bench_defs::workload("harris", n, n, seed),
+        (n, n),
+    )
+    .map_err(|e| e.to_string())?;
+    let mut staged_secs = f64::INFINITY;
+    let mut staged_out = Vec::new();
+    for _ in 0..iters {
+        let mut sa = crate::bench_defs::workload("sobel", n, n, seed);
+        let mut ha = crate::bench_defs::workload("harris", n, n, seed);
+        let t0 = Instant::now();
+        sobel_prep
+            .run_with(&mut sa, Engine::Vm)
+            .map_err(|e| format!("staged sobel: {e}"))?;
+        for (pout, cin) in &fk.bindings {
+            let produced = sa.get(pout).cloned().expect("sobel output present");
+            ha.insert(cin.clone(), produced);
+        }
+        harris_prep
+            .run_with(&mut ha, Engine::Vm)
+            .map_err(|e| format!("staged harris: {e}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        if dt < staged_secs {
+            staged_secs = dt;
+        }
+        staged_out = image_bits(&ha, "out");
+    }
+
+    // Inline fused plan down the full engine ladder.
+    let inline_cfg = TuningConfig { fuse: Some(FuseMode::Inline), ..TuningConfig::default() };
+    let inline_plan = lower_fused(fk, &inline_cfg).map_err(|e| e.to_string())?;
+    let inline_args0 = fused_workload(fk, &inline_plan, n, n, seed);
+    let inline_prep = PreparedKernel::prepare(&inline_plan, &inline_args0, (n, n))
+        .map_err(|e| e.to_string())?;
+    let time_engine = |engine: Engine| -> Result<(f64, Vec<u64>), String> {
+        let mut best = f64::INFINITY;
+        let mut out = Vec::new();
+        for _ in 0..iters {
+            let mut a = fused_workload(fk, &inline_plan, n, n, seed);
+            let t0 = Instant::now();
+            inline_prep
+                .run_with(&mut a, engine)
+                .map_err(|e| format!("harris_fused on {engine:?}: {e}"))?;
+            let dt = t0.elapsed().as_secs_f64();
+            if dt < best {
+                best = dt;
+            }
+            out = image_bits(&a, "out");
+        }
+        Ok((best, out))
+    };
+    let (tree_secs, tree_out) = time_engine(Engine::TreeWalk)?;
+    let (vm_unopt_secs, unopt_out) = time_engine(Engine::VmUnopt)?;
+    let (vm_scalar_secs, scalar_out) = time_engine(Engine::VmScalar)?;
+    let (vm_secs, vm_out) = time_engine(Engine::Vm)?;
+
+    // Local-stage fused plan, optimized VM only.
+    let lstage_cfg = TuningConfig { fuse: Some(FuseMode::LocalStage), ..TuningConfig::default() };
+    let lstage = match fk.merged_source() {
+        Some(_) => {
+            let plan = lower_fused(fk, &lstage_cfg).map_err(|e| e.to_string())?;
+            let args0 = fused_workload(fk, &plan, n, n, seed);
+            let prep =
+                PreparedKernel::prepare(&plan, &args0, (n, n)).map_err(|e| e.to_string())?;
+            let mut best = f64::INFINITY;
+            let mut out = Vec::new();
+            for _ in 0..iters {
+                let mut a = fused_workload(fk, &plan, n, n, seed);
+                let t0 = Instant::now();
+                prep.run_with(&mut a, Engine::Vm)
+                    .map_err(|e| format!("harris_fused lstage: {e}"))?;
+                let dt = t0.elapsed().as_secs_f64();
+                if dt < best {
+                    best = dt;
+                }
+                out = image_bits(&a, "out");
+            }
+            Some((best, out))
+        }
+        None => None,
+    };
+
+    let ladder_identical =
+        tree_out == vm_out && tree_out == scalar_out && tree_out == unopt_out;
+    let identical = ladder_identical
+        && vm_out == staged_out
+        && lstage.as_ref().map(|(_, out)| *out == staged_out).unwrap_or(true);
+    let row = KernelBench {
+        name: "harris_fused".to_string(),
+        pixels: n * n,
+        tree_secs,
+        vm_unopt_secs,
+        vm_scalar_secs,
+        vm_secs,
+        parallel: inline_plan.parallel_groups,
+        identical,
+    };
+    let section = HarrisFused {
+        pixels: n * n,
+        staged_secs,
+        inline_secs: vm_secs,
+        lstage_secs: lstage.map(|(best, _)| best),
+        intermediate_bytes: fk.intermediate_bytes(n, n),
+        identical,
+    };
+    Ok((row, section))
+}
+
 /// Run, print, and persist the report; `Err` on engine divergence (the
-/// differential guarantee is part of the benchmark's contract) or when
-/// the optimized VM regressed below the unoptimized VM on blur (the CI
-/// performance gate).
+/// differential guarantee is part of the benchmark's contract), when
+/// the optimized VM regressed below the unoptimized VM on blur, or when
+/// the fused Harris pipeline lost to its staged form (the CI
+/// performance gates).
 pub fn run_and_write(opts: &BenchOpts) -> Result<BenchReport, String> {
     let report = run(opts)?;
     print!("{}", report.render());
@@ -338,6 +615,7 @@ pub fn run_and_write(opts: &BenchOpts) -> Result<BenchReport, String> {
         return Err("VM and tree-walker outputs diverged (see report)".to_string());
     }
     report.check_opt_regression()?;
+    report.check_fused_regression()?;
     Ok(report)
 }
 
@@ -411,14 +689,57 @@ mod tests {
             parallel: true,
             identical: true,
         };
-        let ok = BenchReport { size: 128, threads: 1, kernels: vec![k(1.0, 0.5)] };
+        let ok = BenchReport { size: 128, threads: 1, kernels: vec![k(1.0, 0.5)], harris: None };
         assert!(ok.check_opt_regression().is_ok());
-        let bad = BenchReport { size: 128, threads: 1, kernels: vec![k(0.5, 1.0)] };
+        let bad = BenchReport { size: 128, threads: 1, kernels: vec![k(0.5, 1.0)], harris: None };
         let err = bad.check_opt_regression().unwrap_err();
         assert!(err.contains("regression gate"), "{err}");
         // A kernel set without blur has nothing to gate.
-        let none = BenchReport { size: 128, threads: 1, kernels: vec![] };
+        let none = BenchReport { size: 128, threads: 1, kernels: vec![], harris: None };
         assert!(none.check_opt_regression().is_ok());
+    }
+
+    #[test]
+    fn harris_section_measures_fused_pipeline() {
+        let (row, section) = bench_harris(17, 1).unwrap();
+        assert_eq!(row.name, "harris_fused");
+        assert!(section.identical, "fused Harris diverged from staged");
+        assert_eq!(section.intermediate_bytes, 2 * 17 * 17 * 4);
+        assert!(section.lstage_secs.is_some());
+        assert!(section.best_fused_secs() > 0.0);
+        let report = BenchReport {
+            size: 17,
+            threads: 1,
+            kernels: vec![row],
+            harris: Some(section),
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"harris_fused_speedup\""), "{json}");
+        assert!(json.contains("\"harris_intermediate_bytes_eliminated\": 2312"), "{json}");
+        assert!(json.contains("\"best_mode\""), "{json}");
+        assert!(report.render().contains("harris pipeline"), "{}", report.render());
+    }
+
+    #[test]
+    fn fused_gate_trips_on_divergence_or_slowdown() {
+        let h = |fused: f64, identical: bool| HarrisFused {
+            pixels: 1 << 14,
+            staged_secs: 1.0,
+            inline_secs: fused,
+            lstage_secs: None,
+            intermediate_bytes: 0,
+            identical,
+        };
+        let ok = BenchReport { size: 128, threads: 1, kernels: vec![], harris: Some(h(0.5, true)) };
+        assert!(ok.check_fused_regression().is_ok());
+        let slow =
+            BenchReport { size: 128, threads: 1, kernels: vec![], harris: Some(h(2.0, true)) };
+        assert!(slow.check_fused_regression().unwrap_err().contains("fusion gate"));
+        let div =
+            BenchReport { size: 128, threads: 1, kernels: vec![], harris: Some(h(0.5, false)) };
+        assert!(div.check_fused_regression().unwrap_err().contains("diverged"));
+        let none = BenchReport { size: 128, threads: 1, kernels: vec![], harris: None };
+        assert!(none.check_fused_regression().is_ok());
     }
 
     #[test]
@@ -442,6 +763,7 @@ mod tests {
                 parallel: false,
                 identical: true,
             }],
+            harris: None,
         };
         let hist = append_history(&report, &snap).unwrap();
         let hist2 = append_history(&report, &snap).unwrap();

@@ -1081,6 +1081,40 @@ fn clamp_iv(v: Iv, lo: Iv, hi: Iv) -> Iv {
     }
 }
 
+/// Interval of truncating division `a / b` for a strictly positive
+/// divisor. Truncating division is monotone (non-strict) in both
+/// arguments when the divisor is positive, so the extrema lie at the
+/// four corner combinations. Divisors that may be zero or negative stay
+/// unknown (a zero divisor traps at runtime; the interval must not
+/// pretend to know the result).
+fn div_iv(a: Iv, b: Iv) -> Iv {
+    if b.lo < 1 {
+        return Iv::UNK;
+    }
+    let c = [a.lo / b.lo, a.lo / b.hi, a.hi / b.lo, a.hi / b.hi];
+    Iv {
+        lo: *c.iter().min().unwrap(),
+        hi: *c.iter().max().unwrap(),
+    }
+}
+
+/// Interval of `a % b` for a strictly positive divisor. The result has
+/// the numerator's sign (truncated remainder), bounded by `b.hi - 1` in
+/// magnitude — and by the numerator itself when it is already smaller.
+fn rem_iv(a: Iv, b: Iv) -> Iv {
+    if b.lo < 1 {
+        return Iv::UNK;
+    }
+    let m = b.hi - 1;
+    if a.lo >= 0 {
+        Iv { lo: 0, hi: a.hi.min(m) }
+    } else if a.hi <= 0 {
+        Iv { lo: a.lo.max(-m), hi: 0 }
+    } else {
+        Iv { lo: a.lo.max(-m), hi: a.hi.min(m) }
+    }
+}
+
 fn abs_iv(a: Iv) -> Iv {
     let (Some(al), Some(ah)) = (a.lo.checked_abs(), a.hi.checked_abs()) else {
         return Iv::UNK;
@@ -1147,6 +1181,8 @@ fn eval_interval(iv: &mut [Iv], op: &Op) {
         Op::ISub { a, b, .. } => sub_iv(v(a, iv), v(b, iv)),
         Op::IMul { a, b, .. } => mul_iv(v(a, iv), v(b, iv)),
         Op::IMulAdd { a, b, c, .. } => add_iv(mul_iv(v(a, iv), v(b, iv)), v(c, iv)),
+        Op::IDiv { a, b, .. } => div_iv(v(a, iv), v(b, iv)),
+        Op::IRem { a, b, .. } => rem_iv(v(a, iv), v(b, iv)),
         Op::INeg { s, .. } => neg_iv(v(s, iv)),
         Op::IMin { a, b, .. } => Iv {
             lo: v(a, iv).lo.min(v(b, iv).lo),
@@ -1458,6 +1494,70 @@ mod tests {
         // Border: gid_x in [96, 111] straddles the guard → undecidable.
         let env = SpecEnv::for_group((6, 0), [16, 1], [112, 1]);
         assert!(specialize(&prog, 0, &env).is_none());
+    }
+
+    #[test]
+    fn div_rem_intervals() {
+        // __sx = __s % 18, __sy = __s / 18 — the staging-loop shape.
+        let s = Iv { lo: 0, hi: 323 };
+        let w = Iv::exact(18);
+        assert_eq!(rem_iv(s, w), Iv { lo: 0, hi: 17 });
+        assert_eq!(div_iv(s, w), Iv { lo: 0, hi: 17 });
+        // Negative numerators keep the numerator's sign (truncated rem).
+        assert_eq!(rem_iv(Iv { lo: -5, hi: -1 }, w), Iv { lo: -5, hi: 0 });
+        assert_eq!(rem_iv(Iv { lo: -40, hi: 3 }, w), Iv { lo: -17, hi: 3 });
+        assert_eq!(div_iv(Iv { lo: -36, hi: 35 }, w), Iv { lo: -2, hi: 1 });
+        // Possibly-zero or negative divisors stay unknown (would trap).
+        assert_eq!(div_iv(s, Iv { lo: 0, hi: 18 }), Iv::UNK);
+        assert_eq!(rem_iv(s, Iv { lo: -3, hi: 3 }), Iv::UNK);
+        // Varying positive divisor: extrema at the corners.
+        assert_eq!(div_iv(Iv { lo: 10, hi: 20 }, Iv { lo: 2, hi: 5 }), Iv { lo: 2, hi: 10 });
+    }
+
+    #[test]
+    fn constant_boundary_staging_phase_reaches_batched_tier() {
+        // End-to-end satellite check: a constant-boundary local-memory
+        // staging phase contains `__sx = __s % tile_w; __sy = __s /
+        // tile_w` feeding the inside(gx, gy) ternary. With IRem/IDiv
+        // modeled in the interval domain, an interior row's trace
+        // decides every branch and the staging loop batches instead of
+        // falling back to the scalar tier.
+        use crate::analysis::KernelInfo;
+        use crate::bench_defs::gallery;
+        use crate::imagecl::frontend;
+        use crate::transform::{lower, TuningConfig};
+
+        let mut cfg = TuningConfig::default();
+        cfg.local_mem.insert("in".into(), true);
+        // BLUR has no boundary pragma → constant-0 boundary → the staged
+        // load is an inside() ternary, the hard case for the specializer.
+        let info = KernelInfo::analyze(frontend(gallery::BLUR).unwrap());
+        let plan = lower(&info, &cfg).unwrap();
+        assert_eq!(plan.phases.len(), 2, "staging + compute");
+
+        let (w, h) = (64usize, 64usize);
+        let args = crate::bench_defs::workload("blur", w, h, 1);
+        let scalars =
+            super::super::machine::resolve_scalars(&plan, &args, (w, h)).unwrap();
+        let compiled = super::super::compiled::Compiler::compile(&plan, &scalars).unwrap();
+        let prog = VmProgram::build(&plan, &compiled).expect("plan lowers to bytecode");
+
+        // Interior group (1,1) of the 64×64 grid, row 0: all staged
+        // coordinates are provably in bounds once %/÷ are modeled.
+        let env = SpecEnv::for_row((1, 1), [16, 16], [64, 64], 0);
+        let trace = specialize(&prog, 0, &env)
+            .expect("constant-boundary staging loop must specialize (batched tier)");
+        assert!(
+            !trace.iter().any(|op| matches!(
+                op,
+                Op::Jmp { .. } | Op::Jz { .. } | Op::Jnz { .. }
+            )),
+            "staging trace should be branch-free: {trace:?}"
+        );
+        assert!(
+            trace.iter().any(|op| matches!(op, Op::StoreF { .. } | Op::StoreI { .. })),
+            "staging trace must still store into the local tile: {trace:?}"
+        );
     }
 
     #[test]

@@ -447,6 +447,47 @@ impl Stmt {
             Stmt::Return | Stmt::Barrier => {}
         });
     }
+
+    /// Rebuild this statement with every contained expression rewritten
+    /// bottom-up by `f` (see [`Expr::map`]), recursing into nested bodies.
+    /// Assignment-target *base names* are kept (they are not expressions),
+    /// but index expressions of a store target are rewritten.
+    pub fn map_exprs<F: Fn(Expr) -> Expr + Copy>(self, f: F) -> Stmt {
+        match self {
+            Stmt::Decl { ty, name, init } => {
+                Stmt::Decl { ty, name, init: init.map(|e| e.map(f)) }
+            }
+            Stmt::Assign { lhs, op, value } => Stmt::Assign {
+                lhs: match lhs {
+                    LValue::Var(v) => LValue::Var(v),
+                    LValue::Index { base, indices } => LValue::Index {
+                        base,
+                        indices: indices.into_iter().map(|i| i.map(f)).collect(),
+                    },
+                },
+                op,
+                value: value.map(f),
+            },
+            Stmt::If { cond, then, els } => Stmt::If {
+                cond: cond.map(f),
+                then: then.into_iter().map(|s| s.map_exprs(f)).collect(),
+                els: els.into_iter().map(|s| s.map_exprs(f)).collect(),
+            },
+            Stmt::For { var, init, cond, step, body } => Stmt::For {
+                var,
+                init: init.map(f),
+                cond: cond.map(f),
+                step: step.map(f),
+                body: body.into_iter().map(|s| s.map_exprs(f)).collect(),
+            },
+            Stmt::While { cond, body } => Stmt::While {
+                cond: cond.map(f),
+                body: body.into_iter().map(|s| s.map_exprs(f)).collect(),
+            },
+            Stmt::ExprStmt(e) => Stmt::ExprStmt(e.map(f)),
+            Stmt::Return | Stmt::Barrier => self,
+        }
+    }
 }
 
 /// A kernel parameter.
@@ -759,5 +800,28 @@ mod tests {
         assert_eq!(ScalarType::F32.size_bytes(), 4);
         assert_eq!(ScalarType::U8.size_bytes(), 1);
         assert_eq!(ScalarType::F64.size_bytes(), 8);
+    }
+
+    #[test]
+    fn map_exprs_rewrites_nested_bodies_and_store_indices() {
+        let s = Stmt::For {
+            var: "i".into(),
+            init: Expr::int(0),
+            cond: Expr::bin(BinOp::Lt, Expr::ident("i"), Expr::ident("n")),
+            step: Expr::int(1),
+            body: vec![Stmt::Assign {
+                lhs: LValue::Index { base: "out".into(), indices: vec![Expr::ident("n")] },
+                op: AssignOp::Set,
+                value: Expr::ident("n"),
+            }],
+        };
+        let renamed = s.map_exprs(|e| match e {
+            Expr::Ident(ref s) if s == "n" => Expr::ident("m"),
+            other => other,
+        });
+        let mut text = String::new();
+        print_stmts(&[renamed], 0, &mut text);
+        assert!(text.contains("i < m"), "{text}");
+        assert!(text.contains("out[m] = m;"), "{text}");
     }
 }

@@ -1,0 +1,198 @@
+//! Pipeline-level fusion registry: which benchmark graphs compile into a
+//! single fused kernel, and the workload plumbing to execute and compare
+//! them against their staged form.
+//!
+//! The transform layer ([`crate::transform::fuse`]) knows how to fuse one
+//! producer→consumer edge; this module fixes *which* edges the built-in
+//! pipelines fuse, so the scheduler ([`super::scheduler`]), the serving
+//! layer and `imagecl bench` all agree on ids: graph `harris_pipeline`
+//! owns the fused kernel `fused_sobel_harris` (Sobel gradients recomputed
+//! or locally staged inside the Harris response — the intermediate `dx`/
+//! `dy` images never exist). The sepconv graph stays staged: its column
+//! stage reads the row output at an offset under a constant boundary,
+//! which fusion cannot recompute exactly (see the legality notes in
+//! [`crate::transform::fuse`]).
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use crate::bench_defs::{self, HARRIS, SOBEL};
+use crate::exec::{execute_with, Arg, Engine, ExecError};
+use crate::imagecl::ScalarType;
+use crate::transform::{lower, FusedKernel, KernelPlan, TuningConfig};
+
+/// Graph id → fused kernel id for every built-in graph with a fusable
+/// edge (the inverse of [`fused_graph_id`]'s domain).
+pub const FUSED_GRAPHS: [(&str, &str); 1] = [("harris_pipeline", "fused_sobel_harris")];
+
+fn registry() -> &'static Vec<FusedKernel> {
+    static REG: OnceLock<Vec<FusedKernel>> = OnceLock::new();
+    REG.get_or_init(|| {
+        vec![FusedKernel::build(
+            "fused_sobel_harris",
+            ("sobel", SOBEL),
+            ("harris", HARRIS),
+            &[("dx", "dx"), ("dy", "dy")],
+        )
+        .expect("sobel→harris is a legal fusion edge")]
+    })
+}
+
+/// Look up a built-in fused kernel by its id (`fused_sobel_harris`).
+pub fn fused_by_id(id: &str) -> Option<&'static FusedKernel> {
+    registry().iter().find(|fk| fk.id == id)
+}
+
+/// The fused kernel id of a benchmark graph, when the graph has one.
+pub fn fused_graph_id(graph: &str) -> Option<&'static str> {
+    FUSED_GRAPHS
+        .iter()
+        .find(|(g, _)| *g == graph)
+        .map(|(_, fid)| *fid)
+}
+
+/// Build the argument map for a fused kernel's plan at grid `w`×`h`:
+/// the producer's inputs (prefixed), the consumer's surviving arguments,
+/// and — when the plan asks for them — the intermediate's dimensions.
+/// Seeds match [`bench_defs::workload`] so fused runs consume exactly the
+/// pixels a staged run of the same seed would.
+pub fn fused_workload(
+    fk: &FusedKernel,
+    plan: &KernelPlan,
+    w: usize,
+    h: usize,
+    seed: u64,
+) -> BTreeMap<String, Arg> {
+    let mut args = BTreeMap::new();
+    let producer_outputs: Vec<&str> = fk.bindings.iter().map(|(o, _)| o.as_str()).collect();
+    for (name, arg) in bench_defs::workload(&fk.producer_id, w, h, seed) {
+        if !producer_outputs.contains(&name.as_str()) {
+            args.insert(format!("{}{name}", fk.prefix), arg);
+        }
+    }
+    for (name, arg) in bench_defs::workload(&fk.consumer_id, w, h, seed) {
+        if !fk.is_fused(&name) {
+            args.insert(name, arg);
+        }
+    }
+    for (dim, v) in [("fw", w), ("fh", h)] {
+        let name = format!("{}{dim}", fk.prefix);
+        if plan.scalars.iter().any(|(n, _)| *n == name) {
+            args.insert(name, Arg::Scalar(crate::exec::Value::I(v as i64)));
+        }
+    }
+    args
+}
+
+/// Execute the edge *staged* (producer kernel, then consumer kernel, with
+/// the intermediate materialized) under default tuning on the chosen
+/// engine. Returns the consumer's final argument map — the reference the
+/// fused plans must match bit-for-bit.
+pub fn run_staged(
+    fk: &FusedKernel,
+    w: usize,
+    h: usize,
+    seed: u64,
+    engine: Engine,
+) -> Result<BTreeMap<String, Arg>, ExecError> {
+    let plan_of = |prog: &crate::imagecl::CheckedProgram| {
+        let info = crate::analysis::KernelInfo::analyze(prog.clone());
+        lower(&info, &TuningConfig::default()).expect("default lowering of a checked program")
+    };
+    let pplan = plan_of(&fk.producer);
+    let mut pargs = bench_defs::workload(&fk.producer_id, w, h, seed);
+    execute_with(&pplan, &mut pargs, (w, h), engine)?;
+
+    let cplan = plan_of(&fk.consumer);
+    let mut cargs = bench_defs::workload(&fk.consumer_id, w, h, seed);
+    for (pout, cin) in &fk.bindings {
+        let produced = pargs
+            .get(pout)
+            .cloned()
+            .expect("producer workload carries its outputs");
+        cargs.insert(cin.clone(), produced);
+    }
+    execute_with(&cplan, &mut cargs, (w, h), engine)?;
+    Ok(cargs)
+}
+
+/// Bit patterns of every `f64` element of an image argument — the
+/// comparison currency of the fusion differential tests and the bench
+/// bit-identity gate.
+pub fn image_bits(args: &BTreeMap<String, Arg>, name: &str) -> Vec<u64> {
+    match args.get(name) {
+        Some(Arg::Image(img)) => img.buf.data.iter().map(|v| v.to_bits()).collect(),
+        other => panic!("argument `{name}` is not an image: {other:?}"),
+    }
+}
+
+/// Intermediate-buffer bytes a graph stops materializing when fused at
+/// `n`×`n` (0 for graphs with no fused form).
+pub fn graph_intermediate_bytes(graph: &str, n: usize) -> usize {
+    fused_graph_id(graph)
+        .and_then(fused_by_id)
+        .map(|fk| fk.intermediate_bytes(n, n))
+        .unwrap_or(0)
+}
+
+/// The pixel element type of a fused kernel's headline output (for bench
+/// reporting).
+pub fn fused_pixel_type(fk: &FusedKernel) -> ScalarType {
+    fk.consumer
+        .kernel
+        .param(&fk.consumer_output)
+        .map(|p| p.ty.elem())
+        .unwrap_or(ScalarType::F32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::{lower_fused, FuseMode};
+
+    #[test]
+    fn registry_and_graph_mapping() {
+        let fk = fused_by_id("fused_sobel_harris").unwrap();
+        assert_eq!(fk.producer_id, "sobel");
+        assert_eq!(fk.consumer_id, "harris");
+        assert_eq!(fused_graph_id("harris_pipeline"), Some("fused_sobel_harris"));
+        assert_eq!(fused_graph_id("sepconv"), None);
+        assert!(fused_by_id("nope").is_none());
+        assert_eq!(fused_pixel_type(fk), ScalarType::F32);
+        assert_eq!(graph_intermediate_bytes("harris_pipeline", 128), 2 * 128 * 128 * 4);
+        assert_eq!(graph_intermediate_bytes("sepconv", 128), 0);
+    }
+
+    #[test]
+    fn fused_inline_matches_staged_bits() {
+        let fk = fused_by_id("fused_sobel_harris").unwrap();
+        let (w, h, seed) = (13, 9, 42);
+        let staged = run_staged(fk, w, h, seed, Engine::TreeWalk).unwrap();
+        let want = image_bits(&staged, "out");
+
+        let cfg = TuningConfig { fuse: Some(FuseMode::Inline), ..TuningConfig::default() };
+        let plan = lower_fused(fk, &cfg).unwrap();
+        let mut args = fused_workload(fk, &plan, w, h, seed);
+        assert!(args.contains_key("p0_in") && !args.contains_key("dx"), "{args:?}");
+        execute_with(&plan, &mut args, (w, h), Engine::TreeWalk).unwrap();
+        assert_eq!(image_bits(&args, "out"), want);
+    }
+
+    #[test]
+    fn fused_lstage_matches_staged_bits() {
+        let fk = fused_by_id("fused_sobel_harris").unwrap();
+        let (w, h, seed) = (13, 9, 42);
+        let staged = run_staged(fk, w, h, seed, Engine::TreeWalk).unwrap();
+        let want = image_bits(&staged, "out");
+
+        let cfg = TuningConfig {
+            wg: [8, 4],
+            fuse: Some(FuseMode::LocalStage),
+            ..TuningConfig::default()
+        };
+        let plan = lower_fused(fk, &cfg).unwrap();
+        let mut args = fused_workload(fk, &plan, w, h, seed);
+        execute_with(&plan, &mut args, (w, h), Engine::TreeWalk).unwrap();
+        assert_eq!(image_bits(&args, "out"), want);
+    }
+}

@@ -102,16 +102,46 @@ impl Pipeline {
     }
 
     /// Topological order (filters are appended after their inputs by
-    /// construction; validate anyway).
+    /// construction; validate anyway). Errors name the offending filter
+    /// and distinguish dangling ports from cycles.
     pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let n = self.filters.len();
         for (i, f) in self.filters.iter().enumerate() {
             for p in &f.inputs {
-                if p.node.0 >= i {
-                    bail!("filter {} consumes a later node — not a DAG", f.name);
+                if p.node.0 >= n {
+                    bail!(
+                        "filter `{}` (node {i}) has a dangling input Port: node {} does \
+                         not exist (pipeline has {n} node{})",
+                        f.name,
+                        p.node.0,
+                        if n == 1 { "" } else { "s" },
+                    );
+                }
+                if p.node.0 == i {
+                    bail!("filter `{}` (node {i}) consumes its own output — cycle", f.name);
+                }
+                if p.node.0 > i {
+                    bail!(
+                        "filter `{}` (node {i}) consumes node {} (`{}`), which is \
+                         defined later — cycle or out-of-order construction",
+                        f.name,
+                        p.node.0,
+                        self.filters[p.node.0].name,
+                    );
                 }
             }
         }
-        Ok((0..self.filters.len()).map(NodeId).collect())
+        for p in &self.outputs {
+            if p.node.0 >= n {
+                bail!(
+                    "pipeline output references node {} which does not exist \
+                     (pipeline has {n} node{})",
+                    p.node.0,
+                    if n == 1 { "" } else { "s" },
+                );
+            }
+        }
+        Ok((0..n).map(NodeId).collect())
     }
 
     /// Execute the pipeline through the XLA runtime at grid size `n`
@@ -183,7 +213,40 @@ mod tests {
 
         // Forge a cycle.
         p.filters[s.0].inputs.push(Port { node: f, port: 0 });
-        assert!(p.topo_order().is_err());
+        let err = p.topo_order().unwrap_err().to_string();
+        assert!(err.contains("img") && err.contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn self_cycle_names_filter() {
+        let mut p = Pipeline::new();
+        let s = p.source("img", Tensor::zeros(4, 4));
+        let f = p.filter("blur", &[p.port(s)]);
+        p.filters[f.0].inputs.push(Port { node: f, port: 0 });
+        let err = p.topo_order().unwrap_err().to_string();
+        assert!(err.contains("`blur`") && err.contains("own output"), "{err}");
+    }
+
+    #[test]
+    fn dangling_port_names_filter_and_node() {
+        let mut p = Pipeline::new();
+        let s = p.source("img", Tensor::zeros(4, 4));
+        p.filter("sobel", &[Port { node: NodeId(7), port: 0 }]);
+        let err = p.topo_order().unwrap_err().to_string();
+        assert!(
+            err.contains("`sobel`") && err.contains("dangling") && err.contains("node 7"),
+            "{err}"
+        );
+        let _ = s;
+    }
+
+    #[test]
+    fn dangling_output_rejected() {
+        let mut p = Pipeline::new();
+        p.source("img", Tensor::zeros(4, 4));
+        p.output(Port { node: NodeId(3), port: 0 });
+        let err = p.topo_order().unwrap_err().to_string();
+        assert!(err.contains("output") && err.contains("node 3"), "{err}");
     }
 
     #[test]

@@ -2,9 +2,11 @@
 //! filters, executable through the XLA runtime and schedulable across
 //! the (simulated) devices.
 
+pub mod fusion;
 pub mod graph;
 pub mod scheduler;
 
+pub use fusion::{fused_by_id, fused_graph_id, fused_workload, run_staged};
 pub use graph::{Filter, FilterKind, NodeId, Pipeline, Port};
 pub use scheduler::{
     filter_time, graph_parts, schedule, schedule_by, schedule_with_db, transfer_time,

@@ -96,13 +96,24 @@ pub fn schedule_with_db(
             Some(parts) => parts,
             None => &single,
         };
-        parts
+        let staged: f64 = parts
             .iter()
             .map(|k| {
                 db.estimate(k, dev.name, (n, n))
                     .unwrap_or_else(|| single_kernel_time(dev, k, n, fallback_cfg))
             })
-            .sum()
+            .sum();
+        // A graph with a fused form competes against its own staged
+        // stages: take the fused plan when the knowledge base has
+        // measured it faster on this device (the fuse decision itself is
+        // per-device, recorded by the tuner in the winning TuneRecord's
+        // config).
+        match super::fusion::fused_graph_id(graph)
+            .and_then(|fid| db.estimate(fid, dev.name, (n, n)))
+        {
+            Some(fused) => staged.min(fused),
+            None => staged,
+        }
     })
 }
 
@@ -264,6 +275,55 @@ mod tests {
             assert_eq!(x.device, y.device);
             assert_eq!(x.est_exec_s, y.est_exec_s);
         }
+    }
+
+    #[test]
+    fn db_schedule_prefers_recorded_fused_estimate() {
+        use crate::tunedb::{device_fingerprint, TuneDb, TuneRecord};
+        // One composite filter: the whole Harris graph as a unit, which
+        // is what the fused kernel replaces.
+        let mut p = Pipeline::new();
+        let img = p.source("img", Tensor::zeros(4, 4));
+        let har = p.filter("harris_pipeline", &[p.port(img)]);
+        p.output(p.port(har));
+        let db = TuneDb::ephemeral();
+        let mut rec = |kernel: &str, seconds: f64| {
+            db.record(TuneRecord {
+                kernel: kernel.to_string(),
+                device: K40.name,
+                dev_fp: device_fingerprint(&K40),
+                grid: (512, 512),
+                seconds,
+                best: true,
+                wall: false,
+                config: TuningConfig::default(),
+                features: Vec::new(),
+            });
+        };
+        // Staged stages cost 2×1ms; the fused kernel is measured at 0.5ms.
+        rec("sobel", 1e-3);
+        rec("harris", 1e-3);
+        rec("fused_sobel_harris", 5e-4);
+        let s = schedule_with_db(&p, &[&K40], 512, &db, &TuningConfig::default());
+        let pl = &s.placements[0];
+        assert!((pl.est_exec_s - 5e-4).abs() < 1e-9, "{pl:?}");
+        // Without the fused record, the staged sum is the estimate.
+        let db2 = TuneDb::ephemeral();
+        for k in ["sobel", "harris"] {
+            db2.record(TuneRecord {
+                kernel: k.to_string(),
+                device: K40.name,
+                dev_fp: device_fingerprint(&K40),
+                grid: (512, 512),
+                seconds: 1e-3,
+                best: true,
+                wall: false,
+                config: TuningConfig::default(),
+                features: Vec::new(),
+            });
+        }
+        let s = schedule_with_db(&p, &[&K40], 512, &db2, &TuningConfig::default());
+        assert!((s.placements[0].est_exec_s - 2e-3).abs() < 1e-9, "{s:?}");
     }
 
     #[test]

@@ -56,12 +56,12 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use crate::analysis::KernelInfo;
 use crate::bench_defs;
-use crate::devices::{self, DeviceSpec};
+use crate::devices::{self, predict, DeviceSpec, KernelModel};
 use crate::exec::{profile, PreparedKernel};
-use crate::obs;
 use crate::imagecl::frontend;
-use crate::pipeline::{graph_parts, schedule_by, Pipeline, Schedule};
-use crate::transform::{lower, TuningConfig};
+use crate::obs;
+use crate::pipeline::{fusion, graph_parts, schedule_by, Pipeline, Schedule};
+use crate::transform::{lower, lower_fused, FuseMode, FusedKernel, TuningConfig};
 use crate::tunedb::{Answer, PerfModel, TuneDb};
 use crate::tuner::{self, FeatureMap, MlSearchOpts, Strategy, TuneResult, TuningSpace};
 
@@ -581,6 +581,11 @@ impl KernelService {
         key: &PlanKey,
         dev: &'static DeviceSpec,
     ) -> Result<PlanEntry, ServeError> {
+        // Fused pipeline kernels have synthesized (not built-in) sources
+        // and a mode-aware tuning space — a separate build path.
+        if let Some(fk) = fusion::fused_by_id(&key.kernel) {
+            return self.build_fused_entry(key, dev, fk);
+        }
         let Some(kdef) = bench_defs::kernel_by_id(&key.kernel) else {
             return Err(ServeError::UnknownKernel(key.kernel.clone()));
         };
@@ -627,10 +632,113 @@ impl KernelService {
         })
     }
 
+    /// [`Self::build_entry`] for a *fused* pipeline kernel: the sources
+    /// are synthesized by the fusion pass (one per [`FuseMode`]), the
+    /// tuning space is `TuningSpace::enumerate_fused` (mapping axes ×
+    /// fuse mode, searched exhaustively — it is small), and each
+    /// candidate is modelled against its own mode's lowering source. The
+    /// winning config — including the per-device fuse decision — is
+    /// recorded in the knowledge base like any other tune.
+    fn build_fused_entry(
+        &self,
+        key: &PlanKey,
+        dev: &'static DeviceSpec,
+        fk: &'static FusedKernel,
+    ) -> Result<PlanEntry, ServeError> {
+        let compile_err = |msg: String| ServeError::Compile {
+            kernel: key.kernel.clone(),
+            msg,
+        };
+        let inline_info = KernelInfo::analyze(
+            frontend(fk.inline_source()).map_err(|e| compile_err(e.to_string()))?,
+        );
+        let merged_info = match fk.merged_source() {
+            Some(src) => Some(KernelInfo::analyze(
+                frontend(src).map_err(|e| compile_err(e.to_string()))?,
+            )),
+            None => None,
+        };
+        let fm = FeatureMap::new(&inline_info);
+
+        let answer = {
+            let _db_span = obs::span("tunedb.query");
+            self.db.lookup(&key.kernel, dev.name, key.grid)
+        };
+        let (config, est_seconds, source) = match answer {
+            Answer::Exact(rec) => {
+                Counters::bump(&self.counters.warm_starts);
+                (rec.config, rec.seconds, TuneSource::WarmStart)
+            }
+            _ => {
+                let _search_span = obs::span("tune.search");
+                let space =
+                    TuningSpace::enumerate_fused(dev, &fk.modes(), &fk.lstage_tiles());
+                let eval = |cfg: &TuningConfig| match cfg.fuse {
+                    Some(FuseMode::Inline) => {
+                        let km = KernelModel::build(&inline_info, cfg);
+                        predict(dev, &km, key.grid.0, key.grid.1).seconds
+                    }
+                    Some(FuseMode::LocalStage) => match &merged_info {
+                        Some(mi) => {
+                            // Model the merged kernel as it will lower:
+                            // with the intermediates staged locally.
+                            let mut c = cfg.clone();
+                            for m in &fk.fused_images {
+                                c.local_mem.insert(m.clone(), true);
+                            }
+                            let km = KernelModel::build(mi, &c);
+                            predict(dev, &km, key.grid.0, key.grid.1).seconds
+                        }
+                        None => f64::INFINITY,
+                    },
+                    None => f64::INFINITY,
+                };
+                let res =
+                    tuner::tune_in_space(&space, &inline_info, &Strategy::Exhaustive, eval);
+                Counters::bump(&self.counters.tunes);
+                Counters::add(&self.counters.search_evals, res.evals as u64);
+                Counters::add(
+                    &self.counters.search_wall_us,
+                    (res.wall_secs * 1e6) as u64,
+                );
+                self.db.record_tune(&key.kernel, dev, key.grid, &res, &fm);
+                (res.best, res.best_time, TuneSource::Fresh)
+            }
+        };
+
+        let _compile_span = obs::span("plan.compile");
+        let pkey = profile::PlanKey::new(&key.kernel, dev.name, key.grid);
+        let t_lower = std::time::Instant::now();
+        let plan = lower_fused(fk, &config).map_err(|e| compile_err(e.to_string()))?;
+        profile::profiler().add_phase(
+            &pkey,
+            profile::Phase::Lower,
+            t_lower.elapsed().as_micros() as u64,
+        );
+        Counters::bump(&self.counters.plan_compiles);
+        let args = fusion::fused_workload(fk, &plan, key.grid.0, key.grid.1, 0);
+        let prepared = PreparedKernel::prepare_on(&plan, &args, key.grid, dev.name)
+            .map_err(|e| compile_err(e.to_string()))?;
+        let features = fm.features(&config);
+        Ok(PlanEntry {
+            key: key.clone(),
+            config,
+            plan,
+            prepared,
+            est_seconds,
+            source,
+            features,
+            wall_recorded: std::sync::atomic::AtomicBool::new(false),
+        })
+    }
+
     /// Tuned execution-time estimate for a benchmark graph (composite
     /// graphs sum their stages), driving cached keys into the cache on
-    /// demand. Unknown graphs are infinitely slow rather than fatal — the
-    /// scheduler then simply never places them.
+    /// demand. A graph with a fused single-kernel form additionally
+    /// competes against that plan's tuned estimate — the planner sees
+    /// `min(staged stages, fused kernel)` per device. Unknown graphs are
+    /// infinitely slow rather than fatal — the scheduler then simply
+    /// never places them.
     pub fn graph_time(&self, dev: &DeviceSpec, graph: &str, n: usize) -> f64 {
         let Some(dev) = devices::by_name(dev.name) else {
             return f64::INFINITY;
@@ -645,6 +753,11 @@ impl KernelService {
             match self.plan(kernel, dev, (n, n)) {
                 Ok(entry) => total += entry.est_seconds,
                 Err(_) => return f64::INFINITY,
+            }
+        }
+        if let Some(fid) = fusion::fused_graph_id(graph) {
+            if let Ok(entry) = self.plan(fid, dev, (n, n)) {
+                total = total.min(entry.est_seconds);
             }
         }
         total
@@ -734,6 +847,39 @@ mod tests {
         assert!(s.makespan_s.is_finite() && s.makespan_s > 0.0);
         // Scheduling populated the cache: 2 kernels × 4 devices.
         assert_eq!(svc.stats().tunes, 8);
+    }
+
+    #[test]
+    fn fused_graph_competes_with_staged_stages() {
+        let svc = test_service(ExecMode::Simulate);
+        let t = svc.graph_time(&K40, "harris_pipeline", 64);
+        assert!(t.is_finite() && t > 0.0);
+        // graph_time tuned sobel + harris + the fused kernel on the K40.
+        assert_eq!(svc.stats().tunes, 3);
+        let fused = svc.plan("fused_sobel_harris", &K40, (64, 64)).unwrap();
+        let staged: f64 = ["sobel", "harris"]
+            .iter()
+            .map(|k| svc.plan(k, &K40, (64, 64)).unwrap().est_seconds)
+            .sum();
+        assert!((t - staged.min(fused.est_seconds)).abs() < 1e-12, "{t}");
+        // The winning config carries the per-device fuse decision, and
+        // the tune landed in the knowledge base (so `schedule_with_db`
+        // and future sessions see it).
+        assert!(fused.config.fuse.is_some());
+        let rec = svc.db().exact("fused_sobel_harris", K40.name, (64, 64)).unwrap();
+        assert_eq!(rec.config.fuse, fused.config.fuse);
+    }
+
+    #[test]
+    fn fused_entry_is_executable_and_bit_identical() {
+        use crate::pipeline::fusion::{fused_by_id, fused_workload, image_bits, run_staged};
+        let svc = test_service(ExecMode::Real);
+        let entry = svc.plan("fused_sobel_harris", &INTEL_I7, (16, 16)).unwrap();
+        let fk = fused_by_id("fused_sobel_harris").unwrap();
+        let mut args = fused_workload(fk, &entry.plan, 16, 16, 0);
+        entry.prepared.run(&mut args).unwrap();
+        let staged = run_staged(fk, 16, 16, 0, crate::exec::Engine::TreeWalk).unwrap();
+        assert_eq!(image_bits(&args, "out"), image_bits(&staged, "out"));
     }
 
     #[test]

@@ -34,6 +34,29 @@ impl fmt::Display for MemSpace {
     }
 }
 
+/// How a fusable producer→consumer edge is compiled when the kernel is a
+/// fused pipeline stage (see `transform::fuse`). `None` on the config means
+/// the kernel is not fused (or the edge is executed staged) — which keeps
+/// every pre-fusion tunedb record parseable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FuseMode {
+    /// Recompute the producer expression at every consumer read site
+    /// (in-register, no intermediate traffic, duplicated arithmetic).
+    Inline,
+    /// Compute the producer once per work-group tile element and stage the
+    /// tile through `__local` memory (one recompute per halo pixel).
+    LocalStage,
+}
+
+impl fmt::Display for FuseMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FuseMode::Inline => write!(f, "inline"),
+            FuseMode::LocalStage => write!(f, "lstage"),
+        }
+    }
+}
+
 /// A complete assignment of tuning-parameter values.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TuningConfig {
@@ -54,6 +77,9 @@ pub struct TuningConfig {
     /// `0` = fully unroll (matches the 0/1 encoding of the paper's result
     /// tables where 1 means "unrolled"), any other value = partial factor.
     pub unroll: BTreeMap<usize, usize>,
+    /// Fusion strategy when this config targets a fused pipeline kernel
+    /// (`None` for ordinary kernels / staged execution).
+    pub fuse: Option<FuseMode>,
 }
 
 impl Default for TuningConfig {
@@ -68,6 +94,7 @@ impl Default for TuningConfig {
             constant_mem: BTreeMap::new(),
             local_mem: BTreeMap::new(),
             unroll: BTreeMap::new(),
+            fuse: None,
         }
     }
 }
@@ -194,6 +221,13 @@ impl TuningConfig {
                         );
                     }
                 }
+                "fuse" => {
+                    cfg.fuse = Some(match v {
+                        "inline" => FuseMode::Inline,
+                        "lstage" => FuseMode::LocalStage,
+                        _ => return Err(format!("bad fuse mode {v:?}")),
+                    });
+                }
                 other => return Err(format!("unknown config key {other:?}")),
             }
         }
@@ -246,6 +280,9 @@ impl fmt::Display for TuningConfig {
         if !unroll.is_empty() {
             write!(f, " unroll={}", unroll.join(","))?;
         }
+        if let Some(m) = self.fuse {
+            write!(f, " fuse={m}")?;
+        }
         Ok(())
     }
 }
@@ -295,6 +332,21 @@ mod tests {
         assert!(TuningConfig::parse("wg=8 px=1x1").is_err());
         assert!(TuningConfig::parse("wg=8x8 px=1x1 map=diagonal").is_err());
         assert!(TuningConfig::parse("wg=8x8 px=1x1 zap=1").is_err());
+        assert!(TuningConfig::parse("wg=8x8 px=1x1 fuse=maybe").is_err());
+    }
+
+    #[test]
+    fn fuse_dimension_roundtrip() {
+        let mut c = TuningConfig::default();
+        assert!(!c.to_string().contains("fuse="), "{c}");
+        c.fuse = Some(FuseMode::Inline);
+        assert!(c.to_string().ends_with(" fuse=inline"), "{c}");
+        assert_eq!(TuningConfig::parse(&c.to_string()).unwrap(), c);
+        c.fuse = Some(FuseMode::LocalStage);
+        assert!(c.to_string().ends_with(" fuse=lstage"), "{c}");
+        assert_eq!(TuningConfig::parse(&c.to_string()).unwrap(), c);
+        // Legacy (pre-fusion) records have no fuse key and parse to None.
+        assert_eq!(TuningConfig::parse("wg=8x8 px=2x2").unwrap().fuse, None);
     }
 
     #[test]

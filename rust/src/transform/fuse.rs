@@ -1,0 +1,1477 @@
+//! Producer→consumer stencil fusion: compile two pipeline stages into one
+//! kernel, eliminating the intermediate image entirely.
+//!
+//! A staged pipeline executes `P` then `C`, materializing every
+//! intermediate pixel `M[x][y] = P(x, y)` in a full-size buffer that `C`
+//! then re-reads — the dominant memory-traffic cost at pipeline scale
+//! (Lift's fusion rewrite rules and Halide/Rigel-style line buffering both
+//! target exactly this). Fusion instead recomputes `P` *inside* `C`, in
+//! one of two modes chosen per device by the tuner ([`FuseMode`]):
+//!
+//! * **Inline (recompute-in-register)** — every consumer read
+//!   `M[idx+cx][idy+cy]` is replaced by an instantiation of the producer
+//!   body at that coordinate, its outputs captured in registers. Cheap
+//!   producers (few ops) win here: no extra local memory, no barrier, and
+//!   the plan stays single-phase so it keeps row-parallel batched
+//!   execution.
+//! * **Local-stage** — the producer is evaluated once per element of the
+//!   work-group's halo'd tile and staged through `__local` memory; the
+//!   consumer body is untouched and reads the tile exactly as the
+//!   local-memory optimization (paper §5.2.4) would. Expensive producers
+//!   win here: each intermediate pixel is computed ~once per tile instead
+//!   of once per consuming read.
+//!
+//! # Halo composition
+//!
+//! If the producer reads its input with stencil `S_p` (bounding box of
+//! offsets) and the consumer reads the intermediate with stencil `S_c`,
+//! the fused kernel reads the producer's *input* with the Minkowski sum
+//! `S_p ⊕ S_c` ([`Stencil::compose`]): producing the intermediate at
+//! offset `(cx, cy)` needs input pixels at `(cx+px, cy+py)` for every
+//! producer offset `(px, py)`. Sobel (±1, ±1) feeding Harris (0..1, 0..1)
+//! therefore reads the source image over (−1..2, −1..2). The composed
+//! stencil is reported by [`FusedKernel::composed_input_stencils`]; tile
+//! sizing in local-stage mode needs only `S_c` (the staged array is the
+//! intermediate, not the input).
+//!
+//! # Bit-identity
+//!
+//! Fused execution is required to be f64-bit-identical to staged
+//! execution (`tests/fusion.rs` sweeps this). Two details make that work:
+//!
+//! * Staged consumers read `M[clamp(ex, 0, w−1)]` at the boundary, so the
+//!   fused kernel clamps the *coordinate* first (`u = clamp(ex)`), then
+//!   instantiates the producer at `(u, v)` with the producer's own
+//!   boundary handling — the exact float op sequence of staged execution.
+//!   (Clamps do not compose: `clamp(clamp(x)+c) ≠ clamp(x+c)`, which is
+//!   why the producer is recomputed at the clamped point rather than the
+//!   consumer's load being rewritten.)
+//! * The staged producer stores through the intermediate's element type
+//!   (e.g. rounding f64 arithmetic to f32). The fused kernel reproduces
+//!   that rounding by capturing each producer output in a declaration of
+//!   the intermediate's element type (declaration initializers cast to
+//!   the declared type).
+//!
+//! # Legality
+//!
+//! Fusion is refused (the edge stays staged, "no-fuse") unless:
+//!
+//! * the producer writes each bound output exactly once, unconditionally,
+//!   at top level, as `out[idx][idy] = e;`, writes nothing else, never
+//!   reads its outputs, and has no `return`;
+//! * every producer-written image is bound to a consumer parameter of the
+//!   same floating-point element type, and the consumer only reads it
+//!   (2-D indexing, no reads inside `if`/`for`/`while` headers, no fused
+//!   read nested in another fused read's coordinates);
+//! * consumer reads of the intermediate are either all at the exact grid
+//!   point `(idx, idy)` or the intermediate's boundary is `clamped` — a
+//!   `constant` boundary would require materializing out-of-range zeros
+//!   the producer never computes (e.g. `unsharp` as a consumer stays
+//!   staged);
+//! * both kernels use `grid(image)` (not an explicit grid), and all
+//!   images share the grid dimensions at run time (the pipeline contract;
+//!   the fused kernel derives the intermediate's extent from the grid).
+//!
+//! `force(...)` directives of the two stages are dropped in the fused
+//! kernel: the fused tuning space deliberately excludes the per-array
+//! memory axes (see `TuningSpace::enumerate_fused`).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::analysis::{Access, KernelInfo, Stencil};
+use crate::imagecl::ast::*;
+use crate::imagecl::{frontend, BoundaryCond, CheckedProgram, FrontendError, GridSpec};
+
+use super::clir::{KernelPlan, LocalArray, GRID_H, GRID_W};
+use super::config::{FuseMode, TuningConfig};
+use super::lower::{lower, TransformError};
+
+/// Why a fusion edge could not be built or lowered.
+#[derive(Debug, thiserror::Error)]
+pub enum FuseError {
+    /// The synthesized (or input) kernel failed the frontend.
+    #[error("fusion frontend error: {0}")]
+    Frontend(#[from] FrontendError),
+    /// The edge violates a fusion legality rule (stays staged).
+    #[error("fusion not legal: {0}")]
+    Illegal(String),
+    /// Lowering the fused kernel failed.
+    #[error(transparent)]
+    Transform(#[from] TransformError),
+}
+
+fn illegal(msg: impl Into<String>) -> FuseError {
+    FuseError::Illegal(msg.into())
+}
+
+/// A validated producer→consumer fusion edge with its synthesized sources.
+///
+/// Built once per edge by [`FusedKernel::build`]; lowered per tuning
+/// config by [`lower_fused`].
+#[derive(Debug, Clone)]
+pub struct FusedKernel {
+    /// Fused kernel id (also the synthesized kernel function name).
+    pub id: String,
+    pub producer_id: String,
+    pub consumer_id: String,
+    pub producer: CheckedProgram,
+    pub consumer: CheckedProgram,
+    /// `(producer output image, consumer input image)` pairs fused away.
+    pub bindings: Vec<(String, String)>,
+    /// Consumer-side names of the eliminated intermediate images.
+    pub fused_images: Vec<String>,
+    /// Collision-free prefix for producer identifiers in the fused kernel.
+    pub prefix: String,
+    /// The image the fused kernel's grid is derived from.
+    pub consumer_output: String,
+    /// Whether the fused kernel takes the intermediate's dimensions as
+    /// extra scalar parameters (`{prefix}fw`/`{prefix}fh`) — needed
+    /// whenever some consumer read of a fused image is non-point.
+    pub needs_dims: bool,
+    /// Whether local-stage mode is available (consumer stencils of all
+    /// fused images are extractable).
+    pub lstage_ok: bool,
+    inline_src: String,
+    merged_src: Option<String>,
+}
+
+impl FusedKernel {
+    /// Validate the edge and synthesize the fused sources.
+    ///
+    /// `producer`/`consumer` are `(kernel id, ImageCL source)`; `bindings`
+    /// maps each producer output image to the consumer parameter it feeds.
+    pub fn build(
+        id: &str,
+        producer: (&str, &str),
+        consumer: (&str, &str),
+        bindings: &[(&str, &str)],
+    ) -> Result<FusedKernel, FuseError> {
+        let (producer_id, producer_src) = producer;
+        let (consumer_id, consumer_src) = consumer;
+        let p = frontend(producer_src)?;
+        let c = frontend(consumer_src)?;
+        let bindings: Vec<(String, String)> = bindings
+            .iter()
+            .map(|(o, i)| (o.to_string(), i.to_string()))
+            .collect();
+        check_bindings(&p, &c, &bindings)?;
+        let fused_images: Vec<String> = bindings.iter().map(|(_, i)| i.clone()).collect();
+        check_producer(&p, &bindings)?;
+        check_consumer(&c, &fused_images)?;
+        for (prog, role) in [(&p, "producer"), (&c, "consumer")] {
+            if matches!(prog.grid, GridSpec::Explicit(_)) {
+                return Err(illegal(format!(
+                    "{role} `{}` uses an explicit grid — fusion requires grid(image)",
+                    prog.kernel.name
+                )));
+            }
+        }
+
+        let mut universe = ident_universe(&p.kernel);
+        universe.extend(ident_universe(&c.kernel));
+        let prefix = pick_prefix(&universe);
+        let consumer_output = first_written_image(&c.kernel)
+            .ok_or_else(|| illegal(format!("consumer `{}` writes no image", c.kernel.name)))?;
+
+        let reads = fused_reads(&c.kernel.body, &fused_images);
+        let needs_dims = reads.iter().any(|(_, ex, ey)| !is_point(ex, ey));
+        for (img, ex, ey) in &reads {
+            let bc = c.boundary.get(img).copied().unwrap_or_default();
+            if !is_point(ex, ey) && !matches!(bc, BoundaryCond::Clamped) {
+                return Err(illegal(format!(
+                    "consumer `{}` reads fused image `{img}` at an offset but its boundary \
+                     is not `clamped` — constant-boundary halos cannot be recomputed; \
+                     keep this edge staged",
+                    c.kernel.name
+                )));
+            }
+        }
+        let cinfo = KernelInfo::analyze(c.clone());
+        let lstage_ok = fused_images.iter().all(|m| cinfo.read_stencil(m).is_some());
+
+        let mut fk = FusedKernel {
+            id: id.to_string(),
+            producer_id: producer_id.to_string(),
+            consumer_id: consumer_id.to_string(),
+            producer: p,
+            consumer: c,
+            bindings,
+            fused_images,
+            prefix,
+            consumer_output,
+            needs_dims,
+            lstage_ok,
+            inline_src: String::new(),
+            merged_src: None,
+        };
+        let inline_src = fk.synth_inline()?;
+        frontend(&inline_src)?; // self-check: synthesized source must be valid
+        fk.inline_src = inline_src;
+        if fk.lstage_ok {
+            let merged = fk.synth_merged();
+            frontend(&merged)?;
+            fk.merged_src = Some(merged);
+        }
+        Ok(fk)
+    }
+
+    /// The synthesized inline-mode source (producer recomputed in place).
+    pub fn inline_source(&self) -> &str {
+        &self.inline_src
+    }
+
+    /// The merged source for local-stage mode (consumer body verbatim,
+    /// producer inputs appended) — `None` when local staging is illegal.
+    pub fn merged_source(&self) -> Option<&str> {
+        self.merged_src.as_deref()
+    }
+
+    pub fn is_fused(&self, name: &str) -> bool {
+        self.fused_images.iter().any(|m| m == name)
+    }
+
+    /// The fuse modes legal for this edge.
+    pub fn modes(&self) -> Vec<FuseMode> {
+        if self.lstage_ok {
+            vec![FuseMode::Inline, FuseMode::LocalStage]
+        } else {
+            vec![FuseMode::Inline]
+        }
+    }
+
+    /// Bytes of intermediate-image traffic eliminated by fusing at
+    /// `w`×`h` (one full buffer per fused image).
+    pub fn intermediate_bytes(&self, w: usize, h: usize) -> usize {
+        self.fused_images
+            .iter()
+            .map(|m| self.fused_elem(m).size_bytes() * w * h)
+            .sum()
+    }
+
+    /// Per fused image: `(extent_x, extent_y, elem_bytes)` of the staged
+    /// tile — the local-memory capacity inputs for the fused tuning space.
+    pub fn lstage_tiles(&self) -> Vec<(usize, usize, usize)> {
+        let cinfo = KernelInfo::analyze(self.consumer.clone());
+        self.fused_images
+            .iter()
+            .filter_map(|m| {
+                cinfo.read_stencil(m).map(|s| {
+                    (
+                        s.extent_x() as usize,
+                        s.extent_y() as usize,
+                        self.fused_elem(m).size_bytes(),
+                    )
+                })
+            })
+            .collect()
+    }
+
+    /// The fused kernel's read stencil on each producer input image:
+    /// producer stencil dilated by the union of the consumer's stencils
+    /// over the fused images (Minkowski sum — see the module docs).
+    pub fn composed_input_stencils(&self) -> BTreeMap<String, Stencil> {
+        let pinfo = KernelInfo::analyze(self.producer.clone());
+        let cinfo = KernelInfo::analyze(self.consumer.clone());
+        let mut outer: Option<Stencil> = None;
+        for m in &self.fused_images {
+            if let Some(s) = cinfo.read_stencil(m) {
+                outer = Some(match outer {
+                    Some(o) => o.union(&s),
+                    None => s,
+                });
+            }
+        }
+        let outer = outer.unwrap_or(Stencil::POINT);
+        let outputs = self.producer_output_set();
+        let mut out = BTreeMap::new();
+        for p in &self.producer.kernel.params {
+            if matches!(p.ty, Type::Image { .. }) && !outputs.contains(p.name.as_str()) {
+                if let Some(s) = pinfo.read_stencil(&p.name) {
+                    out.insert(p.name.clone(), s.compose(&outer));
+                }
+            }
+        }
+        out
+    }
+
+    fn producer_output_set(&self) -> HashSet<&str> {
+        self.bindings.iter().map(|(o, _)| o.as_str()).collect()
+    }
+
+    fn consumer_name_of(&self, producer_output: &str) -> Option<&str> {
+        self.bindings
+            .iter()
+            .find(|(o, _)| o == producer_output)
+            .map(|(_, i)| i.as_str())
+    }
+
+    /// Element type of a fused intermediate (the consumer parameter's).
+    fn fused_elem(&self, consumer_name: &str) -> ScalarType {
+        self.consumer
+            .kernel
+            .param(consumer_name)
+            .map(|p| p.ty.elem())
+            .expect("fused image is a consumer param (checked at build)")
+    }
+
+    /// Producer params minus bound outputs, renamed with the prefix.
+    fn producer_rename(&self) -> HashMap<String, String> {
+        let outputs = self.producer_output_set();
+        self.producer
+            .kernel
+            .params
+            .iter()
+            .filter(|p| !outputs.contains(p.name.as_str()))
+            .map(|p| (p.name.clone(), format!("{}{}", self.prefix, p.name)))
+            .collect()
+    }
+
+    /// Boundary + element type of a (prefixed) producer input image.
+    fn producer_image_info(&self, prefixed: &str) -> Option<(ScalarType, BoundaryCond)> {
+        let orig = prefixed.strip_prefix(&self.prefix)?;
+        if self.producer_output_set().contains(orig) {
+            return None;
+        }
+        let p = self.producer.kernel.param(orig)?;
+        let elem = match &p.ty {
+            Type::Image { elem, .. } => *elem,
+            _ => return None,
+        };
+        Some((elem, self.producer.boundary.get(orig).copied().unwrap_or_default()))
+    }
+
+    /// The grid image of the fused kernel: the consumer's grid image if it
+    /// survives fusion, else the consumer's output (same dimensions by the
+    /// pipeline contract).
+    fn grid_image(&self) -> String {
+        match &self.consumer.grid {
+            GridSpec::FromImage(img) if !self.is_fused(img) => img.clone(),
+            _ => self.consumer_output.clone(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Inline-mode synthesis
+    // ------------------------------------------------------------------
+
+    fn synth_inline(&self) -> Result<String, FuseError> {
+        let mut counter = 0usize;
+        let mut body = Vec::new();
+        self.fuse_block(&self.consumer.kernel.body, &mut counter, &mut body)?;
+
+        let outputs = self.producer_output_set();
+        let mut params: Vec<Param> = self
+            .producer
+            .kernel
+            .params
+            .iter()
+            .filter(|p| !outputs.contains(p.name.as_str()))
+            .map(|p| Param { name: format!("{}{}", self.prefix, p.name), ty: p.ty.clone() })
+            .collect();
+        params.extend(
+            self.consumer
+                .kernel
+                .params
+                .iter()
+                .filter(|p| !self.is_fused(&p.name))
+                .cloned(),
+        );
+        if self.needs_dims {
+            for dim in ["fw", "fh"] {
+                params.push(Param {
+                    name: format!("{}{dim}", self.prefix),
+                    ty: Type::Scalar(ScalarType::I32),
+                });
+            }
+        }
+        let kernel = KernelFn { name: self.id.clone(), params, body };
+
+        let mut pragmas = vec![format!("grid({})", self.grid_image())];
+        let mut producer_bounds: Vec<_> = self.producer.boundary.iter().collect();
+        producer_bounds.sort_by_key(|(n, _)| n.clone());
+        for (name, bc) in producer_bounds {
+            if !outputs.contains(name.as_str()) {
+                pragmas.push(boundary_pragma(&format!("{}{name}", self.prefix), bc));
+            }
+        }
+        let mut consumer_bounds: Vec<_> = self.consumer.boundary.iter().collect();
+        consumer_bounds.sort_by_key(|(n, _)| n.clone());
+        for (name, bc) in consumer_bounds {
+            if !self.is_fused(name) {
+                pragmas.push(boundary_pragma(name, bc));
+            }
+        }
+        let mut sizes: Vec<_> = self.producer.size_bounds.iter().collect();
+        sizes.sort_by_key(|(n, _)| n.clone());
+        for (name, n) in sizes {
+            pragmas.push(format!("array_size({}{name}, {n})", self.prefix));
+        }
+        let mut csizes: Vec<_> = self.consumer.size_bounds.iter().collect();
+        csizes.sort_by_key(|(n, _)| n.clone());
+        for (name, n) in csizes {
+            pragmas.push(format!("array_size({name}, {n})"));
+        }
+        Ok(render(&pragmas, &kernel))
+    }
+
+    /// Rewrite one consumer block: producer instantiations are emitted
+    /// before the statement that needs them, fused reads become capture
+    /// idents. Instantiations at the same coordinate are shared within a
+    /// block until an intervening statement reassigns a coordinate input.
+    fn fuse_block(
+        &self,
+        stmts: &[Stmt],
+        counter: &mut usize,
+        out: &mut Vec<Stmt>,
+    ) -> Result<(), FuseError> {
+        struct CacheEntry {
+            key: String,
+            /// consumer fused image → capture ident
+            captures: HashMap<String, String>,
+            /// idents the coordinate expressions depend on
+            deps: HashSet<String>,
+        }
+        let mut cache: Vec<CacheEntry> = Vec::new();
+        for s in stmts {
+            match s {
+                Stmt::If { cond, then, els } => {
+                    let mut t = Vec::new();
+                    self.fuse_block(then, counter, &mut t)?;
+                    let mut e = Vec::new();
+                    self.fuse_block(els, counter, &mut e)?;
+                    out.push(Stmt::If { cond: cond.clone(), then: t, els: e });
+                }
+                Stmt::For { var, init, cond, step, body } => {
+                    let mut b = Vec::new();
+                    self.fuse_block(body, counter, &mut b)?;
+                    out.push(Stmt::For {
+                        var: var.clone(),
+                        init: init.clone(),
+                        cond: cond.clone(),
+                        step: step.clone(),
+                        body: b,
+                    });
+                }
+                Stmt::While { cond, body } => {
+                    let mut b = Vec::new();
+                    self.fuse_block(body, counter, &mut b)?;
+                    out.push(Stmt::While { cond: cond.clone(), body: b });
+                }
+                leaf => {
+                    let reads = fused_reads(std::slice::from_ref(leaf), &self.fused_images);
+                    for (_, ex, ey) in &reads {
+                        let key = coord_key(ex, ey);
+                        if !cache.iter().any(|c| c.key == key) {
+                            let n = *counter;
+                            *counter += 1;
+                            let captures = self.instantiate_inline(n, ex, ey, out);
+                            let mut deps = HashSet::new();
+                            collect_idents(ex, &mut deps);
+                            collect_idents(ey, &mut deps);
+                            cache.push(CacheEntry { key, captures, deps });
+                        }
+                    }
+                    if reads.is_empty() {
+                        out.push(leaf.clone());
+                    } else {
+                        let lookup: HashMap<(String, String), String> = cache
+                            .iter()
+                            .flat_map(|c| {
+                                c.captures.iter().map(|(img, cap)| {
+                                    ((c.key.clone(), img.clone()), cap.clone())
+                                })
+                            })
+                            .collect();
+                        let rewritten = leaf.clone().map_exprs(|e| match e {
+                            Expr::Index { ref base, ref indices }
+                                if indices.len() == 2 && self.is_fused(base) =>
+                            {
+                                let key = (coord_key(&indices[0], &indices[1]), base.clone());
+                                match lookup.get(&key) {
+                                    Some(cap) => Expr::ident(cap),
+                                    None => e,
+                                }
+                            }
+                            other => other,
+                        });
+                        out.push(rewritten);
+                    }
+                }
+            }
+            // A statement that (re)assigns an ident a cached coordinate
+            // depends on invalidates that cache entry.
+            let defined = defined_idents(s);
+            cache.retain(|c| c.deps.is_disjoint(&defined));
+        }
+        Ok(())
+    }
+
+    /// Emit one producer instantiation at consumer coordinate `(ex, ey)`,
+    /// clamped to the intermediate's extent for non-point reads (staged
+    /// consumers read `M[clamp(ex)]`; we compute `P` at exactly that
+    /// point). Returns the per-image capture idents.
+    fn instantiate_inline(
+        &self,
+        n: usize,
+        ex: &Expr,
+        ey: &Expr,
+        out: &mut Vec<Stmt>,
+    ) -> HashMap<String, String> {
+        let pfx = &self.prefix;
+        let (cx, cy) = if is_point(ex, ey) {
+            (Expr::ident("idx"), Expr::ident("idy"))
+        } else {
+            let ux = format!("{pfx}u{n}");
+            let vy = format!("{pfx}v{n}");
+            let fw = Expr::ident(&format!("{pfx}fw"));
+            let fh = Expr::ident(&format!("{pfx}fh"));
+            out.push(Stmt::Decl {
+                ty: ScalarType::I32,
+                name: ux.clone(),
+                init: Some(clamp0(ex.clone(), Expr::sub(fw, Expr::int(1)))),
+            });
+            out.push(Stmt::Decl {
+                ty: ScalarType::I32,
+                name: vy.clone(),
+                init: Some(clamp0(ey.clone(), Expr::sub(fh, Expr::int(1)))),
+            });
+            (Expr::ident(&ux), Expr::ident(&vy))
+        };
+        let inst = ProducerInst {
+            fk: self,
+            tag: format!("{pfx}b{n}_"),
+            cx,
+            cy,
+            plan_level: false,
+        };
+        inst.run(out)
+    }
+
+    // ------------------------------------------------------------------
+    // Local-stage synthesis
+    // ------------------------------------------------------------------
+
+    /// The merged source: consumer body and parameters verbatim (the
+    /// intermediate stays a parameter, to be staged through local memory),
+    /// plus the producer's inputs. The staging loads are rewritten into
+    /// producer evaluations after lowering ([`Self::lstage_surgery`]).
+    fn synth_merged(&self) -> String {
+        let outputs = self.producer_output_set();
+        let mut params = self.consumer.kernel.params.clone();
+        params.extend(
+            self.producer
+                .kernel
+                .params
+                .iter()
+                .filter(|p| !outputs.contains(p.name.as_str()))
+                .map(|p| Param { name: format!("{}{}", self.prefix, p.name), ty: p.ty.clone() }),
+        );
+        let kernel = KernelFn {
+            name: self.id.clone(),
+            params,
+            body: self.consumer.kernel.body.clone(),
+        };
+        let grid = match &self.consumer.grid {
+            GridSpec::FromImage(img) => img.clone(),
+            GridSpec::Explicit(_) => unreachable!("rejected at build"),
+        };
+        let mut pragmas = vec![format!("grid({grid})")];
+        let mut consumer_bounds: Vec<_> = self.consumer.boundary.iter().collect();
+        consumer_bounds.sort_by_key(|(n, _)| n.clone());
+        for (name, bc) in consumer_bounds {
+            pragmas.push(boundary_pragma(name, bc));
+        }
+        let mut producer_bounds: Vec<_> = self.producer.boundary.iter().collect();
+        producer_bounds.sort_by_key(|(n, _)| n.clone());
+        for (name, bc) in producer_bounds {
+            if !outputs.contains(name.as_str()) {
+                pragmas.push(boundary_pragma(&format!("{}{name}", self.prefix), bc));
+            }
+        }
+        let mut sizes: Vec<_> = self.producer.size_bounds.iter().collect();
+        sizes.sort_by_key(|(n, _)| n.clone());
+        for (name, n) in sizes {
+            pragmas.push(format!("array_size({}{name}, {n})", self.prefix));
+        }
+        let mut csizes: Vec<_> = self.consumer.size_bounds.iter().collect();
+        csizes.sort_by_key(|(n, _)| n.clone());
+        for (name, n) in csizes {
+            pragmas.push(format!("array_size({name}, {n})"));
+        }
+        render(&pragmas, &kernel)
+    }
+
+    /// Rewrite the staging phase of a merged-source plan: instead of
+    /// loading each tile element of the intermediate from global memory,
+    /// compute it with the producer body at the element's clamped global
+    /// coordinate, then drop the intermediate from the plan's parameters.
+    ///
+    /// Staged-with-local-memory execution loads
+    /// `__loc[s] = M[clamp(g)] = P(clamp(g))`; the rewritten loop computes
+    /// `P(clamp(g))` directly — identical values, no `M` buffer. The
+    /// intermediate's dimensions equal the grid's (pipeline contract), so
+    /// the clamp bound is `__gw`/`__gh`.
+    fn lstage_surgery(&self, plan: &mut KernelPlan, info: &KernelInfo) -> Result<(), FuseError> {
+        if plan.phases.len() != 2 || plan.locals.is_empty() {
+            return Err(illegal("local-stage plan must have a staging phase"));
+        }
+        let staging = std::mem::take(&mut plan.phases[0]);
+        let mut rebuilt = Vec::new();
+        // (tile_w, tile_h, min_dx, min_dy) → staged locals, first-seen order.
+        type GroupKey = (usize, usize, i64, i64);
+        let mut groups: Vec<(GroupKey, Vec<LocalArray>)> = Vec::new();
+        for s in staging {
+            let Stmt::For { ref body, .. } = s else {
+                rebuilt.push(s); // `__gox`/`__goy`/`__t` prelude decls
+                continue;
+            };
+            let Some(Stmt::Assign { lhs: LValue::Index { base, .. }, .. }) = body.last() else {
+                return Err(illegal("unexpected staging loop shape"));
+            };
+            let loc = plan
+                .local(base)
+                .cloned()
+                .ok_or_else(|| illegal(format!("staging loop writes unknown local `{base}`")))?;
+            if !self.is_fused(&loc.stages) {
+                return Err(illegal(format!(
+                    "merged plan stages non-fused image `{}`",
+                    loc.stages
+                )));
+            }
+            let st = info
+                .read_stencil(&loc.stages)
+                .ok_or_else(|| illegal(format!("no stencil for fused image `{}`", loc.stages)))?;
+            let key = (loc.tile_w, loc.tile_h, st.min_dx, st.min_dy);
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, locs)) => locs.push(loc),
+                None => groups.push((key, vec![loc])),
+            }
+        }
+        if groups.is_empty() {
+            return Err(illegal("merged plan staged no fused image"));
+        }
+
+        let wg_threads = plan.config.wg_threads() as i64;
+        let pfx = &self.prefix;
+        for (n, ((tile_w, _, min_dx, min_dy), locs)) in groups.into_iter().enumerate() {
+            let len = locs[0].len;
+            let gx = format!("{pfx}gx{n}");
+            let gy = format!("{pfx}gy{n}");
+            let cx = format!("{pfx}cx{n}");
+            let cy = format!("{pfx}cy{n}");
+            let mut body = vec![
+                Stmt::Decl {
+                    ty: ScalarType::I32,
+                    name: "__sx".into(),
+                    init: Some(Expr::bin(
+                        BinOp::Rem,
+                        Expr::ident("__s"),
+                        Expr::int(tile_w as i64),
+                    )),
+                },
+                Stmt::Decl {
+                    ty: ScalarType::I32,
+                    name: "__sy".into(),
+                    init: Some(Expr::bin(
+                        BinOp::Div,
+                        Expr::ident("__s"),
+                        Expr::int(tile_w as i64),
+                    )),
+                },
+                Stmt::Decl {
+                    ty: ScalarType::I32,
+                    name: gx.clone(),
+                    init: Some(Expr::add(
+                        Expr::add(Expr::ident("__gox"), Expr::int(min_dx)),
+                        Expr::ident("__sx"),
+                    )),
+                },
+                Stmt::Decl {
+                    ty: ScalarType::I32,
+                    name: gy.clone(),
+                    init: Some(Expr::add(
+                        Expr::add(Expr::ident("__goy"), Expr::int(min_dy)),
+                        Expr::ident("__sy"),
+                    )),
+                },
+                Stmt::Decl {
+                    ty: ScalarType::I32,
+                    name: cx.clone(),
+                    init: Some(clamp0(
+                        Expr::ident(&gx),
+                        Expr::sub(Expr::ident(GRID_W), Expr::int(1)),
+                    )),
+                },
+                Stmt::Decl {
+                    ty: ScalarType::I32,
+                    name: cy.clone(),
+                    init: Some(clamp0(
+                        Expr::ident(&gy),
+                        Expr::sub(Expr::ident(GRID_H), Expr::int(1)),
+                    )),
+                },
+            ];
+            let inst = ProducerInst {
+                fk: self,
+                tag: format!("{pfx}t{n}_"),
+                cx: Expr::ident(&cx),
+                cy: Expr::ident(&cy),
+                plan_level: true,
+            };
+            let captures = inst.run(&mut body);
+            for loc in &locs {
+                let cap = captures.get(&loc.stages).ok_or_else(|| {
+                    illegal(format!("producer computes no capture for `{}`", loc.stages))
+                })?;
+                body.push(Stmt::Assign {
+                    lhs: LValue::Index {
+                        base: loc.name.clone(),
+                        indices: vec![Expr::ident("__s")],
+                    },
+                    op: AssignOp::Set,
+                    value: Expr::ident(cap),
+                });
+            }
+            rebuilt.push(Stmt::For {
+                var: "__s".into(),
+                init: Expr::ident("__t"),
+                cond: Expr::bin(BinOp::Lt, Expr::ident("__s"), Expr::int(len as i64)),
+                step: Expr::int(wg_threads),
+                body,
+            });
+        }
+        plan.phases[0] = rebuilt;
+
+        // The intermediate is gone: drop its buffer + dimension scalars,
+        // and mark the producer's inputs (now read by phase 0) read-only.
+        plan.buffers.retain(|b| !self.is_fused(&b.name));
+        plan.scalars.retain(|(name, _)| {
+            !self
+                .fused_images
+                .iter()
+                .any(|m| *name == format!("{m}_w") || *name == format!("{m}_h"))
+        });
+        for b in &mut plan.buffers {
+            if self.producer_image_info(&b.name).is_some()
+                || b
+                    .name
+                    .strip_prefix(&self.prefix)
+                    .is_some_and(|orig| self.producer.kernel.param(orig).is_some())
+            {
+                b.access = Access::ReadOnly;
+            }
+        }
+        if let GridSpec::FromImage(img) = &plan.grid {
+            if self.is_fused(img) {
+                plan.grid = GridSpec::FromImage(self.grid_image());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Lower a fused kernel under a tuning config with `cfg.fuse` set.
+///
+/// The mapping axes (`wg`, `coarsen`, `interleaved`) are honored; the
+/// per-array memory axes and unrolling are reset (fused kernels tune
+/// them through `TuningSpace::enumerate_fused`, which excludes them).
+pub fn lower_fused(fk: &FusedKernel, cfg: &TuningConfig) -> Result<KernelPlan, FuseError> {
+    let mode = cfg
+        .fuse
+        .ok_or_else(|| illegal(format!("lowering `{}` requires cfg `fuse=`", fk.id)))?;
+    let mut base = TuningConfig {
+        wg: cfg.wg,
+        coarsen: cfg.coarsen,
+        interleaved: cfg.interleaved,
+        ..TuningConfig::default()
+    };
+    match mode {
+        FuseMode::Inline => {
+            let info = KernelInfo::analyze(frontend(fk.inline_source())?);
+            let mut plan = lower(&info, &base)?;
+            plan.config.fuse = Some(FuseMode::Inline);
+            Ok(plan)
+        }
+        FuseMode::LocalStage => {
+            let src = fk.merged_source().ok_or_else(|| {
+                illegal(format!("`{}`: consumer stencil not extractable — no local-stage", fk.id))
+            })?;
+            let info = KernelInfo::analyze(frontend(src)?);
+            for m in &fk.fused_images {
+                base.local_mem.insert(m.clone(), true);
+            }
+            let mut plan = lower(&info, &base)?;
+            fk.lstage_surgery(&mut plan, &info)?;
+            plan.config.fuse = Some(FuseMode::LocalStage);
+            Ok(plan)
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Producer instantiation (shared by both modes)
+// ----------------------------------------------------------------------
+
+/// One instantiation of the producer body at a fixed coordinate.
+///
+/// Producer identifiers are renamed with `tag` (locals/loop vars) or the
+/// edge prefix (parameters); `idx`/`idy` are substituted with `cx`/`cy`.
+/// Output stores become typed capture declarations (reproducing the
+/// staged store's element-type rounding). At `plan_level`, producer image
+/// reads are lowered to explicit 1-D boundary-handled global loads (the
+/// plan's ABI), matching `lower`'s own load forms.
+struct ProducerInst<'a> {
+    fk: &'a FusedKernel,
+    tag: String,
+    cx: Expr,
+    cy: Expr,
+    plan_level: bool,
+}
+
+impl ProducerInst<'_> {
+    /// Emit the instantiated body into `out`; returns consumer-side fused
+    /// image → capture ident.
+    fn run(&self, out: &mut Vec<Stmt>) -> HashMap<String, String> {
+        let mut rename = self.fk.producer_rename();
+        let mut captures = HashMap::new();
+        self.stmts(&self.fk.producer.kernel.body, &mut rename, &mut captures, out);
+        captures
+    }
+
+    fn stmts(
+        &self,
+        stmts: &[Stmt],
+        rename: &mut HashMap<String, String>,
+        captures: &mut HashMap<String, String>,
+        out: &mut Vec<Stmt>,
+    ) {
+        for s in stmts {
+            match s {
+                Stmt::Decl { ty, name, init } => {
+                    let init = init.as_ref().map(|e| self.expr(e, rename));
+                    let new = format!("{}{name}", self.tag);
+                    rename.insert(name.clone(), new.clone());
+                    out.push(Stmt::Decl { ty: *ty, name: new, init });
+                }
+                Stmt::Assign { lhs: LValue::Var(v), op, value } => {
+                    let value = self.expr(value, rename);
+                    let name = rename.get(v).cloned().unwrap_or_else(|| v.clone());
+                    out.push(Stmt::Assign { lhs: LValue::Var(name), op: *op, value });
+                }
+                Stmt::Assign { lhs: LValue::Index { base, .. }, value, .. } => {
+                    // Producer output store (legality: top-level
+                    // `out[idx][idy] = e;`) → typed capture declaration.
+                    let value = self.expr(value, rename);
+                    let m = self
+                        .fk
+                        .consumer_name_of(base)
+                        .expect("legality: producer stores only to bound outputs");
+                    let cap = format!("{}{base}", self.tag);
+                    out.push(Stmt::Decl {
+                        ty: self.fk.fused_elem(m),
+                        name: cap.clone(),
+                        init: Some(value),
+                    });
+                    captures.insert(m.to_string(), cap);
+                }
+                Stmt::For { var, init, cond, step, body } => {
+                    let init = self.expr(init, rename);
+                    let mut inner = rename.clone();
+                    let new = format!("{}{var}", self.tag);
+                    inner.insert(var.clone(), new.clone());
+                    let cond = self.expr(cond, &inner);
+                    let step = self.expr(step, &inner);
+                    let mut b = Vec::new();
+                    self.stmts(body, &mut inner, captures, &mut b);
+                    out.push(Stmt::For { var: new, init, cond, step, body: b });
+                }
+                Stmt::If { cond, then, els } => {
+                    let cond = self.expr(cond, rename);
+                    let mut t = Vec::new();
+                    self.stmts(then, &mut rename.clone(), captures, &mut t);
+                    let mut e = Vec::new();
+                    self.stmts(els, &mut rename.clone(), captures, &mut e);
+                    out.push(Stmt::If { cond, then: t, els: e });
+                }
+                Stmt::While { cond, body } => {
+                    let cond = self.expr(cond, rename);
+                    let mut b = Vec::new();
+                    self.stmts(body, &mut rename.clone(), captures, &mut b);
+                    out.push(Stmt::While { cond, body: b });
+                }
+                Stmt::ExprStmt(e) => out.push(Stmt::ExprStmt(self.expr(e, rename))),
+                Stmt::Return | Stmt::Barrier => out.push(s.clone()),
+            }
+        }
+    }
+
+    fn expr(&self, e: &Expr, rename: &HashMap<String, String>) -> Expr {
+        let cx = &self.cx;
+        let cy = &self.cy;
+        let renamed = e.clone().map(|e| match e {
+            Expr::Ident(ref n) if n == "idx" => cx.clone(),
+            Expr::Ident(ref n) if n == "idy" => cy.clone(),
+            Expr::Ident(n) => match rename.get(&n) {
+                Some(r) => Expr::Ident(r.clone()),
+                None => Expr::Ident(n),
+            },
+            Expr::Index { base, indices } => {
+                let base = rename.get(&base).cloned().unwrap_or(base);
+                Expr::Index { base, indices }
+            }
+            other => other,
+        });
+        if !self.plan_level {
+            return renamed;
+        }
+        renamed.map(|e| match e {
+            Expr::Index { ref base, ref indices }
+                if indices.len() == 2 && self.fk.producer_image_info(base).is_some() =>
+            {
+                self.global_load(base, &indices[0], &indices[1])
+            }
+            other => other,
+        })
+    }
+
+    /// Plan-level boundary-handled 1-D load of a producer input image —
+    /// the same forms `lower` emits for unstaged image reads.
+    fn global_load(&self, img: &str, ex: &Expr, ey: &Expr) -> Expr {
+        let (elem, bc) = self.fk.producer_image_info(img).expect("checked by caller");
+        let w = Expr::ident(&format!("{img}_w"));
+        let h = Expr::ident(&format!("{img}_h"));
+        match bc {
+            BoundaryCond::Clamped => {
+                let xc = clamp0(ex.clone(), Expr::sub(w.clone(), Expr::int(1)));
+                let yc = clamp0(ey.clone(), Expr::sub(h, Expr::int(1)));
+                Expr::Index {
+                    base: img.to_string(),
+                    indices: vec![Expr::add(Expr::mul(yc, w), xc)],
+                }
+            }
+            BoundaryCond::Constant(c) => Expr::Ternary {
+                cond: Box::new(inside(ex, ey, &w, &h)),
+                then: Box::new(Expr::Index {
+                    base: img.to_string(),
+                    indices: vec![Expr::add(Expr::mul(ey.clone(), w), ex.clone())],
+                }),
+                els: Box::new(if elem.is_float() {
+                    Expr::FloatLit(c)
+                } else {
+                    Expr::IntLit(c as i64)
+                }),
+            },
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Legality checks + small helpers
+// ----------------------------------------------------------------------
+
+fn check_bindings(
+    p: &CheckedProgram,
+    c: &CheckedProgram,
+    bindings: &[(String, String)],
+) -> Result<(), FuseError> {
+    if bindings.is_empty() {
+        return Err(illegal("no producer→consumer image bindings"));
+    }
+    let mut seen_out = HashSet::new();
+    let mut seen_in = HashSet::new();
+    for (pout, cin) in bindings {
+        if !seen_out.insert(pout.as_str()) || !seen_in.insert(cin.as_str()) {
+            return Err(illegal(format!("duplicate binding `{pout}` → `{cin}`")));
+        }
+        let pp = p.kernel.param(pout).ok_or_else(|| {
+            illegal(format!("producer `{}` has no param `{pout}`", p.kernel.name))
+        })?;
+        let cp = c.kernel.param(cin).ok_or_else(|| {
+            illegal(format!("consumer `{}` has no param `{cin}`", c.kernel.name))
+        })?;
+        let (pe, ce) = match (&pp.ty, &cp.ty) {
+            (Type::Image { elem: pe, .. }, Type::Image { elem: ce, .. }) => (*pe, *ce),
+            _ => {
+                return Err(illegal(format!(
+                    "binding `{pout}` → `{cin}` must connect two Image params"
+                )))
+            }
+        };
+        if pe != ce {
+            return Err(illegal(format!(
+                "binding `{pout}` → `{cin}` element types differ ({pe:?} vs {ce:?})"
+            )));
+        }
+        if !pe.is_float() {
+            return Err(illegal(format!(
+                "fused intermediate `{cin}` must be float-typed (capture rounding)"
+            )));
+        }
+    }
+    Ok(())
+}
+
+fn check_producer(p: &CheckedProgram, bindings: &[(String, String)]) -> Result<(), FuseError> {
+    let name = &p.kernel.name;
+    let outputs: HashSet<&str> = bindings.iter().map(|(o, _)| o.as_str()).collect();
+    // Top-level stores: each bound output exactly once, `out[idx][idy] = e;`.
+    let mut written: HashMap<&str, usize> = HashMap::new();
+    let mut top_level_stores = 0usize;
+    for s in &p.kernel.body {
+        if let Stmt::Assign { lhs: LValue::Index { base, indices }, op, .. } = s {
+            top_level_stores += 1;
+            if !outputs.contains(base.as_str()) {
+                return Err(illegal(format!(
+                    "producer `{name}` writes `{base}`, which is not a bound output"
+                )));
+            }
+            if *op != AssignOp::Set {
+                return Err(illegal(format!(
+                    "producer `{name}` uses a compound store to `{base}`"
+                )));
+            }
+            let point = indices.len() == 2
+                && indices[0] == Expr::ident("idx")
+                && indices[1] == Expr::ident("idy");
+            if !point {
+                return Err(illegal(format!(
+                    "producer `{name}` must store `{base}` exactly at [idx][idy]"
+                )));
+            }
+            *written.entry(base.as_str()).or_default() += 1;
+        }
+    }
+    let mut total_stores = 0usize;
+    let mut has_return = false;
+    for s in &p.kernel.body {
+        s.walk(&mut |st| {
+            if matches!(st, Stmt::Assign { lhs: LValue::Index { .. }, .. }) {
+                total_stores += 1;
+            }
+            if matches!(st, Stmt::Return) {
+                has_return = true;
+            }
+        });
+    }
+    if total_stores != top_level_stores {
+        return Err(illegal(format!(
+            "producer `{name}` has a conditional/looped buffer store — outputs must be \
+             written unconditionally at top level"
+        )));
+    }
+    if has_return {
+        return Err(illegal(format!("producer `{name}` has a `return`")));
+    }
+    for out in &outputs {
+        if written.get(out).copied().unwrap_or(0) != 1 {
+            return Err(illegal(format!(
+                "producer `{name}` must write bound output `{out}` exactly once"
+            )));
+        }
+    }
+    // Outputs must never be read.
+    let mut reads_output = None;
+    p.kernel.walk_exprs(&mut |e| {
+        let read = match e {
+            Expr::Index { base, .. } => Some(base),
+            Expr::Ident(n) => Some(n),
+            _ => None,
+        };
+        if let Some(n) = read {
+            if outputs.contains(n.as_str()) && reads_output.is_none() {
+                reads_output = Some(n.clone());
+            }
+        }
+    });
+    if let Some(n) = reads_output {
+        return Err(illegal(format!("producer `{name}` reads its own output `{n}`")));
+    }
+    Ok(())
+}
+
+fn check_consumer(c: &CheckedProgram, fused: &[String]) -> Result<(), FuseError> {
+    let name = &c.kernel.name;
+    let is_fused = |b: &str| fused.iter().any(|m| m == b);
+    // Fused images are read-only in the consumer.
+    let mut writes_fused = None;
+    for s in &c.kernel.body {
+        s.walk(&mut |st| {
+            if let Stmt::Assign { lhs: LValue::Index { base, .. }, .. } = st {
+                if is_fused(base) && writes_fused.is_none() {
+                    writes_fused = Some(base.clone());
+                }
+            }
+        });
+    }
+    if let Some(m) = writes_fused {
+        return Err(illegal(format!("consumer `{name}` writes fused image `{m}`")));
+    }
+    // Reads: 2-D, and not nested inside another fused read's coordinates.
+    let mut bad_arity = None;
+    let mut nested = None;
+    for s in &c.kernel.body {
+        s.walk_exprs(&mut |e| {
+            let Expr::Index { base, indices } = e else { return };
+            if !is_fused(base) {
+                return;
+            }
+            if indices.len() != 2 && bad_arity.is_none() {
+                bad_arity = Some(base.clone());
+            }
+            for i in indices {
+                i.walk(&mut |inner| {
+                    if let Expr::Index { base: b2, .. } = inner {
+                        if is_fused(b2) && nested.is_none() {
+                            nested = Some(b2.clone());
+                        }
+                    }
+                });
+            }
+        });
+    }
+    if let Some(m) = bad_arity {
+        return Err(illegal(format!(
+            "consumer `{name}` reads fused image `{m}` without 2-D indexing"
+        )));
+    }
+    if let Some(m) = nested {
+        return Err(illegal(format!(
+            "consumer `{name}` reads fused image `{m}` inside another fused read's coordinates"
+        )));
+    }
+    // No fused reads in control-flow headers (instantiations are emitted
+    // as block-level statements, which headers cannot hold).
+    check_headers(&c.kernel.body, name, &is_fused)
+}
+
+fn check_headers(
+    stmts: &[Stmt],
+    kernel: &str,
+    is_fused: &dyn Fn(&str) -> bool,
+) -> Result<(), FuseError> {
+    let header_read = |e: &Expr, ctx: &str| -> Result<(), FuseError> {
+        let mut hit = None;
+        e.walk(&mut |inner| {
+            if let Expr::Index { base, .. } = inner {
+                if is_fused(base) && hit.is_none() {
+                    hit = Some(base.clone());
+                }
+            }
+        });
+        match hit {
+            Some(m) => Err(illegal(format!(
+                "consumer `{kernel}` reads fused image `{m}` in {ctx}"
+            ))),
+            None => Ok(()),
+        }
+    };
+    for s in stmts {
+        match s {
+            Stmt::If { cond, then, els } => {
+                header_read(cond, "an if condition")?;
+                check_headers(then, kernel, is_fused)?;
+                check_headers(els, kernel, is_fused)?;
+            }
+            Stmt::For { init, cond, step, body, .. } => {
+                header_read(init, "a for-loop header")?;
+                header_read(cond, "a for-loop header")?;
+                header_read(step, "a for-loop header")?;
+                check_headers(body, kernel, is_fused)?;
+            }
+            Stmt::While { cond, body } => {
+                header_read(cond, "a while condition")?;
+                check_headers(body, kernel, is_fused)?;
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn ident_universe(k: &KernelFn) -> HashSet<String> {
+    let mut set: HashSet<String> = k.params.iter().map(|p| p.name.clone()).collect();
+    set.insert(k.name.clone());
+    for s in &k.body {
+        s.walk(&mut |st| match st {
+            Stmt::Decl { name, .. } => {
+                set.insert(name.clone());
+            }
+            Stmt::For { var, .. } => {
+                set.insert(var.clone());
+            }
+            Stmt::Assign { lhs: LValue::Var(v), .. } => {
+                set.insert(v.clone());
+            }
+            _ => {}
+        });
+        s.walk_exprs(&mut |e| match e {
+            Expr::Ident(n) => {
+                set.insert(n.clone());
+            }
+            Expr::Index { base, .. } => {
+                set.insert(base.clone());
+            }
+            _ => {}
+        });
+    }
+    set
+}
+
+/// First prefix `p0_`, `p1_`, … that no identifier of either kernel
+/// starts with — every synthesized name then begins with it.
+fn pick_prefix(universe: &HashSet<String>) -> String {
+    (0..)
+        .map(|n| format!("p{n}_"))
+        .find(|pfx| !universe.iter().any(|id| id.starts_with(pfx.as_str())))
+        .expect("some numbered prefix is always free")
+}
+
+fn first_written_image(k: &KernelFn) -> Option<String> {
+    let mut written = HashSet::new();
+    for s in &k.body {
+        s.walk(&mut |st| {
+            if let Stmt::Assign { lhs: LValue::Index { base, .. }, .. } = st {
+                written.insert(base.clone());
+            }
+        });
+    }
+    k.params
+        .iter()
+        .find(|p| matches!(p.ty, Type::Image { .. }) && written.contains(&p.name))
+        .map(|p| p.name.clone())
+}
+
+/// All `(image, ex, ey)` 2-D reads of fused images, in walk order.
+fn fused_reads(stmts: &[Stmt], fused: &[String]) -> Vec<(String, Expr, Expr)> {
+    let mut out = Vec::new();
+    for s in stmts {
+        s.walk_exprs(&mut |e| {
+            if let Expr::Index { base, indices } = e {
+                if fused.iter().any(|m| m == base) && indices.len() == 2 {
+                    out.push((base.clone(), indices[0].clone(), indices[1].clone()));
+                }
+            }
+        });
+    }
+    out
+}
+
+fn is_point(ex: &Expr, ey: &Expr) -> bool {
+    *ex == Expr::ident("idx") && *ey == Expr::ident("idy")
+}
+
+fn coord_key(ex: &Expr, ey: &Expr) -> String {
+    format!("{ex}|{ey}")
+}
+
+fn collect_idents(e: &Expr, out: &mut HashSet<String>) {
+    e.walk(&mut |inner| match inner {
+        Expr::Ident(n) => {
+            out.insert(n.clone());
+        }
+        Expr::Index { base, .. } => {
+            out.insert(base.clone());
+        }
+        _ => {}
+    });
+}
+
+/// Idents (re)defined or assigned by a statement, including nested bodies
+/// (conservative: inner-scope decls count too).
+fn defined_idents(s: &Stmt) -> HashSet<String> {
+    let mut set = HashSet::new();
+    s.walk(&mut |st| match st {
+        Stmt::Decl { name, .. } => {
+            set.insert(name.clone());
+        }
+        Stmt::For { var, .. } => {
+            set.insert(var.clone());
+        }
+        Stmt::Assign { lhs: LValue::Var(v), .. } => {
+            set.insert(v.clone());
+        }
+        _ => {}
+    });
+    set
+}
+
+/// clamp(v, 0, hi) with integer min/max — the exact form `lower` emits.
+fn clamp0(v: Expr, hi: Expr) -> Expr {
+    Expr::call("max", vec![Expr::call("min", vec![v, hi]), Expr::int(0)])
+}
+
+/// `0 <= ex < w && 0 <= ey < h` — the exact form `lower` emits.
+fn inside(ex: &Expr, ey: &Expr, w: &Expr, h: &Expr) -> Expr {
+    let ge0 = |e: &Expr| Expr::bin(BinOp::Ge, e.clone(), Expr::int(0));
+    let lt = |e: &Expr, b: &Expr| Expr::bin(BinOp::Lt, e.clone(), b.clone());
+    Expr::bin(
+        BinOp::And,
+        Expr::bin(BinOp::And, ge0(ex), lt(ex, w)),
+        Expr::bin(BinOp::And, ge0(ey), lt(ey, h)),
+    )
+}
+
+fn boundary_pragma(name: &str, bc: &BoundaryCond) -> String {
+    match bc {
+        BoundaryCond::Clamped => format!("boundary({name}, clamped)"),
+        BoundaryCond::Constant(c) => format!("boundary({name}, constant, {c})"),
+    }
+}
+
+fn render(pragmas: &[String], kernel: &KernelFn) -> String {
+    let mut src = String::new();
+    for p in pragmas {
+        src.push_str("#pragma imcl ");
+        src.push_str(p);
+        src.push('\n');
+    }
+    src.push_str(&kernel.to_string());
+    src.push('\n');
+    src
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_defs::{kernel_by_id, HARRIS, SOBEL};
+
+    fn sobel_harris() -> FusedKernel {
+        FusedKernel::build(
+            "fused_sobel_harris",
+            ("sobel", SOBEL),
+            ("harris", HARRIS),
+            &[("dx", "dx"), ("dy", "dy")],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn sobel_harris_builds_with_composed_halo() {
+        let fk = sobel_harris();
+        assert!(fk.needs_dims);
+        assert!(fk.lstage_ok);
+        assert_eq!(fk.fused_images, vec!["dx".to_string(), "dy".to_string()]);
+        // Sobel (−1..1) ⊕ Harris window (0..1) = (−1..2).
+        let st = fk.composed_input_stencils();
+        assert_eq!(
+            st["in"],
+            Stencil { min_dx: -1, max_dx: 2, min_dy: -1, max_dy: 2 }
+        );
+        let src = fk.inline_source();
+        assert!(src.contains("void fused_sobel_harris("), "{src}");
+        assert!(src.contains("p0_in"), "{src}");
+        assert!(src.contains("p0_fw"), "{src}");
+        assert!(!src.contains("Image<float> dx"), "{src}");
+        // 2048 px intermediate per gradient image, f32.
+        assert_eq!(fk.intermediate_bytes(32, 64), 2 * 32 * 64 * 4);
+    }
+
+    #[test]
+    fn inline_plan_drops_intermediates() {
+        let fk = sobel_harris();
+        let cfg = TuningConfig { fuse: Some(FuseMode::Inline), ..TuningConfig::default() };
+        let plan = lower_fused(&fk, &cfg).unwrap();
+        assert_eq!(plan.name, "fused_sobel_harris");
+        assert_eq!(plan.config.fuse, Some(FuseMode::Inline));
+        let names: Vec<&str> = plan.buffers.iter().map(|b| b.name.as_str()).collect();
+        assert!(names.contains(&"p0_in") && names.contains(&"out"), "{names:?}");
+        assert!(!names.contains(&"dx") && !names.contains(&"dy"), "{names:?}");
+        assert!(plan.scalars.iter().any(|(n, _)| n == "p0_fw"));
+        assert_eq!(plan.phases.len(), 1);
+        assert!(plan.batchable);
+    }
+
+    #[test]
+    fn lstage_plan_stages_producer_into_local() {
+        let fk = sobel_harris();
+        let cfg = TuningConfig { fuse: Some(FuseMode::LocalStage), ..TuningConfig::default() };
+        let plan = lower_fused(&fk, &cfg).unwrap();
+        assert_eq!(plan.config.fuse, Some(FuseMode::LocalStage));
+        assert_eq!(plan.phases.len(), 2);
+        // Both gradients staged: 17×17 f32 tiles at 16×16 work-groups.
+        assert_eq!(plan.locals.len(), 2);
+        assert_eq!(plan.local_mem_bytes(), 2 * 17 * 17 * 4);
+        let names: Vec<&str> = plan.buffers.iter().map(|b| b.name.as_str()).collect();
+        assert!(!names.contains(&"dx") && !names.contains(&"dy"), "{names:?}");
+        assert!(names.contains(&"p0_in"), "{names:?}");
+        assert!(!plan.scalars.iter().any(|(n, _)| n == "dx_w" || n == "dy_h"));
+        let pin = plan.buffer("p0_in").unwrap();
+        assert_eq!(pin.access, Access::ReadOnly);
+        // Same-stencil gradients share one producer instantiation.
+        let staging = &plan.phases[0];
+        let fors = staging
+            .iter()
+            .filter(|s| matches!(s, Stmt::For { .. }))
+            .count();
+        assert_eq!(fors, 1, "dx/dy staging loops should merge into one");
+    }
+
+    #[test]
+    fn point_consumer_needs_no_dims() {
+        let blur = kernel_by_id("blur").unwrap();
+        let threshold = kernel_by_id("threshold").unwrap();
+        let fk = FusedKernel::build(
+            "fused_blur_threshold",
+            ("blur", blur.source),
+            ("threshold", threshold.source),
+            &[("out", "in")],
+        )
+        .unwrap();
+        assert!(!fk.needs_dims);
+        assert!(fk.lstage_ok);
+        let src = fk.inline_source();
+        assert!(!src.contains("p0_fw"), "{src}");
+        // Point reads instantiate at (idx, idy) with no clamp decls.
+        assert!(!src.contains("p0_u0"), "{src}");
+    }
+
+    #[test]
+    fn constant_boundary_offset_consumer_rejected() {
+        let blur = kernel_by_id("blur").unwrap();
+        let unsharp = kernel_by_id("unsharp").unwrap();
+        let err = FusedKernel::build(
+            "fused_blur_unsharp",
+            ("blur", blur.source),
+            ("unsharp", unsharp.source),
+            &[("out", "in")],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("clamped"), "{err}");
+    }
+
+    #[test]
+    fn conditional_producer_store_rejected() {
+        let producer = "#pragma imcl grid(in)\n\
+             void p(Image<float> in, Image<float> out) {\n\
+               if (idx > 0) { out[idx][idy] = in[idx][idy]; }\n\
+             }";
+        let threshold = kernel_by_id("threshold").unwrap();
+        let err = FusedKernel::build(
+            "fused_p_threshold",
+            ("p", producer),
+            ("threshold", threshold.source),
+            &[("out", "in")],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("unconditionally"), "{err}");
+    }
+
+    #[test]
+    fn unknown_binding_rejected() {
+        let err = FusedKernel::build(
+            "fused_sobel_harris",
+            ("sobel", SOBEL),
+            ("harris", HARRIS),
+            &[("nope", "dx")],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("no param"), "{err}");
+    }
+
+    #[test]
+    fn lowering_without_fuse_mode_rejected() {
+        let fk = sobel_harris();
+        let err = lower_fused(&fk, &TuningConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("fuse="), "{err}");
+    }
+}

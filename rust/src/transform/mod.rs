@@ -8,13 +8,15 @@
 pub mod clir;
 pub mod codegen;
 pub mod config;
+pub mod fuse;
 pub mod host;
 pub mod lower;
 pub mod unroll;
 
 pub use clir::{BufferParam, KernelPlan, LocalArray};
 pub use codegen::emit_opencl;
-pub use config::{MemSpace, TuningConfig};
+pub use config::{FuseMode, MemSpace, TuningConfig};
+pub use fuse::{lower_fused, FuseError, FusedKernel};
 pub use host::{emit_fast_filter, emit_standalone_host};
 pub use lower::{effective_config, lower, TransformError};
 

@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use crate::analysis::KernelInfo;
 use crate::devices::DeviceSpec;
 use crate::imagecl::Forced;
-use crate::transform::TuningConfig;
+use crate::transform::{FuseMode, TuningConfig};
 
 /// Candidate values for each axis. Mirrors the ranges seen in the paper's
 /// result tables (work-groups up to 128 wide, coarsening up to 256 on the
@@ -172,6 +172,67 @@ impl TuningSpace {
         TuningSpace { configs }
     }
 
+    /// Enumerate the tuning space of a *fused* kernel: the mapping axes
+    /// (work-group, coarsening, interleaving) crossed with the fuse mode.
+    ///
+    /// The per-array memory-space and unroll axes are deliberately
+    /// excluded — the fuse decision dominates them on every measured
+    /// device, and the synthesized kernel's `force(...)`-free source keeps
+    /// the space small enough to search exhaustively per device.
+    /// Local-stage candidates must fit the staged tiles (one per fused
+    /// image, `(halo_x, halo_y, elem_bytes)` from
+    /// `FusedKernel::lstage_tiles`) in the device scratchpad.
+    pub fn enumerate_fused(
+        dev: &DeviceSpec,
+        modes: &[FuseMode],
+        lstage_tiles: &[(usize, usize, usize)],
+    ) -> TuningSpace {
+        let mut configs = Vec::new();
+        for &wx in &WG_X {
+            for &wy in &WG_Y {
+                if wx * wy > dev.max_wg || wx * wy == 0 {
+                    continue;
+                }
+                if wx * wy < 4 && wx * wy != 1 {
+                    continue;
+                }
+                for &cx in &COARSEN_X {
+                    for &cy in &COARSEN_Y {
+                        if cx * cy > 512 {
+                            continue;
+                        }
+                        for &inter in &[false, true] {
+                            for &mode in modes {
+                                let cfg = TuningConfig {
+                                    wg: [wx, wy],
+                                    coarsen: [cx, cy],
+                                    interleaved: inter,
+                                    fuse: Some(mode),
+                                    ..Default::default()
+                                };
+                                if mode == FuseMode::LocalStage {
+                                    let tile = cfg.group_tile();
+                                    let bytes: usize = lstage_tiles
+                                        .iter()
+                                        .map(|&(ex, ey, elem)| {
+                                            (tile[0] + ex) * (tile[1] + ey) * elem
+                                        })
+                                        .sum();
+                                    if lstage_tiles.is_empty() || bytes > dev.local_mem_per_cu
+                                    {
+                                        continue;
+                                    }
+                                }
+                                configs.push(cfg);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        TuningSpace { configs }
+    }
+
     /// Cheap validity pre-filter (full validity including local-memory
     /// capacity is re-checked by the device model, which returns
     /// `Prediction::INVALID`).
@@ -285,5 +346,34 @@ mod tests {
     fn cpu_space_contains_heavy_coarsening() {
         let (_, sp) = space(SEPCONV_ROW, &INTEL_I7);
         assert!(sp.configs.iter().any(|c| c.coarsen[0] >= 128));
+    }
+
+    #[test]
+    fn fused_space_covers_modes_and_respects_scratchpad() {
+        use crate::transform::FuseMode;
+        // Harris fused edge: two f32 gradient tiles with a 1-pixel halo.
+        let tiles = [(1, 1, 4), (1, 1, 4)];
+        let sp = TuningSpace::enumerate_fused(
+            &K40,
+            &[FuseMode::Inline, FuseMode::LocalStage],
+            &tiles,
+        );
+        assert!(sp.configs.iter().all(|c| c.fuse.is_some()));
+        assert!(sp.configs.iter().any(|c| c.fuse == Some(FuseMode::Inline)));
+        assert!(sp.configs.iter().any(|c| c.fuse == Some(FuseMode::LocalStage)));
+        // No memory/unroll axes in the fused space.
+        assert!(sp
+            .configs
+            .iter()
+            .all(|c| c.local_mem.is_empty() && c.image_mem.is_empty() && c.unroll.is_empty()));
+        for cfg in sp.configs.iter().filter(|c| c.fuse == Some(FuseMode::LocalStage)) {
+            let tile = cfg.group_tile();
+            let bytes = 2 * (tile[0] + 1) * (tile[1] + 1) * 4;
+            assert!(bytes <= K40.local_mem_per_cu, "{cfg}");
+        }
+        // Inline-only edges never enumerate local-stage configs.
+        let sp = TuningSpace::enumerate_fused(&K40, &[FuseMode::Inline], &[]);
+        assert!(sp.configs.iter().all(|c| c.fuse == Some(FuseMode::Inline)));
+        assert!(!sp.is_empty());
     }
 }

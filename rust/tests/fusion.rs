@@ -1,0 +1,147 @@
+//! Differential tests for pipeline-level stencil fusion: every fused
+//! plan — across producer→consumer chains, a grid of tuning configs and
+//! the whole engine ladder — must be bit-identical (f64 payload bits) to
+//! the staged two-kernel pipeline run on the tree-walking oracle.
+//!
+//! Staged reference and fused runs consume identically-seeded workloads,
+//! so any divergence is the fusion transform's fault: halo composition,
+//! boundary clamping, intermediate-precision rounding or the local-stage
+//! plan surgery.
+
+use imagecl::bench_defs::kernel_by_id;
+use imagecl::exec::{execute_with, Engine};
+use imagecl::pipeline::fusion::{fused_by_id, fused_workload, image_bits, run_staged};
+use imagecl::transform::{lower_fused, FuseMode, FusedKernel, TuningConfig};
+
+/// Build an ad-hoc fusion of two benchmark kernels by id.
+fn chain(id: &str, producer: &str, consumer: &str, bindings: &[(&str, &str)]) -> FusedKernel {
+    let p = kernel_by_id(producer).expect("producer source");
+    let c = kernel_by_id(consumer).expect("consumer source");
+    FusedKernel::build(id, (producer, p.source), (consumer, c.source), bindings)
+        .unwrap_or_else(|e| panic!("{id}: {e}"))
+}
+
+/// Run the fused kernel over work-group × coarsening × interleave ×
+/// fuse-mode × engine combinations and compare every output against the
+/// staged tree-walk oracle.
+fn sweep(fk: &FusedKernel, w: usize, h: usize) {
+    let seed = 42;
+    let staged = run_staged(fk, w, h, seed, Engine::TreeWalk).expect("staged oracle");
+    let want = image_bits(&staged, &fk.consumer_output);
+    assert!(
+        want.iter().any(|&b| b != 0),
+        "{}: staged oracle produced an all-zero output — vacuous comparison",
+        fk.id
+    );
+
+    let engines = [Engine::TreeWalk, Engine::VmUnopt, Engine::VmScalar, Engine::Vm];
+    let mut plans = 0;
+    for wg in [[16, 16], [8, 4], [3, 5]] {
+        for coarsen in [[1, 1], [2, 2]] {
+            for interleaved in [false, true] {
+                for mode in fk.modes() {
+                    let cfg = TuningConfig {
+                        wg,
+                        coarsen,
+                        interleaved,
+                        fuse: Some(mode),
+                        ..TuningConfig::default()
+                    };
+                    let plan = lower_fused(fk, &cfg)
+                        .unwrap_or_else(|e| panic!("{} cfg={cfg}: {e}", fk.id));
+                    plans += 1;
+                    for engine in engines {
+                        let mut args = fused_workload(fk, &plan, w, h, seed);
+                        execute_with(&plan, &mut args, (w, h), engine).unwrap_or_else(|e| {
+                            panic!("{} cfg={cfg} engine={engine:?}: {e}", fk.id)
+                        });
+                        assert_eq!(
+                            image_bits(&args, &fk.consumer_output),
+                            want,
+                            "{} diverged from staged at cfg={cfg} engine={engine:?}",
+                            fk.id
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(plans >= 12, "{}: config grid collapsed to {plans} plans", fk.id);
+}
+
+#[test]
+fn sobel_harris_fused_matches_staged_everywhere() {
+    // The registry kernel the Harris pipeline actually ships.
+    let fk = fused_by_id("fused_sobel_harris").expect("registry kernel");
+    assert!(fk.lstage_ok, "sobel→harris should support local staging");
+    sweep(fk, 19, 13);
+}
+
+#[test]
+fn blur_threshold_fused_matches_staged_everywhere() {
+    // Stencil producer into a point consumer: no composed halo on the
+    // consumer side, no fused-dims scalars needed.
+    let fk = chain("fused_blur_threshold", "blur", "threshold", &[("out", "in")]);
+    sweep(&fk, 17, 11);
+}
+
+#[test]
+fn blur_erode_fused_matches_staged_everywhere() {
+    // Stencil into stencil under a clamped boundary: the composed halo
+    // is the Minkowski sum of blur's 3×3 and erode's 3×3.
+    let fk = chain("fused_blur_erode", "blur", "erode", &[("out", "in")]);
+    sweep(&fk, 16, 16);
+}
+
+#[test]
+fn sobel_grad_mag_fused_matches_staged_everywhere() {
+    // Two bound intermediates consumed at the identity coordinate.
+    let fk = chain(
+        "fused_sobel_grad_mag",
+        "sobel",
+        "grad_mag",
+        &[("dx", "dx"), ("dy", "dy")],
+    );
+    sweep(&fk, 13, 19);
+}
+
+#[test]
+fn unsharp_consumer_is_rejected() {
+    // unsharp reads its input at offsets under a *constant* boundary;
+    // fusion can only recompute offset reads under clamping.
+    let p = kernel_by_id("blur").unwrap();
+    let c = kernel_by_id("unsharp").unwrap();
+    let err = FusedKernel::build("x", ("blur", p.source), ("unsharp", c.source), &[("out", "in")])
+        .unwrap_err();
+    assert!(err.to_string().contains("clamped"), "{err}");
+}
+
+#[test]
+fn sepconv_chain_is_rejected() {
+    // The column stage reads the row output at y-offsets under a
+    // constant boundary — the documented reason sepconv stays staged.
+    let p = kernel_by_id("sepconv_row").unwrap();
+    let c = kernel_by_id("sepconv_col").unwrap();
+    let err = FusedKernel::build(
+        "x",
+        ("sepconv_row", p.source),
+        ("sepconv_col", c.source),
+        &[("out", "in")],
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("clamped"), "{err}");
+}
+
+#[test]
+fn unknown_binding_is_rejected() {
+    let p = kernel_by_id("sobel").unwrap();
+    let c = kernel_by_id("harris").unwrap();
+    let err = FusedKernel::build(
+        "x",
+        ("sobel", p.source),
+        ("harris", c.source),
+        &[("dx", "nope")],
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("no param"), "{err}");
+}
