@@ -620,7 +620,9 @@ pub fn run_and_write(opts: &BenchOpts) -> Result<BenchReport, String> {
 }
 
 fn write_report(report: &BenchReport, path: &Path) -> Result<(), String> {
-    std::fs::write(path, report.to_json())
+    // Atomic (temp + fsync + rename): a crash mid-write must never leave
+    // a truncated snapshot for the CI regression gate to choke on.
+    crate::fsutil::write_atomic(path, report.to_json().as_bytes())
         .map_err(|e| format!("cannot write {}: {e}", path.display()))
 }
 
@@ -648,7 +650,7 @@ fn append_history(report: &BenchReport, snapshot_path: &Path) -> Result<PathBuf,
         },
         None => format!("[\n{entry}\n]\n"),
     };
-    std::fs::write(&path, body)
+    crate::fsutil::write_atomic(&path, body.as_bytes())
         .map_err(|e| format!("cannot write {}: {e}", path.display()))?;
     Ok(path)
 }

@@ -1,0 +1,93 @@
+//! Crash-safe filesystem helpers shared by every subsystem that
+//! persists state (tunedb journal, bench history, metrics snapshots,
+//! serve checkpoints).
+//!
+//! The one primitive is [`write_atomic`]: write to a sibling temp file,
+//! fsync it, then rename into place. A reader (or a restarted process)
+//! therefore sees either the complete old file or the complete new one —
+//! never a torn half-write — and a kill at any byte offset of the writer
+//! loses at most the update in flight.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Sibling temp path for an atomic replace of `path`: same directory
+/// (rename must not cross filesystems), extension `<ext>.tmp`.
+fn temp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Atomically replace `path` with `bytes`: write a sibling temp file,
+/// fsync it, rename over the target. Creates parent directories. On any
+/// error the target is untouched (the temp file is cleaned up best
+/// effort).
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = temp_sibling(path);
+    let result = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        // Data must be on disk before the rename publishes it, or a
+        // power cut could leave a renamed-but-empty file.
+        f.sync_all()?;
+        std::fs::rename(&tmp, path)?;
+        sync_dir(path);
+        Ok(())
+    })();
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    result
+}
+
+/// Best-effort fsync of `path`'s parent directory, making a completed
+/// rename durable across a crash. Failure is ignored: directory fsync is
+/// not supported on every platform/filesystem, and the rename itself has
+/// already succeeded.
+pub fn sync_dir(path: &Path) {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("imagecl_fsutil_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn write_atomic_creates_and_replaces() {
+        let path = temp_path("replace");
+        let _ = std::fs::remove_file(&path);
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer payload");
+        // No temp file left behind.
+        assert!(!temp_sibling(&path).exists());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn write_atomic_creates_parent_dirs() {
+        let dir = temp_path("nested_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("a/b/out.json");
+        write_atomic(&path, b"{}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

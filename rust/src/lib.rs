@@ -20,6 +20,7 @@ pub mod tuner;
 pub mod baselines;
 pub mod runtime;
 pub mod pipeline;
+pub mod fsutil;
 pub mod jsonlite;
 pub mod obs;
 pub mod serve;

@@ -37,7 +37,7 @@ USAGE:
                 [--obs-addr HOST:PORT] [--slo SPEC]
                 [--listen HOST:PORT | --remote HOST:PORT] [--tenants a,b]
                 [--tenant-quota RATE[:BURST]] [--request-deadline DUR]
-                [--faults SPEC] [--metrics-out PATH]
+                [--faults SPEC] [--metrics-out PATH] [--explore-eps F]
                 serve synthetic traffic through the plan cache + tunedb.
                 --obs-addr serves /metrics /healthz /traces /profile /slo
                 live for the duration of the run (port 0 picks a free
@@ -51,7 +51,13 @@ USAGE:
                 admission+queue+execution (us|ms|s), --faults injects
                 deterministic chaos, e.g.
                 \"exec_panic=0.01,net_drop=0.05,exec_delay=20ms,seed=7\",
-                and --metrics-out writes the final metrics JSON snapshot
+                and --metrics-out writes the final metrics JSON snapshot.
+                --explore-eps F re-measures a near-winner config on that
+                fraction of real requests, feeding the samples back into
+                the knowledge base (bounded online re-exploration).
+                --listen checkpoints the plan-cache index + SLO state on
+                graceful drain (SHUTDOWN frame or SIGTERM) and replays it
+                on the next start against the same --db (warm restart)
   imagecl submit <kernel> --remote HOST:PORT [--device DEV] [--grid N]
                 [--seed N] [--tenant T] [--request-deadline DUR]
                 [--ping] [--shutdown]
@@ -62,7 +68,17 @@ USAGE:
   imagecl tunedb train <kernel> [--db PATH]
   imagecl tunedb import <legacy.tsv> [--db PATH]
   imagecl tunedb compact [--db PATH] [--cap N]
-                inspect / exercise / compact the tuning knowledge base
+  imagecl tunedb fsck [--db PATH] [--repair]
+                audit the store's checksummed journal; nonzero exit on
+                torn/corrupt records. --repair stashes damaged raw lines
+                into the .quarantine sidecar and atomically rewrites the
+                store as a clean snapshot
+  imagecl tunedb merge <replica.tsv>... [--db PATH]
+                conflict-free merge of replica stores into --db:
+                deterministic resolution per (kernel, device, grid,
+                config) — wall beats sim, then higher seq — idempotent
+                and order-independent (byte-identical output)
+                inspect / repair / merge / compact the tuning knowledge base
   imagecl bench [--size N] [--iters N] [--kernels a,b] [--out PATH] [--smoke]
                 run the gallery kernels through the engine ladder (tree
                 oracle, unoptimized VM, optimized scalar VM, batched VM);
@@ -172,6 +188,20 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    /// A probability-shaped flag: a finite fraction in `[0, 1]`.
+    fn fraction_flag(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.flag(key) {
+            Some(v) => v
+                .parse::<f64>()
+                .ok()
+                .filter(|p| p.is_finite() && (0.0..=1.0).contains(p))
+                .ok_or_else(|| {
+                    format!("bad --{key}: {v:?} (want a fraction in [0, 1])")
+                }),
+            None => Ok(default),
+        }
+    }
 }
 
 fn kernel_source(name_or_path: &str) -> Result<String, String> {
@@ -192,6 +222,7 @@ fn run() -> Result<(), String> {
         "bench" => &["smoke", "ci"],
         "stats" => &["prom", "json"],
         "submit" => &["ping", "shutdown"],
+        "tunedb" => &["repair"],
         _ => &[],
     };
     let args = Args::parse_with_switches(&argv[1..], switches)?;
@@ -481,7 +512,8 @@ fn write_metrics_out(args: &Args) -> Result<(), String> {
         return Ok(());
     };
     let doc = imagecl::obs::export::json(0);
-    std::fs::write(path, &doc).map_err(|e| format!("cannot write {path:?}: {e}"))?;
+    imagecl::fsutil::write_atomic(std::path::Path::new(path), doc.as_bytes())
+        .map_err(|e| format!("cannot write {path:?}: {e}"))?;
     eprintln!("wrote metrics JSON to {path}");
     Ok(())
 }
@@ -516,6 +548,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "request-deadline",
         "faults",
         "metrics-out",
+        "explore-eps",
     ])?;
     if let Some(spec) = args.flag("slo") {
         imagecl::obs::slo::engine()
@@ -618,6 +651,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         plan_cache_cap,
         transfer_budget: args.usize_flag("transfer-budget", 48)?,
         predict_budget: args.usize_flag("predict-budget", 48)?,
+        explore_eps: args.fraction_flag("explore-eps", 0.0)?,
     });
     if let Some(spec) = faults {
         if spec.active() {
@@ -668,16 +702,55 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// SIGTERM → graceful drain, with no libc crate: std already links the
+/// platform C library, so binding `signal(2)` directly is enough. The
+/// handler does the only async-signal-safe thing — one atomic store —
+/// and a watchdog thread polls the flag and triggers the same drain
+/// path a client `SHUTDOWN` frame would.
+#[cfg(unix)]
+mod sigterm {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handler; `false` when the registration failed (the
+    /// caller keeps running without SIGTERM drain).
+    pub fn install() -> bool {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        const SIG_ERR: usize = usize::MAX;
+        (unsafe { signal(SIGTERM, on_term) }) != SIG_ERR
+    }
+
+    pub fn pending() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
 /// `imagecl serve --listen`: run the TCP front-end until a client sends
-/// a `SHUTDOWN` frame, then drain gracefully — finish everything
-/// admitted, flush background model training, publish a final metrics
-/// snapshot, join every thread.
+/// a `SHUTDOWN` frame (or SIGTERM arrives), then drain gracefully —
+/// finish everything admitted, flush background model training, publish
+/// a final metrics snapshot, checkpoint the plan-cache index + SLO state
+/// beside the store for the next warm restart, join every thread.
 fn serve_listen(
     args: &Args,
     service: std::sync::Arc<serve::KernelService>,
     opts: &serve::LoadGenOpts,
     addr: &str,
 ) -> Result<(), String> {
+    // Warm restart: replay the previous run's checkpoint before the
+    // socket opens, so the very first request hits a built plan (the
+    // durable store answers every config lookup — no tuning search).
+    let restored = service.restore_checkpoint(Some(imagecl::obs::slo::engine()));
+    if restored > 0 {
+        println!("warm restart: {restored} plans rebuilt from checkpoint");
+    }
     let srv = serve::NetServer::start(
         service.clone(),
         serve::NetServerOpts {
@@ -712,9 +785,27 @@ fn serve_listen(
          imagecl submit --shutdown --remote {bound}",
         imagecl::serve::net::VERSION
     );
+    #[cfg(unix)]
+    if sigterm::install() {
+        let drain = srv.drain_handle();
+        let _ = std::thread::Builder::new()
+            .name("imagecl-sigterm".to_string())
+            .spawn(move || loop {
+                if sigterm::pending() {
+                    drain.request_drain();
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(100));
+            });
+    }
     srv.wait();
     println!("drain requested: finishing in-flight requests, flushing state");
     srv.shutdown();
+    // All in-flight work is done; the plan-cache index is final. Record
+    // it (atomically, beside the store) for the next start's warm-up.
+    if let Some(n) = service.write_checkpoint(Some(imagecl::obs::slo::engine())) {
+        println!("checkpointed {n} plan keys for warm restart");
+    }
     if let Some(server) = obs_server {
         server.shutdown();
     }
@@ -855,6 +946,7 @@ fn cmd_stats(args: &Args) -> Result<(), String> {
         plan_cache_cap: None,
         transfer_budget: 0,
         predict_budget: 0,
+        explore_eps: 0.0,
     });
     let report = serve::run_loadgen(service, &opts).map_err(|e| e.to_string())?;
     if let Some(path) = args.flag("chrome") {
@@ -930,16 +1022,25 @@ fn stats_from_url(args: &Args, url: &str, traces: usize) -> Result<(), String> {
 /// tier would answer for a key), `train` (fit the per-kernel performance
 /// model), `import` (migrate a legacy PR-1 warm-start TSV).
 fn cmd_tunedb(args: &Args) -> Result<(), String> {
-    args.check_known(&["db", "device", "grid", "cap"])?;
+    args.check_known(&["db", "device", "grid", "cap", "repair"])?;
     let sub = args
         .positional
         .first()
-        .ok_or("tunedb needs a subcommand: stats|export|query|train|import|compact")?
+        .ok_or(
+            "tunedb needs a subcommand: \
+             stats|export|query|train|import|compact|fsck|merge",
+        )?
         .as_str();
     let db_path = args
         .flag("db")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(imagecl::tunedb::default_db_path);
+    // fsck and merge operate on the raw journal files, not a loaded db.
+    match sub {
+        "fsck" => return cmd_tunedb_fsck(args, &db_path),
+        "merge" => return cmd_tunedb_merge(args, &db_path),
+        _ => {}
+    }
     let db = imagecl::tunedb::TuneDb::open(&db_path);
     match sub {
         "stats" => {
@@ -1051,9 +1152,80 @@ fn cmd_tunedb(args: &Args) -> Result<(), String> {
         }
         other => Err(format!(
             "unknown tunedb subcommand {other:?} \
-             (want stats|export|query|train|import|compact)"
+             (want stats|export|query|train|import|compact|fsck|merge)"
         )),
     }
+}
+
+/// `imagecl tunedb fsck [--repair]`: audit the checksummed journal —
+/// every torn or corrupt record anywhere in the file is reported with
+/// its line number and reason; damage without `--repair` exits nonzero
+/// (the CI crash-recovery gate). `--repair` stashes the damaged raw
+/// lines into the `.quarantine` sidecar, then atomically rewrites the
+/// store as a clean snapshot of the intact records.
+fn cmd_tunedb_fsck(args: &Args, db_path: &std::path::Path) -> Result<(), String> {
+    let report = imagecl::tunedb::fsck(db_path)
+        .map_err(|e| format!("cannot read {db_path:?}: {e}"))?;
+    println!(
+        "tunedb {db_path:?}: {} intact records, {} quarantined, {} stale, \
+         epoch {}, max seq {}",
+        report.records,
+        report.quarantined.len(),
+        report.stale,
+        report.epoch.map_or_else(|| "none".to_string(), |e| format!("{e:016x}")),
+        report.max_seq,
+    );
+    for (lno, raw) in &report.quarantined {
+        let shown: String = raw.chars().take(60).collect();
+        println!("  line {lno}: torn/corrupt record: {shown}");
+    }
+    if args.bool_flag("repair") {
+        if report.clean() {
+            println!("store is clean — nothing to repair");
+            return Ok(());
+        }
+        let repaired = imagecl::tunedb::fsck_repair(db_path)
+            .map_err(|e| format!("cannot repair {db_path:?}: {e}"))?;
+        println!(
+            "repaired: {} damaged lines stashed in {:?}, store rewritten with \
+             {} records",
+            repaired.quarantined.len(),
+            imagecl::tunedb::quarantine_path(db_path),
+            repaired.records,
+        );
+        return Ok(());
+    }
+    if !report.clean() {
+        return Err(format!(
+            "{} damaged record(s) in {db_path:?} — rerun with --repair to \
+             quarantine them and rewrite the store",
+            report.quarantined.len()
+        ));
+    }
+    Ok(())
+}
+
+/// `imagecl tunedb merge <replica>... [--db PATH]`: conflict-free merge
+/// of replica stores into `--db`. Resolution per (kernel, device
+/// fingerprint, grid, config) is deterministic — measured `wall` beats
+/// simulated, then higher journal seq — and the rewritten store is
+/// byte-identical regardless of argument order (idempotent, commutative).
+fn cmd_tunedb_merge(args: &Args, db_path: &std::path::Path) -> Result<(), String> {
+    let srcs: Vec<std::path::PathBuf> =
+        args.positional[1..].iter().map(std::path::PathBuf::from).collect();
+    if srcs.is_empty() {
+        return Err(
+            "tunedb merge needs at least one replica store to merge in".to_string()
+        );
+    }
+    let stats = imagecl::tunedb::merge_files(db_path, &srcs)
+        .map_err(|e| format!("merge into {db_path:?}: {e}"))?;
+    println!(
+        "merged {} store(s), {} records in -> {} records in {db_path:?} \
+         ({} damaged lines excluded)",
+        stats.inputs, stats.records_in, stats.merged, stats.quarantined
+    );
+    Ok(())
 }
 
 fn cmd_pipeline(args: &Args) -> Result<(), String> {

@@ -229,6 +229,44 @@ impl SloEngine {
         }
     }
 
+    /// Lifetime attainment state per kernel — `(kernel, objective_us,
+    /// good, total)` — the part of the engine worth carrying across a
+    /// process restart (burn windows are trailing-time and restart
+    /// empty by design). Feeds the serve warm-restart checkpoint.
+    pub fn state_snapshot(&self) -> Vec<(String, u64, u64, u64)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .kernels
+            .iter()
+            .map(|(name, k)| (name.clone(), k.objective_us, k.good, k.total))
+            .collect()
+    }
+
+    /// Merge a checkpointed kernel's lifetime counts back in (warm
+    /// restart): good/total add onto whatever this process has already
+    /// seen; the objective only applies to kernels the current spec has
+    /// no override for. Event history (burn windows) is not restored.
+    pub fn absorb(&self, kernel: &str, objective_us: u64, good: u64, total: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        // The current spec wins when it has an explicit override (or the
+        // checkpoint carries no objective); otherwise keep the
+        // checkpointed objective the counts were judged against.
+        let objective = if inner.spec.per_kernel.contains_key(kernel) || objective_us == 0
+        {
+            inner.spec.objective_us(kernel)
+        } else {
+            objective_us
+        };
+        let k = inner.kernels.entry(kernel.to_string()).or_insert_with(|| KernelSlo {
+            objective_us: objective,
+            good: 0,
+            total: 0,
+            events: VecDeque::new(),
+        });
+        k.good += good.min(total);
+        k.total += total;
+    }
+
     /// Build the report as of "now" on the engine clock.
     pub fn report(&self) -> SloReport {
         self.report_at_us(self.now_us())
@@ -438,6 +476,30 @@ mod tests {
         let r = e.report_at_us(2);
         assert_eq!((r.kernels[0].good, r.kernels[0].total), (1, 2));
         assert_eq!(r.kernels[0].objective_us, 1_000);
+    }
+
+    #[test]
+    fn state_snapshot_and_absorb_carry_attainment_across_engines() {
+        let a = SloEngine::new(SloSpec::parse("default=1ms,target=0.9").unwrap());
+        for _ in 0..9 {
+            a.record_at_us("blur", 1_000, Some(500));
+        }
+        a.record_at_us("blur", 1_000, Some(5_000)); // bad
+        let snap = a.state_snapshot();
+        assert_eq!(snap, vec![("blur".to_string(), 1_000, 9, 10)]);
+        // A fresh engine (a restarted process) absorbs the lifetime
+        // counts and keeps judging new events by its own spec.
+        let b = SloEngine::new(SloSpec::parse("default=1ms,target=0.9").unwrap());
+        for (kernel, obj, good, total) in snap {
+            b.absorb(&kernel, obj, good, total);
+        }
+        b.record_at_us("blur", 2_000, Some(500)); // good
+        let r = b.report_at_us(3_000);
+        assert_eq!((r.kernels[0].good, r.kernels[0].total), (10, 11));
+        // Spec overrides in the new process win over the checkpoint.
+        let c = SloEngine::new(SloSpec::parse("blur=2ms").unwrap());
+        c.absorb("blur", 1_000, 9, 10);
+        assert_eq!(c.report_at_us(0).kernels[0].objective_us, 2_000);
     }
 
     #[test]

@@ -380,6 +380,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 0,
+            explore_eps: 0.0,
         })
     }
 

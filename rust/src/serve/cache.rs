@@ -267,6 +267,22 @@ impl PlanCache {
         self.len() == 0
     }
 
+    /// Keys of the *built* entries, LRU-oldest first — the plan-cache
+    /// index a warm-restart checkpoint persists. Same `try_lock`
+    /// rationale as [`PlanCache::len`]: in-flight builds are skipped
+    /// rather than waited on.
+    pub fn keys(&self) -> Vec<PlanKey> {
+        let slots = self.slots.lock().unwrap();
+        let mut built: Vec<(u64, PlanKey)> = slots
+            .map
+            .iter()
+            .filter(|(_, s)| s.cell.try_lock().map(|g| g.is_some()).unwrap_or(false))
+            .map(|(k, s)| (s.last_used, k.clone()))
+            .collect();
+        built.sort_by_key(|(t, _)| *t);
+        built.into_iter().map(|(_, k)| k).collect()
+    }
+
     /// Get the entry for `key`, building it with `build` on first use.
     /// Returns `(entry, hit, evicted)`: `hit` reports whether the entry
     /// already existed, `evicted` how many LRU entries this call pushed

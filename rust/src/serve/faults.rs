@@ -17,12 +17,17 @@
 //! * `exec_delay`  — fixed sleep before execution (deadline/shed paths).
 //! * `tunedb_io`   — fail the knowledge base's disk append (serving
 //!   must continue on memory alone).
+//! * `tunedb_torn` — truncate a tunedb append mid-record, the footprint
+//!   of a crash between `write` and `fsync` (the journal's CRC framing
+//!   must quarantine exactly the torn line on reload).
+//! * `tunedb_corrupt` — flip a byte inside a committed tunedb record
+//!   (bit rot / partial sector write; again the CRC must catch it).
 //! * `net_drop`    — drop a client connection after a request frame is
 //!   read but before it is admitted (clients see a transport error and
 //!   retry; dropping pre-admission keeps execution exactly-once).
 //!
 //! Spec syntax (the `--faults` flag):
-//! `"exec_panic=0.01,tunedb_io=0.02,net_drop=0.05,exec_delay=20ms,seed=7"`.
+//! `"exec_panic=0.01,tunedb_io=0.02,tunedb_torn=0.05,net_drop=0.05,exec_delay=20ms,seed=7"`.
 
 use std::panic::PanicHookInfo;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -54,6 +59,10 @@ pub struct FaultSpec {
     pub exec_panic: f64,
     /// Probability a tunedb disk append fails.
     pub tunedb_io: f64,
+    /// Probability a tunedb append is truncated mid-record.
+    pub tunedb_torn: f64,
+    /// Probability a tunedb append has a byte flipped before it lands.
+    pub tunedb_corrupt: f64,
     /// Probability a just-read request frame's connection is dropped.
     pub net_drop: f64,
     /// Fixed pre-execution delay (applies to every request when set).
@@ -67,6 +76,8 @@ impl Default for FaultSpec {
         FaultSpec {
             exec_panic: 0.0,
             tunedb_io: 0.0,
+            tunedb_torn: 0.0,
+            tunedb_corrupt: 0.0,
             net_drop: 0.0,
             exec_delay: Duration::ZERO,
             seed: 0,
@@ -98,6 +109,8 @@ impl FaultSpec {
             match key {
                 "exec_panic" => spec.exec_panic = rate(val)?,
                 "tunedb_io" => spec.tunedb_io = rate(val)?,
+                "tunedb_torn" => spec.tunedb_torn = rate(val)?,
+                "tunedb_corrupt" => spec.tunedb_corrupt = rate(val)?,
                 "net_drop" => spec.net_drop = rate(val)?,
                 "exec_delay" => {
                     let us = crate::obs::slo::parse_latency_us(val)
@@ -112,7 +125,8 @@ impl FaultSpec {
                 other => {
                     return Err(format!(
                         "unknown --faults key {other:?} (expected exec_panic, \
-                         tunedb_io, net_drop, exec_delay or seed)"
+                         tunedb_io, tunedb_torn, tunedb_corrupt, net_drop, \
+                         exec_delay or seed)"
                     ))
                 }
             }
@@ -124,6 +138,8 @@ impl FaultSpec {
     pub fn active(&self) -> bool {
         self.exec_panic > 0.0
             || self.tunedb_io > 0.0
+            || self.tunedb_torn > 0.0
+            || self.tunedb_corrupt > 0.0
             || self.net_drop > 0.0
             || !self.exec_delay.is_zero()
     }
@@ -146,6 +162,8 @@ pub struct FaultInjector {
     spec: FaultSpec,
     exec_panic: Site,
     tunedb_io: Site,
+    tunedb_torn: Site,
+    tunedb_corrupt: Site,
     net_drop: Site,
 }
 
@@ -179,6 +197,8 @@ impl FaultInjector {
             spec,
             exec_panic: Site::default(),
             tunedb_io: Site::default(),
+            tunedb_torn: Site::default(),
+            tunedb_corrupt: Site::default(),
             net_drop: Site::default(),
         })
     }
@@ -217,6 +237,16 @@ impl FaultInjector {
         self.roll(&self.tunedb_io, 0x54554e45, self.spec.tunedb_io)
     }
 
+    /// Should this tunedb append be truncated mid-record?
+    pub fn tunedb_torn(&self) -> bool {
+        self.roll(&self.tunedb_torn, 0x544f524e, self.spec.tunedb_torn)
+    }
+
+    /// Should this tunedb append have a byte flipped?
+    pub fn tunedb_corrupt(&self) -> bool {
+        self.roll(&self.tunedb_corrupt, 0x434f5252, self.spec.tunedb_corrupt)
+    }
+
     /// Should this just-read request frame's connection be dropped?
     pub fn net_drop(&self) -> bool {
         self.roll(&self.net_drop, 0x4e455444, self.spec.net_drop)
@@ -231,10 +261,21 @@ impl FaultInjector {
         )
     }
 
+    /// Injected journal-damage counts so far: (tunedb_torn,
+    /// tunedb_corrupt). Separate from [`Self::injected`] to keep that
+    /// tuple's shape stable for existing chaos assertions.
+    pub fn injected_tunedb_damage(&self) -> (u64, u64) {
+        (
+            self.tunedb_torn.injected.load(Ordering::Relaxed),
+            self.tunedb_corrupt.injected.load(Ordering::Relaxed),
+        )
+    }
+
     /// Total injected events across every site.
     pub fn injected_total(&self) -> u64 {
         let (a, b, c) = self.injected();
-        a + b + c
+        let (d, e) = self.injected_tunedb_damage();
+        a + b + c + d + e
     }
 
     /// Publish per-site injected counts as
@@ -243,9 +284,14 @@ impl FaultInjector {
     pub fn publish_obs(&self) {
         let reg = crate::obs::registry();
         let (panics, tunedb, drops) = self.injected();
-        for (site, v) in
-            [("exec_panic", panics), ("tunedb_io", tunedb), ("net_drop", drops)]
-        {
+        let (torn, corrupt) = self.injected_tunedb_damage();
+        for (site, v) in [
+            ("exec_panic", panics),
+            ("tunedb_io", tunedb),
+            ("tunedb_torn", torn),
+            ("tunedb_corrupt", corrupt),
+            ("net_drop", drops),
+        ] {
             reg.counter(
                 "imagecl_faults_injected_total",
                 "Faults injected by the chaos layer, per site",
@@ -273,6 +319,18 @@ mod tests {
         assert_eq!(s.seed, 0);
         assert!(s.active());
         assert!(!FaultSpec::default().active());
+    }
+
+    #[test]
+    fn tunedb_damage_sites_parse_and_count_separately() {
+        let s = FaultSpec::parse("tunedb_torn=1.0,tunedb_corrupt=1.0,seed=5").unwrap();
+        assert!(s.active());
+        let f = FaultInjector::new(s);
+        assert!(f.tunedb_torn());
+        assert!(f.tunedb_corrupt());
+        assert_eq!(f.injected(), (0, 0, 0), "legacy tuple shape untouched");
+        assert_eq!(f.injected_tunedb_damage(), (1, 1));
+        assert_eq!(f.injected_total(), 2);
     }
 
     #[test]

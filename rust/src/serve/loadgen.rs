@@ -406,6 +406,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 0,
+            explore_eps: 0.0,
         })
     }
 
@@ -459,6 +460,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 0,
+            explore_eps: 0.0,
         });
         let opts = LoadGenOpts {
             requests: 6,

@@ -78,6 +78,13 @@ pub struct Counters {
     pub net_requests: AtomicU64,
     /// Connections dropped by injected `net_drop` faults.
     pub net_drops: AtomicU64,
+    /// Plan-cache entries rebuilt from a warm-restart checkpoint at
+    /// startup (each one is a first request that skips the cold tune).
+    pub warm_restarts: AtomicU64,
+    /// Epsilon re-exploration executions (`--explore-eps`): live
+    /// requests that additionally re-measured a near-winner config to
+    /// keep the knowledge base improving.
+    pub explores: AtomicU64,
 }
 
 impl Counters {
@@ -119,6 +126,8 @@ impl Counters {
             quarantines: self.quarantines.load(Ordering::Relaxed),
             net_requests: self.net_requests.load(Ordering::Relaxed),
             net_drops: self.net_drops.load(Ordering::Relaxed),
+            warm_restarts: self.warm_restarts.load(Ordering::Relaxed),
+            explores: self.explores.load(Ordering::Relaxed),
         }
     }
 
@@ -129,7 +138,7 @@ impl Counters {
     pub fn publish(&self) {
         let reg = crate::obs::registry();
         let s = self.snapshot();
-        let counters: [(&'static str, &'static str, u64); 22] = [
+        let counters: [(&'static str, &'static str, u64); 24] = [
             ("imagecl_serve_tunes_total", "Cold-key tuner invocations", s.tunes),
             (
                 "imagecl_serve_warm_starts_total",
@@ -220,6 +229,16 @@ impl Counters {
                 "Connections dropped by injected net faults",
                 s.net_drops,
             ),
+            (
+                "imagecl_serve_warm_restarts_total",
+                "Plan-cache entries rebuilt from a warm-restart checkpoint",
+                s.warm_restarts,
+            ),
+            (
+                "imagecl_serve_explores_total",
+                "Epsilon re-exploration executions of near-winner configs",
+                s.explores,
+            ),
         ];
         for (name, help, v) in counters {
             reg.counter(name, help, &[]).set_max(v);
@@ -259,6 +278,8 @@ pub struct StatsSnapshot {
     pub quarantines: u64,
     pub net_requests: u64,
     pub net_drops: u64,
+    pub warm_restarts: u64,
+    pub explores: u64,
 }
 
 impl StatsSnapshot {
@@ -295,6 +316,8 @@ impl StatsSnapshot {
             quarantines: self.quarantines.saturating_sub(earlier.quarantines),
             net_requests: self.net_requests.saturating_sub(earlier.net_requests),
             net_drops: self.net_drops.saturating_sub(earlier.net_drops),
+            warm_restarts: self.warm_restarts.saturating_sub(earlier.warm_restarts),
+            explores: self.explores.saturating_sub(earlier.explores),
         }
     }
 }
@@ -418,6 +441,13 @@ impl ServeReport {
                 out,
                 "  network     {} wire requests, {} injected drops",
                 s.net_requests, s.net_drops
+            );
+        }
+        if s.warm_restarts > 0 || s.explores > 0 {
+            let _ = writeln!(
+                out,
+                "  durability  {} plans warm-restarted from checkpoint, {} epsilon explores",
+                s.warm_restarts, s.explores
             );
         }
         if s.pjrt_execs > 0 {

@@ -45,7 +45,7 @@ pub use cache::{PlanEntry, PlanKey, TuneSource, TunedStore};
 pub use faults::{FaultInjector, FaultSpec};
 pub use loadgen::{run_loadgen, LoadGenOpts};
 pub use metrics::{Counters, ServeReport, StatsSnapshot};
-pub use net::{NetClient, NetServer, NetServerOpts};
+pub use net::{DrainHandle, NetClient, NetServer, NetServerOpts};
 pub use queue::{BoundedQueue, PushError};
 pub use worker::{DevicePool, ServeReply, ServeRequest};
 
@@ -194,6 +194,14 @@ pub struct ServiceConfig {
     /// Measured-evaluation budget when the performance model ranks the
     /// space for a cold (kernel, device) pair (tier 3).
     pub predict_budget: usize,
+    /// Bounded-epsilon online re-exploration (`--explore-eps`): the
+    /// fraction of real-execution requests that additionally re-measure
+    /// a near-winner config and feed the wall sample back into the
+    /// knowledge base, so a long-lived db keeps improving instead of
+    /// freezing at first-tune quality. `0.0` disables (the default);
+    /// the spent fraction is bounded by construction — one bounded
+    /// extra execution per sampled request, off the reply path.
+    pub explore_eps: f64,
 }
 
 impl Default for ServiceConfig {
@@ -206,6 +214,7 @@ impl Default for ServiceConfig {
             plan_cache_cap: None,
             transfer_budget: 48,
             predict_budget: 48,
+            explore_eps: 0.0,
         }
     }
 }
@@ -263,6 +272,9 @@ pub struct KernelService {
     /// NDRange interpreter.
     #[cfg(feature = "xla")]
     artifacts: Option<pjrt::ArtifactRouter>,
+    /// Epsilon-exploration decision stream position (deterministic:
+    /// decision `n` is a pure function of `n` and `explore_eps`).
+    explore_seq: std::sync::atomic::AtomicU64,
 }
 
 impl KernelService {
@@ -302,6 +314,7 @@ impl KernelService {
             panics: Mutex::default(),
             #[cfg(feature = "xla")]
             artifacts: pjrt::ArtifactRouter::open_default(),
+            explore_seq: std::sync::atomic::AtomicU64::new(0),
         })
     }
 
@@ -432,6 +445,151 @@ impl KernelService {
         self.counters.publish();
         self.db.publish_obs();
         profile::profiler().publish();
+    }
+
+    /// Where this service checkpoints its warm-restart state: beside the
+    /// tuning store (`<db>.ckpt`). `None` when the service runs without a
+    /// durable store — then there is nothing to warm-restart from.
+    pub fn checkpoint_path(&self) -> Option<PathBuf> {
+        let db = self.config.db_path.as_ref()?;
+        let mut name = db.file_name().unwrap_or_default().to_os_string();
+        name.push(".ckpt");
+        Some(db.with_file_name(name))
+    }
+
+    /// Checkpoint the serving state that is expensive to rebuild but
+    /// cheap to describe: the plan-cache index (which (kernel, device,
+    /// grid) keys are hot, LRU-oldest first) and the SLO attainment
+    /// state. Written atomically beside the store on graceful drain so a
+    /// restarted server can rebuild every hot plan from the durable db
+    /// before its first request. Returns the number of plan keys
+    /// checkpointed, or `None` when the service has no db path or the
+    /// write failed (logged, never fatal — a drain must not wedge on a
+    /// full disk).
+    pub fn write_checkpoint(&self, slo: Option<&obs::slo::SloEngine>) -> Option<usize> {
+        let path = self.checkpoint_path()?;
+        let keys = self.plans.keys();
+        let mut buf = String::from("#! imagecl-serve-checkpoint v1\n");
+        for k in &keys {
+            buf.push_str(&format!(
+                "plan\t{}\t{}\t{}\t{}\n",
+                k.kernel, k.device, k.grid.0, k.grid.1
+            ));
+        }
+        if let Some(slo) = slo {
+            for (kernel, objective_us, good, total) in slo.state_snapshot() {
+                buf.push_str(&format!("slo\t{kernel}\t{objective_us}\t{good}\t{total}\n"));
+            }
+        }
+        match crate::fsutil::write_atomic(&path, buf.as_bytes()) {
+            Ok(()) => Some(keys.len()),
+            Err(e) => {
+                eprintln!("imagecl: checkpoint write failed ({}): {e}", path.display());
+                None
+            }
+        }
+    }
+
+    /// Replay a warm-restart checkpoint: rebuild every checkpointed plan
+    /// through the normal [`Self::plan`] path (the durable store answers
+    /// the config lookup, so no tuning search runs) and re-absorb SLO
+    /// attainment so burn-rate math survives the restart. Unknown
+    /// devices, malformed rows and failed builds are skipped — a stale
+    /// checkpoint degrades to a cold start, never an error. Returns the
+    /// number of plans warmed.
+    pub fn restore_checkpoint(&self, slo: Option<&obs::slo::SloEngine>) -> usize {
+        let Some(path) = self.checkpoint_path() else {
+            return 0;
+        };
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return 0;
+        };
+        let mut warmed = 0usize;
+        for line in text.lines() {
+            let cols: Vec<&str> = line.trim_end().split('\t').collect();
+            match cols.as_slice() {
+                ["plan", kernel, device, gw, gh] => {
+                    let Some(dev) = devices::by_name(device) else {
+                        continue;
+                    };
+                    let (Ok(gw), Ok(gh)) = (gw.parse::<usize>(), gh.parse::<usize>()) else {
+                        continue;
+                    };
+                    if self.plan(kernel, dev, (gw, gh)).is_ok() {
+                        warmed += 1;
+                        Counters::bump(&self.counters.warm_restarts);
+                    }
+                }
+                ["slo", kernel, objective_us, good, total] => {
+                    if let Some(slo) = slo {
+                        if let (Ok(o), Ok(g), Ok(t)) = (
+                            objective_us.parse::<u64>(),
+                            good.parse::<u64>(),
+                            total.parse::<u64>(),
+                        ) {
+                            slo.absorb(kernel, o, g, t);
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        warmed
+    }
+
+    /// Bounded-epsilon online re-exploration. Called off the reply path
+    /// after a served real execution: with probability `explore_eps`
+    /// (deterministic in the request ordinal) re-measure the entry's
+    /// winner — or a near-winner with the thread mapping flipped — on
+    /// the canonical workload and feed the wall sample back into the
+    /// store. Keeps a long-lived db tracking the hardware it serves on
+    /// instead of freezing at first-tune quality. No-op unless
+    /// `explore_eps > 0` and the service executes for real.
+    pub fn maybe_explore(&self, entry: &PlanEntry, dev: &'static DeviceSpec) {
+        let eps = self.config.explore_eps;
+        if eps <= 0.0 || self.config.exec != ExecMode::Real {
+            return;
+        }
+        let n = self.explore_seq.fetch_add(1, Ordering::Relaxed);
+        // splitmix64 over the ordinal: deterministic, stateless stream.
+        let mut z = n.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        if ((z >> 11) as f64 / (1u64 << 53) as f64) >= eps.min(1.0) {
+            return;
+        }
+        // Fused kernels tune a mode-aware space; skip them here.
+        let key = &entry.key;
+        let Some(kdef) = bench_defs::kernel_by_id(&key.kernel) else {
+            return;
+        };
+        let Ok(prog) = frontend(kdef.source) else {
+            return;
+        };
+        let info = KernelInfo::analyze(prog);
+        let fm = FeatureMap::new(&info);
+        let mut config = entry.config.clone();
+        if n % 2 == 1 {
+            // Near-winner variant: the mapping flip is valid for every
+            // kernel, so exploration never builds an unlaunchable plan.
+            config.interleaved = !config.interleaved;
+        }
+        let Ok(plan) = lower(&info, &config) else {
+            return;
+        };
+        let mut args = bench_defs::workload(&key.kernel, key.grid.0, key.grid.1, n as usize);
+        let Ok(prepared) = PreparedKernel::prepare_on(&plan, &args, key.grid, dev.name) else {
+            return;
+        };
+        let t = std::time::Instant::now();
+        if prepared.run(&mut args).is_err() {
+            return;
+        }
+        let secs = t.elapsed().as_secs_f64();
+        self.db
+            .record_wall(&key.kernel, dev, key.grid, &config, fm.features(&config), secs);
+        Counters::bump(&self.counters.explores);
     }
 
     /// Execute a request through the PJRT artifact path when available
@@ -792,6 +950,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 0,
+            explore_eps: 0.0,
         })
     }
 
@@ -892,6 +1051,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 24,
             predict_budget: 0,
+            explore_eps: 0.0,
         });
         let warm = svc.plan("sepconv_row", &K40, (32, 32)).unwrap();
         assert_eq!(warm.source, TuneSource::Fresh);
@@ -916,6 +1076,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 24,
+            explore_eps: 0.0,
         });
         // Seed knowledge on two devices so the model has cross-device
         // training data, then let the background trainer fit it (the
@@ -952,6 +1113,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 24,
+            explore_eps: 0.0,
         });
         // Seed one device — records now exist, so the model cache is
         // stale.
@@ -996,6 +1158,7 @@ mod tests {
             plan_cache_cap: Some(2),
             transfer_budget: 0,
             predict_budget: 0,
+            explore_eps: 0.0,
         });
         svc.plan("sepconv_row", &K40, (16, 16)).unwrap();
         svc.plan("sepconv_row", &K40, (32, 32)).unwrap();

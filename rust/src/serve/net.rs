@@ -677,6 +677,21 @@ impl NetServer {
         })
     }
 
+    /// Request a graceful drain from inside the process — the SIGTERM
+    /// path. Wakes [`NetServer::wait`] exactly as a client `SHUTDOWN`
+    /// frame would; the caller then runs the normal shutdown sequence
+    /// (drain queues, checkpoint, join).
+    pub fn request_drain(&self) {
+        self.shared.request_drain();
+    }
+
+    /// A cloneable cross-thread handle that can request a graceful
+    /// drain while the owning thread blocks in [`NetServer::wait`]
+    /// (the SIGTERM watchdog holds one).
+    pub fn drain_handle(&self) -> DrainHandle {
+        DrainHandle(self.shared.clone())
+    }
+
     /// Block until a client sends a `SHUTDOWN` frame (the CLI's
     /// serve-until-told-to-stop mode), then return so the caller can
     /// invoke [`NetServer::shutdown`].
@@ -714,6 +729,16 @@ impl NetServer {
         for h in handles {
             let _ = h.join();
         }
+    }
+}
+
+/// See [`NetServer::drain_handle`].
+#[derive(Clone)]
+pub struct DrainHandle(Arc<Shared>);
+
+impl DrainHandle {
+    pub fn request_drain(&self) {
+        self.0.request_drain();
     }
 }
 
@@ -1016,6 +1041,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 0,
+            explore_eps: 0.0,
         })
     }
 

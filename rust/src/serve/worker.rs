@@ -261,6 +261,10 @@ fn execute_one(
                     // Real-execution ground truth back into the
                     // knowledge base (once per cache entry).
                     service.observe_wall(entry, device, secs);
+                    // Bounded-epsilon online re-exploration (off the
+                    // reply path only in cost, not in thread: the extra
+                    // measurement runs here, after the result is final).
+                    service.maybe_explore(entry, device);
                     Ok((secs, bench_defs::args_checksum(&args)))
                 }
             }
@@ -427,6 +431,7 @@ mod tests {
             plan_cache_cap: None,
             transfer_budget: 0,
             predict_budget: 0,
+            explore_eps: 0.0,
         })
     }
 

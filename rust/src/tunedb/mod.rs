@@ -19,7 +19,12 @@
 //!    devices and grids) ranks the candidate space and only the top
 //!    predictions are measured ([`crate::tuner::search::shortlist`]).
 //!
-//! The store is an append-only TSV (`store.rs`) with an in-memory index;
+//! The store is a checksummed append-only journal (`store.rs`: per-record
+//! CRC + sequence numbers + epoch header) with an in-memory index;
+//! corruption anywhere in the file is quarantined on load, audited by
+//! [`fsck`] and repaired by [`fsck_repair`]'s atomic snapshot rewrite.
+//! Replica stores from a serving fleet cross-pollinate via
+//! [`merge_files`] — a deterministic, idempotent, commutative merge.
 //! [`TuneDb::import_legacy_tsv`] migrates PR-1 warm-start files so
 //! existing deployments keep their tuned configs.
 
@@ -27,7 +32,7 @@ pub mod model;
 pub mod store;
 
 pub use model::{device_features, PerfModel, MIN_TRAIN_RECORDS};
-pub use store::{device_fingerprint, TuneRecord};
+pub use store::{device_fingerprint, merge_records, LoadReport, TuneRecord};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -90,6 +95,14 @@ pub struct DbCounters {
     /// Unusable store lines skipped on load (truncated trailing record
     /// from a crashed append, corrupt or stale lines).
     pub skipped_lines: AtomicU64,
+    /// Structurally damaged (torn/corrupt) lines quarantined on load —
+    /// the subset of `skipped_lines` that is byte damage rather than
+    /// staleness. Non-zero after a crash or bit rot; `tunedb fsck`
+    /// audits and repairs.
+    pub fsck_quarantined: AtomicU64,
+    /// Journal appends whose post-write fsync failed (the data reached
+    /// the file but may not survive a power cut).
+    pub fsync_failures: AtomicU64,
     /// Disk appends skipped by injected `tunedb_io` faults (chaos
     /// testing; the in-memory index still gets the records).
     pub io_faults: AtomicU64,
@@ -98,6 +111,12 @@ pub struct DbCounters {
 #[derive(Default)]
 struct DbInner {
     records: Vec<TuneRecord>,
+    /// Last journal sequence number assigned/loaded; appends get
+    /// `last_seq + 1` so replica merge can prefer newer entries.
+    last_seq: u64,
+    /// Static kernel-feature cache (`None` caches "not derivable" for
+    /// kernels whose source we don't hold).
+    kfeats: HashMap<String, Option<[f64; 3]>>,
     /// Winner-record indices per (kernel, device).
     best: HashMap<(String, &'static str), Vec<usize>>,
     /// All-record indices per kernel (model training set).
@@ -191,6 +210,41 @@ pub fn grid_distance(a: (usize, usize), b: (usize, usize)) -> f64 {
     (dx * dx + dy * dy).sqrt()
 }
 
+/// Static features of a kernel's *source* — stencil extent in x and y
+/// (max over read arrays) and arithmetic intensity (weighted ops per
+/// element of memory traffic) — the `kfeat` journal column. `None` when
+/// the kernel is not a known built-in (we don't hold its source).
+///
+/// These are structure-of-the-computation features: two kernels with
+/// similar stencils and intensity tend to prefer similar configs, so
+/// they let a brand-new kernel's cold start be seeded from the records
+/// of its nearest structural neighbors (ROADMAP #4).
+pub fn kernel_static_features(kernel: &str) -> Option<[f64; 3]> {
+    let def = bench_defs::kernel_by_id(kernel)?;
+    let prog = frontend(def.source).ok()?;
+    let info = KernelInfo::analyze(prog);
+    let (mut ex, mut ey) = (0i64, 0i64);
+    for array in info.stencils.keys() {
+        if let Some(s) = info.read_stencil(array) {
+            ex = ex.max(s.extent_x());
+            ey = ey.max(s.extent_y());
+        }
+    }
+    let traffic = info.cost.total_reads() + info.cost.total_writes();
+    let intensity = if traffic > 0.0 { info.cost.weighted_ops() / traffic } else { 0.0 };
+    Some([ex as f64, ey as f64, intensity])
+}
+
+/// Distance between two static kernel-feature vectors: Euclidean over
+/// (extent_x, extent_y, ln(1 + intensity)) — the log keeps a pathological
+/// intensity from drowning the stencil shape.
+pub fn kernel_feature_distance(a: [f64; 3], b: [f64; 3]) -> f64 {
+    let di = (1.0 + a[2].max(0.0)).ln() - (1.0 + b[2].max(0.0)).ln();
+    let dx = a[0] - b[0];
+    let dy = a[1] - b[1];
+    (dx * dx + dy * dy + di * di).sqrt()
+}
+
 impl TuneDb {
     /// In-memory only (no persistence).
     pub fn ephemeral() -> TuneDb {
@@ -209,10 +263,13 @@ impl TuneDb {
     pub fn open(path: &Path) -> TuneDb {
         let mut inner = DbInner::default();
         let mut skipped = 0;
+        let mut quarantined = 0;
         if let Ok(text) = std::fs::read_to_string(path) {
-            let (recs, n_skipped) = store::parse_file(&text);
-            skipped = n_skipped;
-            for rec in recs {
+            let report = store::parse_file(&text);
+            skipped = report.quarantined.len() + report.stale;
+            quarantined = report.quarantined.len();
+            inner.last_seq = report.max_seq;
+            for rec in report.records {
                 inner.records.push(rec);
                 inner.index(inner.records.len() - 1);
             }
@@ -224,6 +281,7 @@ impl TuneDb {
             faults: Mutex::new(crate::serve::faults::FaultInjector::disabled()),
         };
         db.obs.skipped_lines.store(skipped as u64, Ordering::Relaxed);
+        db.obs.fsck_quarantined.store(quarantined as u64, Ordering::Relaxed);
         db.compact(HISTORY_CAP_PER_KEY);
         db
     }
@@ -257,7 +315,9 @@ impl TuneDb {
         // clobber a record the index doesn't already hold.
         if removed > 0 {
             if let Some(path) = &self.path {
-                store::rewrite(path, &g.records);
+                if let Err(e) = store::rewrite(path, &g.records) {
+                    eprintln!("warning: cannot rewrite tunedb {path:?}: {e}");
+                }
             }
         }
         CompactStats { kept: g.records.len(), removed }
@@ -291,21 +351,35 @@ impl TuneDb {
         self.record_batch(vec![rec]);
     }
 
-    fn record_batch(&self, recs: Vec<TuneRecord>) {
+    fn record_batch(&self, mut recs: Vec<TuneRecord>) {
         if recs.is_empty() {
             return;
         }
         self.obs.records_appended.fetch_add(recs.len() as u64, Ordering::Relaxed);
         // Disk append happens under the same lock as the in-memory index
         // so an in-process `compact()` (which rewrites the file) can
-        // never race a concurrent append and erase it from disk.
+        // never race a concurrent append and erase it from disk. Sequence
+        // numbers are assigned under it too — monotone per store.
         let mut g = self.inner.lock().unwrap();
+        for rec in &mut recs {
+            g.last_seq += 1;
+            rec.seq = g.last_seq;
+            if rec.kfeat == [0.0; 3] {
+                let kf = g
+                    .kfeats
+                    .entry(rec.kernel.clone())
+                    .or_insert_with(|| kernel_static_features(&rec.kernel));
+                if let Some(kf) = kf {
+                    rec.kfeat = *kf;
+                }
+            }
+        }
         if let Some(path) = &self.path {
             // Injected IO fault: only the disk append is lost (matching
             // a real failed write — `store::append` is best-effort);
             // the in-memory index stays correct, so serving answers
             // don't change. A restart would re-tune, which `open()`'s
-            // skip-and-warn load path tolerates.
+            // quarantine-and-warn load path tolerates.
             let injector = self.faults.lock().unwrap().clone();
             if injector.tunedb_io() {
                 self.obs.io_faults.fetch_add(1, Ordering::Relaxed);
@@ -314,7 +388,10 @@ impl TuneDb {
                     recs.len()
                 );
             } else {
-                store::append(path, &recs);
+                let rep = store::append(path, &recs, &injector);
+                if rep.sync_failed {
+                    self.obs.fsync_failures.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
         for rec in recs {
@@ -345,6 +422,8 @@ impl TuneDb {
             wall: false,
             config: config.clone(),
             features: fm.features(config),
+            seq: 0,
+            kfeat: [0.0; 3],
         };
         let mut recs = vec![make(&res.best, res.best_time, true)];
         let finite: Vec<&(crate::transform::TuningConfig, f64)> =
@@ -393,6 +472,8 @@ impl TuneDb {
             wall: true,
             config: config.clone(),
             features,
+            seq: 0,
+            kfeat: [0.0; 3],
         });
     }
 
@@ -529,6 +610,37 @@ impl TuneDb {
         self.inner.lock().unwrap().by_kernel.get(kernel).map_or(0, Vec::len)
     }
 
+    /// Kernels in the db nearest to `kernel` by static structure
+    /// (stencil shape + arithmetic intensity), sorted ascending by
+    /// [`kernel_feature_distance`] and truncated to `k`. The seed for
+    /// cold-starting a brand-new kernel from its structural neighbors'
+    /// records. Empty when `kernel`'s features are underivable or no
+    /// other kernel in the db carries stamped features.
+    pub fn similar_kernels(&self, kernel: &str, k: usize) -> Vec<(String, f64)> {
+        let g = self.inner.lock().unwrap();
+        // Target features: derived from source when we hold it, else the
+        // stamped kfeat of any of the kernel's own records.
+        let target = kernel_static_features(kernel).or_else(|| {
+            g.by_kernel.get(kernel).and_then(|idxs| {
+                idxs.iter().map(|&i| g.records[i].kfeat).find(|kf| *kf != [0.0; 3])
+            })
+        });
+        let Some(target) = target else { return Vec::new() };
+        let mut seen: HashMap<&str, [f64; 3]> = HashMap::new();
+        for r in &g.records {
+            if r.kernel != kernel && r.kfeat != [0.0; 3] {
+                seen.entry(r.kernel.as_str()).or_insert(r.kfeat);
+            }
+        }
+        let mut scored: Vec<(String, f64)> = seen
+            .into_iter()
+            .map(|(name, kf)| (name.to_string(), kernel_feature_distance(target, kf)))
+            .collect();
+        scored.sort_by(|a, b| a.1.total_cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+        scored.truncate(k);
+        scored
+    }
+
     /// Execution-time estimate for a key, for schedulers: an exact
     /// winner's measured time, or the nearest-grid winner's time scaled
     /// by the pixel-count ratio. `None` = no same-device knowledge.
@@ -548,7 +660,7 @@ impl TuneDb {
     /// compaction shrinks them.
     pub fn publish_obs(&self) {
         let reg = crate::obs::registry();
-        let counters: [(&str, &str, &AtomicU64); 7] = [
+        let counters: [(&str, &str, &AtomicU64); 9] = [
             (
                 "imagecl_tunedb_lookups_exact_total",
                 "Lookups answered by an exact-key winner (tier 1)",
@@ -578,6 +690,16 @@ impl TuneDb {
                 "imagecl_tunedb_skipped_lines",
                 "Unusable store lines skipped on load (truncated/corrupt)",
                 &self.obs.skipped_lines,
+            ),
+            (
+                "imagecl_tunedb_fsck_quarantined_total",
+                "Torn/corrupt journal lines quarantined on load",
+                &self.obs.fsck_quarantined,
+            ),
+            (
+                "imagecl_tunedb_fsync_failures_total",
+                "Journal appends whose post-write fsync failed",
+                &self.obs.fsync_failures,
             ),
             (
                 "imagecl_tunedb_io_faults_total",
@@ -632,6 +754,129 @@ impl TuneDb {
     }
 }
 
+/// What [`fsck`] found in a store file.
+#[derive(Debug, Clone)]
+pub struct FsckReport {
+    /// Intact, applicable records.
+    pub records: usize,
+    /// Torn/corrupt lines: (1-based line number, raw text).
+    pub quarantined: Vec<(usize, String)>,
+    /// Intact lines dropped as inapplicable (unknown device / stale
+    /// device fingerprint).
+    pub stale: usize,
+    /// The store's epoch header, when present.
+    pub epoch: Option<u64>,
+    /// Highest journal sequence number.
+    pub max_seq: u64,
+}
+
+impl FsckReport {
+    /// No damage anywhere in the file.
+    pub fn clean(&self) -> bool {
+        self.quarantined.is_empty()
+    }
+}
+
+fn fsck_report(text: &str) -> (FsckReport, Vec<TuneRecord>) {
+    let report = store::parse_file(text);
+    (
+        FsckReport {
+            records: report.records.len(),
+            quarantined: report.quarantined,
+            stale: report.stale,
+            epoch: report.epoch,
+            max_seq: report.max_seq,
+        },
+        report.records,
+    )
+}
+
+/// Audit a store file: classify every line (record / stale / torn or
+/// corrupt) without modifying anything. The CLI's `tunedb fsck`.
+pub fn fsck(path: &Path) -> std::io::Result<FsckReport> {
+    let text = std::fs::read_to_string(path)?;
+    Ok(fsck_report(&text).0)
+}
+
+/// Sidecar file quarantined raw lines are stashed into on repair.
+pub fn quarantine_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".quarantine");
+    path.with_file_name(name)
+}
+
+/// Repair a store file: stash every damaged raw line into the
+/// `.quarantine` sidecar (appending — earlier stashes survive), then
+/// atomically rewrite the store as a clean v2 snapshot of the intact
+/// records (legacy lines are re-framed with CRCs; stale lines drop).
+/// The CLI's `tunedb fsck --repair`.
+pub fn fsck_repair(path: &Path) -> std::io::Result<FsckReport> {
+    use std::io::Write as _;
+    let text = std::fs::read_to_string(path)?;
+    let (report, records) = fsck_report(&text);
+    if !report.quarantined.is_empty() {
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(quarantine_path(path))?;
+        for (lno, raw) in &report.quarantined {
+            writeln!(f, "# {}:{lno}", path.display())?;
+            writeln!(f, "{raw}")?;
+        }
+        f.sync_all()?;
+    }
+    store::rewrite(path, &records)?;
+    Ok(report)
+}
+
+/// Outcome of a [`merge_files`] run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Store files read (destination, when it existed, + sources).
+    pub inputs: usize,
+    /// Records read across all inputs (before dedup/resolution).
+    pub records_in: usize,
+    /// Records in the merged store.
+    pub merged: usize,
+    /// Damaged lines quarantined across all inputs (left in place in
+    /// the sources; excluded from the merge).
+    pub quarantined: usize,
+}
+
+/// Conflict-free merge of replica store files into `dst` (which need
+/// not exist; when it does, its records participate). Resolution is
+/// [`store::merge_records`]'s total order, and the output is written
+/// atomically with a content-derived epoch — so any merge order of the
+/// same replica set produces a byte-identical `dst`, and re-merging is
+/// a no-op. The CLI's `tunedb merge`.
+pub fn merge_files(dst: &Path, srcs: &[PathBuf]) -> std::io::Result<MergeStats> {
+    let mut sets = Vec::new();
+    let mut stats = MergeStats { inputs: 0, records_in: 0, merged: 0, quarantined: 0 };
+    let mut load = |path: &Path, required: bool| -> std::io::Result<()> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if !required && e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(())
+            }
+            Err(e) => return Err(e),
+        };
+        let report = store::parse_file(&text);
+        stats.inputs += 1;
+        stats.records_in += report.records.len();
+        stats.quarantined += report.quarantined.len();
+        sets.push(report.records);
+        Ok(())
+    };
+    load(dst, false)?;
+    for src in srcs {
+        load(src, true)?;
+    }
+    let merged = merge_records(sets);
+    stats.merged = merged.len();
+    store::rewrite(dst, &merged)?;
+    Ok(stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -651,6 +896,8 @@ mod tests {
             wall: false,
             config,
             features: vec![6.0, 2.0],
+            seq: 0,
+            kfeat: [0.0; 3],
         }
     }
 
@@ -929,6 +1176,140 @@ mod tests {
         let db = TuneDb::open(&path);
         assert!(db.is_empty());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn seq_numbers_are_monotone_across_reload() {
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_seq_{}.tsv", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let db = TuneDb::open(&path);
+            db.record(rec("sobel", &K40, 64, 1e-4, true));
+            db.record(rec("sobel", &K40, 128, 2e-4, true));
+            let seqs: Vec<u64> = db.snapshot().iter().map(|r| r.seq).collect();
+            assert_eq!(seqs, vec![1, 2]);
+        }
+        // A reloaded store continues the sequence, never reuses it.
+        let db = TuneDb::open(&path);
+        db.record(rec("sobel", &K40, 256, 3e-4, true));
+        let max = db.snapshot().iter().map(|r| r.seq).max().unwrap();
+        assert_eq!(max, 3);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn kfeat_stamped_for_builtin_kernels_and_similarity_ranks() {
+        let db = TuneDb::ephemeral();
+        db.record(rec("sobel", &K40, 64, 1e-4, true));
+        db.record(rec("sepconv_row", &K40, 64, 1e-4, true));
+        db.record(rec("not_a_builtin", &K40, 64, 1e-4, true));
+        let snap = db.snapshot();
+        let by_name = |n: &str| snap.iter().find(|r| r.kernel == n).unwrap().clone();
+        // Built-in kernels get real static features; unknown sources
+        // stay unstamped (all-zero).
+        assert_ne!(by_name("sobel").kfeat, [0.0; 3]);
+        assert_ne!(by_name("sepconv_row").kfeat, [0.0; 3]);
+        assert_eq!(by_name("not_a_builtin").kfeat, [0.0; 3]);
+        // Sobel reads a 3x3 neighborhood.
+        assert_eq!(by_name("sobel").kfeat[0], 2.0);
+        assert_eq!(by_name("sobel").kfeat[1], 2.0);
+        assert!(by_name("sobel").kfeat[2] > 0.0);
+        // Similarity query: sees only kernels with stamped features,
+        // never echoes the query kernel itself.
+        let sim = db.similar_kernels("sobel", 8);
+        let names: Vec<&str> = sim.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["sepconv_row"]);
+        assert!(sim[0].1.is_finite());
+        // Unknown kernel with no records → no basis for similarity.
+        assert!(db.similar_kernels("never_seen", 8).is_empty());
+    }
+
+    #[test]
+    fn fsck_audits_and_repair_quarantines() {
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_fsck_{}.tsv", std::process::id()));
+        let side = quarantine_path(&path);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&side);
+        {
+            let db = TuneDb::open(&path);
+            db.record(rec("sobel", &K40, 64, 1e-4, true));
+            db.record(rec("conv2d", &INTEL_I7, 128, 2e-3, true));
+        }
+        // Flip a byte in the middle of the first record line.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let first_rec = {
+            let text = std::str::from_utf8(&bytes).unwrap();
+            let start = text.lines().take_while(|l| l.starts_with('#')).map(|l| l.len() + 1).sum::<usize>();
+            start + 40
+        };
+        bytes[first_rec] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let report = fsck(&path).unwrap();
+        assert!(!report.clean());
+        assert_eq!(report.records, 1);
+        assert_eq!(report.quarantined.len(), 1);
+        // open() surfaces the same damage in its counters.
+        {
+            let db = TuneDb::open(&path);
+            assert_eq!(db.obs.fsck_quarantined.load(Ordering::Relaxed), 1);
+            db.publish_obs();
+        }
+        // Repair: damage stashed to the sidecar, store rewritten clean.
+        let repaired = fsck_repair(&path).unwrap();
+        assert_eq!(repaired.quarantined.len(), 1);
+        let after = fsck(&path).unwrap();
+        assert!(after.clean());
+        assert_eq!(after.records, 1);
+        let stash = std::fs::read_to_string(&side).unwrap();
+        assert!(stash.contains(&repaired.quarantined[0].1));
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_file(&side);
+    }
+
+    #[test]
+    fn merge_files_is_idempotent_and_order_independent() {
+        let base = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_merge_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let replica = |name: &str, recs: &[TuneRecord]| -> PathBuf {
+            let p = base.join(name);
+            let db = TuneDb::open(&p);
+            for r in recs {
+                db.record(r.clone());
+            }
+            p
+        };
+        let a = replica(
+            "a.tsv",
+            &[rec("sobel", &K40, 64, 1e-4, true), rec("sobel", &K40, 128, 2e-4, true)],
+        );
+        let b = replica(
+            "b.tsv",
+            &[rec("sobel", &K40, 64, 1e-4, true), rec("conv2d", &INTEL_I7, 128, 2e-3, true)],
+        );
+        let ab = base.join("ab.tsv");
+        let ba = base.join("ba.tsv");
+        let stats = merge_files(&ab, &[a.clone(), b.clone()]).unwrap();
+        merge_files(&ba, &[b.clone(), a.clone()]).unwrap();
+        assert_eq!(stats.inputs, 2);
+        assert_eq!(stats.records_in, 4);
+        // The duplicate (sobel, 64) outcome collapses.
+        assert_eq!(stats.merged, 3);
+        // Order independence: byte-identical outputs.
+        assert_eq!(std::fs::read(&ab).unwrap(), std::fs::read(&ba).unwrap());
+        // Idempotence: re-merging changes nothing.
+        let again = merge_files(&ab, &[a, b]).unwrap();
+        assert_eq!(again.merged, 3);
+        assert_eq!(std::fs::read(&ab).unwrap(), std::fs::read(&ba).unwrap());
+        // The merged store answers lookups.
+        let db = TuneDb::open(&ab);
+        assert_eq!(db.len(), 3);
+        assert!(db.exact("sobel", K40.name, (64, 64)).is_some());
+        assert!(db.exact("conv2d", INTEL_I7.name, (128, 128)).is_some());
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -1,35 +1,46 @@
-//! Persistence for the tuning knowledge base: an append-only TSV of
-//! [`TuneRecord`]s plus the legacy PR-1 warm-start TSV reader.
+//! Persistence for the tuning knowledge base: a checksummed append-only
+//! journal of [`TuneRecord`]s plus the legacy PR-1 warm-start TSV reader.
 //!
-//! Unlike the PR-1 `TunedStore` (which kept only the winner per key and
-//! rewrote its whole file on every insert), the knowledge base is
-//! append-only: every tuning outcome — winners *and* sampled search
-//! history — is one immutable line, so concurrent servers can share a
-//! file and a crashed write loses at most its own line. Format
-//! (tab-separated, `#` comments):
+//! ## Journal format (v2)
 //!
 //! ```text
-//! # kernel  device  dev_fp  grid_w  grid_h  seconds  best  config  features
-//! sepconv_row  K40  a3f09c11d2e47b65  2048  2048  1.23e-4  1  wg=64x4 px=4x1 map=interleaved cmem=f  6,2,2,0,...
+//! #! imagecl-tunedb v2 epoch=9f41c2b07a3d5e68
+//! # seq  crc  kernel  device  dev_fp  grid_w  grid_h  seconds  best  config  features  src  kfeat
+//! 17  a3b1c9d2  sepconv_row  K40  a3f09c11d2e47b65  2048  2048  1.23e-4  1  wg=64x4 ...  6,2,2,...  wall  4e0,0e0,1.5e0
 //! ```
 //!
-//! `config` reuses [`TuningConfig`]'s display/parse round-trip; `features`
-//! is the comma-joined [`crate::tuner::FeatureMap`] encoding of the
-//! config, stored inline so model training never needs to re-analyze the
-//! kernel. `dev_fp` fingerprints the device spec the record was measured
-//! against — records whose fingerprint no longer matches the current
-//! spec are dropped on load (the knowledge is stale). The trailing `src`
-//! column distinguishes simulator estimates (`sim`) from real-execution
-//! wall-clock measurements (`wall`, fed back by the serving workers);
-//! nine-column files from before the column exist parse as `sim`.
+//! Every record line is framed `seq <TAB> crc32 <TAB> payload`: `seq` is
+//! a store-assigned monotone sequence number and `crc32` (IEEE, 8 hex
+//! digits) covers `"{seq}\t{payload}"` — so a torn append, a flipped
+//! byte, or a splice *anywhere* in the file is detected on load and the
+//! damaged line quarantined, not just a truncated tail. The `#!` epoch
+//! header fingerprints the snapshot content at the last full write
+//! (compaction / merge); plain appends extend it.
+//!
+//! The payload keeps the v1 TSV columns — `config` reuses
+//! [`TuningConfig`]'s display/parse round-trip, `features` is the
+//! comma-joined [`crate::tuner::FeatureMap`] encoding, `dev_fp`
+//! fingerprints the device spec (stale records drop on load), `src` is
+//! `sim` or `wall` — plus the v2 `kfeat` column: three comma-joined
+//! *static kernel* features (stencil extent in x and y, arithmetic
+//! intensity) that let a brand-new kernel's cold start be seeded from
+//! records of similar kernels. Unframed v1 lines (9 or 10 payload
+//! columns, no seq/crc) still parse, with `seq = 0` and zero `kfeat`.
+//!
+//! Appends are fsynced ([`append`] reports sync failures for the
+//! `imagecl_tunedb_fsync_failures_total` counter) and full rewrites go
+//! through [`crate::fsutil::write_atomic`] (temp + fsync + rename), so a
+//! kill at any byte offset loses at most the last un-synced append.
 
+use std::collections::HashMap;
 use std::path::Path;
 
 use crate::devices::{self, DeviceSpec};
+use crate::serve::faults::FaultInjector;
 use crate::transform::TuningConfig;
 
 /// One tuning outcome in the knowledge base.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct TuneRecord {
     pub kernel: String,
     pub device: &'static str,
@@ -48,28 +59,75 @@ pub struct TuneRecord {
     pub config: TuningConfig,
     /// Config feature vector in the kernel's `FeatureMap` layout.
     pub features: Vec<f64>,
+    /// Journal sequence number (store-assigned, monotone per store;
+    /// 0 = not yet journaled / legacy line). Replica merge resolution
+    /// prefers higher sequence numbers.
+    pub seq: u64,
+    /// Static kernel features — stencil extent in x, stencil extent in
+    /// y, arithmetic intensity (weighted ops per memory access) — for
+    /// seeding new kernels from similar ones. All-zero = not stamped.
+    pub kfeat: [f64; 3],
+}
+
+/// Identity excludes the journal metadata: `seq` is assigned by whichever
+/// store holds the record and `kfeat` is derived from the kernel source,
+/// so neither distinguishes two measurements of the same outcome.
+impl PartialEq for TuneRecord {
+    fn eq(&self, other: &Self) -> bool {
+        self.kernel == other.kernel
+            && self.device == other.device
+            && self.dev_fp == other.dev_fp
+            && self.grid == other.grid
+            && self.seconds == other.seconds
+            && self.best == other.best
+            && self.wall == other.wall
+            && self.config == other.config
+            && self.features == other.features
+    }
 }
 
 /// Stable fingerprint of a device spec (FNV-1a over its debug encoding,
 /// which covers every behavioural coefficient). Records are only trusted
 /// when the spec they were measured on still matches.
 pub fn device_fingerprint(dev: &DeviceSpec) -> u64 {
+    fnv1a(format!("{dev:?}").as_bytes())
+}
+
+/// FNV-1a over bytes (also the store-epoch content fingerprint).
+fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
-    for b in format!("{dev:?}").bytes() {
+    for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
     h
 }
 
-pub const HEADER: &str =
-    "# kernel\tdevice\tdev_fp\tgrid_w\tgrid_h\tseconds\tbest\tconfig\tfeatures\tsrc\n";
+/// CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320) — the per-record
+/// checksum. Hand-rolled bitwise; record lines are short and loads are
+/// one pass, so table-free is fast enough.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
 
-/// Render one record as its TSV line (no trailing newline).
-pub fn render_line(r: &TuneRecord) -> String {
+const EPOCH_PREFIX: &str = "#! imagecl-tunedb v2 epoch=";
+
+pub const HEADER: &str = "# seq\tcrc\tkernel\tdevice\tdev_fp\tgrid_w\tgrid_h\tseconds\tbest\tconfig\tfeatures\tsrc\tkfeat\n";
+
+/// The record payload (everything the CRC protects besides the seq).
+fn render_payload(r: &TuneRecord) -> String {
     let feats: Vec<String> = r.features.iter().map(|v| format!("{v:e}")).collect();
+    let kfeat: Vec<String> = r.kfeat.iter().map(|v| format!("{v:e}")).collect();
     format!(
-        "{}\t{}\t{:016x}\t{}\t{}\t{:e}\t{}\t{}\t{}\t{}",
+        "{}\t{}\t{:016x}\t{}\t{}\t{:e}\t{}\t{}\t{}\t{}\t{}",
         r.kernel,
         r.device,
         r.dev_fp,
@@ -79,102 +137,219 @@ pub fn render_line(r: &TuneRecord) -> String {
         if r.best { 1 } else { 0 },
         r.config,
         feats.join(","),
-        if r.wall { "wall" } else { "sim" }
+        if r.wall { "wall" } else { "sim" },
+        kfeat.join(","),
     )
 }
 
-/// Parse one TSV line. `None` = malformed or no longer applicable
-/// (unknown device, stale fingerprint). Nine columns (pre-`src` files)
-/// parse as simulator records.
-pub(crate) fn parse_line(line: &str) -> Option<TuneRecord> {
-    let cols: Vec<&str> = line.split('\t').collect();
-    if cols.len() != 9 && cols.len() != 10 {
-        return None;
+/// Render one record as its framed journal line (no trailing newline):
+/// `seq <TAB> crc32 <TAB> payload`.
+pub fn render_line(r: &TuneRecord) -> String {
+    let payload = render_payload(r);
+    let crc = crc32(format!("{}\t{payload}", r.seq).as_bytes());
+    format!("{}\t{crc:08x}\t{payload}", r.seq)
+}
+
+/// A structurally damaged journal line (torn append, flipped bytes):
+/// the CRC does not match, or an unframed line has no recognizable
+/// column shape. Distinct from *stale* lines, whose bytes are intact
+/// but whose content no longer applies (unknown device, changed spec).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct CorruptLine;
+
+/// Parse the payload columns (without seq/crc framing). `Ok(None)` =
+/// intact but no longer applicable. Accepts 9 (pre-`src`), 10 (pre-
+/// `kfeat`) and 11 (current) columns.
+fn parse_payload(cols: &[&str]) -> Result<Option<TuneRecord>, CorruptLine> {
+    if !(9..=11).contains(&cols.len()) {
+        return Err(CorruptLine);
     }
-    let dev = devices::by_name(cols[1])?;
-    let dev_fp = u64::from_str_radix(cols[2], 16).ok()?;
+    let stale = || Ok(None);
+    let Some(dev) = devices::by_name(cols[1]) else {
+        return stale();
+    };
+    let Ok(dev_fp) = u64::from_str_radix(cols[2], 16) else {
+        return stale();
+    };
     if dev_fp != device_fingerprint(dev) {
-        return None;
+        return stale();
     }
-    let features = if cols[8].is_empty() {
-        Vec::new()
-    } else {
-        cols[8]
-            .split(',')
-            .map(|v| v.parse::<f64>())
-            .collect::<Result<Vec<f64>, _>>()
-            .ok()?
+    let parse_f64_list = |s: &str| -> Option<Vec<f64>> {
+        if s.is_empty() {
+            return Some(Vec::new());
+        }
+        s.split(',').map(|v| v.parse::<f64>().ok()).collect()
+    };
+    let Some(features) = parse_f64_list(cols[8]) else {
+        return stale();
     };
     let wall = match cols.get(9) {
         None | Some(&"sim") => false,
         Some(&"wall") => true,
-        _ => return None,
+        _ => return stale(),
     };
-    Some(TuneRecord {
-        kernel: cols[0].to_string(),
-        device: dev.name,
-        dev_fp,
-        grid: (cols[3].parse().ok()?, cols[4].parse().ok()?),
-        seconds: cols[5].parse().ok()?,
-        best: match cols[6] {
-            "1" => true,
-            "0" => false,
-            _ => return None,
-        },
-        wall,
-        config: TuningConfig::parse(cols[7]).ok()?,
-        features,
-    })
+    let mut kfeat = [0.0; 3];
+    if let Some(kf) = cols.get(10) {
+        match parse_f64_list(kf) {
+            Some(v) if v.len() == 3 => kfeat.copy_from_slice(&v),
+            _ => return stale(),
+        }
+    }
+    let parsed = (|| {
+        Some(TuneRecord {
+            kernel: cols[0].to_string(),
+            device: dev.name,
+            dev_fp,
+            grid: (cols[3].parse().ok()?, cols[4].parse().ok()?),
+            seconds: cols[5].parse().ok()?,
+            best: match cols[6] {
+                "1" => true,
+                "0" => false,
+                _ => return None,
+            },
+            wall,
+            config: TuningConfig::parse(cols[7]).ok()?,
+            features,
+            seq: 0,
+            kfeat,
+        })
+    })();
+    Ok(parsed)
 }
 
-/// Parse a whole store file, warning on (and skipping) unusable lines —
-/// including a truncated trailing record from a crashed append. Returns
-/// the records plus the skipped-line count (crash-safety telemetry:
-/// `imagecl_tunedb_skipped_lines_total`).
-pub(crate) fn parse_file(text: &str) -> (Vec<TuneRecord>, usize) {
-    let mut out = Vec::new();
-    let mut skipped = 0;
+/// Parse one journal line: a framed `seq\tcrc\tpayload` record (CRC
+/// verified) or an unframed legacy v1 line (`seq = 0`). `Ok(None)` =
+/// intact but stale; `Err(CorruptLine)` = torn/corrupt bytes.
+pub(crate) fn parse_line(line: &str) -> Result<Option<TuneRecord>, CorruptLine> {
+    let cols: Vec<&str> = line.split('\t').collect();
+    let framed = cols.len() >= 3
+        && !cols[0].is_empty()
+        && cols[0].bytes().all(|b| b.is_ascii_digit())
+        && cols[1].len() == 8
+        && cols[1].bytes().all(|b| b.is_ascii_hexdigit());
+    if framed {
+        let seq: u64 = cols[0].parse().map_err(|_| CorruptLine)?;
+        let want = u32::from_str_radix(cols[1], 16).map_err(|_| CorruptLine)?;
+        // The payload is everything after the second tab, verbatim.
+        let payload = &line[cols[0].len() + 1 + cols[1].len() + 1..];
+        if crc32(format!("{seq}\t{payload}").as_bytes()) != want {
+            return Err(CorruptLine);
+        }
+        return Ok(parse_payload(&cols[2..]).unwrap_or(None).map(|mut r| {
+            r.seq = seq;
+            r
+        }));
+    }
+    parse_payload(&cols)
+}
+
+/// Everything a store load learns about the file.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// Intact, applicable records, in file order.
+    pub records: Vec<TuneRecord>,
+    /// Torn/corrupt lines: (1-based line number, raw text). These are
+    /// *damage* — a crashed append, flipped bits — as opposed to stale.
+    pub quarantined: Vec<(usize, String)>,
+    /// Intact lines dropped as no longer applicable (unknown device,
+    /// stale device fingerprint).
+    pub stale: usize,
+    /// The `#!` epoch header's content fingerprint, when present.
+    pub epoch: Option<u64>,
+    /// Highest sequence number seen (0 = none / legacy file).
+    pub max_seq: u64,
+}
+
+/// Parse a whole store file, classifying every line: record, stale (both
+/// silently usable outcomes) or quarantined damage. Never fails — a
+/// store with damage anywhere still yields every intact record.
+pub fn parse_file(text: &str) -> LoadReport {
+    let mut report = LoadReport::default();
     for (lno, line) in text.lines().enumerate() {
         let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(EPOCH_PREFIX) {
+            match u64::from_str_radix(rest.trim(), 16) {
+                Ok(e) if rest.trim().len() == 16 => report.epoch = Some(e),
+                _ => report.quarantined.push((lno + 1, line.to_string())),
+            }
+            continue;
+        }
+        if let Some(bang) = line.strip_prefix("#!") {
+            // A directive line we don't recognize — most likely a torn
+            // epoch header from a crash during file creation.
+            let _ = bang;
+            report.quarantined.push((lno + 1, line.to_string()));
+            continue;
+        }
+        if line.starts_with('#') {
             continue;
         }
         match parse_line(line) {
-            Some(r) => out.push(r),
-            None => {
-                skipped += 1;
+            Ok(Some(rec)) => {
+                report.max_seq = report.max_seq.max(rec.seq);
+                report.records.push(rec);
+            }
+            Ok(None) => report.stale += 1,
+            Err(CorruptLine) => {
+                report.quarantined.push((lno + 1, line.to_string()));
                 eprintln!(
-                    "warning: skipping unusable tunedb line {}: {line:?}",
+                    "warning: quarantining corrupt tunedb line {}: {line:?}",
                     lno + 1
                 );
             }
         }
     }
-    (out, skipped)
+    report
 }
 
-/// The one serialization path for store writes: records rendered to
-/// their TSV block, optionally headed. Both [`append`] (header only on a
-/// fresh file) and [`rewrite`] (always headed) go through here, so the
-/// on-disk format cannot drift between the two write sites.
-fn render_block(records: &[TuneRecord], with_header: bool) -> String {
+/// Content epoch: FNV-1a over the rendered payloads. Deterministic for a
+/// given record set, so replicas that converge to the same merged
+/// content converge to the same epoch (and byte-identical files).
+fn epoch_of(records: &[TuneRecord]) -> u64 {
     let mut buf = String::new();
-    if with_header {
-        buf.push_str(HEADER);
-    }
     for r in records {
-        buf.push_str(&render_line(r));
+        buf.push_str(&render_payload(r));
         buf.push('\n');
     }
-    buf
+    fnv1a(buf.as_bytes())
 }
 
-/// Append `records` to the store file (creating it, with header, on first
-/// write). Best effort: serving continues even if the disk write fails.
-pub(crate) fn append(path: &Path, records: &[TuneRecord]) {
+fn file_head(records: &[TuneRecord]) -> String {
+    format!("{EPOCH_PREFIX}{:016x}\n{HEADER}", epoch_of(records))
+}
+
+/// What one [`append`] actually did (counter food for
+/// `imagecl_tunedb_fsync_failures_total` and the fault sites).
+#[derive(Debug, Default, Clone, Copy)]
+pub(crate) struct AppendReport {
+    /// Bytes reached the file (possibly torn/corrupt under injection).
+    pub wrote: bool,
+    /// `fsync` after the write failed (data may not survive a crash).
+    pub sync_failed: bool,
+    /// Injected `tunedb_torn` fault truncated this append mid-record.
+    pub torn: bool,
+    /// Injected `tunedb_corrupt` fault flipped a byte in this append.
+    pub corrupt: bool,
+}
+
+/// Append `records` to the journal (creating it, with epoch header, on
+/// first write), then fsync. Best effort: serving continues even if the
+/// disk write fails, but the report says what happened. The injector's
+/// `tunedb_torn`/`tunedb_corrupt` sites damage the append at the byte
+/// level — exactly what a mid-write crash or bit rot produces — to prove
+/// the load path quarantines it.
+pub(crate) fn append(
+    path: &Path,
+    records: &[TuneRecord],
+    faults: &FaultInjector,
+) -> AppendReport {
     use std::io::Write as _;
+    let mut report = AppendReport::default();
     if records.is_empty() {
-        return;
+        return report;
     }
     if let Some(dir) = path.parent() {
         let _ = std::fs::create_dir_all(dir);
@@ -183,30 +358,106 @@ pub(crate) fn append(path: &Path, records: &[TuneRecord]) {
     let file = std::fs::OpenOptions::new().create(true).append(true).open(path);
     match file {
         Ok(mut f) => {
-            let buf = render_block(records, fresh);
-            if let Err(e) = f.write_all(buf.as_bytes()) {
+            let mut buf = String::new();
+            if fresh {
+                buf.push_str(&file_head(records));
+            }
+            let body_start = buf.len();
+            for r in records {
+                buf.push_str(&render_line(r));
+                buf.push('\n');
+            }
+            let mut bytes = buf.into_bytes();
+            if faults.tunedb_corrupt() {
+                // Flip one bit mid-way through the appended body.
+                let at = body_start + (bytes.len() - body_start) / 2;
+                bytes[at] ^= 0x01;
+                report.corrupt = true;
+            }
+            if faults.tunedb_torn() {
+                // Truncate the append mid-record: drop the second half
+                // of the final line (newline included).
+                let keep = body_start + (bytes.len() - body_start) / 2;
+                bytes.truncate(keep.max(body_start + 1));
+                report.torn = true;
+            }
+            if let Err(e) = f.write_all(&bytes) {
                 eprintln!("warning: cannot append to tunedb {path:?}: {e}");
+                return report;
+            }
+            report.wrote = true;
+            if let Err(e) = f.sync_all() {
+                report.sync_failed = true;
+                eprintln!("warning: cannot fsync tunedb {path:?}: {e}");
             }
         }
         Err(e) => eprintln!("warning: cannot open tunedb {path:?}: {e}"),
     }
+    report
 }
 
-/// Rewrite the whole store file (compaction). Written to a sibling temp
-/// file and renamed into place so a crash mid-rewrite never truncates
-/// the store. Best effort, like [`append`] — and sharing its
-/// serialization path ([`render_block`]).
-pub(crate) fn rewrite(path: &Path, records: &[TuneRecord]) {
-    let buf = render_block(records, true);
-    if let Some(dir) = path.parent() {
-        let _ = std::fs::create_dir_all(dir);
+/// Rewrite the whole store (snapshot compaction / fsck repair / merge):
+/// fresh epoch header + every record, written atomically (temp file,
+/// fsync, rename) so a crash at any byte offset leaves either the old
+/// complete store or the new one.
+pub(crate) fn rewrite(path: &Path, records: &[TuneRecord]) -> std::io::Result<()> {
+    let mut buf = file_head(records);
+    for r in records {
+        buf.push_str(&render_line(r));
+        buf.push('\n');
     }
-    let tmp = path.with_extension("tsv.tmp");
-    if let Err(e) =
-        std::fs::write(&tmp, &buf).and_then(|()| std::fs::rename(&tmp, path))
-    {
-        eprintln!("warning: cannot rewrite tunedb {path:?}: {e}");
+    crate::fsutil::write_atomic(path, buf.as_bytes())
+}
+
+/// Conflict-free merge of record sets from concurrent replica stores.
+///
+/// Keyed on (kernel, dev_fp, grid, config): the same measured outcome
+/// appearing in several stores collapses to one record, chosen by a
+/// total order — prefer real `wall` measurements over `sim` estimates,
+/// then the higher sequence number (the more recent journal entry), then
+/// the lexicographically greater payload. Selection under a total order
+/// makes the merge idempotent, commutative and associative (the fuzz
+/// test in `tests/durability.rs` exercises all three).
+///
+/// Output is deterministically ordered — by key, history before winners,
+/// winners in descending-seconds order so the *fastest* winner lands
+/// last (which is what [`crate::tunedb::TuneDb::exact`] answers with) —
+/// and renumbered `seq = 1..n`.
+pub fn merge_records(sets: Vec<Vec<TuneRecord>>) -> Vec<TuneRecord> {
+    type Key = (String, u64, (usize, usize), String);
+    let mut by_key: HashMap<Key, TuneRecord> = HashMap::new();
+    for rec in sets.into_iter().flatten() {
+        let key = (rec.kernel.clone(), rec.dev_fp, rec.grid, rec.config.to_string());
+        match by_key.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                if merge_wins(&rec, e.get()) {
+                    e.insert(rec);
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(rec);
+            }
+        }
     }
+    let mut out: Vec<TuneRecord> = by_key.into_values().collect();
+    out.sort_by(|a, b| {
+        (a.kernel.as_str(), a.device, a.grid, a.best)
+            .cmp(&(b.kernel.as_str(), b.device, b.grid, b.best))
+            .then(b.seconds.total_cmp(&a.seconds))
+            .then_with(|| render_payload(a).cmp(&render_payload(b)))
+    });
+    for (i, r) in out.iter_mut().enumerate() {
+        r.seq = (i + 1) as u64;
+    }
+    out
+}
+
+/// Whether `a` replaces `b` under the merge's total order.
+fn merge_wins(a: &TuneRecord, b: &TuneRecord) -> bool {
+    (a.wall, a.seq)
+        .cmp(&(b.wall, b.seq))
+        .then_with(|| render_payload(a).cmp(&render_payload(b)))
+        .is_gt()
 }
 
 /// Parse the legacy PR-1 warm-start TSV (`kernel device grid_w grid_h
@@ -238,6 +489,8 @@ pub(crate) fn parse_legacy_tsv(text: &str) -> Vec<TuneRecord> {
             wall: false,
             config,
             features: Vec::new(),
+            seq: 0,
+            kfeat: [0.0; 3],
         });
     }
     out
@@ -263,15 +516,43 @@ mod tests {
             wall: false,
             config,
             features: vec![6.0, 2.0, 2.0, 0.0, 0.5],
+            seq: 0,
+            kfeat: [0.0; 3],
         }
     }
 
     #[test]
     fn line_roundtrip() {
         for best in [true, false] {
-            let r = record(best);
+            let r = TuneRecord { seq: 42, kfeat: [2.0, 2.0, 1.5], ..record(best) };
             let line = render_line(&r);
-            assert_eq!(parse_line(&line), Some(r), "{line}");
+            let parsed = parse_line(&line).unwrap().unwrap();
+            assert_eq!(parsed, r, "{line}");
+            // PartialEq excludes the journal metadata — check it raw.
+            assert_eq!(parsed.seq, 42, "{line}");
+            assert_eq!(parsed.kfeat, [2.0, 2.0, 1.5], "{line}");
+        }
+    }
+
+    #[test]
+    fn crc_catches_any_single_byte_flip() {
+        let r = TuneRecord { seq: 7, ..record(true) };
+        let line = render_line(&r);
+        let bytes = line.as_bytes();
+        for i in 0..bytes.len() {
+            let mut damaged = bytes.to_vec();
+            damaged[i] ^= 0x01;
+            let Ok(s) = std::str::from_utf8(&damaged) else { continue };
+            if s.contains('\t') {
+                // Still tab-structured: must be rejected as corrupt (or,
+                // if the flip broke the framing shape entirely, at least
+                // never parse into a record).
+                assert_ne!(
+                    parse_line(s).ok().flatten().as_ref(),
+                    Some(&r),
+                    "flip at {i} silently accepted: {s:?}"
+                );
+            }
         }
     }
 
@@ -279,13 +560,22 @@ mod tests {
     fn wall_flag_roundtrips_and_legacy_lines_parse_as_sim() {
         let r = TuneRecord { wall: true, best: false, ..record(false) };
         let line = render_line(&r);
-        assert!(line.ends_with("\twall"), "{line}");
-        assert_eq!(parse_line(&line), Some(r));
-        // A pre-`src` nine-column line (strip the trailing column) is a
-        // simulator record.
-        let nine = render_line(&record(true));
-        let nine = nine.rsplit_once('\t').unwrap().0;
-        let parsed = parse_line(nine).unwrap();
+        assert!(line.contains("\twall\t"), "{line}");
+        assert_eq!(parse_line(&line).unwrap(), Some(r));
+        // An unframed v1 ten-column payload (no seq/crc/kfeat) parses as
+        // a legacy record with seq 0.
+        let v1 = {
+            let full = render_line(&record(true));
+            let payload = full.splitn(3, '\t').nth(2).unwrap().to_string();
+            payload.rsplit_once('\t').unwrap().0.to_string()
+        };
+        let parsed = parse_line(&v1).unwrap().unwrap();
+        assert!(!parsed.wall);
+        assert_eq!(parsed.seq, 0);
+        assert_eq!(parsed, record(true));
+        // And the nine-column pre-`src` shape still parses as sim.
+        let v0 = v1.rsplit_once('\t').unwrap().0;
+        let parsed = parse_line(v0).unwrap().unwrap();
         assert!(!parsed.wall);
         assert_eq!(parsed, record(true));
     }
@@ -293,7 +583,7 @@ mod tests {
     #[test]
     fn empty_features_roundtrip() {
         let r = TuneRecord { features: Vec::new(), ..record(true) };
-        assert_eq!(parse_line(&render_line(&r)), Some(r));
+        assert_eq!(parse_line(&render_line(&r)).unwrap(), Some(r));
     }
 
     #[test]
@@ -303,48 +593,71 @@ mod tests {
             dev_fp: device_fingerprint(&INTEL_I7),
             ..record(true)
         };
-        assert_eq!(parse_line(&render_line(&r)), Some(r));
+        assert_eq!(parse_line(&render_line(&r)).unwrap(), Some(r));
     }
 
     #[test]
-    fn stale_fingerprint_dropped() {
+    fn stale_fingerprint_dropped_as_stale_not_corrupt() {
         let r = TuneRecord { dev_fp: 0xDEAD, ..record(true) };
-        assert_eq!(parse_line(&render_line(&r)), None);
+        // The line is intact (CRC valid) but inapplicable.
+        assert_eq!(parse_line(&render_line(&r)), Ok(None));
+        let report = parse_file(&format!("{}\n", render_line(&r)));
+        assert!(report.records.is_empty());
+        assert_eq!(report.stale, 1);
+        assert!(report.quarantined.is_empty());
     }
 
     #[test]
-    fn malformed_lines_skipped() {
+    fn malformed_lines_quarantined() {
         let good = render_line(&record(true));
         let text = format!("# header\n\nnot\tenough\tcols\n{good}\n");
-        let (parsed, skipped) = parse_file(&text);
-        assert_eq!(parsed.len(), 1);
-        assert_eq!(skipped, 1);
-        assert_eq!(parsed[0], record(true));
+        let report = parse_file(&text);
+        assert_eq!(report.records.len(), 1);
+        assert_eq!(report.quarantined.len(), 1);
+        assert_eq!(report.quarantined[0].0, 3);
+        assert_eq!(report.records[0], record(true));
     }
 
     #[test]
-    fn truncated_trailing_record_is_skipped_not_fatal() {
+    fn epoch_header_roundtrips_and_torn_header_is_quarantined() {
+        let recs = vec![record(true), record(false)];
+        let text = {
+            let mut buf = file_head(&recs);
+            for r in &recs {
+                buf.push_str(&render_line(r));
+                buf.push('\n');
+            }
+            buf
+        };
+        let report = parse_file(&text);
+        assert_eq!(report.epoch, Some(epoch_of(&recs)));
+        assert_eq!(report.records.len(), 2);
+        assert!(report.quarantined.is_empty());
+        // A truncated epoch header is damage, and is counted as such.
+        let torn = "#! imagecl-tunedb v2 epoch=9f41\n";
+        let report = parse_file(torn);
+        assert_eq!(report.epoch, None);
+        assert_eq!(report.quarantined.len(), 1);
+    }
+
+    #[test]
+    fn truncated_trailing_record_is_quarantined_not_fatal() {
         // A crash mid-append leaves a partial final line. Loading must
-        // keep every complete record and count exactly one skip —
-        // regardless of where the truncation lands.
-        let a = render_line(&record(true));
-        let b = render_line(&record(false));
+        // keep every complete record and quarantine exactly the damage —
+        // regardless of where the truncation lands. The CRC framing
+        // makes this exact: no cut point of a framed line can parse.
+        let a = render_line(&TuneRecord { seq: 1, ..record(true) });
+        let b = render_line(&TuneRecord { seq: 2, ..record(false) });
         for cut in 1..b.len() {
             let text = format!("{a}\n{}", &b[..cut]);
-            // Stay on a UTF-8 boundary (the record content is ASCII, but
-            // guard anyway).
             if !text.is_char_boundary(text.len()) {
                 continue;
             }
-            let (parsed, skipped) = parse_file(&text);
-            // The complete record always survives; the partial line is
-            // either skipped (counted) or — when the cut lands on a
-            // column boundary that happens to form a shorter valid
-            // record (TSV has no length prefix) — parsed. Never fatal,
-            // never corrupts the preceding record.
-            assert!(!parsed.is_empty(), "cut at {cut}");
-            assert_eq!(parsed[0], record(true), "cut at {cut}");
-            assert_eq!(parsed.len() + skipped, 2, "cut at {cut}");
+            let report = parse_file(&text);
+            assert_eq!(report.records.len(), 1, "cut at {cut}");
+            assert_eq!(report.records[0], record(true), "cut at {cut}");
+            assert_eq!(report.quarantined.len(), 1, "cut at {cut}");
+            assert_eq!(report.max_seq, 1, "cut at {cut}");
         }
     }
 
@@ -371,14 +684,71 @@ mod tests {
         let path = std::env::temp_dir()
             .join(format!("imagecl_tunedb_store_test_{}.tsv", std::process::id()));
         let _ = std::fs::remove_file(&path);
-        append(&path, &[record(true)]);
-        append(&path, &[record(false)]);
+        let quiet = FaultInjector::disabled();
+        let rep = append(&path, &[TuneRecord { seq: 1, ..record(true) }], &quiet);
+        assert!(rep.wrote && !rep.torn && !rep.corrupt);
+        append(&path, &[TuneRecord { seq: 2, ..record(false) }], &quiet);
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.starts_with("# kernel"), "{text}");
-        let (recs, skipped) = parse_file(&text);
-        assert_eq!(skipped, 0);
-        assert_eq!(recs.len(), 2);
-        assert!(recs[0].best && !recs[1].best);
+        assert!(text.starts_with(EPOCH_PREFIX), "{text}");
+        let report = parse_file(&text);
+        assert!(report.quarantined.is_empty());
+        assert_eq!(report.stale, 0);
+        assert_eq!(report.records.len(), 2);
+        assert!(report.records[0].best && !report.records[1].best);
+        assert_eq!(report.max_seq, 2);
+        assert!(report.epoch.is_some());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn rewrite_is_byte_deterministic() {
+        let path = std::env::temp_dir()
+            .join(format!("imagecl_tunedb_store_rw_{}.tsv", std::process::id()));
+        let recs = vec![
+            TuneRecord { seq: 3, ..record(true) },
+            TuneRecord { seq: 9, ..record(false) },
+        ];
+        rewrite(&path, &recs).unwrap();
+        let first = std::fs::read(&path).unwrap();
+        rewrite(&path, &recs).unwrap();
+        assert_eq!(first, std::fs::read(&path).unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merge_prefers_wall_then_seq_and_dedups() {
+        let sim = TuneRecord { seq: 5, seconds: 2e-4, ..record(false) };
+        let wall = TuneRecord { seq: 3, wall: true, seconds: 2e-4, ..record(false) };
+        let newer_sim = TuneRecord { seq: 9, seconds: 2e-4, ..record(false) };
+        // wall beats sim regardless of seq.
+        let merged = merge_records(vec![vec![sim.clone()], vec![wall.clone()]]);
+        assert_eq!(merged.len(), 1);
+        assert!(merged[0].wall);
+        // Same wall-ness: higher seq wins. (Same key: these share the
+        // identical config + seconds, so the survivor is whichever
+        // journal entry is newer.)
+        let merged = merge_records(vec![vec![sim.clone()], vec![newer_sim.clone()]]);
+        assert_eq!(merged.len(), 1);
+        // Different configs are different keys — both survive.
+        let mut other = record(false);
+        other.config.wg = [8, 8];
+        let merged = merge_records(vec![vec![sim.clone()], vec![other.clone()]]);
+        assert_eq!(merged.len(), 2);
+        // Output seqs are renumbered 1..n.
+        let seqs: Vec<u64> = merged.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![1, 2]);
+    }
+
+    #[test]
+    fn merge_orders_fastest_winner_last() {
+        let slow = TuneRecord { seconds: 5e-4, ..record(true) };
+        let mut fast = record(true);
+        fast.config.wg = [16, 16];
+        fast.seconds = 1e-4;
+        let merged = merge_records(vec![vec![slow], vec![fast]]);
+        assert_eq!(merged.len(), 2);
+        // Ascending index order ends at the fastest winner, which is the
+        // record `TuneDb::exact` (latest winner wins) will answer with.
+        assert_eq!(merged.last().unwrap().seconds, 1e-4);
     }
 }

@@ -42,6 +42,7 @@ fn service(exec: ExecMode, db: Option<std::path::PathBuf>) -> Arc<KernelService>
         plan_cache_cap: None,
         transfer_budget: 0,
         predict_budget: 0,
+        explore_eps: 0.0,
     })
 }
 
@@ -271,6 +272,77 @@ fn chaos_graceful_drain_mid_burst_loses_no_request() {
     assert!(outcomes
         .iter()
         .all(|o| !matches!(o, Ok(s) if *s != 0 && *s != STATUS_SHUTDOWN)));
+}
+
+/// PR 10 chaos: every store append is torn *and* byte-flipped (the
+/// worst mid-write kill), yet the server answers every request; a
+/// restart over the damaged store quarantines the damage, keeps every
+/// intact record, and `fsck --repair`'s snapshot rewrite converges the
+/// file to clean — zero accepted requests lost across the kill-restart.
+#[test]
+fn chaos_kill_restart_over_damaged_store_loses_no_request() {
+    let tsv = std::env::temp_dir()
+        .join(format!("imagecl_chaos_killrestart_{}.tsv", std::process::id()));
+    let side = imagecl::tunedb::quarantine_path(&tsv);
+    let _ = std::fs::remove_file(&tsv);
+    let _ = std::fs::remove_file(&side);
+
+    // Generation 1: serve for real while every journal append is
+    // damaged at the byte level.
+    let svc = service(ExecMode::Real, Some(tsv.clone()));
+    svc.set_faults(FaultInjector::new(
+        FaultSpec::parse("tunedb_torn=1.0,tunedb_corrupt=1.0,seed=11").unwrap(),
+    ));
+    let srv = server(svc.clone(), 2, 4);
+    let addr = srv.addr().to_string();
+    let mut client = NetClient::new(&addr, 1);
+    for seed in 0..6u64 {
+        for kernel in ["sobel", "sepconv_row"] {
+            let reply = client.submit(&SubmitSpec::new(kernel, GRID, seed)).unwrap();
+            assert!(reply.is_ok(), "{kernel}/{seed}: {}", reply.code());
+        }
+    }
+    // The journal damage actually landed (tuning outcomes + wall
+    // samples were appended, each one torn/corrupted).
+    let (torn, corrupt) = svc.faults().injected_tunedb_damage();
+    assert!(torn > 0 && corrupt > 0, "no journal damage injected — vacuous run");
+    // The legacy 3-site view is unaffected by the new sites.
+    assert_eq!(svc.faults().injected(), (0, 0, 0));
+    srv.shutdown();
+    drop(svc);
+
+    // The "kill": the process is gone, the store carries real byte
+    // damage. Recovery must quarantine — not refuse, not silently drop
+    // everything.
+    let report = imagecl::tunedb::fsck(&tsv).unwrap();
+    assert!(!report.clean(), "torn appends must be visible to fsck");
+    assert!(report.records > 0, "intact records must survive the damage");
+    let intact = report.records;
+
+    // Repair converges the store, stashing damage in the sidecar.
+    let repaired = imagecl::tunedb::fsck_repair(&tsv).unwrap();
+    assert_eq!(repaired.quarantined.len(), report.quarantined.len());
+    let after = imagecl::tunedb::fsck(&tsv).unwrap();
+    assert!(after.clean());
+    assert_eq!(after.records, intact);
+    assert!(side.exists(), "quarantined lines are stashed, not destroyed");
+
+    // Generation 2 over the same store dir: loads clean, serves again —
+    // the restart lost no accepted request and no intact knowledge.
+    let svc2 = service(ExecMode::Real, Some(tsv.clone()));
+    assert_eq!(
+        svc2.db().obs.fsck_quarantined.load(std::sync::atomic::Ordering::Relaxed),
+        0,
+        "repaired store must load without quarantines"
+    );
+    let srv2 = server(svc2.clone(), 1, 2);
+    let mut client2 = NetClient::new(&srv2.addr().to_string(), 2);
+    let reply = client2.submit(&SubmitSpec::new("sobel", GRID, 99)).unwrap();
+    assert!(reply.is_ok(), "{}", reply.code());
+    srv2.shutdown();
+
+    let _ = std::fs::remove_file(&tsv);
+    let _ = std::fs::remove_file(&side);
 }
 
 /// Remote serving stays in the same latency class as in-process serving

@@ -1,0 +1,295 @@
+//! Durability acceptance (PR 10): the crash-consistency and replica-merge
+//! guarantees of the checksummed tunedb journal, proven the blunt way —
+//! kill the file at *every* byte offset, merge replicas in every order —
+//! plus the warm-restart serving contract (a drained server's checkpoint
+//! lets its successor answer its first request from a cached plan).
+
+use std::path::PathBuf;
+
+use imagecl::devices::{DeviceSpec, ALL_DEVICES, INTEL_I7, K40};
+use imagecl::serve::{ExecMode, KernelService, ServiceConfig, TuneSource};
+use imagecl::testutil::Rng;
+use imagecl::transform::TuningConfig;
+use imagecl::tunedb::{
+    device_fingerprint, fsck, fsck_repair, merge_files, merge_records, quarantine_path, TuneDb,
+    TuneRecord,
+};
+use imagecl::tuner::Strategy;
+
+/// Fresh per-test scratch directory (tests run concurrently in one
+/// process, and some leave sidecar files beside the store).
+fn scratch(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir()
+        .join(format!("imagecl_durability_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    std::fs::create_dir_all(&p).unwrap();
+    p
+}
+
+fn rec(
+    kernel: &str,
+    dev: &'static DeviceSpec,
+    n: usize,
+    secs: f64,
+    best: bool,
+    wall: bool,
+) -> TuneRecord {
+    let mut config = TuningConfig::default();
+    config.wg = [32, 4];
+    TuneRecord {
+        kernel: kernel.to_string(),
+        device: dev.name,
+        dev_fp: device_fingerprint(dev),
+        grid: (n, n),
+        seconds: secs,
+        best,
+        wall,
+        config,
+        features: vec![3.0, 1.0],
+        seq: 0,
+        kfeat: [0.0; 3],
+    }
+}
+
+/// The headline crash-consistency property: truncate the journal at
+/// *every* byte offset (a kill can land anywhere) and at each offset the
+/// load must keep exactly the records whose lines are intact, quarantine
+/// exactly the torn fragment, never error, and repair back to a clean
+/// store. "Loses at most the last un-synced append", proven exhaustively.
+#[test]
+fn kill_at_every_byte_offset_loses_at_most_the_torn_tail() {
+    let dir = scratch("kill");
+    let store = dir.join("store.tsv");
+    {
+        let db = TuneDb::open(&store);
+        db.record(rec("sobel", &K40, 64, 1e-4, true, false));
+        db.record(rec("sobel", &K40, 128, 2e-4, true, false));
+        db.record(rec("sepconv_row", &INTEL_I7, 64, 3e-4, false, true));
+        db.record(rec("conv2d", &INTEL_I7, 256, 4e-4, true, false));
+    }
+    let full = std::fs::read_to_string(&store).unwrap();
+    assert!(full.ends_with('\n'));
+
+    // Per-line byte spans [start, end) (end includes the newline).
+    let mut spans: Vec<(usize, usize, String)> = Vec::new();
+    let mut start = 0usize;
+    for line in full.split_inclusive('\n') {
+        let text = line.trim_end_matches('\n').to_string();
+        spans.push((start, start + line.len(), text));
+        start += line.len();
+    }
+
+    let cut_path = dir.join("cut.tsv");
+    let side = quarantine_path(&cut_path);
+    for cut in 0..=full.len() {
+        std::fs::write(&cut_path, &full.as_bytes()[..cut]).unwrap();
+
+        // First-principles expectation: complete non-comment lines are
+        // records; a non-empty trailing fragment is quarantined unless it
+        // still reads as a plain comment (a torn `#!` directive is
+        // damage — it must not pass as an opaque comment).
+        let mut want_records = 0usize;
+        let mut want_quarantined = 0usize;
+        for (s, e, text) in &spans {
+            if cut >= *e {
+                if !text.is_empty() && !text.starts_with('#') {
+                    want_records += 1;
+                }
+            } else {
+                if cut > *s {
+                    let frag = &full[*s..cut];
+                    if frag == text {
+                        // Only the newline is missing — the line itself
+                        // is whole and parses (head lines stay head).
+                        if !text.starts_with('#') {
+                            want_records += 1;
+                        }
+                    } else {
+                        let comment = frag.starts_with('#') && !frag.starts_with("#!");
+                        if !comment {
+                            want_quarantined = 1;
+                        }
+                    }
+                }
+                break;
+            }
+        }
+
+        let report = fsck(&cut_path).unwrap();
+        assert_eq!(report.records, want_records, "cut at byte {cut}");
+        assert_eq!(
+            report.quarantined.len(),
+            want_quarantined,
+            "cut at byte {cut}: {:?}",
+            report.quarantined
+        );
+        assert_eq!(report.stale, 0, "cut at byte {cut}");
+
+        // The serving load path agrees and never refuses to start.
+        let db = TuneDb::open(&cut_path);
+        assert_eq!(db.len(), want_records, "cut at byte {cut}");
+
+        // Repair converges: damage moves to the sidecar, the rewritten
+        // store is clean and keeps every intact record.
+        let repaired = fsck_repair(&cut_path).unwrap();
+        assert_eq!(repaired.records, want_records, "cut at byte {cut}");
+        let after = fsck(&cut_path).unwrap();
+        assert!(after.clean(), "cut at byte {cut}: repair left damage");
+        assert_eq!(after.records, want_records, "cut at byte {cut}");
+    }
+    // Damaged fragments were stashed, not destroyed.
+    assert!(std::fs::read_to_string(&side).unwrap().contains("cut.tsv"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Merge fuzz: random replica record sets (overlapping keys, conflicting
+/// measurements, wall vs sim, duplicate outcomes) merged under every
+/// rotation of the input order produce *byte-identical* stores, re-merge
+/// is a no-op, and the pure resolution is order-independent. This is the
+/// CRDT claim behind `imagecl tunedb merge`: replicas can cross-pollinate
+/// in any topology and converge.
+#[test]
+fn merge_fuzz_shuffled_replica_orders_converge_to_identical_stores() {
+    let dir = scratch("fuzz");
+    let kernels = ["sobel", "sepconv_row", "conv2d", "harris"];
+    let grids = [16usize, 32, 64, 128];
+    let wgs = [[16usize, 4], [32, 8], [64, 4]];
+    for case in 0..6u64 {
+        let mut rng = Rng::new(0xD00D + case);
+
+        // Three replicas with deliberately colliding keys.
+        let mut replicas: Vec<Vec<TuneRecord>> = Vec::new();
+        for _ in 0..3 {
+            let n = 4 + rng.below(8);
+            let mut set = Vec::new();
+            for _ in 0..n {
+                let mut r = rec(
+                    rng.pick(&kernels),
+                    *rng.pick(&ALL_DEVICES),
+                    *rng.pick(&grids),
+                    1e-4 * (1 + rng.below(40)) as f64,
+                    rng.flip(),
+                    rng.flip(),
+                );
+                r.config.wg = *rng.pick(&wgs);
+                r.config.interleaved = rng.flip();
+                set.push(r);
+            }
+            replicas.push(set);
+        }
+
+        // Persist each replica through the journaling path (assigns
+        // real sequence numbers, stamps kernel features).
+        let paths: Vec<PathBuf> = replicas
+            .iter()
+            .enumerate()
+            .map(|(i, set)| {
+                let p = dir.join(format!("case{case}_replica{i}.tsv"));
+                let db = TuneDb::open(&p);
+                for r in set {
+                    db.record(r.clone());
+                }
+                p
+            })
+            .collect();
+
+        // Every rotation of the merge order → byte-identical output.
+        let orders = [[0usize, 1, 2], [2, 0, 1], [1, 2, 0]];
+        let mut outs = Vec::new();
+        for (oi, order) in orders.iter().enumerate() {
+            let dst = dir.join(format!("case{case}_merge{oi}.tsv"));
+            let srcs: Vec<PathBuf> = order.iter().map(|&i| paths[i].clone()).collect();
+            let stats = merge_files(&dst, &srcs).unwrap();
+            assert_eq!(stats.inputs, 3, "case {case}");
+            assert_eq!(stats.quarantined, 0, "case {case}");
+            assert!(stats.merged <= stats.records_in, "case {case}");
+            outs.push(std::fs::read(&dst).unwrap());
+        }
+        assert_eq!(outs[0], outs[1], "case {case}: merge order changed the store");
+        assert_eq!(outs[0], outs[2], "case {case}: merge order changed the store");
+
+        // Idempotence: merging the same replicas into an already-merged
+        // destination changes nothing.
+        let dst = dir.join(format!("case{case}_merge0.tsv"));
+        merge_files(&dst, &paths).unwrap();
+        assert_eq!(std::fs::read(&dst).unwrap(), outs[0], "case {case}: re-merge was not a no-op");
+
+        // The pure resolution commutes over input-set order too.
+        let fwd = merge_records(replicas.clone());
+        let rev = merge_records(replicas.iter().rev().cloned().collect());
+        assert_eq!(fwd, rev, "case {case}: merge_records is order-dependent");
+
+        // The merged store parses back clean, record for record.
+        let text = std::fs::read_to_string(&dst).unwrap();
+        let loaded = imagecl::tunedb::store::parse_file(&text);
+        assert!(loaded.quarantined.is_empty(), "case {case}");
+        assert_eq!(loaded.stale, 0, "case {case}");
+        assert_eq!(loaded.records.len(), fwd.len(), "case {case}");
+        assert!(loaded.epoch.is_some(), "case {case}: merged store lost its epoch");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The warm-restart serving contract end-to-end: a drained service
+/// checkpoints its plan-cache index beside the store; a successor
+/// restores it, rebuilding every hot plan from the durable db with zero
+/// tuning searches, so its first request is a plan-cache hit on a
+/// warm-started entry.
+#[test]
+fn warm_restart_answers_first_request_from_a_cached_plan() {
+    let dir = scratch("warm");
+    let db_path = dir.join("db.tsv");
+    let config = || ServiceConfig {
+        strategy: Strategy::Random { evals: 30, seed: 11 },
+        db_path: Some(db_path.clone()),
+        legacy_tsv: None,
+        exec: ExecMode::Simulate,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+        explore_eps: 0.0,
+    };
+
+    // Generation 1: tune two keys, checkpoint on drain.
+    let first = KernelService::new(config());
+    first.plan("sobel", &K40, (32, 32)).unwrap();
+    first.plan("sepconv_row", &INTEL_I7, (64, 64)).unwrap();
+    assert_eq!(first.stats().tunes, 2);
+    assert_eq!(first.write_checkpoint(None), Some(2));
+    assert!(first.checkpoint_path().unwrap().exists());
+    drop(first);
+
+    // Generation 2: restore replays the checkpoint. The durable store
+    // answers every config lookup — no search, no re-tune.
+    let second = KernelService::new(config());
+    assert_eq!(second.plans_len(), 0);
+    let warmed = second.restore_checkpoint(None);
+    assert_eq!(warmed, 2);
+    assert_eq!(second.plans_len(), 2);
+    let s = second.stats();
+    assert_eq!(s.tunes, 0, "restore must not run a tuning search");
+    assert_eq!(s.search_evals, 0);
+    assert_eq!(s.warm_restarts, 2);
+
+    // First post-restart request: a cache hit on the warmed entry.
+    let hits_before = second.stats().cache_hits;
+    let entry = second.plan("sobel", &K40, (32, 32)).unwrap();
+    assert_eq!(entry.source, TuneSource::WarmStart);
+    assert_eq!(second.stats().cache_hits, hits_before + 1);
+    assert_eq!(second.stats().tunes, 0);
+
+    // A missing/stale checkpoint degrades to a cold start, never an
+    // error: a service pointed at an empty dir restores nothing.
+    let cold = KernelService::new(ServiceConfig {
+        strategy: Strategy::Random { evals: 30, seed: 11 },
+        db_path: Some(dir.join("elsewhere.tsv")),
+        legacy_tsv: None,
+        exec: ExecMode::Simulate,
+        plan_cache_cap: None,
+        transfer_budget: 0,
+        predict_budget: 0,
+        explore_eps: 0.0,
+    });
+    assert_eq!(cold.restore_checkpoint(None), 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

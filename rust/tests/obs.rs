@@ -28,6 +28,7 @@ fn real_service() -> Arc<KernelService> {
         plan_cache_cap: None,
         transfer_budget: 0,
         predict_budget: 0,
+        explore_eps: 0.0,
     })
 }
 
@@ -116,6 +117,16 @@ fn burst_yields_traces_lintable_export_and_coherent_profile() {
         ["imagecl_serve_", "imagecl_tunedb_", "imagecl_tuner_", "imagecl_exec_"]
     {
         assert!(text1.contains(needle), "export missing {needle} metrics");
+    }
+    // The durability counters (PR 10) are always exported — fleet
+    // dashboards must see zeros, not absent series.
+    for name in [
+        "imagecl_tunedb_fsck_quarantined_total",
+        "imagecl_tunedb_fsync_failures_total",
+        "imagecl_serve_warm_restarts_total",
+        "imagecl_serve_explores_total",
+    ] {
+        assert!(text1.contains(name), "export missing {name}");
     }
     // Counters are monotone across sequential exports.
     let counters1 = counter_values(&text1);
@@ -269,6 +280,7 @@ fn loadgen_obs_server_reports_slo_and_drains_on_completion() {
         plan_cache_cap: None,
         transfer_budget: 0,
         predict_budget: 0,
+        explore_eps: 0.0,
     });
     let opts = LoadGenOpts {
         requests: 24,

@@ -28,6 +28,7 @@ fn service(db_path: Option<std::path::PathBuf>, exec: ExecMode) -> Arc<KernelSer
         plan_cache_cap: None,
         transfer_budget: 0,
         predict_budget: 0,
+        explore_eps: 0.0,
     })
 }
 

@@ -106,6 +106,7 @@ fn service_cold_grid_uses_fewer_evals_than_from_scratch() {
         plan_cache_cap: None,
         transfer_budget,
         predict_budget: 0,
+        explore_eps: 0.0,
     };
 
     // First process tunes grid 32 from scratch and persists.
@@ -166,6 +167,7 @@ fn legacy_tsv_migrates_into_db_on_startup() {
         plan_cache_cap: None,
         transfer_budget: 0,
         predict_budget: 0,
+        explore_eps: 0.0,
     });
     assert_eq!(svc.tuned_len(), 1, "legacy config visible in the db");
     let entry = svc.plan("sepconv_row", &K40, (40, 40)).unwrap();
@@ -183,6 +185,7 @@ fn legacy_tsv_migrates_into_db_on_startup() {
         plan_cache_cap: None,
         transfer_budget: 0,
         predict_budget: 0,
+        explore_eps: 0.0,
     });
     let entry = svc2.plan("sepconv_row", &K40, (40, 40)).unwrap();
     assert_eq!(entry.source, TuneSource::WarmStart);
@@ -209,6 +212,7 @@ fn db_backed_schedule_needs_no_tuner() {
         plan_cache_cap: None,
         transfer_budget: 0,
         predict_budget: 0,
+        explore_eps: 0.0,
     });
     for kernel in ["sobel", "harris"] {
         svc.plan(kernel, &K40, (256, 256)).unwrap();
